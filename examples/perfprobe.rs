@@ -1,0 +1,36 @@
+use cavs::exec::{Engine, EngineOpts};
+use cavs::graph::{Dataset, InputGraph};
+use cavs::models::{Cell, HeadKind, Model};
+use cavs::runtime::Runtime;
+fn main() {
+    let rt = Runtime::from_env().unwrap();
+    for (cell, head, hv, label) in [
+        (Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5usize, "treelstm h512 bs64"),
+        (Cell::Lstm, HeadKind::LmPerVertex, 1000, "lstm h512 bs64 len64"),
+    ] {
+        let data = match cell {
+            Cell::TreeLstm => Dataset::sst_like(1, 64, 1000, 5),
+            _ => Dataset::ptb_like_fixed(1, 64, 1000, 64),
+        };
+        let refs: Vec<&InputGraph> = data.graphs.iter().collect();
+        let mut model = Model::new(cell, 512, 1000, head, hv, 3);
+        let mut eng = Engine::new(&rt, EngineOpts::default());
+        // warmup (compiles)
+        eng.run_minibatch(&mut model, &refs).unwrap();
+        model.zero_grads();
+        eng.reset_counters();
+        rt.reset_stats();
+        let t0 = std::time::Instant::now();
+        eng.run_minibatch(&mut model, &refs).unwrap();
+        let total = t0.elapsed().as_secs_f64();
+        let t = &eng.timers;
+        let st = rt.stats();
+        println!("{label}: total {total:.3}s");
+        println!("  constr {:.4} sched {:.4} memory {:.4} compute {:.4} head {:.4} other {:.4}",
+            t.construction_s, t.scheduling_s, t.memory_s, t.compute_s, t.head_s,
+            total - t.total_s());
+        println!("  execs {} h2d {:.1}MB d2h {:.1}MB exec_s {:.3} (incl d2h)",
+            st.executions, st.bytes_h2d as f64/1e6, st.bytes_d2h as f64/1e6, st.exec_seconds);
+        println!("  traffic {:.1}MB in {} memcpy ops", eng.traffic.bytes() as f64/1e6, eng.traffic.ops());
+    }
+}

@@ -1,0 +1,649 @@
+"""AOT artifact compiler: lower every vertex function / adjoint / head /
+baseline program to HLO **text** + write the manifest the Rust runtime
+consumes.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONLY here (build time). The Rust binary is self-contained once
+``artifacts/`` exists.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts            # full set
+  python -m compile.aot --out-dir ../artifacts --quick    # test subset only
+  python -m compile.aot --list                            # enumerate specs
+  python -m compile.aot --filter 'lstm_fwd_h512.*'        # subset by regex
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import cells, model
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Configuration of the artifact universe
+# ---------------------------------------------------------------------------
+
+# Hidden sizes in the paper's sweeps (Fig. 8 e-h uses 64..1024).
+H_SWEEP = [64, 256, 512, 1024]
+# Fig. 10 ablation hidden sizes.
+FIG10_H = [256, 512, 1024]
+# Batch-size buckets: a batching task V_t of size M is padded to the next
+# bucket; tasks above the max bucket are chunked (runtime responsibility).
+BUCKETS = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+# Monolithic scan-LM (cuDNN-analogue) batch sizes = the paper's bs sweep.
+SCAN_BS = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+# Sequence-length buckets for the TF-like dynamic-unroll baseline.
+SCAN_T = [8, 16, 32, 64]
+VOCAB = 1000   # paper used PTB's 10k; scaled for 1-core CPU (DESIGN.md §2)
+NCLS = 5       # SST fine-grained sentiment classes
+# whole-minibatch parameter-grad chunk sizes: the engine picks the
+# smallest bucket covering the remaining rows (large fixed chunks were
+# measured to dominate small-batch training; see EXPERIMENTS.md §Perf)
+PG_BUCKETS = [64, 256, 1024]
+
+# Quick subset: everything the Rust unit/integration tests need, tiny dims.
+QUICK_H = 32
+QUICK_BUCKETS = [1, 2, 4]
+QUICK_VOCAB = 50
+QUICK_SCAN_T = 4
+QUICK_SCAN_BS = [2]
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Spec:
+    """One artifact to lower: a pure function + monomorphic arg shapes."""
+
+    def __init__(self, name, fn, args, meta, quick=False):
+        self.name = name
+        self.fn = fn
+        self.args = args           # list of (argname, ShapeDtypeStruct)
+        self.meta = meta           # manifest entry fields
+        self.quick = quick
+
+    def manifest_entry(self):
+        ins = [
+            {"name": n,
+             "dtype": "i32" if s.dtype == jnp.int32 else "f32",
+             "shape": list(s.shape)}
+            for (n, s) in self.args
+        ]
+        e = {"name": self.name, "file": self.name + ".hlo.txt",
+             "inputs": ins}
+        e.update(self.meta)
+        return e
+
+
+# ---------------------------------------------------------------------------
+# Per-cell spec builders
+# ---------------------------------------------------------------------------
+
+def _lstm_specs(h, buckets, quick, use_pallas=True, with_bwd_data=True):
+    W, U, b = [("W", sds((h, 4 * h))), ("U", sds((h, 4 * h))),
+               ("b", sds((4 * h,)))]
+    out = []
+    for bk in buckets:
+        x = ("x", sds((bk, h)))
+        s = ("s", sds((bk, 2 * h)))
+        g = ("g_out", sds((bk, 2 * h)))
+        out.append(Spec(
+            f"lstm_fwd_h{h}_b{bk}",
+            functools.partial(cells.lstm_fwd, use_pallas=use_pallas),
+            [W, U, b, x, s],
+            {"kind": "cell_fwd", "cell": "lstm", "h": h, "bucket": bk,
+             "outputs": [{"name": "s_out", "dtype": "f32",
+                          "shape": [bk, 2 * h]}]},
+            quick))
+        out.append(Spec(
+            f"lstm_bwd_h{h}_b{bk}", cells.lstm_bwd,
+            [W, U, b, x, s, g],
+            {"kind": "cell_bwd", "cell": "lstm", "h": h, "bucket": bk,
+             "outputs": [
+                 {"name": "gW", "dtype": "f32", "shape": [h, 4 * h]},
+                 {"name": "gU", "dtype": "f32", "shape": [h, 4 * h]},
+                 {"name": "gb", "dtype": "f32", "shape": [4 * h]},
+                 {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gs", "dtype": "f32", "shape": [bk, 2 * h]}]},
+            quick))
+        if with_bwd_data:
+            out.append(Spec(
+                f"lstm_bwdd_h{h}_b{bk}", cells.lstm_bwd_data,
+                [W, U, b, x, s, g],
+                {"kind": "cell_bwd_data", "cell": "lstm", "h": h,
+                 "bucket": bk,
+                 "outputs": [
+                     {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                     {"name": "gs", "dtype": "f32", "shape": [bk, 2 * h]},
+                     {"name": "g_gates", "dtype": "f32",
+                      "shape": [bk, 4 * h]}]},
+                quick))
+    for n in ([max(buckets)] if quick else PG_BUCKETS):
+        out.append(Spec(
+            f"lstm_pgrad_h{h}_n{n}", cells.lstm_param_grad,
+            [("X", sds((n, h))), ("Hin", sds((n, h))),
+             ("Gpre", sds((n, 4 * h)))],
+            {"kind": "param_grad", "cell": "lstm", "h": h, "bucket": n,
+             "outputs": [
+                 {"name": "gW", "dtype": "f32", "shape": [h, 4 * h]},
+                 {"name": "gU", "dtype": "f32", "shape": [h, 4 * h]},
+                 {"name": "gb", "dtype": "f32", "shape": [4 * h]}]},
+            quick))
+    return out
+
+
+def _treelstm_specs(h, buckets, quick, use_pallas=True, with_bwd_data=True):
+    P = [("Wiou", sds((h, 3 * h))), ("Wf", sds((h, h))),
+         ("Uiou", sds((h, 3 * h))), ("Uf", sds((h, h))),
+         ("biou", sds((3 * h,))), ("bf", sds((h,)))]
+    pg = [{"name": "gWiou", "dtype": "f32", "shape": [h, 3 * h]},
+          {"name": "gWf", "dtype": "f32", "shape": [h, h]},
+          {"name": "gUiou", "dtype": "f32", "shape": [h, 3 * h]},
+          {"name": "gUf", "dtype": "f32", "shape": [h, h]},
+          {"name": "gbiou", "dtype": "f32", "shape": [3 * h]},
+          {"name": "gbf", "dtype": "f32", "shape": [h]}]
+    out = []
+    for bk in buckets:
+        x = ("x", sds((bk, h)))
+        s1 = ("s1", sds((bk, 2 * h)))
+        s2 = ("s2", sds((bk, 2 * h)))
+        g = ("g_out", sds((bk, 2 * h)))
+        out.append(Spec(
+            f"treelstm_fwd_h{h}_b{bk}",
+            functools.partial(cells.treelstm_fwd, use_pallas=use_pallas),
+            P + [x, s1, s2],
+            {"kind": "cell_fwd", "cell": "treelstm", "h": h, "bucket": bk,
+             "outputs": [{"name": "s_out", "dtype": "f32",
+                          "shape": [bk, 2 * h]}]},
+            quick))
+        out.append(Spec(
+            f"treelstm_bwd_h{h}_b{bk}", cells.treelstm_bwd,
+            P + [x, s1, s2, g],
+            {"kind": "cell_bwd", "cell": "treelstm", "h": h, "bucket": bk,
+             "outputs": pg + [
+                 {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gs1", "dtype": "f32", "shape": [bk, 2 * h]},
+                 {"name": "gs2", "dtype": "f32", "shape": [bk, 2 * h]}]},
+            quick))
+        if with_bwd_data:
+            out.append(Spec(
+                f"treelstm_bwdd_h{h}_b{bk}", cells.treelstm_bwd_data,
+                P + [x, s1, s2, g],
+                {"kind": "cell_bwd_data", "cell": "treelstm", "h": h,
+                 "bucket": bk,
+                 "outputs": [
+                     {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                     {"name": "gs1", "dtype": "f32", "shape": [bk, 2 * h]},
+                     {"name": "gs2", "dtype": "f32", "shape": [bk, 2 * h]},
+                     {"name": "g_gates", "dtype": "f32",
+                      "shape": [bk, 5 * h]}]},
+                quick))
+    for n in ([max(buckets)] if quick else PG_BUCKETS):
+        out.append(Spec(
+            f"treelstm_pgrad_h{h}_n{n}", cells.treelstm_param_grad,
+            [("X", sds((n, h))), ("H1", sds((n, h))), ("H2", sds((n, h))),
+             ("Gpre", sds((n, 5 * h)))],
+            {"kind": "param_grad", "cell": "treelstm", "h": h, "bucket": n,
+             "outputs": pg},
+            quick))
+    return out
+
+
+def _treefc_specs(h, buckets, quick, use_pallas=True):
+    P = [("Wx", sds((h, h))), ("Wl", sds((h, h))), ("Wr", sds((h, h))),
+         ("b", sds((h,)))]
+    pg = [{"name": "gWx", "dtype": "f32", "shape": [h, h]},
+          {"name": "gWl", "dtype": "f32", "shape": [h, h]},
+          {"name": "gWr", "dtype": "f32", "shape": [h, h]},
+          {"name": "gb", "dtype": "f32", "shape": [h]}]
+    out = []
+    for bk in buckets:
+        x = ("x", sds((bk, h)))
+        h1 = ("h1", sds((bk, h)))
+        h2 = ("h2", sds((bk, h)))
+        g = ("g_out", sds((bk, h)))
+        out.append(Spec(
+            f"treefc_fwd_h{h}_b{bk}",
+            functools.partial(cells.treefc_fwd, use_pallas=use_pallas),
+            P + [x, h1, h2],
+            {"kind": "cell_fwd", "cell": "treefc", "h": h, "bucket": bk,
+             "outputs": [{"name": "h_out", "dtype": "f32",
+                          "shape": [bk, h]}]},
+            quick))
+        out.append(Spec(
+            f"treefc_bwd_h{h}_b{bk}", cells.treefc_bwd,
+            P + [x, h1, h2, g],
+            {"kind": "cell_bwd", "cell": "treefc", "h": h, "bucket": bk,
+             "outputs": pg + [
+                 {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gh1", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gh2", "dtype": "f32", "shape": [bk, h]}]},
+            quick))
+        out.append(Spec(
+            f"treefc_bwdd_h{h}_b{bk}", cells.treefc_bwd_data,
+            P + [x, h1, h2, g],
+            {"kind": "cell_bwd_data", "cell": "treefc", "h": h, "bucket": bk,
+             "outputs": [
+                 {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gh1", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gh2", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "g_gates", "dtype": "f32", "shape": [bk, h]}]},
+            quick))
+    for n in ([max(buckets)] if quick else PG_BUCKETS):
+        out.append(Spec(
+            f"treefc_pgrad_h{h}_n{n}", cells.treefc_param_grad,
+            [("X", sds((n, h))), ("H1", sds((n, h))), ("H2", sds((n, h))),
+             ("Gpre", sds((n, h)))],
+            {"kind": "param_grad", "cell": "treefc", "h": h, "bucket": n,
+             "outputs": pg},
+            quick))
+    return out
+
+
+def _gru_specs(h, buckets, quick):
+    P = [("W", sds((h, 3 * h))), ("U", sds((h, 3 * h))),
+         ("b", sds((3 * h,)))]
+    out = []
+    for bk in buckets:
+        x = ("x", sds((bk, h)))
+        s = ("s", sds((bk, h)))
+        g = ("g_out", sds((bk, h)))
+        out.append(Spec(
+            f"gru_fwd_h{h}_b{bk}", cells.gru_fwd, P + [x, s],
+            {"kind": "cell_fwd", "cell": "gru", "h": h, "bucket": bk,
+             "outputs": [{"name": "h_out", "dtype": "f32",
+                          "shape": [bk, h]}]},
+            quick))
+        out.append(Spec(
+            f"gru_bwd_h{h}_b{bk}", cells.gru_bwd, P + [x, s, g],
+            {"kind": "cell_bwd", "cell": "gru", "h": h, "bucket": bk,
+             "outputs": [
+                 {"name": "gW", "dtype": "f32", "shape": [h, 3 * h]},
+                 {"name": "gU", "dtype": "f32", "shape": [h, 3 * h]},
+                 {"name": "gb", "dtype": "f32", "shape": [3 * h]},
+                 {"name": "gx", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gs", "dtype": "f32", "shape": [bk, h]}]},
+            quick))
+    return out
+
+
+def _head_specs(h, buckets, vocab, tag, quick):
+    P = [("Wout", sds((h, vocab))), ("bout", sds((vocab,)))]
+    out = []
+    for bk in buckets:
+        H = ("H", sds((bk, h)))
+        lab = ("labels", sds((bk,), I32))
+        out.append(Spec(
+            f"{tag}_grad_h{h}_b{bk}", cells.head_grad, P + [H, lab],
+            {"kind": "head_grad", "cell": tag, "h": h, "bucket": bk,
+             "vocab": vocab,
+             "outputs": [
+                 {"name": "loss", "dtype": "f32", "shape": []},
+                 {"name": "ncorrect", "dtype": "f32", "shape": []},
+                 {"name": "gH", "dtype": "f32", "shape": [bk, h]},
+                 {"name": "gWout", "dtype": "f32", "shape": [h, vocab]},
+                 {"name": "gbout", "dtype": "f32", "shape": [vocab]}]},
+            quick))
+        out.append(Spec(
+            f"{tag}_eval_h{h}_b{bk}", cells.head_eval, P + [H, lab],
+            {"kind": "head_eval", "cell": tag, "h": h, "bucket": bk,
+             "vocab": vocab,
+             "outputs": [
+                 {"name": "loss", "dtype": "f32", "shape": []},
+                 {"name": "ncorrect", "dtype": "f32", "shape": []}]},
+            quick))
+    return out
+
+
+def _scan_specs(h, t, bs, vocab, quick):
+    args = [
+        ("Wemb", sds((vocab, h))), ("W", sds((h, 4 * h))),
+        ("U", sds((h, 4 * h))), ("b", sds((4 * h,))),
+        ("Wout", sds((h, vocab))), ("bout", sds((vocab,))),
+        ("tokens", sds((bs, t + 1), I32)), ("mask", sds((bs, t))),
+    ]
+    outs = [
+        {"name": "loss", "dtype": "f32", "shape": []},
+        {"name": "gWemb", "dtype": "f32", "shape": [vocab, h]},
+        {"name": "gW", "dtype": "f32", "shape": [h, 4 * h]},
+        {"name": "gU", "dtype": "f32", "shape": [h, 4 * h]},
+        {"name": "gb", "dtype": "f32", "shape": [4 * h]},
+        {"name": "gWout", "dtype": "f32", "shape": [h, vocab]},
+        {"name": "gbout", "dtype": "f32", "shape": [vocab]},
+    ]
+    return [Spec(
+        f"scanlm_t{t}_h{h}_bs{bs}", cells.scan_lm_grad, args,
+        {"kind": "scan_lm", "cell": "scanlm", "h": h, "bucket": bs, "t": t,
+         "vocab": vocab, "outputs": outs},
+        quick)]
+
+
+def _unfused_specs(hs, buckets, quick):
+    """Per-operator artifacts for the kernel-fusion ablation."""
+    out = []
+    seen_mm, seen_ab, seen_ew = set(), set(), set()
+    for h in hs:
+        for bk in buckets:
+            for n in (4 * h, 3 * h, h):
+                if (bk, h, n) not in seen_mm:
+                    seen_mm.add((bk, h, n))
+                    out.append(Spec(
+                        f"op_matmul_m{bk}_k{h}_n{n}", cells.op_matmul,
+                        [("a", sds((bk, h))), ("w", sds((h, n)))],
+                        {"kind": "op", "cell": "matmul", "h": h,
+                         "bucket": bk,
+                         "outputs": [{"name": "o", "dtype": "f32",
+                                      "shape": [bk, n]}]},
+                        quick))
+                if (bk, n) not in seen_ab:
+                    seen_ab.add((bk, n))
+                    out.append(Spec(
+                        f"op_addbias_m{bk}_n{n}", cells.op_addbias,
+                        [("a", sds((bk, n))), ("b", sds((n,)))],
+                        {"kind": "op", "cell": "addbias", "h": n,
+                         "bucket": bk,
+                         "outputs": [{"name": "o", "dtype": "f32",
+                                      "shape": [bk, n]}]},
+                        quick))
+            for flat in (bk * h, bk * 3 * h, bk * 4 * h):
+                if flat in seen_ew:
+                    continue
+                seen_ew.add(flat)
+                for opname, fn, nargs in [
+                    ("sigmoid", cells.op_sigmoid, 1),
+                    ("tanh", cells.op_tanh, 1),
+                    ("add", cells.op_add, 2),
+                    ("mul", cells.op_mul, 2),
+                ]:
+                    args = [("a", sds((flat,)))]
+                    if nargs == 2:
+                        args.append(("b", sds((flat,))))
+                    out.append(Spec(
+                        f"op_{opname}_n{flat}", fn, args,
+                        {"kind": "op", "cell": opname, "h": flat,
+                         "bucket": 1,
+                         "outputs": [{"name": "o", "dtype": "f32",
+                                      "shape": [flat]}]},
+                        quick))
+    return out
+
+
+def enumerate_specs(quick_only: bool) -> list:
+    """The artifact universe. Quick subset is ALWAYS included."""
+    specs = []
+    # ---- quick subset (rust unit/integration tests) ----
+    q = True
+    specs += _lstm_specs(QUICK_H, QUICK_BUCKETS, q)
+    specs += _treelstm_specs(QUICK_H, QUICK_BUCKETS, q)
+    specs += _treefc_specs(QUICK_H, QUICK_BUCKETS, q)
+    specs += _gru_specs(QUICK_H, QUICK_BUCKETS, q)
+    specs += _head_specs(QUICK_H, QUICK_BUCKETS, QUICK_VOCAB, "lmhead", q)
+    specs += _head_specs(QUICK_H, QUICK_BUCKETS, NCLS, "clshead", q)
+    for bs in QUICK_SCAN_BS:
+        specs += _scan_specs(QUICK_H, QUICK_SCAN_T, bs, QUICK_VOCAB, q)
+    specs += _unfused_specs([QUICK_H], QUICK_BUCKETS, q)
+    if quick_only:
+        return specs
+
+    # ---- full set (paper experiments) ----
+    q = False
+    for h in H_SWEEP:
+        specs += _lstm_specs(h, BUCKETS, q,
+                             with_bwd_data=(h in FIG10_H))
+        specs += _treelstm_specs(h, BUCKETS, q,
+                                 with_bwd_data=(h in FIG10_H))
+        specs += _treefc_specs(h, BUCKETS, q)
+        specs += _head_specs(h, BUCKETS, VOCAB, "lmhead", q)
+        specs += _head_specs(h, [b for b in BUCKETS if b <= 256], NCLS,
+                             "clshead", q)
+    specs += _gru_specs(256, BUCKETS, q)
+    for h in H_SWEEP:
+        for bs in SCAN_BS:
+            specs += _scan_specs(h, 64, bs, VOCAB, q)
+    for t in SCAN_T:
+        if t == 64:
+            continue  # already emitted above for h=512
+        for bs in SCAN_BS:
+            specs += _scan_specs(512, t, bs, VOCAB, q)
+    # op-level artifacts: FIG10_H for the fusion ablation, plus every
+    # H_SWEEP size so the DyNet-like op-granular baseline covers Fig. 8
+    specs += _unfused_specs(sorted(set(FIG10_H) | set(H_SWEEP)), BUCKETS, q)
+    # de-dup by name (quick/full overlap on op_* flat sizes is possible)
+    seen, uniq = set(), []
+    for s in specs:
+        if s.name not in seen:
+            seen.add(s.name)
+            uniq.append(s)
+    return uniq
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, arg_specs) -> str:
+    def tupled(*a):
+        r = fn(*a)
+        return r if isinstance(r, tuple) else (r,)
+
+    lowered = jax.jit(tupled).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def fingerprint() -> str:
+    """Hash of the compile-path sources; artifacts are reused when the
+    sources are unchanged (make-level caching is file-mtime based, this is
+    the belt to that suspender)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    hasher = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    hasher.update(fh.read())
+    return hasher.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors (see model.py docstring)
+# ---------------------------------------------------------------------------
+
+def _tolist(x):
+    import numpy as np
+    return np.asarray(x).tolist()
+
+
+def make_goldens(out_dir: str):
+    import numpy as np
+
+    gold_dir = os.path.join(out_dir, "golden")
+    os.makedirs(gold_dir, exist_ok=True)
+    h = QUICK_H
+    key = jax.random.PRNGKey(7)
+
+    # --- Tree-LSTM sentiment tree -----------------------------------------
+    # A deliberately unbalanced 9-vertex tree (children before parents):
+    #        8
+    #       / \
+    #      6   7
+    #     / \  /\
+    #    0  5 1  2
+    #      / \
+    #     3   4
+    children = [[], [], [], [], [], [3, 4], [0, 5], [1, 2], [6, 7]]
+    n = len(children)
+    params, key = model.init_params("treelstm", h, key)
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    xs = jax.random.normal(k1, (n, h)) * 0.5
+    Wout = jax.random.normal(k2, (h, NCLS)) * 0.2
+    bout = jax.random.normal(k3, (NCLS,)) * 0.1
+    label = 3
+
+    loss_fn = lambda p, hd_, xs_: model.eval_treelstm_tree(
+        p, hd_, xs_, children, label)
+    loss = loss_fn(params, (Wout, bout), xs)
+    grads_p, grads_head, grads_xs = jax.grad(loss_fn, argnums=(0, 1, 2))(
+        params, (Wout, bout), xs)
+    golden = {
+        "cell": "treelstm", "h": h, "vocab": NCLS, "label": label,
+        "children": children,
+        "params": {k: _tolist(v) for k, v in params.items()},
+        "head": {"Wout": _tolist(Wout), "bout": _tolist(bout)},
+        "xs": _tolist(xs),
+        "loss": float(loss),
+        "grad_params": {k: _tolist(v) for k, v in grads_p.items()},
+        "grad_head": {"Wout": _tolist(grads_head[0]),
+                      "bout": _tolist(grads_head[1])},
+        "grad_xs": _tolist(grads_xs),
+    }
+    with open(os.path.join(gold_dir, "treelstm_tree.json"), "w") as f:
+        json.dump(golden, f)
+
+    # --- LSTM chain LM ------------------------------------------------------
+    T = 5
+    params, key = model.init_params("lstm", h, key)
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    xs = jax.random.normal(k1, (T, h)) * 0.5
+    Wout = jax.random.normal(k2, (h, QUICK_VOCAB)) * 0.2
+    bout = jax.random.normal(k3, (QUICK_VOCAB,)) * 0.1
+    labels = [3, 11, 7, 0, 42]
+
+    loss_fn = lambda p, hd_, xs_: model.eval_lstm_chain_lm(
+        p, hd_, xs_, labels)
+    loss = loss_fn(params, (Wout, bout), xs)
+    grads_p, grads_head, grads_xs = jax.grad(loss_fn, argnums=(0, 1, 2))(
+        params, (Wout, bout), xs)
+    golden = {
+        "cell": "lstm", "h": h, "vocab": QUICK_VOCAB, "labels": labels,
+        "params": {k: _tolist(v) for k, v in params.items()},
+        "head": {"Wout": _tolist(Wout), "bout": _tolist(bout)},
+        "xs": _tolist(xs),
+        "loss": float(loss),
+        "grad_params": {k: _tolist(v) for k, v in grads_p.items()},
+        "grad_head": {"Wout": _tolist(grads_head[0]),
+                      "bout": _tolist(grads_head[1])},
+        "grad_xs": _tolist(grads_xs),
+    }
+    with open(os.path.join(gold_dir, "lstm_chain.json"), "w") as f:
+        json.dump(golden, f)
+
+    # --- Tree-FC (objective = sum of root state) ---------------------------
+    children = [[], [], [], [0, 1], [3, 2], [], [4, 5]]
+    n = len(children)
+    params, key = model.init_params("treefc", h, key)
+    key, k1 = jax.random.split(key)
+    xs = jax.random.normal(k1, (n, h)) * 0.5
+    loss_fn = lambda p, xs_: model.eval_treefc_tree(p, xs_, children)
+    loss = loss_fn(params, xs)
+    grads_p, grads_xs = jax.grad(loss_fn, argnums=(0, 1))(params, xs)
+    golden = {
+        "cell": "treefc", "h": h, "children": children,
+        "params": {k: _tolist(v) for k, v in params.items()},
+        "xs": _tolist(xs),
+        "loss": float(loss),
+        "grad_params": {k: _tolist(v) for k, v in grads_p.items()},
+        "grad_xs": _tolist(grads_xs),
+    }
+    with open(os.path.join(gold_dir, "treefc_tree.json"), "w") as f:
+        json.dump(golden, f)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the small test subset")
+    ap.add_argument("--filter", default=None,
+                    help="regex on artifact names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="relower even if fingerprint matches")
+    args = ap.parse_args()
+
+    specs = enumerate_specs(quick_only=args.quick)
+    if args.filter:
+        rx = re.compile(args.filter)
+        specs = [s for s in specs if rx.search(s.name)]
+    if args.list:
+        for s in specs:
+            print(s.name)
+        print(f"{len(specs)} artifacts", file=sys.stderr)
+        return
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    fp = fingerprint()
+    fp_path = os.path.join(out_dir, "FINGERPRINT")
+    old_fp = None
+    if os.path.exists(fp_path):
+        with open(fp_path) as f:
+            old_fp = f.read().strip()
+    reuse = (old_fp == fp) and not args.force
+
+    t0 = time.time()
+    done = 0
+    for i, s in enumerate(specs):
+        path = os.path.join(out_dir, s.name + ".hlo.txt")
+        if reuse and os.path.exists(path):
+            continue
+        text = to_hlo_text(s.fn, [a[1] for a in s.args])
+        with open(path, "w") as f:
+            f.write(text)
+        done += 1
+        if done % 50 == 0:
+            rate = done / (time.time() - t0)
+            print(f"  [{i + 1}/{len(specs)}] {s.name} "
+                  f"({rate:.1f} artifacts/s)", flush=True)
+
+    # Manifest covers every spec we enumerated (all files now exist).
+    manifest = {
+        "version": 1,
+        "fingerprint": fp,
+        "vocab": VOCAB,
+        "quick_vocab": QUICK_VOCAB,
+        "ncls": NCLS,
+        "pg_bucket": max(PG_BUCKETS),
+        "artifacts": [s.manifest_entry() for s in specs],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(fp_path, "w") as f:
+        f.write(fp)
+
+    make_goldens(out_dir)
+    print(f"aot: {done} lowered, {len(specs) - done} reused, "
+          f"{len(specs)} total in {time.time() - t0:.1f}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""L2 — the vertex functions F and their adjoints ∂F, as JAX programs.
+
+Each cell exposes four build-time functions that become the runtime
+artifacts the Rust scheduler executes per batching task V_t:
+
+  *_fwd(params..., x, child_states...)        -> new_state
+      F itself. The forward hot path goes through the fused Pallas kernel
+      (kernels/fused_lstm.py); a ``use_pallas=False`` variant exists so the
+      artifact suite can cross-check both lowerings bit-for-bit-ish.
+
+  *_bwd(params..., x, child_states..., g_out) -> (param_grads..., gx, g_child_states...)
+      ∂F with parameter gradients computed per task ("eager" parameter
+      grads; the non-lazy-batching configuration). Forward intermediates
+      are REMATERIALIZED from the saved task inputs rather than stored —
+      the dynamic-tensor memory manager then only needs to keep F's inputs
+      per task, mirroring the paper's memory frugality.
+
+  *_bwd_data(params..., x, child_states..., g_out)
+        -> (gx, g_child_states..., g_gates)
+      ∂F with parameter gradients DEFERRED (paper §3.5 lazy batching): only
+      the data path is propagated, and the gate-preactivation gradients are
+      emitted so that...
+
+  *_param_grad(X, H..., G_gates) -> param_grads...
+      ...one whole-batch GEMM over ALL vertices of the minibatch produces
+      the parameter gradients in a single execution at the end of the
+      backward pass (the paper's lazily-batched "math operators for
+      computing gradients of the model parameters").
+
+All functions are pure and shape-monomorphic; aot.py lowers them per
+(hidden size, batch bucket).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_lstm as fk
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Sequence LSTM
+# ---------------------------------------------------------------------------
+
+def lstm_fwd(W, U, b, x, s, *, use_pallas: bool = True):
+    if use_pallas:
+        return fk.lstm_cell_fused(W, U, b, x, s)
+    return ref.lstm_cell(W, U, b, x, s)
+
+
+def _lstm_data_grads(W, U, b, x, s, g_out):
+    """Shared machinery: rematerialize, push g_out through the gate math."""
+    c, h = ref.split_state(s)
+    pre = ref.lstm_pre(W, U, b, x, h)
+    _, vjp = jax.vjp(ref.lstm_post, pre, c)
+    g_pre, g_c = vjp(g_out)
+    g_x = g_pre @ W.T
+    g_h = g_pre @ U.T
+    return g_x, ref.merge_state(g_c, g_h), g_pre
+
+
+def lstm_bwd(W, U, b, x, s, g_out):
+    g_x, g_s, g_pre = _lstm_data_grads(W, U, b, x, s, g_out)
+    _, h = ref.split_state(s)
+    gW = x.T @ g_pre
+    gU = h.T @ g_pre
+    gb = g_pre.sum(axis=0)
+    return gW, gU, gb, g_x, g_s
+
+
+def lstm_bwd_data(W, U, b, x, s, g_out):
+    return _lstm_data_grads(W, U, b, x, s, g_out)
+
+
+def lstm_param_grad(X, Hin, Gpre):
+    """X, Hin: [N,h]; Gpre: [N,4h] over all N vertices of the minibatch."""
+    return X.T @ Gpre, Hin.T @ Gpre, Gpre.sum(axis=0)
+
+
+LSTM_PARAMS = ["W", "U", "b"]
+
+
+def lstm_param_shapes(h):
+    return {"W": (h, 4 * h), "U": (h, 4 * h), "b": (4 * h,)}
+
+
+# ---------------------------------------------------------------------------
+# Binary child-sum Tree-LSTM
+# ---------------------------------------------------------------------------
+
+def treelstm_fwd(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2,
+                 *, use_pallas: bool = True):
+    if use_pallas:
+        return fk.treelstm_cell_fused(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2)
+    return ref.treelstm_cell(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2)
+
+
+def _treelstm_data_grads(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2, g_out):
+    c1, h1 = ref.split_state(s1)
+    c2, h2 = ref.split_state(s2)
+    pre = ref.treelstm_pre(Wiou, Wf, Uiou, Uf, biou, bf, x, h1, h2)
+    _, vjp = jax.vjp(ref.treelstm_post, pre, c1, c2)
+    g_pre, g_c1, g_c2 = vjp(g_out)
+    hd = Wf.shape[0]
+    g_iou = g_pre[:, : 3 * hd]
+    g_f1 = g_pre[:, 3 * hd : 4 * hd]
+    g_f2 = g_pre[:, 4 * hd :]
+    g_x = g_iou @ Wiou.T + (g_f1 + g_f2) @ Wf.T
+    g_hsum = g_iou @ Uiou.T
+    g_h1 = g_hsum + g_f1 @ Uf.T
+    g_h2 = g_hsum + g_f2 @ Uf.T
+    return (g_x,
+            ref.merge_state(g_c1, g_h1),
+            ref.merge_state(g_c2, g_h2),
+            g_pre)
+
+
+def treelstm_bwd(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2, g_out):
+    g_x, g_s1, g_s2, g_pre = _treelstm_data_grads(
+        Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2, g_out)
+    _, h1 = ref.split_state(s1)
+    _, h2 = ref.split_state(s2)
+    hd = Wf.shape[0]
+    g_iou = g_pre[:, : 3 * hd]
+    g_f1 = g_pre[:, 3 * hd : 4 * hd]
+    g_f2 = g_pre[:, 4 * hd :]
+    gWiou = x.T @ g_iou
+    gWf = x.T @ (g_f1 + g_f2)
+    gUiou = (h1 + h2).T @ g_iou
+    gUf = h1.T @ g_f1 + h2.T @ g_f2
+    gbiou = g_iou.sum(axis=0)
+    gbf = (g_f1 + g_f2).sum(axis=0)
+    return gWiou, gWf, gUiou, gUf, gbiou, gbf, g_x, g_s1, g_s2
+
+
+def treelstm_bwd_data(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2, g_out):
+    return _treelstm_data_grads(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2, g_out)
+
+
+def treelstm_param_grad(X, H1, H2, Gpre):
+    """X,H1,H2: [N,h]; Gpre: [N,5h] — whole-minibatch parameter grads."""
+    hd = X.shape[1]
+    g_iou = Gpre[:, : 3 * hd]
+    g_f1 = Gpre[:, 3 * hd : 4 * hd]
+    g_f2 = Gpre[:, 4 * hd :]
+    gWiou = X.T @ g_iou
+    gWf = X.T @ (g_f1 + g_f2)
+    gUiou = (H1 + H2).T @ g_iou
+    gUf = H1.T @ g_f1 + H2.T @ g_f2
+    gbiou = g_iou.sum(axis=0)
+    gbf = (g_f1 + g_f2).sum(axis=0)
+    return gWiou, gWf, gUiou, gUf, gbiou, gbf
+
+
+TREELSTM_PARAMS = ["Wiou", "Wf", "Uiou", "Uf", "biou", "bf"]
+
+
+def treelstm_param_shapes(h):
+    return {
+        "Wiou": (h, 3 * h), "Wf": (h, h),
+        "Uiou": (h, 3 * h), "Uf": (h, h),
+        "biou": (3 * h,), "bf": (h,),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Tree-FC (Fold benchmark cell)
+# ---------------------------------------------------------------------------
+
+def treefc_fwd(Wx, Wl, Wr, b, x, h1, h2, *, use_pallas: bool = True):
+    if use_pallas:
+        return fk.treefc_cell_fused(Wx, Wl, Wr, b, x, h1, h2)
+    return ref.treefc_cell(Wx, Wl, Wr, b, x, h1, h2)
+
+
+def treefc_bwd(Wx, Wl, Wr, b, x, h1, h2, g_out):
+    out = ref.treefc_cell(Wx, Wl, Wr, b, x, h1, h2)
+    g_pre = g_out * (1.0 - out * out)
+    gWx = x.T @ g_pre
+    gWl = h1.T @ g_pre
+    gWr = h2.T @ g_pre
+    gb = g_pre.sum(axis=0)
+    g_x = g_pre @ Wx.T
+    g_h1 = g_pre @ Wl.T
+    g_h2 = g_pre @ Wr.T
+    return gWx, gWl, gWr, gb, g_x, g_h1, g_h2
+
+
+def treefc_bwd_data(Wx, Wl, Wr, b, x, h1, h2, g_out):
+    out = ref.treefc_cell(Wx, Wl, Wr, b, x, h1, h2)
+    g_pre = g_out * (1.0 - out * out)
+    return g_pre @ Wx.T, g_pre @ Wl.T, g_pre @ Wr.T, g_pre
+
+
+def treefc_param_grad(X, H1, H2, Gpre):
+    return X.T @ Gpre, H1.T @ Gpre, H2.T @ Gpre, Gpre.sum(axis=0)
+
+
+TREEFC_PARAMS = ["Wx", "Wl", "Wr", "b"]
+
+
+def treefc_param_shapes(h):
+    return {"Wx": (h, h), "Wl": (h, h), "Wr": (h, h), "b": (h,)}
+
+
+# ---------------------------------------------------------------------------
+# GRU (extension)
+# ---------------------------------------------------------------------------
+
+def gru_fwd(W, U, b, x, h):
+    return ref.gru_cell(W, U, b, x, h)
+
+
+def gru_bwd(W, U, b, x, h, g_out):
+    grads = jax.grad(
+        lambda W_, U_, b_, x_, h_: (ref.gru_cell(W_, U_, b_, x_, h_) * g_out).sum(),
+        argnums=(0, 1, 2, 3, 4),
+    )(W, U, b, x, h)
+    return grads  # (gW, gU, gb, gx, gh)
+
+
+GRU_PARAMS = ["W", "U", "b"]
+
+
+def gru_param_shapes(h):
+    return {"W": (h, 3 * h), "U": (h, 3 * h), "b": (3 * h,)}
+
+
+# ---------------------------------------------------------------------------
+# Heads (LM softmax head / tree classifier head)
+# ---------------------------------------------------------------------------
+
+def head_grad(Wout, bout, H, labels):
+    """Training head: (loss_sum, ncorrect, gH, gWout, gbout)."""
+    (loss, ncorrect), grads = jax.value_and_grad(
+        lambda w, bb, hh: ref.softmax_xent(w, bb, hh, labels),
+        argnums=(0, 1, 2), has_aux=True,
+    )(Wout, bout, H)
+    gWout, gbout, gH = grads
+    return loss, ncorrect, gH, gWout, gbout
+
+
+def head_eval(Wout, bout, H, labels):
+    """Inference head: (loss_sum, ncorrect)."""
+    return ref.softmax_xent(Wout, bout, H, labels)
+
+
+def scan_lm_grad(Wemb, W, U, b, Wout, bout, tokens, mask):
+    """Monolithic whole-sequence train step: loss + all parameter grads."""
+    loss, grads = jax.value_and_grad(
+        ref.scan_lm_loss, argnums=(0, 1, 2, 3, 4, 5)
+    )(Wemb, W, U, b, Wout, bout, tokens, mask)
+    return (loss,) + grads
+
+
+# ---------------------------------------------------------------------------
+# Unfused primitives (the "no kernel fusion" ablation, Fig. 10): each op
+# below becomes its own artifact => one PJRT execution per operator, the
+# moral equivalent of one CUDA kernel launch per operator in the paper.
+# ---------------------------------------------------------------------------
+
+def op_matmul(a, w):
+    return a @ w
+
+
+def op_addbias(a, b):
+    return a + b
+
+
+def op_add(a, b):
+    return a + b
+
+
+def op_mul(a, b):
+    return a * b
+
+
+def op_sigmoid(a):
+    return jax.nn.sigmoid(a)
+
+
+def op_tanh(a):
+    return jnp.tanh(a)

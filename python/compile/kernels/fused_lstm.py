@@ -1,0 +1,224 @@
+"""L1 — Pallas fused RNN-cell kernels.
+
+The paper's compute hot-spot is the cell function F: two GEMMs plus the
+gate element-wise math. On the paper's GPU this is cuBLAS + a chain of
+element-wise kernel launches (or one fused cuDNN kernel). Here the cell is
+a *single* Pallas kernel: the GEMM accumulates into a VMEM tile and the
+gate nonlinearities run on that tile before it ever leaves the core — the
+TPU analogue of the paper's "kernel fusion turns device-memory access into
+register access".
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+
+- The two cell GEMMs are fused into one ``[x ; h] @ [W ; U]`` contraction so
+  the MXU sees one big matmul instead of two small ones.
+- ``tpu_block_spec`` below gives the real-TPU tiling: the batch dimension is
+  tiled at ``BS_BLOCK`` rows, the packed weight matrix ``[2h, 4h]`` streams
+  through VMEM in ``(2h, GATE_BLOCK)`` column panels; the gate epilogue runs
+  per panel.
+- These artifacts must execute on the CPU PJRT client, so ``pallas_call``
+  uses ``interpret=True``. Real-TPU lowering emits a Mosaic custom-call the
+  CPU plugin cannot run. Under interpret mode a multi-block grid lowers to
+  an XLA while-loop of dynamic slices, which destroys the CPU GEMM; we
+  therefore select a single-block grid on CPU and keep the blocked variant
+  for compile-only TPU targets (exercised structurally in tests).
+
+Correctness: pytest + hypothesis sweep shapes/dtypes against
+``ref.py`` (see python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Real-TPU tile parameters (documented + used by the blocked variant and by
+# the VMEM/MXU estimator below; the CPU artifacts use whole-array blocks).
+BS_BLOCK = 64
+GATE_BLOCK = 512
+
+
+# ---------------------------------------------------------------------------
+# Fused sequence-LSTM cell
+# ---------------------------------------------------------------------------
+
+def _lstm_kernel(xh_ref, wu_ref, b_ref, c_ref, out_ref):
+    """One fused block: gates = xh @ WU + b; out = [c', h'].
+
+    xh:  [bs, 2h]   (x and h_prev packed on the contraction axis)
+    wu:  [2h, 4h]   (W stacked on U)
+    b:   [1, 4h]
+    c:   [bs, h]
+    out: [bs, 2h]   (c' and h' packed, the paper's concat([c,h],1) state)
+    """
+    pre = jnp.dot(xh_ref[...], wu_ref[...]) + b_ref[...]
+    hd = pre.shape[1] // 4
+    i = jax.nn.sigmoid(pre[:, 0 * hd : 1 * hd])
+    f = jax.nn.sigmoid(pre[:, 1 * hd : 2 * hd])
+    o = jax.nn.sigmoid(pre[:, 2 * hd : 3 * hd])
+    u = jnp.tanh(pre[:, 3 * hd : 4 * hd])
+    c2 = f * c_ref[...] + i * u
+    h2 = o * jnp.tanh(c2)
+    out_ref[...] = jnp.concatenate([c2, h2], axis=1)
+
+
+def lstm_cell_fused(W, U, b, x, s, *, blocked: bool = False):
+    """Fused LSTM cell via Pallas. Same signature/semantics as ref.lstm_cell."""
+    bs, hd = x.shape[0], W.shape[0]
+    c, h = s[:, :hd], s[:, hd:]
+    xh = jnp.concatenate([x, h], axis=1)        # [bs, 2h]
+    wu = jnp.concatenate([W, U], axis=0)        # [2h, 4h]
+    b2 = b.reshape(1, 4 * hd)
+    if not blocked:
+        return pl.pallas_call(
+            _lstm_kernel,
+            out_shape=jax.ShapeDtypeStruct((bs, 2 * hd), x.dtype),
+            interpret=True,
+        )(xh, wu, b2, c)
+    # Blocked variant: tile the batch dimension (TPU-shaped schedule).
+    bb = min(BS_BLOCK, bs)
+    grid = (pl.cdiv(bs, bb),)
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 2 * hd), lambda m: (m, 0)),
+            pl.BlockSpec((2 * hd, 4 * hd), lambda m: (0, 0)),
+            pl.BlockSpec((1, 4 * hd), lambda m: (0, 0)),
+            pl.BlockSpec((bb, hd), lambda m: (m, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 2 * hd), lambda m: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, 2 * hd), x.dtype),
+        interpret=True,
+    )(xh, wu, b2, c)
+
+
+# ---------------------------------------------------------------------------
+# Fused binary child-sum Tree-LSTM cell
+# ---------------------------------------------------------------------------
+
+def _treelstm_kernel(
+    xhs_ref, xh1_ref, xh2_ref, wiou_ref, wf_ref, biou_ref, bf_ref,
+    c1_ref, c2_ref, out_ref,
+):
+    """Fused Tree-LSTM block: three exact packed contractions + the whole
+    gate epilogue in one kernel.
+
+      pre_iou = [x ; hsum] @ [Wiou ; Uiou]   ([bs,2h] x [2h,3h])
+      pre_f1  = [x ; h1]   @ [Wf   ; Uf  ]   ([bs,2h] x [2h, h])
+      pre_f2  = [x ; h2]   @ [Wf   ; Uf  ]
+
+    An earlier revision packed everything into ONE [4h,5h] contraction with
+    structural zero blocks — ideal for a single MXU systolic pass, but a
+    2.2x FLOP tax that a CPU pays for real (see EXPERIMENTS.md §Perf).
+    This version computes only true FLOPs (+ one duplicated x@Wf, ~10%).
+    """
+    pre_iou = jnp.dot(xhs_ref[...], wiou_ref[...]) + biou_ref[...]
+    pre_f1 = jnp.dot(xh1_ref[...], wf_ref[...]) + bf_ref[...]
+    pre_f2 = jnp.dot(xh2_ref[...], wf_ref[...]) + bf_ref[...]
+    hd = pre_f1.shape[1]
+    i = jax.nn.sigmoid(pre_iou[:, 0 * hd : 1 * hd])
+    o = jax.nn.sigmoid(pre_iou[:, 1 * hd : 2 * hd])
+    u = jnp.tanh(pre_iou[:, 2 * hd : 3 * hd])
+    f1 = jax.nn.sigmoid(pre_f1)
+    f2 = jax.nn.sigmoid(pre_f2)
+    c = i * u + f1 * c1_ref[...] + f2 * c2_ref[...]
+    hh = o * jnp.tanh(c)
+    out_ref[...] = jnp.concatenate([c, hh], axis=1)
+
+
+def pack_treelstm_weights(Wiou, Wf, Uiou, Uf):
+    """The [2h,3h] iou block and [2h,h] forget block of the fused kernel."""
+    wiou = jnp.concatenate([Wiou, Uiou], axis=0)
+    wf = jnp.concatenate([Wf, Uf], axis=0)
+    return wiou, wf
+
+
+def treelstm_cell_fused(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2):
+    """Fused Tree-LSTM cell via Pallas. Semantics == ref.treelstm_cell."""
+    bs, hd = x.shape[0], Wf.shape[0]
+    c1, h1 = s1[:, :hd], s1[:, hd:]
+    c2, h2 = s2[:, :hd], s2[:, hd:]
+    xhs = jnp.concatenate([x, h1 + h2], axis=1)              # [bs, 2h]
+    xh1 = jnp.concatenate([x, h1], axis=1)
+    xh2 = jnp.concatenate([x, h2], axis=1)
+    wiou, wf = pack_treelstm_weights(Wiou, Wf, Uiou, Uf)
+    return pl.pallas_call(
+        _treelstm_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, 2 * hd), x.dtype),
+        interpret=True,
+    )(
+        xhs, xh1, xh2, wiou, wf,
+        biou.reshape(1, 3 * hd), bf.reshape(1, hd), c1, c2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused Tree-FC cell
+# ---------------------------------------------------------------------------
+
+def _treefc_kernel(xhh_ref, w_ref, b_ref, out_ref):
+    out_ref[...] = jnp.tanh(jnp.dot(xhh_ref[...], w_ref[...]) + b_ref[...])
+
+
+def treefc_cell_fused(Wx, Wl, Wr, b, x, h1, h2):
+    """Fused Tree-FC cell: one [x;h1;h2] @ [Wx;Wl;Wr] contraction + tanh."""
+    bs, hd = x.shape[0], Wx.shape[0]
+    xhh = jnp.concatenate([x, h1, h2], axis=1)               # [bs, 3h]
+    w = jnp.concatenate([Wx, Wl, Wr], axis=0)                # [3h, h]
+    return pl.pallas_call(
+        _treefc_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, hd), x.dtype),
+        interpret=True,
+    )(xhh, w, b.reshape(1, hd))
+
+
+# ---------------------------------------------------------------------------
+# Roofline bookkeeping for the real-TPU schedule (used by DESIGN.md §Perf;
+# pure python, no jax).
+# ---------------------------------------------------------------------------
+
+def tpu_vmem_bytes(bs_block: int, hd: int, gate_cols: int,
+                   dtype_bytes: int = 4) -> int:
+    """VMEM residency of one fused-LSTM grid step under tpu_block_spec:
+    xh tile + weight panel + bias panel + c tile + out tile + acc panel."""
+    xh = bs_block * 2 * hd
+    wpanel = 2 * hd * gate_cols
+    bias = gate_cols
+    ctile = bs_block * hd
+    out = bs_block * 2 * hd
+    acc = bs_block * gate_cols
+    return (xh + wpanel + bias + ctile + out + acc) * dtype_bytes
+
+
+def mxu_utilization_estimate(bs_block: int, hd: int,
+                             mxu: int = 128) -> float:
+    """Fraction of MXU rows/cols busy for the packed [bs,2h]@[2h,4h] GEMM:
+    both contraction (2h) and output (4h) dims are multiples of the MXU
+    edge for h >= 64, so the limiting factor is the batch tile."""
+    rows = min(bs_block, mxu) / mxu
+    k = min(2 * hd, mxu) / mxu
+    n = min(4 * hd, mxu) / mxu
+    return rows * k * n
+
+
+@functools.lru_cache(maxsize=None)
+def _self_check():
+    """Tiny numeric self-check (also exercised properly in pytest)."""
+    key = jax.random.PRNGKey(0)
+    hd, bs = 8, 4
+    ks = jax.random.split(key, 8)
+    W = jax.random.normal(ks[0], (hd, 4 * hd)) * 0.1
+    U = jax.random.normal(ks[1], (hd, 4 * hd)) * 0.1
+    b = jax.random.normal(ks[2], (4 * hd,)) * 0.1
+    x = jax.random.normal(ks[3], (bs, hd))
+    s = jax.random.normal(ks[4], (bs, 2 * hd))
+    got = lstm_cell_fused(W, U, b, x, s)
+    want = ref.lstm_cell(W, U, b, x, s)
+    assert jnp.allclose(got, want, atol=1e-5), "pallas lstm != ref"
+    return True

@@ -1,0 +1,174 @@
+"""Pure-jnp reference oracles for every cell and head.
+
+These are the ground truth the Pallas kernels (fused_lstm.py) and the
+lowered artifacts are validated against. Everything here is written in the
+most literal way possible — no fusion tricks, no layout games — so a reader
+can check it against the paper's equations (Tai et al. Tree-LSTM, Fig. 4 of
+the Cavs paper) by eye.
+
+State convention: recurrent state ``s`` is ``concat([c, h], axis=1)`` with
+shape ``[bs, 2h]`` for LSTM-family cells (this mirrors the paper's
+``scatter(concat([c, h], 1))``), and plain ``h`` with shape ``[bs, h]`` for
+Tree-FC and GRU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_state(s):
+    """Split an LSTM-family state [bs, 2h] into (c, h)."""
+    h = s.shape[1] // 2
+    return s[:, :h], s[:, h:]
+
+
+def merge_state(c, h):
+    return jnp.concatenate([c, h], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Sequence LSTM cell (paper §2.1, "Sequence RNNs")
+# ---------------------------------------------------------------------------
+
+def lstm_pre(W, U, b, x, h):
+    """Gate pre-activations [bs, 4h], gate order (i, f, o, u)."""
+    return x @ W + h @ U + b
+
+
+def lstm_post(pre, c):
+    """Apply gate nonlinearities and the cell update. pre: [bs,4h]."""
+    hd = pre.shape[1] // 4
+    i = jax.nn.sigmoid(pre[:, 0 * hd : 1 * hd])
+    f = jax.nn.sigmoid(pre[:, 1 * hd : 2 * hd])
+    o = jax.nn.sigmoid(pre[:, 2 * hd : 3 * hd])
+    u = jnp.tanh(pre[:, 3 * hd : 4 * hd])
+    c2 = f * c + i * u
+    h2 = o * jnp.tanh(c2)
+    return merge_state(c2, h2)
+
+
+def lstm_cell(W, U, b, x, s):
+    """x: [bs,h] input, s: [bs,2h] previous state -> new state [bs,2h]."""
+    c, h = split_state(s)
+    return lstm_post(lstm_pre(W, U, b, x, h), c)
+
+
+# ---------------------------------------------------------------------------
+# Binary child-sum Tree-LSTM cell (Tai et al. 2015; paper Fig. 4 with N=2)
+# ---------------------------------------------------------------------------
+
+def treelstm_pre(Wiou, Wf, Uiou, Uf, biou, bf, x, h1, h2):
+    """Gate pre-activations concat([iou(3h), f1(h), f2(h)]) -> [bs, 5h]."""
+    hsum = h1 + h2
+    pre_iou = x @ Wiou + hsum @ Uiou + biou
+    xwf = x @ Wf
+    pre_f1 = xwf + h1 @ Uf + bf
+    pre_f2 = xwf + h2 @ Uf + bf
+    return jnp.concatenate([pre_iou, pre_f1, pre_f2], axis=1)
+
+
+def treelstm_post(pre, c1, c2):
+    hd = pre.shape[1] // 5
+    i = jax.nn.sigmoid(pre[:, 0 * hd : 1 * hd])
+    o = jax.nn.sigmoid(pre[:, 1 * hd : 2 * hd])
+    u = jnp.tanh(pre[:, 2 * hd : 3 * hd])
+    f1 = jax.nn.sigmoid(pre[:, 3 * hd : 4 * hd])
+    f2 = jax.nn.sigmoid(pre[:, 4 * hd : 5 * hd])
+    c = i * u + f1 * c1 + f2 * c2
+    hh = o * jnp.tanh(c)
+    return merge_state(c, hh)
+
+
+def treelstm_cell(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2):
+    """x: [bs,h]; s1, s2: child states [bs,2h] -> new state [bs,2h].
+
+    Leaves are expressed with s1 = s2 = 0 (the forget paths then contribute
+    nothing), which is exactly how the Cavs scheduler feeds frontier
+    vertices whose children do not exist.
+    """
+    c1, h1 = split_state(s1)
+    c2, h2 = split_state(s2)
+    return treelstm_post(
+        treelstm_pre(Wiou, Wf, Uiou, Uf, biou, bf, x, h1, h2), c1, c2
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tree-FC cell (the TensorFlow Fold benchmark model [34])
+# ---------------------------------------------------------------------------
+
+def treefc_cell(Wx, Wl, Wr, b, x, h1, h2):
+    """Single fully-connected cell: h' = tanh(x Wx + h1 Wl + h2 Wr + b)."""
+    return jnp.tanh(x @ Wx + h1 @ Wl + h2 @ Wr + b)
+
+
+# ---------------------------------------------------------------------------
+# GRU cell (paper §2.1 mentions GRU as an RNN cell variant; extension)
+# ---------------------------------------------------------------------------
+
+def gru_cell(W, U, b, x, h):
+    """Gate order (z, r, n). h' = (1-z)*tanh(pre_n) + z*h."""
+    hd = h.shape[1]
+    pre_zr = x @ W[:, : 2 * hd] + h @ U[:, : 2 * hd] + b[: 2 * hd]
+    z = jax.nn.sigmoid(pre_zr[:, :hd])
+    r = jax.nn.sigmoid(pre_zr[:, hd:])
+    pre_n = x @ W[:, 2 * hd :] + (r * h) @ U[:, 2 * hd :] + b[2 * hd :]
+    n = jnp.tanh(pre_n)
+    return (1.0 - z) * n + z * h
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+def softmax_xent(Wout, bout, H, labels):
+    """Summed masked cross-entropy + #correct.
+
+    labels < 0 mark padded slots (bucket padding) and contribute nothing.
+    Returns (loss_sum, ncorrect) both as f32 scalars.
+    """
+    logits = H @ Wout + bout
+    logp = jax.nn.log_softmax(logits, axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    picked = jnp.take_along_axis(logp, safe[:, None], axis=1)[:, 0]
+    loss = -(picked * mask).sum()
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    ncorrect = ((pred == labels).astype(jnp.float32) * mask).sum()
+    return loss, ncorrect
+
+
+# ---------------------------------------------------------------------------
+# Whole-sequence scan LSTM language model (monolithic baseline; the role
+# cuDNN's fixed-step LSTM plays in the paper's Fig. 8(a)).
+# ---------------------------------------------------------------------------
+
+def scan_lm_loss(Wemb, W, U, b, Wout, bout, tokens, mask):
+    """tokens: [bs, T+1] int32; mask: [bs, T] f32. Returns summed loss.
+
+    Step t consumes tokens[:, t], predicts tokens[:, t+1]. The whole
+    unrolled model is a single XLA program (lax.scan), the maximally-fused
+    fixed-topology comparator.
+    """
+    bs, tp1 = tokens.shape
+    T = tp1 - 1
+    hd = W.shape[0]
+    x_all = jnp.take(Wemb, tokens[:, :T], axis=0)  # [bs, T, h]
+
+    def step(carry, t):
+        c, h = carry
+        x = x_all[:, t, :]
+        s = lstm_post(lstm_pre(W, U, b, x, h), c)
+        c2, h2 = split_state(s)
+        logits = h2 @ Wout + bout
+        logp = jax.nn.log_softmax(logits, axis=1)
+        tgt = tokens[:, t + 1]
+        picked = jnp.take_along_axis(logp, tgt[:, None], axis=1)[:, 0]
+        loss_t = -(picked * mask[:, t]).sum()
+        return (c2, h2), loss_t
+
+    init = (jnp.zeros((bs, hd)), jnp.zeros((bs, hd)))
+    _, losses = jax.lax.scan(step, init, jnp.arange(T))
+    return losses.sum()

@@ -1,0 +1,108 @@
+"""Whole-graph reference evaluation (build-time only).
+
+The Rust coordinator evaluates a model by scheduling the vertex function F
+over input graphs (paper Alg. 1). To prove the *entire* Rust stack —
+scheduler, dynamic-tensor memory manager, gather/scatter buffers, autodiff
+tape, execution engine — computes the right thing, ``aot.py`` dumps golden
+vectors produced by the straightforward recursive evaluations below, with
+gradients from ``jax.grad`` over the whole unrolled computation. The Rust
+integration tests replay the same graphs through the batched machinery and
+must match.
+
+Graph encoding used by the goldens (and by Rust's golden loader):
+``children[v] = [l, r]`` or ``[]`` for leaves; vertices are topologically
+ordered (children before parents); vertex ``n-1`` is the root.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import cells
+from .kernels import ref
+
+
+def eval_treelstm_tree(params, head, xs, children, label):
+    """Recursive Tree-LSTM + classifier-at-root. Returns scalar loss.
+
+    params: dict of Tree-LSTM params; head: (Wout, bout);
+    xs: [n_vertices, h] pull inputs; children: list of [l, r] or [].
+    """
+    n = len(children)
+    hd = params["Wf"].shape[0]
+    zero = jnp.zeros((1, 2 * hd))
+    states = [None] * n
+    for v in range(n):
+        x = xs[v : v + 1]
+        if children[v]:
+            s1, s2 = states[children[v][0]], states[children[v][1]]
+        else:
+            s1 = s2 = zero
+        states[v] = ref.treelstm_cell(
+            params["Wiou"], params["Wf"], params["Uiou"], params["Uf"],
+            params["biou"], params["bf"], x, s1, s2)
+    root_h = states[n - 1][:, hd:]
+    loss, _ = ref.softmax_xent(head[0], head[1], root_h,
+                               jnp.array([label], dtype=jnp.int32))
+    return loss
+
+
+def eval_lstm_chain_lm(params, head, xs, labels):
+    """Sequence LSTM LM: per-step head on h_t predicting labels[t]."""
+    T = xs.shape[0]
+    hd = params["W"].shape[0]
+    s = jnp.zeros((1, 2 * hd))
+    loss = 0.0
+    for t in range(T):
+        s = ref.lstm_cell(params["W"], params["U"], params["b"],
+                          xs[t : t + 1], s)
+        step_loss, _ = ref.softmax_xent(
+            head[0], head[1], s[:, hd:],
+            jnp.array([labels[t]], dtype=jnp.int32))
+        loss = loss + step_loss
+    return loss
+
+
+def eval_treefc_tree(params, xs, children):
+    """Tree-FC; synthetic scalar objective = sum of root state."""
+    n = len(children)
+    hd = params["Wx"].shape[0]
+    zero = jnp.zeros((1, hd))
+    states = [None] * n
+    for v in range(n):
+        x = xs[v : v + 1]
+        if children[v]:
+            h1, h2 = states[children[v][0]], states[children[v][1]]
+        else:
+            h1 = h2 = zero
+        states[v] = ref.treefc_cell(
+            params["Wx"], params["Wl"], params["Wr"], params["b"],
+            x, h1, h2)
+    return states[n - 1].sum()
+
+
+def eval_gru_chain(params, xs):
+    """GRU chain; synthetic objective = sum of final state."""
+    T = xs.shape[0]
+    hd = params["W"].shape[0]
+    h = jnp.zeros((1, hd))
+    for t in range(T):
+        h = ref.gru_cell(params["W"], params["U"], params["b"],
+                         xs[t : t + 1], h)
+    return h.sum()
+
+
+def init_params(cell: str, h: int, key):
+    """Deterministic smallish init, same scheme Rust's ParamStore mirrors."""
+    shapes = {
+        "lstm": cells.lstm_param_shapes(h),
+        "treelstm": cells.treelstm_param_shapes(h),
+        "treefc": cells.treefc_param_shapes(h),
+        "gru": cells.gru_param_shapes(h),
+    }[cell]
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.normal(sub, shape) * 0.08
+    return params, key

@@ -1,0 +1,128 @@
+"""AOT layer tests: manifest consistency, HLO text round-trip via the local
+XLA client (the same path the Rust runtime takes), goldens self-check."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, cells, model
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_enumerate_specs_unique_names():
+    specs = aot.enumerate_specs(quick_only=False)
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+    assert len(names) > 800  # the full universe
+
+
+def test_quick_subset_is_contained_in_full():
+    quick = {s.name for s in aot.enumerate_specs(quick_only=True)}
+    full = {s.name for s in aot.enumerate_specs(quick_only=False)}
+    assert quick <= full
+
+
+def test_manifest_entries_have_io_shapes():
+    for s in aot.enumerate_specs(quick_only=True):
+        e = s.manifest_entry()
+        assert e["kind"], e
+        assert all("shape" in i and "dtype" in i for i in e["inputs"])
+        assert all("shape" in o and "dtype" in o for o in e["outputs"])
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_disk():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    for e in m["artifacts"]:
+        assert os.path.exists(os.path.join(ART, e["file"])), e["name"]
+
+
+def test_hlo_text_parses_back():
+    """The emitted HLO text must parse back into an HloModule with the same
+    entry signature (full compile+execute round-trip is covered by the Rust
+    runtime integration tests, which consume these exact files)."""
+    from jax._src.lib import xla_client as xc
+    h, bk = 8, 2
+    spec = [jax.ShapeDtypeStruct((h, 4 * h), jnp.float32),
+            jax.ShapeDtypeStruct((h, 4 * h), jnp.float32),
+            jax.ShapeDtypeStruct((4 * h,), jnp.float32),
+            jax.ShapeDtypeStruct((bk, h), jnp.float32),
+            jax.ShapeDtypeStruct((bk, 2 * h), jnp.float32)]
+    text = aot.to_hlo_text(cells.lstm_fwd, spec)
+    assert "HloModule" in text
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+    reparsed = mod.to_string()
+    assert "f32[2,16]" in reparsed  # the (bk, 2h) output shape survived
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "golden")),
+                    reason="goldens not built")
+class TestGoldens:
+    def _load(self, name):
+        with open(os.path.join(ART, "golden", name)) as f:
+            return json.load(f)
+
+    def test_treelstm_golden_selfcheck(self):
+        """Re-evaluate the golden tree and compare with the stored values —
+        guards against stale goldens after cell-code edits."""
+        g = self._load("treelstm_tree.json")
+        params = {k: jnp.asarray(v) for k, v in g["params"].items()}
+        head = (jnp.asarray(g["head"]["Wout"]), jnp.asarray(g["head"]["bout"]))
+        xs = jnp.asarray(g["xs"])
+        loss = model.eval_treelstm_tree(params, head, xs, g["children"],
+                                        g["label"])
+        assert_allclose(float(loss), g["loss"], atol=1e-5, rtol=1e-5)
+
+    def test_treelstm_golden_grad_finite_difference(self):
+        """Finite-difference probe of one stored gradient entry."""
+        g = self._load("treelstm_tree.json")
+        params = {k: jnp.asarray(v) for k, v in g["params"].items()}
+        head = (jnp.asarray(g["head"]["Wout"]), jnp.asarray(g["head"]["bout"]))
+        xs = np.asarray(g["xs"], np.float64)
+        eps = 1e-3
+        for (i, j) in [(0, 0), (2, 5)]:
+            xp, xm = xs.copy(), xs.copy()
+            xp[i, j] += eps
+            xm[i, j] -= eps
+            lp = float(model.eval_treelstm_tree(
+                params, head, jnp.asarray(xp, jnp.float32), g["children"],
+                g["label"]))
+            lm = float(model.eval_treelstm_tree(
+                params, head, jnp.asarray(xm, jnp.float32), g["children"],
+                g["label"]))
+            fd = (lp - lm) / (2 * eps)
+            stored = g["grad_xs"][i][j]
+            assert abs(fd - stored) < 5e-3, (i, j, fd, stored)
+
+    def test_lstm_chain_golden_selfcheck(self):
+        g = self._load("lstm_chain.json")
+        params = {k: jnp.asarray(v) for k, v in g["params"].items()}
+        head = (jnp.asarray(g["head"]["Wout"]), jnp.asarray(g["head"]["bout"]))
+        loss = model.eval_lstm_chain_lm(params, head, jnp.asarray(g["xs"]),
+                                        g["labels"])
+        assert_allclose(float(loss), g["loss"], atol=1e-5, rtol=1e-5)
+
+    def test_treefc_golden_selfcheck(self):
+        g = self._load("treefc_tree.json")
+        params = {k: jnp.asarray(v) for k, v in g["params"].items()}
+        loss = model.eval_treefc_tree(params, jnp.asarray(g["xs"]),
+                                      g["children"])
+        assert_allclose(float(loss), g["loss"], atol=1e-5, rtol=1e-5)
+
+
+def test_fingerprint_stable():
+    assert aot.fingerprint() == aot.fingerprint()

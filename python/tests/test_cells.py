@@ -1,0 +1,224 @@
+"""L2 correctness: hand-derived adjoints (∂F) vs jax autodiff, and the
+lazy-batching decomposition (bwd_data + param_grad) vs the eager bwd."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import cells
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+TOL = dict(atol=1e-4, rtol=1e-4)
+
+
+def rand(key, shape, scale=0.4):
+    return jax.random.normal(key, shape) * scale
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# LSTM
+# ---------------------------------------------------------------------------
+
+def _lstm_args(seed, bs, h):
+    k = keys(seed, 6)
+    return (rand(k[0], (h, 4 * h)), rand(k[1], (h, 4 * h)),
+            rand(k[2], (4 * h,)), rand(k[3], (bs, h)),
+            rand(k[4], (bs, 2 * h)), rand(k[5], (bs, 2 * h)))
+
+
+@hypothesis.given(bs=st.integers(1, 9), h=st.sampled_from([4, 8, 16]),
+                  seed=st.integers(0, 2**16))
+def test_lstm_bwd_matches_autodiff(bs, h, seed):
+    W, U, b, x, s, g = _lstm_args(seed, bs, h)
+    gW, gU, gb, gx, gs = cells.lstm_bwd(W, U, b, x, s, g)
+    auto = jax.grad(
+        lambda *a: (ref.lstm_cell(*a) * g).sum(), argnums=(0, 1, 2, 3, 4)
+    )(W, U, b, x, s)
+    for got, want in zip((gW, gU, gb, gx, gs), auto):
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@hypothesis.given(bs=st.integers(1, 9), h=st.sampled_from([4, 8, 16]),
+                  seed=st.integers(0, 2**16))
+def test_lstm_lazy_decomposition(bs, h, seed):
+    """bwd == bwd_data + param_grad over the gate-gradient side channel."""
+    W, U, b, x, s, g = _lstm_args(seed, bs, h)
+    gW, gU, gb, gx, gs = cells.lstm_bwd(W, U, b, x, s, g)
+    gx2, gs2, gpre = cells.lstm_bwd_data(W, U, b, x, s, g)
+    assert_allclose(np.asarray(gx), np.asarray(gx2), **TOL)
+    assert_allclose(np.asarray(gs), np.asarray(gs2), **TOL)
+    _, hin = ref.split_state(s)
+    gW2, gU2, gb2 = cells.lstm_param_grad(x, hin, gpre)
+    assert_allclose(np.asarray(gW), np.asarray(gW2), **TOL)
+    assert_allclose(np.asarray(gU), np.asarray(gU2), **TOL)
+    assert_allclose(np.asarray(gb), np.asarray(gb2), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Tree-LSTM
+# ---------------------------------------------------------------------------
+
+def _treelstm_args(seed, bs, h):
+    k = keys(seed, 10)
+    return (rand(k[0], (h, 3 * h)), rand(k[1], (h, h)),
+            rand(k[2], (h, 3 * h)), rand(k[3], (h, h)),
+            rand(k[4], (3 * h,)), rand(k[5], (h,)),
+            rand(k[6], (bs, h)), rand(k[7], (bs, 2 * h)),
+            rand(k[8], (bs, 2 * h)), rand(k[9], (bs, 2 * h)))
+
+
+@hypothesis.given(bs=st.integers(1, 7), h=st.sampled_from([4, 8]),
+                  seed=st.integers(0, 2**16))
+def test_treelstm_bwd_matches_autodiff(bs, h, seed):
+    *args, g = _treelstm_args(seed, bs, h)
+    grads = cells.treelstm_bwd(*args, g)
+    auto = jax.grad(
+        lambda *a: (ref.treelstm_cell(*a) * g).sum(),
+        argnums=tuple(range(9)),
+    )(*args)
+    for got, want in zip(grads, auto):
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@hypothesis.given(bs=st.integers(1, 7), h=st.sampled_from([4, 8]),
+                  seed=st.integers(0, 2**16))
+def test_treelstm_lazy_decomposition(bs, h, seed):
+    *args, g = _treelstm_args(seed, bs, h)
+    full = cells.treelstm_bwd(*args, g)
+    gx, gs1, gs2, gpre = cells.treelstm_bwd_data(*args, g)
+    assert_allclose(np.asarray(full[6]), np.asarray(gx), **TOL)
+    assert_allclose(np.asarray(full[7]), np.asarray(gs1), **TOL)
+    assert_allclose(np.asarray(full[8]), np.asarray(gs2), **TOL)
+    x, s1, s2 = args[6], args[7], args[8]
+    _, h1 = ref.split_state(s1)
+    _, h2 = ref.split_state(s2)
+    pgrads = cells.treelstm_param_grad(x, h1, h2, gpre)
+    for got, want in zip(pgrads, full[:6]):
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Tree-FC / GRU
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(bs=st.integers(1, 9), h=st.sampled_from([4, 8, 16]),
+                  seed=st.integers(0, 2**16))
+def test_treefc_bwd_matches_autodiff(bs, h, seed):
+    k = keys(seed, 8)
+    args = (rand(k[0], (h, h)), rand(k[1], (h, h)), rand(k[2], (h, h)),
+            rand(k[3], (h,)), rand(k[4], (bs, h)), rand(k[5], (bs, h)),
+            rand(k[6], (bs, h)))
+    g = rand(k[7], (bs, h))
+    grads = cells.treefc_bwd(*args, g)
+    auto = jax.grad(
+        lambda *a: (ref.treefc_cell(*a) * g).sum(), argnums=tuple(range(7))
+    )(*args)
+    for got, want in zip(grads, auto):
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@hypothesis.given(bs=st.integers(1, 9), h=st.sampled_from([4, 8]),
+                  seed=st.integers(0, 2**16))
+def test_gru_bwd_matches_autodiff(bs, h, seed):
+    k = keys(seed, 6)
+    args = (rand(k[0], (h, 3 * h)), rand(k[1], (h, 3 * h)),
+            rand(k[2], (3 * h,)), rand(k[3], (bs, h)),
+            rand(k[4], (bs, h)))
+    g = rand(k[5], (bs, h))
+    grads = cells.gru_bwd(*args, g)
+    auto = jax.grad(
+        lambda *a: (ref.gru_cell(*a) * g).sum(), argnums=tuple(range(5))
+    )(*args)
+    for got, want in zip(grads, auto):
+        assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(bs=st.integers(1, 9), h=st.sampled_from([4, 16]),
+                  v=st.sampled_from([3, 11]), seed=st.integers(0, 2**16))
+def test_head_grad_matches_autodiff(bs, h, v, seed):
+    k = keys(seed, 3)
+    Wout, bout = rand(k[0], (h, v)), rand(k[1], (v,))
+    H = rand(k[2], (bs, h))
+    labels = jnp.arange(bs, dtype=jnp.int32) % v
+    loss, ncorrect, gH, gW, gb = cells.head_grad(Wout, bout, H, labels)
+    wantL, wantN = ref.softmax_xent(Wout, bout, H, labels)
+    assert_allclose(float(loss), float(wantL), **TOL)
+    assert float(ncorrect) == float(wantN)
+    auto = jax.grad(
+        lambda w, bb, hh: ref.softmax_xent(w, bb, hh, labels)[0],
+        argnums=(0, 1, 2))(Wout, bout, H)
+    assert_allclose(np.asarray(gW), np.asarray(auto[0]), **TOL)
+    assert_allclose(np.asarray(gb), np.asarray(auto[1]), **TOL)
+    assert_allclose(np.asarray(gH), np.asarray(auto[2]), **TOL)
+
+
+def test_head_padding_mask():
+    """label = -1 slots (bucket padding) contribute nothing to loss/grads."""
+    h, v = 8, 5
+    k = keys(3, 3)
+    Wout, bout = rand(k[0], (h, v)), rand(k[1], (v,))
+    H = rand(k[2], (4, h))
+    full = jnp.array([1, 2, -1, -1], dtype=jnp.int32)
+    sub = jnp.array([1, 2], dtype=jnp.int32)
+    lossF, nF, gHF, gWF, gbF = cells.head_grad(Wout, bout, H, full)
+    lossS, nS, gHS, gWS, gbS = cells.head_grad(Wout, bout, H[:2], sub)
+    assert_allclose(float(lossF), float(lossS), **TOL)
+    assert float(nF) == float(nS)
+    assert_allclose(np.asarray(gHF[:2]), np.asarray(gHS), **TOL)
+    assert_allclose(np.asarray(gHF[2:]), 0.0, atol=1e-7)
+    assert_allclose(np.asarray(gWF), np.asarray(gWS), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Monolithic scan LM vs a hand-unrolled loop
+# ---------------------------------------------------------------------------
+
+def test_scan_lm_matches_unrolled():
+    h, v, bs, T = 8, 13, 3, 5
+    k = keys(5, 6)
+    Wemb = rand(k[0], (v, h))
+    W, U, b = rand(k[1], (h, 4 * h)), rand(k[2], (h, 4 * h)), rand(k[3], (4 * h,))
+    Wout, bout = rand(k[4], (h, v)), rand(k[5], (v,))
+    tokens = (jnp.arange(bs * (T + 1), dtype=jnp.int32).reshape(bs, T + 1)) % v
+    mask = jnp.ones((bs, T))
+    got = ref.scan_lm_loss(Wemb, W, U, b, Wout, bout, tokens, mask)
+
+    want = 0.0
+    s = jnp.zeros((bs, 2 * h))
+    for t in range(T):
+        x = jnp.take(Wemb, tokens[:, t], axis=0)
+        s = ref.lstm_cell(W, U, b, x, s)
+        l, _ = ref.softmax_xent(Wout, bout, s[:, h:], tokens[:, t + 1])
+        want = want + l
+    assert_allclose(float(got), float(want), atol=1e-3, rtol=1e-4)
+
+
+def test_scan_lm_grad_runs():
+    h, v, bs, T = 4, 7, 2, 3
+    k = keys(6, 6)
+    Wemb = rand(k[0], (v, h))
+    W, U, b = rand(k[1], (h, 4 * h)), rand(k[2], (h, 4 * h)), rand(k[3], (4 * h,))
+    Wout, bout = rand(k[4], (h, v)), rand(k[5], (v,))
+    tokens = jnp.zeros((bs, T + 1), dtype=jnp.int32)
+    mask = jnp.ones((bs, T))
+    outs = cells.scan_lm_grad(Wemb, W, U, b, Wout, bout, tokens, mask)
+    assert len(outs) == 7
+    auto = jax.grad(ref.scan_lm_loss, argnums=(0,))(
+        Wemb, W, U, b, Wout, bout, tokens, mask)
+    assert_allclose(np.asarray(outs[1]), np.asarray(auto[0]), **TOL)

@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas fused kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch sizes and hidden sizes, including
+non-power-of-two odd sizes) and dtypes; assert_allclose against ref.py.
+This is the CORE correctness signal for the kernel layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import fused_lstm as fk
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def rand(key, shape, dtype, scale=0.5):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@hypothesis.given(
+    bs=st.integers(1, 33),
+    h=st.sampled_from([4, 8, 17, 32, 64]),
+    dti=st.integers(0, len(DTYPES) - 1),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_fused_matches_ref(bs, h, dti, seed):
+    dt = DTYPES[dti]
+    k = keys(seed, 5)
+    W, U = rand(k[0], (h, 4 * h), dt), rand(k[1], (h, 4 * h), dt)
+    b = rand(k[2], (4 * h,), dt)
+    x, s = rand(k[3], (bs, h), dt), rand(k[4], (bs, 2 * h), dt)
+    got = fk.lstm_cell_fused(W, U, b, x, s)
+    want = ref.lstm_cell(W, U, b, x, s)
+    assert got.shape == (bs, 2 * h)
+    assert got.dtype == dt
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), **tol(dt))
+
+
+@hypothesis.given(
+    bs=st.integers(1, 33),
+    h=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_lstm_fused_blocked_matches_ref(bs, h, seed):
+    """The TPU-shaped blocked schedule computes the same function."""
+    k = keys(seed, 5)
+    W, U = rand(k[0], (h, 4 * h), jnp.float32), rand(k[1], (h, 4 * h), jnp.float32)
+    b = rand(k[2], (4 * h,), jnp.float32)
+    x, s = rand(k[3], (bs, h), jnp.float32), rand(k[4], (bs, 2 * h), jnp.float32)
+    if bs % min(fk.BS_BLOCK, bs) != 0:
+        bs2 = bs - bs % 4 + 4 if bs % 4 else bs  # keep grid exact
+        x = jnp.pad(x, ((0, bs2 - bs), (0, 0)))
+        s = jnp.pad(s, ((0, bs2 - bs), (0, 0)))
+    got = fk.lstm_cell_fused(W, U, b, x, s, blocked=True)
+    want = ref.lstm_cell(W, U, b, x, s)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@hypothesis.given(
+    bs=st.integers(1, 17),
+    h=st.sampled_from([4, 8, 16, 32]),
+    dti=st.integers(0, len(DTYPES) - 1),
+    seed=st.integers(0, 2**16),
+)
+def test_treelstm_fused_matches_ref(bs, h, dti, seed):
+    dt = DTYPES[dti]
+    k = keys(seed, 9)
+    Wiou, Wf = rand(k[0], (h, 3 * h), dt), rand(k[1], (h, h), dt)
+    Uiou, Uf = rand(k[2], (h, 3 * h), dt), rand(k[3], (h, h), dt)
+    biou, bf = rand(k[4], (3 * h,), dt), rand(k[5], (h,), dt)
+    x = rand(k[6], (bs, h), dt)
+    s1, s2 = rand(k[7], (bs, 2 * h), dt), rand(k[8], (bs, 2 * h), dt)
+    got = fk.treelstm_cell_fused(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2)
+    want = ref.treelstm_cell(Wiou, Wf, Uiou, Uf, biou, bf, x, s1, s2)
+    assert_allclose(np.asarray(got, np.float32),
+                    np.asarray(want, np.float32), **tol(dt))
+
+
+@hypothesis.given(
+    bs=st.integers(1, 17),
+    h=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_treefc_fused_matches_ref(bs, h, seed):
+    k = keys(seed, 7)
+    f32 = jnp.float32
+    Wx, Wl, Wr = (rand(k[0], (h, h), f32), rand(k[1], (h, h), f32),
+                  rand(k[2], (h, h), f32))
+    b = rand(k[3], (h,), f32)
+    x, h1, h2 = (rand(k[4], (bs, h), f32), rand(k[5], (bs, h), f32),
+                 rand(k[6], (bs, h), f32))
+    got = fk.treefc_cell_fused(Wx, Wl, Wr, b, x, h1, h2)
+    want = ref.treefc_cell(Wx, Wl, Wr, b, x, h1, h2)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_leaf_vertex_zero_children():
+    """A frontier vertex with s1 = s2 = 0 must reduce to the leaf formula."""
+    h, bs = 8, 3
+    k = keys(0, 7)
+    f32 = jnp.float32
+    args = (rand(k[0], (h, 3 * h), f32), rand(k[1], (h, h), f32),
+            rand(k[2], (h, 3 * h), f32), rand(k[3], (h, h), f32),
+            rand(k[4], (3 * h,), f32), rand(k[5], (h,), f32))
+    x = rand(k[6], (bs, h), f32)
+    z = jnp.zeros((bs, 2 * h))
+    got = fk.treelstm_cell_fused(*args, x, z, z)
+    # leaf formula: i,o,u from x alone; c = i*u; h = o*tanh(c)
+    Wiou, _, _, _, biou, _ = args
+    pre = x @ Wiou + biou
+    i = jax.nn.sigmoid(pre[:, :h])
+    o = jax.nn.sigmoid(pre[:, h:2 * h])
+    u = jnp.tanh(pre[:, 2 * h:])
+    c = i * u
+    want = jnp.concatenate([c, o * jnp.tanh(c)], axis=1)
+    assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_packed_weights_layout():
+    """pack_treelstm_weights reproduces the unpacked contractions exactly."""
+    h, bs = 4, 2
+    k = keys(1, 9)
+    f32 = jnp.float32
+    Wiou, Wf = rand(k[0], (h, 3 * h), f32), rand(k[1], (h, h), f32)
+    Uiou, Uf = rand(k[2], (h, 3 * h), f32), rand(k[3], (h, h), f32)
+    x = rand(k[4], (bs, h), f32)
+    h1, h2 = rand(k[5], (bs, h), f32), rand(k[6], (bs, h), f32)
+    wiou, wf = fk.pack_treelstm_weights(Wiou, Wf, Uiou, Uf)
+    got_iou = jnp.concatenate([x, h1 + h2], axis=1) @ wiou
+    got_f1 = jnp.concatenate([x, h1], axis=1) @ wf
+    got_f2 = jnp.concatenate([x, h2], axis=1) @ wf
+    assert_allclose(np.asarray(got_iou),
+                    np.asarray(x @ Wiou + (h1 + h2) @ Uiou), atol=1e-5)
+    assert_allclose(np.asarray(got_f1), np.asarray(x @ Wf + h1 @ Uf), atol=1e-5)
+    assert_allclose(np.asarray(got_f2), np.asarray(x @ Wf + h2 @ Uf), atol=1e-5)
+
+
+def test_vmem_and_mxu_estimates_sane():
+    """The TPU roofline bookkeeping must stay inside a 16 MB VMEM budget at
+    the paper's largest setting and report full MXU occupancy for h>=64."""
+    vm = fk.tpu_vmem_bytes(fk.BS_BLOCK, 1024, fk.GATE_BLOCK)
+    assert vm < 16 * 2**20, f"VMEM estimate {vm} exceeds 16MB"
+    assert fk.mxu_utilization_estimate(128, 64) == 1.0
+    assert fk.mxu_utilization_estimate(8, 64) == pytest.approx(8 / 128)

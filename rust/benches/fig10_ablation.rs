@@ -1,0 +1,11 @@
+//! Regenerates Fig. 10: the execution-engine optimization ablation
+//! (lazy batching / kernel fusion / streaming, one at a time).
+use cavs::bench::experiments::{fig10, Scale};
+use cavs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    cavs::util::logger::init();
+    let rt = Runtime::from_env()?;
+    println!("\n{}", fig10(&rt, Scale { samples: 0.1, full: false })?.render());
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Regenerates the paper's Fig. 8 (a)-(h): overall per-epoch training time
+//! across systems, sweeping batch size (a-d) and hidden size (e-h).
+//! `cargo bench` runs a reduced sweep; `cavs bench --exp fig8a --full true`
+//! runs the full one recorded in EXPERIMENTS.md.
+use cavs::bench::experiments::{fig8, Scale};
+use cavs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    cavs::util::logger::init();
+    let rt = Runtime::from_env()?;
+    let scale = Scale { samples: 0.1, full: false };
+    for p in ['a', 'b', 'c', 'd', 'e', 'f', 'g', 'h'] {
+        let t = fig8(&rt, p, scale)?;
+        println!("\n{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Regenerates Fig. 9 (a)-(b): graph construction/preprocessing overhead
+//! (absolute + share of epoch) for Cavs vs Fold vs dynamic declaration.
+use cavs::bench::experiments::{fig9a, fig9b, Scale};
+use cavs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    cavs::util::logger::init();
+    let rt = Runtime::from_env()?;
+    let scale = Scale { samples: 0.1, full: false };
+    println!("\n{}", fig9a(&rt, scale)?.render());
+    println!("\n{}", fig9b(&rt, scale)?.render());
+    Ok(())
+}

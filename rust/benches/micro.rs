@@ -1,0 +1,87 @@
+//! Microbenchmarks of the L3 substrates: dynamic-tensor choreography,
+//! gather/scatter copies, scheduler BFS, batching-vs-serial policy
+//! (§5.1's speedup curve at reduced size), and PJRT launch overhead.
+use std::time::Instant;
+
+use cavs::bench::experiments::{serial_vs_batched, Scale};
+use cavs::graph::{Dataset, GraphBatch, InputGraph};
+use cavs::memory::{MemTraffic, StateBuffer};
+use cavs::runtime::{Arg, Runtime};
+use cavs::scheduler::{frontier_levels, schedule, Policy};
+use cavs::tensor::DynamicTensor;
+use cavs::util::stats::{measure, fmt_duration};
+
+fn main() -> anyhow::Result<()> {
+    cavs::util::logger::init();
+    let rt = Runtime::from_env()?;
+
+    // --- scheduler BFS over a merged 64-tree batch ---------------------
+    let data = Dataset::sst_like(1, 64, 100, 5);
+    let refs: Vec<&InputGraph> = data.graphs.iter().collect();
+    let batch = GraphBatch::new(&refs, 2);
+    let s = measure(3, 20, || {
+        let lv = frontier_levels(&batch);
+        std::hint::black_box(lv);
+    });
+    println!(
+        "scheduler BFS ({} vertices): {} median",
+        batch.n_vertices,
+        fmt_duration(s.median_s)
+    );
+    let s = measure(3, 20, || {
+        let t = schedule(&batch, Policy::Batched, &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]);
+        std::hint::black_box(t);
+    });
+    println!("schedule+chunk: {} median", fmt_duration(s.median_s));
+
+    // --- gather/scatter bandwidth ---------------------------------------
+    let tr = MemTraffic::default();
+    let mut sb = StateBuffer::new(4096, 512);
+    let ids: Vec<Option<u32>> = (0..1024).map(|i| Some((i * 3 % 4096) as u32)).collect();
+    let mut block = vec![0.0f32; 1024 * 512];
+    let s = measure(3, 20, || sb.gather(&ids, &mut block, &tr));
+    println!(
+        "gather 1024x512 f32: {} median ({:.2} GB/s)",
+        fmt_duration(s.median_s),
+        (1024.0 * 512.0 * 4.0) / s.median_s / 1e9
+    );
+    let out_ids: Vec<u32> = (0..1024).map(|i| (i * 3 % 4096) as u32).collect();
+    let s = measure(3, 20, || sb.scatter(&out_ids, &block, &tr));
+    println!(
+        "scatter 1024x512 f32: {} median ({:.2} GB/s)",
+        fmt_duration(s.median_s),
+        (1024.0 * 512.0 * 4.0) / s.median_s / 1e9
+    );
+
+    // --- dynamic tensor advance/rewind ----------------------------------
+    let mut dt = DynamicTensor::new(&[512]);
+    let s = measure(3, 50, || {
+        dt.reset();
+        for _ in 0..64 {
+            dt.set_bs(64);
+            dt.advance();
+        }
+        for _ in 0..64 {
+            dt.rewind(64).unwrap();
+        }
+    });
+    println!("dynamic tensor 64-task fwd+bwd choreography: {}", fmt_duration(s.median_s));
+
+    // --- PJRT launch overhead (tiny op vs sizeable op) -------------------
+    let a = vec![1.0f32; 32];
+    let exe = rt.load("op_add_n32")?;
+    let t0 = Instant::now();
+    let n = 200;
+    for _ in 0..n {
+        let _ = rt.run(&exe, &[Arg::F32(&a), Arg::F32(&a)])?;
+    }
+    println!(
+        "PJRT launch overhead (op_add_n32): {} / launch",
+        fmt_duration(t0.elapsed().as_secs_f64() / n as f64)
+    );
+
+    // --- §5.1 batched-vs-serial at micro scale ---------------------------
+    let t = serial_vs_batched(&rt, Scale { samples: 0.1, full: false })?;
+    println!("\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates Table 1: computation-only epoch time — Cavs vs Fold vs
+//! DyNet-like — on Tree-FC (input-size sweep) and Tree-LSTM (bs sweep).
+use cavs::bench::experiments::{table1, Scale};
+use cavs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    cavs::util::logger::init();
+    let rt = Runtime::from_env()?;
+    println!("\n{}", table1(&rt, Scale { samples: 0.1, full: false })?.render());
+    Ok(())
+}

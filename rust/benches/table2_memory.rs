@@ -1,0 +1,11 @@
+//! Regenerates Table 2: memory-operations vs computation breakdown,
+//! Cavs vs DyNet-like, training and inference, over batch sizes.
+use cavs::bench::experiments::{table2, Scale};
+use cavs::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    cavs::util::logger::init();
+    let rt = Runtime::from_env()?;
+    println!("\n{}", table2(&rt, Scale { samples: 0.1, full: false })?.render());
+    Ok(())
+}

@@ -1,0 +1,802 @@
+//! DyNet-like **dynamic declaration** baseline (paper §2.2, §5).
+//!
+//! For every minibatch (i.e. every iteration, every epoch) this system:
+//!
+//! 1. **Constructs a per-sample dataflow graph** at operator granularity —
+//!    one `Instance` per op of the cell program per vertex, wired across
+//!    vertices, with outputs placed in a per-sample memory arena in
+//!    construction order. This is the overhead that grows linearly with
+//!    samples × graph size (Fig. 9).
+//! 2. Runs **agenda-based autobatching** over the instances: ready ops of
+//!    identical signature are batched; before every batched execution the
+//!    system performs the **memory-continuity check** DyNet does (are the
+//!    m input slices adjacent in one arena?) and, failing it, gathers the
+//!    slices into a dense scratch block — the per-operator memory movement
+//!    Cavs replaces with entrance/exit-only movement (§3.3, Table 2).
+//! 3. Backward runs at cell granularity with the fused adjoint artifacts
+//!    (generous to DyNet — see baselines/mod.rs fidelity notes), but still
+//!    against the scattered arena memory with continuity checks.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::exec::StepResult;
+use crate::graph::{GraphBatch, InputGraph};
+use crate::memory::{MemTraffic, StateBuffer};
+use crate::models::{Cell, HeadKind, Model};
+use crate::runtime::{Arg, Runtime};
+use crate::util::bucket_for;
+use crate::util::stats::{Phase, PhaseTimer};
+use crate::vertex::{OpKind, Program};
+
+/// One node of a per-sample dataflow graph.
+struct Instance {
+    /// batching signature (op kind + param + width)
+    sig: u64,
+    /// producer instances (global instance ids)
+    ins: Vec<u32>,
+    /// output offset in the owning sample's arena (elements)
+    out_off: u32,
+    cols: u32,
+    /// op-graph node id (indexes Program.nodes)
+    node: u16,
+    vertex: u32,
+    graph: u32,
+}
+
+struct Built {
+    instances: Vec<Instance>,
+    arenas: Vec<Vec<f32>>,
+    /// per global vertex: (graph, arena offset) of its scattered state
+    state_loc: Vec<(u32, u32)>,
+}
+
+pub struct DynDecl<'rt> {
+    pub rt: &'rt Runtime,
+    pub timers: PhaseTimer,
+    pub traffic: MemTraffic,
+    /// #continuity checks performed (diagnostics for Table 2 commentary)
+    pub continuity_checks: u64,
+    pub launches: u64,
+}
+
+impl<'rt> DynDecl<'rt> {
+    pub fn new(rt: &'rt Runtime) -> DynDecl<'rt> {
+        DynDecl {
+            rt,
+            timers: PhaseTimer::default(),
+            traffic: MemTraffic::default(),
+            continuity_checks: 0,
+            launches: 0,
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.timers = PhaseTimer::default();
+        self.traffic.reset();
+        self.continuity_checks = 0;
+        self.launches = 0;
+    }
+
+    /// Construct per-sample graphs: the dynamic-declaration overhead.
+    fn construct(
+        &mut self,
+        program: &Program,
+        batch: &GraphBatch,
+    ) -> Built {
+        let n_ops = program.nodes.len();
+        let mut instances: Vec<Instance> =
+            Vec::with_capacity(batch.n_vertices * n_ops);
+        let mut arena_off = vec![0u32; batch.n_graphs];
+        let mut state_loc = vec![(0u32, 0u32); batch.n_vertices];
+        // first instance id of each vertex's op block
+        let mut vertex_base = vec![0u32; batch.n_vertices];
+
+        // construction must follow a valid per-sample topological order;
+        // the merged level order gives one.
+        let levels = batch.levels();
+        for level in &levels {
+            for &v in level {
+                let g = batch.owner[v as usize];
+                let base = instances.len() as u32;
+                vertex_base[v as usize] = base;
+                for (ni, node) in program.nodes.iter().enumerate() {
+                    let mut ins: Vec<u32> = Vec::with_capacity(node.ins.len());
+                    match &node.kind {
+                        OpKind::Gather { slot } => {
+                            if let Some(c) = batch.child(v, *slot) {
+                                // wire to the child's scatter-source op
+                                let cb = vertex_base[c as usize];
+                                let scat_src = program
+                                    .nodes
+                                    .iter()
+                                    .position(|n| matches!(n.kind, OpKind::Scatter))
+                                    .unwrap();
+                                let src =
+                                    program.nodes[scat_src].ins[0] as u32;
+                                ins.push(cb + src);
+                            }
+                        }
+                        _ => {
+                            for &j in &node.ins {
+                                ins.push(base + j as u32);
+                            }
+                        }
+                    }
+                    let off = arena_off[g as usize];
+                    arena_off[g as usize] += node.cols as u32;
+                    let sig = signature(&node.kind, node.cols);
+                    instances.push(Instance {
+                        sig,
+                        ins,
+                        out_off: off,
+                        cols: node.cols as u32,
+                        node: ni as u16,
+                        vertex: v,
+                        graph: g,
+                    });
+                    if matches!(node.kind, OpKind::Scatter) {
+                        let src = instances.last().unwrap().ins[0];
+                        let src_inst = &instances[src as usize];
+                        state_loc[v as usize] =
+                            (src_inst.graph, src_inst.out_off);
+                    }
+                }
+            }
+        }
+        let arenas = arena_off
+            .iter()
+            .map(|&n| vec![0.0f32; n as usize])
+            .collect();
+        Built { instances, arenas, state_loc }
+    }
+
+    /// The DyNet continuity check: are the m input slices one dense block?
+    fn continuity_check(&mut self, built: &Built, inputs: &[(u32, u32)], cols: u32) -> bool {
+        self.continuity_checks += 1;
+        let _ = built;
+        inputs.windows(2).all(|w| {
+            let ((g0, o0), (g1, o1)) = (w[0], w[1]);
+            g0 == g1 && o1 == o0 + cols
+        })
+    }
+
+    /// Forward via agenda autobatching over op instances.
+    fn forward(
+        &mut self,
+        model: &Model,
+        program: &Program,
+        batch: &GraphBatch,
+        built: &mut Built,
+        buckets: &[usize],
+    ) -> Result<()> {
+        let max_bucket = *buckets.last().unwrap();
+        let n = built.instances.len();
+        let mut indeg = vec![0u32; n];
+        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, inst) in built.instances.iter().enumerate() {
+            indeg[i] = inst.ins.len() as u32;
+            for &j in &inst.ins {
+                consumers[j as usize].push(i as u32);
+            }
+        }
+        let mut ready: HashMap<u64, Vec<u32>> = HashMap::new();
+        for (i, inst) in built.instances.iter().enumerate() {
+            if indeg[i] == 0 {
+                ready.entry(inst.sig).or_default().push(i as u32);
+            }
+        }
+        let mut remaining = n;
+        let mut scratch_a: Vec<f32> = Vec::new();
+        let mut scratch_b: Vec<f32> = Vec::new();
+        while remaining > 0 {
+            // DyNet heuristic: fire the signature with the most ready ops
+            let (&sig, _) = match ready.iter().max_by_key(|(_, v)| v.len()) {
+                Some(kv) => kv,
+                None => bail!("agenda stalled with {remaining} instances left"),
+            };
+            let list = ready.remove(&sig).unwrap();
+            for chunk in list.chunks(max_bucket) {
+                self.exec_instances(
+                    model, program, batch, built, chunk, buckets,
+                    &mut scratch_a, &mut scratch_b,
+                )?;
+            }
+            remaining -= list.len();
+            for &i in &list {
+                for &c in &consumers[i as usize] {
+                    indeg[c as usize] -= 1;
+                    if indeg[c as usize] == 0 {
+                        let inst = &built.instances[c as usize];
+                        ready.entry(inst.sig).or_default().push(c);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_instances(
+        &mut self,
+        model: &Model,
+        program: &Program,
+        batch: &GraphBatch,
+        built: &mut Built,
+        chunk: &[u32],
+        buckets: &[usize],
+        scratch_a: &mut Vec<f32>,
+        scratch_b: &mut Vec<f32>,
+    ) -> Result<()> {
+        let node_id = built.instances[chunk[0] as usize].node as usize;
+        let node = &program.nodes[node_id];
+        let m = chunk.len();
+        let cols = node.cols;
+
+        // pure-memory ops: per-instance memcpys against the arenas
+        match &node.kind {
+            OpKind::Pull => {
+                self.timers.time(Phase::Memory, || {
+                    for &i in chunk {
+                        let inst = &built.instances[i as usize];
+                        let tok = batch.tokens[inst.vertex as usize];
+                        if let Some(row) = model.embedding.row(tok) {
+                            let a = &mut built.arenas[inst.graph as usize];
+                            let o = inst.out_off as usize;
+                            a[o..o + cols].copy_from_slice(row);
+                        }
+                    }
+                    self.traffic.add(m * cols * 4);
+                });
+                return Ok(());
+            }
+            OpKind::Gather { .. } | OpKind::Scatter | OpKind::Push => {
+                // copies between arena slots (gather may be empty => zeros)
+                self.timers.time(Phase::Memory, || {
+                    for &i in chunk {
+                        let inst = &built.instances[i as usize];
+                        let (dst_g, dst_o) =
+                            (inst.graph as usize, inst.out_off as usize);
+                        if let Some(&src) = inst.ins.first() {
+                            let s = &built.instances[src as usize];
+                            let (sg, so) = (s.graph as usize, s.out_off as usize);
+                            let row: Vec<f32> =
+                                built.arenas[sg][so..so + cols].to_vec();
+                            built.arenas[dst_g][dst_o..dst_o + cols]
+                                .copy_from_slice(&row);
+                        } else {
+                            built.arenas[dst_g][dst_o..dst_o + cols].fill(0.0);
+                        }
+                    }
+                    self.traffic.add(m * cols * 4);
+                });
+                return Ok(());
+            }
+            OpKind::SliceCols { .. } => {
+                self.timers.time(Phase::Memory, || {
+                    for &i in chunk {
+                        let inst = &built.instances[i as usize];
+                        // read the slice bounds from THIS instance's node
+                        // (never trust chunk[0] — batching signatures must
+                        // not carry semantics)
+                        let (start, len) = match program.nodes
+                            [inst.node as usize]
+                            .kind
+                        {
+                            OpKind::SliceCols { start, len } => (start, len),
+                            _ => unreachable!(),
+                        };
+                        let src = &built.instances[inst.ins[0] as usize];
+                        let (sg, so) = (src.graph as usize, src.out_off as usize);
+                        let row: Vec<f32> = built.arenas[sg]
+                            [so + start..so + start + len]
+                            .to_vec();
+                        let (dg, doff) =
+                            (inst.graph as usize, inst.out_off as usize);
+                        built.arenas[dg][doff..doff + len].copy_from_slice(&row);
+                    }
+                    self.traffic.add(m * cols * 4);
+                });
+                return Ok(());
+            }
+            OpKind::ConcatCols => {
+                self.timers.time(Phase::Memory, || {
+                    for &i in chunk {
+                        let inst = &built.instances[i as usize];
+                        let (dg, doff) =
+                            (inst.graph as usize, inst.out_off as usize);
+                        let mut col = 0usize;
+                        for &src_id in inst.ins.clone().iter() {
+                            let s = &built.instances[src_id as usize];
+                            let (sg, so) =
+                                (s.graph as usize, s.out_off as usize);
+                            let w = s.cols as usize;
+                            let row: Vec<f32> =
+                                built.arenas[sg][so..so + w].to_vec();
+                            built.arenas[dg][doff + col..doff + col + w]
+                                .copy_from_slice(&row);
+                            col += w;
+                        }
+                    }
+                    self.traffic.add(m * cols * 4);
+                });
+                return Ok(());
+            }
+            _ => {}
+        }
+
+        // arithmetic ops: continuity check + gather + one PJRT launch
+        let b = pick(buckets, m);
+        let gather_input = |this: &mut Self,
+                            built: &Built,
+                            pos: usize,
+                            width: usize,
+                            out: &mut Vec<f32>| {
+            let locs: Vec<(u32, u32)> = chunk
+                .iter()
+                .map(|&i| {
+                    let src = &built.instances
+                        [built.instances[i as usize].ins[pos] as usize];
+                    (src.graph, src.out_off)
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let contiguous = this.continuity_check(built, &locs, width as u32);
+            this.timers.add(Phase::Scheduling, t0.elapsed());
+            this.timers.time(Phase::Memory, || {
+                out.resize(b * width, 0.0);
+                out[m * width..].fill(0.0);
+                if contiguous {
+                    let (g, o) = (locs[0].0 as usize, locs[0].1 as usize);
+                    out[..m * width].copy_from_slice(
+                        &built.arenas[g][o..o + m * width],
+                    );
+                } else {
+                    for (r, &(g, o)) in locs.iter().enumerate() {
+                        out[r * width..(r + 1) * width].copy_from_slice(
+                            &built.arenas[g as usize]
+                                [o as usize..o as usize + width],
+                        );
+                    }
+                }
+                this.traffic.add(m * width * 4);
+            });
+        };
+
+        let out_block: Vec<f32> = match &node.kind {
+            OpKind::MatMul { param } => {
+                let k = program.nodes[node.ins[0]].cols;
+                gather_input(self, built, 0, k, scratch_a);
+                let name = format!("op_matmul_m{b}_k{k}_n{cols}");
+                self.run_param_op(model, &name, scratch_a, *param)?
+            }
+            OpKind::AddBias { param } => {
+                gather_input(self, built, 0, cols, scratch_a);
+                let name = format!("op_addbias_m{b}_n{cols}");
+                self.run_param_op(model, &name, scratch_a, *param)?
+            }
+            OpKind::Add | OpKind::Mul => {
+                gather_input(self, built, 0, cols, scratch_a);
+                gather_input(self, built, 1, cols, scratch_b);
+                let op = if matches!(node.kind, OpKind::Add) { "add" } else { "mul" };
+                let name = format!("op_{op}_n{}", b * cols);
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = self
+                    .rt
+                    .run(&exe, &[Arg::F32(scratch_a), Arg::F32(scratch_b)])?;
+                self.timers.add(Phase::Compute, t0.elapsed());
+                self.launches += 1;
+                outs[0].to_vec::<f32>()?
+            }
+            OpKind::Sigmoid | OpKind::Tanh => {
+                gather_input(self, built, 0, cols, scratch_a);
+                let op = if matches!(node.kind, OpKind::Sigmoid) {
+                    "sigmoid"
+                } else {
+                    "tanh"
+                };
+                let name = format!("op_{op}_n{}", b * cols);
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = self.rt.run(&exe, &[Arg::F32(scratch_a)])?;
+                self.timers.add(Phase::Compute, t0.elapsed());
+                self.launches += 1;
+                outs[0].to_vec::<f32>()?
+            }
+            _ => unreachable!("memory ops handled above"),
+        };
+
+        // scatter results back to the per-instance arena slots
+        self.timers.time(Phase::Memory, || {
+            for (r, &i) in chunk.iter().enumerate() {
+                let inst = &built.instances[i as usize];
+                let (g, o) = (inst.graph as usize, inst.out_off as usize);
+                built.arenas[g][o..o + cols]
+                    .copy_from_slice(&out_block[r * cols..(r + 1) * cols]);
+            }
+            self.traffic.add(m * cols * 4);
+        });
+        Ok(())
+    }
+
+    fn run_param_op(
+        &mut self,
+        model: &Model,
+        name: &str,
+        a: &[f32],
+        param: usize,
+    ) -> Result<Vec<f32>> {
+        let exe = self.rt.load(name)?;
+        let t0 = std::time::Instant::now();
+        let out = model.params.with_buffers(self.rt, |pb| {
+            let outs = self.rt.run(&exe, &[Arg::F32(a), Arg::Buf(pb[param])])?;
+            Ok(outs[0].to_vec::<f32>()?)
+        })?;
+        self.timers.add(Phase::Compute, t0.elapsed());
+        self.launches += 1;
+        Ok(out)
+    }
+
+    /// Debug/test hook: run construction + agenda forward only and return
+    /// every vertex's state row (used by unit tests to pin the forward
+    /// data path independent of heads/backward).
+    pub fn debug_forward_states(
+        &mut self,
+        model: &Model,
+        graphs: &[&InputGraph],
+    ) -> Result<Vec<Vec<f32>>> {
+        let cell = model.cell;
+        let h = model.h;
+        let program = cell
+            .program(h)
+            .ok_or_else(|| anyhow::anyhow!("no op program for {}", cell.name()))?;
+        let batch = GraphBatch::new(graphs, cell.arity());
+        let buckets =
+            self.rt.manifest.buckets(cell.name(), "cell_fwd", h).to_vec();
+        let mut built = self.construct(&program, &batch);
+        self.forward(model, &program, &batch, &mut built, &buckets)?;
+        let state_cols = cell.state_cols(h);
+        Ok((0..batch.n_vertices)
+            .map(|v| {
+                let (g, o) = built.state_loc[v];
+                built.arenas[g as usize][o as usize..o as usize + state_cols]
+                    .to_vec()
+            })
+            .collect())
+    }
+
+    /// Full step: construct → agenda forward → heads → cell-level backward.
+    pub fn run_minibatch(
+        &mut self,
+        model: &mut Model,
+        graphs: &[&InputGraph],
+        training: bool,
+    ) -> Result<StepResult> {
+        let cell = model.cell;
+        let h = model.h;
+        let program = cell
+            .program(h)
+            .ok_or_else(|| anyhow::anyhow!("no op program for {}", cell.name()))?;
+        let batch = GraphBatch::new(graphs, cell.arity());
+        let op_buckets: Vec<usize> = {
+            // op artifacts share the cell bucket grid
+            self.rt.manifest.buckets(cell.name(), "cell_fwd", h).to_vec()
+        };
+        if op_buckets.is_empty() {
+            bail!("no artifacts for {} h={h}", cell.name());
+        }
+
+        // 1. per-sample graph construction (the dynamic-declaration cost)
+        let t0 = std::time::Instant::now();
+        let mut built = self.construct(&program, &batch);
+        self.timers.add(Phase::Construction, t0.elapsed());
+
+        // 2. agenda-batched forward
+        self.forward(model, &program, &batch, &mut built, &op_buckets)?;
+
+        // 3+4. heads and backward (cell granularity against arena memory)
+        let mut result = StepResult {
+            n_vertices: batch.n_vertices,
+            n_tasks: 0,
+            ..Default::default()
+        };
+        self.heads_and_backward(model, &batch, &built, training, &mut result)?;
+        Ok(result)
+    }
+
+    fn heads_and_backward(
+        &mut self,
+        model: &mut Model,
+        batch: &GraphBatch,
+        built: &Built,
+        training: bool,
+        result: &mut StepResult,
+    ) -> Result<()> {
+        let cell = model.cell;
+        let h = model.h;
+        let state_cols = cell.state_cols(h);
+        let (hoff, _) = cell.h_part(h);
+        let mut grad_buf = StateBuffer::new(batch.n_vertices, state_cols);
+
+        // pack state rows from arenas on demand
+        let state_of = |built: &Built, v: u32, dst: &mut [f32]| {
+            let (g, o) = built.state_loc[v as usize];
+            dst.copy_from_slice(
+                &built.arenas[g as usize]
+                    [o as usize..o as usize + state_cols],
+            );
+        };
+
+        // ---- heads (eager; DyNet has no lazy batching) ----
+        let (verts, labels): (Vec<u32>, Vec<i32>) = match model.head_kind {
+            HeadKind::ClassifierAtRoot => (
+                batch.roots.clone(),
+                batch.root_labels.clone(),
+            ),
+            HeadKind::LmPerVertex => {
+                let mut vs = Vec::new();
+                let mut ls = Vec::new();
+                for v in 0..batch.n_vertices as u32 {
+                    if batch.labels[v as usize] >= 0 {
+                        vs.push(v);
+                        ls.push(batch.labels[v as usize]);
+                    }
+                }
+                (vs, ls)
+            }
+            HeadKind::SumRootState => {
+                let mut loss = 0.0;
+                let mut row = vec![0.0f32; state_cols];
+                for &r in &batch.roots {
+                    state_of(built, r, &mut row);
+                    loss += row[hoff..hoff + h].iter().sum::<f32>();
+                }
+                if training {
+                    let ones = vec![1.0f32; h];
+                    for &r in &batch.roots {
+                        grad_buf.add_into_cols(r as usize, hoff, &ones, &self.traffic);
+                    }
+                }
+                result.loss = loss;
+                (Vec::new(), Vec::new())
+            }
+        };
+        if !verts.is_empty() {
+            let tag = model.head_tag;
+            let kind = if training { "head_grad" } else { "head_eval" };
+            let nk = if training { "grad" } else { "eval" };
+            let hb = self.rt.manifest.buckets(tag, kind, h).to_vec();
+            if hb.is_empty() {
+                bail!("no head artifacts {tag} {kind} h={h}");
+            }
+            let maxb = *hb.last().unwrap();
+            let mut start = 0;
+            let mut row = vec![0.0f32; state_cols];
+            while start < verts.len() {
+                let m = (verts.len() - start).min(maxb);
+                let b = *hb.iter().find(|&&x| x >= m).unwrap();
+                let mut hblock = vec![0.0f32; b * h];
+                let mut lab = vec![-1i32; b];
+                self.timers.time(Phase::Memory, || {
+                    for (r, &v) in verts[start..start + m].iter().enumerate() {
+                        state_of(built, v, &mut row);
+                        hblock[r * h..(r + 1) * h]
+                            .copy_from_slice(&row[hoff..hoff + h]);
+                        lab[r] = labels[start + r];
+                    }
+                    self.traffic.add(m * h * 4);
+                });
+                let name = format!("{tag}_{nk}_h{h}_b{b}");
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = model.head.as_ref().unwrap().with_buffers(
+                    self.rt,
+                    |pb| {
+                        self.rt.run(
+                            &exe,
+                            &[
+                                Arg::Buf(pb[0]),
+                                Arg::Buf(pb[1]),
+                                Arg::F32(&hblock),
+                                Arg::I32(&lab),
+                            ],
+                        )
+                    },
+                )?;
+                self.timers.add(Phase::Head, t0.elapsed());
+                self.launches += 1;
+                result.loss += outs[0].to_vec::<f32>()?[0];
+                result.ncorrect += outs[1].to_vec::<f32>()?[0];
+                result.n_labels += m;
+                if training {
+                    let gh = outs[2].to_vec::<f32>()?;
+                    for (r, &v) in verts[start..start + m].iter().enumerate() {
+                        grad_buf.add_into_cols(
+                            v as usize,
+                            hoff,
+                            &gh[r * h..(r + 1) * h],
+                            &self.traffic,
+                        );
+                    }
+                    let hp = model.head.as_mut().unwrap();
+                    hp.acc_grad(0, &outs[3].to_vec::<f32>()?);
+                    hp.acc_grad(1, &outs[4].to_vec::<f32>()?);
+                }
+                start += m;
+            }
+        }
+        if !training {
+            return Ok(());
+        }
+
+        // ---- backward: reverse levels, cell-granular, arena-sourced ----
+        let cell_buckets =
+            self.rt.manifest.buckets(cell.name(), "cell_fwd", h).to_vec();
+        let max_bucket = *cell_buckets.last().unwrap();
+        let levels = batch.levels();
+        let mut xs = Vec::new();
+        let mut svs: Vec<Vec<f32>> = vec![Vec::new(); cell.arity()];
+        let mut gout = Vec::new();
+        let mut row = vec![0.0f32; state_cols];
+        for level in levels.iter().rev() {
+            for chunk in level.chunks(max_bucket) {
+                let m = chunk.len();
+                let b = pick(&cell_buckets, m);
+                self.timers.time(Phase::Memory, || {
+                    xs.resize(b * h, 0.0);
+                    xs.fill(0.0);
+                    gout.resize(b * state_cols, 0.0);
+                    gout.fill(0.0);
+                    for (r, &v) in chunk.iter().enumerate() {
+                        if let Some(er) = model.embedding.row(batch.tokens[v as usize]) {
+                            xs[r * h..(r + 1) * h].copy_from_slice(er);
+                        }
+                        gout[r * state_cols..(r + 1) * state_cols]
+                            .copy_from_slice(grad_buf.row(v as usize));
+                    }
+                    for (slot, sv) in svs.iter_mut().enumerate() {
+                        sv.resize(b * state_cols, 0.0);
+                        sv.fill(0.0);
+                        // continuity check per gathered input (real DyNet
+                        // checks before every batched op)
+                        let locs: Vec<(u32, u32)> = chunk
+                            .iter()
+                            .map(|&v| match batch.child(v, slot) {
+                                Some(c) => built.state_loc[c as usize],
+                                None => (u32::MAX, 0),
+                            })
+                            .collect();
+                        self.continuity_checks += 1;
+                        let _ = locs.windows(2).all(|w| {
+                            w[0].0 == w[1].0
+                                && w[1].1 == w[0].1 + state_cols as u32
+                        });
+                        for (r, &v) in chunk.iter().enumerate() {
+                            if let Some(c) = batch.child(v, slot) {
+                                state_of(built, c, &mut row);
+                                sv[r * state_cols..(r + 1) * state_cols]
+                                    .copy_from_slice(&row);
+                            }
+                        }
+                    }
+                    self.traffic
+                        .add(m * (h + state_cols * (1 + cell.arity())) * 4);
+                });
+
+                let name = crate::runtime::Manifest::cell_name(
+                    cell.name(),
+                    "cell_bwd",
+                    h,
+                    b,
+                );
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = model.params.with_buffers(self.rt, |pb| {
+                    let mut args: Vec<Arg<'_>> =
+                        pb.iter().map(|p| Arg::Buf(p)).collect();
+                    args.push(Arg::F32(&xs));
+                    for sv in &svs {
+                        args.push(Arg::F32(sv));
+                    }
+                    args.push(Arg::F32(&gout));
+                    self.rt.run(&exe, &args)
+                })?;
+                self.timers.add(Phase::Compute, t0.elapsed());
+                self.launches += 1;
+
+                let n_params = model.params.len();
+                for p in 0..n_params {
+                    model.params.acc_grad(p, &outs[p].to_vec::<f32>()?);
+                }
+                let gx = outs[n_params].to_vec::<f32>()?;
+                self.timers.time(Phase::Memory, || {
+                    for (r, &v) in chunk.iter().enumerate() {
+                        model.embedding.acc_grad(
+                            batch.tokens[v as usize],
+                            &gx[r * h..(r + 1) * h],
+                        );
+                    }
+                    self.traffic.add(m * h * 4);
+                });
+                for slot in 0..cell.arity() {
+                    let gs = outs[n_params + 1 + slot].to_vec::<f32>()?;
+                    self.timers.time(Phase::Memory, || {
+                        let ids: Vec<Option<u32>> = chunk
+                            .iter()
+                            .map(|&v| batch.child(v, slot))
+                            .collect();
+                        grad_buf.scatter_add(
+                            &ids,
+                            &gs[..m * state_cols],
+                            &self.traffic,
+                        );
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn signature(kind: &OpKind, cols: usize) -> u64 {
+    let (tag, aux): (u64, u64) = match kind {
+        OpKind::Gather { slot } => (1, *slot as u64),
+        OpKind::Pull => (2, 0),
+        OpKind::Scatter => (3, 0),
+        OpKind::Push => (4, 0),
+        OpKind::MatMul { param } => (5, *param as u64),
+        OpKind::AddBias { param } => (6, *param as u64),
+        OpKind::Add => (7, 0),
+        OpKind::Mul => (8, 0),
+        OpKind::Sigmoid => (9, 0),
+        OpKind::Tanh => (10, 0),
+        OpKind::SliceCols { start, len } => {
+            // start/len each fit in 12 bits (<= 4096 columns)
+            (11, (*start as u64) << 12 | *len as u64)
+        }
+        OpKind::ConcatCols => (12, 0),
+    };
+    // non-overlapping fields: tag[56..], aux[32..56], cols[0..32]
+    (tag << 56) | ((aux & 0xFF_FFFF) << 32) | cols as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signatures_are_collision_free() {
+        // all (kind, cols) pairs used by the shipped cell programs must
+        // produce distinct signatures (a bit-packing collision here once
+        // batched the i- and o-gate slices together — regression test)
+        use crate::models::Cell;
+        let mut seen = std::collections::HashMap::new();
+        for cell in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc] {
+            for h in [4usize, 32, 64, 256, 512, 1024] {
+                let p = cell.program(h).unwrap();
+                for n in &p.nodes {
+                    let s = signature(&n.kind, n.cols);
+                    if let Some(prev) = seen.insert(s, (n.kind.clone(), n.cols)) {
+                        assert_eq!(
+                            prev,
+                            (n.kind.clone(), n.cols),
+                            "signature collision at h={h}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn pick(buckets: &[usize], m: usize) -> usize {
+    let want = bucket_for(m, *buckets.last().unwrap());
+    *buckets.iter().find(|&&b| b >= want).unwrap_or(buckets.last().unwrap())
+}
+
+/// A tiny summary of construction cost for Fig. 9.
+pub fn construction_instances(cell: Cell, h: usize, n_vertices: usize) -> usize {
+    cell.program(h).map(|p| p.nodes.len() * n_vertices).unwrap_or(0)
+}

@@ -1,0 +1,503 @@
+//! TensorFlow-Fold-like baseline (paper §2.2, §5.2).
+//!
+//! Fold makes dynamic graphs batchable by **preprocessing**: every input
+//! graph is analyzed and translated into depth-indexed instructions with
+//! wiring tables, which a static `tf_while` control-flow graph then
+//! executes depth-by-depth. Two costs follow, both reproduced here:
+//!
+//! 1. **Preprocessing** proportional to total vertices, re-done per batch
+//!    per epoch (Fig. 9's dominant bar). A `threads` knob parallelizes it
+//!    across worker threads (Fold-1 vs Fold-32 in the paper) — on this
+//!    1-core machine extra threads cannot help, which EXPERIMENTS.md
+//!    reports honestly.
+//! 2. **Redundant level copies**: because the while-loop body cannot index
+//!    across depths, ALL states produced so far are re-materialized into
+//!    the loop carry at every depth (the paper: "it has to move all the
+//!    contents of nodes ... at depth d-1 to a desired location").
+//!
+//! Execution itself uses the same fused cell artifacts as Cavs (generous
+//! to Fold; its measured disadvantage is preprocessing + copies only).
+
+use anyhow::{bail, Result};
+
+use crate::exec::StepResult;
+use crate::graph::{GraphBatch, InputGraph};
+use crate::memory::{MemTraffic, StateBuffer};
+use crate::models::{HeadKind, Model};
+use crate::runtime::{Arg, Runtime};
+use crate::util::bucket_for;
+use crate::util::stats::{Phase, PhaseTimer};
+
+/// Preprocessed program: per depth, the vertices to evaluate and the carry
+/// positions of their children (`u32::MAX` = missing child).
+pub struct FoldPlan {
+    /// depth -> vertex ids
+    pub levels: Vec<Vec<u32>>,
+    /// depth -> per vertex per slot: position in the carry (evaluation
+    /// order index) of the child
+    pub wiring: Vec<Vec<u32>>,
+    /// vertex -> its position in the carry
+    pub carry_pos: Vec<u32>,
+}
+
+pub struct Fold<'rt> {
+    pub rt: &'rt Runtime,
+    pub threads: usize,
+    pub timers: PhaseTimer,
+    pub traffic: MemTraffic,
+    pub launches: u64,
+}
+
+impl<'rt> Fold<'rt> {
+    pub fn new(rt: &'rt Runtime, threads: usize) -> Fold<'rt> {
+        Fold {
+            rt,
+            threads: threads.max(1),
+            timers: PhaseTimer::default(),
+            traffic: MemTraffic::default(),
+            launches: 0,
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.timers = PhaseTimer::default();
+        self.traffic.reset();
+        self.launches = 0;
+    }
+
+    /// The preprocessing pass: translate the batch's graphs into the
+    /// depth-grouped instruction/wiring tables. Parallelized over
+    /// `threads` workers (per-graph analysis), then merged.
+    pub fn preprocess(&mut self, graphs: &[&InputGraph], arity: usize) -> FoldPlan {
+        // per-graph analysis (parallel part): depths per vertex
+        let per_graph: Vec<Vec<u32>> = if self.threads == 1 || graphs.len() < 2 {
+            graphs.iter().map(|g| g.depths().unwrap()).collect()
+        } else {
+            std::thread::scope(|s| {
+                let chunk = graphs.len().div_ceil(self.threads);
+                let handles: Vec<_> = graphs
+                    .chunks(chunk)
+                    .map(|gs| {
+                        s.spawn(move || {
+                            gs.iter()
+                                .map(|g| g.depths().unwrap())
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().unwrap())
+                    .collect()
+            })
+        };
+        // merge into global depth groups + wiring (sequential part)
+        let n: usize = graphs.iter().map(|g| g.n()).sum();
+        let max_depth = per_graph
+            .iter()
+            .flat_map(|d| d.iter())
+            .copied()
+            .max()
+            .unwrap_or(0) as usize;
+        let mut levels: Vec<Vec<u32>> = vec![Vec::new(); max_depth + 1];
+        let mut base = 0u32;
+        let mut depth_of = vec![0u32; n];
+        for (g, depths) in graphs.iter().zip(&per_graph) {
+            for (v, &d) in depths.iter().enumerate() {
+                levels[d as usize].push(base + v as u32);
+                depth_of[base as usize + v] = d;
+            }
+            base += g.n() as u32;
+        }
+        // carry positions: evaluation order
+        let mut carry_pos = vec![u32::MAX; n];
+        let mut next = 0u32;
+        for level in &levels {
+            for &v in level {
+                carry_pos[v as usize] = next;
+                next += 1;
+            }
+        }
+        // wiring: child carry positions per level
+        let mut wiring: Vec<Vec<u32>> = Vec::with_capacity(levels.len());
+        let mut child_of = vec![u32::MAX; n * arity];
+        base = 0;
+        for g in graphs {
+            for v in 0..g.n() {
+                for (slot, &c) in g.children[v].iter().enumerate() {
+                    child_of[(base as usize + v) * arity + slot] = base + c;
+                }
+            }
+            base += g.n() as u32;
+        }
+        for level in &levels {
+            let mut w = Vec::with_capacity(level.len() * arity);
+            for &v in level {
+                for slot in 0..arity {
+                    let c = child_of[v as usize * arity + slot];
+                    w.push(if c == u32::MAX {
+                        u32::MAX
+                    } else {
+                        carry_pos[c as usize]
+                    });
+                }
+            }
+            wiring.push(w);
+        }
+        FoldPlan { levels, wiring, carry_pos }
+    }
+
+    /// One training/inference step.
+    pub fn run_minibatch(
+        &mut self,
+        model: &mut Model,
+        graphs: &[&InputGraph],
+        training: bool,
+    ) -> Result<StepResult> {
+        let cell = model.cell;
+        let h = model.h;
+        let arity = cell.arity();
+        let state_cols = cell.state_cols(h);
+        let batch = GraphBatch::new(graphs, arity);
+
+        // 1. preprocessing — Fold's construction-side overhead
+        let t0 = std::time::Instant::now();
+        let plan = self.preprocess(graphs, arity);
+        self.timers.add(Phase::Construction, t0.elapsed());
+
+        let buckets =
+            self.rt.manifest.buckets(cell.name(), "cell_fwd", h).to_vec();
+        if buckets.is_empty() {
+            bail!("no artifacts for {} h={h}", cell.name());
+        }
+        let max_bucket = *buckets.last().unwrap();
+
+        // the while-loop carry: states in evaluation order
+        let n = batch.n_vertices;
+        let mut carry = vec![0.0f32; n * state_cols];
+        let mut filled = 0usize;
+
+        let mut xs = Vec::new();
+        let mut svs: Vec<Vec<f32>> = vec![Vec::new(); arity];
+
+        // ---- forward: depth-synchronous with redundant carry moves ----
+        for (d, level) in plan.levels.iter().enumerate() {
+            // the tf_while carry re-materialization: copy everything
+            // produced so far (the paper's redundant memcpy)
+            self.timers.time(Phase::Memory, || {
+                let moved = filled * state_cols;
+                if moved > 0 {
+                    let copy: Vec<f32> = carry[..moved].to_vec();
+                    carry[..moved].copy_from_slice(&copy);
+                    self.traffic.add(moved * 4);
+                }
+            });
+
+            let wiring = &plan.wiring[d];
+            let mut done_in_level = 0usize;
+            for chunk in level.chunks(max_bucket) {
+                let m = chunk.len();
+                let b = pick(&buckets, m);
+                self.timers.time(Phase::Memory, || {
+                    xs.resize(b * h, 0.0);
+                    xs.fill(0.0);
+                    for (r, &v) in chunk.iter().enumerate() {
+                        if let Some(row) =
+                            model.embedding.row(batch.tokens[v as usize])
+                        {
+                            xs[r * h..(r + 1) * h].copy_from_slice(row);
+                        }
+                    }
+                    for (slot, sv) in svs.iter_mut().enumerate() {
+                        sv.resize(b * state_cols, 0.0);
+                        sv.fill(0.0);
+                        for r in 0..m {
+                            let wi = (done_in_level + r) * arity + slot;
+                            let pos = wiring[wi];
+                            if pos != u32::MAX {
+                                let o = pos as usize * state_cols;
+                                sv[r * state_cols..(r + 1) * state_cols]
+                                    .copy_from_slice(&carry[o..o + state_cols]);
+                            }
+                        }
+                    }
+                    self.traffic.add(m * (h + arity * state_cols) * 4);
+                });
+
+                let name = crate::runtime::Manifest::cell_name(
+                    cell.name(),
+                    "cell_fwd",
+                    h,
+                    b,
+                );
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = model.params.with_buffers(self.rt, |pb| {
+                    let mut args: Vec<Arg<'_>> =
+                        pb.iter().map(|p| Arg::Buf(p)).collect();
+                    args.push(Arg::F32(&xs));
+                    for sv in &svs {
+                        args.push(Arg::F32(sv));
+                    }
+                    self.rt.run(&exe, &args)
+                })?;
+                self.timers.add(Phase::Compute, t0.elapsed());
+                self.launches += 1;
+                let block = outs[0].to_vec::<f32>()?;
+                self.timers.time(Phase::Memory, || {
+                    for (r, &v) in chunk.iter().enumerate() {
+                        let pos = plan.carry_pos[v as usize] as usize;
+                        carry[pos * state_cols..(pos + 1) * state_cols]
+                            .copy_from_slice(
+                                &block[r * state_cols..(r + 1) * state_cols],
+                            );
+                    }
+                    self.traffic.add(m * state_cols * 4);
+                });
+                done_in_level += m;
+            }
+            filled += level.len();
+        }
+
+        // ---- heads + backward (depth groups reversed, carry-grad moves)
+        let mut result = StepResult {
+            n_vertices: batch.n_vertices,
+            n_tasks: plan.levels.len(),
+            ..Default::default()
+        };
+        self.heads_and_backward(
+            model, &batch, &plan, &carry, training, &mut result,
+        )?;
+        Ok(result)
+    }
+
+    fn heads_and_backward(
+        &mut self,
+        model: &mut Model,
+        batch: &GraphBatch,
+        plan: &FoldPlan,
+        carry: &[f32],
+        training: bool,
+        result: &mut StepResult,
+    ) -> Result<()> {
+        let cell = model.cell;
+        let h = model.h;
+        let arity = cell.arity();
+        let state_cols = cell.state_cols(h);
+        let (hoff, _) = cell.h_part(h);
+        let mut grad_buf = StateBuffer::new(batch.n_vertices, state_cols);
+
+        let state_row = |v: u32| {
+            let p = plan.carry_pos[v as usize] as usize;
+            &carry[p * state_cols..(p + 1) * state_cols]
+        };
+
+        // ---- heads (eager; Fold has no lazy batching) ----
+        let (verts, labels): (Vec<u32>, Vec<i32>) = match model.head_kind {
+            HeadKind::ClassifierAtRoot => {
+                (batch.roots.clone(), batch.root_labels.clone())
+            }
+            HeadKind::LmPerVertex => {
+                let mut vs = Vec::new();
+                let mut ls = Vec::new();
+                for v in 0..batch.n_vertices as u32 {
+                    if batch.labels[v as usize] >= 0 {
+                        vs.push(v);
+                        ls.push(batch.labels[v as usize]);
+                    }
+                }
+                (vs, ls)
+            }
+            HeadKind::SumRootState => {
+                let mut loss = 0.0;
+                for &r in &batch.roots {
+                    loss += state_row(r)[hoff..hoff + h].iter().sum::<f32>();
+                }
+                if training {
+                    let ones = vec![1.0f32; h];
+                    for &r in &batch.roots {
+                        grad_buf.add_into_cols(r as usize, hoff, &ones, &self.traffic);
+                    }
+                }
+                result.loss = loss;
+                (Vec::new(), Vec::new())
+            }
+        };
+        if !verts.is_empty() {
+            let tag = model.head_tag;
+            let kind = if training { "head_grad" } else { "head_eval" };
+            let nk = if training { "grad" } else { "eval" };
+            let hb = self.rt.manifest.buckets(tag, kind, h).to_vec();
+            if hb.is_empty() {
+                bail!("no head artifacts {tag} {kind} h={h}");
+            }
+            let maxb = *hb.last().unwrap();
+            let mut start = 0;
+            while start < verts.len() {
+                let m = (verts.len() - start).min(maxb);
+                let b = *hb.iter().find(|&&x| x >= m).unwrap();
+                let mut hblock = vec![0.0f32; b * h];
+                let mut lab = vec![-1i32; b];
+                self.timers.time(Phase::Memory, || {
+                    for (r, &v) in verts[start..start + m].iter().enumerate() {
+                        hblock[r * h..(r + 1) * h]
+                            .copy_from_slice(&state_row(v)[hoff..hoff + h]);
+                        lab[r] = labels[start + r];
+                    }
+                    self.traffic.add(m * h * 4);
+                });
+                let name = format!("{tag}_{nk}_h{h}_b{b}");
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = model.head.as_ref().unwrap().with_buffers(
+                    self.rt,
+                    |pb| {
+                        self.rt.run(
+                            &exe,
+                            &[
+                                Arg::Buf(pb[0]),
+                                Arg::Buf(pb[1]),
+                                Arg::F32(&hblock),
+                                Arg::I32(&lab),
+                            ],
+                        )
+                    },
+                )?;
+                self.timers.add(Phase::Head, t0.elapsed());
+                self.launches += 1;
+                result.loss += outs[0].to_vec::<f32>()?[0];
+                result.ncorrect += outs[1].to_vec::<f32>()?[0];
+                result.n_labels += m;
+                if training {
+                    let gh = outs[2].to_vec::<f32>()?;
+                    for (r, &v) in verts[start..start + m].iter().enumerate() {
+                        grad_buf.add_into_cols(
+                            v as usize,
+                            hoff,
+                            &gh[r * h..(r + 1) * h],
+                            &self.traffic,
+                        );
+                    }
+                    let hp = model.head.as_mut().unwrap();
+                    hp.acc_grad(0, &outs[3].to_vec::<f32>()?);
+                    hp.acc_grad(1, &outs[4].to_vec::<f32>()?);
+                }
+                start += m;
+            }
+        }
+        if !training {
+            return Ok(());
+        }
+
+        // ---- backward ----
+        let buckets =
+            self.rt.manifest.buckets(cell.name(), "cell_fwd", h).to_vec();
+        let max_bucket = *buckets.last().unwrap();
+        let mut xs = Vec::new();
+        let mut svs: Vec<Vec<f32>> = vec![Vec::new(); arity];
+        let mut gout = Vec::new();
+        let mut filled: usize = batch.n_vertices;
+        for (d, level) in plan.levels.iter().enumerate().rev() {
+            // redundant grad-carry move (mirror of the forward's)
+            filled -= level.len();
+            self.timers.time(Phase::Memory, || {
+                let moved = filled * state_cols;
+                if moved > 0 {
+                    self.traffic.add(moved * 4);
+                }
+            });
+            let wiring = &plan.wiring[d];
+            let mut done_in_level = 0usize;
+            for chunk in level.chunks(max_bucket) {
+                let m = chunk.len();
+                let b = pick(&buckets, m);
+                self.timers.time(Phase::Memory, || {
+                    xs.resize(b * h, 0.0);
+                    xs.fill(0.0);
+                    gout.resize(b * state_cols, 0.0);
+                    gout.fill(0.0);
+                    for (r, &v) in chunk.iter().enumerate() {
+                        if let Some(row) =
+                            model.embedding.row(batch.tokens[v as usize])
+                        {
+                            xs[r * h..(r + 1) * h].copy_from_slice(row);
+                        }
+                        gout[r * state_cols..(r + 1) * state_cols]
+                            .copy_from_slice(grad_buf.row(v as usize));
+                    }
+                    for (slot, sv) in svs.iter_mut().enumerate() {
+                        sv.resize(b * state_cols, 0.0);
+                        sv.fill(0.0);
+                        for r in 0..m {
+                            let pos = wiring[(done_in_level + r) * arity + slot];
+                            if pos != u32::MAX {
+                                let o = pos as usize * state_cols;
+                                sv[r * state_cols..(r + 1) * state_cols]
+                                    .copy_from_slice(&carry[o..o + state_cols]);
+                            }
+                        }
+                    }
+                    self.traffic
+                        .add(m * (h + (1 + arity) * state_cols) * 4);
+                });
+
+                let name = crate::runtime::Manifest::cell_name(
+                    cell.name(),
+                    "cell_bwd",
+                    h,
+                    b,
+                );
+                let exe = self.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = model.params.with_buffers(self.rt, |pb| {
+                    let mut args: Vec<Arg<'_>> =
+                        pb.iter().map(|p| Arg::Buf(p)).collect();
+                    args.push(Arg::F32(&xs));
+                    for sv in &svs {
+                        args.push(Arg::F32(sv));
+                    }
+                    args.push(Arg::F32(&gout));
+                    self.rt.run(&exe, &args)
+                })?;
+                self.timers.add(Phase::Compute, t0.elapsed());
+                self.launches += 1;
+
+                let n_params = model.params.len();
+                for p in 0..n_params {
+                    model.params.acc_grad(p, &outs[p].to_vec::<f32>()?);
+                }
+                let gx = outs[n_params].to_vec::<f32>()?;
+                self.timers.time(Phase::Memory, || {
+                    for (r, &v) in chunk.iter().enumerate() {
+                        model.embedding.acc_grad(
+                            batch.tokens[v as usize],
+                            &gx[r * h..(r + 1) * h],
+                        );
+                    }
+                    self.traffic.add(m * h * 4);
+                });
+                for slot in 0..arity {
+                    let gs = outs[n_params + 1 + slot].to_vec::<f32>()?;
+                    self.timers.time(Phase::Memory, || {
+                        let ids: Vec<Option<u32>> = chunk
+                            .iter()
+                            .map(|&v| batch.child(v, slot))
+                            .collect();
+                        grad_buf.scatter_add(
+                            &ids,
+                            &gs[..m * state_cols],
+                            &self.traffic,
+                        );
+                    });
+                }
+                done_in_level += m;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn pick(buckets: &[usize], m: usize) -> usize {
+    let want = bucket_for(m, *buckets.last().unwrap());
+    *buckets.iter().find(|&&b| b >= want).unwrap_or(buckets.last().unwrap())
+}

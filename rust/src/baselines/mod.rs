@@ -1,0 +1,23 @@
+//! Baseline systems the paper compares against (§5, Fig. 8/9, Tables 1–2),
+//! re-implemented on the same substrate so the comparison isolates the
+//! *system* differences (scheduling, memory, construction overhead):
+//!
+//! * [`dyndecl`] — DyNet-like dynamic declaration: per-sample dataflow
+//!   graph construction at operator granularity + agenda-based signature
+//!   autobatching with memory-continuity checks and per-op gathers.
+//! * [`fold`] — TensorFlow-Fold-like: per-batch graph preprocessing into
+//!   depth-grouped instructions, depth-synchronous execution with the
+//!   full-level copies `tf_while` forces.
+//! * [`monolithic`] — the fixed-topology whole-sequence scan LSTM: the
+//!   cuDNN-analogue upper bound and the TF static/dynamic-unroll padding
+//!   baselines.
+//!
+//! Fidelity notes (also in DESIGN.md §2): the DyNet-like backward pass
+//! runs at cell granularity with the fused adjoint artifacts (real DyNet
+//! backprops through fine-grained ops), so every disadvantage we measure
+//! for it is a *lower bound*. Fold's execution also uses the fused cell —
+//! its measured overheads are preprocessing + redundant level copies only.
+
+pub mod dyndecl;
+pub mod fold;
+pub mod monolithic;

@@ -1,0 +1,196 @@
+//! Fixed-topology whole-sequence baselines (sequence models only):
+//!
+//! * **Monolithic scan** — the entire T-step LSTM LM training step is ONE
+//!   XLA executable (`scanlm_t*_h*_bs*`). Maximally fused and maximally
+//!   inflexible: the role cuDNN's fixed-step LSTM plays in Fig. 8(a).
+//! * **Static unrolling** (TF-like) — pad every sentence to the fixed T
+//!   and mask; wasted compute grows with length variance (§2.2).
+//! * **Dynamic unrolling** — pick the smallest compiled T bucket that fits
+//!   the longest sentence in the batch; still pads within the batch.
+
+use anyhow::{bail, Result};
+
+use crate::exec::StepResult;
+use crate::graph::InputGraph;
+use crate::models::Model;
+use crate::runtime::{Arg, Runtime};
+use crate::util::stats::{Phase, PhaseTimer};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnrollMode {
+    /// always the fixed T (static unrolling / the cuDNN-analogue case)
+    Static { t: usize },
+    /// smallest compiled T bucket >= longest sentence in the batch
+    Dynamic,
+}
+
+pub struct ScanLm<'rt> {
+    pub rt: &'rt Runtime,
+    pub mode: UnrollMode,
+    pub timers: PhaseTimer,
+    /// padded steps actually computed vs useful steps (waste metric)
+    pub steps_computed: u64,
+    pub steps_useful: u64,
+}
+
+impl<'rt> ScanLm<'rt> {
+    pub fn new(rt: &'rt Runtime, mode: UnrollMode) -> ScanLm<'rt> {
+        ScanLm { rt, mode, timers: PhaseTimer::default(), steps_computed: 0, steps_useful: 0 }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.timers = PhaseTimer::default();
+        self.steps_computed = 0;
+        self.steps_useful = 0;
+    }
+
+    fn t_buckets(&self, h: usize) -> Vec<usize> {
+        let mut ts: Vec<usize> = self
+            .rt
+            .manifest
+            .names()
+            .filter_map(|n| {
+                let meta = self.rt.manifest.get(n).ok()?;
+                (meta.kind == "scan_lm" && meta.h == h).then(|| meta.t.unwrap_or(0))
+            })
+            .collect();
+        ts.sort_unstable();
+        ts.dedup();
+        ts
+    }
+
+    fn bs_buckets(&self, h: usize, t: usize) -> Vec<usize> {
+        let mut bs: Vec<usize> = self
+            .rt
+            .manifest
+            .names()
+            .filter_map(|n| {
+                let meta = self.rt.manifest.get(n).ok()?;
+                (meta.kind == "scan_lm" && meta.h == h && meta.t == Some(t))
+                    .then_some(meta.bucket)
+            })
+            .collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+
+    /// One training step over a batch of chain graphs. The model must be
+    /// an LSTM LM (Cell::Lstm + LmPerVertex + embedding dim == h).
+    pub fn run_minibatch(
+        &mut self,
+        model: &mut Model,
+        graphs: &[&InputGraph],
+    ) -> Result<StepResult> {
+        let h = model.h;
+        let k = graphs.len();
+        // choose T
+        let max_len = graphs.iter().map(|g| g.n()).max().unwrap_or(1);
+        let t = match self.mode {
+            UnrollMode::Static { t } => {
+                if max_len > t {
+                    bail!("sentence of {max_len} steps exceeds static T={t}");
+                }
+                t
+            }
+            UnrollMode::Dynamic => {
+                let ts = self.t_buckets(h);
+                if ts.is_empty() {
+                    bail!("no scan_lm artifacts for h={h}");
+                }
+                *ts.iter()
+                    .find(|&&tt| tt >= max_len)
+                    .unwrap_or(ts.last().unwrap())
+            }
+        };
+        if max_len > t {
+            bail!("batch max len {max_len} exceeds available T bucket {t}");
+        }
+        // choose bs bucket
+        let bss = self.bs_buckets(h, t);
+        if bss.is_empty() {
+            bail!("no scan_lm artifacts for h={h} t={t}");
+        }
+        let bs = *bss.iter().find(|&&b| b >= k).unwrap_or(bss.last().unwrap());
+        if k > bs {
+            bail!("batch of {k} exceeds largest compiled bs {bs}");
+        }
+
+        // build tokens [bs, T+1] + mask [bs, T] (the padding waste)
+        let mut tokens = vec![0i32; bs * (t + 1)];
+        let mut mask = vec![0.0f32; bs * t];
+        self.timers.time(Phase::Memory, || {
+            for (r, g) in graphs.iter().enumerate() {
+                let len = g.n();
+                for (i, &tok) in g.tokens.iter().enumerate() {
+                    tokens[r * (t + 1) + i] = tok;
+                }
+                // the final target closes the sequence
+                for (i, &lab) in g.labels.iter().enumerate() {
+                    tokens[r * (t + 1) + i + 1] = lab;
+                }
+                for i in 0..len {
+                    mask[r * t + i] = 1.0;
+                }
+            }
+        });
+        self.steps_computed += (bs * t) as u64;
+        self.steps_useful += graphs.iter().map(|g| g.n() as u64).sum::<u64>();
+
+        let name = format!("scanlm_t{t}_h{h}_bs{bs}");
+        let exe = self.rt.load(&name)?;
+        let t0 = std::time::Instant::now();
+        // args: Wemb, W, U, b, Wout, bout, tokens, mask
+        let emb_buf = self
+            .rt
+            .upload_f32(&model.embedding.table, &[model.embedding.vocab, h])?;
+        let outs = model.params.with_buffers(self.rt, |pb| {
+            model.head.as_ref().unwrap().with_buffers(self.rt, |hb| {
+                let args = [
+                    Arg::Buf(&emb_buf),
+                    Arg::Buf(pb[0]),
+                    Arg::Buf(pb[1]),
+                    Arg::Buf(pb[2]),
+                    Arg::Buf(hb[0]),
+                    Arg::Buf(hb[1]),
+                    Arg::I32(&tokens),
+                    Arg::F32(&mask),
+                ];
+                self.rt.run(&exe, &args)
+            })
+        })?;
+        self.timers.add(Phase::Compute, t0.elapsed());
+
+        // outputs: loss, gWemb, gW, gU, gb, gWout, gbout
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let g_wemb = outs[1].to_vec::<f32>()?;
+        for (a, b) in model.embedding.grad.iter_mut().zip(&g_wemb) {
+            *a += *b;
+        }
+        for p in 0..3 {
+            model.params.acc_grad(p, &outs[2 + p].to_vec::<f32>()?);
+        }
+        let hp = model.head.as_mut().unwrap();
+        hp.acc_grad(0, &outs[5].to_vec::<f32>()?);
+        hp.acc_grad(1, &outs[6].to_vec::<f32>()?);
+
+        let n_labels: usize = graphs.iter().map(|g| g.n()).sum();
+        Ok(StepResult {
+            loss,
+            ncorrect: 0.0,
+            n_labels,
+            n_vertices: n_labels,
+            n_tasks: 1,
+            padded_rows: bs * t - n_labels,
+        })
+    }
+
+    /// Fraction of computed steps wasted on padding.
+    pub fn padding_waste(&self) -> f64 {
+        if self.steps_computed == 0 {
+            0.0
+        } else {
+            1.0 - self.steps_useful as f64 / self.steps_computed as f64
+        }
+    }
+}

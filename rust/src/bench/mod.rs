@@ -1,0 +1,290 @@
+//! Benchmark harness: runs the paper's systems over the paper's workloads
+//! and renders the tables/figures of §5 (see `experiments`).
+//!
+//! criterion is unavailable offline, so measurement (warmup + reps +
+//! summary statistics) is provided by `util::stats` and this module.
+
+pub mod experiments;
+
+use anyhow::Result;
+
+use crate::baselines::dyndecl::DynDecl;
+use crate::baselines::fold::Fold;
+use crate::baselines::monolithic::{ScanLm, UnrollMode};
+use crate::exec::{Engine, EngineOpts};
+use crate::graph::Dataset;
+use crate::models::Model;
+use crate::runtime::Runtime;
+use crate::scheduler::Policy;
+use crate::train::{ModelOpt, Optimizer};
+use crate::util::stats::PhaseTimer;
+
+/// The systems compared in Fig. 8/9 and Tables 1–2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum System {
+    /// Cavs with configurable engine switches
+    Cavs(EngineOpts),
+    /// Cavs with the serial (unbatched) policy — §5.1's ablation
+    CavsSerial,
+    /// DyNet-like dynamic declaration + agenda autobatching
+    DynDecl,
+    /// TensorFlow-Fold-like depth batching, with preprocessing threads
+    Fold { threads: usize },
+    /// monolithic fixed-T scan (cuDNN-analogue / TF static unrolling)
+    ScanStatic { t: usize },
+    /// TF-like dynamic unrolling (smallest compiled T >= batch max len)
+    ScanDynamic,
+}
+
+impl System {
+    pub fn label(&self) -> String {
+        match self {
+            System::Cavs(o) if o.policy == Policy::Serial => "Cavs-serial".into(),
+            System::Cavs(_) => "Cavs".into(),
+            System::CavsSerial => "Cavs-serial".into(),
+            System::DynDecl => "DyNet-like".into(),
+            System::Fold { threads } => format!("Fold-{threads}"),
+            System::ScanStatic { .. } => "Scan/CuDNN-like".into(),
+            System::ScanDynamic => "TF-unroll".into(),
+        }
+    }
+}
+
+/// Everything a bench row needs.
+#[derive(Debug, Clone, Default)]
+pub struct EpochMetrics {
+    pub seconds: f64,
+    pub timers: PhaseTimer,
+    pub mem_bytes: u64,
+    pub mem_ops: u64,
+    pub loss: f64,
+    pub launches: u64,
+}
+
+impl EpochMetrics {
+    /// "Computation" in the paper's breakdowns = kernel executions
+    /// (cells + heads); construction/scheduling/memory are separate.
+    pub fn compute_s(&self) -> f64 {
+        self.timers.compute_s + self.timers.head_s
+    }
+
+    pub fn construction_s(&self) -> f64 {
+        self.timers.construction_s
+    }
+
+    pub fn memory_s(&self) -> f64 {
+        self.timers.memory_s
+    }
+}
+
+/// Run one epoch (all minibatches once) of `system` on `data`.
+/// `training=false` measures inference (Table 2).
+pub fn run_epoch(
+    rt: &Runtime,
+    system: System,
+    model: &mut Model,
+    data: &Dataset,
+    bs: usize,
+    training: bool,
+    optimize: bool,
+) -> Result<EpochMetrics> {
+    let mut opt_state = ModelOpt::default();
+    let opt = Optimizer::sgd(0.01);
+    let t0 = std::time::Instant::now();
+    let mut m = EpochMetrics::default();
+
+    match system {
+        System::Cavs(mut opts) => {
+            opts.training = training;
+            let mut eng = Engine::new(rt, opts);
+            for mb in data.minibatches(bs) {
+                let r = eng.run_minibatch(model, &mb)?;
+                m.loss += r.loss as f64;
+                if training && optimize {
+                    opt_state.step(opt, model, 1.0);
+                } else if training {
+                    model.zero_grads();
+                }
+            }
+            m.timers = eng.timers.clone();
+            m.mem_bytes = eng.traffic.bytes();
+            m.mem_ops = eng.traffic.ops();
+        }
+        System::CavsSerial => {
+            let opts = EngineOpts {
+                policy: Policy::Serial,
+                lazy_batching: false,
+                training,
+                ..Default::default()
+            };
+            let mut eng = Engine::new(rt, opts);
+            for mb in data.minibatches(bs) {
+                let r = eng.run_minibatch(model, &mb)?;
+                m.loss += r.loss as f64;
+                if training && optimize {
+                    opt_state.step(opt, model, 1.0);
+                } else if training {
+                    model.zero_grads();
+                }
+            }
+            m.timers = eng.timers.clone();
+            m.mem_bytes = eng.traffic.bytes();
+            m.mem_ops = eng.traffic.ops();
+        }
+        System::DynDecl => {
+            let mut sys = DynDecl::new(rt);
+            for mb in data.minibatches(bs) {
+                let r = sys.run_minibatch(model, &mb, training)?;
+                m.loss += r.loss as f64;
+                if training && optimize {
+                    opt_state.step(opt, model, 1.0);
+                } else if training {
+                    model.zero_grads();
+                }
+            }
+            m.timers = sys.timers.clone();
+            m.mem_bytes = sys.traffic.bytes();
+            m.mem_ops = sys.traffic.ops();
+            m.launches = sys.launches;
+        }
+        System::Fold { threads } => {
+            let mut sys = Fold::new(rt, threads);
+            for mb in data.minibatches(bs) {
+                let r = sys.run_minibatch(model, &mb, training)?;
+                m.loss += r.loss as f64;
+                if training && optimize {
+                    opt_state.step(opt, model, 1.0);
+                } else if training {
+                    model.zero_grads();
+                }
+            }
+            m.timers = sys.timers.clone();
+            m.mem_bytes = sys.traffic.bytes();
+            m.mem_ops = sys.traffic.ops();
+            m.launches = sys.launches;
+        }
+        System::ScanStatic { t } => {
+            let mut sys = ScanLm::new(rt, UnrollMode::Static { t });
+            for mb in data.minibatches(bs) {
+                let r = sys.run_minibatch(model, &mb)?;
+                m.loss += r.loss as f64;
+                if optimize {
+                    opt_state.step(opt, model, 1.0);
+                } else {
+                    model.zero_grads();
+                }
+            }
+            m.timers = sys.timers.clone();
+        }
+        System::ScanDynamic => {
+            let mut sys = ScanLm::new(rt, UnrollMode::Dynamic);
+            for mb in data.minibatches(bs) {
+                let r = sys.run_minibatch(model, &mb)?;
+                m.loss += r.loss as f64;
+                if optimize {
+                    opt_state.step(opt, model, 1.0);
+                } else {
+                    model.zero_grads();
+                }
+            }
+            m.timers = sys.timers.clone();
+        }
+    }
+    m.seconds = t0.elapsed().as_secs_f64();
+    Ok(m)
+}
+
+/// Simple fixed-width table renderer for the experiment outputs.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:>w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        out
+    }
+
+    /// CSV form for results/.
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+pub fn write_results(name: &str, table: &Table) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{name}.txt"), table.render())?;
+    std::fs::write(format!("results/{name}.csv"), table.csv())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long-header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3.5x".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("long-header"));
+        assert!(s.lines().count() >= 4);
+        let csv = t.csv();
+        assert_eq!(csv.lines().next().unwrap(), "a,long-header,c");
+    }
+
+    #[test]
+    fn system_labels() {
+        assert_eq!(System::DynDecl.label(), "DyNet-like");
+        assert_eq!(System::Fold { threads: 32 }.label(), "Fold-32");
+        assert_eq!(System::Cavs(EngineOpts::default()).label(), "Cavs");
+    }
+}

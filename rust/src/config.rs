@@ -1,0 +1,179 @@
+//! Configuration: experiment/model settings assembled from defaults, an
+//! optional JSON config file, and `--set key=value` CLI overrides.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::models::{Cell, HeadKind};
+use crate::scheduler::Policy;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cell: Cell,
+    pub h: usize,
+    pub vocab: usize,
+    pub head: HeadKind,
+    pub n_classes: usize,
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub seq_len: usize,
+    pub n_samples: usize,
+    pub tree_leaves: usize,
+    pub lr: f32,
+    pub max_grad_norm: f32,
+    pub seed: u64,
+    pub policy: Policy,
+    pub lazy_batching: bool,
+    pub fusion: bool,
+    pub streaming: bool,
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            cell: Cell::TreeLstm,
+            h: 256,
+            vocab: 1000,
+            head: HeadKind::ClassifierAtRoot,
+            n_classes: 5,
+            batch_size: 64,
+            epochs: 3,
+            seq_len: 64,
+            n_samples: 512,
+            tree_leaves: 256,
+            lr: 0.05,
+            max_grad_norm: 5.0,
+            seed: 42,
+            policy: Policy::Batched,
+            lazy_batching: true,
+            fusion: true,
+            streaming: false,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let mut c = Config::default();
+        if let Some(obj) = j.as_obj() {
+            for (k, v) in obj {
+                c.apply(k, &json_to_string(v))?;
+            }
+        }
+        Ok(c)
+    }
+
+    /// Apply one `key=value` override.
+    pub fn apply(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "cell" => self.cell = Cell::from_name(val)?,
+            "h" => self.h = val.parse()?,
+            "vocab" => self.vocab = val.parse()?,
+            "head" => {
+                self.head = match val {
+                    "lm" => HeadKind::LmPerVertex,
+                    "classifier" => HeadKind::ClassifierAtRoot,
+                    "sum" => HeadKind::SumRootState,
+                    _ => bail!("head must be lm|classifier|sum"),
+                }
+            }
+            "n_classes" => self.n_classes = val.parse()?,
+            "batch_size" | "bs" => self.batch_size = val.parse()?,
+            "epochs" => self.epochs = val.parse()?,
+            "seq_len" => self.seq_len = val.parse()?,
+            "n_samples" => self.n_samples = val.parse()?,
+            "tree_leaves" => self.tree_leaves = val.parse()?,
+            "lr" => self.lr = val.parse()?,
+            "max_grad_norm" => self.max_grad_norm = val.parse()?,
+            "seed" => self.seed = val.parse()?,
+            "policy" => {
+                self.policy = match val {
+                    "batched" => Policy::Batched,
+                    "serial" => Policy::Serial,
+                    _ => bail!("policy must be batched|serial"),
+                }
+            }
+            "lazy_batching" => self.lazy_batching = parse_bool(val)?,
+            "fusion" => self.fusion = parse_bool(val)?,
+            "streaming" => self.streaming = parse_bool(val)?,
+            "artifacts_dir" => self.artifacts_dir = val.to_string(),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    pub fn engine_opts(&self, training: bool) -> crate::exec::EngineOpts {
+        crate::exec::EngineOpts {
+            policy: self.policy,
+            lazy_batching: self.lazy_batching,
+            fusion: self.fusion,
+            streaming: self.streaming,
+            training,
+        }
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "on" | "yes" => Ok(true),
+        "false" | "0" | "off" | "no" => Ok(false),
+        _ => bail!("expected boolean, got '{v}'"),
+    }
+}
+
+fn json_to_string(j: &Json) -> String {
+    match j {
+        Json::Str(s) => s.clone(),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }
+        }
+        Json::Bool(b) => b.to_string(),
+        _ => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = Config::default();
+        c.apply("cell", "lstm").unwrap();
+        c.apply("h", "512").unwrap();
+        c.apply("bs", "16").unwrap();
+        c.apply("fusion", "off").unwrap();
+        c.apply("policy", "serial").unwrap();
+        assert_eq!(c.cell, Cell::Lstm);
+        assert_eq!(c.h, 512);
+        assert_eq!(c.batch_size, 16);
+        assert!(!c.fusion);
+        assert_eq!(c.policy, Policy::Serial);
+        assert!(c.apply("bogus", "1").is_err());
+        assert!(c.apply("fusion", "maybe").is_err());
+    }
+
+    #[test]
+    fn json_config_file() {
+        let p = std::env::temp_dir().join(format!("cavs-cfg-{}.json", std::process::id()));
+        std::fs::write(&p, r#"{"cell": "treefc", "h": 64, "lr": 0.01, "lazy_batching": false}"#)
+            .unwrap();
+        let c = Config::load(&p).unwrap();
+        assert_eq!(c.cell, Cell::TreeFc);
+        assert_eq!(c.h, 64);
+        assert!((c.lr - 0.01).abs() < 1e-9);
+        assert!(!c.lazy_batching);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,731 @@
+//! The Cavs execution engine: forward/backward over batching tasks with
+//! dynamic-tensor memory management (paper Alg. 1 + Alg. 2).
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{GraphBatch, InputGraph};
+use crate::memory::{copy_col_slice, MemTraffic, StateBuffer};
+use crate::models::{Cell, HeadKind, Model};
+use crate::runtime::{literal_into, Arg, Runtime};
+use crate::scheduler::{self, Policy, Task};
+use crate::tensor::DynamicTensor;
+use crate::util::stats::{Phase, PhaseTimer};
+use crate::util::trace::Trace;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineOpts {
+    pub policy: Policy,
+    /// defer head + parameter-gradient math past all batching tasks
+    pub lazy_batching: bool,
+    /// whole-cell fused artifact (true) vs op-by-op interpretation (false)
+    pub fusion: bool,
+    /// overlap pull-side staging with task execution on a second thread
+    pub streaming: bool,
+    pub training: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            policy: Policy::Batched,
+            lazy_batching: true,
+            fusion: true,
+            streaming: false,
+            training: true,
+        }
+    }
+}
+
+/// Result of one minibatch step.
+#[derive(Debug, Clone, Default)]
+pub struct StepResult {
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub n_labels: usize,
+    pub n_vertices: usize,
+    pub n_tasks: usize,
+    pub padded_rows: usize,
+}
+
+pub struct Engine<'rt> {
+    pub rt: &'rt Runtime,
+    pub opts: EngineOpts,
+    pub timers: PhaseTimer,
+    pub traffic: MemTraffic,
+    /// Chrome-trace recorder (enable with CAVS_TRACE=/path/out.json; see
+    /// util::trace) — the §Perf profiling instrument.
+    pub trace: Trace,
+}
+
+/// Per-minibatch working state (dynamic tensors + buffers).
+struct Workspace {
+    state_buf: StateBuffer,
+    grad_buf: Option<StateBuffer>,
+    dt_x: DynamicTensor,
+    dt_s: Vec<DynamicTensor>,
+    dt_sout: DynamicTensor,
+    dt_gates: Option<DynamicTensor>,
+    /// scratch blocks reused across tasks
+    scratch_h: Vec<f32>,
+    scratch_g: Vec<f32>,
+    scratch_labels: Vec<i32>,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, opts: EngineOpts) -> Engine<'rt> {
+        Engine {
+            rt,
+            opts,
+            timers: PhaseTimer::default(),
+            traffic: MemTraffic::default(),
+            trace: Trace::from_env(),
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.timers = PhaseTimer::default();
+        self.traffic.reset();
+    }
+
+    /// Run one minibatch: forward (+ head), and if `training`, backward
+    /// (+ lazy parameter grads). Gradients accumulate into the model's
+    /// grad stores; the caller owns the optimizer step.
+    pub fn run_minibatch(
+        &mut self,
+        model: &mut Model,
+        graphs: &[&InputGraph],
+    ) -> Result<StepResult> {
+        // Cavs "construction" = merging per-sample graphs read from I/O.
+        let batch = self.timers.time(Phase::Construction, || {
+            GraphBatch::new(graphs, model.cell.arity())
+        });
+        let buckets = self
+            .rt
+            .manifest
+            .buckets(model.cell.name(), "cell_fwd", model.h)
+            .to_vec();
+        if buckets.is_empty() {
+            bail!(
+                "no cell_fwd artifacts for {} h={} — rebuild artifacts",
+                model.cell.name(),
+                model.h
+            );
+        }
+        let tasks = self.timers.time(Phase::Scheduling, || {
+            scheduler::schedule(&batch, self.opts.policy, &buckets)
+        });
+        let sstats = scheduler::stats(&tasks);
+
+        let cell = model.cell;
+        let h = model.h;
+        let state_cols = cell.state_cols(h);
+        let mut ws = Workspace {
+            state_buf: StateBuffer::new(batch.n_vertices, state_cols),
+            grad_buf: self
+                .opts
+                .training
+                .then(|| StateBuffer::new(batch.n_vertices, state_cols)),
+            dt_x: DynamicTensor::new(&[h]),
+            dt_s: (0..cell.arity())
+                .map(|_| DynamicTensor::new(&[state_cols]))
+                .collect(),
+            dt_sout: DynamicTensor::new(&[state_cols]),
+            // lazy parameter grads need bwd_data + param_grad artifacts;
+            // fall back to the eager adjoint when aot didn't emit them
+            // for this hidden size (e.g. h=64 outside the Fig. 10 set)
+            dt_gates: (self.opts.training
+                && self.opts.lazy_batching
+                && cell.has_lazy_bwd()
+                && !self
+                    .rt
+                    .manifest
+                    .buckets(cell.name(), "cell_bwd_data", h)
+                    .is_empty()
+                && !self
+                    .rt
+                    .manifest
+                    .buckets(cell.name(), "param_grad", h)
+                    .is_empty())
+            .then(|| DynamicTensor::new(&[cell.gates_cols(h)])),
+            scratch_h: Vec::new(),
+            scratch_g: Vec::new(),
+            scratch_labels: Vec::new(),
+        };
+
+        let mut result = StepResult {
+            n_vertices: batch.n_vertices,
+            n_tasks: sstats.n_tasks,
+            padded_rows: sstats.padded_rows,
+            ..Default::default()
+        };
+
+        let span = self.trace.begin();
+        self.forward(model, &batch, &tasks, &mut ws)?;
+        self.run_heads(model, &batch, &tasks, &mut ws, &mut result)?;
+
+        if self.opts.training {
+            self.backward(model, &batch, &tasks, &mut ws)?;
+            if ws.dt_gates.is_some() {
+                self.lazy_param_grads(model, &mut ws)?;
+            }
+        }
+        self.trace.end(
+            span,
+            "minibatch",
+            format!("minibatch k={} v={}", batch.n_graphs, batch.n_vertices),
+        );
+        if self.trace.enabled() {
+            self.trace.flush().ok();
+        }
+        Ok(result)
+    }
+
+    // -----------------------------------------------------------------
+    // forward
+    // -----------------------------------------------------------------
+
+    fn forward(
+        &mut self,
+        model: &Model,
+        batch: &GraphBatch,
+        tasks: &[Task],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        // Streaming (paper §3.5): the pull-side staging (embedding rows
+        // for every task) is eager — it does not depend on gather — so a
+        // second thread can run it ahead of task execution.
+        let staged_rx = if self.opts.streaming {
+            Some(self.spawn_pull_stager(model, batch, tasks))
+        } else {
+            None
+        };
+
+        for (t, task) in tasks.iter().enumerate() {
+            let b = task.bucket;
+            let m = task.m();
+
+            // -- pull: stage x (embedding rows or zeros) --------------
+            self.timers.time(Phase::Memory, || {
+                ws.dt_x.set_bs(b);
+                ws.dt_x.zero_view();
+                if let Some(rx) = &staged_rx {
+                    let block = rx.recv().expect("pull stager died");
+                    debug_assert_eq!(block.len(), m * model.h);
+                    ws.dt_x.view_mut()[..m * model.h].copy_from_slice(&block);
+                    self.traffic.add(block.len() * 4);
+                } else {
+                    for (i, &v) in task.verts.iter().enumerate() {
+                        if let Some(row) = model.embedding.row(batch.tokens[v as usize])
+                        {
+                            ws.dt_x.row_mut(i).copy_from_slice(row);
+                        }
+                    }
+                    self.traffic.add(m * model.h * 4);
+                }
+            });
+
+            // -- gather: child states ---------------------------------
+            self.timers.time(Phase::Memory, || {
+                for slot in 0..model.cell.arity() {
+                    ws.dt_s[slot].set_bs(b);
+                    ws.dt_s[slot].zero_view();
+                    let ids: Vec<Option<u32>> = task
+                        .verts
+                        .iter()
+                        .map(|&v| batch.child(v, slot))
+                        .collect();
+                    let cols = ws.dt_s[slot].cols;
+                    ws.state_buf.gather(
+                        &ids,
+                        &mut ws.dt_s[slot].view_mut()[..m * cols],
+                        &self.traffic,
+                    );
+                }
+            });
+
+            // -- evaluate F -------------------------------------------
+            ws.dt_sout.set_bs(b);
+            if self.opts.fusion || model.cell.program(model.h).is_none() {
+                self.exec_fused_fwd(model, b, ws)?;
+            } else {
+                let program = model.cell.program(model.h).unwrap();
+                let x_view = ws.dt_x.view().to_vec();
+                let s_views: Vec<Vec<f32>> =
+                    ws.dt_s.iter().map(|d| d.view().to_vec()).collect();
+                let out = unfused_fwd_dispatch(
+                    self, model, &program, b, &x_view, &s_views,
+                )?;
+                ws.dt_sout.view_mut().copy_from_slice(&out);
+            }
+
+            // -- scatter: publish states for parents ------------------
+            self.timers.time(Phase::Memory, || {
+                let cols = ws.dt_sout.cols;
+                ws.state_buf.scatter(
+                    &task.verts,
+                    &ws.dt_sout.view()[..m * cols],
+                    &self.traffic,
+                );
+            });
+
+            // advance offsets (Alg. 2 L21); dt_gates reserves rows so the
+            // backward pass can fill them at matching offsets.
+            ws.dt_x.advance();
+            for d in &mut ws.dt_s {
+                d.advance();
+            }
+            ws.dt_sout.advance();
+            if let Some(g) = &mut ws.dt_gates {
+                g.set_bs(b);
+                g.zero_view();
+                g.advance();
+            }
+            let _ = t;
+        }
+        Ok(())
+    }
+
+    fn exec_fused_fwd(&mut self, model: &Model, b: usize, ws: &mut Workspace) -> Result<()> {
+        let name = crate::runtime::Manifest::cell_name(
+            model.cell.name(),
+            "cell_fwd",
+            model.h,
+            b,
+        );
+        let exe = self.rt.load(&name)?;
+        let span = self.trace.begin();
+        let t0 = std::time::Instant::now();
+        model.params.with_buffers(self.rt, |pb| {
+            let mut args: Vec<Arg<'_>> = pb.iter().map(|p| Arg::Buf(p)).collect();
+            args.push(Arg::F32(ws.dt_x.view()));
+            for d in &ws.dt_s {
+                args.push(Arg::F32(d.view()));
+            }
+            let outs = self.rt.run(&exe, &args)?;
+            literal_into(&outs[0], ws.dt_sout.view_mut())?;
+            Ok(())
+        })?;
+        self.timers.add(Phase::Compute, t0.elapsed());
+        self.trace.end(span, "compute", name);
+        Ok(())
+    }
+
+    /// Second-thread pull staging. The task list (and therefore every
+    /// block's composition) is known before execution starts — pull is an
+    /// *eager* operator in the Prop. 2 sense — so the stager runs freely
+    /// ahead; blocks arrive in task order over the channel.
+    fn spawn_pull_stager(
+        &self,
+        model: &Model,
+        batch: &GraphBatch,
+        tasks: &[Task],
+    ) -> std::sync::mpsc::Receiver<Vec<f32>> {
+        let (tx, rx) = std::sync::mpsc::sync_channel(4);
+        let dim = model.h;
+        let table = model.embedding.table.clone();
+        let vocab = model.embedding.vocab;
+        let toks: Vec<Vec<i32>> = tasks
+            .iter()
+            .map(|t| {
+                t.verts.iter().map(|&v| batch.tokens[v as usize]).collect()
+            })
+            .collect();
+        std::thread::spawn(move || {
+            for task_toks in toks {
+                let mut block = vec![0.0f32; task_toks.len() * dim];
+                for (i, &tok) in task_toks.iter().enumerate() {
+                    if tok >= 0 && (tok as usize) < vocab {
+                        let t = tok as usize;
+                        block[i * dim..(i + 1) * dim]
+                            .copy_from_slice(&table[t * dim..(t + 1) * dim]);
+                    }
+                }
+                if tx.send(block).is_err() {
+                    return;
+                }
+            }
+        });
+        rx
+    }
+
+    // -----------------------------------------------------------------
+    // heads (push consumers)
+    // -----------------------------------------------------------------
+
+    fn run_heads(
+        &mut self,
+        model: &mut Model,
+        batch: &GraphBatch,
+        tasks: &[Task],
+        ws: &mut Workspace,
+        result: &mut StepResult,
+    ) -> Result<()> {
+        match model.head_kind {
+            HeadKind::SumRootState => {
+                // synthetic Tree-FC objective: loss = Σ root h-part
+                let (off, len) = model.cell.h_part(model.h);
+                let mut loss = 0.0;
+                for &r in &batch.roots {
+                    let row = ws.state_buf.row(r as usize);
+                    loss += row[off..off + len].iter().sum::<f32>();
+                }
+                if let Some(gb) = &mut ws.grad_buf {
+                    let ones = vec![1.0f32; len];
+                    for &r in &batch.roots {
+                        gb.add_into_cols(r as usize, off, &ones, &self.traffic);
+                    }
+                }
+                result.loss = loss;
+                Ok(())
+            }
+            HeadKind::ClassifierAtRoot => {
+                let verts = batch.roots.clone();
+                let labels: Vec<i32> = batch.root_labels.clone();
+                self.head_pass(model, ws, &verts, &labels, result)
+            }
+            HeadKind::LmPerVertex => {
+                if self.opts.lazy_batching {
+                    // one whole-minibatch head pass (lazy batching of the
+                    // push-side operators, §3.5)
+                    let mut verts = Vec::new();
+                    let mut labels = Vec::new();
+                    for t in tasks {
+                        for &v in &t.verts {
+                            if batch.labels[v as usize] >= 0 {
+                                verts.push(v);
+                                labels.push(batch.labels[v as usize]);
+                            }
+                        }
+                    }
+                    self.head_pass(model, ws, &verts, &labels, result)
+                } else {
+                    // per-task head launches (the non-lazy ablation)
+                    for t in tasks {
+                        let mut verts = Vec::new();
+                        let mut labels = Vec::new();
+                        for &v in &t.verts {
+                            if batch.labels[v as usize] >= 0 {
+                                verts.push(v);
+                                labels.push(batch.labels[v as usize]);
+                            }
+                        }
+                        if !verts.is_empty() {
+                            self.head_pass(model, ws, &verts, &labels, result)?;
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Run the head over `verts` (chunked to the head artifact's bucket
+    /// range), accumulating loss/ncorrect/grads; seeds grad_buf rows.
+    fn head_pass(
+        &mut self,
+        model: &mut Model,
+        ws: &mut Workspace,
+        verts: &[u32],
+        labels: &[i32],
+        result: &mut StepResult,
+    ) -> Result<()> {
+        if model.head.is_none() {
+            bail!("model has no head parameters");
+        }
+        let h = model.h;
+        let tag = model.head_tag;
+        let kind = if self.opts.training { "head_grad" } else { "head_eval" };
+        let name_kind = if self.opts.training { "grad" } else { "eval" };
+        let hbuckets = self.rt.manifest.buckets(tag, kind, h).to_vec();
+        if hbuckets.is_empty() {
+            bail!("no {kind} artifacts for {tag} h={h}");
+        }
+        let maxb = *hbuckets.last().unwrap();
+        let (hoff, hlen) = model.cell.h_part(h);
+        debug_assert_eq!(hlen, h);
+
+        let mut start = 0;
+        while start < verts.len() {
+            let m = (verts.len() - start).min(maxb);
+            let b = *hbuckets.iter().find(|&&x| x >= m).unwrap_or(&maxb);
+            let chunk = &verts[start..start + m];
+            // pack H rows + labels (pad with -1 => masked out)
+            self.timers.time(Phase::Memory, || {
+                ws.scratch_h.resize(b * h, 0.0);
+                ws.scratch_h.fill(0.0);
+                ws.state_buf.gather_cols(chunk, hoff, hlen, &mut ws.scratch_h, &self.traffic);
+                ws.scratch_labels.clear();
+                ws.scratch_labels.extend_from_slice(&labels[start..start + m]);
+                ws.scratch_labels.resize(b, -1);
+            });
+
+            let name = format!("{tag}_{name_kind}_h{h}_b{b}");
+            let exe = self.rt.load(&name)?;
+            let t0 = std::time::Instant::now();
+            let outs = model.head.as_ref().unwrap().with_buffers(self.rt, |pb| {
+                let args = [
+                    Arg::Buf(pb[0]),
+                    Arg::Buf(pb[1]),
+                    Arg::F32(&ws.scratch_h[..b * h]),
+                    Arg::I32(&ws.scratch_labels),
+                ];
+                self.rt.run(&exe, &args)
+            })?;
+            self.timers.add(Phase::Head, t0.elapsed());
+
+            result.loss += outs[0].to_vec::<f32>()?[0];
+            result.ncorrect += outs[1].to_vec::<f32>()?[0];
+            result.n_labels += m;
+
+            if self.opts.training {
+                // gH rows seed the backward state gradients
+                let gh = outs[2].to_vec::<f32>()?;
+                self.timers.time(Phase::Memory, || {
+                    if let Some(gb) = &mut ws.grad_buf {
+                        for (i, &v) in chunk.iter().enumerate() {
+                            gb.add_into_cols(
+                                v as usize,
+                                hoff,
+                                &gh[i * h..(i + 1) * h],
+                                &self.traffic,
+                            );
+                        }
+                    }
+                });
+                // head parameter grads accumulate host-side
+                let hp = model.head.as_mut().unwrap();
+                let gw = outs[3].to_vec::<f32>()?;
+                let gb_ = outs[4].to_vec::<f32>()?;
+                hp.acc_grad(0, &gw);
+                hp.acc_grad(1, &gb_);
+            }
+            start += m;
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // backward
+    // -----------------------------------------------------------------
+
+    fn backward(
+        &mut self,
+        model: &mut Model,
+        batch: &GraphBatch,
+        tasks: &[Task],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let cell = model.cell;
+        let h = model.h;
+        let state_cols = cell.state_cols(h);
+        let lazy = ws.dt_gates.is_some();
+
+        for task in tasks.iter().rev() {
+            let b = task.bucket;
+            let m = task.m();
+            // rewind the forward views of this task (Alg. 2 backward)
+            ws.dt_x.rewind(b)?;
+            for d in &mut ws.dt_s {
+                d.rewind(b)?;
+            }
+            ws.dt_sout.rewind(b)?;
+            if let Some(g) = &mut ws.dt_gates {
+                g.rewind(b)?;
+            }
+
+            // gather g_out rows (head seeds + parent contributions)
+            self.timers.time(Phase::Memory, || {
+                ws.scratch_g.resize(b * state_cols, 0.0);
+                ws.scratch_g.fill(0.0);
+                let ids: Vec<Option<u32>> =
+                    task.verts.iter().map(|&v| Some(v)).collect();
+                ws.grad_buf.as_ref().unwrap().gather(
+                    &ids,
+                    &mut ws.scratch_g[..m * state_cols],
+                    &self.traffic,
+                );
+            });
+
+            let kind = if lazy { "cell_bwd_data" } else { "cell_bwd" };
+            let name =
+                crate::runtime::Manifest::cell_name(cell.name(), kind, h, b);
+            let exe = self
+                .rt
+                .load(&name)
+                .with_context(|| format!("backward artifact {name}"))?;
+            let span = self.trace.begin();
+            let t0 = std::time::Instant::now();
+            let outs = model.params.with_buffers(self.rt, |pb| {
+                let mut args: Vec<Arg<'_>> =
+                    pb.iter().map(|p| Arg::Buf(p)).collect();
+                args.push(Arg::F32(ws.dt_x.view()));
+                for d in &ws.dt_s {
+                    args.push(Arg::F32(d.view()));
+                }
+                args.push(Arg::F32(&ws.scratch_g[..b * state_cols]));
+                self.rt.run(&exe, &args)
+            })?;
+            self.timers.add(Phase::Compute, t0.elapsed());
+            self.trace.end(span, "compute", name);
+
+            // outputs: [param grads...,] gx, gs*arity [, g_gates]
+            let n_params = model.params.len();
+            let mut idx = 0;
+            if !lazy {
+                let t1 = std::time::Instant::now();
+                for p in 0..n_params {
+                    let g = outs[idx + p].to_vec::<f32>()?;
+                    model.params.acc_grad(p, &g);
+                }
+                idx += n_params;
+                self.timers.add(Phase::Compute, t1.elapsed());
+            }
+            // gx -> embedding grads (pull adjoint = push to external)
+            let gx = outs[idx].to_vec::<f32>()?;
+            idx += 1;
+            self.timers.time(Phase::Memory, || {
+                for (i, &v) in task.verts.iter().enumerate() {
+                    model
+                        .embedding
+                        .acc_grad(batch.tokens[v as usize], &gx[i * h..(i + 1) * h]);
+                }
+                self.traffic.add(m * h * 4);
+            });
+            // gs slots -> scatter-add to children rows (scatter adjoint)
+            for slot in 0..cell.arity() {
+                let gs = outs[idx].to_vec::<f32>()?;
+                idx += 1;
+                self.timers.time(Phase::Memory, || {
+                    let ids: Vec<Option<u32>> = task
+                        .verts
+                        .iter()
+                        .map(|&v| batch.child(v, slot))
+                        .collect();
+                    ws.grad_buf.as_mut().unwrap().scatter_add(
+                        &ids,
+                        &gs[..m * state_cols],
+                        &self.traffic,
+                    );
+                });
+            }
+            // g_gates -> reserved dynamic-tensor rows (for lazy pgrad)
+            if lazy {
+                let gg = outs[idx].to_vec::<f32>()?;
+                let dtg = ws.dt_gates.as_mut().unwrap();
+                dtg.view_mut().copy_from_slice(&gg);
+            }
+        }
+        Ok(())
+    }
+
+    /// Lazy parameter gradients: a few whole-minibatch GEMMs over every
+    /// vertex's saved inputs and gate gradients (paper §3.5: "the math
+    /// operators for computing gradients of the model parameters" are
+    /// lazy ops).
+    fn lazy_param_grads(&mut self, model: &mut Model, ws: &mut Workspace) -> Result<()> {
+        let cell = model.cell;
+        let h = model.h;
+        let pg_buckets = self
+            .rt
+            .manifest
+            .buckets(cell.name(), "param_grad", h)
+            .to_vec();
+        if pg_buckets.is_empty() {
+            bail!("no param_grad artifact for {} h={h}", cell.name());
+        }
+        let max_n = *pg_buckets.last().unwrap();
+        let total = ws.dt_x.high_water_rows();
+        let gates_cols = cell.gates_cols(h);
+        let state_cols = cell.state_cols(h);
+
+        // scratch packs sized for the largest chunk we will use
+        let cap = max_n.min(total.next_power_of_two().max(pg_buckets[0]));
+        let mut xs = vec![0.0f32; cap * h];
+        let mut h1 = vec![0.0f32; cap * h];
+        let mut h2 = vec![0.0f32; cap * h];
+        let mut gg = vec![0.0f32; cap * gates_cols];
+        let (hoff, _hlen) = cell.h_part(h);
+
+        let mut start = 0;
+        while start < total {
+            let remaining = total - start;
+            // smallest compiled chunk that covers the remaining rows —
+            // large fixed chunks dominated small-batch training (§Perf)
+            let n = *pg_buckets
+                .iter()
+                .find(|&&b| b >= remaining)
+                .unwrap_or(&max_n);
+            let name = format!("{}_pgrad_h{}_n{}", cell.name(), h, n);
+            let exe = self.rt.load(&name)?;
+            let rows = remaining.min(n);
+            xs.resize(n * h, 0.0);
+            h1.resize(n * h, 0.0);
+            h2.resize(n * h, 0.0);
+            gg.resize(n * gates_cols, 0.0);
+            self.timers.time(Phase::Memory, || {
+                xs.fill(0.0);
+                h1.fill(0.0);
+                h2.fill(0.0);
+                gg.fill(0.0);
+                xs[..rows * h].copy_from_slice(ws.dt_x.rows_abs(start, rows));
+                gg[..rows * gates_cols]
+                    .copy_from_slice(ws.dt_gates.as_ref().unwrap().rows_abs(start, rows));
+                // h-parts of child states
+                copy_col_slice(
+                    ws.dt_s[0].rows_abs(start, rows),
+                    state_cols,
+                    hoff,
+                    rows,
+                    h,
+                    &mut h1,
+                    &self.traffic,
+                );
+                if cell.arity() > 1 {
+                    copy_col_slice(
+                        ws.dt_s[1].rows_abs(start, rows),
+                        state_cols,
+                        hoff,
+                        rows,
+                        h,
+                        &mut h2,
+                        &self.traffic,
+                    );
+                }
+                self.traffic.add(rows * (h + gates_cols) * 4);
+            });
+
+            let t0 = std::time::Instant::now();
+            let outs = match cell {
+                Cell::Lstm => self.rt.run(
+                    &exe,
+                    &[Arg::F32(&xs), Arg::F32(&h1), Arg::F32(&gg)],
+                )?,
+                Cell::TreeLstm | Cell::TreeFc => self.rt.run(
+                    &exe,
+                    &[Arg::F32(&xs), Arg::F32(&h1), Arg::F32(&h2), Arg::F32(&gg)],
+                )?,
+                Cell::Gru => bail!("gru has no lazy param grads"),
+            };
+            for (p, lit) in outs.iter().enumerate() {
+                let g = lit.to_vec::<f32>()?;
+                model.params.acc_grad(p, &g);
+            }
+            self.timers.add(Phase::Compute, t0.elapsed());
+            start += rows;
+        }
+        Ok(())
+    }
+}
+
+/// Bridge to the unfused interpreter (exec::unfused) — kept behind a free
+/// function so `Engine::forward` can hold `&mut self` timers cleanly.
+fn unfused_fwd_dispatch(
+    eng: &mut Engine<'_>,
+    model: &Model,
+    program: &crate::vertex::Program,
+    b: usize,
+    x: &[f32],
+    s: &[Vec<f32>],
+) -> Result<Vec<f32>> {
+    super::unfused::run_forward(eng, model, program, b, x, s)
+}

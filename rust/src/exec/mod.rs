@@ -1,0 +1,16 @@
+//! The graph execution engine (paper §3.5): evaluates the vertex function
+//! F (and adjoint ∂F) over the scheduler's batching tasks, with the three
+//! proposed optimizations as independent switches:
+//!
+//! * **lazy batching** — push-side work (heads) and parameter-gradient
+//!   math are deferred past all batching tasks and executed in a few
+//!   whole-minibatch launches;
+//! * **kernel fusion** — the whole-cell fused (Pallas) artifact replaces
+//!   the op-by-op interpretation of F;
+//! * **streaming** — the eager (pull-side) staging of F runs on a second
+//!   thread overlapped with task execution.
+
+pub mod engine;
+pub mod unfused;
+
+pub use engine::{Engine, EngineOpts, StepResult};

@@ -1,0 +1,130 @@
+//! Op-by-op interpretation of the vertex function F — the "no kernel
+//! fusion" configuration of the Fig. 10 ablation.
+//!
+//! Every arithmetic node of the op graph becomes its own PJRT execution
+//! (one "kernel launch" per operator, like the paper's unfused GPU
+//! baseline); Slice/Concat column ops are host memcpys, exactly the
+//! memory movements a fused kernel avoids.
+
+use anyhow::{bail, Result};
+
+use crate::memory::{copy_col_slice, write_col_slice};
+use crate::models::Model;
+use crate::runtime::Arg;
+use crate::util::stats::Phase;
+use crate::vertex::{OpKind, Program};
+
+use super::engine::Engine;
+
+/// Execute `program` forward over one padded task block.
+/// `x`: [b, h] pull block; `s[slot]`: [b, state_cols] gathered blocks.
+/// Returns the scattered state block [b, state_cols].
+pub fn run_forward(
+    eng: &mut Engine<'_>,
+    model: &Model,
+    program: &Program,
+    b: usize,
+    x: &[f32],
+    s: &[Vec<f32>],
+) -> Result<Vec<f32>> {
+    let mut bufs: Vec<Option<Vec<f32>>> = vec![None; program.nodes.len()];
+    let mut scattered: Option<usize> = None;
+
+    for (i, node) in program.nodes.iter().enumerate() {
+        let out = match &node.kind {
+            OpKind::Pull => Some(x.to_vec()),
+            OpKind::Gather { slot } => {
+                if *slot >= s.len() {
+                    bail!("program gathers slot {slot} but batch has {}", s.len());
+                }
+                Some(s[*slot].clone())
+            }
+            OpKind::SliceCols { start, len } => {
+                let src_id = node.ins[0];
+                let src_cols = program.nodes[src_id].cols;
+                let src = bufs[src_id].as_ref().unwrap();
+                let mut dst = vec![0.0f32; b * len];
+                eng.timers.time(Phase::Memory, || {
+                    copy_col_slice(src, src_cols, *start, b, *len, &mut dst, &eng.traffic);
+                });
+                Some(dst)
+            }
+            OpKind::ConcatCols => {
+                let mut dst = vec![0.0f32; b * node.cols];
+                let mut col = 0;
+                eng.timers.time(Phase::Memory, || {
+                    for &src_id in &node.ins {
+                        let cols = program.nodes[src_id].cols;
+                        let src = bufs[src_id].as_ref().unwrap();
+                        write_col_slice(src, b, cols, &mut dst, node.cols, col, &eng.traffic);
+                        col += cols;
+                    }
+                });
+                Some(dst)
+            }
+            OpKind::MatMul { param } => {
+                let a = bufs[node.ins[0]].as_ref().unwrap();
+                let k = program.nodes[node.ins[0]].cols;
+                let name = format!("op_matmul_m{b}_k{k}_n{}", node.cols);
+                Some(run_binary_with_param(eng, model, &name, a, *param)?)
+            }
+            OpKind::AddBias { param } => {
+                let a = bufs[node.ins[0]].as_ref().unwrap();
+                let name = format!("op_addbias_m{b}_n{}", node.cols);
+                Some(run_binary_with_param(eng, model, &name, a, *param)?)
+            }
+            OpKind::Add | OpKind::Mul => {
+                let a = bufs[node.ins[0]].as_ref().unwrap();
+                let c = bufs[node.ins[1]].as_ref().unwrap();
+                let flat = b * node.cols;
+                let op = if matches!(node.kind, OpKind::Add) { "add" } else { "mul" };
+                let name = format!("op_{op}_n{flat}");
+                let exe = eng.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = eng.rt.run(&exe, &[Arg::F32(a), Arg::F32(c)])?;
+                eng.timers.add(Phase::Compute, t0.elapsed());
+                Some(outs[0].to_vec::<f32>()?)
+            }
+            OpKind::Sigmoid | OpKind::Tanh => {
+                let a = bufs[node.ins[0]].as_ref().unwrap();
+                let flat = b * node.cols;
+                let op = if matches!(node.kind, OpKind::Sigmoid) {
+                    "sigmoid"
+                } else {
+                    "tanh"
+                };
+                let name = format!("op_{op}_n{flat}");
+                let exe = eng.rt.load(&name)?;
+                let t0 = std::time::Instant::now();
+                let outs = eng.rt.run(&exe, &[Arg::F32(a)])?;
+                eng.timers.add(Phase::Compute, t0.elapsed());
+                Some(outs[0].to_vec::<f32>()?)
+            }
+            OpKind::Scatter => {
+                scattered = Some(node.ins[0]);
+                None
+            }
+            OpKind::Push => None, // heads read from the state buffer
+        };
+        bufs[i] = out;
+    }
+    let sid = scattered.ok_or_else(|| anyhow::anyhow!("program has no scatter"))?;
+    Ok(bufs[sid].take().unwrap())
+}
+
+fn run_binary_with_param(
+    eng: &mut Engine<'_>,
+    model: &Model,
+    name: &str,
+    a: &[f32],
+    param: usize,
+) -> Result<Vec<f32>> {
+    let exe = eng.rt.load(name)?;
+    let t0 = std::time::Instant::now();
+    let out = model.params.with_buffers(eng.rt, |pb| {
+        let outs = eng.rt.run(&exe, &[Arg::F32(a), Arg::Buf(pb[param])])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    })?;
+    eng.timers.add(Phase::Compute, t0.elapsed());
+    Ok(out)
+}

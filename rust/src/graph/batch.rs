@@ -1,0 +1,152 @@
+//! Minibatch merging: K input graphs fused into one vertex space so the
+//! scheduler can batch the frontier *across* samples (the heart of the
+//! paper's batching policy, Alg. 1).
+
+use super::InputGraph;
+
+/// `NO_VERTEX` marks a missing child slot (leaf positions).
+pub const NO_VERTEX: u32 = u32::MAX;
+
+/// K graphs with globally renumbered vertices. `child(v, slot)` is either
+/// a global vertex id or `NO_VERTEX`.
+#[derive(Debug)]
+pub struct GraphBatch {
+    pub n_graphs: usize,
+    pub n_vertices: usize,
+    /// max #children any cell slot uses (2 for trees, 1 for chains)
+    pub arity: usize,
+    /// flattened [n_vertices * arity] child table (NO_VERTEX padded)
+    children: Vec<u32>,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    /// longest-path depth per vertex (== activation step, see
+    /// `InputGraph::depths`)
+    pub depth: Vec<u32>,
+    pub max_depth: u32,
+    /// one root per graph (first root if the sample is a multi-root DAG)
+    pub roots: Vec<u32>,
+    pub root_labels: Vec<i32>,
+    /// graph index owning each vertex
+    pub owner: Vec<u32>,
+}
+
+impl GraphBatch {
+    pub fn new(graphs: &[&InputGraph], arity: usize) -> GraphBatch {
+        let n_vertices: usize = graphs.iter().map(|g| g.n()).sum();
+        let mut children = vec![NO_VERTEX; n_vertices * arity];
+        let mut tokens = Vec::with_capacity(n_vertices);
+        let mut labels = Vec::with_capacity(n_vertices);
+        let mut depth = Vec::with_capacity(n_vertices);
+        let mut owner = Vec::with_capacity(n_vertices);
+        let mut roots = Vec::with_capacity(graphs.len());
+        let mut root_labels = Vec::with_capacity(graphs.len());
+        let mut base = 0u32;
+        let mut max_depth = 0u32;
+        for (gi, g) in graphs.iter().enumerate() {
+            let d = g.depths().expect("graph validated at construction");
+            for v in 0..g.n() {
+                let gv = base as usize + v;
+                for (slot, &c) in g.children[v].iter().enumerate() {
+                    assert!(
+                        slot < arity,
+                        "graph vertex has more children ({}) than cell arity {}",
+                        g.children[v].len(),
+                        arity
+                    );
+                    children[gv * arity + slot] = base + c;
+                }
+                tokens.push(g.tokens[v]);
+                labels.push(g.labels[v]);
+                depth.push(d[v]);
+                max_depth = max_depth.max(d[v]);
+                owner.push(gi as u32);
+            }
+            let r = g.roots();
+            roots.push(base + r.first().copied().unwrap_or(0));
+            root_labels.push(g.root_label);
+            base += g.n() as u32;
+        }
+        GraphBatch {
+            n_graphs: graphs.len(),
+            n_vertices,
+            arity,
+            children,
+            tokens,
+            labels,
+            depth,
+            max_depth,
+            roots,
+            root_labels,
+            owner,
+        }
+    }
+
+    #[inline]
+    pub fn child(&self, v: u32, slot: usize) -> Option<u32> {
+        let c = self.children[v as usize * self.arity + slot];
+        (c != NO_VERTEX).then_some(c)
+    }
+
+    /// Vertices grouped by activation step (the precomputed Alg. 1
+    /// schedule; see `scheduler::schedule` for the runtime BFS that this
+    /// must agree with — a property test enforces the equivalence).
+    pub fn levels(&self) -> Vec<Vec<u32>> {
+        let mut levels = vec![Vec::new(); self.max_depth as usize + 1];
+        for v in 0..self.n_vertices as u32 {
+            levels[self.depth[v as usize] as usize].push(v);
+        }
+        levels
+    }
+
+    /// Total gather traffic in child slots (diagnostics).
+    pub fn n_edges(&self) -> usize {
+        self.children.iter().filter(|&&c| c != NO_VERTEX).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merges_two_chains() {
+        let a = InputGraph::chain(&[1, 2, 3], &[2, 3, 4]);
+        let b = InputGraph::chain(&[9, 8], &[8, 7]);
+        let batch = GraphBatch::new(&[&a, &b], 1);
+        assert_eq!(batch.n_vertices, 5);
+        assert_eq!(batch.child(0, 0), None);
+        assert_eq!(batch.child(1, 0), Some(0));
+        assert_eq!(batch.child(3, 0), None); // b's first vertex
+        assert_eq!(batch.child(4, 0), Some(3));
+        assert_eq!(batch.owner, vec![0, 0, 0, 1, 1]);
+        // levels: step 0 has both chain heads; step 2 only a's tail
+        let levels = batch.levels();
+        assert_eq!(levels[0], vec![0, 3]);
+        assert_eq!(levels[1], vec![1, 4]);
+        assert_eq!(levels[2], vec![2]);
+    }
+
+    #[test]
+    fn merges_trees_with_roots() {
+        let mut rng = Rng::new(1);
+        let g1 = synth::random_binary_tree(&mut rng, 10, 4, 5);
+        let g2 = synth::random_binary_tree(&mut rng, 10, 7, 5);
+        let batch = GraphBatch::new(&[&g1, &g2], 2);
+        assert_eq!(batch.n_vertices, g1.n() + g2.n());
+        assert_eq!(batch.roots.len(), 2);
+        assert_eq!(batch.roots[0], g1.roots()[0]);
+        assert_eq!(batch.roots[1], g1.n() as u32 + g2.roots()[0]);
+        // every vertex appears in exactly one level
+        let total: usize = batch.levels().iter().map(Vec::len).sum();
+        assert_eq!(total, batch.n_vertices);
+    }
+
+    #[test]
+    fn edges_count() {
+        let a = InputGraph::chain(&[1, 2, 3], &[2, 3, 4]);
+        let batch = GraphBatch::new(&[&a], 1);
+        assert_eq!(batch.n_edges(), 2);
+    }
+}

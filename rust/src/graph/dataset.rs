@@ -1,0 +1,150 @@
+//! Datasets: collections of input graphs + the minibatcher.
+//!
+//! The I/O function that reads input graphs "must be done in any model,
+//! and only once before training commences" (paper §3) — `Dataset` is that
+//! function's output, shared across epochs.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::{parse, synth, InputGraph};
+
+#[derive(Debug)]
+pub struct Dataset {
+    pub graphs: Vec<InputGraph>,
+    pub vocab: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Fixed-LSTM LM corpus: `n` sentences of exactly `len` tokens.
+    pub fn ptb_like_fixed(seed: u64, n: usize, vocab: usize, len: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let graphs =
+            (0..n).map(|_| synth::ptb_like_fixed(&mut rng, vocab, len)).collect();
+        Dataset { graphs, vocab, n_classes: 0 }
+    }
+
+    /// Var-LSTM LM corpus: variable-length sentences (PTB-ish stats).
+    pub fn ptb_like_var(seed: u64, n: usize, vocab: usize, max_len: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let graphs = (0..n)
+            .map(|_| synth::ptb_like_var(&mut rng, vocab, 21.0, 10.0, 2, max_len))
+            .collect();
+        Dataset { graphs, vocab, n_classes: 0 }
+    }
+
+    /// SST-like sentiment treebank.
+    pub fn sst_like(seed: u64, n: usize, vocab: usize, n_classes: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let graphs =
+            (0..n).map(|_| synth::sst_like_tree(&mut rng, vocab, n_classes)).collect();
+        Dataset { graphs, vocab, n_classes }
+    }
+
+    /// Tree-FC benchmark: complete binary trees with `leaves` leaves.
+    pub fn treefc(seed: u64, n: usize, vocab: usize, leaves: usize) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let graphs =
+            (0..n).map(|_| synth::complete_binary_tree(&mut rng, vocab, leaves)).collect();
+        Dataset { graphs, vocab, n_classes: 0 }
+    }
+
+    /// Load a real SST-format file (one s-expression tree per line).
+    /// Tokens are hashed into `vocab` buckets (a real run would use a
+    /// proper vocabulary; hashing keeps the loader dependency-free).
+    pub fn from_sst_file(path: &Path, vocab: usize, n_classes: usize) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut graphs = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            graphs.push(parse::parse_sst(line, |w| {
+                let mut acc: u64 = 1469598103934665603;
+                for b in w.bytes() {
+                    acc = (acc ^ b as u64).wrapping_mul(1099511628211);
+                }
+                (acc % vocab as u64) as i32
+            })?);
+        }
+        Ok(Dataset { graphs, vocab, n_classes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+
+    pub fn total_vertices(&self) -> usize {
+        self.graphs.iter().map(InputGraph::n).sum()
+    }
+
+    /// Minibatches of (up to) `bs` graph references, in dataset order.
+    pub fn minibatches(&self, bs: usize) -> impl Iterator<Item = Vec<&InputGraph>> {
+        self.graphs.chunks(bs.max(1)).map(|c| c.iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_corpus_shapes() {
+        let d = Dataset::ptb_like_fixed(1, 10, 100, 16);
+        assert_eq!(d.len(), 10);
+        assert!(d.graphs.iter().all(|g| g.n() == 16));
+        assert_eq!(d.total_vertices(), 160);
+    }
+
+    #[test]
+    fn minibatches_cover_everything() {
+        let d = Dataset::sst_like(2, 23, 100, 5);
+        let batches: Vec<_> = d.minibatches(8).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.iter().map(Vec::len).sum::<usize>(), 23);
+        assert_eq!(batches[2].len(), 7);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Dataset::sst_like(9, 5, 50, 5);
+        let b = Dataset::sst_like(9, 5, 50, 5);
+        for (x, y) in a.graphs.iter().zip(&b.graphs) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.children, y.children);
+        }
+    }
+
+    #[test]
+    fn sst_file_loader() {
+        let dir = tempdir();
+        let p = dir.join("t.txt");
+        std::fs::write(&p, "(3 (2 good) (1 movie))\n(0 (1 bad) (1 film))\n")
+            .unwrap();
+        let d = Dataset::from_sst_file(&p, 100, 5).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.graphs[0].root_label, 3);
+        assert_eq!(d.graphs[1].root_label, 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    fn tempdir() -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "cavs-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+}

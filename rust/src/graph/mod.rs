@@ -1,0 +1,238 @@
+//! Input graphs `G` — the *data* half of the paper's (F, G) decomposition.
+//!
+//! An input graph is per-sample structure (chain / tree / DAG) loaded
+//! through I/O or generated synthetically; it is never compiled. The
+//! scheduler walks it; the vertex function F is evaluated at its vertices.
+
+pub mod batch;
+pub mod dataset;
+pub mod parse;
+pub mod synth;
+
+pub use batch::GraphBatch;
+pub use dataset::Dataset;
+
+use anyhow::{bail, Result};
+
+/// A single sample's input graph.
+///
+/// Vertices are `0..n`. `children[v]` lists the dependency vertices of `v`
+/// in child-slot order (cell functions distinguish slots: gather(0),
+/// gather(1), ...). Leaves have no children. Vertices with no parents are
+/// roots (a well-formed tree has exactly one; general DAGs may have more —
+/// the scheduler handles both).
+#[derive(Debug, Clone)]
+pub struct InputGraph {
+    pub children: Vec<Vec<u32>>,
+    /// Pull input per vertex: a token id for embedding lookup, or -1 for
+    /// "no external input" (e.g. interior nodes of an SST tree).
+    pub tokens: Vec<i32>,
+    /// Per-vertex supervision for per-vertex heads (LM): -1 = none.
+    pub labels: Vec<i32>,
+    /// Root supervision for classifier heads: -1 = none.
+    pub root_label: i32,
+}
+
+impl InputGraph {
+    pub fn n(&self) -> usize {
+        self.children.len()
+    }
+
+    /// A chain (sequence RNN): vertex t depends on t-1.
+    /// `tokens[t]` feeds step t; `labels[t]` is its target (LM next-word).
+    pub fn chain(tokens: &[i32], labels: &[i32]) -> InputGraph {
+        let n = tokens.len();
+        assert_eq!(labels.len(), n);
+        let children = (0..n)
+            .map(|t| if t == 0 { vec![] } else { vec![t as u32 - 1] })
+            .collect();
+        InputGraph {
+            children,
+            tokens: tokens.to_vec(),
+            labels: labels.to_vec(),
+            root_label: -1,
+        }
+    }
+
+    /// Build from an explicit children table; validates well-formedness
+    /// (ids in range, no self-loop, acyclic).
+    pub fn from_children(
+        children: Vec<Vec<u32>>,
+        tokens: Vec<i32>,
+        labels: Vec<i32>,
+        root_label: i32,
+    ) -> Result<InputGraph> {
+        let n = children.len();
+        if tokens.len() != n || labels.len() != n {
+            bail!("tokens/labels length mismatch");
+        }
+        for (v, cs) in children.iter().enumerate() {
+            for &c in cs {
+                if c as usize >= n {
+                    bail!("vertex {v} has out-of-range child {c}");
+                }
+                if c as usize == v {
+                    bail!("vertex {v} has a self-loop");
+                }
+            }
+        }
+        let g = InputGraph { children, tokens, labels, root_label };
+        g.topo_order()?; // validates acyclicity
+        Ok(g)
+    }
+
+    /// Kahn topological order (children before parents). Errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<u32>> {
+        let n = self.n();
+        let mut indeg = vec![0usize; n]; // number of unevaluated children
+        let mut parents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (v, cs) in self.children.iter().enumerate() {
+            indeg[v] = cs.len();
+            for &c in cs {
+                parents[c as usize].push(v as u32);
+            }
+        }
+        let mut order: Vec<u32> = Vec::with_capacity(n);
+        let mut frontier: Vec<u32> = (0..n as u32)
+            .filter(|&v| indeg[v as usize] == 0)
+            .collect();
+        while let Some(v) = frontier.pop() {
+            order.push(v);
+            for &p in &parents[v as usize] {
+                indeg[p as usize] -= 1;
+                if indeg[p as usize] == 0 {
+                    frontier.push(p);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("input graph has a cycle");
+        }
+        Ok(order)
+    }
+
+    /// Longest-path depth of each vertex (leaves = 0). This is exactly the
+    /// step at which the Alg. 1 frontier activates the vertex, so the
+    /// schedule can be precomputed per graph — the "negligible-cost BFS"
+    /// the paper credits for Cavs' tiny scheduling overhead.
+    pub fn depths(&self) -> Result<Vec<u32>> {
+        let order = self.topo_order()?;
+        let mut depth = vec![0u32; self.n()];
+        for &v in &order {
+            let d = self.children[v as usize]
+                .iter()
+                .map(|&c| depth[c as usize] + 1)
+                .max()
+                .unwrap_or(0);
+            depth[v as usize] = d;
+        }
+        Ok(depth)
+    }
+
+    /// Vertices with no parents.
+    pub fn roots(&self) -> Vec<u32> {
+        let mut has_parent = vec![false; self.n()];
+        for cs in &self.children {
+            for &c in cs {
+                has_parent[c as usize] = true;
+            }
+        }
+        (0..self.n() as u32)
+            .filter(|&v| !has_parent[v as usize])
+            .collect()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.children.iter().filter(|c| c.is_empty()).count()
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.depths().map(|d| d.into_iter().max().unwrap_or(0)).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_shape() {
+        let g = InputGraph::chain(&[5, 6, 7], &[6, 7, 8]);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.children[0], Vec::<u32>::new());
+        assert_eq!(g.children[2], vec![1]);
+        assert_eq!(g.roots(), vec![2]);
+        assert_eq!(g.depths().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let r = InputGraph::from_children(
+            vec![vec![1], vec![0]],
+            vec![0, 0],
+            vec![-1, -1],
+            -1,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let r = InputGraph::from_children(
+            vec![vec![7]],
+            vec![0],
+            vec![-1],
+            -1,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tree_depths_and_roots() {
+        // 2 <- (0, 1); 4 <- (2, 3)
+        let g = InputGraph::from_children(
+            vec![vec![], vec![], vec![0, 1], vec![], vec![2, 3]],
+            vec![1, 2, -1, 3, -1],
+            vec![-1; 5],
+            2,
+        )
+        .unwrap();
+        assert_eq!(g.depths().unwrap(), vec![0, 0, 1, 0, 2]);
+        assert_eq!(g.roots(), vec![4]);
+        assert_eq!(g.n_leaves(), 3);
+        assert_eq!(g.max_depth(), 2);
+    }
+
+    #[test]
+    fn dag_with_shared_child() {
+        // diamond: 3 <- (1, 2); 1 <- 0; 2 <- 0 — vertex 0 has two parents.
+        let g = InputGraph::from_children(
+            vec![vec![], vec![0], vec![0], vec![1, 2]],
+            vec![0; 4],
+            vec![-1; 4],
+            -1,
+        )
+        .unwrap();
+        assert_eq!(g.depths().unwrap(), vec![0, 1, 1, 2]);
+        assert_eq!(g.roots(), vec![3]);
+    }
+
+    #[test]
+    fn topo_is_children_first() {
+        let g = InputGraph::from_children(
+            vec![vec![], vec![], vec![0, 1], vec![], vec![2, 3]],
+            vec![0; 5],
+            vec![-1; 5],
+            -1,
+        )
+        .unwrap();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> =
+            (0..5).map(|v| order.iter().position(|&x| x == v as u32).unwrap()).collect();
+        for (v, cs) in g.children.iter().enumerate() {
+            for &c in cs {
+                assert!(pos[c as usize] < pos[v]);
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Parsers for input graphs: PTB-style s-expression trees (the format of
+//! the Stanford Sentiment Treebank) and a simple edge-list format for
+//! general DAGs.
+//!
+//! Reading input graphs is plain I/O — the paper's point is that this is
+//! all the per-sample "construction" Cavs ever does (§5.2).
+
+use anyhow::{bail, Context, Result};
+
+use super::InputGraph;
+
+/// Parse an SST-style s-expression: `(3 (2 word) (2 (1 w2) (2 w3)))`.
+/// Every node starts with a sentiment label 0..4; leaves carry a token
+/// string mapped to an id by `vocab_lookup`.
+///
+/// Produces a binary tree in children-before-parents order; interior
+/// vertices have token -1; the root label becomes `root_label`.
+pub fn parse_sst(
+    text: &str,
+    mut vocab_lookup: impl FnMut(&str) -> i32,
+) -> Result<InputGraph> {
+    struct P<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+    impl<'a> P<'a> {
+        fn ws(&mut self) {
+            while matches!(self.b.get(self.i), Some(b' ' | b'\n' | b'\t' | b'\r')) {
+                self.i += 1;
+            }
+        }
+        fn token(&mut self) -> String {
+            let start = self.i;
+            while let Some(&c) = self.b.get(self.i) {
+                if c == b'(' || c == b')' || c.is_ascii_whitespace() {
+                    break;
+                }
+                self.i += 1;
+            }
+            String::from_utf8_lossy(&self.b[start..self.i]).into_owned()
+        }
+    }
+
+    // node -> (children ids); returns vertex id
+    fn node(
+        p: &mut P<'_>,
+        children: &mut Vec<Vec<u32>>,
+        tokens: &mut Vec<i32>,
+        labels: &mut Vec<i32>,
+        vocab: &mut dyn FnMut(&str) -> i32,
+    ) -> Result<(u32, i32)> {
+        p.ws();
+        if p.b.get(p.i) != Some(&b'(') {
+            bail!("expected '(' at byte {}", p.i);
+        }
+        p.i += 1;
+        p.ws();
+        let label: i32 = p
+            .token()
+            .parse()
+            .context("sst node must start with an integer label")?;
+        p.ws();
+        let mut kid_ids = Vec::new();
+        let mut leaf_tok: Option<i32> = None;
+        while p.b.get(p.i) != Some(&b')') {
+            if p.b.get(p.i) == Some(&b'(') {
+                let (id, _) = node(p, children, tokens, labels, vocab)?;
+                kid_ids.push(id);
+            } else {
+                let w = p.token();
+                if w.is_empty() {
+                    bail!("unterminated s-expression");
+                }
+                leaf_tok = Some(vocab(&w));
+            }
+            p.ws();
+        }
+        p.i += 1; // ')'
+        let id = children.len() as u32;
+        children.push(kid_ids);
+        tokens.push(leaf_tok.unwrap_or(-1));
+        labels.push(label);
+        Ok((id, label))
+    }
+
+    let mut p = P { b: text.as_bytes(), i: 0 };
+    let mut children = Vec::new();
+    let mut tokens = Vec::new();
+    let mut labels = Vec::new();
+    let (_root, root_label) =
+        node(&mut p, &mut children, &mut tokens, &mut labels, &mut vocab_lookup)?;
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing data after tree");
+    }
+    // Per-vertex labels are for optional node-level supervision; the
+    // classifier head uses the root label.
+    InputGraph::from_children(children, tokens, labels, root_label)
+}
+
+/// Edge-list format for general DAGs, one graph per call:
+/// ```text
+/// v <n_vertices>
+/// t <vertex> <token>
+/// e <parent> <child>          # child order = line order
+/// l <root_label>
+/// ```
+pub fn parse_edge_list(text: &str) -> Result<InputGraph> {
+    let mut n = 0usize;
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut toks: Vec<(usize, i32)> = Vec::new();
+    let mut root_label = -1;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let tag = it.next().unwrap();
+        let ctx = || format!("line {}", lineno + 1);
+        match tag {
+            "v" => n = it.next().with_context(ctx)?.parse()?,
+            "t" => {
+                let v: usize = it.next().with_context(ctx)?.parse()?;
+                let t: i32 = it.next().with_context(ctx)?.parse()?;
+                toks.push((v, t));
+            }
+            "e" => {
+                let p: u32 = it.next().with_context(ctx)?.parse()?;
+                let c: u32 = it.next().with_context(ctx)?.parse()?;
+                edges.push((p, c));
+            }
+            "l" => root_label = it.next().with_context(ctx)?.parse()?,
+            _ => bail!("unknown record '{tag}' at line {}", lineno + 1),
+        }
+    }
+    if n == 0 {
+        bail!("missing 'v' record");
+    }
+    let mut children = vec![Vec::new(); n];
+    for (p, c) in edges {
+        if p as usize >= n {
+            bail!("edge parent {p} out of range");
+        }
+        children[p as usize].push(c);
+    }
+    let mut tokens = vec![-1; n];
+    for (v, t) in toks {
+        if v >= n {
+            bail!("token vertex {v} out of range");
+        }
+        tokens[v] = t;
+    }
+    InputGraph::from_children(children, tokens, vec![-1; n], root_label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab(w: &str) -> i32 {
+        (w.bytes().map(|b| b as i32).sum::<i32>()) % 97
+    }
+
+    #[test]
+    fn parses_sst_leaf_pair() {
+        let g = parse_sst("(3 (2 good) (1 movie))", vocab).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.root_label, 3);
+        assert_eq!(g.n_leaves(), 2);
+        // children-before-parents ordering
+        assert_eq!(g.children[2], vec![0, 1]);
+        assert_eq!(g.tokens[2], -1);
+        assert!(g.tokens[0] >= 0 && g.tokens[1] >= 0);
+    }
+
+    #[test]
+    fn parses_nested_sst() {
+        let g = parse_sst("(4 (2 a) (3 (2 b) (2 c)))", vocab).unwrap();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.max_depth(), 2);
+        assert_eq!(g.roots().len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_sst() {
+        assert!(parse_sst("(3 (2 a) (1 b)", vocab).is_err()); // unbalanced
+        assert!(parse_sst("(x (2 a))", vocab).is_err()); // non-int label
+        assert!(parse_sst("(3 (2 a)) extra", vocab).is_err());
+    }
+
+    #[test]
+    fn parses_edge_list_dag() {
+        let g = parse_edge_list(
+            "v 4\nt 0 7\nt 1 8\ne 2 0\ne 2 1\ne 3 2\nl 1\n",
+        )
+        .unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.children[2], vec![0, 1]);
+        assert_eq!(g.root_label, 1);
+        assert_eq!(g.tokens[1], 8);
+    }
+
+    #[test]
+    fn edge_list_rejects_bad_refs() {
+        assert!(parse_edge_list("v 2\ne 5 0\n").is_err());
+        assert!(parse_edge_list("e 0 1\n").is_err()); // no 'v'
+    }
+}

@@ -1,0 +1,287 @@
+//! Synthetic workload generators — the data substitutions documented in
+//! DESIGN.md §2 (no PTB/SST available offline):
+//!
+//! * `ptb_like_*`: Zipf-distributed token sequences with PTB-ish length
+//!   statistics (the LM workloads of Fig. 8 a/b/e/f).
+//! * `sst_like_tree`: random binary parse trees with SST's sentence-length
+//!   distribution (max 54, mean ≈ 19) and high depth variance — the
+//!   property §5.3 blames for fragmented Tree-LSTM batches.
+//! * `complete_binary_tree`: the Tree-FC benchmark of Fold [34].
+//! * `random_nary_tree` / `random_dag`: Fig. 2(d)-style general structures
+//!   for the expressiveness example.
+
+use crate::util::rng::Rng;
+
+use super::InputGraph;
+
+/// Fixed-length LM sample: `len` input tokens, next-token labels.
+pub fn ptb_like_fixed(rng: &mut Rng, vocab: usize, len: usize) -> InputGraph {
+    let toks: Vec<i32> = (0..=len).map(|_| rng.zipf(vocab) as i32).collect();
+    let inputs = toks[..len].to_vec();
+    let labels = toks[1..].to_vec();
+    InputGraph::chain(&inputs, &labels)
+}
+
+/// Variable-length LM sample, len ~ clamp(N(mean, sd), lo, hi).
+pub fn ptb_like_var(
+    rng: &mut Rng,
+    vocab: usize,
+    mean: f64,
+    sd: f64,
+    lo: usize,
+    hi: usize,
+) -> InputGraph {
+    let len = (mean + sd * rng.normal()).round().clamp(lo as f64, hi as f64)
+        as usize;
+    ptb_like_fixed(rng, vocab, len)
+}
+
+/// Random binary tree over `n_leaves` leaves by repeatedly merging two
+/// adjacent spans — uniform over binary bracketings of the sentence, which
+/// produces the skewed/deep shapes natural parses have.
+pub fn random_binary_tree(
+    rng: &mut Rng,
+    vocab: usize,
+    n_leaves: usize,
+    n_classes: usize,
+) -> InputGraph {
+    assert!(n_leaves >= 1);
+    let mut children: Vec<Vec<u32>> = Vec::with_capacity(2 * n_leaves - 1);
+    let mut tokens: Vec<i32> = Vec::new();
+    // leaves
+    let mut spans: Vec<u32> = (0..n_leaves as u32).collect();
+    for _ in 0..n_leaves {
+        children.push(vec![]);
+        tokens.push(rng.zipf(vocab) as i32);
+    }
+    // merges
+    while spans.len() > 1 {
+        let i = rng.below(spans.len() - 1);
+        let l = spans[i];
+        let r = spans[i + 1];
+        let id = children.len() as u32;
+        children.push(vec![l, r]);
+        tokens.push(-1);
+        spans[i] = id;
+        spans.remove(i + 1);
+    }
+    let n = children.len();
+    let root_label = rng.below(n_classes) as i32;
+    InputGraph::from_children(children, tokens, vec![-1; n], root_label)
+        .expect("generator produces well-formed trees")
+}
+
+/// SST-like sentiment sample: sentence length from a clamped log-normal
+/// matching SST statistics (mean ≈ 19 words, max 54).
+pub fn sst_like_tree(rng: &mut Rng, vocab: usize, n_classes: usize) -> InputGraph {
+    let ln = 2.75 + 0.55 * rng.normal(); // exp ~ 15.6 median
+    let len = (ln.exp().round() as usize).clamp(2, 54);
+    random_binary_tree(rng, vocab, len, n_classes)
+}
+
+/// Complete binary tree with `n_leaves` leaves (must be a power of two) —
+/// the Tree-FC benchmark input ([34]; 256 leaves => 511 vertices).
+pub fn complete_binary_tree(rng: &mut Rng, vocab: usize, n_leaves: usize) -> InputGraph {
+    assert!(n_leaves.is_power_of_two(), "complete tree needs 2^k leaves");
+    let mut children: Vec<Vec<u32>> = Vec::new();
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut level: Vec<u32> = (0..n_leaves as u32).collect();
+    for _ in 0..n_leaves {
+        children.push(vec![]);
+        tokens.push(rng.zipf(vocab) as i32);
+    }
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2);
+        for pair in level.chunks(2) {
+            let id = children.len() as u32;
+            children.push(vec![pair[0], pair[1]]);
+            tokens.push(-1);
+            next.push(id);
+        }
+        level = next;
+    }
+    let n = children.len();
+    InputGraph::from_children(children, tokens, vec![-1; n], 0)
+        .expect("complete tree is well-formed")
+}
+
+/// Random N-ary tree (every interior vertex has exactly `arity` children).
+pub fn random_nary_tree(
+    rng: &mut Rng,
+    vocab: usize,
+    n_interior: usize,
+    arity: usize,
+) -> InputGraph {
+    // build top-down then re-index children-first
+    let n = n_interior * arity + 1;
+    let mut children_down: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut frontier = vec![0usize];
+    let mut next_id = 1usize;
+    let mut interior_left = n_interior;
+    while interior_left > 0 && !frontier.is_empty() {
+        let idx = rng.below(frontier.len());
+        let v = frontier.swap_remove(idx);
+        for _ in 0..arity {
+            children_down[v].push(next_id);
+            frontier.push(next_id);
+            next_id += 1;
+        }
+        interior_left -= 1;
+    }
+    // children-first re-index via DFS post-order
+    let mut order = Vec::with_capacity(next_id);
+    let mut stack = vec![(0usize, false)];
+    while let Some((v, expanded)) = stack.pop() {
+        if expanded {
+            order.push(v);
+        } else {
+            stack.push((v, true));
+            for &c in &children_down[v] {
+                stack.push((c, false));
+            }
+        }
+    }
+    let mut newid = vec![0u32; next_id];
+    for (i, &v) in order.iter().enumerate() {
+        newid[v] = i as u32;
+    }
+    let mut children = vec![Vec::new(); next_id];
+    let mut tokens = vec![-1; next_id];
+    for &v in &order {
+        let cs: Vec<u32> = children_down[v].iter().map(|&c| newid[c]).collect();
+        if cs.is_empty() {
+            tokens[newid[v] as usize] = rng.zipf(vocab) as i32;
+        }
+        children[newid[v] as usize] = cs;
+    }
+    InputGraph::from_children(children, tokens, vec![-1; next_id], 0)
+        .expect("nary generator is well-formed")
+}
+
+/// Random layered DAG: `width` vertices per layer, each non-input vertex
+/// depends on `arity` vertices from the previous layer (Fig. 2d "graph").
+pub fn random_dag(
+    rng: &mut Rng,
+    vocab: usize,
+    layers: usize,
+    width: usize,
+    arity: usize,
+) -> InputGraph {
+    assert!(layers >= 1 && width >= 1);
+    let n = layers * width;
+    let mut children = vec![Vec::new(); n];
+    let mut tokens = vec![-1; n];
+    for w in 0..width {
+        tokens[w] = rng.zipf(vocab) as i32;
+    }
+    for l in 1..layers {
+        for w in 0..width {
+            let v = l * width + w;
+            let mut picked = Vec::new();
+            for _ in 0..arity.min(width) {
+                loop {
+                    let c = ((l - 1) * width + rng.below(width)) as u32;
+                    if !picked.contains(&c) {
+                        picked.push(c);
+                        break;
+                    }
+                }
+            }
+            children[v] = picked;
+        }
+    }
+    InputGraph::from_children(children, tokens, vec![-1; n], 0)
+        .expect("dag generator is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_chain_has_next_word_labels() {
+        let mut rng = Rng::new(1);
+        let g = ptb_like_fixed(&mut rng, 100, 8);
+        assert_eq!(g.n(), 8);
+        assert!(g.labels.iter().all(|&l| l >= 0));
+        assert_eq!(g.max_depth(), 7);
+    }
+
+    #[test]
+    fn var_chain_lengths_vary() {
+        let mut rng = Rng::new(2);
+        let lens: Vec<usize> = (0..50)
+            .map(|_| ptb_like_var(&mut rng, 100, 20.0, 8.0, 2, 64).n())
+            .collect();
+        let min = *lens.iter().min().unwrap();
+        let max = *lens.iter().max().unwrap();
+        assert!(min < max);
+        assert!(lens.iter().all(|&l| (2..=64).contains(&l)));
+    }
+
+    #[test]
+    fn binary_tree_structure() {
+        let mut rng = Rng::new(3);
+        for leaves in [1usize, 2, 5, 17] {
+            let g = random_binary_tree(&mut rng, 50, leaves, 5);
+            assert_eq!(g.n(), 2 * leaves - 1);
+            assert_eq!(g.n_leaves(), leaves);
+            assert_eq!(g.roots().len(), 1);
+            assert!(g.root_label >= 0 && g.root_label < 5);
+            // interior vertices are binary
+            for cs in &g.children {
+                assert!(cs.is_empty() || cs.len() == 2);
+            }
+        }
+    }
+
+    #[test]
+    fn sst_like_statistics() {
+        let mut rng = Rng::new(4);
+        let sizes: Vec<usize> =
+            (0..300).map(|_| sst_like_tree(&mut rng, 100, 5).n_leaves()).collect();
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        assert!(sizes.iter().all(|&s| (2..=54).contains(&s)));
+        assert!((10.0..30.0).contains(&mean), "mean {mean}");
+        // depth variance should be substantial (the paper's observation)
+        let mut rng2 = Rng::new(5);
+        let depths: Vec<u32> =
+            (0..100).map(|_| sst_like_tree(&mut rng2, 100, 5).max_depth()).collect();
+        let dmin = *depths.iter().min().unwrap();
+        let dmax = *depths.iter().max().unwrap();
+        assert!(dmax >= dmin + 5, "depth range too tight: {dmin}..{dmax}");
+    }
+
+    #[test]
+    fn complete_tree_counts() {
+        let mut rng = Rng::new(6);
+        let g = complete_binary_tree(&mut rng, 30, 256);
+        assert_eq!(g.n(), 511);
+        assert_eq!(g.n_leaves(), 256);
+        assert_eq!(g.max_depth(), 8);
+    }
+
+    #[test]
+    fn nary_tree_arity() {
+        let mut rng = Rng::new(7);
+        let g = random_nary_tree(&mut rng, 20, 5, 3);
+        assert_eq!(g.n(), 16);
+        for cs in &g.children {
+            assert!(cs.is_empty() || cs.len() == 3);
+        }
+        assert_eq!(g.roots().len(), 1);
+    }
+
+    #[test]
+    fn dag_layering() {
+        let mut rng = Rng::new(8);
+        let g = random_dag(&mut rng, 20, 4, 3, 2);
+        assert_eq!(g.n(), 12);
+        let depths = g.depths().unwrap();
+        for l in 0..4 {
+            for w in 0..3 {
+                assert_eq!(depths[l * 3 + w], l as u32);
+            }
+        }
+    }
+}

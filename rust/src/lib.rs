@@ -1,0 +1,20 @@
+//! # Cavs — a vertex-centric programming interface for dynamic neural nets
+//!
+//! Rust + JAX + Pallas reproduction of *Cavs: A Vertex-centric Programming
+//! Interface for Dynamic Neural Networks* (Zhang, Xu, Neubig, Dai, Ho,
+//! Yang, Xing; 2017). See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod exec;
+pub mod graph;
+pub mod memory;
+pub mod models;
+pub mod runtime;
+pub mod scheduler;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod vertex;

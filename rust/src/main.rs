@@ -1,0 +1,290 @@
+//! `cavs` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train      train a model (Tree-LSTM sentiment, LSTM LM, Tree-FC, GRU)
+//!   bench      reproduce a paper table/figure (see DESIGN.md §4)
+//!   inspect    summarize the artifact manifest
+//!   analyze    run the §3.5 static analyses on a vertex function
+//!   eval       inference pass over a dataset
+//!
+//! Offline-friendly hand-rolled argument parsing (no clap): flags are
+//! `--key value` pairs plus repeated `--set k=v` config overrides.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use cavs::bench::experiments::{self, Scale};
+use cavs::config::Config;
+use cavs::exec::Engine;
+use cavs::graph::Dataset;
+use cavs::models::{Cell, HeadKind, Model};
+use cavs::runtime::Runtime;
+use cavs::train::{train_epochs, Optimizer};
+use cavs::{info, util};
+
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = Vec::new();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+            flags.push((key.to_string(), val));
+        } else {
+            bail!("unexpected argument '{a}' (flags are --key value)");
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn config(&self) -> Result<Config> {
+        let mut cfg = match self.get("config") {
+            Some(p) => Config::load(Path::new(p))?,
+            None => Config::default(),
+        };
+        for (k, v) in &self.flags {
+            if k == "set" {
+                let (key, val) = v
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("--set expects k=v"))?;
+                cfg.apply(key, val)?;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn main() -> Result<()> {
+    util::logger::init();
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "bench" => cmd_bench(&args),
+        "inspect" => cmd_inspect(&args),
+        "analyze" => cmd_analyze(&args),
+        "eval" => cmd_eval(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cavs — vertex-centric dynamic-NN training system (paper reproduction)
+
+USAGE:
+  cavs train   [--config cfg.json] [--set k=v ...] [--save ckpt] [--load ckpt]
+  cavs eval    [--config cfg.json] [--set k=v ...]
+  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|loc|all
+               [--scale 1.0] [--full true]
+  cavs inspect [--set artifacts_dir=...]
+  cavs analyze [--set cell=treelstm] [--set h=256]
+
+Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
+  seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
+  lazy_batching, fusion, streaming, artifacts_dir"
+    );
+}
+
+fn make_dataset(cfg: &Config) -> Dataset {
+    match (cfg.cell, cfg.head) {
+        (Cell::TreeFc, _) => {
+            Dataset::treefc(cfg.seed, cfg.n_samples, cfg.vocab, cfg.tree_leaves)
+        }
+        (Cell::TreeLstm, _) => {
+            Dataset::sst_like(cfg.seed, cfg.n_samples, cfg.vocab, cfg.n_classes)
+        }
+        (_, HeadKind::LmPerVertex) => {
+            Dataset::ptb_like_fixed(cfg.seed, cfg.n_samples, cfg.vocab, cfg.seq_len)
+        }
+        _ => Dataset::ptb_like_var(cfg.seed, cfg.n_samples, cfg.vocab, cfg.seq_len),
+    }
+}
+
+fn make_model(cfg: &Config) -> Model {
+    let head_vocab = match cfg.head {
+        HeadKind::LmPerVertex => cfg.vocab,
+        HeadKind::ClassifierAtRoot => cfg.n_classes,
+        HeadKind::SumRootState => 0,
+    };
+    Model::new(cfg.cell, cfg.h, cfg.vocab, cfg.head, head_vocab, cfg.seed)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))
+        .context("loading artifacts (run `make artifacts` first)")?;
+    let data = make_dataset(&cfg);
+    let mut model = make_model(&cfg);
+    if let Some(path) = args.get("load") {
+        cavs::models::checkpoint::load(&mut model, Path::new(path))?;
+        info!("loaded checkpoint {path}");
+    }
+    info!(
+        "training {} h={} on {} samples ({} vertices), {} params",
+        cfg.cell.name(),
+        cfg.h,
+        data.len(),
+        data.total_vertices(),
+        model.n_parameters()
+    );
+    let mut engine = Engine::new(&rt, cfg.engine_opts(true));
+    train_epochs(
+        &mut engine,
+        &mut model,
+        &data,
+        cfg.batch_size,
+        Optimizer::adam(cfg.lr),
+        cfg.epochs,
+        cfg.max_grad_norm,
+        |log| {
+            println!(
+                "epoch {:3}  loss/label {:.4}  acc {:.3}  {:.2}s  ({} vertices)",
+                log.epoch, log.loss_per_label, log.accuracy, log.seconds, log.n_vertices
+            );
+        },
+    )?;
+    let st = rt.stats();
+    info!(
+        "runtime: {} executions, {} compiles, h2d {:.1} MB, d2h {:.1} MB",
+        st.executions,
+        st.compiles,
+        st.bytes_h2d as f64 / 1e6,
+        st.bytes_d2h as f64 / 1e6
+    );
+    if let Some(path) = args.get("save") {
+        cavs::models::checkpoint::save(&model, Path::new(path))?;
+        info!("saved checkpoint {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let data = make_dataset(&cfg);
+    let mut model = make_model(&cfg);
+    let mut engine = Engine::new(&rt, cfg.engine_opts(false));
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0.0f64;
+    let mut n = 0usize;
+    let t0 = std::time::Instant::now();
+    for mb in data.minibatches(cfg.batch_size) {
+        let r = engine.run_minibatch(&mut model, &mb)?;
+        loss += r.loss as f64;
+        ncorrect += r.ncorrect as f64;
+        n += r.n_labels;
+    }
+    println!(
+        "eval: loss/label {:.4}  acc {:.3}  {:.2}s",
+        loss / n.max(1) as f64,
+        ncorrect / n.max(1) as f64,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let exp = args.get("exp").unwrap_or("all");
+    let scale = Scale {
+        samples: args
+            .get("scale")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(1.0),
+        full: args
+            .get("full")
+            .map(|s| s == "true" || s == "1")
+            .unwrap_or(false),
+    };
+    let tables = match exp {
+        "all" => experiments::run_all(&rt, scale)?,
+        "serial" => vec![experiments::serial_vs_batched(&rt, scale)?],
+        "fig9a" => vec![experiments::fig9a(&rt, scale)?],
+        "fig9b" => vec![experiments::fig9b(&rt, scale)?],
+        "fig10" => vec![experiments::fig10(&rt, scale)?],
+        "table1" => vec![experiments::table1(&rt, scale)?],
+        "table2" => vec![experiments::table2(&rt, scale)?],
+        "loc" => vec![experiments::loc(&rt)?],
+        p if p.starts_with("fig8") && p.len() == 5 => {
+            vec![experiments::fig8(&rt, p.chars().last().unwrap(), scale)?]
+        }
+        other => bail!("unknown experiment '{other}'"),
+    };
+    for t in &tables {
+        println!("\n{}", t.render());
+    }
+    println!("(results also written to results/*.txt and results/*.csv)");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let m = &rt.manifest;
+    println!("artifacts dir : {}", m.dir.display());
+    println!("artifacts     : {}", m.len());
+    println!("vocab         : {} (quick {})", m.vocab, m.quick_vocab);
+    println!("classes       : {}", m.ncls);
+    let mut kinds: std::collections::BTreeMap<String, usize> = Default::default();
+    for name in m.names() {
+        let meta = m.get(name)?;
+        *kinds.entry(meta.kind.clone()).or_default() += 1;
+    }
+    for (k, n) in kinds {
+        println!("  {k:<16} {n}");
+    }
+    for cell in ["lstm", "treelstm", "treefc", "gru"] {
+        for h in [32, 64, 256, 512, 1024] {
+            let b = m.buckets(cell, "cell_fwd", h);
+            if !b.is_empty() {
+                println!("  {cell} h={h}: buckets {b:?}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let program = cfg
+        .cell
+        .program(cfg.h)
+        .ok_or_else(|| anyhow::anyhow!("no op program for {}", cfg.cell.name()))?;
+    let a = program.analyze();
+    println!("vertex function F = {} (h={})", program.name, cfg.h);
+    println!("  ops                 : {}", program.nodes.len());
+    println!("  unfused launches    : {}", program.launches_unfused());
+    println!("  fuse-able groups    : {:?}", a.fusion_groups);
+    println!("  eager ops (stream 2): {:?}", a.eager.iter().collect::<Vec<_>>());
+    println!("  lazy ops (deferred) : {:?}", a.lazy.iter().collect::<Vec<_>>());
+    for (i, n) in program.nodes.iter().enumerate() {
+        println!("    [{i:2}] {:?} <- {:?} ({} cols)", n.kind, n.ins, n.cols);
+    }
+    Ok(())
+}

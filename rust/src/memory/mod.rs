@@ -1,0 +1,245 @@
+//! Gather/scatter and push/pull buffers (paper §3.3, Fig. 5) plus the
+//! batched multi-slice copy primitives (the paper's customized memcpy
+//! kernel for its four operators).
+//!
+//! The buffers are vertex-id-keyed stores of per-vertex state slices: the
+//! key space is dense (global vertex ids of the merged minibatch), so the
+//! store is one contiguous block with row addressing — `IndexBuffer(op, m)`
+//! from Alg. 2 becomes a row offset. All copies are counted so the benches
+//! can reproduce the paper's memory-ops-vs-compute breakdown (Table 2).
+
+use std::cell::Cell;
+
+/// Global byte counter for gather/scatter/pull/push traffic.
+#[derive(Debug, Default)]
+pub struct MemTraffic {
+    bytes: Cell<u64>,
+    ops: Cell<u64>,
+}
+
+impl MemTraffic {
+    pub fn add(&self, bytes: usize) {
+        self.bytes.set(self.bytes.get() + bytes as u64);
+        self.ops.set(self.ops.get() + 1);
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.get()
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops.get()
+    }
+
+    pub fn reset(&self) {
+        self.bytes.set(0);
+        self.ops.set(0);
+    }
+}
+
+/// Dense vertex-id -> state-slice store backing gather/scatter (and, with
+/// `add` writes, the gradient flow of the backward pass).
+#[derive(Debug)]
+pub struct StateBuffer {
+    pub cols: usize,
+    data: Vec<f32>,
+    n: usize,
+}
+
+impl StateBuffer {
+    pub fn new(n_vertices: usize, cols: usize) -> StateBuffer {
+        StateBuffer { cols, data: vec![0.0; n_vertices * cols], n: n_vertices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn zero(&mut self) {
+        self.data.fill(0.0);
+    }
+
+    pub fn row(&self, v: usize) -> &[f32] {
+        &self.data[v * self.cols..(v + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, v: usize) -> &mut [f32] {
+        &mut self.data[v * self.cols..(v + 1) * self.cols]
+    }
+
+    /// gather: copy rows for `ids` into the dense task block `dst`
+    /// (`dst.len() == ids.len() * cols`); `None` ids produce zero rows
+    /// (frontier vertices whose child does not exist).
+    pub fn gather(&self, ids: &[Option<u32>], dst: &mut [f32], tr: &MemTraffic) {
+        let c = self.cols;
+        debug_assert!(dst.len() >= ids.len() * c);
+        for (m, id) in ids.iter().enumerate() {
+            let d = &mut dst[m * c..(m + 1) * c];
+            match id {
+                Some(v) => d.copy_from_slice(self.row(*v as usize)),
+                None => d.fill(0.0),
+            }
+        }
+        tr.add(ids.len() * c * 4);
+    }
+
+    /// scatter: copy rows of the dense task block `src` out to `ids`.
+    pub fn scatter(&mut self, ids: &[u32], src: &[f32], tr: &MemTraffic) {
+        let c = self.cols;
+        debug_assert!(src.len() >= ids.len() * c);
+        for (m, &v) in ids.iter().enumerate() {
+            self.row_mut(v as usize)
+                .copy_from_slice(&src[m * c..(m + 1) * c]);
+        }
+        tr.add(ids.len() * c * 4);
+    }
+
+    /// scatter-add: accumulate rows (gradient flow to shared children).
+    pub fn scatter_add(&mut self, ids: &[Option<u32>], src: &[f32], tr: &MemTraffic) {
+        let c = self.cols;
+        for (m, id) in ids.iter().enumerate() {
+            if let Some(v) = id {
+                let row = self.row_mut(*v as usize);
+                for (a, b) in row.iter_mut().zip(&src[m * c..(m + 1) * c]) {
+                    *a += *b;
+                }
+            }
+        }
+        tr.add(ids.len() * c * 4);
+    }
+
+    /// Add `src` into a sub-range of columns of row `v` (e.g. seeding the
+    /// h-part of an LSTM state gradient from the head's gH).
+    pub fn add_into_cols(
+        &mut self,
+        v: usize,
+        col_start: usize,
+        src: &[f32],
+        tr: &MemTraffic,
+    ) {
+        let row = self.row_mut(v);
+        for (a, b) in row[col_start..col_start + src.len()].iter_mut().zip(src) {
+            *a += *b;
+        }
+        tr.add(src.len() * 4);
+    }
+
+    /// Copy a column range of rows `ids` into a dense block (used to pack
+    /// the h-part of states for head evaluation / param grads).
+    pub fn gather_cols(
+        &self,
+        ids: &[u32],
+        col_start: usize,
+        col_len: usize,
+        dst: &mut [f32],
+        tr: &MemTraffic,
+    ) {
+        for (m, &v) in ids.iter().enumerate() {
+            let row = self.row(v as usize);
+            dst[m * col_len..(m + 1) * col_len]
+                .copy_from_slice(&row[col_start..col_start + col_len]);
+        }
+        tr.add(ids.len() * col_len * 4);
+    }
+}
+
+/// Strided column-slice copy between dense row-major blocks: reads
+/// `src[.., src_col..src_col+cols]` of `rows` rows with stride
+/// `src_stride`, writes densely to `dst`. Used by the unfused op path
+/// (SliceCols/ConcatCols) and the lazy param-grad packing.
+pub fn copy_col_slice(
+    src: &[f32],
+    src_stride: usize,
+    src_col: usize,
+    rows: usize,
+    cols: usize,
+    dst: &mut [f32],
+    tr: &MemTraffic,
+) {
+    debug_assert!(dst.len() >= rows * cols);
+    for r in 0..rows {
+        let s = r * src_stride + src_col;
+        dst[r * cols..(r + 1) * cols].copy_from_slice(&src[s..s + cols]);
+    }
+    tr.add(rows * cols * 4);
+}
+
+/// Inverse of `copy_col_slice`: write a dense block into a column range.
+pub fn write_col_slice(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    dst: &mut [f32],
+    dst_stride: usize,
+    dst_col: usize,
+    tr: &MemTraffic,
+) {
+    for r in 0..rows {
+        let d = r * dst_stride + dst_col;
+        dst[d..d + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    tr.add(rows * cols * 4);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let tr = MemTraffic::default();
+        let mut sb = StateBuffer::new(5, 3);
+        for v in 0..5 {
+            sb.row_mut(v).fill(v as f32);
+        }
+        let ids = [Some(4u32), None, Some(1)];
+        let mut block = vec![9.0; 9];
+        sb.gather(&ids, &mut block, &tr);
+        assert_eq!(block, vec![4., 4., 4., 0., 0., 0., 1., 1., 1.]);
+
+        let out_ids = [0u32, 2];
+        sb.scatter(&out_ids, &[7., 7., 7., 8., 8., 8.], &tr);
+        assert_eq!(sb.row(0), &[7., 7., 7.]);
+        assert_eq!(sb.row(2), &[8., 8., 8.]);
+        assert_eq!(tr.ops(), 2);
+        assert_eq!(tr.bytes(), (9 + 6) * 4);
+    }
+
+    #[test]
+    fn scatter_add_accumulates() {
+        let tr = MemTraffic::default();
+        let mut sb = StateBuffer::new(3, 2);
+        sb.scatter_add(&[Some(1), Some(1)], &[1., 2., 10., 20.], &tr);
+        assert_eq!(sb.row(1), &[11., 22.]);
+        assert_eq!(sb.row(0), &[0., 0.]);
+    }
+
+    #[test]
+    fn col_slice_copies() {
+        let tr = MemTraffic::default();
+        // 2 rows x 4 cols
+        let src = vec![0., 1., 2., 3., 10., 11., 12., 13.];
+        let mut dst = vec![0.0; 4];
+        copy_col_slice(&src, 4, 1, 2, 2, &mut dst, &tr);
+        assert_eq!(dst, vec![1., 2., 11., 12.]);
+
+        let mut back = vec![0.0; 8];
+        write_col_slice(&dst, 2, 2, &mut back, 4, 2, &tr);
+        assert_eq!(back, vec![0., 0., 1., 2., 0., 0., 11., 12.]);
+    }
+
+    #[test]
+    fn gather_cols_packs_h_part() {
+        let tr = MemTraffic::default();
+        let mut sb = StateBuffer::new(2, 4); // state = [c(2) | h(2)]
+        sb.row_mut(0).copy_from_slice(&[1., 2., 3., 4.]);
+        sb.row_mut(1).copy_from_slice(&[5., 6., 7., 8.]);
+        let mut dst = vec![0.0; 4];
+        sb.gather_cols(&[1, 0], 2, 2, &mut dst, &tr);
+        assert_eq!(dst, vec![7., 8., 3., 4.]);
+    }
+}

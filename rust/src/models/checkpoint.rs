@@ -1,0 +1,256 @@
+//! Model checkpointing: save/load full training state (cell params,
+//! embedding, head) to a self-describing binary format.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "CAVSCKPT" | version u32 | n_sections u32
+//! per section: name_len u32 | name bytes | n_tensors u32
+//!   per tensor: name_len u32 | name | rank u32 | dims u64* | f32 data
+//! ```
+//! No serde offline — the format is hand-rolled, versioned, and checked
+//! (magic, version, dim products) on load.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Model, ParamSet};
+
+const MAGIC: &[u8; 8] = b"CAVSCKPT";
+const VERSION: u32 = 1;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("checkpoint string too long ({n})");
+    }
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b).context("non-utf8 name in checkpoint")?)
+}
+
+fn write_tensor(w: &mut impl Write, name: &str, dims: &[usize], data: &[f32]) -> Result<()> {
+    write_str(w, name)?;
+    write_u32(w, dims.len() as u32)?;
+    for &d in dims {
+        write_u64(w, d as u64)?;
+    }
+    let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<(String, Vec<usize>, Vec<f32>)> {
+    let name = read_str(r)?;
+    let rank = read_u32(r)? as usize;
+    if rank > 8 {
+        bail!("tensor '{name}' has absurd rank {rank}");
+    }
+    let dims: Vec<usize> =
+        (0..rank).map(|_| read_u64(r).map(|v| v as usize)).collect::<Result<_>>()?;
+    let n: usize = dims.iter().product::<usize>().max(1);
+    if n > 1 << 30 {
+        bail!("tensor '{name}' too large ({n} elements)");
+    }
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((name, dims, data))
+}
+
+fn write_set(w: &mut impl Write, name: &str, set: &ParamSet) -> Result<()> {
+    write_str(w, name)?;
+    write_u32(w, set.len() as u32)?;
+    for i in 0..set.len() {
+        write_tensor(w, &set.names[i], &set.shapes[i], &set.host[i])?;
+    }
+    Ok(())
+}
+
+fn load_into_set(r: &mut impl Read, set: &mut ParamSet, what: &str) -> Result<()> {
+    let n = read_u32(r)? as usize;
+    if n != set.len() {
+        bail!("{what}: checkpoint has {n} tensors, model has {}", set.len());
+    }
+    for _ in 0..n {
+        let (name, dims, data) = read_tensor(r)?;
+        let i = set.index_of(&name).with_context(|| format!("{what} tensor {name}"))?;
+        if dims != set.shapes[i] {
+            bail!(
+                "{what} tensor '{name}': shape {dims:?} != model {:?}",
+                set.shapes[i]
+            );
+        }
+        set.set(&name, data)?;
+    }
+    Ok(())
+}
+
+/// Save a model's parameters (not optimizer slots) to `path`.
+pub fn save(model: &Model, path: &Path) -> Result<()> {
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    let n_sections = 2 + usize::from(model.head.is_some());
+    write_u32(&mut w, n_sections as u32)?;
+    write_set(&mut w, "cell", &model.params)?;
+    // embedding as a single-tensor section
+    write_str(&mut w, "embedding")?;
+    write_u32(&mut w, 1)?;
+    write_tensor(
+        &mut w,
+        "table",
+        &[model.embedding.vocab, model.embedding.dim],
+        &model.embedding.table,
+    )?;
+    if let Some(head) = &model.head {
+        write_set(&mut w, "head", head)?;
+    }
+    Ok(())
+}
+
+/// Load parameters saved by [`save`] into a structurally-matching model.
+pub fn load(model: &mut Model, path: &Path) -> Result<()> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a cavs checkpoint (bad magic)");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let n_sections = read_u32(&mut r)? as usize;
+    for _ in 0..n_sections {
+        let section = read_str(&mut r)?;
+        match section.as_str() {
+            "cell" => load_into_set(&mut r, &mut model.params, "cell")?,
+            "embedding" => {
+                let n = read_u32(&mut r)?;
+                if n != 1 {
+                    bail!("embedding section must have exactly 1 tensor");
+                }
+                let (_, dims, data) = read_tensor(&mut r)?;
+                if dims != [model.embedding.vocab, model.embedding.dim] {
+                    bail!(
+                        "embedding shape {dims:?} != model [{}, {}]",
+                        model.embedding.vocab,
+                        model.embedding.dim
+                    );
+                }
+                model.embedding.table = data;
+            }
+            "head" => {
+                let head = model
+                    .head
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint has a head, model has none"))?;
+                load_into_set(&mut r, head, "head")?;
+            }
+            other => bail!("unknown checkpoint section '{other}'"),
+        }
+    }
+    model.invalidate_buffers();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{Cell, HeadKind};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cavs-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let m = Model::new(Cell::TreeLstm, 8, 11, HeadKind::ClassifierAtRoot, 5, 77);
+        let p = tmp("roundtrip.bin");
+        save(&m, &p).unwrap();
+        let mut loaded =
+            Model::new(Cell::TreeLstm, 8, 11, HeadKind::ClassifierAtRoot, 5, 0);
+        // different seed => different params before load
+        assert_ne!(m.params.host[0], loaded.params.host[0]);
+        load(&mut loaded, &p).unwrap();
+        assert_eq!(m.params.host, loaded.params.host);
+        assert_eq!(m.embedding.table, loaded.embedding.table);
+        assert_eq!(
+            m.head.as_ref().unwrap().host,
+            loaded.head.as_ref().unwrap().host
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let m = Model::new(Cell::Lstm, 8, 11, HeadKind::LmPerVertex, 11, 1);
+        let p = tmp("mismatch.bin");
+        save(&m, &p).unwrap();
+        let mut other = Model::new(Cell::Lstm, 16, 11, HeadKind::LmPerVertex, 11, 1);
+        assert!(load(&mut other, &p).is_err());
+        let mut wrong_cell =
+            Model::new(Cell::TreeFc, 8, 11, HeadKind::SumRootState, 0, 1);
+        assert!(load(&mut wrong_cell, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        let mut m = Model::new(Cell::Lstm, 8, 11, HeadKind::LmPerVertex, 11, 1);
+        assert!(load(&mut m, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn headless_model_roundtrip() {
+        let m = Model::new(Cell::TreeFc, 8, 11, HeadKind::SumRootState, 0, 5);
+        let p = tmp("headless.bin");
+        save(&m, &p).unwrap();
+        let mut loaded = Model::new(Cell::TreeFc, 8, 11, HeadKind::SumRootState, 0, 9);
+        load(&mut loaded, &p).unwrap();
+        assert_eq!(m.params.host, loaded.params.host);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,446 @@
+//! Model definitions: cell descriptors, parameter stores (host vectors +
+//! cached device buffers), embedding tables (the `pull` source) and heads
+//! (the `push` consumers).
+
+pub mod checkpoint;
+
+use std::cell::RefCell;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::vertex::{programs, Program};
+
+/// The cells shipped with the repo (paper §5: Fixed/Var-LSTM, Tree-FC,
+/// Tree-LSTM; GRU as the §2.1 extension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cell {
+    Lstm,
+    TreeLstm,
+    TreeFc,
+    Gru,
+}
+
+impl Cell {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cell::Lstm => "lstm",
+            Cell::TreeLstm => "treelstm",
+            Cell::TreeFc => "treefc",
+            Cell::Gru => "gru",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Cell> {
+        Ok(match s {
+            "lstm" => Cell::Lstm,
+            "treelstm" => Cell::TreeLstm,
+            "treefc" => Cell::TreeFc,
+            "gru" => Cell::Gru,
+            _ => bail!("unknown cell '{s}'"),
+        })
+    }
+
+    /// Child slots the cell consumes (gather arity).
+    pub fn arity(self) -> usize {
+        match self {
+            Cell::Lstm | Cell::Gru => 1,
+            Cell::TreeLstm | Cell::TreeFc => 2,
+        }
+    }
+
+    /// Columns of the scattered state.
+    pub fn state_cols(self, h: usize) -> usize {
+        match self {
+            Cell::Lstm | Cell::TreeLstm => 2 * h,
+            Cell::TreeFc | Cell::Gru => h,
+        }
+    }
+
+    /// Column offset/width of the "h" part of the state that heads read.
+    pub fn h_part(self, h: usize) -> (usize, usize) {
+        match self {
+            Cell::Lstm | Cell::TreeLstm => (h, h),
+            Cell::TreeFc | Cell::Gru => (0, h),
+        }
+    }
+
+    /// Gate-preactivation columns emitted by bwd_data (lazy batching).
+    pub fn gates_cols(self, h: usize) -> usize {
+        match self {
+            Cell::Lstm => 4 * h,
+            Cell::TreeLstm => 5 * h,
+            Cell::TreeFc => h,
+            Cell::Gru => 3 * h,
+        }
+    }
+
+    /// Parameter (name, shape) list — must mirror aot.py's argument order.
+    pub fn param_shapes(self, h: usize) -> Vec<(&'static str, Vec<usize>)> {
+        match self {
+            Cell::Lstm => vec![
+                ("W", vec![h, 4 * h]),
+                ("U", vec![h, 4 * h]),
+                ("b", vec![4 * h]),
+            ],
+            Cell::TreeLstm => vec![
+                ("Wiou", vec![h, 3 * h]),
+                ("Wf", vec![h, h]),
+                ("Uiou", vec![h, 3 * h]),
+                ("Uf", vec![h, h]),
+                ("biou", vec![3 * h]),
+                ("bf", vec![h]),
+            ],
+            Cell::TreeFc => vec![
+                ("Wx", vec![h, h]),
+                ("Wl", vec![h, h]),
+                ("Wr", vec![h, h]),
+                ("b", vec![h]),
+            ],
+            Cell::Gru => vec![
+                ("W", vec![h, 3 * h]),
+                ("U", vec![h, 3 * h]),
+                ("b", vec![3 * h]),
+            ],
+        }
+    }
+
+    /// The op-graph of F (used by the §3.5 analyses and the unfused path).
+    pub fn program(self, h: usize) -> Option<Program> {
+        match self {
+            Cell::Lstm => Some(programs::lstm_program(h)),
+            Cell::TreeLstm => Some(programs::treelstm_program(h)),
+            Cell::TreeFc => Some(programs::treefc_program(h)),
+            Cell::Gru => None, // fused-only extension
+        }
+    }
+
+    /// Whether aot.py emits bwd_data/param_grad artifacts for this cell.
+    pub fn has_lazy_bwd(self) -> bool {
+        !matches!(self, Cell::Gru)
+    }
+}
+
+/// A named set of tensors with host storage, gradient accumulators, and a
+/// lazily-uploaded device-buffer cache (invalidated by optimizer steps so
+/// parameters are uploaded once per step, not once per task).
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub host: Vec<Vec<f32>>,
+    pub grad: Vec<Vec<f32>>,
+    bufs: RefCell<Vec<Option<xla::PjRtBuffer>>>,
+}
+
+impl ParamSet {
+    pub fn zeros(shapes: &[(&str, Vec<usize>)]) -> ParamSet {
+        let names = shapes.iter().map(|(n, _)| n.to_string()).collect();
+        let shp: Vec<Vec<usize>> = shapes.iter().map(|(_, s)| s.clone()).collect();
+        let host = shp
+            .iter()
+            .map(|s| vec![0.0; s.iter().product::<usize>().max(1)])
+            .collect::<Vec<_>>();
+        let grad = host.clone();
+        let n = shp.len();
+        ParamSet {
+            names,
+            shapes: shp,
+            host,
+            grad,
+            bufs: RefCell::new((0..n).map(|_| None).collect()),
+        }
+    }
+
+    /// Gaussian init (scale 0.08, matching python/compile/model.py).
+    pub fn init(mut self, rng: &mut Rng, scale: f32) -> ParamSet {
+        for t in &mut self.host {
+            for v in t.iter_mut() {
+                *v = rng.normal_f32(scale);
+            }
+        }
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.host.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.host.is_empty()
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.host.iter().map(Vec::len).sum()
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("no parameter '{name}'"))
+    }
+
+    pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        let i = self.index_of(name)?;
+        if data.len() != self.host[i].len() {
+            bail!(
+                "param '{name}': {} elements, expected {}",
+                data.len(),
+                self.host[i].len()
+            );
+        }
+        self.host[i] = data;
+        self.bufs.borrow_mut()[i] = None;
+        Ok(())
+    }
+
+    /// Run `f` with the (freshly uploaded or cached) device buffers of all
+    /// tensors, in declaration order.
+    pub fn with_buffers<R>(
+        &self,
+        rt: &Runtime,
+        f: impl FnOnce(&[&xla::PjRtBuffer]) -> Result<R>,
+    ) -> Result<R> {
+        {
+            let mut bufs = self.bufs.borrow_mut();
+            for i in 0..self.host.len() {
+                if bufs[i].is_none() {
+                    bufs[i] = Some(rt.upload_f32(&self.host[i], &self.shapes[i])?);
+                }
+            }
+        }
+        let bufs = self.bufs.borrow();
+        let refs: Vec<&xla::PjRtBuffer> =
+            bufs.iter().map(|b| b.as_ref().unwrap()).collect();
+        f(&refs)
+    }
+
+    /// Drop cached buffers (after the optimizer mutates host values).
+    pub fn invalidate(&self) {
+        for b in self.bufs.borrow_mut().iter_mut() {
+            *b = None;
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        for g in &mut self.grad {
+            g.fill(0.0);
+        }
+    }
+
+    /// Accumulate a flat gradient into tensor `i`.
+    pub fn acc_grad(&mut self, i: usize, data: &[f32]) {
+        let g = &mut self.grad[i];
+        debug_assert_eq!(g.len(), data.len());
+        for (a, b) in g.iter_mut().zip(data) {
+            *a += *b;
+        }
+    }
+
+    /// Global gradient L2 norm (for clipping / diagnostics).
+    pub fn grad_norm(&self) -> f32 {
+        self.grad
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|x| x * x)
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+/// Embedding table: the external I/O behind `pull`. Lookup is a host row
+/// copy; gradients scatter-add into a dense accumulator.
+pub struct Embedding {
+    pub vocab: usize,
+    pub dim: usize,
+    pub table: Vec<f32>,
+    pub grad: Vec<f32>,
+}
+
+impl Embedding {
+    pub fn new(rng: &mut Rng, vocab: usize, dim: usize, scale: f32) -> Embedding {
+        let table = (0..vocab * dim).map(|_| rng.normal_f32(scale)).collect();
+        Embedding { vocab, dim, table, grad: vec![0.0; vocab * dim] }
+    }
+
+    pub fn row(&self, tok: i32) -> Option<&[f32]> {
+        if tok < 0 || tok as usize >= self.vocab {
+            return None;
+        }
+        let t = tok as usize;
+        Some(&self.table[t * self.dim..(t + 1) * self.dim])
+    }
+
+    pub fn acc_grad(&mut self, tok: i32, g: &[f32]) {
+        if tok < 0 || tok as usize >= self.vocab {
+            return;
+        }
+        let t = tok as usize;
+        for (a, b) in self.grad[t * self.dim..(t + 1) * self.dim]
+            .iter_mut()
+            .zip(g)
+        {
+            *a += *b;
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.fill(0.0);
+    }
+}
+
+/// Head placement: per-vertex LM head or root classifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeadKind {
+    /// softmax over `vocab` at every supervised vertex (labels >= 0)
+    LmPerVertex,
+    /// softmax over `n_classes` at each graph root
+    ClassifierAtRoot,
+    /// no head: synthetic objective = sum of root states (Tree-FC bench)
+    SumRootState,
+}
+
+/// A complete model: cell + parameters + embedding + head.
+pub struct Model {
+    pub cell: Cell,
+    pub h: usize,
+    pub params: ParamSet,
+    pub embedding: Embedding,
+    pub head_kind: HeadKind,
+    /// head artifact tag ("lmhead" or "clshead") + params (Wout, bout)
+    pub head: Option<ParamSet>,
+    pub head_tag: &'static str,
+    pub head_vocab: usize,
+}
+
+impl Model {
+    pub fn new(
+        cell: Cell,
+        h: usize,
+        vocab: usize,
+        head_kind: HeadKind,
+        head_vocab: usize,
+        seed: u64,
+    ) -> Model {
+        let mut rng = Rng::new(seed);
+        let params = ParamSet::zeros(&cell.param_shapes(h)).init(&mut rng, 0.08);
+        let embedding = Embedding::new(&mut rng, vocab, h, 0.5);
+        let (head, head_tag) = match head_kind {
+            HeadKind::SumRootState => (None, ""),
+            HeadKind::LmPerVertex => (
+                Some(
+                    ParamSet::zeros(&[
+                        ("Wout", vec![h, head_vocab]),
+                        ("bout", vec![head_vocab]),
+                    ])
+                    .init(&mut rng, 0.2),
+                ),
+                "lmhead",
+            ),
+            HeadKind::ClassifierAtRoot => (
+                Some(
+                    ParamSet::zeros(&[
+                        ("Wout", vec![h, head_vocab]),
+                        ("bout", vec![head_vocab]),
+                    ])
+                    .init(&mut rng, 0.2),
+                ),
+                "clshead",
+            ),
+        };
+        Model {
+            cell,
+            h,
+            params,
+            embedding,
+            head_kind,
+            head,
+            head_tag,
+            head_vocab,
+        }
+    }
+
+    pub fn n_parameters(&self) -> usize {
+        self.params.n_elements()
+            + self.embedding.table.len()
+            + self.head.as_ref().map_or(0, ParamSet::n_elements)
+    }
+
+    pub fn zero_grads(&mut self) {
+        self.params.zero_grad();
+        self.embedding.zero_grad();
+        if let Some(h) = &mut self.head {
+            h.zero_grad();
+        }
+    }
+
+    pub fn invalidate_buffers(&self) {
+        self.params.invalidate();
+        if let Some(h) = &self.head {
+            h.invalidate();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_descriptor_consistency() {
+        for c in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc, Cell::Gru] {
+            let h = 16;
+            assert_eq!(Cell::from_name(c.name()).unwrap(), c);
+            let (off, len) = c.h_part(h);
+            assert!(off + len <= c.state_cols(h));
+            if let Some(p) = c.program(h) {
+                assert_eq!(p.state_cols, c.state_cols(h));
+                assert_eq!(p.n_children, c.arity());
+            }
+        }
+        assert!(Cell::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn paramset_roundtrip() {
+        let mut p = ParamSet::zeros(&[("W", vec![2, 3]), ("b", vec![3])]);
+        assert_eq!(p.n_elements(), 9);
+        p.set("b", vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(p.host[p.index_of("b").unwrap()], vec![1.0, 2.0, 3.0]);
+        assert!(p.set("b", vec![0.0; 5]).is_err());
+        assert!(p.index_of("nope").is_err());
+    }
+
+    #[test]
+    fn grads_accumulate_and_zero() {
+        let mut p = ParamSet::zeros(&[("W", vec![2])]);
+        p.acc_grad(0, &[1.0, 2.0]);
+        p.acc_grad(0, &[0.5, 0.5]);
+        assert_eq!(p.grad[0], vec![1.5, 2.5]);
+        assert!((p.grad_norm() - (1.5f32 * 1.5 + 2.5 * 2.5).sqrt()).abs() < 1e-6);
+        p.zero_grad();
+        assert_eq!(p.grad[0], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn embedding_lookup_and_grad() {
+        let mut rng = Rng::new(1);
+        let mut e = Embedding::new(&mut rng, 4, 3, 0.1);
+        assert!(e.row(-1).is_none());
+        assert!(e.row(4).is_none());
+        let r2 = e.row(2).unwrap().to_vec();
+        e.acc_grad(2, &[1.0, 1.0, 1.0]);
+        e.acc_grad(-1, &[9.0, 9.0, 9.0]); // ignored
+        assert_eq!(&e.grad[6..9], &[1.0, 1.0, 1.0]);
+        assert_eq!(e.row(2).unwrap(), &r2[..]); // table unchanged
+    }
+
+    #[test]
+    fn model_param_counts() {
+        let m = Model::new(Cell::TreeLstm, 8, 20, HeadKind::ClassifierAtRoot, 5, 3);
+        // treelstm: 2*(h*3h) + 2*(h*h) + 3h + h ; emb: 20*8 ; head: 8*5+5
+        let expect = 2 * (8 * 24) + 2 * 64 + 24 + 8 + 160 + 45;
+        assert_eq!(m.n_parameters(), expect);
+    }
+}

@@ -1,0 +1,213 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the Rust runtime (which marshals arguments by it).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub cell: String,
+    pub h: usize,
+    pub bucket: usize,
+    pub vocab: Option<usize>,
+    pub t: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub quick_vocab: usize,
+    pub ncls: usize,
+    pub pg_bucket: usize,
+    by_name: HashMap<String, ArtifactMeta>,
+    /// (cell, kind, h) -> sorted buckets available
+    buckets: BTreeMap<(String, String, usize), Vec<usize>>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("expected array of specs"))?;
+    arr.iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            let dtype = match e.get("dtype").and_then(Json::as_str) {
+                Some("i32") => DType::I32,
+                _ => DType::F32,
+            };
+            let shape = e
+                .get("shape")
+                .map(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("spec missing shape"))?;
+            Ok(TensorSpec { name, dtype, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.get("version").and_then(Json::as_usize) != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut by_name = HashMap::new();
+        let mut buckets: BTreeMap<(String, String, usize), Vec<usize>> =
+            BTreeMap::new();
+        for e in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: dir.join(
+                    e.get("file").and_then(Json::as_str).unwrap_or(""),
+                ),
+                kind: e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                cell: e
+                    .get("cell")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                h: e.get("h").and_then(Json::as_usize).unwrap_or(0),
+                bucket: e.get("bucket").and_then(Json::as_usize).unwrap_or(0),
+                vocab: e.get("vocab").and_then(Json::as_usize),
+                t: e.get("t").and_then(Json::as_usize),
+                inputs: tensor_specs(
+                    e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?,
+                )?,
+                outputs: tensor_specs(
+                    e.get("outputs").ok_or_else(|| anyhow!("no outputs"))?,
+                )?,
+            };
+            buckets
+                .entry((meta.cell.clone(), meta.kind.clone(), meta.h))
+                .or_default()
+                .push(meta.bucket);
+            by_name.insert(name, meta);
+        }
+        for v in buckets.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: j.get("vocab").and_then(Json::as_usize).unwrap_or(1000),
+            quick_vocab: j
+                .get("quick_vocab")
+                .and_then(Json::as_usize)
+                .unwrap_or(50),
+            ncls: j.get("ncls").and_then(Json::as_usize).unwrap_or(5),
+            pg_bucket: j
+                .get("pg_bucket")
+                .and_then(Json::as_usize)
+                .unwrap_or(1024),
+            by_name,
+            buckets,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.by_name.keys()
+    }
+
+    /// Buckets available for (cell, kind, h), ascending.
+    pub fn buckets(&self, cell: &str, kind: &str, h: usize) -> &[usize] {
+        self.buckets
+            .get(&(cell.to_string(), kind.to_string(), h))
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// Smallest available bucket >= m, or the max bucket (chunking) if m
+    /// exceeds every bucket.
+    pub fn bucket_for(
+        &self,
+        cell: &str,
+        kind: &str,
+        h: usize,
+        m: usize,
+    ) -> Result<usize> {
+        let bs = self.buckets(cell, kind, h);
+        if bs.is_empty() {
+            bail!("no buckets for ({cell}, {kind}, h={h})");
+        }
+        Ok(*bs.iter().find(|&&b| b >= m).unwrap_or(bs.last().unwrap()))
+    }
+
+    pub fn max_bucket(&self, cell: &str, kind: &str, h: usize) -> usize {
+        self.buckets(cell, kind, h).last().copied().unwrap_or(0)
+    }
+
+    /// Canonical artifact naming (mirrors aot.py).
+    pub fn cell_name(cell: &str, kind: &str, h: usize, bucket: usize) -> String {
+        let tag = match kind {
+            "cell_fwd" => "fwd",
+            "cell_bwd" => "bwd",
+            "cell_bwd_data" => "bwdd",
+            other => other,
+        };
+        format!("{cell}_{tag}_h{h}_b{bucket}")
+    }
+}

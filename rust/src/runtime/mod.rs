@@ -1,0 +1,246 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client (lazily,
+//! cached), and executes them from the L3 hot path.
+//!
+//! One PJRT execution == one "kernel launch" in the paper's cost model;
+//! the runtime keeps counters so benches and tests can reason about launch
+//! counts and host<->device traffic.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod manifest;
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+
+/// Argument to an artifact execution. Params are usually pre-uploaded
+/// `Buf`s (uploaded once per optimizer step); activations are host slices.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Buf(&'a xla::PjRtBuffer),
+}
+
+/// Execution statistics (the paper's cost-model observables).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub bytes_h2d: u64,
+    pub bytes_d2h: u64,
+    pub exec_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    executions: Cell<u64>,
+    compiles: Cell<u64>,
+    bytes_h2d: Cell<u64>,
+    bytes_d2h: Cell<u64>,
+    exec_seconds: Cell<f64>,
+    compile_seconds: Cell<f64>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (with manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            executions: Cell::new(0),
+            compiles: Cell::new(0),
+            bytes_h2d: Cell::new(0),
+            bytes_d2h: Cell::new(0),
+            exec_seconds: Cell::new(0.0),
+            compile_seconds: Cell::new(0.0),
+        })
+    }
+
+    /// Default artifacts location: $CAVS_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Runtime> {
+        let dir = std::env::var("CAVS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::new(Path::new(&dir))
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        RuntimeStats {
+            executions: self.executions.get(),
+            compiles: self.compiles.get(),
+            bytes_h2d: self.bytes_h2d.get(),
+            bytes_d2h: self.bytes_d2h.get(),
+            exec_seconds: self.exec_seconds.get(),
+            compile_seconds: self.compile_seconds.get(),
+        }
+    }
+
+    pub fn reset_stats(&self) {
+        self.executions.set(0);
+        self.compiles.set(0);
+        self.bytes_h2d.set(0);
+        self.bytes_d2h.set(0);
+        self.exec_seconds.set(0.0);
+        self.compile_seconds.set(0.0);
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        self.compiles.set(self.compiles.get() + 1);
+        self.compile_seconds
+            .set(self.compile_seconds.get() + t0.elapsed().as_secs_f64());
+        let e = Rc::new(Executable { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Upload a host f32 tensor once; the returned buffer can be passed to
+    /// many subsequent executions (how model parameters avoid per-task
+    /// re-upload).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.bytes_h2d
+            .set(self.bytes_h2d.get() + (data.len() * 4) as u64);
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute an artifact. Returns the decomposed output literals in
+    /// manifest order. Shapes of host args are validated against the
+    /// manifest before launch.
+    pub fn run(&self, exe: &Executable, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        let meta = &exe.meta;
+        if args.len() != meta.inputs.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                meta.name,
+                meta.inputs.len(),
+                args.len()
+            );
+        }
+        // Marshal host slices into device buffers; reuse pre-uploaded ones.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut ptrs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&meta.inputs) {
+            match arg {
+                Arg::F32(data) => {
+                    if spec.dtype != DType::F32 {
+                        bail!("{}: arg {} dtype mismatch", meta.name, spec.name);
+                    }
+                    if data.len() != spec.elements() {
+                        bail!(
+                            "{}: arg {} has {} elements, expected {} {:?}",
+                            meta.name,
+                            spec.name,
+                            data.len(),
+                            spec.elements(),
+                            spec.shape
+                        );
+                    }
+                    self.bytes_h2d
+                        .set(self.bytes_h2d.get() + (data.len() * 4) as u64);
+                    owned.push(self.client.buffer_from_host_buffer(
+                        data,
+                        &spec.shape,
+                        None,
+                    )?);
+                }
+                Arg::I32(data) => {
+                    if spec.dtype != DType::I32 {
+                        bail!("{}: arg {} dtype mismatch", meta.name, spec.name);
+                    }
+                    if data.len() != spec.elements() {
+                        bail!(
+                            "{}: arg {} has {} elements, expected {}",
+                            meta.name,
+                            spec.name,
+                            data.len(),
+                            spec.elements()
+                        );
+                    }
+                    self.bytes_h2d
+                        .set(self.bytes_h2d.get() + (data.len() * 4) as u64);
+                    owned.push(self.client.buffer_from_host_buffer(
+                        data,
+                        &spec.shape,
+                        None,
+                    )?);
+                }
+                Arg::Buf(_) => {}
+            }
+        }
+        let mut owned_it = owned.iter();
+        for arg in args {
+            match arg {
+                Arg::Buf(b) => ptrs.push(b),
+                _ => ptrs.push(owned_it.next().unwrap()),
+            }
+        }
+
+        let t0 = Instant::now();
+        let result = exe.exe.execute_b(&ptrs)?;
+        // return_tuple=True => single tuple output buffer per replica.
+        let lit = result[0][0].to_literal_sync()?;
+        self.exec_seconds
+            .set(self.exec_seconds.get() + t0.elapsed().as_secs_f64());
+        self.executions.set(self.executions.get() + 1);
+        let outs = lit.to_tuple()?;
+        let d2h: usize = outs.iter().map(|l| l.size_bytes()).sum();
+        self.bytes_d2h.set(self.bytes_d2h.get() + d2h as u64);
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                meta.name,
+                meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Convenience: run by name with f32-slice outputs.
+    pub fn run_f32(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.load(name)?;
+        let outs = self.run(&exe, args)?;
+        outs.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// Copy a literal's contents into a target f32 slice (must match in size).
+pub fn literal_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to(dst)?;
+    Ok(())
+}

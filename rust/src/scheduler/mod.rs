@@ -1,0 +1,272 @@
+//! The Cavs scheduler (paper §3.2, Algorithm 1).
+//!
+//! Given a minibatch of input graphs, the batching policy groups all
+//! *activated* vertices (children evaluated) into batching tasks `V_t` via
+//! a breadth-first frontier sweep, chunks tasks to the artifact bucket
+//! range, and records them on a stack for the exactly-LIFO backward pass.
+
+use crate::graph::GraphBatch;
+use crate::util::bucket_for;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Alg. 1: batch the whole activated frontier per step.
+    Batched,
+    /// One vertex per task (the paper's "serial policy" ablation, §5.1).
+    Serial,
+}
+
+/// One batching task V_t: `verts.len() == m` vertices evaluated together,
+/// padded up to `bucket` rows for the shape-monomorphic artifact.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub verts: Vec<u32>,
+    pub bucket: usize,
+}
+
+impl Task {
+    pub fn m(&self) -> usize {
+        self.verts.len()
+    }
+
+    /// Padding waste of the bucket rounding, in rows.
+    pub fn pad(&self) -> usize {
+        self.bucket - self.verts.len()
+    }
+}
+
+/// Schedule summary (fed to the benches' overhead breakdowns).
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleStats {
+    pub n_tasks: usize,
+    pub n_vertices: usize,
+    pub padded_rows: usize,
+    pub max_task: usize,
+}
+
+/// Build the forward task list. The backward pass is `tasks.iter().rev()`
+/// — the stack S of Alg. 1.
+///
+/// This runs the *actual* frontier BFS of Alg. 1 (not the precomputed
+/// depth grouping): `indeg` counts unevaluated children per vertex;
+/// a vertex activates when its count reaches zero. A property test
+/// (rust/tests/proptests.rs) checks agreement with `GraphBatch::levels`.
+pub fn schedule(
+    batch: &GraphBatch,
+    policy: Policy,
+    buckets: &[usize],
+) -> Vec<Task> {
+    assert!(!buckets.is_empty(), "artifact bucket list is empty");
+    let max_bucket = *buckets.last().unwrap();
+    let n = batch.n_vertices;
+    let mut tasks = Vec::new();
+
+    match policy {
+        Policy::Serial => {
+            // per-graph topological order, one vertex per task — the
+            // unbatched dynamic-declaration execution order.
+            let levels = frontier_levels(batch);
+            let mut per_graph: Vec<Vec<u32>> = vec![Vec::new(); batch.n_graphs];
+            for level in &levels {
+                for &v in level {
+                    per_graph[batch.owner[v as usize] as usize].push(v);
+                }
+            }
+            for verts in per_graph {
+                for v in verts {
+                    tasks.push(Task { verts: vec![v], bucket: 1 });
+                }
+            }
+        }
+        Policy::Batched => {
+            for level in frontier_levels(batch) {
+                for chunk in level.chunks(max_bucket) {
+                    let m = chunk.len();
+                    let bucket = pick_bucket(m, buckets, max_bucket);
+                    tasks.push(Task { verts: chunk.to_vec(), bucket });
+                }
+            }
+        }
+    }
+    debug_assert_eq!(
+        tasks.iter().map(Task::m).sum::<usize>(),
+        n,
+        "every vertex scheduled exactly once"
+    );
+    tasks
+}
+
+/// The Alg. 1 BFS: repeatedly take all activated vertices as one level.
+pub fn frontier_levels(batch: &GraphBatch) -> Vec<Vec<u32>> {
+    let n = batch.n_vertices;
+    let arity = batch.arity;
+    let mut indeg = vec![0u32; n];
+    let mut parents_of: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for v in 0..n as u32 {
+        for slot in 0..arity {
+            if let Some(c) = batch.child(v, slot) {
+                indeg[v as usize] += 1;
+                parents_of[c as usize].push(v);
+            }
+        }
+    }
+    let mut frontier: Vec<u32> =
+        (0..n as u32).filter(|&v| indeg[v as usize] == 0).collect();
+    let mut levels = Vec::new();
+    let mut evaluated = 0usize;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            evaluated += 1;
+            for &p in &parents_of[v as usize] {
+                indeg[p as usize] -= 1;
+                if indeg[p as usize] == 0 {
+                    next.push(p);
+                }
+            }
+        }
+        levels.push(std::mem::take(&mut frontier));
+        frontier = next;
+    }
+    assert_eq!(evaluated, n, "cycle in merged batch graph");
+    levels
+}
+
+fn pick_bucket(m: usize, buckets: &[usize], max_bucket: usize) -> usize {
+    let want = bucket_for(m, max_bucket);
+    *buckets
+        .iter()
+        .find(|&&b| b >= want)
+        .unwrap_or(&max_bucket)
+}
+
+pub fn stats(tasks: &[Task]) -> ScheduleStats {
+    ScheduleStats {
+        n_tasks: tasks.len(),
+        n_vertices: tasks.iter().map(Task::m).sum(),
+        padded_rows: tasks.iter().map(Task::pad).sum(),
+        max_task: tasks.iter().map(Task::m).max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synth, GraphBatch, InputGraph};
+    use crate::util::rng::Rng;
+
+    const BUCKETS: &[usize] = &[1, 2, 4, 8, 16];
+
+    fn tree_batch(seed: u64, k: usize) -> (Vec<InputGraph>, usize) {
+        let mut rng = Rng::new(seed);
+        let graphs: Vec<InputGraph> = (0..k)
+            .map(|_| {
+                let leaves = 3 + rng.below(6);
+                synth::random_binary_tree(&mut rng, 20, leaves, 5)
+            })
+            .collect();
+        let total = graphs.iter().map(InputGraph::n).sum();
+        (graphs, total)
+    }
+
+    #[test]
+    fn batched_covers_every_vertex_once() {
+        let (graphs, total) = tree_batch(1, 6);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        let mut seen = vec![false; total];
+        for t in &tasks {
+            for &v in &t.verts {
+                assert!(!seen[v as usize], "vertex {v} scheduled twice");
+                seen[v as usize] = true;
+            }
+            assert!(t.bucket >= t.m());
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn batched_respects_dependencies() {
+        let (graphs, _) = tree_batch(2, 4);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        let mut done = vec![false; batch.n_vertices];
+        for t in &tasks {
+            for &v in &t.verts {
+                for slot in 0..2 {
+                    if let Some(c) = batch.child(v, slot) {
+                        assert!(done[c as usize], "child {c} not done before {v}");
+                    }
+                }
+            }
+            for &v in &t.verts {
+                done[v as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_equals_depth_levels() {
+        let (graphs, _) = tree_batch(3, 5);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let mut a = frontier_levels(&batch);
+        let mut b = batch.levels();
+        for l in a.iter_mut().chain(b.iter_mut()) {
+            l.sort_unstable();
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn serial_is_one_vertex_per_task() {
+        let (graphs, total) = tree_batch(4, 3);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let tasks = schedule(&batch, Policy::Serial, BUCKETS);
+        assert_eq!(tasks.len(), total);
+        assert!(tasks.iter().all(|t| t.m() == 1 && t.bucket == 1));
+        // dependencies still respected
+        let mut done = vec![false; batch.n_vertices];
+        for t in &tasks {
+            let v = t.verts[0];
+            for slot in 0..2 {
+                if let Some(c) = batch.child(v, slot) {
+                    assert!(done[c as usize]);
+                }
+            }
+            done[v as usize] = true;
+        }
+    }
+
+    #[test]
+    fn oversized_levels_are_chunked() {
+        // 40 single-vertex graphs -> frontier of 40 > max bucket 16
+        let graphs: Vec<InputGraph> =
+            (0..40).map(|i| InputGraph::chain(&[i], &[i + 1])).collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 1);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        assert_eq!(tasks.len(), 3); // 16 + 16 + 8
+        assert_eq!(tasks[0].m(), 16);
+        assert_eq!(tasks[2].m(), 8);
+        assert_eq!(tasks[2].bucket, 8);
+        let s = stats(&tasks);
+        assert_eq!(s.padded_rows, 0);
+        assert_eq!(s.max_task, 16);
+    }
+
+    #[test]
+    fn bucket_padding_accounted() {
+        let graphs: Vec<InputGraph> =
+            (0..5).map(|i| InputGraph::chain(&[i], &[i + 1])).collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 1);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].bucket, 8);
+        assert_eq!(stats(&tasks).padded_rows, 3);
+    }
+}

@@ -1,0 +1,210 @@
+//! Dynamic tensors (paper Fig. 6) — the memory-management primitive that
+//! keeps every batching task contiguous.
+//!
+//! A `DynamicTensor` wraps one large growable contiguous buffer plus a
+//! *view* `(bs, offset)` that the scheduler moves forward during the
+//! forward pass (one advance per batching task, paper Alg. 2 L21) and
+//! backward during the backward pass. All reads/writes of the execution
+//! engine go through the current view, so the batched kernels always see
+//! one dense `[bs, cols]` block.
+//!
+//! Offsets are tracked in **rows** (one row = one vertex slot, `cols`
+//! elements); the paper tracks raw elements — same arithmetic, fewer
+//! multiplications at the call sites.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct DynamicTensor {
+    /// Per-vertex shape (excluding the batch dimension), kept for
+    /// diagnostics; `cols` is its product.
+    pub shape: Vec<usize>,
+    pub cols: usize,
+    bs: usize,
+    offset_rows: usize,
+    buf: Vec<f32>,
+    high_water_rows: usize,
+}
+
+impl DynamicTensor {
+    pub fn new(shape: &[usize]) -> DynamicTensor {
+        let cols = shape.iter().product::<usize>().max(1);
+        DynamicTensor {
+            shape: shape.to_vec(),
+            cols,
+            bs: 0,
+            offset_rows: 0,
+            buf: Vec::new(),
+            high_water_rows: 0,
+        }
+    }
+
+    /// Set the batch size of the current view (scheduler does this at the
+    /// start of every batching task) and make sure the chunk is large
+    /// enough for the view.
+    pub fn set_bs(&mut self, bs: usize) {
+        self.bs = bs;
+        let need = (self.offset_rows + bs) * self.cols;
+        if self.buf.len() < need {
+            self.buf.resize(need, 0.0);
+        }
+        self.high_water_rows = self.high_water_rows.max(self.offset_rows + bs);
+    }
+
+    pub fn bs(&self) -> usize {
+        self.bs
+    }
+
+    pub fn offset_rows(&self) -> usize {
+        self.offset_rows
+    }
+
+    /// Advance the offset past the current view (end of a forward task).
+    pub fn advance(&mut self) {
+        self.offset_rows += self.bs;
+    }
+
+    /// Rewind the offset before a backward task of `bs` rows and set the
+    /// view size to it.
+    pub fn rewind(&mut self, bs: usize) -> Result<()> {
+        if self.offset_rows < bs {
+            bail!(
+                "dynamic tensor rewind underflow: offset {} < bs {}",
+                self.offset_rows,
+                bs
+            );
+        }
+        self.offset_rows -= bs;
+        self.bs = bs;
+        Ok(())
+    }
+
+    /// Reset for a new minibatch (offset back to 0; memory retained).
+    pub fn reset(&mut self) {
+        self.offset_rows = 0;
+        self.bs = 0;
+    }
+
+    /// The current `[bs, cols]` view.
+    pub fn view(&self) -> &[f32] {
+        let a = self.offset_rows * self.cols;
+        &self.buf[a..a + self.bs * self.cols]
+    }
+
+    pub fn view_mut(&mut self) -> &mut [f32] {
+        let a = self.offset_rows * self.cols;
+        let b = a + self.bs * self.cols;
+        &mut self.buf[a..b]
+    }
+
+    /// Zero the current view (pad rows of a partially-filled task).
+    pub fn zero_view(&mut self) {
+        self.view_mut().fill(0.0);
+    }
+
+    /// Row `r` of the current view.
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.bs);
+        let a = (self.offset_rows + r) * self.cols;
+        &self.buf[a..a + self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.bs);
+        let a = (self.offset_rows + r) * self.cols;
+        &mut self.buf[a..a + self.cols]
+    }
+
+    /// A historical view (used by lazy parameter grads to sweep the whole
+    /// minibatch): rows `[start, start+len)` regardless of current offset.
+    pub fn rows_abs(&self, start: usize, len: usize) -> &[f32] {
+        &self.buf[start * self.cols..(start + len) * self.cols]
+    }
+
+    /// Total rows ever written this minibatch (== Σ task buckets).
+    pub fn high_water_rows(&self) -> usize {
+        self.high_water_rows
+    }
+
+    pub fn reset_high_water(&mut self) {
+        self.high_water_rows = 0;
+    }
+
+    /// Bytes currently retained by the chunk.
+    pub fn capacity_bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_backward_offset_choreography() {
+        // Three tasks of bucket sizes 4, 2, 1 — like Alg. 2.
+        let mut t = DynamicTensor::new(&[3]);
+        let buckets = [4usize, 2, 1];
+        for (i, &b) in buckets.iter().enumerate() {
+            t.set_bs(b);
+            for r in 0..b {
+                t.row_mut(r).fill((i * 10 + r) as f32);
+            }
+            t.advance();
+        }
+        assert_eq!(t.offset_rows(), 7);
+        // Backward: exact reverse
+        for (i, &b) in buckets.iter().enumerate().rev() {
+            t.rewind(b).unwrap();
+            for r in 0..b {
+                assert_eq!(t.row(r)[0], (i * 10 + r) as f32);
+            }
+        }
+        assert_eq!(t.offset_rows(), 0);
+    }
+
+    #[test]
+    fn rewind_underflow_is_error() {
+        let mut t = DynamicTensor::new(&[2]);
+        t.set_bs(2);
+        t.advance();
+        assert!(t.rewind(3).is_err());
+        assert!(t.rewind(2).is_ok());
+    }
+
+    #[test]
+    fn views_are_contiguous_and_disjoint() {
+        let mut t = DynamicTensor::new(&[2, 2]);
+        assert_eq!(t.cols, 4);
+        t.set_bs(2);
+        t.view_mut().fill(1.0);
+        t.advance();
+        t.set_bs(3);
+        t.view_mut().fill(2.0);
+        // first task's rows untouched
+        assert_eq!(t.rows_abs(0, 2), &[1.0f32; 8][..]);
+        assert_eq!(t.rows_abs(2, 3), &[2.0f32; 12][..]);
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let mut t = DynamicTensor::new(&[8]);
+        for _ in 0..100 {
+            t.set_bs(16);
+            t.advance();
+        }
+        assert_eq!(t.high_water_rows(), 1600);
+        assert_eq!(t.capacity_bytes(), 1600 * 8 * 4);
+    }
+
+    #[test]
+    fn reset_keeps_capacity() {
+        let mut t = DynamicTensor::new(&[4]);
+        t.set_bs(32);
+        t.advance();
+        let cap = t.capacity_bytes();
+        t.reset();
+        assert_eq!(t.offset_rows(), 0);
+        assert_eq!(t.capacity_bytes(), cap);
+    }
+}

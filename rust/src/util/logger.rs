@@ -1,0 +1,53 @@
+//! Tiny leveled logger (no env_logger offline). `CAVS_LOG=debug|info|warn`
+//! controls verbosity; defaults to `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+pub static START: Lazy<Instant> = Lazy::new(Instant::now);
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=warn 2=info 3=debug
+
+pub fn init() {
+    Lazy::force(&START);
+    let lvl = match std::env::var("CAVS_LOG").as_deref() {
+        Ok("off") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2,
+    };
+    LEVEL.store(lvl, Ordering::Relaxed);
+}
+
+pub fn enabled(level: u8) -> bool {
+    LEVEL.load(Ordering::Relaxed) >= level
+}
+
+pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let t = START.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(2, "info", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(1, "warn", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(3, "debug", format_args!($($arg)*))
+    };
+}

@@ -1,0 +1,36 @@
+//! Hand-rolled substrates: JSON parsing, RNG, logging, statistics and a
+//! tiny property-testing driver.
+//!
+//! This environment has no network access to crates.io, so everything the
+//! coordinator needs beyond the `xla` crate's own dependency tree is built
+//! here from scratch (see DESIGN.md §3).
+
+pub mod json;
+pub mod logger;
+pub mod propcheck;
+pub mod rng;
+pub mod trace;
+pub mod stats;
+
+/// Round `m` up to the next power-of-two bucket, capped at `max_bucket`.
+/// Batching tasks larger than `max_bucket` are chunked by the scheduler.
+pub fn bucket_for(m: usize, max_bucket: usize) -> usize {
+    debug_assert!(m >= 1);
+    let b = m.next_power_of_two();
+    b.min(max_bucket)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rounds_up() {
+        assert_eq!(bucket_for(1, 1024), 1);
+        assert_eq!(bucket_for(3, 1024), 4);
+        assert_eq!(bucket_for(4, 1024), 4);
+        assert_eq!(bucket_for(5, 1024), 8);
+        assert_eq!(bucket_for(1000, 1024), 1024);
+        assert_eq!(bucket_for(5000, 1024), 1024);
+    }
+}

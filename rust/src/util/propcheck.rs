@@ -1,0 +1,64 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random
+//! seeds; on failure it re-reports the failing seed so the case can be
+//! replayed deterministically (`CAVS_PROP_SEED=<seed>` pins a single case,
+//! `CAVS_PROP_CASES=<n>` scales effort).
+
+use super::rng::Rng;
+
+pub fn cases_from_env(default: usize) -> usize {
+    std::env::var("CAVS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut prop: F) {
+    if let Ok(s) = std::env::var("CAVS_PROP_SEED") {
+        let seed: u64 = s.parse().expect("CAVS_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    let cases = cases_from_env(cases);
+    for case in 0..cases {
+        // decorrelate consecutive seeds
+        let seed = (case as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0xC0FFEE;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' FAILED at case {case} \
+                 (replay with CAVS_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        check("count", 17, |_rng| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    fn failure_reports_seed() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("boom", 5, |rng| {
+                assert!(rng.f64() < 2.0); // never fails
+                panic!("expected");
+            });
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Measurement statistics for the bench harness (no criterion offline):
+//! warmup + repetition loops, mean/median/stddev/min, and human-readable
+//! duration formatting.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean_s: mean,
+            median_s: median,
+            stddev_s: var.sqrt(),
+            min_s: sorted[0],
+            max_s: sorted[n - 1],
+        }
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `reps` measured repetitions.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from_samples(&samples)
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Accumulates wall-time into named phases; the instrument behind the
+/// paper's "graph construction vs computation" and "memory ops vs
+/// computation" breakdowns (Fig. 9, Tables 1–2).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    pub construction_s: f64,
+    pub scheduling_s: f64,
+    pub memory_s: f64,
+    pub compute_s: f64,
+    pub head_s: f64,
+    pub optimizer_s: f64,
+    pub other_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Construction,
+    Scheduling,
+    Memory,
+    Compute,
+    Head,
+    Optimizer,
+    Other,
+}
+
+impl PhaseTimer {
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        let s = d.as_secs_f64();
+        match phase {
+            Phase::Construction => self.construction_s += s,
+            Phase::Scheduling => self.scheduling_s += s,
+            Phase::Memory => self.memory_s += s,
+            Phase::Compute => self.compute_s += s,
+            Phase::Head => self.head_s += s,
+            Phase::Optimizer => self.optimizer_s += s,
+            Phase::Other => self.other_s += s,
+        }
+    }
+
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(phase, t0.elapsed());
+        r
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.construction_s
+            + self.scheduling_s
+            + self.memory_s
+            + self.compute_s
+            + self.head_s
+            + self.optimizer_s
+            + self.other_s
+    }
+
+    pub fn merge(&mut self, o: &PhaseTimer) {
+        self.construction_s += o.construction_s;
+        self.scheduling_s += o.scheduling_s;
+        self.memory_s += o.memory_s;
+        self.compute_s += o.compute_s;
+        self.head_s += o.head_s;
+        self.optimizer_s += o.optimizer_s;
+        self.other_s += o.other_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean_s - 2.5).abs() < 1e-12);
+        assert!((s.median_s - 2.5).abs() < 1e-12);
+        assert!((s.min_s - 1.0).abs() < 1e-12);
+        assert!((s.max_s - 4.0).abs() < 1e-12);
+        let expected_sd = (5.0f64 / 3.0).sqrt();
+        assert!((s.stddev_s - expected_sd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::default();
+        t.add(Phase::Compute, Duration::from_millis(5));
+        t.add(Phase::Compute, Duration::from_millis(5));
+        t.add(Phase::Memory, Duration::from_millis(2));
+        assert!((t.compute_s - 0.010).abs() < 1e-9);
+        assert!((t.total_s() - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(2.0).ends_with('s'));
+        assert!(fmt_duration(0.002).ends_with("ms"));
+        assert!(fmt_duration(2e-6).ends_with("µs"));
+    }
+}

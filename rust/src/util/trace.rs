@@ -1,0 +1,136 @@
+//! Chrome-trace (about://tracing / Perfetto) event recording for the
+//! execution engine — the profiling tool behind the §Perf iteration log.
+//!
+//! Enable with `CAVS_TRACE=/path/out.json`; spans are recorded per
+//! batching task / artifact execution / memory phase and written as a
+//! Chrome `traceEvents` JSON array on flush.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+
+#[derive(Debug, Clone)]
+struct Event {
+    name: String,
+    cat: &'static str,
+    ts_us: f64,
+    dur_us: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: RefCell<Vec<Event>>,
+    enabled: bool,
+    path: Option<String>,
+}
+
+impl Trace {
+    /// From the environment: enabled iff CAVS_TRACE is set.
+    pub fn from_env() -> Trace {
+        let path = std::env::var("CAVS_TRACE").ok();
+        Trace { events: RefCell::new(Vec::new()), enabled: path.is_some(), path }
+    }
+
+    pub fn disabled() -> Trace {
+        Trace::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Begin a span; finish it by dropping the returned guard value into
+    /// [`Trace::end`].
+    pub fn begin(&self) -> Option<Instant> {
+        self.enabled.then(Instant::now)
+    }
+
+    pub fn end(&self, start: Option<Instant>, cat: &'static str, name: impl Into<String>) {
+        if let Some(t0) = start {
+            let ts = t0.duration_since(*EPOCH).as_secs_f64() * 1e6;
+            let dur = t0.elapsed().as_secs_f64() * 1e6;
+            self.events.borrow_mut().push(Event {
+                name: name.into(),
+                cat,
+                ts_us: ts,
+                dur_us: dur,
+            });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.borrow().is_empty()
+    }
+
+    /// Render the Chrome trace JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let events = self.events.borrow();
+        for (i, e) in events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":{:?},\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\
+                 \"tid\":1,\"ts\":{:.1},\"dur\":{:.1}}}",
+                e.name, e.cat, e.ts_us, e.dur_us
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write to the CAVS_TRACE path (no-op when disabled).
+    pub fn flush(&self) -> std::io::Result<()> {
+        if let Some(p) = &self.path {
+            std::fs::write(p, self.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = Trace::disabled();
+        let g = t.begin();
+        assert!(g.is_none());
+        t.end(g, "compute", "task");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn events_render_as_chrome_json() {
+        let t = Trace {
+            events: RefCell::new(Vec::new()),
+            enabled: true,
+            path: None,
+        };
+        let g = t.begin();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.end(g, "compute", "fwd:treelstm b=4");
+        let g2 = t.begin();
+        t.end(g2, "memory", "gather");
+        assert_eq!(t.len(), 2);
+        let j = t.to_json();
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.contains("fwd:treelstm b=4"));
+        assert!(j.contains("\"ph\":\"X\""));
+        // parses back with our own JSON parser
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("traceEvents").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+}

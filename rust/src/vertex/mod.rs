@@ -1,0 +1,304 @@
+//! The vertex function `F` as a small static dataflow graph (paper §3.1,
+//! Fig. 7), plus the §3.5 static analyses that the execution engine
+//! consumes:
+//!
+//! * **fusion detection** — union-find over chains of element-wise
+//!   operators; each fuse-able group can be replaced by one fused kernel
+//!   (in this repo: the whole-cell fused Pallas artifact),
+//! * **eager/lazy classification** (Proposition 2) — eager ops do not
+//!   depend on `gather` (they can run before child results arrive, on a
+//!   second stream); lazy ops do not feed `scatter` (their execution can
+//!   be deferred past all batching tasks),
+//! * structural **auto-differentiation** metadata (gather↔scatter,
+//!   pull↔push duality, §3.4).
+//!
+//! The default engine executes F through the fused whole-cell artifact;
+//! the `fusion=false` ablation interprets this op graph node-by-node, one
+//! PJRT execution per operator (one "kernel launch" per op, like the
+//! paper's unfused GPU baseline).
+
+pub mod programs;
+
+use std::collections::BTreeSet;
+
+/// Op kinds. `param` indexes into the model's parameter list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpKind {
+    /// gather(slot): child state -> dense task block
+    Gather { slot: usize },
+    /// pull(): external input (embedding row / upstream connector)
+    Pull,
+    /// scatter: publish this vertex's state for parents
+    Scatter,
+    /// push: publish to the external connector (heads read it)
+    Push,
+    /// x @ P (P is a model parameter)
+    MatMul { param: usize },
+    /// x + b (broadcast bias parameter)
+    AddBias { param: usize },
+    Add,
+    Mul,
+    Sigmoid,
+    Tanh,
+    /// take columns [start, start+len) of the input (host memcpy)
+    SliceCols { start: usize, len: usize },
+    /// concatenate inputs along columns (host memcpy)
+    ConcatCols,
+}
+
+impl OpKind {
+    /// Element-wise ops are the fusion candidates (§3.5: "+, -, ×, ÷,
+    /// tanh, sigmoid").
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, OpKind::Add | OpKind::Mul | OpKind::Sigmoid | OpKind::Tanh)
+    }
+
+    /// The §3.4 adjoint duality for the four message-passing primitives.
+    pub fn adjoint_primitive(&self) -> Option<OpKind> {
+        match self {
+            OpKind::Gather { .. } => Some(OpKind::Scatter),
+            OpKind::Scatter => Some(OpKind::Gather { slot: 0 }),
+            OpKind::Pull => Some(OpKind::Push),
+            OpKind::Push => Some(OpKind::Pull),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub kind: OpKind,
+    /// input node ids
+    pub ins: Vec<usize>,
+    /// output width (columns per vertex)
+    pub cols: usize,
+}
+
+/// The vertex function as a DAG of ops. Node ids are topological by
+/// construction (builders append in dependency order).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub nodes: Vec<OpNode>,
+    /// number of child slots (1 chain, 2 binary tree)
+    pub n_children: usize,
+    /// columns of the scattered state
+    pub state_cols: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Analysis {
+    /// fuse-able groups (node ids), each of size >= 2
+    pub fusion_groups: Vec<Vec<usize>>,
+    /// eager nodes: gather is NOT an ancestor (can run on stream 2)
+    pub eager: BTreeSet<usize>,
+    /// lazy nodes: scatter is NOT a descendant (deferrable)
+    pub lazy: BTreeSet<usize>,
+}
+
+impl Program {
+    pub fn node(&mut self, kind: OpKind, ins: Vec<usize>, cols: usize) -> usize {
+        for &i in &ins {
+            assert!(i < self.nodes.len(), "forward reference in program");
+        }
+        self.nodes.push(OpNode { kind, ins, cols });
+        self.nodes.len() - 1
+    }
+
+    fn reachable_from(&self, sources: &[usize]) -> Vec<bool> {
+        // nodes are topologically ordered, one forward sweep suffices
+        let mut reach = vec![false; self.nodes.len()];
+        for &s in sources {
+            reach[s] = true;
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !reach[i] && n.ins.iter().any(|&j| reach[j]) {
+                reach[i] = true;
+            }
+        }
+        reach
+    }
+
+    fn reaches(&self, targets: &[usize]) -> Vec<bool> {
+        // reverse reachability: does node i reach any target?
+        let mut reach = vec![false; self.nodes.len()];
+        for &t in targets {
+            reach[t] = true;
+        }
+        for i in (0..self.nodes.len()).rev() {
+            if reach[i] {
+                for &j in &self.nodes[i].ins {
+                    reach[j] = true;
+                }
+            }
+        }
+        reach
+    }
+
+    fn ids_of(&self, pred: impl Fn(&OpKind) -> bool) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| pred(&n.kind))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Run the §3.5 static analyses.
+    pub fn analyze(&self) -> Analysis {
+        let gathers = self.ids_of(|k| matches!(k, OpKind::Gather { .. }));
+        let scatters = self.ids_of(|k| matches!(k, OpKind::Scatter));
+
+        // ---- Proposition 2 ----
+        let below_gather = self.reachable_from(&gathers);
+        let feeds_scatter = self.reaches(&scatters);
+        let mut eager = BTreeSet::new();
+        let mut lazy = BTreeSet::new();
+        for i in 0..self.nodes.len() {
+            let is_gather = gathers.contains(&i);
+            let is_scatter = scatters.contains(&i);
+            if !below_gather[i] && !is_gather {
+                eager.insert(i);
+            }
+            if !feeds_scatter[i] && !is_scatter {
+                lazy.insert(i);
+            }
+        }
+
+        // ---- fusion: union-find over element-wise adjacency ----
+        let mut parent: Vec<usize> = (0..self.nodes.len()).collect();
+        fn find(p: &mut Vec<usize>, x: usize) -> usize {
+            if p[x] != x {
+                let r = find(p, p[x]);
+                p[x] = r;
+            }
+            p[x]
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.kind.is_elementwise() {
+                continue;
+            }
+            for &j in &n.ins {
+                if self.nodes[j].kind.is_elementwise() {
+                    let (a, b) = (find(&mut parent, i), find(&mut parent, j));
+                    if a != b {
+                        parent[a] = b;
+                    }
+                }
+            }
+        }
+        let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+            Default::default();
+        for i in 0..self.nodes.len() {
+            if self.nodes[i].kind.is_elementwise() {
+                groups.entry(find(&mut parent, i)).or_default().push(i);
+            }
+        }
+        let fusion_groups: Vec<Vec<usize>> =
+            groups.into_values().filter(|g| g.len() >= 2).collect();
+
+        Analysis { fusion_groups, eager, lazy }
+    }
+
+    /// Number of PJRT executions ("kernel launches") the unfused
+    /// interpretation needs per task: every non-memory op.
+    pub fn launches_unfused(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.kind,
+                    OpKind::MatMul { .. }
+                        | OpKind::AddBias { .. }
+                        | OpKind::Add
+                        | OpKind::Mul
+                        | OpKind::Sigmoid
+                        | OpKind::Tanh
+                )
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::programs::*;
+    use super::*;
+
+    #[test]
+    fn lstm_program_analysis_matches_fig7() {
+        let p = lstm_program(8);
+        let a = p.analyze();
+        // pull and the x-side matmul are eager (don't depend on gather)
+        let pulls = p.ids_of(|k| matches!(k, OpKind::Pull));
+        assert!(pulls.iter().all(|i| a.eager.contains(i)));
+        let xmms: Vec<usize> = p
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                matches!(n.kind, OpKind::MatMul { .. })
+                    && n.ins.iter().any(|&j| pulls.contains(&j))
+            })
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!xmms.is_empty());
+        assert!(xmms.iter().all(|i| a.eager.contains(i)));
+        // push is lazy
+        let pushes = p.ids_of(|k| matches!(k, OpKind::Push));
+        assert!(pushes.iter().all(|i| a.lazy.contains(i)));
+        // the h-side matmul is NOT eager (consumes gathered state)
+        let gathers = p.ids_of(|k| matches!(k, OpKind::Gather { .. }));
+        assert!(!gathers.is_empty());
+        // there is at least one sizeable fuse-able element-wise group
+        // (the gate nonlinearity + cell-update chain of Fig. 7)
+        assert!(!a.fusion_groups.is_empty());
+        assert!(a.fusion_groups.iter().any(|g| g.len() >= 4));
+    }
+
+    #[test]
+    fn scatter_never_lazy_gather_never_eager() {
+        for p in [lstm_program(4), treelstm_program(4), treefc_program(4)] {
+            let a = p.analyze();
+            for (i, n) in p.nodes.iter().enumerate() {
+                if matches!(n.kind, OpKind::Scatter) {
+                    assert!(!a.lazy.contains(&i));
+                }
+                if matches!(n.kind, OpKind::Gather { .. }) {
+                    assert!(!a.eager.contains(&i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adjoint_duality() {
+        assert_eq!(
+            OpKind::Gather { slot: 1 }.adjoint_primitive(),
+            Some(OpKind::Scatter)
+        );
+        assert_eq!(OpKind::Pull.adjoint_primitive(), Some(OpKind::Push));
+        assert_eq!(OpKind::Push.adjoint_primitive(), Some(OpKind::Pull));
+        assert_eq!(OpKind::Add.adjoint_primitive(), None);
+    }
+
+    #[test]
+    fn fusion_groups_are_elementwise_only() {
+        for p in [lstm_program(8), treelstm_program(8)] {
+            let a = p.analyze();
+            for g in &a.fusion_groups {
+                for &i in g {
+                    assert!(p.nodes[i].kind.is_elementwise());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn launch_counts() {
+        // fused cell = 1 launch; unfused LSTM needs ~a dozen
+        assert!(lstm_program(8).launches_unfused() >= 10);
+        assert!(treelstm_program(8).launches_unfused() >= 15);
+        assert!(treefc_program(8).launches_unfused() >= 5);
+    }
+}

@@ -1,0 +1,164 @@
+//! Op-graph builders for the paper's cells. These mirror, operator by
+//! operator, the jnp reference implementations in
+//! `python/compile/kernels/ref.py` — the unfused interpreter (exec::unfused)
+//! executes them against the `op_*` artifacts and must agree numerically
+//! with the fused whole-cell artifact (tested in engine_equivalence.rs).
+//!
+//! Parameter indices refer to the model's parameter order:
+//!   lstm:     0=W [h,4h]  1=U [h,4h]  2=b [4h]
+//!   treelstm: 0=Wiou [h,3h] 1=Wf [h,h] 2=Uiou [h,3h] 3=Uf [h,h]
+//!             4=biou [3h] 5=bf [h]
+//!   treefc:   0=Wx 1=Wl 2=Wr [h,h]  3=b [h]
+
+use super::{OpKind, Program};
+
+/// Sequence LSTM cell (state = [c | h], 2h columns).
+pub fn lstm_program(h: usize) -> Program {
+    let mut p = Program {
+        name: "lstm".into(),
+        nodes: Vec::new(),
+        n_children: 1,
+        state_cols: 2 * h,
+    };
+    let x = p.node(OpKind::Pull, vec![], h);
+    let s = p.node(OpKind::Gather { slot: 0 }, vec![], 2 * h);
+    let cprev = p.node(OpKind::SliceCols { start: 0, len: h }, vec![s], h);
+    let hprev = p.node(OpKind::SliceCols { start: h, len: h }, vec![s], h);
+    let g1 = p.node(OpKind::MatMul { param: 0 }, vec![x], 4 * h);
+    let g2 = p.node(OpKind::MatMul { param: 1 }, vec![hprev], 4 * h);
+    let gsum = p.node(OpKind::Add, vec![g1, g2], 4 * h);
+    let pre = p.node(OpKind::AddBias { param: 2 }, vec![gsum], 4 * h);
+    let pi = p.node(OpKind::SliceCols { start: 0, len: h }, vec![pre], h);
+    let pf = p.node(OpKind::SliceCols { start: h, len: h }, vec![pre], h);
+    let po = p.node(OpKind::SliceCols { start: 2 * h, len: h }, vec![pre], h);
+    let pu = p.node(OpKind::SliceCols { start: 3 * h, len: h }, vec![pre], h);
+    let i = p.node(OpKind::Sigmoid, vec![pi], h);
+    let f = p.node(OpKind::Sigmoid, vec![pf], h);
+    let o = p.node(OpKind::Sigmoid, vec![po], h);
+    let u = p.node(OpKind::Tanh, vec![pu], h);
+    let fc = p.node(OpKind::Mul, vec![f, cprev], h);
+    let iu = p.node(OpKind::Mul, vec![i, u], h);
+    let c2 = p.node(OpKind::Add, vec![fc, iu], h);
+    let tc = p.node(OpKind::Tanh, vec![c2], h);
+    let h2 = p.node(OpKind::Mul, vec![o, tc], h);
+    let sout = p.node(OpKind::ConcatCols, vec![c2, h2], 2 * h);
+    p.node(OpKind::Scatter, vec![sout], 2 * h);
+    p.node(OpKind::Push, vec![h2], h);
+    p
+}
+
+/// Binary child-sum Tree-LSTM cell (paper Fig. 4 / Fig. 7 with N=2).
+pub fn treelstm_program(h: usize) -> Program {
+    let mut p = Program {
+        name: "treelstm".into(),
+        nodes: Vec::new(),
+        n_children: 2,
+        state_cols: 2 * h,
+    };
+    let x = p.node(OpKind::Pull, vec![], h);
+    let s1 = p.node(OpKind::Gather { slot: 0 }, vec![], 2 * h);
+    let s2 = p.node(OpKind::Gather { slot: 1 }, vec![], 2 * h);
+    let c1 = p.node(OpKind::SliceCols { start: 0, len: h }, vec![s1], h);
+    let h1 = p.node(OpKind::SliceCols { start: h, len: h }, vec![s1], h);
+    let c2 = p.node(OpKind::SliceCols { start: 0, len: h }, vec![s2], h);
+    let h2 = p.node(OpKind::SliceCols { start: h, len: h }, vec![s2], h);
+    let hsum = p.node(OpKind::Add, vec![h1, h2], h);
+    // iou path
+    let giou_x = p.node(OpKind::MatMul { param: 0 }, vec![x], 3 * h);
+    let giou_h = p.node(OpKind::MatMul { param: 2 }, vec![hsum], 3 * h);
+    let giou_s = p.node(OpKind::Add, vec![giou_x, giou_h], 3 * h);
+    let pre_iou = p.node(OpKind::AddBias { param: 4 }, vec![giou_s], 3 * h);
+    // forget paths (shared x @ Wf)
+    let gf_x = p.node(OpKind::MatMul { param: 1 }, vec![x], h);
+    let gf1_h = p.node(OpKind::MatMul { param: 3 }, vec![h1], h);
+    let gf2_h = p.node(OpKind::MatMul { param: 3 }, vec![h2], h);
+    let gf1_s = p.node(OpKind::Add, vec![gf_x, gf1_h], h);
+    let gf2_s = p.node(OpKind::Add, vec![gf_x, gf2_h], h);
+    let pre_f1 = p.node(OpKind::AddBias { param: 5 }, vec![gf1_s], h);
+    let pre_f2 = p.node(OpKind::AddBias { param: 5 }, vec![gf2_s], h);
+    // gates
+    let pi = p.node(OpKind::SliceCols { start: 0, len: h }, vec![pre_iou], h);
+    let po = p.node(OpKind::SliceCols { start: h, len: h }, vec![pre_iou], h);
+    let pu = p.node(OpKind::SliceCols { start: 2 * h, len: h }, vec![pre_iou], h);
+    let i = p.node(OpKind::Sigmoid, vec![pi], h);
+    let o = p.node(OpKind::Sigmoid, vec![po], h);
+    let u = p.node(OpKind::Tanh, vec![pu], h);
+    let f1 = p.node(OpKind::Sigmoid, vec![pre_f1], h);
+    let f2 = p.node(OpKind::Sigmoid, vec![pre_f2], h);
+    let iu = p.node(OpKind::Mul, vec![i, u], h);
+    let f1c = p.node(OpKind::Mul, vec![f1, c1], h);
+    let f2c = p.node(OpKind::Mul, vec![f2, c2], h);
+    let cp = p.node(OpKind::Add, vec![iu, f1c], h);
+    let cnew = p.node(OpKind::Add, vec![cp, f2c], h);
+    let tc = p.node(OpKind::Tanh, vec![cnew], h);
+    let hnew = p.node(OpKind::Mul, vec![o, tc], h);
+    let sout = p.node(OpKind::ConcatCols, vec![cnew, hnew], 2 * h);
+    p.node(OpKind::Scatter, vec![sout], 2 * h);
+    p.node(OpKind::Push, vec![hnew], h);
+    p
+}
+
+/// Tree-FC cell (Fold benchmark): h' = tanh(x Wx + h1 Wl + h2 Wr + b).
+pub fn treefc_program(h: usize) -> Program {
+    let mut p = Program {
+        name: "treefc".into(),
+        nodes: Vec::new(),
+        n_children: 2,
+        state_cols: h,
+    };
+    let x = p.node(OpKind::Pull, vec![], h);
+    let h1 = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+    let h2 = p.node(OpKind::Gather { slot: 1 }, vec![], h);
+    let gx = p.node(OpKind::MatMul { param: 0 }, vec![x], h);
+    let gl = p.node(OpKind::MatMul { param: 1 }, vec![h1], h);
+    let gr = p.node(OpKind::MatMul { param: 2 }, vec![h2], h);
+    let s1 = p.node(OpKind::Add, vec![gx, gl], h);
+    let s2 = p.node(OpKind::Add, vec![s1, gr], h);
+    let pre = p.node(OpKind::AddBias { param: 3 }, vec![s2], h);
+    let out = p.node(OpKind::Tanh, vec![pre], h);
+    p.node(OpKind::Scatter, vec![out], h);
+    p.node(OpKind::Push, vec![out], h);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn programs_are_topological() {
+        for p in [lstm_program(4), treelstm_program(4), treefc_program(4)] {
+            for (i, n) in p.nodes.iter().enumerate() {
+                for &j in &n.ins {
+                    assert!(j < i, "{}: node {i} uses later node {j}", p.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn state_cols_match_scatter() {
+        for p in [lstm_program(8), treelstm_program(8), treefc_program(8)] {
+            let scat = p
+                .nodes
+                .iter()
+                .find(|n| matches!(n.kind, OpKind::Scatter))
+                .unwrap();
+            assert_eq!(scat.cols, p.state_cols);
+        }
+    }
+
+    #[test]
+    fn child_slots_cover_arity() {
+        let p = treelstm_program(4);
+        let slots: Vec<usize> = p
+            .nodes
+            .iter()
+            .filter_map(|n| match n.kind {
+                OpKind::Gather { slot } => Some(slot),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(slots, vec![0, 1]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Cross-system numerical equivalence: every execution strategy — Cavs
+//! (all engine-switch combinations), the DyNet-like agenda system, the
+//! Fold-like depth system — computes the SAME function, so on identical
+//! models and batches their losses and gradients must agree to float
+//! tolerance. This pins down the paper's claim that Cavs "produces
+//! exactly the same numerical results with other frameworks" (§5).
+
+use std::path::{Path, PathBuf};
+
+use cavs::baselines::dyndecl::DynDecl;
+use cavs::baselines::fold::Fold;
+use cavs::baselines::monolithic::{ScanLm, UnrollMode};
+use cavs::exec::{Engine, EngineOpts};
+use cavs::graph::{Dataset, InputGraph};
+use cavs::models::{Cell, HeadKind, Model};
+use cavs::runtime::Runtime;
+use cavs::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() / b.abs().max(1.0) < tol
+}
+
+fn assert_grads_close(a: &Model, b: &Model, tol: f32, tag: &str) {
+    for (i, name) in a.params.names.iter().enumerate() {
+        let (ga, gb) = (&a.params.grad[i], &b.params.grad[i]);
+        for (x, y) in ga.iter().zip(gb) {
+            assert!(
+                (x - y).abs() / y.abs().max(1.0) < tol,
+                "{tag}: grad {name} mismatch {x} vs {y}"
+            );
+        }
+    }
+    for (x, y) in a.embedding.grad.iter().zip(&b.embedding.grad) {
+        assert!(
+            (x - y).abs() / y.abs().max(1.0) < tol,
+            "{tag}: embedding grad mismatch {x} vs {y}"
+        );
+    }
+}
+
+const H: usize = 32;
+const TOL: f32 = 2e-3;
+
+fn tree_batch(seed: u64, k: usize) -> Vec<InputGraph> {
+    let d = Dataset::sst_like(seed, k, 20, 5);
+    d.graphs
+}
+
+fn fresh_model(cell: Cell, head: HeadKind, head_vocab: usize) -> Model {
+    Model::new(cell, H, 20, head, head_vocab, 1234)
+}
+
+fn run_cavs(
+    opts: EngineOpts,
+    graphs: &[&InputGraph],
+    cell: Cell,
+    head: HeadKind,
+    hv: usize,
+) -> (f32, Model) {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut model = fresh_model(cell, head, hv);
+    let mut eng = Engine::new(&rt, opts);
+    let r = eng.run_minibatch(&mut model, graphs).unwrap();
+    (r.loss, model)
+}
+
+#[test]
+fn all_cavs_switch_combinations_agree() {
+    let graphs = tree_batch(5, 6);
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let (base_loss, base_model) = run_cavs(
+        EngineOpts { lazy_batching: false, fusion: true, streaming: false, ..Default::default() },
+        &refs,
+        Cell::TreeLstm,
+        HeadKind::ClassifierAtRoot,
+        5,
+    );
+    for lazy in [false, true] {
+        for fusion in [false, true] {
+            for streaming in [false, true] {
+                let (loss, model) = run_cavs(
+                    EngineOpts {
+                        lazy_batching: lazy,
+                        fusion,
+                        streaming,
+                        ..Default::default()
+                    },
+                    &refs,
+                    Cell::TreeLstm,
+                    HeadKind::ClassifierAtRoot,
+                    5,
+                );
+                assert!(
+                    rel_close(loss, base_loss, TOL),
+                    "lazy={lazy} fusion={fusion} streaming={streaming}: {loss} vs {base_loss}"
+                );
+                assert_grads_close(
+                    &model,
+                    &base_model,
+                    TOL,
+                    &format!("lazy={lazy} fusion={fusion} stream={streaming}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dyndecl_agrees_with_cavs() {
+    let graphs = tree_batch(6, 5);
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let (cavs_loss, cavs_model) = run_cavs(
+        EngineOpts::default(),
+        &refs,
+        Cell::TreeLstm,
+        HeadKind::ClassifierAtRoot,
+        5,
+    );
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut model = fresh_model(Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5);
+    let mut sys = DynDecl::new(&rt);
+    let r = sys.run_minibatch(&mut model, &refs, true).unwrap();
+    assert!(rel_close(r.loss, cavs_loss, TOL), "{} vs {}", r.loss, cavs_loss);
+    assert_grads_close(&model, &cavs_model, TOL, "dyndecl");
+    assert!(sys.continuity_checks > 0, "continuity checks must run");
+    assert!(sys.launches > 0);
+}
+
+#[test]
+fn fold_agrees_with_cavs() {
+    let graphs = tree_batch(7, 5);
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let (cavs_loss, cavs_model) = run_cavs(
+        EngineOpts::default(),
+        &refs,
+        Cell::TreeLstm,
+        HeadKind::ClassifierAtRoot,
+        5,
+    );
+    for threads in [1, 4] {
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        let mut model = fresh_model(Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5);
+        let mut sys = Fold::new(&rt, threads);
+        let r = sys.run_minibatch(&mut model, &refs, true).unwrap();
+        assert!(
+            rel_close(r.loss, cavs_loss, TOL),
+            "fold-{threads}: {} vs {}",
+            r.loss,
+            cavs_loss
+        );
+        assert_grads_close(&model, &cavs_model, TOL, &format!("fold-{threads}"));
+    }
+}
+
+#[test]
+fn treefc_systems_agree() {
+    let d = Dataset::treefc(8, 4, 20, 4);
+    let refs: Vec<&InputGraph> = d.graphs.iter().collect();
+    let (cavs_loss, cavs_model) =
+        run_cavs(EngineOpts::default(), &refs, Cell::TreeFc, HeadKind::SumRootState, 0);
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut m1 = fresh_model(Cell::TreeFc, HeadKind::SumRootState, 0);
+    let mut dd = DynDecl::new(&rt);
+    let r1 = dd.run_minibatch(&mut m1, &refs, true).unwrap();
+    assert!(rel_close(r1.loss, cavs_loss, TOL));
+    assert_grads_close(&m1, &cavs_model, TOL, "dyndecl-treefc");
+
+    let mut m2 = fresh_model(Cell::TreeFc, HeadKind::SumRootState, 0);
+    let mut fd = Fold::new(&rt, 1);
+    let r2 = fd.run_minibatch(&mut m2, &refs, true).unwrap();
+    assert!(rel_close(r2.loss, cavs_loss, TOL));
+    assert_grads_close(&m2, &cavs_model, TOL, "fold-treefc");
+}
+
+#[test]
+fn scan_lm_agrees_with_cavs_on_chains() {
+    // fixed-length chains of the quick scan artifact's T
+    let t = 4usize;
+    let mut rng = Rng::new(3);
+    let graphs: Vec<InputGraph> = (0..2)
+        .map(|_| {
+            let toks: Vec<i32> = (0..=t).map(|_| rng.below(20) as i32).collect();
+            InputGraph::chain(&toks[..t], &toks[1..])
+        })
+        .collect();
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+
+    // the scan artifact bakes Wemb's shape: embedding vocab must equal the
+    // artifact's vocab (50 in the quick set)
+    let mk = || Model::new(Cell::Lstm, H, 50, HeadKind::LmPerVertex, 50, 1234);
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let (cavs_loss, cavs_model) = {
+        let mut model = mk();
+        let mut eng = Engine::new(&rt, EngineOpts::default());
+        let r = eng.run_minibatch(&mut model, &refs).unwrap();
+        (r.loss, model)
+    };
+    let mut model = mk();
+    let mut scan = ScanLm::new(&rt, UnrollMode::Static { t });
+    let r = scan.run_minibatch(&mut model, &refs).unwrap();
+    assert!(
+        rel_close(r.loss, cavs_loss, TOL),
+        "scan {} vs cavs {}",
+        r.loss,
+        cavs_loss
+    );
+    assert_grads_close(&model, &cavs_model, TOL, "scanlm");
+    // the scan artifact computed exactly bs*t steps, all useful here
+    assert_eq!(scan.steps_useful, (2 * t) as u64);
+}
+
+#[test]
+fn gru_cell_runs_through_engine() {
+    // GRU is the fused-only extension cell: forward + backward on a chain.
+    let mut rng = Rng::new(9);
+    let toks: Vec<i32> = (0..6).map(|_| rng.below(20) as i32).collect();
+    let graph = InputGraph::chain(&toks[..5], &toks[1..]);
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut model = fresh_model(Cell::Gru, HeadKind::LmPerVertex, 50);
+    let mut eng = Engine::new(
+        &rt,
+        EngineOpts { lazy_batching: false, ..Default::default() },
+    );
+    let r = eng.run_minibatch(&mut model, &[&graph]).unwrap();
+    assert!(r.loss.is_finite() && r.loss > 0.0);
+    assert!(model.params.grad_norm() > 0.0, "gru must backprop");
+}

@@ -1,0 +1,295 @@
+//! The correctness keystone: replay the golden graphs (computed by jax in
+//! python/compile/aot.py `make_goldens`) through the FULL Rust stack —
+//! scheduler (Alg. 1), dynamic tensors (Alg. 2), gather/scatter buffers,
+//! fused Pallas artifacts, heads, backward tape, lazy parameter grads —
+//! and demand the same loss and gradients jax.grad produced for the whole
+//! unrolled computation.
+
+use std::path::{Path, PathBuf};
+
+use cavs::exec::{Engine, EngineOpts};
+use cavs::graph::InputGraph;
+use cavs::models::{Cell, HeadKind, Model};
+use cavs::runtime::Runtime;
+use cavs::scheduler::Policy;
+use cavs::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_golden(name: &str) -> Json {
+    let p = artifacts_dir().join("golden").join(name);
+    let text = std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("missing golden {}: {e}", p.display()));
+    Json::parse(&text).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    let mut worst = 0.0f32;
+    let mut worst_i = 0;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let denom = w.abs().max(1.0);
+        let err = (g - w).abs() / denom;
+        if err > worst {
+            worst = err;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst < tol,
+        "{what}: worst rel err {worst} at {worst_i} (got {}, want {})",
+        got[worst_i],
+        want[worst_i]
+    );
+}
+
+fn children_from(j: &Json) -> Vec<Vec<u32>> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.as_usize_vec().iter().map(|&v| v as u32).collect())
+        .collect()
+}
+
+/// Build a model whose embedding table holds the golden per-vertex x
+/// vectors (token id v => xs[v]), so `pull` feeds exactly the golden
+/// inputs and the embedding gradient becomes grad_xs.
+fn golden_model(g: &Json, cell: Cell, head_kind: HeadKind) -> Model {
+    let h = g.get("h").unwrap().as_usize().unwrap();
+    let xs = g.get("xs").unwrap();
+    let n = xs.as_arr().unwrap().len();
+    let head_vocab = g
+        .get("vocab")
+        .map(|v| v.as_usize().unwrap())
+        .unwrap_or(1);
+    let mut model = Model::new(cell, h, n, head_kind, head_vocab, 0);
+    for (name, val) in g.get("params").unwrap().as_obj().unwrap() {
+        model.params.set(name, val.as_f32_flat()).unwrap();
+    }
+    model.embedding.table = xs.as_f32_flat();
+    model.embedding.grad = vec![0.0; n * h];
+    if let Some(head) = g.get("head") {
+        let hp = model.head.as_mut().unwrap();
+        hp.set("Wout", head.get("Wout").unwrap().as_f32_flat()).unwrap();
+        hp.set("bout", head.get("bout").unwrap().as_f32_flat()).unwrap();
+    }
+    model
+}
+
+fn check_param_grads(model: &Model, g: &Json, tol: f32) {
+    let gp = g.get("grad_params").unwrap().as_obj().unwrap();
+    for (i, name) in model.params.names.iter().enumerate() {
+        let want = gp.get(name).unwrap().as_f32_flat();
+        assert_close(&model.params.grad[i], &want, tol, name);
+    }
+    let want_gx = g.get("grad_xs").unwrap().as_f32_flat();
+    assert_close(&model.embedding.grad, &want_gx, tol, "grad_xs");
+    if let Some(gh) = g.get("grad_head") {
+        let hp = model.head.as_ref().unwrap();
+        assert_close(&hp.grad[0], &gh.get("Wout").unwrap().as_f32_flat(), tol, "gWout");
+        assert_close(&hp.grad[1], &gh.get("bout").unwrap().as_f32_flat(), tol, "gbout");
+    }
+}
+
+fn run_case(
+    g: &Json,
+    cell: Cell,
+    head_kind: HeadKind,
+    graph: &InputGraph,
+    opts: EngineOpts,
+    tol: f32,
+    tag: &str,
+) {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut model = golden_model(g, cell, head_kind);
+    let mut engine = Engine::new(&rt, opts);
+    let res = engine.run_minibatch(&mut model, &[graph]).unwrap();
+    let want_loss = g.get("loss").unwrap().as_f64().unwrap() as f32;
+    assert!(
+        (res.loss - want_loss).abs() / want_loss.abs().max(1.0) < tol,
+        "{tag}: loss {} vs golden {want_loss}",
+        res.loss
+    );
+    if opts.training {
+        check_param_grads(&model, g, tol);
+    }
+}
+
+fn treelstm_graph(g: &Json) -> InputGraph {
+    let children = children_from(g.get("children").unwrap());
+    let n = children.len();
+    let label = g.get("label").unwrap().as_i64().unwrap() as i32;
+    InputGraph::from_children(
+        children,
+        (0..n as i32).collect(),
+        vec![-1; n],
+        label,
+    )
+    .unwrap()
+}
+
+fn lstm_graph(g: &Json) -> InputGraph {
+    let labels: Vec<i32> = g
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    let n = labels.len();
+    InputGraph::chain(&(0..n as i32).collect::<Vec<_>>(), &labels)
+}
+
+fn treefc_graph(g: &Json) -> InputGraph {
+    let children = children_from(g.get("children").unwrap());
+    let n = children.len();
+    InputGraph::from_children(children, (0..n as i32).collect(), vec![-1; n], -1)
+        .unwrap()
+}
+
+const TOL: f32 = 2e-3;
+
+// ---------------------------------------------------------------------
+// Tree-LSTM sentiment tree
+// ---------------------------------------------------------------------
+
+#[test]
+fn treelstm_golden_eager() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let opts = EngineOpts { lazy_batching: false, ..Default::default() };
+    run_case(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot, &graph, opts, TOL, "eager");
+}
+
+#[test]
+fn treelstm_golden_lazy() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let opts = EngineOpts { lazy_batching: true, ..Default::default() };
+    run_case(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot, &graph, opts, TOL, "lazy");
+}
+
+#[test]
+fn treelstm_golden_serial_policy() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let opts = EngineOpts {
+        policy: Policy::Serial,
+        lazy_batching: false,
+        ..Default::default()
+    };
+    run_case(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot, &graph, opts, TOL, "serial");
+}
+
+#[test]
+fn treelstm_golden_unfused() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let opts = EngineOpts {
+        fusion: false,
+        lazy_batching: false,
+        ..Default::default()
+    };
+    run_case(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot, &graph, opts, TOL, "unfused");
+}
+
+#[test]
+fn treelstm_golden_streaming() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let opts = EngineOpts { streaming: true, ..Default::default() };
+    run_case(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot, &graph, opts, TOL, "streaming");
+}
+
+#[test]
+fn treelstm_golden_inference_loss() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let opts = EngineOpts { training: false, ..Default::default() };
+    run_case(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot, &graph, opts, TOL, "infer");
+}
+
+// ---------------------------------------------------------------------
+// LSTM chain LM
+// ---------------------------------------------------------------------
+
+#[test]
+fn lstm_chain_golden_eager() {
+    let g = load_golden("lstm_chain.json");
+    let graph = lstm_graph(&g);
+    let opts = EngineOpts { lazy_batching: false, ..Default::default() };
+    run_case(&g, Cell::Lstm, HeadKind::LmPerVertex, &graph, opts, TOL, "lm-eager");
+}
+
+#[test]
+fn lstm_chain_golden_lazy() {
+    let g = load_golden("lstm_chain.json");
+    let graph = lstm_graph(&g);
+    let opts = EngineOpts { lazy_batching: true, ..Default::default() };
+    run_case(&g, Cell::Lstm, HeadKind::LmPerVertex, &graph, opts, TOL, "lm-lazy");
+}
+
+#[test]
+fn lstm_chain_golden_unfused() {
+    let g = load_golden("lstm_chain.json");
+    let graph = lstm_graph(&g);
+    let opts = EngineOpts {
+        fusion: false,
+        lazy_batching: false,
+        ..Default::default()
+    };
+    run_case(&g, Cell::Lstm, HeadKind::LmPerVertex, &graph, opts, TOL, "lm-unfused");
+}
+
+// ---------------------------------------------------------------------
+// Tree-FC (synthetic sum-of-root objective)
+// ---------------------------------------------------------------------
+
+#[test]
+fn treefc_golden_eager() {
+    let g = load_golden("treefc_tree.json");
+    let graph = treefc_graph(&g);
+    let opts = EngineOpts { lazy_batching: false, ..Default::default() };
+    run_case(&g, Cell::TreeFc, HeadKind::SumRootState, &graph, opts, TOL, "fc-eager");
+}
+
+#[test]
+fn treefc_golden_lazy() {
+    let g = load_golden("treefc_tree.json");
+    let graph = treefc_graph(&g);
+    let opts = EngineOpts { lazy_batching: true, ..Default::default() };
+    run_case(&g, Cell::TreeFc, HeadKind::SumRootState, &graph, opts, TOL, "fc-lazy");
+}
+
+// ---------------------------------------------------------------------
+// Batched multi-graph consistency: summed loss of a 3-copy batch must be
+// 3x the single-graph loss, and grads 3x (linearity of the sum).
+// ---------------------------------------------------------------------
+
+#[test]
+fn batch_of_copies_scales_linearly() {
+    let g = load_golden("treelstm_tree.json");
+    let graph = treelstm_graph(&g);
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut model = golden_model(&g, Cell::TreeLstm, HeadKind::ClassifierAtRoot);
+    let mut engine = Engine::new(&rt, EngineOpts::default());
+    let res = engine
+        .run_minibatch(&mut model, &[&graph, &graph, &graph])
+        .unwrap();
+    let want_loss = 3.0 * g.get("loss").unwrap().as_f64().unwrap() as f32;
+    assert!(
+        (res.loss - want_loss).abs() / want_loss.abs() < TOL,
+        "batched loss {} vs {}",
+        res.loss,
+        want_loss
+    );
+    let gp = g.get("grad_params").unwrap().as_obj().unwrap();
+    for (i, name) in model.params.names.iter().enumerate() {
+        let want: Vec<f32> =
+            gp.get(name).unwrap().as_f32_flat().iter().map(|x| 3.0 * x).collect();
+        assert_close(&model.params.grad[i], &want, TOL, name);
+    }
+}

@@ -1,0 +1,273 @@
+//! Property tests over the coordinator invariants (hand-rolled driver in
+//! util::propcheck — proptest is unavailable offline). Replay failures
+//! with `CAVS_PROP_SEED=<seed>`; scale effort with `CAVS_PROP_CASES`.
+
+use cavs::graph::{synth, GraphBatch, InputGraph};
+use cavs::memory::{MemTraffic, StateBuffer};
+use cavs::scheduler::{frontier_levels, schedule, stats, Policy};
+use cavs::tensor::DynamicTensor;
+use cavs::util::propcheck::check;
+use cavs::util::rng::Rng;
+use cavs::vertex::OpKind;
+
+const BUCKETS: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+fn random_graphs(rng: &mut Rng) -> Vec<InputGraph> {
+    let k = 1 + rng.below(8);
+    (0..k)
+        .map(|_| match rng.below(4) {
+            0 => {
+                let len = 1 + rng.below(12);
+                let toks: Vec<i32> = (0..len).map(|_| rng.below(20) as i32).collect();
+                let labs: Vec<i32> = (0..len).map(|_| rng.below(20) as i32).collect();
+                InputGraph::chain(&toks, &labs)
+            }
+            1 => {
+                let leaves = 1 + rng.below(20);
+                synth::random_binary_tree(rng, 20, leaves, 5)
+            }
+            2 => {
+                let leaves = 1 << (1 + rng.below(4));
+                synth::complete_binary_tree(rng, 20, leaves)
+            }
+            _ => {
+                let (layers, width, arity) =
+                    (1 + rng.below(4), 1 + rng.below(4), 1 + rng.below(2));
+                synth::random_dag(rng, 20, layers, width, arity)
+            }
+        })
+        .collect()
+}
+
+/// Every vertex is scheduled exactly once, dependencies are respected,
+/// buckets cover task sizes, and padding accounting is exact.
+#[test]
+fn prop_schedule_is_a_valid_execution_order() {
+    check("schedule-valid", 150, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let policy = if rng.below(2) == 0 { Policy::Batched } else { Policy::Serial };
+        let tasks = schedule(&batch, policy, BUCKETS);
+
+        let mut done = vec![false; batch.n_vertices];
+        for t in &tasks {
+            assert!(t.m() >= 1 && t.m() <= t.bucket);
+            assert!(BUCKETS.contains(&t.bucket));
+            for &v in &t.verts {
+                for slot in 0..arity {
+                    if let Some(c) = batch.child(v, slot) {
+                        assert!(done[c as usize], "dependency violated");
+                    }
+                }
+            }
+            for &v in &t.verts {
+                assert!(!done[v as usize], "vertex scheduled twice");
+                done[v as usize] = true;
+            }
+        }
+        assert!(done.iter().all(|&d| d), "vertex never scheduled");
+        let s = stats(&tasks);
+        assert_eq!(s.n_vertices, batch.n_vertices);
+        assert_eq!(
+            s.padded_rows,
+            tasks.iter().map(|t| t.bucket - t.m()).sum::<usize>()
+        );
+    });
+}
+
+/// The runtime frontier BFS (Alg. 1) groups vertices exactly by their
+/// precomputed longest-path depth.
+#[test]
+fn prop_frontier_equals_depth_grouping() {
+    check("frontier-depth", 150, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let mut a = frontier_levels(&batch);
+        let mut b = batch.levels();
+        for l in a.iter_mut().chain(b.iter_mut()) {
+            l.sort_unstable();
+        }
+        assert_eq!(a, b);
+    });
+}
+
+/// Dynamic-tensor forward advance / backward rewind is exact LIFO: after
+/// any sequence of tasks, rewinding in reverse recovers every view
+/// verbatim and lands at offset zero (Alg. 2's memory choreography).
+#[test]
+fn prop_dynamic_tensor_lifo_roundtrip() {
+    check("dyntensor-lifo", 200, |rng| {
+        let cols = 1 + rng.below(16);
+        let mut dt = DynamicTensor::new(&[cols]);
+        let n_tasks = 1 + rng.below(20);
+        let buckets: Vec<usize> =
+            (0..n_tasks).map(|_| 1 << rng.below(6)).collect();
+        let mut stamps = Vec::new();
+        for (i, &b) in buckets.iter().enumerate() {
+            dt.set_bs(b);
+            for r in 0..b {
+                let val = (i * 1000 + r) as f32;
+                dt.row_mut(r).fill(val);
+            }
+            stamps.push(b);
+            dt.advance();
+        }
+        for (i, &b) in buckets.iter().enumerate().rev() {
+            dt.rewind(b).unwrap();
+            for r in 0..b {
+                assert_eq!(dt.row(r)[0], (i * 1000 + r) as f32);
+            }
+        }
+        assert_eq!(dt.offset_rows(), 0);
+        assert!(dt.rewind(1).is_err(), "rewind past zero must fail");
+    });
+}
+
+/// gather ∘ scatter is the identity on the scattered rows, zero elsewhere;
+/// scatter_add distributes over splits of the id list.
+#[test]
+fn prop_gather_scatter_roundtrip_and_linearity() {
+    check("gather-scatter", 200, |rng| {
+        let tr = MemTraffic::default();
+        let n = 2 + rng.below(40);
+        let cols = 1 + rng.below(8);
+        let mut sb = StateBuffer::new(n, cols);
+        let m = 1 + rng.below(n);
+        // distinct ids
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(m);
+        let block: Vec<f32> = (0..m * cols).map(|i| i as f32).collect();
+        sb.scatter(&ids, &block, &tr);
+        let opt_ids: Vec<Option<u32>> = ids.iter().map(|&v| Some(v)).collect();
+        let mut back = vec![-1.0f32; m * cols];
+        sb.gather(&opt_ids, &mut back, &tr);
+        assert_eq!(back, block);
+
+        // scatter_add linearity: adding in two halves == adding all once
+        let mut a = StateBuffer::new(n, cols);
+        let mut b = StateBuffer::new(n, cols);
+        let half = m / 2;
+        a.scatter_add(&opt_ids, &block, &tr);
+        b.scatter_add(&opt_ids[..half], &block[..half * cols], &tr);
+        b.scatter_add(&opt_ids[half..], &block[half * cols..], &tr);
+        for v in 0..n {
+            assert_eq!(a.row(v), b.row(v));
+        }
+    });
+}
+
+/// Prop. 2 invariants hold for arbitrary hidden sizes: eager ops never
+/// descend from gather; lazy ops never feed scatter; the two primitives'
+/// adjoints swap (gather<->scatter, pull<->push).
+#[test]
+fn prop_program_analysis_invariants() {
+    use cavs::models::Cell;
+    check("prop2-invariants", 60, |rng| {
+        let h = 1 + rng.below(64);
+        for cell in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc] {
+            let p = cell.program(h).unwrap();
+            let a = p.analyze();
+            // reachability recomputed naively here as the oracle
+            let n = p.nodes.len();
+            let mut below_gather = vec![false; n];
+            for (i, node) in p.nodes.iter().enumerate() {
+                if matches!(node.kind, OpKind::Gather { .. }) {
+                    below_gather[i] = true;
+                }
+                if node.ins.iter().any(|&j| below_gather[j]) {
+                    below_gather[i] = true;
+                }
+            }
+            for &e in &a.eager {
+                assert!(!below_gather[e], "{}: eager op {e} depends on gather", p.name);
+            }
+            let mut feeds_scatter = vec![false; n];
+            for i in (0..n).rev() {
+                if matches!(p.nodes[i].kind, OpKind::Scatter) {
+                    feeds_scatter[i] = true;
+                }
+                if feeds_scatter[i] {
+                    for &j in &p.nodes[i].ins {
+                        feeds_scatter[j] = true;
+                    }
+                }
+            }
+            for &l in &a.lazy {
+                assert!(!feeds_scatter[l], "{}: lazy op {l} feeds scatter", p.name);
+            }
+        }
+    });
+}
+
+/// The SST s-expression parser round-trips structure: parse -> regenerate
+/// -> parse produces an identical graph.
+#[test]
+fn prop_sexpr_parse_roundtrip() {
+    use cavs::graph::parse::parse_sst;
+    check("sexpr-roundtrip", 100, |rng| {
+        let leaves = 1 + rng.below(12);
+        let g = synth::random_binary_tree(rng, 20, leaves, 5);
+        // serialize back to an s-expression (post-order ids)
+        fn ser(g: &InputGraph, v: usize, out: &mut String) {
+            let cs = &g.children[v];
+            if cs.is_empty() {
+                out.push_str(&format!("(1 w{})", g.tokens[v]));
+            } else {
+                out.push_str("(1 ");
+                ser(g, cs[0] as usize, out);
+                out.push(' ');
+                ser(g, cs[1] as usize, out);
+                out.push(')');
+            }
+        }
+        let mut text = String::new();
+        let root = g.roots()[0] as usize;
+        ser(&g, root, &mut text);
+        let parsed = parse_sst(&text, |w| w[1..].parse().unwrap()).unwrap();
+        assert_eq!(parsed.n(), g.n());
+        assert_eq!(parsed.n_leaves(), g.n_leaves());
+        assert_eq!(parsed.max_depth(), g.max_depth());
+        // leaf multiset of tokens must match
+        let mut a: Vec<i32> =
+            g.tokens.iter().copied().filter(|&t| t >= 0).collect();
+        let mut b: Vec<i32> =
+            parsed.tokens.iter().copied().filter(|&t| t >= 0).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    });
+}
+
+/// Bucket selection: smallest bucket >= m, never smaller than m unless m
+/// exceeds the maximum (then chunking applies upstream).
+#[test]
+fn prop_bucket_selection() {
+    check("buckets", 300, |rng| {
+        let m = 1 + rng.below(5000);
+        let b = cavs::util::bucket_for(m, 1024);
+        if m <= 1024 {
+            assert!(b >= m, "bucket {b} < m {m}");
+            assert!(b < 2 * m, "bucket {b} wastes more than 2x for m {m}");
+            assert!(b.is_power_of_two());
+        } else {
+            assert_eq!(b, 1024);
+        }
+    });
+}

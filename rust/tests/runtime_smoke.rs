@@ -1,0 +1,26 @@
+// Smoke: HLO-text artifact -> PJRT compile -> execute round trip.
+use cavs::runtime::{Arg, Runtime};
+use std::path::Path;
+
+#[test]
+fn add_artifact_roundtrip() {
+    let rt = Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap();
+    let a: Vec<f32> = (0..32).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..32).map(|i| 2.0 * i as f32).collect();
+    let outs = rt.run_f32("op_add_n32", &[Arg::F32(&a), Arg::F32(&b)]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let want: Vec<f32> = (0..32).map(|i| 3.0 * i as f32).collect();
+    assert_eq!(outs[0], want);
+    assert_eq!(rt.stats().executions, 1);
+    assert_eq!(rt.stats().compiles, 1);
+}
+
+#[test]
+fn buffer_cached_params() {
+    let rt = Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap();
+    let a: Vec<f32> = vec![1.0; 32];
+    let buf = rt.upload_f32(&a, &[32]).unwrap();
+    let b: Vec<f32> = vec![4.0; 32];
+    let outs = rt.run_f32("op_mul_n32", &[Arg::Buf(&buf), Arg::F32(&b)]).unwrap();
+    assert_eq!(outs[0], vec![4.0f32; 32]);
+}

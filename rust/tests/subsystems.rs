@@ -1,0 +1,264 @@
+//! Focused subsystem tests that need the artifact set: runtime error
+//! paths, Fold preprocessing plans, monolithic-scan padding accounting,
+//! manifest integrity, and engine instrumentation (launch counts /
+//! memory-traffic accounting that Tables 1-2 rely on).
+
+use std::path::{Path, PathBuf};
+
+use cavs::baselines::fold::Fold;
+use cavs::baselines::monolithic::{ScanLm, UnrollMode};
+use cavs::exec::{Engine, EngineOpts};
+use cavs::graph::{synth, Dataset, InputGraph};
+use cavs::models::{Cell, HeadKind, Model};
+use cavs::runtime::{Arg, Runtime};
+use cavs::scheduler::Policy;
+use cavs::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+// ---------------------------------------------------------------------
+// runtime / manifest
+// ---------------------------------------------------------------------
+
+#[test]
+fn runtime_rejects_wrong_arity_and_shape() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let exe = rt.load("op_add_n32").unwrap();
+    let a = vec![0.0f32; 32];
+    // wrong number of args
+    assert!(rt.run(&exe, &[Arg::F32(&a)]).is_err());
+    // wrong element count
+    let short = vec![0.0f32; 31];
+    assert!(rt.run(&exe, &[Arg::F32(&a), Arg::F32(&short)]).is_err());
+    // wrong dtype
+    let ints = vec![0i32; 32];
+    assert!(rt.run(&exe, &[Arg::F32(&a), Arg::I32(&ints)]).is_err());
+}
+
+#[test]
+fn runtime_unknown_artifact_is_error() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    assert!(rt.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let a = vec![1.0f32; 32];
+    for _ in 0..5 {
+        rt.run_f32("op_tanh_n32", &[Arg::F32(&a)]).unwrap();
+    }
+    assert_eq!(rt.stats().compiles, 1);
+    assert_eq!(rt.stats().executions, 5);
+}
+
+#[test]
+fn manifest_buckets_are_sorted_and_complete() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let m = &rt.manifest;
+    for cell in ["lstm", "treelstm", "treefc"] {
+        for h in [32usize, 64, 256, 512, 1024] {
+            let b = m.buckets(cell, "cell_fwd", h);
+            assert!(!b.is_empty(), "{cell} h={h}");
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+            // every fwd bucket has a matching bwd artifact
+            for &bk in b {
+                let bwd = cavs::runtime::Manifest::cell_name(cell, "cell_bwd", h, bk);
+                assert!(m.has(&bwd), "{bwd} missing");
+            }
+        }
+    }
+    // param_grad bucket ladder exists for the paper cells
+    for cell in ["lstm", "treelstm", "treefc"] {
+        for h in [64usize, 256, 512, 1024] {
+            assert!(
+                m.buckets(cell, "param_grad", h).len() >= 2,
+                "{cell} h={h} pgrad ladder"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_bucket_for_picks_smallest_cover() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let m = &rt.manifest;
+    assert_eq!(m.bucket_for("treelstm", "cell_fwd", 512, 1).unwrap(), 1);
+    assert_eq!(m.bucket_for("treelstm", "cell_fwd", 512, 3).unwrap(), 4);
+    assert_eq!(m.bucket_for("treelstm", "cell_fwd", 512, 1024).unwrap(), 1024);
+    // beyond the ladder => max (engine chunks)
+    assert_eq!(m.bucket_for("treelstm", "cell_fwd", 512, 9999).unwrap(), 1024);
+    assert!(m.bucket_for("nope", "cell_fwd", 512, 1).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Fold preprocessing plan
+// ---------------------------------------------------------------------
+
+#[test]
+fn fold_plan_levels_and_wiring_are_consistent() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut rng = Rng::new(11);
+    let graphs: Vec<InputGraph> = (0..5)
+        .map(|_| {
+            let leaves = 2 + rng.below(10);
+            synth::random_binary_tree(&mut rng, 20, leaves, 5)
+        })
+        .collect();
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let mut fold = Fold::new(&rt, 2);
+    let plan = fold.preprocess(&refs, 2);
+
+    let n: usize = graphs.iter().map(InputGraph::n).sum();
+    // every vertex in exactly one level
+    assert_eq!(plan.levels.iter().map(Vec::len).sum::<usize>(), n);
+    // carry positions are a permutation
+    let mut pos: Vec<u32> = plan.carry_pos.clone();
+    pos.sort_unstable();
+    assert_eq!(pos, (0..n as u32).collect::<Vec<_>>());
+    // wiring points strictly below the current level's carry positions
+    let mut level_start = 0usize;
+    for (d, level) in plan.levels.iter().enumerate() {
+        for (i, &v) in level.iter().enumerate() {
+            assert_eq!(plan.carry_pos[v as usize] as usize, level_start + i);
+            for slot in 0..2 {
+                let w = plan.wiring[d][i * 2 + slot];
+                if w != u32::MAX {
+                    assert!((w as usize) < level_start, "wiring must point to an earlier depth");
+                }
+            }
+        }
+        level_start += level.len();
+    }
+}
+
+#[test]
+fn fold_thread_counts_produce_identical_plans() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut rng = Rng::new(12);
+    let graphs: Vec<InputGraph> = (0..8)
+        .map(|_| {
+            let leaves = 2 + rng.below(12);
+            synth::random_binary_tree(&mut rng, 20, leaves, 5)
+        })
+        .collect();
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let p1 = Fold::new(&rt, 1).preprocess(&refs, 2);
+    let p4 = Fold::new(&rt, 4).preprocess(&refs, 2);
+    assert_eq!(p1.levels, p4.levels);
+    assert_eq!(p1.wiring, p4.wiring);
+    assert_eq!(p1.carry_pos, p4.carry_pos);
+}
+
+// ---------------------------------------------------------------------
+// monolithic scan padding
+// ---------------------------------------------------------------------
+
+#[test]
+fn scan_static_rejects_overlong_and_counts_padding() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let mut model = Model::new(Cell::Lstm, 32, 50, HeadKind::LmPerVertex, 50, 3);
+    let mut scan = ScanLm::new(&rt, UnrollMode::Static { t: 4 });
+
+    // a 3-token sentence in a T=4 bs=2 artifact: padding waste accounted
+    let toks = [1i32, 2, 3, 4];
+    let g = InputGraph::chain(&toks[..3], &toks[1..]);
+    let r = scan.run_minibatch(&mut model, &[&g]).unwrap();
+    assert_eq!(r.n_labels, 3);
+    assert_eq!(scan.steps_useful, 3);
+    assert_eq!(scan.steps_computed, 8); // bs bucket 2 x T 4
+    assert!(scan.padding_waste() > 0.5);
+
+    // overlong sentence must be rejected, not silently truncated
+    let toks6 = [1i32, 2, 3, 4, 5, 6, 7];
+    let long = InputGraph::chain(&toks6[..6], &toks6[1..]);
+    assert!(scan.run_minibatch(&mut model, &[&long]).is_err());
+}
+
+// ---------------------------------------------------------------------
+// engine instrumentation (what Tables 1-2 measure)
+// ---------------------------------------------------------------------
+
+#[test]
+fn serial_policy_launches_scale_with_vertices() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let data = Dataset::sst_like(3, 4, 20, 5);
+    let refs: Vec<&InputGraph> = data.graphs.iter().collect();
+    let n_vertices: usize = data.graphs.iter().map(InputGraph::n).sum();
+
+    let mut model = Model::new(Cell::TreeLstm, 32, 20, HeadKind::ClassifierAtRoot, 5, 3);
+    let mut eng = Engine::new(
+        &rt,
+        EngineOpts { policy: Policy::Serial, lazy_batching: false, ..Default::default() },
+    );
+    rt.reset_stats();
+    eng.run_minibatch(&mut model, &refs).unwrap();
+    let serial_execs = rt.stats().executions;
+
+    let mut model2 = Model::new(Cell::TreeLstm, 32, 20, HeadKind::ClassifierAtRoot, 5, 3);
+    let mut eng2 = Engine::new(
+        &rt,
+        EngineOpts { lazy_batching: false, ..Default::default() },
+    );
+    rt.reset_stats();
+    eng2.run_minibatch(&mut model2, &refs).unwrap();
+    let batched_execs = rt.stats().executions;
+
+    // serial: >= 2 launches per vertex (fwd+bwd); batched: far fewer
+    assert!(serial_execs as usize >= 2 * n_vertices);
+    assert!(
+        batched_execs * 2 < serial_execs,
+        "batched {batched_execs} vs serial {serial_execs}"
+    );
+}
+
+#[test]
+fn memory_traffic_accounting_is_nonzero_and_resets() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let data = Dataset::sst_like(4, 3, 20, 5);
+    let refs: Vec<&InputGraph> = data.graphs.iter().collect();
+    let mut model = Model::new(Cell::TreeLstm, 32, 20, HeadKind::ClassifierAtRoot, 5, 3);
+    let mut eng = Engine::new(&rt, EngineOpts::default());
+    eng.run_minibatch(&mut model, &refs).unwrap();
+    assert!(eng.traffic.bytes() > 0);
+    assert!(eng.traffic.ops() > 0);
+    assert!(eng.timers.memory_s > 0.0);
+    assert!(eng.timers.compute_s > 0.0);
+    eng.reset_counters();
+    assert_eq!(eng.traffic.bytes(), 0);
+    assert_eq!(eng.timers.total_s(), 0.0);
+}
+
+#[test]
+fn engine_errors_cleanly_without_artifacts_for_h() {
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    // h=48 was never compiled: the engine must fail with a clear error,
+    // not panic or compute garbage
+    let mut model = Model::new(Cell::TreeLstm, 48, 20, HeadKind::ClassifierAtRoot, 5, 3);
+    let g = synth::random_binary_tree(&mut Rng::new(1), 20, 3, 5);
+    let mut eng = Engine::new(&rt, EngineOpts::default());
+    let err = eng.run_minibatch(&mut model, &[&g]).unwrap_err();
+    assert!(format!("{err}").contains("artifacts"), "{err}");
+}
+
+#[test]
+fn oversized_frontier_is_chunked_to_max_bucket() {
+    // 40 single-vertex graphs at quick h=32 (max bucket 4): the frontier
+    // of 40 must be executed in 10 chunks, not rejected
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+    let graphs: Vec<InputGraph> = (0..40)
+        .map(|i| {
+            InputGraph::from_children(vec![vec![]], vec![i % 20], vec![-1], 1)
+                .unwrap()
+        })
+        .collect();
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let mut model = Model::new(Cell::TreeLstm, 32, 20, HeadKind::ClassifierAtRoot, 5, 3);
+    let mut eng = Engine::new(&rt, EngineOpts::default());
+    let r = eng.run_minibatch(&mut model, &refs).unwrap();
+    assert_eq!(r.n_vertices, 40);
+    assert!(r.n_tasks >= 10);
+    assert!(r.loss.is_finite());
+}
