@@ -8,7 +8,7 @@ use cavs::runtime::Runtime;
 fn main() -> anyhow::Result<()> {
     cavs::util::logger::init();
     let rt = Runtime::from_env()?;
-    let scale = Scale { samples: 0.1, full: false };
+    let scale = Scale { samples: 0.1, ..Scale::default() };
     for p in ['a', 'b', 'c', 'd', 'e', 'f', 'g', 'h'] {
         let t = fig8(&rt, p, scale)?;
         println!("\n{}", t.render());

@@ -6,7 +6,7 @@ use cavs::runtime::Runtime;
 fn main() -> anyhow::Result<()> {
     cavs::util::logger::init();
     let rt = Runtime::from_env()?;
-    let scale = Scale { samples: 0.1, full: false };
+    let scale = Scale { samples: 0.1, ..Scale::default() };
     println!("\n{}", fig9a(&rt, scale)?.render());
     println!("\n{}", fig9b(&rt, scale)?.render());
     Ok(())

@@ -1,19 +1,24 @@
 //! Microbenchmarks of the L3 substrates: dynamic-tensor choreography,
-//! gather/scatter copies, scheduler BFS, batching-vs-serial policy
-//! (§5.1's speedup curve at reduced size), and PJRT launch overhead.
+//! gather/scatter copies, scheduler BFS, intra-task thread scaling of a
+//! batched LSTM frontier step, batching-vs-serial policy (§5.1's speedup
+//! curve at reduced size), and PJRT launch overhead.
+//!
+//! The PJRT-dependent sections are skipped (with a notice) when no
+//! artifact set is present, so the host-side benches run everywhere.
 use std::time::Instant;
 
 use cavs::bench::experiments::{serial_vs_batched, Scale};
+use cavs::exec::parallel::{run_host_frontier, HostLstm};
 use cavs::graph::{Dataset, GraphBatch, InputGraph};
 use cavs::memory::{MemTraffic, StateBuffer};
 use cavs::runtime::{Arg, Runtime};
 use cavs::scheduler::{frontier_levels, schedule, Policy};
 use cavs::tensor::DynamicTensor;
-use cavs::util::stats::{measure, fmt_duration};
+use cavs::util::rng::Rng;
+use cavs::util::stats::{fmt_duration, measure};
 
 fn main() -> anyhow::Result<()> {
     cavs::util::logger::init();
-    let rt = Runtime::from_env()?;
 
     // --- scheduler BFS over a merged 64-tree batch ---------------------
     let data = Dataset::sst_like(1, 64, 100, 5);
@@ -67,6 +72,57 @@ fn main() -> anyhow::Result<()> {
     });
     println!("dynamic tensor 64-task fwd+bwd choreography: {}", fmt_duration(s.median_s));
 
+    // --- intra-task thread scaling: batched LSTM frontier steps ---------
+    // 64 fixed-length chains merged into one batch -> every frontier step
+    // is one 64-row task; the host LSTM cell F runs over row shards
+    // (exec::parallel). This is the worker-pool speedup curve.
+    let h = 128;
+    let vocab = 50usize;
+    let mut rng = Rng::new(7);
+    let cell = HostLstm::random(h, &mut rng);
+    let chains: Vec<InputGraph> = (0..64)
+        .map(|_| {
+            let toks: Vec<i32> = (0..32).map(|_| rng.below(vocab) as i32).collect();
+            let labs = vec![-1i32; 32];
+            InputGraph::chain(&toks, &labs)
+        })
+        .collect();
+    let crefs: Vec<&InputGraph> = chains.iter().collect();
+    let cbatch = GraphBatch::new(&crefs, 1);
+    let ctasks = schedule(&cbatch, Policy::Batched, &[1, 2, 4, 8, 16, 32, 64]);
+    let xtable: Vec<f32> = (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+    let mut base_s = 0.0;
+    println!(
+        "batched LSTM frontier (h={h}, {} vertices, {} tasks): thread scaling",
+        cbatch.n_vertices,
+        ctasks.len()
+    );
+    for threads in [1usize, 2, 4, 8] {
+        let s = measure(2, 8, || {
+            let r = run_host_frontier(&cbatch, &ctasks, &cell, &xtable, threads, false);
+            std::hint::black_box(r.states);
+        });
+        if threads == 1 {
+            base_s = s.median_s;
+        }
+        println!(
+            "  threads={threads}: {} median ({:.2}x vs 1 thread)",
+            fmt_duration(s.median_s),
+            base_s / s.median_s.max(1e-12)
+        );
+    }
+
+    // --- PJRT-dependent sections (need the AOT artifact set) -------------
+    let rt = match Runtime::from_env() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!(
+                "\n(skipping PJRT launch-overhead + §5.1 policy benches: {e:#?})"
+            );
+            return Ok(());
+        }
+    };
+
     // --- PJRT launch overhead (tiny op vs sizeable op) -------------------
     let a = vec![1.0f32; 32];
     let exe = rt.load("op_add_n32")?;
@@ -81,7 +137,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- §5.1 batched-vs-serial at micro scale ---------------------------
-    let t = serial_vs_batched(&rt, Scale { samples: 0.1, full: false })?;
+    let t = serial_vs_batched(&rt, Scale { samples: 0.1, ..Scale::default() })?;
     println!("\n{}", t.render());
     Ok(())
 }

@@ -6,6 +6,6 @@ use cavs::runtime::Runtime;
 fn main() -> anyhow::Result<()> {
     cavs::util::logger::init();
     let rt = Runtime::from_env()?;
-    println!("\n{}", table1(&rt, Scale { samples: 0.1, full: false })?.render());
+    println!("\n{}", table1(&rt, Scale { samples: 0.1, ..Scale::default() })?.render());
     Ok(())
 }

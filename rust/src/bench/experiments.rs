@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::exec::EngineOpts;
+use crate::exec::{EngineOpts, ExecOpts};
 use crate::graph::Dataset;
 use crate::models::{Cell, HeadKind, Model};
 use crate::runtime::Runtime;
@@ -25,11 +25,13 @@ pub struct Scale {
     pub samples: f64,
     /// include the largest sweep points (leaves=1024, bs=256)
     pub full: bool,
+    /// intra-task worker threads for the Cavs engine points (`--threads`)
+    pub threads: usize,
 }
 
 impl Default for Scale {
     fn default() -> Self {
-        Scale { samples: 1.0, full: false }
+        Scale { samples: 1.0, full: false, threads: 1 }
     }
 }
 
@@ -88,8 +90,11 @@ fn speedup(base: f64, x: f64) -> String {
     }
 }
 
-fn cavs_default() -> System {
-    System::Cavs(EngineOpts::default())
+fn cavs_default(scale: Scale) -> System {
+    System::Cavs(EngineOpts {
+        exec: ExecOpts::with_threads(scale.threads),
+        ..Default::default()
+    })
 }
 
 /// Measure one point; returns metrics normalized to `norm_n` samples.
@@ -134,21 +139,29 @@ fn point(
 // Fig. 8 (e)-(h): epoch time vs hidden size at bs=64
 // ---------------------------------------------------------------------
 
-fn fig8_systems(cell: Cell) -> Vec<System> {
+fn fig8_systems(cell: Cell, scale: Scale) -> Vec<System> {
     match cell {
         Cell::Lstm => vec![
             System::ScanStatic { t: 64 }, // cuDNN-analogue == TF static decl
-            cavs_default(),
+            cavs_default(scale),
             System::DynDecl,
         ],
-        Cell::TreeLstm => vec![cavs_default(), System::Fold { threads: 32 }, System::DynDecl],
-        Cell::TreeFc => vec![cavs_default(), System::Fold { threads: 1 }, System::DynDecl],
-        Cell::Gru => vec![cavs_default()],
+        Cell::TreeLstm => vec![
+            cavs_default(scale),
+            System::Fold { threads: 32 },
+            System::DynDecl,
+        ],
+        Cell::TreeFc => vec![
+            cavs_default(scale),
+            System::Fold { threads: 1 },
+            System::DynDecl,
+        ],
+        Cell::Gru => vec![cavs_default(scale)],
     }
 }
 
-fn var_lstm_systems() -> Vec<System> {
-    vec![System::ScanDynamic, cavs_default(), System::DynDecl]
+fn var_lstm_systems(scale: Scale) -> Vec<System> {
+    vec![System::ScanDynamic, cavs_default(scale), System::DynDecl]
 }
 
 /// Shared driver for the eight Fig. 8 panels.
@@ -163,7 +176,8 @@ fn fig8_panel(
     h_list: &[usize],
     scale: Scale,
 ) -> Result<Table> {
-    let systems = if var_len { var_lstm_systems() } else { fig8_systems(cell) };
+    let systems =
+        if var_len { var_lstm_systems(scale) } else { fig8_systems(cell, scale) };
     let mut header = vec!["config".to_string()];
     header.extend(systems.iter().map(|s| s.label()));
     header.push("best-vs-Cavs".into());
@@ -246,7 +260,7 @@ pub fn serial_vs_batched(rt: &Runtime, scale: Scale) -> Result<Table> {
     for &bs in bss {
         let n = n_scaled(bs.max(8), scale);
         let data = dataset_for(Cell::Lstm, n, rt, 64, 0);
-        let b = point(rt, cavs_default(), Cell::Lstm, 512, &data, bs, 256, true)?;
+        let b = point(rt, cavs_default(scale), Cell::Lstm, 512, &data, bs, 256, true)?;
         let s = point(rt, System::CavsSerial, Cell::Lstm, 512, &data, bs, 256, true)?;
         table.row(vec![
             bs.to_string(),
@@ -273,7 +287,7 @@ pub fn fig9a(rt: &Runtime, scale: Scale) -> Result<Table> {
     for &leaves in leaves_list {
         let bs = 64usize.min((n_scaled(64, scale)).max(2));
         let data = Dataset::treefc(11, bs, rt.manifest.vocab, leaves);
-        for sys in [cavs_default(), System::Fold { threads: 1 }, System::DynDecl] {
+        for sys in [cavs_default(scale), System::Fold { threads: 1 }, System::DynDecl] {
             let m = point(rt, sys, Cell::TreeFc, 512, &data, bs, bs, true)?;
             let pct = 100.0 * m.construction_s() / m.seconds.max(1e-9);
             table.row(vec![
@@ -300,7 +314,7 @@ pub fn fig9b(rt: &Runtime, scale: Scale) -> Result<Table> {
         let n = n_scaled((2 * bs).max(32), scale);
         let data = Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls);
         for sys in [
-            cavs_default(),
+            cavs_default(scale),
             System::Fold { threads: 1 },
             System::Fold { threads: 32 },
             System::DynDecl,
@@ -336,7 +350,7 @@ pub fn table1(rt: &Runtime, scale: Scale) -> Result<Table> {
         let bs = 64usize;
         let n = n_scaled(8, scale).max(4);
         let data = Dataset::treefc(11, n, rt.manifest.vocab, leaves);
-        let c = point(rt, cavs_default(), Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
+        let c = point(rt, cavs_default(scale), Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
         let f = point(rt, System::Fold { threads: 1 }, Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
         let d = point(rt, System::DynDecl, Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
         table.row(vec![
@@ -353,7 +367,7 @@ pub fn table1(rt: &Runtime, scale: Scale) -> Result<Table> {
     for &bs in bss {
         let n = n_scaled((2 * bs).max(32), scale);
         let data = Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls);
-        let c = point(rt, cavs_default(), Cell::TreeLstm, 512, &data, bs, 256, true)?;
+        let c = point(rt, cavs_default(scale), Cell::TreeLstm, 512, &data, bs, 256, true)?;
         let f = point(rt, System::Fold { threads: 32 }, Cell::TreeLstm, 512, &data, bs, 256, true)?;
         let d = point(rt, System::DynDecl, Cell::TreeLstm, 512, &data, bs, 256, true)?;
         table.row(vec![
@@ -389,6 +403,7 @@ pub fn fig10(rt: &Runtime, scale: Scale) -> Result<Table> {
                 fusion: false,
                 streaming: false,
                 training: true,
+                exec: ExecOpts::with_threads(scale.threads),
             };
             let norm = 64;
             let base = point(rt, System::Cavs(base_opts), cell, h, &data, 64.min(n), norm, true)?;
@@ -450,8 +465,8 @@ pub fn table2(rt: &Runtime, scale: Scale) -> Result<Table> {
         let n = n_scaled((2 * bs).max(32), scale);
         let data = Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls);
         let h = 256;
-        let ct = point(rt, cavs_default(), Cell::TreeLstm, h, &data, bs, 256, true)?;
-        let ci = point(rt, cavs_default(), Cell::TreeLstm, h, &data, bs, 256, false)?;
+        let ct = point(rt, cavs_default(scale), Cell::TreeLstm, h, &data, bs, 256, true)?;
+        let ci = point(rt, cavs_default(scale), Cell::TreeLstm, h, &data, bs, 256, false)?;
         let dt = point(rt, System::DynDecl, Cell::TreeLstm, h, &data, bs, 256, true)?;
         let di = point(rt, System::DynDecl, Cell::TreeLstm, h, &data, bs, 256, false)?;
         table.row(vec![

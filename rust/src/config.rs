@@ -28,6 +28,8 @@ pub struct Config {
     pub lazy_batching: bool,
     pub fusion: bool,
     pub streaming: bool,
+    /// intra-task worker threads (`--threads N` on the CLI)
+    pub threads: usize,
     pub artifacts_dir: String,
 }
 
@@ -51,6 +53,7 @@ impl Default for Config {
             lazy_batching: true,
             fusion: true,
             streaming: false,
+            threads: 1,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -103,6 +106,13 @@ impl Config {
             "lazy_batching" => self.lazy_batching = parse_bool(val)?,
             "fusion" => self.fusion = parse_bool(val)?,
             "streaming" => self.streaming = parse_bool(val)?,
+            "threads" => {
+                let t: usize = val.parse()?;
+                if t == 0 {
+                    bail!("threads must be >= 1");
+                }
+                self.threads = t;
+            }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             _ => bail!("unknown config key '{key}'"),
         }
@@ -116,6 +126,7 @@ impl Config {
             fusion: self.fusion,
             streaming: self.streaming,
             training,
+            exec: crate::exec::ExecOpts::with_threads(self.threads),
         }
     }
 }
@@ -162,6 +173,17 @@ mod tests {
         assert_eq!(c.policy, Policy::Serial);
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("fusion", "maybe").is_err());
+    }
+
+    #[test]
+    fn threads_key_flows_into_engine_opts() {
+        let mut c = Config::default();
+        assert_eq!(c.engine_opts(true).exec.threads, 1);
+        c.apply("threads", "8").unwrap();
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.engine_opts(true).exec.threads, 8);
+        assert!(c.apply("threads", "0").is_err());
+        assert!(c.apply("threads", "lots").is_err());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::parallel::{self, ExecOpts};
 use crate::graph::{GraphBatch, InputGraph};
 use crate::memory::{copy_col_slice, MemTraffic, StateBuffer};
 use crate::models::{Cell, HeadKind, Model};
@@ -22,6 +23,11 @@ pub struct EngineOpts {
     /// overlap pull-side staging with task execution on a second thread
     pub streaming: bool,
     pub training: bool,
+    /// intra-task worker pool: shard each task's host-side rows (pull,
+    /// gather, scatter, scatter-add, pull adjoint) across `exec.threads`
+    /// scoped threads. `threads == 1` is the fully sequential path and
+    /// produces bitwise-identical results (see exec::parallel).
+    pub exec: ExecOpts,
 }
 
 impl Default for EngineOpts {
@@ -32,6 +38,7 @@ impl Default for EngineOpts {
             fusion: true,
             streaming: false,
             training: true,
+            exec: ExecOpts::default(),
         }
     }
 }
@@ -200,6 +207,7 @@ impl<'rt> Engine<'rt> {
             None
         };
 
+        let nt = self.opts.exec.threads.max(1);
         for (t, task) in tasks.iter().enumerate() {
             let b = task.bucket;
             let m = task.m();
@@ -214,12 +222,14 @@ impl<'rt> Engine<'rt> {
                     ws.dt_x.view_mut()[..m * model.h].copy_from_slice(&block);
                     self.traffic.add(block.len() * 4);
                 } else {
-                    for (i, &v) in task.verts.iter().enumerate() {
-                        if let Some(row) = model.embedding.row(batch.tokens[v as usize])
-                        {
-                            ws.dt_x.row_mut(i).copy_from_slice(row);
+                    let emb = &model.embedding;
+                    let dst = &mut ws.dt_x.view_mut()[..m * model.h];
+                    parallel::fill_rows(dst, model.h, nt, |i, row, _tl| {
+                        let tok = batch.tokens[task.verts[i] as usize];
+                        if let Some(src) = emb.row(tok) {
+                            row.copy_from_slice(src);
                         }
-                    }
+                    });
                     self.traffic.add(m * model.h * 4);
                 }
             });
@@ -235,9 +245,10 @@ impl<'rt> Engine<'rt> {
                         .map(|&v| batch.child(v, slot))
                         .collect();
                     let cols = ws.dt_s[slot].cols;
-                    ws.state_buf.gather(
+                    ws.state_buf.gather_mt(
                         &ids,
                         &mut ws.dt_s[slot].view_mut()[..m * cols],
+                        nt,
                         &self.traffic,
                     );
                 }
@@ -261,9 +272,10 @@ impl<'rt> Engine<'rt> {
             // -- scatter: publish states for parents ------------------
             self.timers.time(Phase::Memory, || {
                 let cols = ws.dt_sout.cols;
-                ws.state_buf.scatter(
+                ws.state_buf.scatter_mt(
                     &task.verts,
                     &ws.dt_sout.view()[..m * cols],
+                    nt,
                     &self.traffic,
                 );
             });
@@ -519,6 +531,7 @@ impl<'rt> Engine<'rt> {
         let h = model.h;
         let state_cols = cell.state_cols(h);
         let lazy = ws.dt_gates.is_some();
+        let nt = self.opts.exec.threads.max(1);
 
         for task in tasks.iter().rev() {
             let b = task.bucket;
@@ -539,9 +552,10 @@ impl<'rt> Engine<'rt> {
                 ws.scratch_g.fill(0.0);
                 let ids: Vec<Option<u32>> =
                     task.verts.iter().map(|&v| Some(v)).collect();
-                ws.grad_buf.as_ref().unwrap().gather(
+                ws.grad_buf.as_ref().unwrap().gather_mt(
                     &ids,
                     &mut ws.scratch_g[..m * state_cols],
+                    nt,
                     &self.traffic,
                 );
             });
@@ -580,15 +594,18 @@ impl<'rt> Engine<'rt> {
                 idx += n_params;
                 self.timers.add(Phase::Compute, t1.elapsed());
             }
-            // gx -> embedding grads (pull adjoint = push to external)
+            // gx -> embedding grads (pull adjoint = push to external),
+            // owner-sharded by token so duplicate tokens accumulate in
+            // sequential order on one worker
             let gx = outs[idx].to_vec::<f32>()?;
             idx += 1;
             self.timers.time(Phase::Memory, || {
-                for (i, &v) in task.verts.iter().enumerate() {
-                    model
-                        .embedding
-                        .acc_grad(batch.tokens[v as usize], &gx[i * h..(i + 1) * h]);
-                }
+                let toks: Vec<i32> = task
+                    .verts
+                    .iter()
+                    .map(|&v| batch.tokens[v as usize])
+                    .collect();
+                model.embedding.acc_grad_rows_mt(&toks, &gx[..m * h], nt);
                 self.traffic.add(m * h * 4);
             });
             // gs slots -> scatter-add to children rows (scatter adjoint)
@@ -601,9 +618,10 @@ impl<'rt> Engine<'rt> {
                         .iter()
                         .map(|&v| batch.child(v, slot))
                         .collect();
-                    ws.grad_buf.as_mut().unwrap().scatter_add(
+                    ws.grad_buf.as_mut().unwrap().scatter_add_mt(
                         &ids,
                         &gs[..m * state_cols],
+                        nt,
                         &self.traffic,
                     );
                 });

@@ -8,9 +8,16 @@
 //! * **kernel fusion** — the whole-cell fused (Pallas) artifact replaces
 //!   the op-by-op interpretation of F;
 //! * **streaming** — the eager (pull-side) staging of F runs on a second
-//!   thread overlapped with task execution.
+//!   thread overlapped with task execution;
+//!
+//! plus the intra-task worker pool (`parallel`, `ExecOpts { threads }`)
+//! that shards each task's host-side rows — pull staging, gather,
+//! scatter, scatter-add and the pull adjoint — across scoped threads
+//! (DESIGN.md §5).
 
 pub mod engine;
+pub mod parallel;
 pub mod unfused;
 
 pub use engine::{Engine, EngineOpts, StepResult};
+pub use parallel::ExecOpts;

@@ -1,0 +1,703 @@
+//! Intra-task parallel execution (DESIGN.md §5).
+//!
+//! A batching task `V_t` is one dense `[bucket, cols]` block per operand;
+//! its rows are independent, so the host-side work of a task — pull
+//! staging, gather, the vertex function `F` itself on the host path,
+//! scatter, and the backward adjoints — shards into contiguous per-worker
+//! row ranges executed under `std::thread::scope`. No worker ever writes
+//! a row another worker touches:
+//!
+//! * forward writes shard by destination row (each vertex is evaluated by
+//!   exactly one task, once),
+//! * backward scatter-adds shard by destination *owner* (`id % threads`),
+//!   so gradient contributions to a shared child accumulate on a single
+//!   worker in the sequential order — results are **bitwise identical**
+//!   for every thread count (a property test enforces this).
+//!
+//! Traffic counters stay contention-free: workers accumulate into
+//! per-thread [`TrafficLocal`]s that are merged once at task end
+//! (`memory::MemTraffic::merge`).
+//!
+//! The module also provides a host (pure-Rust) reference executor,
+//! [`run_host_frontier`], that runs a scheduled task list over a
+//! [`GraphBatch`] with a [`HostCell`] vertex function. It exists for two
+//! reasons: the equivalence property tests and thread-scaling
+//! microbenchmarks must run on machines without the PJRT artifact set,
+//! and it documents the exact memory choreography the PJRT engine
+//! (`exec::engine`) performs around its kernel launches.
+
+use std::ops::Range;
+
+use crate::graph::GraphBatch;
+use crate::memory::{MemTraffic, StateBuffer, TrafficLocal};
+use crate::scheduler::Task;
+use crate::util::rng::Rng;
+
+/// Execution-layer options threaded from the CLI (`--threads N`) through
+/// `config::Config` into `exec::EngineOpts`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOpts {
+    /// Worker threads for intra-task row sharding. 1 = the sequential
+    /// path (no scoped threads are spawned at all).
+    pub threads: usize,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { threads: 1 }
+    }
+}
+
+impl ExecOpts {
+    pub fn with_threads(threads: usize) -> ExecOpts {
+        ExecOpts { threads: threads.max(1) }
+    }
+}
+
+/// Split `rows` into `threads` contiguous, balanced, covering ranges
+/// (first `rows % threads` ranges get one extra row).
+pub fn shard_ranges(rows: usize, threads: usize) -> Vec<Range<usize>> {
+    let t = threads.max(1).min(rows.max(1));
+    let base = rows / t;
+    let extra = rows % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(row_index, row, local_traffic)` over every `cols`-wide row of
+/// `dst`, sharded across `threads` workers. Returns the merged per-thread
+/// traffic. With `threads <= 1` this is a plain loop — the sequential and
+/// parallel paths execute identical per-row code, which is what makes the
+/// bitwise-equivalence property testable.
+pub fn fill_rows<F>(dst: &mut [f32], cols: usize, threads: usize, f: F) -> TrafficLocal
+where
+    F: Fn(usize, &mut [f32], &mut TrafficLocal) + Sync,
+{
+    let rows = if cols == 0 { 0 } else { dst.len() / cols };
+    let threads = threads.min(rows).max(1);
+    let mut total = TrafficLocal::default();
+    if threads <= 1 {
+        for i in 0..rows {
+            f(i, &mut dst[i * cols..(i + 1) * cols], &mut total);
+            total.rows += 1;
+        }
+        return total;
+    }
+    let ranges = shard_ranges(rows, threads);
+    let mut locals = vec![TrafficLocal::default(); ranges.len()];
+    std::thread::scope(|s| {
+        let mut rest = &mut dst[..rows * cols];
+        for (range, tl) in ranges.into_iter().zip(locals.iter_mut()) {
+            let (chunk, r) = rest.split_at_mut(range.len() * cols);
+            rest = r;
+            let fr = &f;
+            s.spawn(move || {
+                for (k, i) in range.enumerate() {
+                    fr(i, &mut chunk[k * cols..(k + 1) * cols], tl);
+                    tl.rows += 1;
+                }
+            });
+        }
+    });
+    for tl in &locals {
+        total.absorb(*tl);
+    }
+    total
+}
+
+/// Shareable raw row pointer for the shard-disjoint writers (also used by
+/// `memory`'s `*_mt` methods). Safety rests on the callers' owner-partition
+/// disjointness arguments.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Partition `(row, owner_key)` pairs into `threads` per-owner lists
+/// (`key % threads`), preserving input order within each list. This is the
+/// single sequential pre-pass behind every owner-sharded accumulation:
+/// each destination row lives in exactly one list, and entries stay in
+/// ascending row order, so parallel application is disjoint AND bitwise
+/// identical to the sequential loop (duplicates apply in the same order).
+pub(crate) fn partition_by_owner(
+    threads: usize,
+    pairs: impl Iterator<Item = (usize, usize)>,
+) -> Vec<Vec<(usize, usize)>> {
+    let mut owned: Vec<Vec<(usize, usize)>> = vec![Vec::new(); threads];
+    for (m, v) in pairs {
+        owned[v % threads].push((m, v));
+    }
+    owned
+}
+
+/// Owner-sharded row accumulation into a dense `[vocab, dim]` table:
+/// `dst[toks[i]] += src[i]` for every valid token, with row ownership
+/// partitioned as `tok % threads`. Duplicate tokens accumulate on one
+/// worker in ascending-`i` order — bitwise identical to the sequential
+/// loop. Used for embedding gradients (the pull adjoint).
+pub fn owner_add_rows(
+    dst: &mut [f32],
+    dim: usize,
+    toks: &[i32],
+    src: &[f32],
+    threads: usize,
+) {
+    let vocab = if dim == 0 { 0 } else { dst.len() / dim };
+    let threads = threads.min(toks.len()).max(1);
+    if threads <= 1 {
+        for (i, &t) in toks.iter().enumerate() {
+            if t < 0 || t as usize >= vocab {
+                continue;
+            }
+            let t = t as usize;
+            let row = &mut dst[t * dim..(t + 1) * dim];
+            for (a, b) in row.iter_mut().zip(&src[i * dim..(i + 1) * dim]) {
+                *a += *b;
+            }
+        }
+        return;
+    }
+    let owned = partition_by_owner(
+        threads,
+        toks.iter().enumerate().filter_map(|(i, &t)| {
+            (t >= 0 && (t as usize) < vocab).then_some((i, t as usize))
+        }),
+    );
+    if owned.iter().all(Vec::is_empty) {
+        return;
+    }
+    let ptr = SendPtr(dst.as_mut_ptr());
+    std::thread::scope(|s| {
+        for list in owned.iter().filter(|l| !l.is_empty()) {
+            let p = ptr;
+            s.spawn(move || {
+                for &(i, t) in list {
+                    // SAFETY: the owner partition puts each token row in
+                    // exactly one worker's list; rows are disjoint
+                    // dim-blocks inside the live allocation.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(p.0.add(t * dim), dim)
+                    };
+                    for (a, b) in row.iter_mut().zip(&src[i * dim..(i + 1) * dim])
+                    {
+                        *a += *b;
+                    }
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Host reference cells + frontier executor
+// ---------------------------------------------------------------------
+
+/// A vertex function `F` evaluated row-by-row on the host. Implementations
+/// must be pure per row (no interior mutability), which is what makes row
+/// sharding sound and deterministic.
+pub trait HostCell: Sync {
+    /// Child slots gathered per vertex.
+    fn arity(&self) -> usize;
+    /// Columns of the pull input `x`.
+    fn x_cols(&self) -> usize;
+    /// Columns of the scattered state.
+    fn state_cols(&self) -> usize;
+    /// `out = F(x, s_children)` for one vertex.
+    fn forward(&self, x: &[f32], s: &[&[f32]], out: &mut [f32]);
+    /// Adjoint for one vertex: given `g_out`, write `gx` and per-slot
+    /// `gs` (buffers arrive zeroed). Default: the cell is forward-only.
+    fn backward(
+        &self,
+        x: &[f32],
+        s: &[&[f32]],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [&mut [f32]],
+    ) {
+        let _ = (x, s, g_out, gx, gs);
+        panic!("this host cell is forward-only (no backward implemented)");
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Tree-FC-style host cell: `out = tanh(Wx·x + Σ_slot Ws·s_slot + b)`.
+/// Forward and backward are exact, so the equivalence property tests can
+/// exercise the full forward+backward choreography.
+pub struct HostTreeFc {
+    pub h: usize,
+    arity: usize,
+    wx: Vec<f32>,      // [h, h] row-major (input k, output j)
+    ws: Vec<Vec<f32>>, // arity × [h, h]
+    b: Vec<f32>,       // [h]
+}
+
+impl HostTreeFc {
+    pub fn random(h: usize, arity: usize, rng: &mut Rng) -> HostTreeFc {
+        let init = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32(0.2)).collect()
+        };
+        HostTreeFc {
+            h,
+            arity,
+            wx: init(rng, h * h),
+            ws: (0..arity).map(|_| init(rng, h * h)).collect(),
+            b: init(rng, h),
+        }
+    }
+
+    fn preactivation(&self, x: &[f32], s: &[&[f32]], pre: &mut [f32]) {
+        let h = self.h;
+        pre.copy_from_slice(&self.b);
+        for k in 0..h {
+            let xv = x[k];
+            if xv != 0.0 {
+                for (j, p) in pre.iter_mut().enumerate() {
+                    *p += xv * self.wx[k * h + j];
+                }
+            }
+        }
+        for (slot, sv) in s.iter().enumerate() {
+            let w = &self.ws[slot];
+            for k in 0..h {
+                let hv = sv[k];
+                if hv != 0.0 {
+                    for (j, p) in pre.iter_mut().enumerate() {
+                        *p += hv * w[k * h + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl HostCell for HostTreeFc {
+    fn arity(&self) -> usize {
+        self.arity
+    }
+
+    fn x_cols(&self) -> usize {
+        self.h
+    }
+
+    fn state_cols(&self) -> usize {
+        self.h
+    }
+
+    fn forward(&self, x: &[f32], s: &[&[f32]], out: &mut [f32]) {
+        self.preactivation(x, s, out);
+        for o in out.iter_mut() {
+            *o = o.tanh();
+        }
+    }
+
+    fn backward(
+        &self,
+        x: &[f32],
+        s: &[&[f32]],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [&mut [f32]],
+    ) {
+        let h = self.h;
+        // recompute the activation, then dpre = g_out * (1 - tanh^2)
+        let mut dpre = vec![0.0f32; h];
+        self.preactivation(x, s, &mut dpre);
+        for (j, d) in dpre.iter_mut().enumerate() {
+            let t = d.tanh();
+            *d = g_out[j] * (1.0 - t * t);
+        }
+        for k in 0..h {
+            let mut acc = 0.0;
+            for (j, d) in dpre.iter().enumerate() {
+                acc += d * self.wx[k * h + j];
+            }
+            gx[k] = acc;
+        }
+        for (slot, gslot) in gs.iter_mut().enumerate() {
+            let w = &self.ws[slot];
+            for k in 0..h {
+                let mut acc = 0.0;
+                for (j, d) in dpre.iter().enumerate() {
+                    acc += d * w[k * h + j];
+                }
+                gslot[k] = acc;
+            }
+        }
+    }
+}
+
+/// Standard LSTM host cell (state `[c | h]`, arity 1) — the vertex
+/// function behind the thread-scaling microbenchmark (`benches/micro.rs`).
+/// Forward-only: the PJRT engine owns trained LSTM backward.
+pub struct HostLstm {
+    pub h: usize,
+    w: Vec<f32>, // [h, 4h]
+    u: Vec<f32>, // [h, 4h]
+    b: Vec<f32>, // [4h]
+}
+
+impl HostLstm {
+    pub fn random(h: usize, rng: &mut Rng) -> HostLstm {
+        let init = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32(0.08)).collect()
+        };
+        HostLstm {
+            h,
+            w: init(rng, h * 4 * h),
+            u: init(rng, h * 4 * h),
+            b: init(rng, 4 * h),
+        }
+    }
+}
+
+impl HostCell for HostLstm {
+    fn arity(&self) -> usize {
+        1
+    }
+
+    fn x_cols(&self) -> usize {
+        self.h
+    }
+
+    fn state_cols(&self) -> usize {
+        2 * self.h
+    }
+
+    fn forward(&self, x: &[f32], s: &[&[f32]], out: &mut [f32]) {
+        let h = self.h;
+        let (c_in, h_in) = s[0].split_at(h);
+        let mut gates = self.b.clone();
+        for k in 0..h {
+            let xv = x[k];
+            if xv != 0.0 {
+                for (j, g) in gates.iter_mut().enumerate() {
+                    *g += xv * self.w[k * 4 * h + j];
+                }
+            }
+            let hv = h_in[k];
+            if hv != 0.0 {
+                for (j, g) in gates.iter_mut().enumerate() {
+                    *g += hv * self.u[k * 4 * h + j];
+                }
+            }
+        }
+        let (c_out, h_out) = out.split_at_mut(h);
+        for j in 0..h {
+            let i = sigmoid(gates[j]);
+            let f = sigmoid(gates[h + j]);
+            let g = gates[2 * h + j].tanh();
+            let o = sigmoid(gates[3 * h + j]);
+            let c = f * c_in[j] + i * g;
+            c_out[j] = c;
+            h_out[j] = o * c.tanh();
+        }
+    }
+}
+
+/// Result of [`run_host_frontier`].
+pub struct HostRun {
+    /// Final per-vertex states.
+    pub states: StateBuffer,
+    /// Per-vertex state gradients (backward runs only).
+    pub grads: Option<StateBuffer>,
+    /// Dense `[vocab, x_cols]` input-table gradients (backward runs only).
+    pub x_grads: Option<Vec<f32>>,
+    pub traffic_bytes: u64,
+    pub traffic_ops: u64,
+    /// **Observed** padding: Σ over tasks of `bucket − rows F actually
+    /// evaluated`, counted by the sharded row loops themselves — a test
+    /// asserts it matches `ScheduleStats.padded_rows` for every thread
+    /// count, so a shard that drops or duplicates rows is caught.
+    pub padded_rows: usize,
+}
+
+/// Execute a scheduled task list over `batch` with the host cell `F`,
+/// forward (and, when `backward`, the reverse LIFO sweep seeding every
+/// graph root with a ones gradient). `xtable` is the dense `[vocab,
+/// x_cols]` pull source; vertices with token `< 0` or `>= vocab` pull
+/// zeros, exactly like the engine's embedding path.
+///
+/// This mirrors `exec::engine`'s per-task choreography — pull, gather,
+/// evaluate, scatter; then gather-g, adjoint, scatter-add — with every
+/// stage sharded over `threads` workers. Results are bitwise identical
+/// for every `threads` value.
+pub fn run_host_frontier<C: HostCell>(
+    batch: &GraphBatch,
+    tasks: &[Task],
+    cell: &C,
+    xtable: &[f32],
+    threads: usize,
+    backward: bool,
+) -> HostRun {
+    let xc = cell.x_cols();
+    let sc = cell.state_cols();
+    let ar = cell.arity();
+    let vocab = if xc == 0 { 0 } else { xtable.len() / xc };
+    let traffic = MemTraffic::default();
+    let mut states = StateBuffer::new(batch.n_vertices, sc);
+    // saved pull/gather blocks per task, for the backward recomputation
+    let mut saved: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::with_capacity(tasks.len());
+    // padding observed from execution: Σ (bucket − rows F actually ran on);
+    // NOT recomputed from the schedule, so a sharding bug that dropped or
+    // duplicated rows would show up here.
+    let mut padded_observed = 0usize;
+
+    for task in tasks {
+        let m = task.m();
+        let b = task.bucket;
+        // pull: stage x rows (token lookups; invalid tokens stay zero);
+        // blocks are bucket-padded like the engine's dynamic tensors
+        let mut x = vec![0.0f32; b * xc];
+        let mut local = fill_rows(&mut x[..m * xc], xc, threads, |i, row, tl| {
+            let tok = batch.tokens[task.verts[i] as usize];
+            if tok >= 0 && (tok as usize) < vocab {
+                let t = tok as usize;
+                row.copy_from_slice(&xtable[t * xc..(t + 1) * xc]);
+                tl.add_bytes(xc * 4);
+            }
+        });
+        local.ops += 1; // one pull primitive per task
+        traffic.merge(&local);
+
+        // gather: child states per slot
+        let mut s_blocks: Vec<Vec<f32>> = Vec::with_capacity(ar);
+        for slot in 0..ar {
+            let ids: Vec<Option<u32>> =
+                task.verts.iter().map(|&v| batch.child(v, slot)).collect();
+            let mut blk = vec![0.0f32; b * sc];
+            states.gather_mt(&ids, &mut blk[..m * sc], threads, &traffic);
+            s_blocks.push(blk);
+        }
+
+        // evaluate F over row shards
+        let mut out = vec![0.0f32; b * sc];
+        {
+            let xr = &x;
+            let sb = &s_blocks;
+            let fl = fill_rows(&mut out[..m * sc], sc, threads, |i, orow, _tl| {
+                let srows: Vec<&[f32]> =
+                    sb.iter().map(|blk| &blk[i * sc..(i + 1) * sc]).collect();
+                cell.forward(&xr[i * xc..(i + 1) * xc], &srows, orow);
+            });
+            padded_observed += b - fl.rows as usize;
+        }
+
+        // scatter: publish states for parents
+        states.scatter_mt(&task.verts, &out[..m * sc], threads, &traffic);
+        saved.push((x, s_blocks));
+    }
+
+    let (grads, x_grads) = if backward {
+        let mut grads = StateBuffer::new(batch.n_vertices, sc);
+        for &r in &batch.roots {
+            grads.row_mut(r as usize).fill(1.0);
+        }
+        let mut x_grads = vec![0.0f32; xtable.len()];
+
+        for (ti, task) in tasks.iter().enumerate().rev() {
+            let (x, s_blocks) = &saved[ti];
+            let m = task.m();
+
+            // gather g_out rows (head seeds + parent contributions)
+            let ids_self: Vec<Option<u32>> =
+                task.verts.iter().map(|&v| Some(v)).collect();
+            let mut g_out = vec![0.0f32; m * sc];
+            grads.gather_mt(&ids_self, &mut g_out, threads, &traffic);
+
+            // adjoint of F over row shards
+            let mut gx = vec![0.0f32; m * xc];
+            let mut gs: Vec<Vec<f32>> =
+                (0..ar).map(|_| vec![0.0f32; m * sc]).collect();
+            let nshard = threads.min(m).max(1);
+            {
+                let g_ref = &g_out;
+                std::thread::scope(|s| {
+                    let mut gx_rest: &mut [f32] = &mut gx;
+                    let mut gs_rest: Vec<&mut [f32]> =
+                        gs.iter_mut().map(Vec::as_mut_slice).collect();
+                    for range in shard_ranges(m, nshard) {
+                        let (gx_chunk, r) = std::mem::take(&mut gx_rest)
+                            .split_at_mut(range.len() * xc);
+                        gx_rest = r;
+                        let mut gs_chunks: Vec<&mut [f32]> =
+                            Vec::with_capacity(ar);
+                        for slot_rest in gs_rest.iter_mut() {
+                            let (a, b) = std::mem::take(slot_rest)
+                                .split_at_mut(range.len() * sc);
+                            *slot_rest = b;
+                            gs_chunks.push(a);
+                        }
+                        s.spawn(move || {
+                            for (k, i) in range.enumerate() {
+                                let srows: Vec<&[f32]> = s_blocks
+                                    .iter()
+                                    .map(|blk| &blk[i * sc..(i + 1) * sc])
+                                    .collect();
+                                let mut gs_rows: Vec<&mut [f32]> = gs_chunks
+                                    .iter_mut()
+                                    .map(|c| &mut c[k * sc..(k + 1) * sc])
+                                    .collect();
+                                cell.backward(
+                                    &x[i * xc..(i + 1) * xc],
+                                    &srows,
+                                    &g_ref[i * sc..(i + 1) * sc],
+                                    &mut gx_chunk[k * xc..(k + 1) * xc],
+                                    &mut gs_rows,
+                                );
+                            }
+                        });
+                    }
+                });
+            }
+
+            // scatter-add per slot (shared children accumulate)
+            for (slot, gslot) in gs.iter().enumerate() {
+                let ids: Vec<Option<u32>> =
+                    task.verts.iter().map(|&v| batch.child(v, slot)).collect();
+                grads.scatter_add_mt(&ids, gslot, threads, &traffic);
+            }
+
+            // pull adjoint: gx accumulates into the input table
+            let toks: Vec<i32> =
+                task.verts.iter().map(|&v| batch.tokens[v as usize]).collect();
+            owner_add_rows(&mut x_grads, xc, &toks, &gx, threads);
+            traffic.add(m * xc * 4);
+        }
+        (Some(grads), Some(x_grads))
+    } else {
+        (None, None)
+    };
+
+    HostRun {
+        states,
+        grads,
+        x_grads,
+        traffic_bytes: traffic.bytes(),
+        traffic_ops: traffic.ops(),
+        padded_rows: padded_observed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::InputGraph;
+    use crate::scheduler::{schedule, Policy};
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        for rows in [0usize, 1, 2, 7, 64, 100] {
+            for threads in [1usize, 2, 3, 8, 200] {
+                let rs = shard_ranges(rows, threads);
+                assert!(!rs.is_empty());
+                assert_eq!(rs.iter().map(|r| r.len()).sum::<usize>(), rows);
+                let mut next = 0;
+                let (mut lo, mut hi) = (usize::MAX, 0usize);
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                    lo = lo.min(r.len());
+                    hi = hi.max(r.len());
+                }
+                assert!(hi - lo <= 1, "unbalanced shards {rs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_rows_matches_sequential() {
+        let cols = 3;
+        let rows = 17;
+        let f = |i: usize, row: &mut [f32], tl: &mut TrafficLocal| {
+            for (j, x) in row.iter_mut().enumerate() {
+                *x = (i * 10 + j) as f32;
+            }
+            tl.add_bytes(cols * 4);
+        };
+        let mut seq = vec![0.0; rows * cols];
+        let t_seq = fill_rows(&mut seq, cols, 1, f);
+        for threads in [2, 4, 16] {
+            let mut par = vec![0.0; rows * cols];
+            let t_par = fill_rows(&mut par, cols, threads, f);
+            assert_eq!(seq, par);
+            assert_eq!(t_seq.bytes, t_par.bytes);
+        }
+    }
+
+    #[test]
+    fn owner_add_rows_handles_duplicates_and_invalid() {
+        let dim = 2;
+        let vocab = 4;
+        let toks = [0i32, 2, 0, -1, 99, 3, 0];
+        let src: Vec<f32> = (0..toks.len() * dim).map(|i| i as f32).collect();
+        let mut seq = vec![0.0; vocab * dim];
+        owner_add_rows(&mut seq, dim, &toks, &src, 1);
+        for threads in [2, 3, 8] {
+            let mut par = vec![0.0; vocab * dim];
+            owner_add_rows(&mut par, dim, &toks, &src, threads);
+            assert_eq!(seq, par);
+        }
+        // token 0 got rows 0, 2 and 6
+        assert_eq!(seq[0], 0.0 + 4.0 + 12.0);
+    }
+
+    #[test]
+    fn host_frontier_chain_runs_and_scales_threads_identically() {
+        let mut rng = Rng::new(11);
+        let graphs: Vec<InputGraph> = (0..6)
+            .map(|_| {
+                let len = 3 + rng.below(6);
+                let toks: Vec<i32> =
+                    (0..len).map(|_| rng.below(10) as i32).collect();
+                let labs = vec![-1; len];
+                InputGraph::chain(&toks, &labs)
+            })
+            .collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let tasks = schedule(&batch, Policy::Batched, &[1, 2, 4, 8]);
+        let h = 5;
+        let cell = HostTreeFc::random(h, 2, &mut rng);
+        let xtable: Vec<f32> =
+            (0..10 * h).map(|_| rng.normal_f32(0.5)).collect();
+        let base = run_host_frontier(&batch, &tasks, &cell, &xtable, 1, true);
+        assert!(base.states.as_slice().iter().all(|v| v.is_finite()));
+        assert!(base.grads.as_ref().unwrap().as_slice().iter().any(|&v| v != 0.0));
+        for threads in [2, 5] {
+            let r = run_host_frontier(&batch, &tasks, &cell, &xtable, threads, true);
+            assert_eq!(base.states.as_slice(), r.states.as_slice());
+            assert_eq!(
+                base.grads.as_ref().unwrap().as_slice(),
+                r.grads.as_ref().unwrap().as_slice()
+            );
+            assert_eq!(base.x_grads, r.x_grads);
+            assert_eq!(base.traffic_bytes, r.traffic_bytes);
+            assert_eq!(base.traffic_ops, r.traffic_ops);
+            assert_eq!(base.padded_rows, r.padded_rows);
+        }
+    }
+
+    #[test]
+    fn host_lstm_forward_is_finite_and_stateful() {
+        let mut rng = Rng::new(3);
+        let h = 8;
+        let cell = HostLstm::random(h, &mut rng);
+        let x: Vec<f32> = (0..h).map(|_| rng.normal_f32(0.5)).collect();
+        let s0 = vec![0.0f32; 2 * h];
+        let mut out1 = vec![0.0f32; 2 * h];
+        cell.forward(&x, &[&s0], &mut out1);
+        let mut out2 = vec![0.0f32; 2 * h];
+        cell.forward(&x, &[&out1], &mut out2);
+        assert!(out1.iter().all(|v| v.is_finite()));
+        assert_ne!(out1, out2, "state must influence the next step");
+    }
+}

@@ -2,8 +2,9 @@
 //!
 //! Rust + JAX + Pallas reproduction of *Cavs: A Vertex-centric Programming
 //! Interface for Dynamic Neural Networks* (Zhang, Xu, Neubig, Dai, Ho,
-//! Yang, Xing; 2017). See DESIGN.md for the architecture and
-//! EXPERIMENTS.md for the paper-vs-measured record.
+//! Yang, Xing; 2017). See DESIGN.md at the repository root for the
+//! architecture, the module map, and the intra-task parallel executor;
+//! bench tables land under `results/` (run `cavs bench`).
 
 pub mod baselines;
 pub mod bench;

@@ -67,6 +67,11 @@ impl Args {
                 cfg.apply(key, val)?;
             }
         }
+        // first-class shorthand for the intra-task worker pool
+        if let Some(t) = self.get("threads") {
+            cfg.apply("threads", t)
+                .context("--threads expects an integer >= 1")?;
+        }
         Ok(cfg)
     }
 }
@@ -96,16 +101,21 @@ fn print_help() {
         "cavs — vertex-centric dynamic-NN training system (paper reproduction)
 
 USAGE:
-  cavs train   [--config cfg.json] [--set k=v ...] [--save ckpt] [--load ckpt]
-  cavs eval    [--config cfg.json] [--set k=v ...]
+  cavs train   [--config cfg.json] [--threads N] [--set k=v ...]
+               [--save ckpt] [--load ckpt]
+  cavs eval    [--config cfg.json] [--threads N] [--set k=v ...]
   cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|loc|all
-               [--scale 1.0] [--full true]
+               [--scale 1.0] [--full true] [--threads N]
   cavs inspect [--set artifacts_dir=...]
   cavs analyze [--set cell=treelstm] [--set h=256]
 
+--threads N shards every batching task's host-side rows (pull/gather/
+  scatter/scatter-add) across N worker threads; results are bitwise
+  identical to N=1 (see DESIGN.md §5).
+
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
-  lazy_batching, fusion, streaming, artifacts_dir"
+  lazy_batching, fusion, streaming, threads, artifacts_dir"
     );
 }
 
@@ -221,6 +231,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .get("full")
             .map(|s| s == "true" || s == "1")
             .unwrap_or(false),
+        threads: cfg.threads,
     };
     let tables = match exp {
         "all" => experiments::run_all(&rt, scale)?,

@@ -7,35 +7,105 @@
 //! store is one contiguous block with row addressing — `IndexBuffer(op, m)`
 //! from Alg. 2 becomes a row offset. All copies are counted so the benches
 //! can reproduce the paper's memory-ops-vs-compute breakdown (Table 2).
+//!
+//! ## Multi-threaded variants
+//!
+//! The `*_mt` methods shard one batched copy across worker threads
+//! (`std::thread::scope`, see `exec::parallel` and DESIGN.md §5):
+//!
+//! * `gather_mt` shards by *destination row* — destination rows are
+//!   disjoint by construction, sources are read-only.
+//! * `scatter_mt` and `scatter_add_mt` shard by *destination owner*
+//!   (`id % threads`, one sequential partition pre-pass): each target
+//!   row belongs to exactly one worker for any input, and entries apply
+//!   in the same ascending-`m` order as the sequential loop — results
+//!   are bitwise identical for every thread count, and duplicate targets
+//!   (shared children receiving gradient from several parents) can
+//!   never race.
+//!
+//! Traffic accounting stays contention-free: worker threads either write
+//! per-thread [`TrafficLocal`] accumulators merged at task end, or the
+//! caller adds the (analytically known) byte count once after the join.
+//! Totals are invariant under thread count, so Table 2 numbers do not
+//! depend on `--threads`.
 
-use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Global byte counter for gather/scatter/pull/push traffic.
+/// Global byte counter for gather/scatter/pull/push traffic. Atomic (and
+/// therefore `Sync`) so engine workers can share `&MemTraffic`; the hot
+/// paths never touch it from inside a parallel region — they merge a
+/// [`TrafficLocal`] once per task instead.
 #[derive(Debug, Default)]
 pub struct MemTraffic {
-    bytes: Cell<u64>,
-    ops: Cell<u64>,
+    bytes: AtomicU64,
+    ops: AtomicU64,
 }
 
 impl MemTraffic {
+    /// Count one batched copy primitive of `bytes` bytes.
     pub fn add(&self, bytes: usize) {
-        self.bytes.set(self.bytes.get() + bytes as u64);
-        self.ops.set(self.ops.get() + 1);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge a per-thread accumulator (one shared-counter write per merge,
+    /// not per copy).
+    pub fn merge(&self, local: &TrafficLocal) {
+        if local.bytes > 0 {
+            self.bytes.fetch_add(local.bytes, Ordering::Relaxed);
+        }
+        if local.ops > 0 {
+            self.ops.fetch_add(local.ops, Ordering::Relaxed);
+        }
     }
 
     pub fn bytes(&self) -> u64 {
-        self.bytes.get()
+        self.bytes.load(Ordering::Relaxed)
     }
 
     pub fn ops(&self) -> u64 {
-        self.ops.get()
+        self.ops.load(Ordering::Relaxed)
     }
 
     pub fn reset(&self) {
-        self.bytes.set(0);
-        self.ops.set(0);
+        self.bytes.store(0, Ordering::Relaxed);
+        self.ops.store(0, Ordering::Relaxed);
     }
 }
+
+/// Contention-free per-thread traffic accumulator: workers count into
+/// plain fields, the owner merges into the shared [`MemTraffic`] after
+/// the scoped join (see module docs).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TrafficLocal {
+    pub bytes: u64,
+    pub ops: u64,
+    /// Rows actually processed by the sharded row loops (not counted into
+    /// [`MemTraffic`]; used for observational padding accounting).
+    pub rows: u64,
+}
+
+impl TrafficLocal {
+    /// Count one copy of `bytes` bytes.
+    pub fn add(&mut self, bytes: usize) {
+        self.bytes += bytes as u64;
+        self.ops += 1;
+    }
+
+    /// Count bytes without an op (shards of one logical primitive add
+    /// their bytes; the primitive is counted once by the owner).
+    pub fn add_bytes(&mut self, bytes: usize) {
+        self.bytes += bytes as u64;
+    }
+
+    pub fn absorb(&mut self, other: TrafficLocal) {
+        self.bytes += other.bytes;
+        self.ops += other.ops;
+        self.rows += other.rows;
+    }
+}
+
+use crate::exec::parallel::{partition_by_owner, SendPtr};
 
 /// Dense vertex-id -> state-slice store backing gather/scatter (and, with
 /// `add` writes, the gradient flow of the backward pass).
@@ -63,6 +133,12 @@ impl StateBuffer {
         self.data.fill(0.0);
     }
 
+    /// The whole backing block (row-major), e.g. for whole-buffer
+    /// equivalence assertions in tests.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
     pub fn row(&self, v: usize) -> &[f32] {
         &self.data[v * self.cols..(v + 1) * self.cols]
     }
@@ -87,6 +163,42 @@ impl StateBuffer {
         tr.add(ids.len() * c * 4);
     }
 
+    /// Sharded [`StateBuffer::gather`]: destination rows are split into
+    /// contiguous per-worker ranges. Counted as one primitive.
+    pub fn gather_mt(
+        &self,
+        ids: &[Option<u32>],
+        dst: &mut [f32],
+        threads: usize,
+        tr: &MemTraffic,
+    ) {
+        let threads = threads.min(ids.len()).max(1);
+        if threads <= 1 {
+            return self.gather(ids, dst, tr);
+        }
+        let c = self.cols;
+        debug_assert!(dst.len() >= ids.len() * c);
+        let ranges = crate::exec::parallel::shard_ranges(ids.len(), threads);
+        std::thread::scope(|s| {
+            let mut rest = &mut dst[..ids.len() * c];
+            for range in ranges {
+                let (chunk, r) = rest.split_at_mut(range.len() * c);
+                rest = r;
+                let ids_chunk = &ids[range];
+                s.spawn(move || {
+                    for (m, id) in ids_chunk.iter().enumerate() {
+                        let d = &mut chunk[m * c..(m + 1) * c];
+                        match id {
+                            Some(v) => d.copy_from_slice(self.row(*v as usize)),
+                            None => d.fill(0.0),
+                        }
+                    }
+                });
+            }
+        });
+        tr.add(ids.len() * c * 4);
+    }
+
     /// scatter: copy rows of the dense task block `src` out to `ids`.
     pub fn scatter(&mut self, ids: &[u32], src: &[f32], tr: &MemTraffic) {
         let c = self.cols;
@@ -95,6 +207,53 @@ impl StateBuffer {
             self.row_mut(v as usize)
                 .copy_from_slice(&src[m * c..(m + 1) * c]);
         }
+        tr.add(ids.len() * c * 4);
+    }
+
+    /// Sharded [`StateBuffer::scatter`], partitioned by destination owner
+    /// (`id % threads`) so each row is written by exactly one worker for
+    /// **any** input — even (out-of-contract) duplicate ids stay a
+    /// well-defined last-write-in-task-order, identical to the sequential
+    /// loop, never a data race.
+    pub fn scatter_mt(
+        &mut self,
+        ids: &[u32],
+        src: &[f32],
+        threads: usize,
+        tr: &MemTraffic,
+    ) {
+        let threads = threads.min(ids.len()).max(1);
+        if threads <= 1 {
+            return self.scatter(ids, src, tr);
+        }
+        let c = self.cols;
+        debug_assert!(src.len() >= ids.len() * c);
+        let n = self.n;
+        let owned = partition_by_owner(
+            threads,
+            ids.iter().enumerate().map(|(m, &v)| (m, v as usize)),
+        );
+        let ptr = SendPtr(self.data.as_mut_ptr());
+        std::thread::scope(|s| {
+            for list in owned.iter().filter(|l| !l.is_empty()) {
+                let p = ptr;
+                s.spawn(move || {
+                    for &(m, v) in list {
+                        assert!(v < n, "scatter id {v} out of range {n}");
+                        // SAFETY: the owner partition puts row v in exactly
+                        // one worker's list; rows are non-overlapping
+                        // c-element blocks inside the live allocation.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                src.as_ptr().add(m * c),
+                                p.0.add(v * c),
+                                c,
+                            );
+                        }
+                    }
+                });
+            }
+        });
         tr.add(ids.len() * c * 4);
     }
 
@@ -109,6 +268,59 @@ impl StateBuffer {
                 }
             }
         }
+        tr.add(ids.len() * c * 4);
+    }
+
+    /// Sharded [`StateBuffer::scatter_add`], partitioned by destination
+    /// owner (`id % threads`): duplicate ids land on one worker and
+    /// accumulate in ascending-`m` order — bitwise identical to the
+    /// sequential loop for every thread count.
+    pub fn scatter_add_mt(
+        &mut self,
+        ids: &[Option<u32>],
+        src: &[f32],
+        threads: usize,
+        tr: &MemTraffic,
+    ) {
+        let threads = threads.min(ids.len()).max(1);
+        if threads <= 1 {
+            return self.scatter_add(ids, src, tr);
+        }
+        let c = self.cols;
+        let n = self.n;
+        // One sequential pass partitions targets by owner, preserving the
+        // ascending-m order within each owner (bitwise identity with the
+        // sequential loop); workers then walk only their own list instead
+        // of all of `ids` (avoids O(threads * n) scanning).
+        let owned = partition_by_owner(
+            threads,
+            ids.iter()
+                .enumerate()
+                .filter_map(|(m, id)| id.map(|v| (m, v as usize))),
+        );
+        if owned.iter().all(Vec::is_empty) {
+            tr.add(ids.len() * c * 4);
+            return;
+        }
+        let ptr = SendPtr(self.data.as_mut_ptr());
+        std::thread::scope(|s| {
+            for list in owned.iter().filter(|l| !l.is_empty()) {
+                let p = ptr;
+                s.spawn(move || {
+                    for &(m, v) in list {
+                        assert!(v < n, "scatter_add id {v} out of range {n}");
+                        // SAFETY: the owner partition puts row v in exactly
+                        // one worker's list (disjoint c-element blocks).
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut(p.0.add(v * c), c)
+                        };
+                        for (a, b) in row.iter_mut().zip(&src[m * c..(m + 1) * c]) {
+                            *a += *b;
+                        }
+                    }
+                });
+            }
+        });
         tr.add(ids.len() * c * 4);
     }
 
@@ -241,5 +453,66 @@ mod tests {
         let mut dst = vec![0.0; 4];
         sb.gather_cols(&[1, 0], 2, 2, &mut dst, &tr);
         assert_eq!(dst, vec![7., 8., 3., 4.]);
+    }
+
+    #[test]
+    fn traffic_local_merges_once() {
+        let tr = MemTraffic::default();
+        let mut a = TrafficLocal::default();
+        let mut b = TrafficLocal::default();
+        a.add(100);
+        b.add_bytes(28);
+        a.absorb(b);
+        tr.merge(&a);
+        assert_eq!(tr.bytes(), 128);
+        assert_eq!(tr.ops(), 1);
+    }
+
+    #[test]
+    fn mt_variants_match_sequential() {
+        let tr = MemTraffic::default();
+        let n = 37;
+        let c = 5;
+        let mut base = StateBuffer::new(n, c);
+        for v in 0..n {
+            for (j, x) in base.row_mut(v).iter_mut().enumerate() {
+                *x = (v * 10 + j) as f32;
+            }
+        }
+
+        // gather
+        let ids: Vec<Option<u32>> = (0..n as u32)
+            .map(|v| if v % 3 == 0 { None } else { Some((v * 7) % n as u32) })
+            .collect();
+        let mut seq = vec![0.0; n * c];
+        let mut par = vec![1.0; n * c];
+        base.gather(&ids, &mut seq, &tr);
+        base.gather_mt(&ids, &mut par, 4, &tr);
+        assert_eq!(seq, par);
+
+        // scatter (distinct ids)
+        let src: Vec<f32> = (0..n * c).map(|i| i as f32 * 0.5).collect();
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        perm.reverse();
+        let mut a = StateBuffer::new(n, c);
+        let mut b = StateBuffer::new(n, c);
+        a.scatter(&perm, &src, &tr);
+        b.scatter_mt(&perm, &src, 4, &tr);
+        assert_eq!(a.as_slice(), b.as_slice());
+
+        // scatter_add with duplicate targets
+        let dup_ids: Vec<Option<u32>> = (0..n as u32)
+            .map(|v| if v % 5 == 4 { None } else { Some(v % 4) })
+            .collect();
+        let mut a = StateBuffer::new(n, c);
+        let mut b = StateBuffer::new(n, c);
+        let t0 = MemTraffic::default();
+        let t1 = MemTraffic::default();
+        a.scatter_add(&dup_ids, &src, &t0);
+        b.scatter_add_mt(&dup_ids, &src, 3, &t1);
+        assert_eq!(a.as_slice(), b.as_slice());
+        // traffic accounting is invariant under thread count
+        assert_eq!(t0.bytes(), t1.bytes());
+        assert_eq!(t0.ops(), t1.ops());
     }
 }

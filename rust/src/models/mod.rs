@@ -285,6 +285,21 @@ impl Embedding {
         }
     }
 
+    /// Accumulate one gradient row per token across worker threads
+    /// (owner-sharded by token id, see `exec::parallel::owner_add_rows`):
+    /// duplicate tokens within a task accumulate in the sequential order,
+    /// so results are bitwise identical for every thread count.
+    pub fn acc_grad_rows_mt(&mut self, toks: &[i32], g: &[f32], threads: usize) {
+        debug_assert_eq!(g.len(), toks.len() * self.dim);
+        crate::exec::parallel::owner_add_rows(
+            &mut self.grad,
+            self.dim,
+            toks,
+            g,
+            threads,
+        );
+    }
+
     pub fn zero_grad(&mut self) {
         self.grad.fill(0.0);
     }

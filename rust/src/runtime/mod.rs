@@ -83,6 +83,13 @@ impl Runtime {
         Runtime::new(Path::new(&dir))
     }
 
+    /// Whether `dir` holds an AOT artifact set (used by integration tests
+    /// and benches to skip PJRT-dependent work on machines where
+    /// `python/compile/aot.py` has not been run).
+    pub fn have_artifacts(dir: &Path) -> bool {
+        dir.join("manifest.json").is_file()
+    }
+
     pub fn stats(&self) -> RuntimeStats {
         RuntimeStats {
             executions: self.executions.get(),

@@ -2,15 +2,14 @@
 //! controls verbosity; defaults to `info`.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::LazyLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-pub static START: Lazy<Instant> = Lazy::new(Instant::now);
+pub static START: LazyLock<Instant> = LazyLock::new(Instant::now);
 static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=warn 2=info 3=debug
 
 pub fn init() {
-    Lazy::force(&START);
+    LazyLock::force(&START);
     let lvl = match std::env::var("CAVS_LOG").as_deref() {
         Ok("off") => 0,
         Ok("warn") => 1,

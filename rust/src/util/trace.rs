@@ -6,11 +6,10 @@
 //! Chrome `traceEvents` JSON array on flush.
 
 use std::cell::RefCell;
+use std::sync::LazyLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+static EPOCH: LazyLock<Instant> = LazyLock::new(Instant::now);
 
 #[derive(Debug, Clone)]
 struct Event {

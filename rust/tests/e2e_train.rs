@@ -4,20 +4,19 @@
 //! progress. These run the complete stack: synthetic data -> scheduler ->
 //! fused artifacts -> heads -> backward -> optimizer.
 
-use std::path::{Path, PathBuf};
-
 use cavs::exec::{Engine, EngineOpts};
 use cavs::graph::{Dataset, InputGraph};
 use cavs::models::{Cell, HeadKind, Model};
 use cavs::runtime::Runtime;
 use cavs::train::{train_epochs, Optimizer};
 
-fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+#[macro_use]
+mod common;
+use common::artifacts_dir;
 
 #[test]
 fn treelstm_sentiment_loss_decreases() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let mut data = Dataset::sst_like(1, 24, 20, 5);
     // learnable labels: sign of mean token id
@@ -40,6 +39,7 @@ fn treelstm_sentiment_loss_decreases() {
 
 #[test]
 fn lstm_lm_loss_decreases() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::ptb_like_fixed(2, 16, 50, 8);
     let mut model = Model::new(Cell::Lstm, 32, 50, HeadKind::LmPerVertex, 50, 4);
@@ -56,6 +56,7 @@ fn lstm_lm_loss_decreases() {
 
 #[test]
 fn gru_chain_loss_decreases() {
+    require_artifacts!();
     // the extension cell trains end-to-end too
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::ptb_like_fixed(5, 12, 50, 6);
@@ -76,6 +77,7 @@ fn gru_chain_loss_decreases() {
 /// quotient against the gradient the batched backward produced.
 #[test]
 fn finite_difference_validates_full_backprop() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::sst_like(9, 3, 20, 5);
     let graphs: Vec<&InputGraph> = data.graphs.iter().collect();
@@ -129,6 +131,7 @@ fn finite_difference_validates_full_backprop() {
 
 #[test]
 fn optimizers_all_make_progress() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     for opt in [
         Optimizer::sgd(0.05),
@@ -151,6 +154,7 @@ fn optimizers_all_make_progress() {
 
 #[test]
 fn inference_is_deterministic() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::sst_like(6, 10, 20, 5);
     let graphs: Vec<&InputGraph> = data.graphs.iter().collect();
@@ -165,6 +169,7 @@ fn inference_is_deterministic() {
 
 #[test]
 fn batch_order_does_not_change_total_loss() {
+    require_artifacts!();
     // summed minibatch loss is permutation-invariant across the batch
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::sst_like(7, 6, 20, 5);

@@ -5,20 +5,18 @@
 //! tolerance. This pins down the paper's claim that Cavs "produces
 //! exactly the same numerical results with other frameworks" (§5).
 
-use std::path::{Path, PathBuf};
-
 use cavs::baselines::dyndecl::DynDecl;
 use cavs::baselines::fold::Fold;
 use cavs::baselines::monolithic::{ScanLm, UnrollMode};
-use cavs::exec::{Engine, EngineOpts};
+use cavs::exec::{Engine, EngineOpts, ExecOpts};
 use cavs::graph::{Dataset, InputGraph};
 use cavs::models::{Cell, HeadKind, Model};
 use cavs::runtime::Runtime;
 use cavs::util::rng::Rng;
 
-fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+#[macro_use]
+mod common;
+use common::artifacts_dir;
 
 fn rel_close(a: f32, b: f32, tol: f32) -> bool {
     (a - b).abs() / b.abs().max(1.0) < tol
@@ -70,6 +68,7 @@ fn run_cavs(
 
 #[test]
 fn all_cavs_switch_combinations_agree() {
+    require_artifacts!();
     let graphs = tree_batch(5, 6);
     let refs: Vec<&InputGraph> = graphs.iter().collect();
     let (base_loss, base_model) = run_cavs(
@@ -82,35 +81,85 @@ fn all_cavs_switch_combinations_agree() {
     for lazy in [false, true] {
         for fusion in [false, true] {
             for streaming in [false, true] {
-                let (loss, model) = run_cavs(
-                    EngineOpts {
-                        lazy_batching: lazy,
-                        fusion,
-                        streaming,
-                        ..Default::default()
-                    },
-                    &refs,
-                    Cell::TreeLstm,
-                    HeadKind::ClassifierAtRoot,
-                    5,
-                );
-                assert!(
-                    rel_close(loss, base_loss, TOL),
-                    "lazy={lazy} fusion={fusion} streaming={streaming}: {loss} vs {base_loss}"
-                );
-                assert_grads_close(
-                    &model,
-                    &base_model,
-                    TOL,
-                    &format!("lazy={lazy} fusion={fusion} stream={streaming}"),
-                );
+                for threads in [1usize, 4] {
+                    let (loss, model) = run_cavs(
+                        EngineOpts {
+                            lazy_batching: lazy,
+                            fusion,
+                            streaming,
+                            exec: ExecOpts::with_threads(threads),
+                            ..Default::default()
+                        },
+                        &refs,
+                        Cell::TreeLstm,
+                        HeadKind::ClassifierAtRoot,
+                        5,
+                    );
+                    assert!(
+                        rel_close(loss, base_loss, TOL),
+                        "lazy={lazy} fusion={fusion} streaming={streaming} \
+                         threads={threads}: {loss} vs {base_loss}"
+                    );
+                    assert_grads_close(
+                        &model,
+                        &base_model,
+                        TOL,
+                        &format!(
+                            "lazy={lazy} fusion={fusion} stream={streaming} \
+                             threads={threads}"
+                        ),
+                    );
+                }
             }
         }
     }
 }
 
+/// The engine's parallel path must agree with its sequential path *exactly*
+/// (bitwise): both run identical per-row copies/accumulations, only sharded.
+#[test]
+fn engine_threads_bitwise_identical() {
+    require_artifacts!();
+    let graphs = tree_batch(9, 6);
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let (base_loss, base_model) = run_cavs(
+        EngineOpts::default(),
+        &refs,
+        Cell::TreeLstm,
+        HeadKind::ClassifierAtRoot,
+        5,
+    );
+    for threads in [2usize, 8] {
+        let (loss, model) = run_cavs(
+            EngineOpts {
+                exec: ExecOpts::with_threads(threads),
+                ..Default::default()
+            },
+            &refs,
+            Cell::TreeLstm,
+            HeadKind::ClassifierAtRoot,
+            5,
+        );
+        assert_eq!(loss, base_loss, "threads={threads} changed the loss bits");
+        for (i, (ga, gb)) in base_model
+            .params
+            .grad
+            .iter()
+            .zip(&model.params.grad)
+            .enumerate()
+        {
+            assert_eq!(ga, gb, "threads={threads} grad tensor {i} diverged");
+        }
+        assert_eq!(
+            base_model.embedding.grad, model.embedding.grad,
+            "threads={threads} embedding grads diverged"
+        );
+    }
+}
+
 #[test]
 fn dyndecl_agrees_with_cavs() {
+    require_artifacts!();
     let graphs = tree_batch(6, 5);
     let refs: Vec<&InputGraph> = graphs.iter().collect();
     let (cavs_loss, cavs_model) = run_cavs(
@@ -132,6 +181,7 @@ fn dyndecl_agrees_with_cavs() {
 
 #[test]
 fn fold_agrees_with_cavs() {
+    require_artifacts!();
     let graphs = tree_batch(7, 5);
     let refs: Vec<&InputGraph> = graphs.iter().collect();
     let (cavs_loss, cavs_model) = run_cavs(
@@ -158,6 +208,7 @@ fn fold_agrees_with_cavs() {
 
 #[test]
 fn treefc_systems_agree() {
+    require_artifacts!();
     let d = Dataset::treefc(8, 4, 20, 4);
     let refs: Vec<&InputGraph> = d.graphs.iter().collect();
     let (cavs_loss, cavs_model) =
@@ -178,6 +229,7 @@ fn treefc_systems_agree() {
 
 #[test]
 fn scan_lm_agrees_with_cavs_on_chains() {
+    require_artifacts!();
     // fixed-length chains of the quick scan artifact's T
     let t = 4usize;
     let mut rng = Rng::new(3);
@@ -215,6 +267,7 @@ fn scan_lm_agrees_with_cavs_on_chains() {
 
 #[test]
 fn gru_cell_runs_through_engine() {
+    require_artifacts!();
     // GRU is the fused-only extension cell: forward + backward on a chain.
     let mut rng = Rng::new(9);
     let toks: Vec<i32> = (0..6).map(|_| rng.below(20) as i32).collect();

@@ -5,8 +5,6 @@
 //! and demand the same loss and gradients jax.grad produced for the whole
 //! unrolled computation.
 
-use std::path::{Path, PathBuf};
-
 use cavs::exec::{Engine, EngineOpts};
 use cavs::graph::InputGraph;
 use cavs::models::{Cell, HeadKind, Model};
@@ -14,9 +12,9 @@ use cavs::runtime::Runtime;
 use cavs::scheduler::Policy;
 use cavs::util::json::Json;
 
-fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+#[macro_use]
+mod common;
+use common::artifacts_dir;
 
 fn load_golden(name: &str) -> Json {
     let p = artifacts_dir().join("golden").join(name);
@@ -158,6 +156,7 @@ const TOL: f32 = 2e-3;
 
 #[test]
 fn treelstm_golden_eager() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let opts = EngineOpts { lazy_batching: false, ..Default::default() };
@@ -166,6 +165,7 @@ fn treelstm_golden_eager() {
 
 #[test]
 fn treelstm_golden_lazy() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let opts = EngineOpts { lazy_batching: true, ..Default::default() };
@@ -174,6 +174,7 @@ fn treelstm_golden_lazy() {
 
 #[test]
 fn treelstm_golden_serial_policy() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let opts = EngineOpts {
@@ -186,6 +187,7 @@ fn treelstm_golden_serial_policy() {
 
 #[test]
 fn treelstm_golden_unfused() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let opts = EngineOpts {
@@ -198,6 +200,7 @@ fn treelstm_golden_unfused() {
 
 #[test]
 fn treelstm_golden_streaming() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let opts = EngineOpts { streaming: true, ..Default::default() };
@@ -206,6 +209,7 @@ fn treelstm_golden_streaming() {
 
 #[test]
 fn treelstm_golden_inference_loss() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let opts = EngineOpts { training: false, ..Default::default() };
@@ -218,6 +222,7 @@ fn treelstm_golden_inference_loss() {
 
 #[test]
 fn lstm_chain_golden_eager() {
+    require_artifacts!();
     let g = load_golden("lstm_chain.json");
     let graph = lstm_graph(&g);
     let opts = EngineOpts { lazy_batching: false, ..Default::default() };
@@ -226,6 +231,7 @@ fn lstm_chain_golden_eager() {
 
 #[test]
 fn lstm_chain_golden_lazy() {
+    require_artifacts!();
     let g = load_golden("lstm_chain.json");
     let graph = lstm_graph(&g);
     let opts = EngineOpts { lazy_batching: true, ..Default::default() };
@@ -234,6 +240,7 @@ fn lstm_chain_golden_lazy() {
 
 #[test]
 fn lstm_chain_golden_unfused() {
+    require_artifacts!();
     let g = load_golden("lstm_chain.json");
     let graph = lstm_graph(&g);
     let opts = EngineOpts {
@@ -250,6 +257,7 @@ fn lstm_chain_golden_unfused() {
 
 #[test]
 fn treefc_golden_eager() {
+    require_artifacts!();
     let g = load_golden("treefc_tree.json");
     let graph = treefc_graph(&g);
     let opts = EngineOpts { lazy_batching: false, ..Default::default() };
@@ -258,6 +266,7 @@ fn treefc_golden_eager() {
 
 #[test]
 fn treefc_golden_lazy() {
+    require_artifacts!();
     let g = load_golden("treefc_tree.json");
     let graph = treefc_graph(&g);
     let opts = EngineOpts { lazy_batching: true, ..Default::default() };
@@ -271,6 +280,7 @@ fn treefc_golden_lazy() {
 
 #[test]
 fn batch_of_copies_scales_linearly() {
+    require_artifacts!();
     let g = load_golden("treelstm_tree.json");
     let graph = treelstm_graph(&g);
     let rt = Runtime::new(&artifacts_dir()).unwrap();

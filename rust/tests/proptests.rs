@@ -2,6 +2,7 @@
 //! util::propcheck — proptest is unavailable offline). Replay failures
 //! with `CAVS_PROP_SEED=<seed>`; scale effort with `CAVS_PROP_CASES`.
 
+use cavs::exec::parallel::{run_host_frontier, HostTreeFc};
 use cavs::graph::{synth, GraphBatch, InputGraph};
 use cavs::memory::{MemTraffic, StateBuffer};
 use cavs::scheduler::{frontier_levels, schedule, stats, Policy};
@@ -253,6 +254,94 @@ fn prop_sexpr_parse_roundtrip() {
         b.sort_unstable();
         assert_eq!(a, b);
     });
+}
+
+/// The parallel engine path (`threads > 1`) produces **bitwise identical**
+/// forward states, backward state gradients, input-table gradients, and
+/// traffic counters to the sequential path on random synthetic graph
+/// batches. This is the equivalence contract of exec::parallel: forward
+/// writes shard by destination row, backward accumulations shard by
+/// destination owner so contributions apply in sequential order.
+#[test]
+fn prop_parallel_frontier_bitwise_matches_sequential() {
+    check("parallel-equivalence", 40, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+
+        let h = 1 + rng.below(8);
+        let vocab = 20usize;
+        let cell = HostTreeFc::random(h, arity, rng);
+        let xtable: Vec<f32> =
+            (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+
+        let base = run_host_frontier(&batch, &tasks, &cell, &xtable, 1, true);
+        for threads in [2usize, 3, 8] {
+            let run =
+                run_host_frontier(&batch, &tasks, &cell, &xtable, threads, true);
+            assert_eq!(
+                base.states.as_slice(),
+                run.states.as_slice(),
+                "forward states diverge at threads={threads}"
+            );
+            assert_eq!(
+                base.grads.as_ref().unwrap().as_slice(),
+                run.grads.as_ref().unwrap().as_slice(),
+                "state gradients diverge at threads={threads}"
+            );
+            assert_eq!(
+                base.x_grads, run.x_grads,
+                "input-table gradients diverge at threads={threads}"
+            );
+            assert_eq!(
+                (base.traffic_bytes, base.traffic_ops),
+                (run.traffic_bytes, run.traffic_ops),
+                "traffic accounting diverges at threads={threads}"
+            );
+        }
+    });
+}
+
+/// `ScheduleStats.padded_rows` is a function of (batch, policy, buckets)
+/// alone: the worker-thread count shards rows *within* tasks and must
+/// never change the padding accounting. `HostRun.padded_rows` is counted
+/// by the sharded row loops at execution time (bucket − rows actually
+/// evaluated), so a shard that dropped or duplicated rows would break
+/// the equality below.
+#[test]
+fn padded_rows_invariant_under_thread_count() {
+    let mut rng = Rng::new(17);
+    let graphs = random_graphs(&mut rng);
+    let arity = graphs
+        .iter()
+        .flat_map(|g| g.children.iter())
+        .map(Vec::len)
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let batch = GraphBatch::new(&refs, arity);
+    let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+    let expect = stats(&tasks).padded_rows;
+
+    let h = 4;
+    let cell = HostTreeFc::random(h, arity, &mut rng);
+    let xtable: Vec<f32> = (0..20 * h).map(|_| rng.normal_f32(0.5)).collect();
+    for threads in [1usize, 2, 4, 16] {
+        let run = run_host_frontier(&batch, &tasks, &cell, &xtable, threads, false);
+        assert_eq!(
+            run.padded_rows, expect,
+            "padded_rows changed under threads={threads}"
+        );
+    }
 }
 
 /// Bucket selection: smallest bucket >= m, never smaller than m unless m

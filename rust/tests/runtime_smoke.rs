@@ -1,10 +1,14 @@
 // Smoke: HLO-text artifact -> PJRT compile -> execute round trip.
 use cavs::runtime::{Arg, Runtime};
-use std::path::Path;
+
+#[macro_use]
+mod common;
+use common::artifacts_dir;
 
 #[test]
 fn add_artifact_roundtrip() {
-    let rt = Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap();
+    require_artifacts!();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
     let a: Vec<f32> = (0..32).map(|i| i as f32).collect();
     let b: Vec<f32> = (0..32).map(|i| 2.0 * i as f32).collect();
     let outs = rt.run_f32("op_add_n32", &[Arg::F32(&a), Arg::F32(&b)]).unwrap();
@@ -17,7 +21,8 @@ fn add_artifact_roundtrip() {
 
 #[test]
 fn buffer_cached_params() {
-    let rt = Runtime::new(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").as_path()).unwrap();
+    require_artifacts!();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
     let a: Vec<f32> = vec![1.0; 32];
     let buf = rt.upload_f32(&a, &[32]).unwrap();
     let b: Vec<f32> = vec![4.0; 32];

@@ -3,8 +3,6 @@
 //! manifest integrity, and engine instrumentation (launch counts /
 //! memory-traffic accounting that Tables 1-2 rely on).
 
-use std::path::{Path, PathBuf};
-
 use cavs::baselines::fold::Fold;
 use cavs::baselines::monolithic::{ScanLm, UnrollMode};
 use cavs::exec::{Engine, EngineOpts};
@@ -14,9 +12,9 @@ use cavs::runtime::{Arg, Runtime};
 use cavs::scheduler::Policy;
 use cavs::util::rng::Rng;
 
-fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+#[macro_use]
+mod common;
+use common::artifacts_dir;
 
 // ---------------------------------------------------------------------
 // runtime / manifest
@@ -24,6 +22,7 @@ fn artifacts_dir() -> PathBuf {
 
 #[test]
 fn runtime_rejects_wrong_arity_and_shape() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let exe = rt.load("op_add_n32").unwrap();
     let a = vec![0.0f32; 32];
@@ -39,12 +38,14 @@ fn runtime_rejects_wrong_arity_and_shape() {
 
 #[test]
 fn runtime_unknown_artifact_is_error() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     assert!(rt.load("no_such_artifact").is_err());
 }
 
 #[test]
 fn executable_cache_compiles_once() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let a = vec![1.0f32; 32];
     for _ in 0..5 {
@@ -56,6 +57,7 @@ fn executable_cache_compiles_once() {
 
 #[test]
 fn manifest_buckets_are_sorted_and_complete() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let m = &rt.manifest;
     for cell in ["lstm", "treelstm", "treefc"] {
@@ -83,6 +85,7 @@ fn manifest_buckets_are_sorted_and_complete() {
 
 #[test]
 fn manifest_bucket_for_picks_smallest_cover() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let m = &rt.manifest;
     assert_eq!(m.bucket_for("treelstm", "cell_fwd", 512, 1).unwrap(), 1);
@@ -99,6 +102,7 @@ fn manifest_bucket_for_picks_smallest_cover() {
 
 #[test]
 fn fold_plan_levels_and_wiring_are_consistent() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let mut rng = Rng::new(11);
     let graphs: Vec<InputGraph> = (0..5)
@@ -136,6 +140,7 @@ fn fold_plan_levels_and_wiring_are_consistent() {
 
 #[test]
 fn fold_thread_counts_produce_identical_plans() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let mut rng = Rng::new(12);
     let graphs: Vec<InputGraph> = (0..8)
@@ -158,6 +163,7 @@ fn fold_thread_counts_produce_identical_plans() {
 
 #[test]
 fn scan_static_rejects_overlong_and_counts_padding() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let mut model = Model::new(Cell::Lstm, 32, 50, HeadKind::LmPerVertex, 50, 3);
     let mut scan = ScanLm::new(&rt, UnrollMode::Static { t: 4 });
@@ -183,6 +189,7 @@ fn scan_static_rejects_overlong_and_counts_padding() {
 
 #[test]
 fn serial_policy_launches_scale_with_vertices() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::sst_like(3, 4, 20, 5);
     let refs: Vec<&InputGraph> = data.graphs.iter().collect();
@@ -216,6 +223,7 @@ fn serial_policy_launches_scale_with_vertices() {
 
 #[test]
 fn memory_traffic_accounting_is_nonzero_and_resets() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::sst_like(4, 3, 20, 5);
     let refs: Vec<&InputGraph> = data.graphs.iter().collect();
@@ -233,6 +241,7 @@ fn memory_traffic_accounting_is_nonzero_and_resets() {
 
 #[test]
 fn engine_errors_cleanly_without_artifacts_for_h() {
+    require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     // h=48 was never compiled: the engine must fail with a clear error,
     // not panic or compute garbage
@@ -245,6 +254,7 @@ fn engine_errors_cleanly_without_artifacts_for_h() {
 
 #[test]
 fn oversized_frontier_is_chunked_to_max_bucket() {
+    require_artifacts!();
     // 40 single-vertex graphs at quick h=32 (max bucket 4): the frontier
     // of 40 must be executed in 10 chunks, not rejected
     let rt = Runtime::new(&artifacts_dir()).unwrap();

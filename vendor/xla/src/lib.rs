@@ -1,0 +1,236 @@
+//! Stub of the PJRT/XLA binding surface used by `cavs::runtime` (see
+//! README.md). Host-side bookkeeping (clients, buffers, literals) works;
+//! compiling or executing an HLO program returns [`Error::Unavailable`]
+//! so callers fail with a clear message instead of a link error.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs the real XLA extension, which this stub build
+    /// does not link.
+    Unavailable(String),
+    /// Host-side misuse (shape mismatch, bad literal access).
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT bindings \
+                 (this build vendors the offline stub; see vendor/xla/README.md)"
+            ),
+            Error::Invalid(msg) => write!(f, "xla stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+/// Element types accepted by host<->device marshalling.
+pub trait NativeType: Copy {
+    const BYTES: usize;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+impl NativeType for f32 {
+    const BYTES: usize = 4;
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl NativeType for i32 {
+    const BYTES: usize = 4;
+    fn from_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+/// Parsed HLO module (text interchange). The stub only records the path.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        unavailable("parsing HLO text")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A device buffer. The stub keeps the host copy so uploads round-trip.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    bytes: Vec<u8>,
+    dims: Vec<usize>,
+}
+
+impl PjRtBuffer {
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal { bytes: self.bytes.clone(), tuple: None })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed buffers; `result[replica][output]`.
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        unavailable("executing a PJRT program")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an HLO computation")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let elements: usize = dims.iter().product::<usize>().max(1);
+        if elements != data.len() {
+            return Err(Error::Invalid(format!(
+                "buffer has {} elements but dims {:?} imply {}",
+                data.len(),
+                dims,
+                elements
+            )));
+        }
+        let mut bytes = Vec::with_capacity(data.len() * T::BYTES);
+        for &v in data {
+            v.write_le(&mut bytes);
+        }
+        Ok(PjRtBuffer { bytes, dims: dims.to_vec() })
+    }
+}
+
+/// A host-side value read back from the device.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.bytes.len() % T::BYTES != 0 {
+            return Err(Error::Invalid(format!(
+                "literal of {} bytes is not a whole number of {}-byte elements",
+                self.bytes.len(),
+                T::BYTES
+            )));
+        }
+        Ok(self.bytes.chunks_exact(T::BYTES).map(T::from_le).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(parts) => Ok(parts.clone()),
+            None => Err(Error::Invalid(
+                "literal is not a tuple (stub literals never are)".to_string(),
+            )),
+        }
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let v = self.to_vec::<T>()?;
+        if v.len() != dst.len() {
+            return Err(Error::Invalid(format!(
+                "copy_raw_to: literal has {} elements, destination {}",
+                v.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(&v);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_round_trip_on_host() {
+        let c = PjRtClient::cpu().unwrap();
+        let buf = c
+            .buffer_from_host_buffer(&[1.0f32, 2.0, 3.0, 4.0], &[2, 2], None)
+            .unwrap();
+        assert_eq!(buf.dims(), &[2, 2]);
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.size_bytes(), 16);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let mut out = [0.0f32; 4];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer(&[1.0f32; 3], &[2, 2], None).is_err());
+    }
+
+    #[test]
+    fn execution_paths_unavailable() {
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            _path: String::new(),
+        });
+        assert!(c.compile(&comp).is_err());
+    }
+}
