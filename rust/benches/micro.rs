@@ -1,27 +1,57 @@
 //! Microbenchmarks of the L3 substrates: dynamic-tensor choreography,
 //! gather/scatter copies, scheduler BFS, intra-task thread scaling of a
-//! batched LSTM frontier step, batching-vs-serial policy (§5.1's speedup
+//! batched LSTM frontier step (persistent pool vs the scoped-spawn
+//! baseline vs sequential), batching-vs-serial policy (§5.1's speedup
 //! curve at reduced size), and PJRT launch overhead.
 //!
-//! The PJRT-dependent sections are skipped (with a notice) when no
-//! artifact set is present, so the host-side benches run everywhere.
+//! The thread-scaling sweep writes machine-readable results to
+//! `BENCH_micro.json` (per-point mean/p50/p95, threads, executor mode,
+//! bytes moved) so the perf trajectory is trackable across PRs.
+//!
+//! `--tiny` runs a seconds-scale smoke sweep (threads 1/2, small graphs)
+//! — CI uses it to *exercise* the pool path on every push, not just
+//! compile it. The PJRT-dependent sections are skipped (with a notice)
+//! when no artifact set is present, so the host-side benches run
+//! everywhere.
 use std::time::Instant;
 
 use cavs::bench::experiments::{serial_vs_batched, Scale};
-use cavs::exec::parallel::{run_host_frontier, HostLstm};
+use cavs::exec::parallel::{HostFrontier, HostLstm};
+use cavs::exec::pool::{Sharder, WorkerPool};
 use cavs::graph::{Dataset, GraphBatch, InputGraph};
 use cavs::memory::{MemTraffic, StateBuffer};
 use cavs::runtime::{Arg, Runtime};
 use cavs::scheduler::{frontier_levels, schedule, Policy};
 use cavs::tensor::DynamicTensor;
+use cavs::util::json::Json;
 use cavs::util::rng::Rng;
-use cavs::util::stats::{fmt_duration, measure};
+use cavs::util::stats::{fmt_duration, measure, Summary};
+
+fn point_json(
+    name: &str,
+    mode: &str,
+    threads: usize,
+    s: &Summary,
+    bytes: u64,
+) -> Json {
+    Json::obj([
+        ("name".to_string(), Json::text(name)),
+        ("mode".to_string(), Json::text(mode)),
+        ("threads".to_string(), Json::num(threads as f64)),
+        ("reps".to_string(), Json::num(s.n as f64)),
+        ("mean_s".to_string(), Json::num(s.mean_s)),
+        ("p50_s".to_string(), Json::num(s.median_s)),
+        ("p95_s".to_string(), Json::num(s.p95_s)),
+        ("bytes".to_string(), Json::num(bytes as f64)),
+    ])
+}
 
 fn main() -> anyhow::Result<()> {
     cavs::util::logger::init();
+    let tiny = std::env::args().any(|a| a == "--tiny");
 
     // --- scheduler BFS over a merged 64-tree batch ---------------------
-    let data = Dataset::sst_like(1, 64, 100, 5);
+    let data = Dataset::sst_like(1, if tiny { 16 } else { 64 }, 100, 5);
     let refs: Vec<&InputGraph> = data.graphs.iter().collect();
     let batch = GraphBatch::new(&refs, 2);
     let s = measure(3, 20, || {
@@ -73,17 +103,26 @@ fn main() -> anyhow::Result<()> {
     println!("dynamic tensor 64-task fwd+bwd choreography: {}", fmt_duration(s.median_s));
 
     // --- intra-task thread scaling: batched LSTM frontier steps ---------
-    // 64 fixed-length chains merged into one batch -> every frontier step
-    // is one 64-row task; the host LSTM cell F runs over row shards
-    // (exec::parallel). This is the worker-pool speedup curve.
-    let h = 128;
+    // Fixed-length chains merged into one batch -> every frontier step is
+    // one dense task; the host LSTM cell F runs over row shards. Three
+    // executors run the identical shard plan: the persistent worker pool
+    // (exec::pool, the default engine path), the scoped spawn-per-
+    // primitive baseline it replaced, and the sequential loop. This is
+    // the pool-vs-scoped speedup instrument — spawn/join overhead shows
+    // up directly in the scoped column, allocator churn in both.
+    let (n_chains, chain_len, h, thread_list, warmup, reps) = if tiny {
+        (16usize, 8usize, 32usize, vec![1usize, 2], 1usize, 3usize)
+    } else {
+        (64, 32, 128, vec![1, 2, 4, 8], 2, 8)
+    };
     let vocab = 50usize;
     let mut rng = Rng::new(7);
     let cell = HostLstm::random(h, &mut rng);
-    let chains: Vec<InputGraph> = (0..64)
+    let chains: Vec<InputGraph> = (0..n_chains)
         .map(|_| {
-            let toks: Vec<i32> = (0..32).map(|_| rng.below(vocab) as i32).collect();
-            let labs = vec![-1i32; 32];
+            let toks: Vec<i32> =
+                (0..chain_len).map(|_| rng.below(vocab) as i32).collect();
+            let labs = vec![-1i32; chain_len];
             InputGraph::chain(&toks, &labs)
         })
         .collect();
@@ -91,26 +130,54 @@ fn main() -> anyhow::Result<()> {
     let cbatch = GraphBatch::new(&crefs, 1);
     let ctasks = schedule(&cbatch, Policy::Batched, &[1, 2, 4, 8, 16, 32, 64]);
     let xtable: Vec<f32> = (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
-    let mut base_s = 0.0;
     println!(
-        "batched LSTM frontier (h={h}, {} vertices, {} tasks): thread scaling",
+        "batched LSTM frontier (h={h}, {} vertices, {} tasks): pool vs scoped vs sequential",
         cbatch.n_vertices,
         ctasks.len()
     );
-    for threads in [1usize, 2, 4, 8] {
-        let s = measure(2, 8, || {
-            let r = run_host_frontier(&cbatch, &ctasks, &cell, &xtable, threads, false);
-            std::hint::black_box(r.states);
-        });
-        if threads == 1 {
-            base_s = s.median_s;
+    let mut points: Vec<Json> = Vec::new();
+    let mut base_s = 0.0f64;
+    for &threads in &thread_list {
+        let pool = WorkerPool::new(threads);
+        let modes: [(&str, Sharder<'_>); 2] = [
+            ("scoped", Sharder::Scoped { threads }),
+            ("pool", Sharder::Pool(&pool)),
+        ];
+        for (mode, ex) in modes {
+            let mut hf = HostFrontier::new();
+            let s = measure(warmup, reps, || {
+                hf.run(&cbatch, &ctasks, &cell, &xtable, ex, false);
+                std::hint::black_box(hf.states());
+            });
+            if threads == 1 && mode == "scoped" {
+                base_s = s.median_s;
+            }
+            println!(
+                "  threads={threads} {mode:>6}: {} median, {} p95 ({:.2}x vs 1-thread)",
+                fmt_duration(s.median_s),
+                fmt_duration(s.p95_s),
+                base_s / s.median_s.max(1e-12)
+            );
+            points.push(point_json(
+                "lstm_frontier",
+                mode,
+                threads,
+                &s,
+                hf.traffic_bytes(),
+            ));
         }
-        println!(
-            "  threads={threads}: {} median ({:.2}x vs 1 thread)",
-            fmt_duration(s.median_s),
-            base_s / s.median_s.max(1e-12)
-        );
     }
+    let report = Json::obj([
+        ("exp".to_string(), Json::text("micro")),
+        ("case".to_string(), Json::text("lstm_frontier_thread_scaling")),
+        ("h".to_string(), Json::num(h as f64)),
+        ("vertices".to_string(), Json::num(cbatch.n_vertices as f64)),
+        ("tasks".to_string(), Json::num(ctasks.len() as f64)),
+        ("tiny".to_string(), Json::Bool(tiny)),
+        ("points".to_string(), Json::Arr(points)),
+    ]);
+    std::fs::write("BENCH_micro.json", report.render())?;
+    println!("(wrote BENCH_micro.json)");
 
     // --- PJRT-dependent sections (need the AOT artifact set) -------------
     let rt = match Runtime::from_env() {

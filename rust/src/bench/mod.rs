@@ -256,12 +256,34 @@ impl Table {
         }
         out
     }
+
+    /// Machine-readable JSON form (`BENCH_<exp>.json`), so the perf
+    /// trajectory is trackable across PRs without scraping tables.
+    pub fn json(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj([
+            ("title".to_string(), Json::text(&self.title)),
+            (
+                "header".to_string(),
+                Json::arr(self.header.iter().map(|h| Json::text(h))),
+            ),
+            (
+                "rows".to_string(),
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::arr(r.iter().map(|c| Json::text(c)))
+                })),
+            ),
+        ])
+        .render()
+    }
 }
 
 pub fn write_results(name: &str, table: &Table) -> Result<()> {
     std::fs::create_dir_all("results")?;
     std::fs::write(format!("results/{name}.txt"), table.render())?;
     std::fs::write(format!("results/{name}.csv"), table.csv())?;
+    // machine-readable companion, one file per experiment
+    std::fs::write(format!("results/BENCH_{name}.json"), table.json())?;
     Ok(())
 }
 
@@ -279,6 +301,9 @@ mod tests {
         assert!(s.lines().count() >= 4);
         let csv = t.csv();
         assert_eq!(csv.lines().next().unwrap(), "a,long-header,c");
+        let j = crate::util::json::Json::parse(&t.json()).unwrap();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("demo"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

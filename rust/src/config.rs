@@ -30,6 +30,9 @@ pub struct Config {
     pub streaming: bool,
     /// intra-task worker threads (`--threads N` on the CLI)
     pub threads: usize,
+    /// persistent worker pool (default) vs the spawn-per-primitive scoped
+    /// baseline (`--set pool=off`, for A/B perf comparisons)
+    pub pool: bool,
     pub artifacts_dir: String,
 }
 
@@ -54,6 +57,7 @@ impl Default for Config {
             fusion: true,
             streaming: false,
             threads: 1,
+            pool: true,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -113,6 +117,7 @@ impl Config {
                 }
                 self.threads = t;
             }
+            "pool" => self.pool = parse_bool(val)?,
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             _ => bail!("unknown config key '{key}'"),
         }
@@ -126,7 +131,10 @@ impl Config {
             fusion: self.fusion,
             streaming: self.streaming,
             training,
-            exec: crate::exec::ExecOpts::with_threads(self.threads),
+            exec: crate::exec::ExecOpts {
+                threads: self.threads.max(1),
+                pool: self.pool,
+            },
         }
     }
 }
@@ -184,6 +192,16 @@ mod tests {
         assert_eq!(c.engine_opts(true).exec.threads, 8);
         assert!(c.apply("threads", "0").is_err());
         assert!(c.apply("threads", "lots").is_err());
+    }
+
+    #[test]
+    fn pool_key_flows_into_engine_opts() {
+        let mut c = Config::default();
+        assert!(c.pool, "persistent pool is the default");
+        assert!(c.engine_opts(true).exec.pool);
+        c.apply("pool", "off").unwrap();
+        assert!(!c.engine_opts(true).exec.pool, "scoped A/B baseline");
+        assert!(c.apply("pool", "sometimes").is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::parallel::{self, ExecOpts};
+use super::pool::{ShardScratch, WorkerPool};
 use crate::graph::{GraphBatch, InputGraph};
 use crate::memory::{copy_col_slice, MemTraffic, StateBuffer};
 use crate::models::{Cell, HeadKind, Model};
@@ -23,10 +24,12 @@ pub struct EngineOpts {
     /// overlap pull-side staging with task execution on a second thread
     pub streaming: bool,
     pub training: bool,
-    /// intra-task worker pool: shard each task's host-side rows (pull,
+    /// intra-task parallelism: shard each task's host-side rows (pull,
     /// gather, scatter, scatter-add, pull adjoint) across `exec.threads`
-    /// scoped threads. `threads == 1` is the fully sequential path and
-    /// produces bitwise-identical results (see exec::parallel).
+    /// participants of the engine's persistent worker pool (or, with
+    /// `exec.pool == false`, spawn-per-primitive scoped threads — the
+    /// A/B baseline). `threads == 1` is the fully sequential path; all
+    /// settings produce bitwise-identical results (see exec::parallel).
     pub exec: ExecOpts,
 }
 
@@ -62,9 +65,21 @@ pub struct Engine<'rt> {
     /// Chrome-trace recorder (enable with CAVS_TRACE=/path/out.json; see
     /// util::trace) — the §Perf profiling instrument.
     pub trace: Trace,
+    /// Persistent worker pool for the sharded host-side primitives —
+    /// created once per engine, reused by every task of every minibatch
+    /// (no spawn/join per primitive; see exec::pool).
+    pool: WorkerPool,
+    /// Shard-plan arenas (per-shard traffic slots, owner buckets) reused
+    /// across all sharded primitives.
+    scratch: ShardScratch,
+    /// Workspace recycled across minibatches: dynamic-tensor chunks,
+    /// state/grad buffers and index plans grow to their high-water mark
+    /// and are reused, not reallocated.
+    ws: Option<Workspace>,
 }
 
-/// Per-minibatch working state (dynamic tensors + buffers).
+/// Per-minibatch working state (dynamic tensors + buffers), recycled
+/// across minibatches via [`Workspace::prepare`].
 struct Workspace {
     state_buf: StateBuffer,
     grad_buf: Option<StateBuffer>,
@@ -76,16 +91,96 @@ struct Workspace {
     scratch_h: Vec<f32>,
     scratch_g: Vec<f32>,
     scratch_labels: Vec<i32>,
+    /// reusable gather/scatter index plan (one per primitive call)
+    ids: Vec<Option<u32>>,
+    /// reusable pull-adjoint token plan
+    toks: Vec<i32>,
+}
+
+impl Workspace {
+    fn new() -> Workspace {
+        Workspace {
+            state_buf: StateBuffer::new(0, 0),
+            grad_buf: None,
+            dt_x: DynamicTensor::new(&[1]),
+            dt_s: Vec::new(),
+            dt_sout: DynamicTensor::new(&[1]),
+            dt_gates: None,
+            scratch_h: Vec::new(),
+            scratch_g: Vec::new(),
+            scratch_labels: Vec::new(),
+            ids: Vec::new(),
+            toks: Vec::new(),
+        }
+    }
+
+    /// Re-shape for a new minibatch, reusing every backing allocation
+    /// that still fits the model geometry (chunks are only rebuilt when
+    /// the column count changes, i.e. when the model itself changed).
+    fn prepare(
+        &mut self,
+        n_vertices: usize,
+        h: usize,
+        state_cols: usize,
+        arity: usize,
+        training: bool,
+        gates_cols: Option<usize>,
+    ) {
+        self.state_buf.reset_for(n_vertices, state_cols);
+        if training {
+            match &mut self.grad_buf {
+                Some(g) => g.reset_for(n_vertices, state_cols),
+                None => {
+                    self.grad_buf = Some(StateBuffer::new(n_vertices, state_cols))
+                }
+            }
+        } else {
+            self.grad_buf = None;
+        }
+        recycle_dt(&mut self.dt_x, h);
+        if self.dt_s.len() != arity {
+            self.dt_s =
+                (0..arity).map(|_| DynamicTensor::new(&[state_cols])).collect();
+        }
+        for d in &mut self.dt_s {
+            recycle_dt(d, state_cols);
+        }
+        recycle_dt(&mut self.dt_sout, state_cols);
+        match gates_cols {
+            Some(gc) => match &mut self.dt_gates {
+                Some(d) => recycle_dt(d, gc),
+                None => self.dt_gates = Some(DynamicTensor::new(&[gc])),
+            },
+            None => self.dt_gates = None,
+        }
+    }
+}
+
+/// Rewind a dynamic tensor for a fresh minibatch, keeping its chunk; only
+/// a column-count change (different model geometry) rebuilds it.
+fn recycle_dt(dt: &mut DynamicTensor, cols: usize) {
+    if dt.cols != cols {
+        *dt = DynamicTensor::new(&[cols]);
+    } else {
+        dt.recycle();
+    }
 }
 
 impl<'rt> Engine<'rt> {
     pub fn new(rt: &'rt Runtime, opts: EngineOpts) -> Engine<'rt> {
+        // The pool exists only when the pool path will actually run it;
+        // the scoped baseline and the sequential path keep it empty.
+        let pool_threads =
+            if opts.exec.pool { opts.exec.threads } else { 1 };
         Engine {
             rt,
             opts,
             timers: PhaseTimer::default(),
             traffic: MemTraffic::default(),
             trace: Trace::from_env(),
+            pool: WorkerPool::new(pool_threads),
+            scratch: ShardScratch::new(),
+            ws: None,
         }
     }
 
@@ -118,6 +213,13 @@ impl<'rt> Engine<'rt> {
                 model.h
             );
         }
+        scheduler::validate_buckets(&buckets).with_context(|| {
+            format!(
+                "cell_fwd bucket list for {} h={}",
+                model.cell.name(),
+                model.h
+            )
+        })?;
         let tasks = self.timers.time(Phase::Scheduling, || {
             scheduler::schedule(&batch, self.opts.policy, &buckets)
         });
@@ -126,38 +228,32 @@ impl<'rt> Engine<'rt> {
         let cell = model.cell;
         let h = model.h;
         let state_cols = cell.state_cols(h);
-        let mut ws = Workspace {
-            state_buf: StateBuffer::new(batch.n_vertices, state_cols),
-            grad_buf: self
-                .opts
-                .training
-                .then(|| StateBuffer::new(batch.n_vertices, state_cols)),
-            dt_x: DynamicTensor::new(&[h]),
-            dt_s: (0..cell.arity())
-                .map(|_| DynamicTensor::new(&[state_cols]))
-                .collect(),
-            dt_sout: DynamicTensor::new(&[state_cols]),
-            // lazy parameter grads need bwd_data + param_grad artifacts;
-            // fall back to the eager adjoint when aot didn't emit them
-            // for this hidden size (e.g. h=64 outside the Fig. 10 set)
-            dt_gates: (self.opts.training
-                && self.opts.lazy_batching
-                && cell.has_lazy_bwd()
-                && !self
-                    .rt
-                    .manifest
-                    .buckets(cell.name(), "cell_bwd_data", h)
-                    .is_empty()
-                && !self
-                    .rt
-                    .manifest
-                    .buckets(cell.name(), "param_grad", h)
-                    .is_empty())
-            .then(|| DynamicTensor::new(&[cell.gates_cols(h)])),
-            scratch_h: Vec::new(),
-            scratch_g: Vec::new(),
-            scratch_labels: Vec::new(),
-        };
+        // lazy parameter grads need bwd_data + param_grad artifacts; fall
+        // back to the eager adjoint when aot didn't emit them for this
+        // hidden size (e.g. h=64 outside the Fig. 10 set)
+        let want_gates = (self.opts.training
+            && self.opts.lazy_batching
+            && cell.has_lazy_bwd()
+            && !self
+                .rt
+                .manifest
+                .buckets(cell.name(), "cell_bwd_data", h)
+                .is_empty()
+            && !self
+                .rt
+                .manifest
+                .buckets(cell.name(), "param_grad", h)
+                .is_empty())
+        .then(|| cell.gates_cols(h));
+        let mut ws = self.ws.take().unwrap_or_else(Workspace::new);
+        ws.prepare(
+            batch.n_vertices,
+            h,
+            state_cols,
+            cell.arity(),
+            self.opts.training,
+            want_gates,
+        );
 
         let mut result = StepResult {
             n_vertices: batch.n_vertices,
@@ -184,6 +280,9 @@ impl<'rt> Engine<'rt> {
         if self.trace.enabled() {
             self.trace.flush().ok();
         }
+        // Recycle the workspace: the next minibatch reuses every chunk,
+        // buffer and index plan at its high-water capacity.
+        self.ws = Some(ws);
         Ok(result)
     }
 
@@ -207,7 +306,7 @@ impl<'rt> Engine<'rt> {
             None
         };
 
-        let nt = self.opts.exec.threads.max(1);
+        let ex = self.opts.exec.sharder(&self.pool);
         for (t, task) in tasks.iter().enumerate() {
             let b = task.bucket;
             let m = task.m();
@@ -224,12 +323,18 @@ impl<'rt> Engine<'rt> {
                 } else {
                     let emb = &model.embedding;
                     let dst = &mut ws.dt_x.view_mut()[..m * model.h];
-                    parallel::fill_rows(dst, model.h, nt, |i, row, _tl| {
-                        let tok = batch.tokens[task.verts[i] as usize];
-                        if let Some(src) = emb.row(tok) {
-                            row.copy_from_slice(src);
-                        }
-                    });
+                    parallel::fill_rows(
+                        dst,
+                        model.h,
+                        ex,
+                        &mut self.scratch,
+                        |i, row, _tl| {
+                            let tok = batch.tokens[task.verts[i] as usize];
+                            if let Some(src) = emb.row(tok) {
+                                row.copy_from_slice(src);
+                            }
+                        },
+                    );
                     self.traffic.add(m * model.h * 4);
                 }
             });
@@ -239,16 +344,15 @@ impl<'rt> Engine<'rt> {
                 for slot in 0..model.cell.arity() {
                     ws.dt_s[slot].set_bs(b);
                     ws.dt_s[slot].zero_view();
-                    let ids: Vec<Option<u32>> = task
-                        .verts
-                        .iter()
-                        .map(|&v| batch.child(v, slot))
-                        .collect();
+                    ws.ids.clear();
+                    ws.ids.extend(
+                        task.verts.iter().map(|&v| batch.child(v, slot)),
+                    );
                     let cols = ws.dt_s[slot].cols;
                     ws.state_buf.gather_mt(
-                        &ids,
+                        &ws.ids,
                         &mut ws.dt_s[slot].view_mut()[..m * cols],
-                        nt,
+                        ex,
                         &self.traffic,
                     );
                 }
@@ -275,7 +379,8 @@ impl<'rt> Engine<'rt> {
                 ws.state_buf.scatter_mt(
                     &task.verts,
                     &ws.dt_sout.view()[..m * cols],
-                    nt,
+                    ex,
+                    &mut self.scratch,
                     &self.traffic,
                 );
             });
@@ -452,6 +557,8 @@ impl<'rt> Engine<'rt> {
         if hbuckets.is_empty() {
             bail!("no {kind} artifacts for {tag} h={h}");
         }
+        scheduler::validate_buckets(&hbuckets)
+            .with_context(|| format!("{kind} bucket list for {tag} h={h}"))?;
         let maxb = *hbuckets.last().unwrap();
         let (hoff, hlen) = model.cell.h_part(h);
         debug_assert_eq!(hlen, h);
@@ -531,7 +638,7 @@ impl<'rt> Engine<'rt> {
         let h = model.h;
         let state_cols = cell.state_cols(h);
         let lazy = ws.dt_gates.is_some();
-        let nt = self.opts.exec.threads.max(1);
+        let ex = self.opts.exec.sharder(&self.pool);
 
         for task in tasks.iter().rev() {
             let b = task.bucket;
@@ -550,12 +657,12 @@ impl<'rt> Engine<'rt> {
             self.timers.time(Phase::Memory, || {
                 ws.scratch_g.resize(b * state_cols, 0.0);
                 ws.scratch_g.fill(0.0);
-                let ids: Vec<Option<u32>> =
-                    task.verts.iter().map(|&v| Some(v)).collect();
+                ws.ids.clear();
+                ws.ids.extend(task.verts.iter().map(|&v| Some(v)));
                 ws.grad_buf.as_ref().unwrap().gather_mt(
-                    &ids,
+                    &ws.ids,
                     &mut ws.scratch_g[..m * state_cols],
-                    nt,
+                    ex,
                     &self.traffic,
                 );
             });
@@ -600,12 +707,15 @@ impl<'rt> Engine<'rt> {
             let gx = outs[idx].to_vec::<f32>()?;
             idx += 1;
             self.timers.time(Phase::Memory, || {
-                let toks: Vec<i32> = task
-                    .verts
-                    .iter()
-                    .map(|&v| batch.tokens[v as usize])
-                    .collect();
-                model.embedding.acc_grad_rows_mt(&toks, &gx[..m * h], nt);
+                ws.toks.clear();
+                ws.toks
+                    .extend(task.verts.iter().map(|&v| batch.tokens[v as usize]));
+                model.embedding.acc_grad_rows_mt(
+                    &ws.toks,
+                    &gx[..m * h],
+                    ex,
+                    &mut self.scratch,
+                );
                 self.traffic.add(m * h * 4);
             });
             // gs slots -> scatter-add to children rows (scatter adjoint)
@@ -613,15 +723,15 @@ impl<'rt> Engine<'rt> {
                 let gs = outs[idx].to_vec::<f32>()?;
                 idx += 1;
                 self.timers.time(Phase::Memory, || {
-                    let ids: Vec<Option<u32>> = task
-                        .verts
-                        .iter()
-                        .map(|&v| batch.child(v, slot))
-                        .collect();
+                    ws.ids.clear();
+                    ws.ids.extend(
+                        task.verts.iter().map(|&v| batch.child(v, slot)),
+                    );
                     ws.grad_buf.as_mut().unwrap().scatter_add_mt(
-                        &ids,
+                        &ws.ids,
                         &gs[..m * state_cols],
-                        nt,
+                        ex,
+                        &mut self.scratch,
                         &self.traffic,
                     );
                 });
@@ -651,6 +761,9 @@ impl<'rt> Engine<'rt> {
         if pg_buckets.is_empty() {
             bail!("no param_grad artifact for {} h={h}", cell.name());
         }
+        scheduler::validate_buckets(&pg_buckets).with_context(|| {
+            format!("param_grad bucket list for {} h={h}", cell.name())
+        })?;
         let max_n = *pg_buckets.last().unwrap();
         let total = ws.dt_x.high_water_rows();
         let gates_cols = cell.gates_cols(h);

@@ -10,14 +10,20 @@
 //! * **streaming** — the eager (pull-side) staging of F runs on a second
 //!   thread overlapped with task execution;
 //!
-//! plus the intra-task worker pool (`parallel`, `ExecOpts { threads }`)
-//! that shards each task's host-side rows — pull staging, gather,
-//! scatter, scatter-add and the pull adjoint — across scoped threads
-//! (DESIGN.md §5).
+//! plus intra-task parallelism: a **persistent sharded worker pool**
+//! (`pool`, created once per engine) runs each task's host-side row loops
+//! — pull staging, gather, scatter, scatter-add and the pull adjoint —
+//! sharded across `ExecOpts { threads }` participants, with all block
+//! buffers and shard plans recycled as arenas so the steady-state
+//! fwd+bwd loop allocates nothing (DESIGN.md §5). The pre-pool
+//! spawn-per-primitive scoped path survives as `ExecOpts::scoped` /
+//! `pool::Sharder::Scoped`, the A/B baseline for `benches/micro.rs`.
 
 pub mod engine;
 pub mod parallel;
+pub mod pool;
 pub mod unfused;
 
 pub use engine::{Engine, EngineOpts, StepResult};
 pub use parallel::ExecOpts;
+pub use pool::{Sharder, ShardScratch, WorkerPool};

@@ -4,108 +4,138 @@
 //! its rows are independent, so the host-side work of a task — pull
 //! staging, gather, the vertex function `F` itself on the host path,
 //! scatter, and the backward adjoints — shards into contiguous per-worker
-//! row ranges executed under `std::thread::scope`. No worker ever writes
-//! a row another worker touches:
+//! row ranges executed by an [`exec::pool::Sharder`](crate::exec::pool::Sharder)
+//! (persistent [`WorkerPool`] by default; scoped spawns kept as the A/B
+//! baseline). No worker ever writes a row another worker touches:
 //!
 //! * forward writes shard by destination row (each vertex is evaluated by
 //!   exactly one task, once),
-//! * backward scatter-adds shard by destination *owner* (`id % threads`),
+//! * backward scatter-adds shard by destination *owner* (`id % shards`),
 //!   so gradient contributions to a shared child accumulate on a single
 //!   worker in the sequential order — results are **bitwise identical**
-//!   for every thread count (a property test enforces this).
+//!   for every thread count and every executor (property tests enforce
+//!   this).
 //!
 //! Traffic counters stay contention-free: workers accumulate into
-//! per-thread [`TrafficLocal`]s that are merged once at task end
-//! (`memory::MemTraffic::merge`).
+//! per-shard [`TrafficLocal`] slots (recycled via
+//! [`ShardScratch`](crate::exec::pool::ShardScratch)) that are merged once
+//! at task end (`memory::MemTraffic::merge`).
 //!
 //! The module also provides a host (pure-Rust) reference executor,
-//! [`run_host_frontier`], that runs a scheduled task list over a
-//! [`GraphBatch`] with a [`HostCell`] vertex function. It exists for two
-//! reasons: the equivalence property tests and thread-scaling
-//! microbenchmarks must run on machines without the PJRT artifact set,
-//! and it documents the exact memory choreography the PJRT engine
-//! (`exec::engine`) performs around its kernel launches.
+//! [`HostFrontier`] (and the one-shot wrapper [`run_host_frontier`]),
+//! that runs a scheduled task list over a [`GraphBatch`] with a
+//! [`HostCell`] vertex function. It exists for two reasons: the
+//! equivalence property tests and thread-scaling microbenchmarks must run
+//! on machines without the PJRT artifact set, and it documents the exact
+//! memory choreography the PJRT engine (`exec::engine`) performs around
+//! its kernel launches. All of its block buffers, index plans and shard
+//! scratch are **arenas reused across tasks and minibatches**: after the
+//! first (warm-up) minibatch the fwd+bwd loop performs zero heap
+//! allocations (`rust/tests/zero_alloc.rs` proves it with a counting
+//! allocator).
 
 use std::ops::Range;
 
+use crate::exec::pool::{shard_range, Sharder, ShardScratch, ShardSlots, WorkerPool};
 use crate::graph::GraphBatch;
 use crate::memory::{MemTraffic, StateBuffer, TrafficLocal};
 use crate::scheduler::Task;
 use crate::util::rng::Rng;
 
-/// Execution-layer options threaded from the CLI (`--threads N`) through
-/// `config::Config` into `exec::EngineOpts`.
+/// Execution-layer options threaded from the CLI (`--threads N`, config
+/// key `pool`) through `config::Config` into `exec::EngineOpts`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecOpts {
     /// Worker threads for intra-task row sharding. 1 = the sequential
-    /// path (no scoped threads are spawned at all).
+    /// path (no worker threads exist at all).
     pub threads: usize,
+    /// Run shards on the persistent `exec::pool::WorkerPool` (default).
+    /// `false` falls back to spawn-per-primitive scoped threads — the
+    /// pre-pool behaviour, kept as the A/B baseline for `benches/micro.rs`.
+    pub pool: bool,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { threads: 1 }
+        ExecOpts { threads: 1, pool: true }
     }
 }
 
 impl ExecOpts {
     pub fn with_threads(threads: usize) -> ExecOpts {
-        ExecOpts { threads: threads.max(1) }
+        ExecOpts { threads: threads.max(1), pool: true }
+    }
+
+    /// The scoped-spawn baseline at `threads` workers (micro-bench A/B).
+    pub fn scoped(threads: usize) -> ExecOpts {
+        ExecOpts { threads: threads.max(1), pool: false }
+    }
+
+    /// Resolve these options against an engine's pool into the executor
+    /// handle every sharded primitive takes.
+    pub fn sharder<'p>(&self, pool: &'p WorkerPool) -> Sharder<'p> {
+        if self.threads <= 1 {
+            Sharder::Sequential
+        } else if self.pool {
+            Sharder::Pool(pool)
+        } else {
+            Sharder::Scoped { threads: self.threads }
+        }
     }
 }
 
 /// Split `rows` into `threads` contiguous, balanced, covering ranges
-/// (first `rows % threads` ranges get one extra row).
+/// (first `rows % threads` ranges get one extra row). The allocating
+/// form of [`shard_range`]; hot paths compute ranges per shard instead.
 pub fn shard_ranges(rows: usize, threads: usize) -> Vec<Range<usize>> {
     let t = threads.max(1).min(rows.max(1));
-    let base = rows / t;
-    let extra = rows % t;
-    let mut out = Vec::with_capacity(t);
-    let mut start = 0;
-    for i in 0..t {
-        let len = base + usize::from(i < extra);
-        out.push(start..start + len);
-        start += len;
-    }
-    out
+    (0..t).map(|s| shard_range(rows, t, s)).collect()
 }
 
 /// Run `f(row_index, row, local_traffic)` over every `cols`-wide row of
-/// `dst`, sharded across `threads` workers. Returns the merged per-thread
-/// traffic. With `threads <= 1` this is a plain loop — the sequential and
-/// parallel paths execute identical per-row code, which is what makes the
-/// bitwise-equivalence property testable.
-pub fn fill_rows<F>(dst: &mut [f32], cols: usize, threads: usize, f: F) -> TrafficLocal
+/// `dst`, sharded across the executor's participants. Returns the merged
+/// per-shard traffic. Under `Sharder::Sequential` (or a single row) this
+/// is a plain loop — the sequential and parallel paths execute identical
+/// per-row code, which is what makes the bitwise-equivalence property
+/// testable. Allocation-free: the per-shard accumulators live in
+/// `scratch`.
+pub fn fill_rows<F>(
+    dst: &mut [f32],
+    cols: usize,
+    ex: Sharder<'_>,
+    scratch: &mut ShardScratch,
+    f: F,
+) -> TrafficLocal
 where
     F: Fn(usize, &mut [f32], &mut TrafficLocal) + Sync,
 {
     let rows = if cols == 0 { 0 } else { dst.len() / cols };
-    let threads = threads.min(rows).max(1);
+    let shards = ex.threads().min(rows).max(1);
     let mut total = TrafficLocal::default();
-    if threads <= 1 {
+    if shards <= 1 {
         for i in 0..rows {
             f(i, &mut dst[i * cols..(i + 1) * cols], &mut total);
             total.rows += 1;
         }
         return total;
     }
-    let ranges = shard_ranges(rows, threads);
-    let mut locals = vec![TrafficLocal::default(); ranges.len()];
-    std::thread::scope(|s| {
-        let mut rest = &mut dst[..rows * cols];
-        for (range, tl) in ranges.into_iter().zip(locals.iter_mut()) {
-            let (chunk, r) = rest.split_at_mut(range.len() * cols);
-            rest = r;
-            let fr = &f;
-            s.spawn(move || {
-                for (k, i) in range.enumerate() {
-                    fr(i, &mut chunk[k * cols..(k + 1) * cols], tl);
-                    tl.rows += 1;
-                }
-            });
+    let locals = scratch.locals_for(shards);
+    let slots = ShardSlots::new(&mut *locals);
+    let ptr = SendPtr(dst.as_mut_ptr());
+    let fr = &f;
+    ex.run(shards, &|s: usize| {
+        // SAFETY: shard s owns a disjoint contiguous row range and its own
+        // traffic slot; rows are cols-element blocks in the live buffer.
+        let tl = unsafe { slots.get(s) };
+        for i in shard_range(rows, shards, s) {
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(ptr.0.add(i * cols), cols)
+            };
+            fr(i, row, tl);
+            tl.rows += 1;
         }
     });
-    for tl in &locals {
+    for tl in locals.iter() {
         total.absorb(*tl);
     }
     total
@@ -119,26 +149,27 @@ pub(crate) struct SendPtr(pub(crate) *mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Partition `(row, owner_key)` pairs into `threads` per-owner lists
-/// (`key % threads`), preserving input order within each list. This is the
-/// single sequential pre-pass behind every owner-sharded accumulation:
+/// Partition `(row, owner_key)` pairs into the pre-cleared per-owner lists
+/// (`key % owned.len()`), preserving input order within each list. This is
+/// the single sequential pre-pass behind every owner-sharded accumulation:
 /// each destination row lives in exactly one list, and entries stay in
 /// ascending row order, so parallel application is disjoint AND bitwise
 /// identical to the sequential loop (duplicates apply in the same order).
-pub(crate) fn partition_by_owner(
-    threads: usize,
+/// The buckets come from [`ShardScratch::owned_for`], so steady-state
+/// partitioning never allocates.
+pub(crate) fn partition_pairs(
+    owned: &mut [Vec<(usize, usize)>],
     pairs: impl Iterator<Item = (usize, usize)>,
-) -> Vec<Vec<(usize, usize)>> {
-    let mut owned: Vec<Vec<(usize, usize)>> = vec![Vec::new(); threads];
+) {
+    let n = owned.len();
     for (m, v) in pairs {
-        owned[v % threads].push((m, v));
+        owned[v % n].push((m, v));
     }
-    owned
 }
 
 /// Owner-sharded row accumulation into a dense `[vocab, dim]` table:
 /// `dst[toks[i]] += src[i]` for every valid token, with row ownership
-/// partitioned as `tok % threads`. Duplicate tokens accumulate on one
+/// partitioned as `tok % shards`. Duplicate tokens accumulate on one
 /// worker in ascending-`i` order — bitwise identical to the sequential
 /// loop. Used for embedding gradients (the pull adjoint).
 pub fn owner_add_rows(
@@ -146,11 +177,12 @@ pub fn owner_add_rows(
     dim: usize,
     toks: &[i32],
     src: &[f32],
-    threads: usize,
+    ex: Sharder<'_>,
+    scratch: &mut ShardScratch,
 ) {
     let vocab = if dim == 0 { 0 } else { dst.len() / dim };
-    let threads = threads.min(toks.len()).max(1);
-    if threads <= 1 {
+    let shards = ex.threads().min(toks.len()).max(1);
+    if shards <= 1 {
         for (i, &t) in toks.iter().enumerate() {
             if t < 0 || t as usize >= vocab {
                 continue;
@@ -163,33 +195,26 @@ pub fn owner_add_rows(
         }
         return;
     }
-    let owned = partition_by_owner(
-        threads,
+    let owned = scratch.owned_for(shards);
+    partition_pairs(
+        &mut *owned,
         toks.iter().enumerate().filter_map(|(i, &t)| {
             (t >= 0 && (t as usize) < vocab).then_some((i, t as usize))
         }),
     );
-    if owned.iter().all(Vec::is_empty) {
-        return;
-    }
+    let owned_r: &[Vec<(usize, usize)>] = owned;
     let ptr = SendPtr(dst.as_mut_ptr());
-    std::thread::scope(|s| {
-        for list in owned.iter().filter(|l| !l.is_empty()) {
-            let p = ptr;
-            s.spawn(move || {
-                for &(i, t) in list {
-                    // SAFETY: the owner partition puts each token row in
-                    // exactly one worker's list; rows are disjoint
-                    // dim-blocks inside the live allocation.
-                    let row = unsafe {
-                        std::slice::from_raw_parts_mut(p.0.add(t * dim), dim)
-                    };
-                    for (a, b) in row.iter_mut().zip(&src[i * dim..(i + 1) * dim])
-                    {
-                        *a += *b;
-                    }
-                }
-            });
+    ex.run(shards, &|s: usize| {
+        for &(i, t) in &owned_r[s] {
+            // SAFETY: the owner partition puts each token row in exactly
+            // one shard's list; rows are disjoint dim-blocks inside the
+            // live allocation.
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(ptr.0.add(t * dim), dim)
+            };
+            for (a, b) in row.iter_mut().zip(&src[i * dim..(i + 1) * dim]) {
+                *a += *b;
+            }
         }
     });
 }
@@ -201,6 +226,14 @@ pub fn owner_add_rows(
 /// A vertex function `F` evaluated row-by-row on the host. Implementations
 /// must be pure per row (no interior mutability), which is what makes row
 /// sharding sound and deterministic.
+///
+/// Child states arrive **slot-concatenated**: `s` is one
+/// `arity() * state_cols()` row, slot `j` at
+/// `j * state_cols() .. (j + 1) * state_cols()` (and `gs` mirrors that
+/// layout in `backward`). Cells that need per-row temporaries declare
+/// them via [`HostCell::fwd_scratch_cols`]/[`HostCell::bwd_scratch_cols`]
+/// and receive a reusable `tmp` slice — cells must not allocate, which is
+/// what keeps the executor's steady state allocation-free.
 pub trait HostCell: Sync {
     /// Child slots gathered per vertex.
     fn arity(&self) -> usize;
@@ -208,19 +241,30 @@ pub trait HostCell: Sync {
     fn x_cols(&self) -> usize;
     /// Columns of the scattered state.
     fn state_cols(&self) -> usize;
+    /// Scratch floats `forward` needs per row (0 = none). The slice
+    /// handed to `forward` has exactly this length and arbitrary content.
+    fn fwd_scratch_cols(&self) -> usize {
+        0
+    }
+    /// Scratch floats `backward` needs per row (0 = none).
+    fn bwd_scratch_cols(&self) -> usize {
+        0
+    }
     /// `out = F(x, s_children)` for one vertex.
-    fn forward(&self, x: &[f32], s: &[&[f32]], out: &mut [f32]);
-    /// Adjoint for one vertex: given `g_out`, write `gx` and per-slot
-    /// `gs` (buffers arrive zeroed). Default: the cell is forward-only.
+    fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], tmp: &mut [f32]);
+    /// Adjoint for one vertex: given `g_out`, write `gx` and the
+    /// slot-concatenated `gs` (buffers arrive zeroed). Default: the cell
+    /// is forward-only.
     fn backward(
         &self,
         x: &[f32],
-        s: &[&[f32]],
+        s: &[f32],
         g_out: &[f32],
         gx: &mut [f32],
-        gs: &mut [&mut [f32]],
+        gs: &mut [f32],
+        tmp: &mut [f32],
     ) {
-        let _ = (x, s, g_out, gx, gs);
+        let _ = (x, s, g_out, gx, gs, tmp);
         panic!("this host cell is forward-only (no backward implemented)");
     }
 }
@@ -254,7 +298,7 @@ impl HostTreeFc {
         }
     }
 
-    fn preactivation(&self, x: &[f32], s: &[&[f32]], pre: &mut [f32]) {
+    fn preactivation(&self, x: &[f32], s: &[f32], pre: &mut [f32]) {
         let h = self.h;
         pre.copy_from_slice(&self.b);
         for k in 0..h {
@@ -265,8 +309,8 @@ impl HostTreeFc {
                 }
             }
         }
-        for (slot, sv) in s.iter().enumerate() {
-            let w = &self.ws[slot];
+        for (slot, w) in self.ws.iter().enumerate() {
+            let sv = &s[slot * h..(slot + 1) * h];
             for k in 0..h {
                 let hv = sv[k];
                 if hv != 0.0 {
@@ -292,7 +336,11 @@ impl HostCell for HostTreeFc {
         self.h
     }
 
-    fn forward(&self, x: &[f32], s: &[&[f32]], out: &mut [f32]) {
+    fn bwd_scratch_cols(&self) -> usize {
+        self.h
+    }
+
+    fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], _tmp: &mut [f32]) {
         self.preactivation(x, s, out);
         for o in out.iter_mut() {
             *o = o.tanh();
@@ -302,15 +350,16 @@ impl HostCell for HostTreeFc {
     fn backward(
         &self,
         x: &[f32],
-        s: &[&[f32]],
+        s: &[f32],
         g_out: &[f32],
         gx: &mut [f32],
-        gs: &mut [&mut [f32]],
+        gs: &mut [f32],
+        tmp: &mut [f32],
     ) {
         let h = self.h;
         // recompute the activation, then dpre = g_out * (1 - tanh^2)
-        let mut dpre = vec![0.0f32; h];
-        self.preactivation(x, s, &mut dpre);
+        let dpre = &mut tmp[..h];
+        self.preactivation(x, s, dpre);
         for (j, d) in dpre.iter_mut().enumerate() {
             let t = d.tanh();
             *d = g_out[j] * (1.0 - t * t);
@@ -322,8 +371,8 @@ impl HostCell for HostTreeFc {
             }
             gx[k] = acc;
         }
-        for (slot, gslot) in gs.iter_mut().enumerate() {
-            let w = &self.ws[slot];
+        for (slot, w) in self.ws.iter().enumerate() {
+            let gslot = &mut gs[slot * h..(slot + 1) * h];
             for k in 0..h {
                 let mut acc = 0.0;
                 for (j, d) in dpre.iter().enumerate() {
@@ -372,10 +421,15 @@ impl HostCell for HostLstm {
         2 * self.h
     }
 
-    fn forward(&self, x: &[f32], s: &[&[f32]], out: &mut [f32]) {
+    fn fwd_scratch_cols(&self) -> usize {
+        4 * self.h
+    }
+
+    fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], tmp: &mut [f32]) {
         let h = self.h;
-        let (c_in, h_in) = s[0].split_at(h);
-        let mut gates = self.b.clone();
+        let (c_in, h_in) = s.split_at(h);
+        let gates = &mut tmp[..4 * h];
+        gates.copy_from_slice(&self.b);
         for k in 0..h {
             let xv = x[k];
             if xv != 0.0 {
@@ -420,16 +474,370 @@ pub struct HostRun {
     pub padded_rows: usize,
 }
 
-/// Execute a scheduled task list over `batch` with the host cell `F`,
-/// forward (and, when `backward`, the reverse LIFO sweep seeding every
-/// graph root with a ones gradient). `xtable` is the dense `[vocab,
-/// x_cols]` pull source; vertices with token `< 0` or `>= vocab` pull
-/// zeros, exactly like the engine's embedding path.
-///
-/// This mirrors `exec::engine`'s per-task choreography — pull, gather,
-/// evaluate, scatter; then gather-g, adjoint, scatter-add — with every
-/// stage sharded over `threads` workers. Results are bitwise identical
-/// for every `threads` value.
+/// Reusable host frontier executor: all block buffers (pull staging,
+/// gathered child states, task outputs, adjoints), index plans and shard
+/// scratch are arenas that grow to their high-water mark during warm-up
+/// and are recycled afterwards — consecutive [`HostFrontier::run`] calls
+/// perform **zero heap allocations** once warm (the `zero_alloc`
+/// counting-allocator test enforces this), and recycling never changes
+/// results (a property test enforces *that*).
+pub struct HostFrontier {
+    scratch: ShardScratch,
+    /// per-task `[bucket, x_cols]` pull blocks, saved for backward
+    saved_x: Vec<Vec<f32>>,
+    /// per-task `[bucket, arity * state_cols]` gathered child states
+    saved_s: Vec<Vec<f32>>,
+    ids: Vec<Option<u32>>,
+    toks: Vec<i32>,
+    out: Vec<f32>,
+    g_out: Vec<f32>,
+    gx: Vec<f32>,
+    gs: Vec<f32>,
+    /// per-shard cell temporaries (`threads * max(fwd, bwd) scratch cols`)
+    cell_tmp: Vec<f32>,
+    states: StateBuffer,
+    grads: StateBuffer,
+    x_grads: Vec<f32>,
+    traffic: MemTraffic,
+    padded_rows: usize,
+    has_grads: bool,
+}
+
+/// Grow-only arena slice: `buf[..n]`, zero-filled, allocating only when
+/// `n` exceeds the high-water capacity.
+fn arena(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    let s = &mut buf[..n];
+    s.fill(0.0);
+    s
+}
+
+/// Arena forced to exactly `n` elements (for buffers whose full length is
+/// observable, e.g. the `[vocab, x_cols]` gradient table).
+fn arena_exact(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
+    } else {
+        buf.fill(0.0);
+    }
+}
+
+/// Shared shard dispatch for the cell evaluation loops: clamps the shard
+/// count to `rows`, hands each shard its private `tc`-wide window of
+/// `cell_tmp`, and calls `f(row, tmp)` for every row the shard owns.
+/// Returns the number of rows actually visited (the observational half
+/// of the padding accounting). The SAFETY-critical tmp carving and range
+/// arithmetic live here once; `f` remains responsible for making its own
+/// output writes row-disjoint (each `row` value is visited exactly once).
+fn for_rows_sharded<F>(
+    ex: Sharder<'_>,
+    rows: usize,
+    scratch: &mut ShardScratch,
+    cell_tmp: &mut [f32],
+    tc: usize,
+    f: F,
+) -> u64
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let shards = ex.threads().min(rows).max(1);
+    debug_assert!(cell_tmp.len() >= shards * tc);
+    let locals = scratch.locals_for(shards);
+    let slots = ShardSlots::new(&mut *locals);
+    let tmp_ptr = SendPtr(cell_tmp.as_mut_ptr());
+    let fr = &f;
+    ex.run(shards, &|s: usize| {
+        // SAFETY: shard s owns a disjoint row range, its own traffic
+        // slot, and its own tc-wide tmp window.
+        let tl = unsafe { slots.get(s) };
+        let tmp = unsafe {
+            std::slice::from_raw_parts_mut(tmp_ptr.0.add(s * tc), tc)
+        };
+        for i in shard_range(rows, shards, s) {
+            fr(i, tmp);
+            tl.rows += 1;
+        }
+    });
+    locals.iter().map(|t| t.rows).sum()
+}
+
+impl HostFrontier {
+    pub fn new() -> HostFrontier {
+        HostFrontier {
+            scratch: ShardScratch::new(),
+            saved_x: Vec::new(),
+            saved_s: Vec::new(),
+            ids: Vec::new(),
+            toks: Vec::new(),
+            out: Vec::new(),
+            g_out: Vec::new(),
+            gx: Vec::new(),
+            gs: Vec::new(),
+            cell_tmp: Vec::new(),
+            states: StateBuffer::new(0, 0),
+            grads: StateBuffer::new(0, 0),
+            x_grads: Vec::new(),
+            traffic: MemTraffic::default(),
+            padded_rows: 0,
+            has_grads: false,
+        }
+    }
+
+    pub fn states(&self) -> &StateBuffer {
+        &self.states
+    }
+
+    pub fn grads(&self) -> Option<&StateBuffer> {
+        self.has_grads.then_some(&self.grads)
+    }
+
+    pub fn x_grads(&self) -> Option<&[f32]> {
+        self.has_grads.then_some(self.x_grads.as_slice())
+    }
+
+    pub fn traffic_bytes(&self) -> u64 {
+        self.traffic.bytes()
+    }
+
+    pub fn traffic_ops(&self) -> u64 {
+        self.traffic.ops()
+    }
+
+    pub fn padded_rows(&self) -> usize {
+        self.padded_rows
+    }
+
+    /// Execute a scheduled task list over `batch` with the host cell `F`,
+    /// forward (and, when `backward`, the reverse LIFO sweep seeding every
+    /// graph root with a ones gradient). `xtable` is the dense `[vocab,
+    /// x_cols]` pull source; vertices with token `< 0` or `>= vocab` pull
+    /// zeros, exactly like the engine's embedding path.
+    ///
+    /// This mirrors `exec::engine`'s per-task choreography — pull, gather,
+    /// evaluate, scatter; then gather-g, adjoint, scatter-add — with every
+    /// stage sharded over the executor's participants. Results are bitwise
+    /// identical for every executor and thread count.
+    pub fn run<C: HostCell>(
+        &mut self,
+        batch: &GraphBatch,
+        tasks: &[Task],
+        cell: &C,
+        xtable: &[f32],
+        ex: Sharder<'_>,
+        backward: bool,
+    ) {
+        let xc = cell.x_cols();
+        let sc = cell.state_cols();
+        let ar = cell.arity();
+        let asc = ar * sc;
+        let vocab = if xc == 0 { 0 } else { xtable.len() / xc };
+        let tc = if backward {
+            cell.fwd_scratch_cols().max(cell.bwd_scratch_cols())
+        } else {
+            cell.fwd_scratch_cols()
+        };
+
+        self.traffic.reset();
+        self.padded_rows = 0;
+        self.has_grads = false;
+        self.states.reset_for(batch.n_vertices, sc);
+        while self.saved_x.len() < tasks.len() {
+            self.saved_x.push(Vec::new());
+        }
+        while self.saved_s.len() < tasks.len() {
+            self.saved_s.push(Vec::new());
+        }
+        if self.cell_tmp.len() < ex.threads() * tc {
+            self.cell_tmp.resize(ex.threads() * tc, 0.0);
+        }
+
+        // ---- forward sweep ------------------------------------------
+        for (ti, task) in tasks.iter().enumerate() {
+            let m = task.m();
+            let b = task.bucket;
+
+            // pull: stage x rows (token lookups; invalid tokens stay
+            // zero); blocks are bucket-padded like the engine's dynamic
+            // tensors
+            let x = arena(&mut self.saved_x[ti], b * xc);
+            let mut local = fill_rows(
+                &mut x[..m * xc],
+                xc,
+                ex,
+                &mut self.scratch,
+                |i, row, tl| {
+                    let tok = batch.tokens[task.verts[i] as usize];
+                    if tok >= 0 && (tok as usize) < vocab {
+                        let t = tok as usize;
+                        row.copy_from_slice(&xtable[t * xc..(t + 1) * xc]);
+                        tl.add_bytes(xc * 4);
+                    }
+                },
+            );
+            local.ops += 1; // one pull primitive per task
+            self.traffic.merge(&local);
+
+            // gather: child states, slot-concatenated per row
+            let sall = arena(&mut self.saved_s[ti], b * asc);
+            for slot in 0..ar {
+                self.ids.clear();
+                self.ids
+                    .extend(task.verts.iter().map(|&v| batch.child(v, slot)));
+                self.states.gather_slot_mt(
+                    &self.ids,
+                    &mut sall[..m * asc],
+                    asc,
+                    slot * sc,
+                    ex,
+                    &self.traffic,
+                );
+            }
+
+            // evaluate F over row shards (per-shard cell temporaries)
+            let out = arena(&mut self.out, b * sc);
+            {
+                let out_ptr = SendPtr(out.as_mut_ptr());
+                let xr: &[f32] = &*x;
+                let sr: &[f32] = &*sall;
+                let done = for_rows_sharded(
+                    ex,
+                    m,
+                    &mut self.scratch,
+                    &mut self.cell_tmp,
+                    tc,
+                    |i, tmp| {
+                        // SAFETY: each row i is visited by exactly one
+                        // shard; rows are disjoint sc-blocks of `out`.
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                out_ptr.0.add(i * sc),
+                                sc,
+                            )
+                        };
+                        cell.forward(
+                            &xr[i * xc..(i + 1) * xc],
+                            &sr[i * asc..(i + 1) * asc],
+                            orow,
+                            tmp,
+                        );
+                    },
+                );
+                self.padded_rows += b - done as usize;
+            }
+
+            // scatter: publish states for parents
+            self.states.scatter_mt(
+                &task.verts,
+                &out[..m * sc],
+                ex,
+                &mut self.scratch,
+                &self.traffic,
+            );
+        }
+
+        if !backward {
+            return;
+        }
+
+        // ---- backward sweep (exact LIFO) ----------------------------
+        self.has_grads = true;
+        self.grads.reset_for(batch.n_vertices, sc);
+        for &r in &batch.roots {
+            self.grads.row_mut(r as usize).fill(1.0);
+        }
+        arena_exact(&mut self.x_grads, xtable.len());
+
+        for (ti, task) in tasks.iter().enumerate().rev() {
+            let m = task.m();
+            let x: &[f32] = &self.saved_x[ti];
+            let sall: &[f32] = &self.saved_s[ti];
+
+            // gather g_out rows (head seeds + parent contributions)
+            self.ids.clear();
+            self.ids.extend(task.verts.iter().map(|&v| Some(v)));
+            let g_out = arena(&mut self.g_out, m * sc);
+            self.grads.gather_mt(&self.ids, g_out, ex, &self.traffic);
+
+            // adjoint of F over row shards
+            let gx = arena(&mut self.gx, m * xc);
+            let gs = arena(&mut self.gs, m * asc);
+            {
+                let gx_ptr = SendPtr(gx.as_mut_ptr());
+                let gs_ptr = SendPtr(gs.as_mut_ptr());
+                let gr: &[f32] = &*g_out;
+                for_rows_sharded(
+                    ex,
+                    m,
+                    &mut self.scratch,
+                    &mut self.cell_tmp,
+                    tc,
+                    |i, tmp| {
+                        // SAFETY: each row i is visited by exactly one
+                        // shard; rows are disjoint xc-/asc-blocks of
+                        // `gx` / `gs`.
+                        let gxr = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                gx_ptr.0.add(i * xc),
+                                xc,
+                            )
+                        };
+                        let gsr = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                gs_ptr.0.add(i * asc),
+                                asc,
+                            )
+                        };
+                        cell.backward(
+                            &x[i * xc..(i + 1) * xc],
+                            &sall[i * asc..(i + 1) * asc],
+                            &gr[i * sc..(i + 1) * sc],
+                            gxr,
+                            gsr,
+                            tmp,
+                        );
+                    },
+                );
+            }
+
+            // scatter-add per slot (shared children accumulate)
+            for slot in 0..ar {
+                self.ids.clear();
+                self.ids
+                    .extend(task.verts.iter().map(|&v| batch.child(v, slot)));
+                self.grads.scatter_add_slot_mt(
+                    &self.ids,
+                    &gs[..m * asc],
+                    asc,
+                    slot * sc,
+                    ex,
+                    &mut self.scratch,
+                    &self.traffic,
+                );
+            }
+
+            // pull adjoint: gx accumulates into the input table
+            self.toks.clear();
+            self.toks
+                .extend(task.verts.iter().map(|&v| batch.tokens[v as usize]));
+            owner_add_rows(
+                &mut self.x_grads,
+                xc,
+                &self.toks,
+                &gx[..m * xc],
+                ex,
+                &mut self.scratch,
+            );
+            self.traffic.add(m * xc * 4);
+        }
+    }
+}
+
+/// One-shot convenience wrapper around [`HostFrontier`]: builds a
+/// `threads`-wide [`WorkerPool`], runs once, and returns the owned
+/// [`HostRun`]. The pool path is exercised whenever `threads > 1`.
 pub fn run_host_frontier<C: HostCell>(
     batch: &GraphBatch,
     tasks: &[Task],
@@ -438,152 +846,30 @@ pub fn run_host_frontier<C: HostCell>(
     threads: usize,
     backward: bool,
 ) -> HostRun {
-    let xc = cell.x_cols();
-    let sc = cell.state_cols();
-    let ar = cell.arity();
-    let vocab = if xc == 0 { 0 } else { xtable.len() / xc };
-    let traffic = MemTraffic::default();
-    let mut states = StateBuffer::new(batch.n_vertices, sc);
-    // saved pull/gather blocks per task, for the backward recomputation
-    let mut saved: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::with_capacity(tasks.len());
-    // padding observed from execution: Σ (bucket − rows F actually ran on);
-    // NOT recomputed from the schedule, so a sharding bug that dropped or
-    // duplicated rows would show up here.
-    let mut padded_observed = 0usize;
-
-    for task in tasks {
-        let m = task.m();
-        let b = task.bucket;
-        // pull: stage x rows (token lookups; invalid tokens stay zero);
-        // blocks are bucket-padded like the engine's dynamic tensors
-        let mut x = vec![0.0f32; b * xc];
-        let mut local = fill_rows(&mut x[..m * xc], xc, threads, |i, row, tl| {
-            let tok = batch.tokens[task.verts[i] as usize];
-            if tok >= 0 && (tok as usize) < vocab {
-                let t = tok as usize;
-                row.copy_from_slice(&xtable[t * xc..(t + 1) * xc]);
-                tl.add_bytes(xc * 4);
-            }
-        });
-        local.ops += 1; // one pull primitive per task
-        traffic.merge(&local);
-
-        // gather: child states per slot
-        let mut s_blocks: Vec<Vec<f32>> = Vec::with_capacity(ar);
-        for slot in 0..ar {
-            let ids: Vec<Option<u32>> =
-                task.verts.iter().map(|&v| batch.child(v, slot)).collect();
-            let mut blk = vec![0.0f32; b * sc];
-            states.gather_mt(&ids, &mut blk[..m * sc], threads, &traffic);
-            s_blocks.push(blk);
-        }
-
-        // evaluate F over row shards
-        let mut out = vec![0.0f32; b * sc];
-        {
-            let xr = &x;
-            let sb = &s_blocks;
-            let fl = fill_rows(&mut out[..m * sc], sc, threads, |i, orow, _tl| {
-                let srows: Vec<&[f32]> =
-                    sb.iter().map(|blk| &blk[i * sc..(i + 1) * sc]).collect();
-                cell.forward(&xr[i * xc..(i + 1) * xc], &srows, orow);
-            });
-            padded_observed += b - fl.rows as usize;
-        }
-
-        // scatter: publish states for parents
-        states.scatter_mt(&task.verts, &out[..m * sc], threads, &traffic);
-        saved.push((x, s_blocks));
-    }
-
-    let (grads, x_grads) = if backward {
-        let mut grads = StateBuffer::new(batch.n_vertices, sc);
-        for &r in &batch.roots {
-            grads.row_mut(r as usize).fill(1.0);
-        }
-        let mut x_grads = vec![0.0f32; xtable.len()];
-
-        for (ti, task) in tasks.iter().enumerate().rev() {
-            let (x, s_blocks) = &saved[ti];
-            let m = task.m();
-
-            // gather g_out rows (head seeds + parent contributions)
-            let ids_self: Vec<Option<u32>> =
-                task.verts.iter().map(|&v| Some(v)).collect();
-            let mut g_out = vec![0.0f32; m * sc];
-            grads.gather_mt(&ids_self, &mut g_out, threads, &traffic);
-
-            // adjoint of F over row shards
-            let mut gx = vec![0.0f32; m * xc];
-            let mut gs: Vec<Vec<f32>> =
-                (0..ar).map(|_| vec![0.0f32; m * sc]).collect();
-            let nshard = threads.min(m).max(1);
-            {
-                let g_ref = &g_out;
-                std::thread::scope(|s| {
-                    let mut gx_rest: &mut [f32] = &mut gx;
-                    let mut gs_rest: Vec<&mut [f32]> =
-                        gs.iter_mut().map(Vec::as_mut_slice).collect();
-                    for range in shard_ranges(m, nshard) {
-                        let (gx_chunk, r) = std::mem::take(&mut gx_rest)
-                            .split_at_mut(range.len() * xc);
-                        gx_rest = r;
-                        let mut gs_chunks: Vec<&mut [f32]> =
-                            Vec::with_capacity(ar);
-                        for slot_rest in gs_rest.iter_mut() {
-                            let (a, b) = std::mem::take(slot_rest)
-                                .split_at_mut(range.len() * sc);
-                            *slot_rest = b;
-                            gs_chunks.push(a);
-                        }
-                        s.spawn(move || {
-                            for (k, i) in range.enumerate() {
-                                let srows: Vec<&[f32]> = s_blocks
-                                    .iter()
-                                    .map(|blk| &blk[i * sc..(i + 1) * sc])
-                                    .collect();
-                                let mut gs_rows: Vec<&mut [f32]> = gs_chunks
-                                    .iter_mut()
-                                    .map(|c| &mut c[k * sc..(k + 1) * sc])
-                                    .collect();
-                                cell.backward(
-                                    &x[i * xc..(i + 1) * xc],
-                                    &srows,
-                                    &g_ref[i * sc..(i + 1) * sc],
-                                    &mut gx_chunk[k * xc..(k + 1) * xc],
-                                    &mut gs_rows,
-                                );
-                            }
-                        });
-                    }
-                });
-            }
-
-            // scatter-add per slot (shared children accumulate)
-            for (slot, gslot) in gs.iter().enumerate() {
-                let ids: Vec<Option<u32>> =
-                    task.verts.iter().map(|&v| batch.child(v, slot)).collect();
-                grads.scatter_add_mt(&ids, gslot, threads, &traffic);
-            }
-
-            // pull adjoint: gx accumulates into the input table
-            let toks: Vec<i32> =
-                task.verts.iter().map(|&v| batch.tokens[v as usize]).collect();
-            owner_add_rows(&mut x_grads, xc, &toks, &gx, threads);
-            traffic.add(m * xc * 4);
-        }
-        (Some(grads), Some(x_grads))
+    let pool = WorkerPool::new(threads);
+    let ex = if threads > 1 {
+        Sharder::Pool(&pool)
     } else {
-        (None, None)
+        Sharder::Sequential
     };
-
-    HostRun {
+    let mut hf = HostFrontier::new();
+    hf.run(batch, tasks, cell, xtable, ex, backward);
+    let HostFrontier {
         states,
         grads,
         x_grads,
+        traffic,
+        padded_rows,
+        has_grads,
+        ..
+    } = hf;
+    HostRun {
+        states,
+        grads: has_grads.then_some(grads),
+        x_grads: has_grads.then_some(x_grads),
         traffic_bytes: traffic.bytes(),
         traffic_ops: traffic.ops(),
-        padded_rows: padded_observed,
+        padded_rows,
     }
 }
 
@@ -614,7 +900,7 @@ mod tests {
     }
 
     #[test]
-    fn fill_rows_matches_sequential() {
+    fn fill_rows_matches_sequential_for_every_executor() {
         let cols = 3;
         let rows = 17;
         let f = |i: usize, row: &mut [f32], tl: &mut TrafficLocal| {
@@ -623,13 +909,18 @@ mod tests {
             }
             tl.add_bytes(cols * 4);
         };
+        let mut scratch = ShardScratch::new();
         let mut seq = vec![0.0; rows * cols];
-        let t_seq = fill_rows(&mut seq, cols, 1, f);
-        for threads in [2, 4, 16] {
-            let mut par = vec![0.0; rows * cols];
-            let t_par = fill_rows(&mut par, cols, threads, f);
-            assert_eq!(seq, par);
-            assert_eq!(t_seq.bytes, t_par.bytes);
+        let t_seq = fill_rows(&mut seq, cols, Sharder::Sequential, &mut scratch, f);
+        for threads in [2usize, 4, 16] {
+            let pool = WorkerPool::new(threads);
+            for ex in [Sharder::Scoped { threads }, Sharder::Pool(&pool)] {
+                let mut par = vec![0.0; rows * cols];
+                let t_par = fill_rows(&mut par, cols, ex, &mut scratch, f);
+                assert_eq!(seq, par);
+                assert_eq!(t_seq.bytes, t_par.bytes);
+                assert_eq!(t_seq.rows, t_par.rows);
+            }
         }
     }
 
@@ -639,12 +930,16 @@ mod tests {
         let vocab = 4;
         let toks = [0i32, 2, 0, -1, 99, 3, 0];
         let src: Vec<f32> = (0..toks.len() * dim).map(|i| i as f32).collect();
+        let mut scratch = ShardScratch::new();
         let mut seq = vec![0.0; vocab * dim];
-        owner_add_rows(&mut seq, dim, &toks, &src, 1);
-        for threads in [2, 3, 8] {
-            let mut par = vec![0.0; vocab * dim];
-            owner_add_rows(&mut par, dim, &toks, &src, threads);
-            assert_eq!(seq, par);
+        owner_add_rows(&mut seq, dim, &toks, &src, Sharder::Sequential, &mut scratch);
+        for threads in [2usize, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            for ex in [Sharder::Scoped { threads }, Sharder::Pool(&pool)] {
+                let mut par = vec![0.0; vocab * dim];
+                owner_add_rows(&mut par, dim, &toks, &src, ex, &mut scratch);
+                assert_eq!(seq, par);
+            }
         }
         // token 0 got rows 0, 2 and 6
         assert_eq!(seq[0], 0.0 + 4.0 + 12.0);
@@ -692,11 +987,12 @@ mod tests {
         let h = 8;
         let cell = HostLstm::random(h, &mut rng);
         let x: Vec<f32> = (0..h).map(|_| rng.normal_f32(0.5)).collect();
+        let mut tmp = vec![0.0f32; cell.fwd_scratch_cols()];
         let s0 = vec![0.0f32; 2 * h];
         let mut out1 = vec![0.0f32; 2 * h];
-        cell.forward(&x, &[&s0], &mut out1);
+        cell.forward(&x, &s0, &mut out1, &mut tmp);
         let mut out2 = vec![0.0f32; 2 * h];
-        cell.forward(&x, &[&out1], &mut out2);
+        cell.forward(&x, &out1, &mut out2, &mut tmp);
         assert!(out1.iter().all(|v| v.is_finite()));
         assert_ne!(out1, out2, "state must influence the next step");
     }

@@ -1,0 +1,468 @@
+//! Persistent sharded worker pool + shard-plan scratch (DESIGN.md §5).
+//!
+//! PR 1 parallelized the host-side stages of every batching task with
+//! `std::thread::scope`, spawning and joining workers **per sharded
+//! primitive**. With O(depth × 5) primitives per minibatch that spawn/join
+//! is a fixed per-task cost of exactly the kind the paper's design exists
+//! to eliminate. This module replaces it with:
+//!
+//! * [`WorkerPool`] — `threads - 1` persistent workers created once per
+//!   engine and reused for every sharded primitive. Dispatch is one
+//!   mutex/condvar epoch broadcast per primitive; the submitting thread
+//!   always executes shard 0 itself, so `threads == 1` never touches the
+//!   pool at all.
+//! * [`Sharder`] — the executor handle threaded through every sharded
+//!   primitive (`memory`'s `*_mt` methods, `exec::parallel`'s row loops).
+//!   `Sequential`, `Scoped` (the PR 1 spawn-per-primitive baseline, kept
+//!   as the A/B instrument for `benches/micro.rs`) and `Pool` all run the
+//!   *same* shard plan — owner sharding and ascending-order application
+//!   are computed identically — so results stay **bitwise identical** for
+//!   every executor and thread count; only who runs a shard changes.
+//! * [`ShardScratch`] — reusable shard-plan arenas (per-shard traffic
+//!   accumulators, owner-partition buckets). Together with the block
+//!   arenas in `exec::parallel::HostFrontier` and the engine workspace,
+//!   the steady-state fwd+bwd loop performs **zero heap allocations**
+//!   after warm-up (`rust/tests/zero_alloc.rs` proves it with a counting
+//!   allocator).
+//!
+//! ## Safety story
+//!
+//! The pool executes borrowed jobs (`&dyn Fn(usize)`) whose lifetime is
+//! erased to `'static` for the hand-off. [`WorkerPool::run`] never returns
+//! (and never unwinds) before every worker has finished the job, so the
+//! erased borrow cannot outlive the real closure. Shards index disjoint
+//! data (row ranges or owner partitions — the callers' invariants, see
+//! `exec::parallel` and `memory`), so concurrent execution is race-free.
+
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::memory::TrafficLocal;
+
+/// A borrowed shard job with its lifetime erased for the worker hand-off.
+/// Only ever dereferenced between job publication and the join in
+/// [`WorkerPool::run`].
+type JobRef = &'static (dyn Fn(usize) + Sync);
+
+struct PoolState {
+    job: Option<JobRef>,
+    n_shards: usize,
+    /// Incremented once per published job; workers pick up work when it
+    /// moves past the epoch they last served.
+    epoch: u64,
+    /// Workers still to finish the current epoch.
+    remaining: usize,
+    /// A worker shard panicked during the current epoch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for the next epoch.
+    work: Condvar,
+    /// The submitter waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+/// Persistent worker pool: `threads - 1` OS threads that live as long as
+/// the pool (one engine run), each executing its strided share of every
+/// published job. See the module docs for the dispatch protocol.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    /// Serializes submitters: `run` is reachable through `&self` (the
+    /// pool is `Sync` and `Sharder` is a shared Copy handle), so without
+    /// this a second thread could re-publish the epoch state while the
+    /// first job — whose borrow is lifetime-erased — is still running.
+    submit: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Create a pool sized for `threads` total participants: the caller
+    /// of [`WorkerPool::run`] counts as participant 0, so `threads - 1`
+    /// workers are spawned (`threads <= 1` spawns none).
+    pub fn new(threads: usize) -> WorkerPool {
+        let workers = threads.max(1) - 1;
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                n_shards: 0,
+                epoch: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        let participants = workers + 1;
+        for idx in 0..workers {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("cavs-pool-{idx}"))
+                .spawn(move || worker_loop(&sh, idx, participants))
+                .expect("spawning pool worker");
+            handles.push(h);
+        }
+        WorkerPool { shared, handles, workers, submit: Mutex::new(()) }
+    }
+
+    /// Total participants (submitting thread + workers); the shard count
+    /// callers should size their plans to.
+    pub fn threads(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Execute `f(s)` for every shard `s in 0..n_shards` and return once
+    /// all shards finished. Shard `s` runs on participant
+    /// `s % self.threads()`; the caller is participant 0, so with
+    /// `n_shards <= 1` (or a 1-thread pool) this is a plain loop with no
+    /// synchronization at all. Performs no heap allocation.
+    pub fn run(&self, n_shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_shards <= 1 || self.workers == 0 {
+            for s in 0..n_shards {
+                f(s);
+            }
+            return;
+        }
+        // One submitter at a time: a concurrent `run` waits here until the
+        // current epoch fully drains (poisoning is benign — the guard
+        // protects no data, so a panicked predecessor doesn't matter).
+        let _turn = self.submit.lock().unwrap_or_else(|p| p.into_inner());
+        // SAFETY: the erased borrow is published under the lock, and this
+        // function does not return (or unwind) until every worker reported
+        // done for this epoch, so `f` strictly outlives all uses; the
+        // `submit` guard above guarantees a single live epoch at a time.
+        let job: JobRef = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), JobRef>(f)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.n_shards = n_shards;
+            st.remaining = self.workers;
+            st.panicked = false;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work.notify_all();
+        }
+        // The submitter is participant 0: run shards 0, P, 2P, ...
+        let participants = self.workers + 1;
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut s = 0;
+            while s < n_shards {
+                f(s);
+                s += participants;
+            }
+        }));
+        let worker_panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining != 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("worker pool shard panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, idx: usize, participants: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, n_shards) = {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.epoch == seen {
+                st = shared.work.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.epoch;
+            (st.job, st.n_shards)
+        };
+        let mut panicked = false;
+        if let Some(f) = job {
+            // Worker `idx` is participant `idx + 1`: run shards
+            // idx+1, idx+1+P, idx+1+2P, ...
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut s = idx + 1;
+                while s < n_shards {
+                    f(s);
+                    s += participants;
+                }
+            }));
+            panicked = r.is_err();
+        }
+        let mut st = shared.state.lock().unwrap();
+        if panicked {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// Executor handle for the sharded primitives: who runs a shard. All
+/// variants execute the identical shard plan, so results are bitwise
+/// identical across variants and thread counts.
+#[derive(Clone, Copy)]
+pub enum Sharder<'p> {
+    /// Plain loop on the calling thread (the `threads == 1` path).
+    Sequential,
+    /// Spawn/join `std::thread::scope` workers per primitive — the PR 1
+    /// behaviour, kept as the A/B baseline for the micro benches.
+    Scoped {
+        threads: usize,
+    },
+    /// Reuse a persistent [`WorkerPool`].
+    Pool(&'p WorkerPool),
+}
+
+impl<'p> Sharder<'p> {
+    /// Participant count a shard plan should be sized to.
+    pub fn threads(&self) -> usize {
+        match self {
+            Sharder::Sequential => 1,
+            Sharder::Scoped { threads } => (*threads).max(1),
+            Sharder::Pool(p) => p.threads(),
+        }
+    }
+
+    /// Run `f(s)` for every shard `s in 0..n_shards`, returning after all
+    /// shards completed. Shards must touch disjoint data (the callers'
+    /// range/owner partition invariants).
+    pub fn run(&self, n_shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        match self {
+            Sharder::Sequential => {
+                for s in 0..n_shards {
+                    f(s);
+                }
+            }
+            Sharder::Scoped { .. } => {
+                if n_shards <= 1 {
+                    for s in 0..n_shards {
+                        f(s);
+                    }
+                    return;
+                }
+                std::thread::scope(|sc| {
+                    for s in 1..n_shards {
+                        sc.spawn(move || f(s));
+                    }
+                    f(0);
+                });
+            }
+            Sharder::Pool(p) => p.run(n_shards, f),
+        }
+    }
+}
+
+/// Reusable shard-plan arenas: per-shard traffic accumulators and the
+/// owner-partition buckets behind every owner-sharded accumulation. One
+/// lives in the engine (and one in each `HostFrontier`); after warm-up no
+/// sharded primitive allocates.
+#[derive(Debug, Default)]
+pub struct ShardScratch {
+    locals: Vec<TrafficLocal>,
+    owned: Vec<Vec<(usize, usize)>>,
+}
+
+impl ShardScratch {
+    pub fn new() -> ShardScratch {
+        ShardScratch::default()
+    }
+
+    /// `n` zeroed per-shard traffic slots (grown on first use, reused
+    /// afterwards).
+    pub(crate) fn locals_for(&mut self, n: usize) -> &mut [TrafficLocal] {
+        if self.locals.len() < n {
+            self.locals.resize(n, TrafficLocal::default());
+        }
+        let l = &mut self.locals[..n];
+        for tl in l.iter_mut() {
+            *tl = TrafficLocal::default();
+        }
+        l
+    }
+
+    /// `n` cleared owner-partition buckets (inner capacities are retained
+    /// across tasks, so steady-state partitioning never allocates).
+    pub(crate) fn owned_for(&mut self, n: usize) -> &mut [Vec<(usize, usize)>] {
+        while self.owned.len() < n {
+            self.owned.push(Vec::new());
+        }
+        for l in self.owned.iter_mut() {
+            l.clear();
+        }
+        &mut self.owned[..n]
+    }
+}
+
+/// Per-shard `&mut` slot access from a shared `Fn(usize)` job.
+///
+/// SAFETY contract: slot `s` may only be touched by the participant that
+/// runs shard `s` — exactly the guarantee [`Sharder::run`] provides.
+#[derive(Clone, Copy)]
+pub(crate) struct ShardSlots<T>(*mut T);
+
+unsafe impl<T: Send> Send for ShardSlots<T> {}
+unsafe impl<T: Send> Sync for ShardSlots<T> {}
+
+impl<T> ShardSlots<T> {
+    pub(crate) fn new(slots: &mut [T]) -> ShardSlots<T> {
+        ShardSlots(slots.as_mut_ptr())
+    }
+
+    /// SAFETY: `i` must be this shard's own index (disjointness by the
+    /// shard plan) and in bounds of the slice passed to `new`.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get(&self, i: usize) -> &mut T {
+        &mut *self.0.add(i)
+    }
+}
+
+/// The contiguous row range shard `s` of `shards` owns out of `rows`
+/// (first `rows % shards` shards get one extra row). Identical arithmetic
+/// to [`crate::exec::parallel::shard_ranges`], computed per shard so no
+/// plan vector is needed.
+pub fn shard_range(rows: usize, shards: usize, s: usize) -> Range<usize> {
+    let shards = shards.max(1);
+    let base = rows / shards;
+    let extra = rows % shards;
+    let start = s * base + s.min(extra);
+    let len = base + usize::from(s < extra);
+    start..start + len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_shard_exactly_once() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for n_shards in [0usize, 1, 2, 3, 4, 7] {
+            let hits: Vec<AtomicUsize> =
+                (0..n_shards).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n_shards, &|s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(3, &|_s| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 300);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        // n_shards > 1 with no workers still runs every shard (in order,
+        // on the caller) — proves the no-worker fallback covers all shards.
+        let order = std::sync::Mutex::new(Vec::new());
+        pool.run(3, &|s| {
+            order.lock().unwrap().push(s);
+        });
+        assert_eq!(order.into_inner().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sharder_variants_agree() {
+        let pool = WorkerPool::new(3);
+        let rows = 37usize;
+        for ex in [
+            Sharder::Sequential,
+            Sharder::Scoped { threads: 3 },
+            Sharder::Pool(&pool),
+        ] {
+            let shards = ex.threads().min(rows);
+            let out: Vec<AtomicUsize> =
+                (0..rows).map(|_| AtomicUsize::new(0)).collect();
+            ex.run(shards, &|s| {
+                for i in shard_range(rows, shards, s) {
+                    out[i].fetch_add(i + 1, Ordering::Relaxed);
+                }
+            });
+            let v: Vec<usize> =
+                out.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+            let expect: Vec<usize> = (0..rows).map(|i| i + 1).collect();
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn shard_range_covers_and_balances() {
+        for rows in [0usize, 1, 5, 64, 101] {
+            for shards in [1usize, 2, 3, 7, 16] {
+                let mut next = 0;
+                let (mut lo, mut hi) = (usize::MAX, 0usize);
+                for s in 0..shards.min(rows.max(1)) {
+                    let r = shard_range(rows, shards.min(rows.max(1)), s);
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                    lo = lo.min(r.len());
+                    hi = hi.max(r.len());
+                }
+                assert_eq!(next, rows);
+                if rows > 0 {
+                    assert!(hi - lo <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        let mut sc = ShardScratch::new();
+        let l = sc.locals_for(4);
+        l[2].add(100);
+        let l = sc.locals_for(4);
+        assert_eq!(l[2].bytes, 0, "slots must be re-zeroed");
+        let o = sc.owned_for(3);
+        o[1].push((7, 7));
+        let cap = {
+            let o = sc.owned_for(3);
+            assert!(o[1].is_empty(), "buckets must be cleared");
+            o[1].capacity()
+        };
+        assert!(cap >= 1, "bucket capacity must be retained");
+    }
+}

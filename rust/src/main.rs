@@ -110,12 +110,18 @@ USAGE:
   cavs analyze [--set cell=treelstm] [--set h=256]
 
 --threads N shards every batching task's host-side rows (pull/gather/
-  scatter/scatter-add) across N worker threads; results are bitwise
-  identical to N=1 (see DESIGN.md §5).
+  scatter/scatter-add) across N participants of a persistent worker
+  pool; results are bitwise identical to N=1 (see DESIGN.md §5).
+  --set pool=off swaps in the spawn-per-primitive scoped baseline for
+  A/B perf comparisons.
+
+`cavs bench` writes machine-readable results/BENCH_<exp>.json next to
+  the results/*.{txt,csv} tables; `cargo bench --bench micro` writes
+  per-point stats to BENCH_micro.json (gitignored).
 
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
-  lazy_batching, fusion, streaming, threads, artifacts_dir"
+  lazy_batching, fusion, streaming, threads, pool, artifacts_dir"
     );
 }
 

@@ -10,24 +10,35 @@
 //!
 //! ## Multi-threaded variants
 //!
-//! The `*_mt` methods shard one batched copy across worker threads
-//! (`std::thread::scope`, see `exec::parallel` and DESIGN.md §5):
+//! The `*_mt` methods shard one batched copy across the participants of
+//! an [`exec::pool::Sharder`](crate::exec::pool::Sharder) — the persistent
+//! worker pool by default, scoped spawns as the A/B baseline (DESIGN.md
+//! §5):
 //!
-//! * `gather_mt` shards by *destination row* — destination rows are
-//!   disjoint by construction, sources are read-only.
-//! * `scatter_mt` and `scatter_add_mt` shard by *destination owner*
-//!   (`id % threads`, one sequential partition pre-pass): each target
-//!   row belongs to exactly one worker for any input, and entries apply
-//!   in the same ascending-`m` order as the sequential loop — results
-//!   are bitwise identical for every thread count, and duplicate targets
-//!   (shared children receiving gradient from several parents) can
-//!   never race.
+//! * `gather_mt` / `gather_slot_mt` shard by *destination row* —
+//!   destination rows are disjoint by construction, sources are
+//!   read-only.
+//! * `scatter_mt` and `scatter_add_mt` / `scatter_add_slot_mt` shard by
+//!   *destination owner* (`id % shards`, one sequential partition
+//!   pre-pass into the caller's reusable
+//!   [`ShardScratch`](crate::exec::pool::ShardScratch) buckets): each
+//!   target row belongs to exactly one worker for any input, and entries
+//!   apply in the same ascending-`m` order as the sequential loop —
+//!   results are bitwise identical for every executor and thread count,
+//!   and duplicate targets (shared children receiving gradient from
+//!   several parents) can never race.
+//!
+//! The `*_slot_*` variants read/write a strided column window of the
+//! dense block (`row * stride + col ..+ cols`), which is how the host
+//! frontier keeps all child slots of a task in **one** slot-concatenated
+//! block instead of per-slot allocations.
 //!
 //! Traffic accounting stays contention-free: worker threads either write
-//! per-thread [`TrafficLocal`] accumulators merged at task end, or the
+//! per-shard [`TrafficLocal`] accumulators merged at task end, or the
 //! caller adds the (analytically known) byte count once after the join.
 //! Totals are invariant under thread count, so Table 2 numbers do not
-//! depend on `--threads`.
+//! depend on `--threads`. None of the sharded primitives allocate: shard
+//! plans are computed per shard and owner buckets are recycled arenas.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -105,7 +116,8 @@ impl TrafficLocal {
     }
 }
 
-use crate::exec::parallel::{partition_by_owner, SendPtr};
+use crate::exec::parallel::{partition_pairs, SendPtr};
+use crate::exec::pool::{shard_range, Sharder, ShardScratch};
 
 /// Dense vertex-id -> state-slice store backing gather/scatter (and, with
 /// `add` writes, the gradient flow of the backward pass).
@@ -130,13 +142,29 @@ impl StateBuffer {
     }
 
     pub fn zero(&mut self) {
-        self.data.fill(0.0);
+        let live = self.n * self.cols;
+        self.data[..live].fill(0.0);
     }
 
-    /// The whole backing block (row-major), e.g. for whole-buffer
-    /// equivalence assertions in tests.
+    /// Re-shape the buffer for a new minibatch, zeroed, **reusing** the
+    /// backing allocation (it only ever grows to its high-water mark).
+    /// This is the chunk-reuse half of the zero-steady-state-allocation
+    /// invariant (DESIGN.md §5).
+    pub fn reset_for(&mut self, n_vertices: usize, cols: usize) {
+        self.cols = cols;
+        self.n = n_vertices;
+        let need = n_vertices * cols;
+        if self.data.len() < need {
+            self.data.resize(need, 0.0);
+        }
+        self.data[..need].fill(0.0);
+    }
+
+    /// The live `[n, cols]` block (row-major), e.g. for whole-buffer
+    /// equivalence assertions in tests. The backing allocation may be
+    /// larger after [`StateBuffer::reset_for`] shrank the shape.
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        &self.data[..self.n * self.cols]
     }
 
     pub fn row(&self, v: usize) -> &[f32] {
@@ -164,39 +192,70 @@ impl StateBuffer {
     }
 
     /// Sharded [`StateBuffer::gather`]: destination rows are split into
-    /// contiguous per-worker ranges. Counted as one primitive.
+    /// contiguous per-shard ranges. Counted as one primitive.
     pub fn gather_mt(
         &self,
         ids: &[Option<u32>],
         dst: &mut [f32],
-        threads: usize,
+        ex: Sharder<'_>,
         tr: &MemTraffic,
     ) {
-        let threads = threads.min(ids.len()).max(1);
-        if threads <= 1 {
-            return self.gather(ids, dst, tr);
-        }
         let c = self.cols;
-        debug_assert!(dst.len() >= ids.len() * c);
-        let ranges = crate::exec::parallel::shard_ranges(ids.len(), threads);
-        std::thread::scope(|s| {
-            let mut rest = &mut dst[..ids.len() * c];
-            for range in ranges {
-                let (chunk, r) = rest.split_at_mut(range.len() * c);
-                rest = r;
-                let ids_chunk = &ids[range];
-                s.spawn(move || {
-                    for (m, id) in ids_chunk.iter().enumerate() {
-                        let d = &mut chunk[m * c..(m + 1) * c];
-                        match id {
-                            Some(v) => d.copy_from_slice(self.row(*v as usize)),
-                            None => d.fill(0.0),
-                        }
-                    }
-                });
+        self.gather_slot_mt(ids, dst, c, 0, ex, tr)
+    }
+
+    /// Strided sharded gather: row `m` lands at
+    /// `dst[m * dst_stride + dst_col ..+ cols]`. With `dst_stride ==
+    /// cols, dst_col == 0` this is [`StateBuffer::gather_mt`]; the host
+    /// frontier uses it to gather every child slot into one
+    /// slot-concatenated block. Sharding is by destination row, so shards
+    /// stay disjoint for any stride `>= cols`. Allocation-free.
+    pub fn gather_slot_mt(
+        &self,
+        ids: &[Option<u32>],
+        dst: &mut [f32],
+        dst_stride: usize,
+        dst_col: usize,
+        ex: Sharder<'_>,
+        tr: &MemTraffic,
+    ) {
+        let c = self.cols;
+        let rows = ids.len();
+        debug_assert!(dst_stride >= c && dst_col + c <= dst_stride);
+        debug_assert!(
+            rows == 0 || dst.len() >= (rows - 1) * dst_stride + dst_col + c
+        );
+        let shards = ex.threads().min(rows).max(1);
+        if shards <= 1 {
+            for (m, id) in ids.iter().enumerate() {
+                let a = m * dst_stride + dst_col;
+                let d = &mut dst[a..a + c];
+                match id {
+                    Some(v) => d.copy_from_slice(self.row(*v as usize)),
+                    None => d.fill(0.0),
+                }
+            }
+            tr.add(rows * c * 4);
+            return;
+        }
+        let ptr = SendPtr(dst.as_mut_ptr());
+        ex.run(shards, &|s: usize| {
+            for m in shard_range(rows, shards, s) {
+                // SAFETY: shard s owns a disjoint row range; windows of
+                // distinct rows never overlap (dst_col + c <= dst_stride).
+                let d = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        ptr.0.add(m * dst_stride + dst_col),
+                        c,
+                    )
+                };
+                match ids[m] {
+                    Some(v) => d.copy_from_slice(self.row(v as usize)),
+                    None => d.fill(0.0),
+                }
             }
         });
-        tr.add(ids.len() * c * 4);
+        tr.add(rows * c * 4);
     }
 
     /// scatter: copy rows of the dense task block `src` out to `ids`.
@@ -211,47 +270,46 @@ impl StateBuffer {
     }
 
     /// Sharded [`StateBuffer::scatter`], partitioned by destination owner
-    /// (`id % threads`) so each row is written by exactly one worker for
+    /// (`id % shards`) so each row is written by exactly one worker for
     /// **any** input — even (out-of-contract) duplicate ids stay a
     /// well-defined last-write-in-task-order, identical to the sequential
-    /// loop, never a data race.
+    /// loop, never a data race. The owner buckets are `scratch` arenas,
+    /// so steady-state calls allocate nothing.
     pub fn scatter_mt(
         &mut self,
         ids: &[u32],
         src: &[f32],
-        threads: usize,
+        ex: Sharder<'_>,
+        scratch: &mut ShardScratch,
         tr: &MemTraffic,
     ) {
-        let threads = threads.min(ids.len()).max(1);
-        if threads <= 1 {
+        let shards = ex.threads().min(ids.len()).max(1);
+        if shards <= 1 {
             return self.scatter(ids, src, tr);
         }
         let c = self.cols;
         debug_assert!(src.len() >= ids.len() * c);
         let n = self.n;
-        let owned = partition_by_owner(
-            threads,
+        let owned = scratch.owned_for(shards);
+        partition_pairs(
+            &mut *owned,
             ids.iter().enumerate().map(|(m, &v)| (m, v as usize)),
         );
+        let owned_r: &[Vec<(usize, usize)>] = owned;
         let ptr = SendPtr(self.data.as_mut_ptr());
-        std::thread::scope(|s| {
-            for list in owned.iter().filter(|l| !l.is_empty()) {
-                let p = ptr;
-                s.spawn(move || {
-                    for &(m, v) in list {
-                        assert!(v < n, "scatter id {v} out of range {n}");
-                        // SAFETY: the owner partition puts row v in exactly
-                        // one worker's list; rows are non-overlapping
-                        // c-element blocks inside the live allocation.
-                        unsafe {
-                            std::ptr::copy_nonoverlapping(
-                                src.as_ptr().add(m * c),
-                                p.0.add(v * c),
-                                c,
-                            );
-                        }
-                    }
-                });
+        ex.run(shards, &|s: usize| {
+            for &(m, v) in &owned_r[s] {
+                assert!(v < n, "scatter id {v} out of range {n}");
+                // SAFETY: the owner partition puts row v in exactly one
+                // shard's list; rows are non-overlapping c-element blocks
+                // inside the live allocation.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src.as_ptr().add(m * c),
+                        ptr.0.add(v * c),
+                        c,
+                    );
+                }
             }
         });
         tr.add(ids.len() * c * 4);
@@ -272,53 +330,79 @@ impl StateBuffer {
     }
 
     /// Sharded [`StateBuffer::scatter_add`], partitioned by destination
-    /// owner (`id % threads`): duplicate ids land on one worker and
+    /// owner (`id % shards`): duplicate ids land on one worker and
     /// accumulate in ascending-`m` order — bitwise identical to the
-    /// sequential loop for every thread count.
+    /// sequential loop for every executor and thread count.
     pub fn scatter_add_mt(
         &mut self,
         ids: &[Option<u32>],
         src: &[f32],
-        threads: usize,
+        ex: Sharder<'_>,
+        scratch: &mut ShardScratch,
         tr: &MemTraffic,
     ) {
-        let threads = threads.min(ids.len()).max(1);
-        if threads <= 1 {
-            return self.scatter_add(ids, src, tr);
-        }
         let c = self.cols;
+        self.scatter_add_slot_mt(ids, src, c, 0, ex, scratch, tr)
+    }
+
+    /// Strided sharded scatter-add: source row `m` is read at
+    /// `src[m * src_stride + src_col ..+ cols]`. With `src_stride ==
+    /// cols, src_col == 0` this is [`StateBuffer::scatter_add_mt`]; the
+    /// host frontier uses it to scatter each child slot's adjoint out of
+    /// one slot-concatenated gradient block. One sequential pass
+    /// partitions targets by owner into the caller's `scratch` buckets,
+    /// preserving the ascending-`m` order within each owner (bitwise
+    /// identity with the sequential loop); workers then walk only their
+    /// own list instead of all of `ids` (avoids O(shards * n) scanning).
+    /// Allocation-free in the steady state.
+    pub fn scatter_add_slot_mt(
+        &mut self,
+        ids: &[Option<u32>],
+        src: &[f32],
+        src_stride: usize,
+        src_col: usize,
+        ex: Sharder<'_>,
+        scratch: &mut ShardScratch,
+        tr: &MemTraffic,
+    ) {
+        let c = self.cols;
+        debug_assert!(src_stride >= c && src_col + c <= src_stride);
+        let shards = ex.threads().min(ids.len()).max(1);
+        if shards <= 1 {
+            for (m, id) in ids.iter().enumerate() {
+                if let Some(v) = id {
+                    let a = m * src_stride + src_col;
+                    let row = self.row_mut(*v as usize);
+                    for (x, y) in row.iter_mut().zip(&src[a..a + c]) {
+                        *x += *y;
+                    }
+                }
+            }
+            tr.add(ids.len() * c * 4);
+            return;
+        }
         let n = self.n;
-        // One sequential pass partitions targets by owner, preserving the
-        // ascending-m order within each owner (bitwise identity with the
-        // sequential loop); workers then walk only their own list instead
-        // of all of `ids` (avoids O(threads * n) scanning).
-        let owned = partition_by_owner(
-            threads,
+        let owned = scratch.owned_for(shards);
+        partition_pairs(
+            &mut *owned,
             ids.iter()
                 .enumerate()
                 .filter_map(|(m, id)| id.map(|v| (m, v as usize))),
         );
-        if owned.iter().all(Vec::is_empty) {
-            tr.add(ids.len() * c * 4);
-            return;
-        }
+        let owned_r: &[Vec<(usize, usize)>] = owned;
         let ptr = SendPtr(self.data.as_mut_ptr());
-        std::thread::scope(|s| {
-            for list in owned.iter().filter(|l| !l.is_empty()) {
-                let p = ptr;
-                s.spawn(move || {
-                    for &(m, v) in list {
-                        assert!(v < n, "scatter_add id {v} out of range {n}");
-                        // SAFETY: the owner partition puts row v in exactly
-                        // one worker's list (disjoint c-element blocks).
-                        let row = unsafe {
-                            std::slice::from_raw_parts_mut(p.0.add(v * c), c)
-                        };
-                        for (a, b) in row.iter_mut().zip(&src[m * c..(m + 1) * c]) {
-                            *a += *b;
-                        }
-                    }
-                });
+        ex.run(shards, &|s: usize| {
+            for &(m, v) in &owned_r[s] {
+                assert!(v < n, "scatter_add id {v} out of range {n}");
+                // SAFETY: the owner partition puts row v in exactly one
+                // shard's list (disjoint c-element blocks).
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(v * c), c)
+                };
+                let a = m * src_stride + src_col;
+                for (x, y) in row.iter_mut().zip(&src[a..a + c]) {
+                    *x += *y;
+                }
             }
         });
         tr.add(ids.len() * c * 4);
@@ -469,8 +553,9 @@ mod tests {
     }
 
     #[test]
-    fn mt_variants_match_sequential() {
-        let tr = MemTraffic::default();
+    fn mt_variants_match_sequential_for_every_executor() {
+        use crate::exec::pool::WorkerPool;
+
         let n = 37;
         let c = 5;
         let mut base = StateBuffer::new(n, c);
@@ -479,40 +564,129 @@ mod tests {
                 *x = (v * 10 + j) as f32;
             }
         }
-
-        // gather
         let ids: Vec<Option<u32>> = (0..n as u32)
             .map(|v| if v % 3 == 0 { None } else { Some((v * 7) % n as u32) })
             .collect();
-        let mut seq = vec![0.0; n * c];
-        let mut par = vec![1.0; n * c];
-        base.gather(&ids, &mut seq, &tr);
-        base.gather_mt(&ids, &mut par, 4, &tr);
-        assert_eq!(seq, par);
-
-        // scatter (distinct ids)
         let src: Vec<f32> = (0..n * c).map(|i| i as f32 * 0.5).collect();
         let mut perm: Vec<u32> = (0..n as u32).collect();
         perm.reverse();
-        let mut a = StateBuffer::new(n, c);
-        let mut b = StateBuffer::new(n, c);
-        a.scatter(&perm, &src, &tr);
-        b.scatter_mt(&perm, &src, 4, &tr);
-        assert_eq!(a.as_slice(), b.as_slice());
-
-        // scatter_add with duplicate targets
         let dup_ids: Vec<Option<u32>> = (0..n as u32)
             .map(|v| if v % 5 == 4 { None } else { Some(v % 4) })
             .collect();
-        let mut a = StateBuffer::new(n, c);
-        let mut b = StateBuffer::new(n, c);
-        let t0 = MemTraffic::default();
-        let t1 = MemTraffic::default();
-        a.scatter_add(&dup_ids, &src, &t0);
-        b.scatter_add_mt(&dup_ids, &src, 3, &t1);
-        assert_eq!(a.as_slice(), b.as_slice());
-        // traffic accounting is invariant under thread count
-        assert_eq!(t0.bytes(), t1.bytes());
-        assert_eq!(t0.ops(), t1.ops());
+
+        let threads = 4usize;
+        let pool = WorkerPool::new(threads);
+        let mut scratch = ShardScratch::new();
+        for ex in [
+            Sharder::Sequential,
+            Sharder::Scoped { threads },
+            Sharder::Pool(&pool),
+        ] {
+            let tr = MemTraffic::default();
+
+            // gather
+            let mut seq = vec![0.0; n * c];
+            let mut par = vec![1.0; n * c];
+            base.gather(&ids, &mut seq, &tr);
+            base.gather_mt(&ids, &mut par, ex, &tr);
+            assert_eq!(seq, par);
+
+            // scatter (distinct ids)
+            let mut a = StateBuffer::new(n, c);
+            let mut b = StateBuffer::new(n, c);
+            a.scatter(&perm, &src, &tr);
+            b.scatter_mt(&perm, &src, ex, &mut scratch, &tr);
+            assert_eq!(a.as_slice(), b.as_slice());
+
+            // scatter_add with duplicate targets
+            let mut a = StateBuffer::new(n, c);
+            let mut b = StateBuffer::new(n, c);
+            let t0 = MemTraffic::default();
+            let t1 = MemTraffic::default();
+            a.scatter_add(&dup_ids, &src, &t0);
+            b.scatter_add_mt(&dup_ids, &src, ex, &mut scratch, &t1);
+            assert_eq!(a.as_slice(), b.as_slice());
+            // traffic accounting is invariant under executor/thread count
+            assert_eq!(t0.bytes(), t1.bytes());
+            assert_eq!(t0.ops(), t1.ops());
+        }
+    }
+
+    #[test]
+    fn slot_variants_match_per_slot_blocks() {
+        use crate::exec::pool::WorkerPool;
+
+        let n = 11;
+        let c = 3;
+        let arity = 2;
+        let stride = arity * c;
+        let mut sb = StateBuffer::new(n, c);
+        for v in 0..n {
+            for (j, x) in sb.row_mut(v).iter_mut().enumerate() {
+                *x = (v * 100 + j) as f32;
+            }
+        }
+        let ids0: Vec<Option<u32>> =
+            (0..6u32).map(|m| (m % 2 == 0).then_some(m % n as u32)).collect();
+        let ids1: Vec<Option<u32>> =
+            (0..6u32).map(|m| Some((m * 3) % n as u32)).collect();
+
+        let pool = WorkerPool::new(3);
+        for ex in [Sharder::Sequential, Sharder::Pool(&pool)] {
+            let tr = MemTraffic::default();
+            // strided gather == two dense gathers interleaved
+            let mut dense0 = vec![0.0; 6 * c];
+            let mut dense1 = vec![0.0; 6 * c];
+            sb.gather(&ids0, &mut dense0, &tr);
+            sb.gather(&ids1, &mut dense1, &tr);
+            let mut inter = vec![7.0; 6 * stride];
+            sb.gather_slot_mt(&ids0, &mut inter, stride, 0, ex, &tr);
+            sb.gather_slot_mt(&ids1, &mut inter, stride, c, ex, &tr);
+            for m in 0..6 {
+                assert_eq!(
+                    &inter[m * stride..m * stride + c],
+                    &dense0[m * c..(m + 1) * c]
+                );
+                assert_eq!(
+                    &inter[m * stride + c..(m + 1) * stride],
+                    &dense1[m * c..(m + 1) * c]
+                );
+            }
+
+            // strided scatter-add == dense scatter-adds of each column slice
+            let src: Vec<f32> = (0..6 * stride).map(|i| i as f32).collect();
+            let mut scratch = ShardScratch::new();
+            let mut a = StateBuffer::new(n, c);
+            let mut b = StateBuffer::new(n, c);
+            for (slot, ids) in [&ids0, &ids1].into_iter().enumerate() {
+                let dense: Vec<f32> = (0..6)
+                    .flat_map(|m| {
+                        let s0 = m * stride + slot * c;
+                        src[s0..s0 + c].to_vec()
+                    })
+                    .collect();
+                a.scatter_add(ids, &dense, &tr);
+                b.scatter_add_slot_mt(
+                    ids, &src, stride, slot * c, ex, &mut scratch, &tr,
+                );
+            }
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn reset_for_reuses_and_zeroes() {
+        let mut sb = StateBuffer::new(4, 3);
+        sb.row_mut(3).fill(9.0);
+        let tr = MemTraffic::default();
+        sb.scatter(&[0], &[1., 2., 3.], &tr);
+        sb.reset_for(2, 5);
+        assert_eq!(sb.len(), 2);
+        assert_eq!(sb.cols, 5);
+        assert_eq!(sb.as_slice(), &[0.0f32; 10][..]);
+        // grow again — old contents must not leak into the live window
+        sb.reset_for(5, 3);
+        assert_eq!(sb.as_slice(), &[0.0f32; 15][..]);
+        assert!(sb.as_slice().iter().all(|&v| v == 0.0));
     }
 }

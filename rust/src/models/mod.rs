@@ -285,18 +285,26 @@ impl Embedding {
         }
     }
 
-    /// Accumulate one gradient row per token across worker threads
-    /// (owner-sharded by token id, see `exec::parallel::owner_add_rows`):
-    /// duplicate tokens within a task accumulate in the sequential order,
-    /// so results are bitwise identical for every thread count.
-    pub fn acc_grad_rows_mt(&mut self, toks: &[i32], g: &[f32], threads: usize) {
+    /// Accumulate one gradient row per token across the executor's
+    /// participants (owner-sharded by token id, see
+    /// `exec::parallel::owner_add_rows`): duplicate tokens within a task
+    /// accumulate in the sequential order, so results are bitwise
+    /// identical for every executor and thread count.
+    pub fn acc_grad_rows_mt(
+        &mut self,
+        toks: &[i32],
+        g: &[f32],
+        ex: crate::exec::pool::Sharder<'_>,
+        scratch: &mut crate::exec::pool::ShardScratch,
+    ) {
         debug_assert_eq!(g.len(), toks.len() * self.dim);
         crate::exec::parallel::owner_add_rows(
             &mut self.grad,
             self.dim,
             toks,
             g,
-            threads,
+            ex,
+            scratch,
         );
     }
 

@@ -133,6 +133,22 @@ impl Manifest {
             v.sort_unstable();
             v.dedup();
         }
+        // Validate every bucketed artifact family once at load (sorted,
+        // deduped, non-zero) so the scheduler and the engine's chunking
+        // logic can rely on `buckets.last()` without implicit assumptions
+        // — a malformed manifest fails here with context, not deep inside
+        // a minibatch.
+        for ((cell, kind, h), v) in &buckets {
+            let bucketed = matches!(
+                kind.as_str(),
+                "cell_fwd" | "cell_bwd" | "cell_bwd_data" | "param_grad"
+            ) || kind.starts_with("head_");
+            if bucketed {
+                crate::scheduler::validate_buckets(v).with_context(|| {
+                    format!("manifest bucket list for ({cell}, {kind}, h={h})")
+                })?;
+            }
+        }
         Ok(Manifest {
             dir: dir.to_path_buf(),
             vocab: j.get("vocab").and_then(Json::as_usize).unwrap_or(1000),

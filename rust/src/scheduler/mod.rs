@@ -5,6 +5,8 @@
 //! a breadth-first frontier sweep, chunks tasks to the artifact bucket
 //! range, and records them on a stack for the exactly-LIFO backward pass.
 
+use anyhow::{bail, Result};
+
 use crate::graph::GraphBatch;
 use crate::util::bucket_for;
 
@@ -42,6 +44,29 @@ pub struct ScheduleStats {
     pub n_vertices: usize,
     pub padded_rows: usize,
     pub max_task: usize,
+}
+
+/// Validate an artifact bucket list before scheduling against it: it must
+/// be non-empty, contain no zero bucket, and be strictly ascending (which
+/// implies deduped). `schedule` and the engine's chunking logic both
+/// assume `buckets.last()` is the usable maximum — callers get a proper
+/// error here instead of a panic (or silent mis-chunking) downstream.
+pub fn validate_buckets(buckets: &[usize]) -> Result<()> {
+    if buckets.is_empty() {
+        bail!("artifact bucket list is empty");
+    }
+    if buckets[0] == 0 {
+        bail!("artifact bucket list contains a zero bucket: {buckets:?}");
+    }
+    for w in buckets.windows(2) {
+        if w[1] <= w[0] {
+            bail!(
+                "artifact bucket list must be strictly ascending \
+                 (sorted, deduped): {buckets:?}"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Build the forward task list. The backward pass is `tasks.iter().rev()`
@@ -256,6 +281,16 @@ mod tests {
         let s = stats(&tasks);
         assert_eq!(s.padded_rows, 0);
         assert_eq!(s.max_task, 16);
+    }
+
+    #[test]
+    fn validate_buckets_accepts_only_sorted_deduped_nonzero() {
+        assert!(validate_buckets(&[1, 2, 4, 8]).is_ok());
+        assert!(validate_buckets(&[16]).is_ok());
+        assert!(validate_buckets(&[]).is_err(), "empty list");
+        assert!(validate_buckets(&[0, 1, 2]).is_err(), "zero bucket");
+        assert!(validate_buckets(&[1, 4, 2]).is_err(), "unsorted");
+        assert!(validate_buckets(&[1, 2, 2, 4]).is_err(), "duplicate");
     }
 
     #[test]

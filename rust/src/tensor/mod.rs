@@ -85,6 +85,15 @@ impl DynamicTensor {
         self.bs = 0;
     }
 
+    /// Full recycle for the next minibatch: offsets **and** the high-water
+    /// mark rewind, while the chunk keeps its capacity — repeated
+    /// minibatches of the same shape never reallocate (the engine's
+    /// chunk-reuse half of the zero-steady-state-allocation invariant).
+    pub fn recycle(&mut self) {
+        self.reset();
+        self.high_water_rows = 0;
+    }
+
     /// The current `[bs, cols]` view.
     pub fn view(&self) -> &[f32] {
         let a = self.offset_rows * self.cols;
@@ -205,6 +214,24 @@ mod tests {
         let cap = t.capacity_bytes();
         t.reset();
         assert_eq!(t.offset_rows(), 0);
+        assert_eq!(t.capacity_bytes(), cap);
+    }
+
+    #[test]
+    fn recycle_rewinds_high_water_but_keeps_chunk() {
+        let mut t = DynamicTensor::new(&[4]);
+        for _ in 0..10 {
+            t.set_bs(16);
+            t.advance();
+        }
+        let cap = t.capacity_bytes();
+        assert_eq!(t.high_water_rows(), 160);
+        t.recycle();
+        assert_eq!(t.offset_rows(), 0);
+        assert_eq!(t.high_water_rows(), 0);
+        assert_eq!(t.capacity_bytes(), cap, "chunk must be retained");
+        // a same-shape minibatch reuses the chunk without growing it
+        t.set_bs(16);
         assert_eq!(t.capacity_bytes(), cap);
     }
 }

@@ -1,5 +1,6 @@
-//! Minimal JSON parser — enough for the artifact manifest and the golden
-//! test vectors emitted by `python/compile/aot.py`.
+//! Minimal JSON parser + writer — enough for the artifact manifest, the
+//! golden test vectors emitted by `python/compile/aot.py`, and the
+//! machine-readable bench reports (`BENCH_<exp>.json`).
 //!
 //! Supports the full JSON value grammar (objects, arrays, strings with
 //! escapes, numbers, booleans, null). Not performance-critical: the
@@ -108,6 +109,92 @@ impl Json {
             .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
             .unwrap_or_default()
     }
+
+    // -- builders + writer -------------------------------------------------
+
+    /// Object from key/value pairs (keys end up in BTreeMap order).
+    pub fn obj(pairs: impl IntoIterator<Item = (String, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().collect())
+    }
+
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn text(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Serialize to compact JSON text. Non-finite numbers render as
+    /// `null` (JSON has no NaN/Inf); integral numbers render without a
+    /// fraction so the output round-trips through the parser bit-exact
+    /// for the values the bench reports emit.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_to(&mut out);
+        out
+    }
+
+    fn write_to(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_to(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write_to(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -340,6 +427,31 @@ mod tests {
     fn flattens_nested_numeric() {
         let j = Json::parse("[[1, 2], [3, 4]]").unwrap();
         assert_eq!(j.as_f32_flat(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let j = Json::obj([
+            ("exp".to_string(), Json::text("micro")),
+            (
+                "points".to_string(),
+                Json::arr([
+                    Json::obj([
+                        ("threads".to_string(), Json::num(4.0)),
+                        ("mean_s".to_string(), Json::num(0.001525)),
+                        ("ok".to_string(), Json::Bool(true)),
+                    ]),
+                    Json::Null,
+                ]),
+            ),
+            ("note".to_string(), Json::text("line\nbreak \"q\" \\ end")),
+        ]);
+        let text = j.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        // integral numbers render without a fraction
+        assert_eq!(Json::num(42.0).render(), "42");
+        assert_eq!(Json::num(f64::NAN).render(), "null");
     }
 
     #[test]

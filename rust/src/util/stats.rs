@@ -8,10 +8,20 @@ use std::time::{Duration, Instant};
 pub struct Summary {
     pub n: usize,
     pub mean_s: f64,
+    /// p50 of the samples.
     pub median_s: f64,
+    /// p95 of the samples (nearest-rank; equals the max for tiny n).
+    pub p95_s: f64,
     pub stddev_s: f64,
     pub min_s: f64,
     pub max_s: f64,
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample list.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 impl Summary {
@@ -26,7 +36,9 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a stray NaN sample (e.g. a zero-duration division
+        // upstream) sorts to the end instead of panicking the reporter.
+        sorted.sort_by(f64::total_cmp);
         let median = if n % 2 == 1 {
             sorted[n / 2]
         } else {
@@ -36,6 +48,7 @@ impl Summary {
             n,
             mean_s: mean,
             median_s: median,
+            p95_s: percentile(&sorted, 95.0),
             stddev_s: var.sqrt(),
             min_s: sorted[0],
             max_s: sorted[n - 1],
@@ -149,6 +162,26 @@ mod tests {
         assert!((s.max_s - 4.0).abs() < 1e-12);
         let expected_sd = (5.0f64 / 3.0).sqrt();
         assert!((s.stddev_s - expected_sd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_and_sorts_last() {
+        let s = Summary::from_samples(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.min_s - 1.0).abs() < 1e-12);
+        assert!(s.max_s.is_nan(), "NaN must sort to the end, not panic");
+        assert!((s.median_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p95_is_nearest_rank() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&samples);
+        assert!((s.p95_s - 95.0).abs() < 1e-12);
+        // tiny n: p95 collapses to the max
+        let s = Summary::from_samples(&[3.0, 1.0]);
+        assert!((s.p95_s - 3.0).abs() < 1e-12);
+        assert!((s.median_s - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! util::propcheck — proptest is unavailable offline). Replay failures
 //! with `CAVS_PROP_SEED=<seed>`; scale effort with `CAVS_PROP_CASES`.
 
-use cavs::exec::parallel::{run_host_frontier, HostTreeFc};
+use cavs::exec::parallel::{run_host_frontier, HostFrontier, HostTreeFc};
+use cavs::exec::pool::{Sharder, WorkerPool};
 use cavs::graph::{synth, GraphBatch, InputGraph};
 use cavs::memory::{MemTraffic, StateBuffer};
 use cavs::scheduler::{frontier_levels, schedule, stats, Policy};
@@ -306,6 +307,117 @@ fn prop_parallel_frontier_bitwise_matches_sequential() {
                 (run.traffic_bytes, run.traffic_ops),
                 "traffic accounting diverges at threads={threads}"
             );
+        }
+    });
+}
+
+/// The three executors — sequential, scoped spawn-per-primitive (the
+/// pre-pool baseline), and the persistent worker pool — produce **bitwise
+/// identical** forward states, backward gradients, input-table gradients
+/// and traffic counters on random graph batches at every thread count:
+/// they execute the same shard plan, only the threads running the shards
+/// differ. This is the contract that let the pool replace the scoped
+/// spawns without touching numerics.
+#[test]
+fn prop_pool_scoped_sequential_bitwise_equivalent() {
+    check("executor-equivalence", 20, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        let h = 1 + rng.below(6);
+        let vocab = 20usize;
+        let cell = HostTreeFc::random(h, arity, rng);
+        let xtable: Vec<f32> =
+            (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+
+        let mut seq = HostFrontier::new();
+        seq.run(&batch, &tasks, &cell, &xtable, Sharder::Sequential, true);
+        for threads in [2usize, 3, 5] {
+            let pool = WorkerPool::new(threads);
+            for (mode, ex) in [
+                ("scoped", Sharder::Scoped { threads }),
+                ("pool", Sharder::Pool(&pool)),
+            ] {
+                let mut r = HostFrontier::new();
+                r.run(&batch, &tasks, &cell, &xtable, ex, true);
+                assert_eq!(
+                    seq.states().as_slice(),
+                    r.states().as_slice(),
+                    "{mode} t={threads}: forward states diverge"
+                );
+                assert_eq!(
+                    seq.grads().unwrap().as_slice(),
+                    r.grads().unwrap().as_slice(),
+                    "{mode} t={threads}: state gradients diverge"
+                );
+                assert_eq!(
+                    seq.x_grads(),
+                    r.x_grads(),
+                    "{mode} t={threads}: input-table gradients diverge"
+                );
+                assert_eq!(
+                    (seq.traffic_bytes(), seq.traffic_ops()),
+                    (r.traffic_bytes(), r.traffic_ops()),
+                    "{mode} t={threads}: traffic accounting diverges"
+                );
+                assert_eq!(
+                    seq.padded_rows(),
+                    r.padded_rows(),
+                    "{mode} t={threads}: padding observation diverges"
+                );
+            }
+        }
+    });
+}
+
+/// Arena recycling is invisible: one `HostFrontier` reused across
+/// consecutive random batches (its block arenas, index plans and shard
+/// scratch carrying over) produces exactly the results of a fresh
+/// executor per batch. This is the safety half of the zero-steady-state-
+/// allocation design — stale capacity can never leak into results.
+#[test]
+fn prop_arena_recycling_is_result_invariant() {
+    check("scratch-reuse", 8, |rng| {
+        let pool = WorkerPool::new(3);
+        let mut reused = HostFrontier::new();
+        for _round in 0..3 {
+            let graphs = random_graphs(rng);
+            let arity = graphs
+                .iter()
+                .flat_map(|g| g.children.iter())
+                .map(Vec::len)
+                .max()
+                .unwrap_or(1)
+                .max(1);
+            let refs: Vec<&InputGraph> = graphs.iter().collect();
+            let batch = GraphBatch::new(&refs, arity);
+            let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+            let h = 1 + rng.below(6);
+            let cell = HostTreeFc::random(h, arity, rng);
+            let xtable: Vec<f32> =
+                (0..20 * h).map(|_| rng.normal_f32(0.5)).collect();
+
+            let ex = Sharder::Pool(&pool);
+            let mut fresh = HostFrontier::new();
+            fresh.run(&batch, &tasks, &cell, &xtable, ex, true);
+            reused.run(&batch, &tasks, &cell, &xtable, ex, true);
+            assert_eq!(fresh.states().as_slice(), reused.states().as_slice());
+            assert_eq!(
+                fresh.grads().unwrap().as_slice(),
+                reused.grads().unwrap().as_slice()
+            );
+            assert_eq!(fresh.x_grads(), reused.x_grads());
+            assert_eq!(fresh.traffic_bytes(), reused.traffic_bytes());
+            assert_eq!(fresh.traffic_ops(), reused.traffic_ops());
+            assert_eq!(fresh.padded_rows(), reused.padded_rows());
         }
     });
 }
