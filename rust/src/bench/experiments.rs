@@ -509,6 +509,86 @@ pub fn loc(_rt: &Runtime) -> Result<Table> {
     Ok(table)
 }
 
+/// Online-serving sweep (`cavs bench --exp serve`): offered load vs
+/// latency over the `serve` subsystem, on the host reference cell so the
+/// bench runs everywhere (CI smoke uses `tiny`). Closed-loop rows sweep
+/// concurrency (capacity); open-loop rows offer fractions of the measured
+/// capacity and show the latency curve + admission-control shedding.
+/// Writes `results/BENCH_serve.json`.
+pub fn serve(scale: Scale, tiny: bool) -> Result<Table> {
+    use crate::serve::loadgen::{
+        mixed_workload, run_closed_loop, run_open_loop,
+    };
+    use crate::serve::{HostExec, ServeOpts, Server};
+    use crate::util::stats::fmt_duration;
+
+    let (total, h, vocab, max_batch) = if tiny {
+        (48usize, 16usize, 30usize, 8usize)
+    } else {
+        (n_scaled(512, scale), 64, 100, 32)
+    };
+    let opts = ServeOpts {
+        max_batch,
+        max_delay: std::time::Duration::from_millis(2),
+        queue_cap: 4 * max_batch,
+    };
+    let graphs = mixed_workload(11, 64.min(total), vocab, 2);
+    let fresh_server = || {
+        Server::new(
+            HostExec::tree_fc(h, 2, vocab, scale.threads.max(1), 7),
+            opts.policy(),
+        )
+    };
+    let mut table = Table::new(
+        &format!(
+            "serve: offered load vs latency ({total} mixed tree/seq requests, \
+             h={h}, max_batch={max_batch}, threads={})",
+            scale.threads.max(1)
+        ),
+        &[
+            "mode", "offered", "responses", "rejected", "rps", "batch_mean",
+            "p50", "p95", "p99", "qdepth_max", "batch_hist",
+        ],
+    );
+    let mut row = |mode: &str, offered: String, r: &crate::serve::ServeReport| {
+        table.row(vec![
+            mode.into(),
+            offered,
+            r.n_responses.to_string(),
+            r.rejected.to_string(),
+            format!("{:.0}", r.throughput_rps),
+            format!("{:.2}", r.batch_mean),
+            fmt_duration(r.latency.median_s),
+            fmt_duration(r.latency.p95_s),
+            fmt_duration(r.latency.p99_s),
+            r.queue_depth_max.to_string(),
+            r.batch_hist_compact(),
+        ]);
+    };
+
+    // closed loop: capacity at increasing in-flight counts
+    let concs: &[usize] = if tiny { &[1, 4] } else { &[1, 4, 16, 64] };
+    let mut capacity_rps = 0.0f64;
+    for &c in concs {
+        let mut sv = fresh_server();
+        let r = run_closed_loop(&mut sv, &opts, &graphs, total, c)?;
+        capacity_rps = capacity_rps.max(r.throughput_rps);
+        row("closed", format!("inflight={c}"), &r);
+    }
+
+    // open loop: offered-rate sweep around the measured capacity
+    let fracs: &[f64] = if tiny { &[0.5] } else { &[0.25, 0.5, 0.8, 1.2] };
+    for &f in fracs {
+        let rate = (capacity_rps * f).max(1.0);
+        let mut sv = fresh_server();
+        let r = run_open_loop(&mut sv, &opts, &graphs, total, rate, 23)?;
+        row("open", format!("{rate:.0}rps"), &r);
+    }
+
+    write_results("serve", &table)?;
+    Ok(table)
+}
+
 /// Run every experiment (the EXPERIMENTS.md driver).
 pub fn run_all(rt: &Runtime, scale: Scale) -> Result<Vec<Table>> {
     let mut out = Vec::new();
@@ -522,5 +602,6 @@ pub fn run_all(rt: &Runtime, scale: Scale) -> Result<Vec<Table>> {
     out.push(fig10(rt, scale)?);
     out.push(table2(rt, scale)?);
     out.push(loc(rt)?);
+    out.push(serve(scale, false)?);
     Ok(out)
 }

@@ -33,6 +33,14 @@ pub struct Config {
     /// persistent worker pool (default) vs the spawn-per-primitive scoped
     /// baseline (`--set pool=off`, for A/B perf comparisons)
     pub pool: bool,
+    /// `cavs serve`: most requests merged into one batch
+    pub serve_max_batch: usize,
+    /// `cavs serve`: dynamic-batching deadline in milliseconds (how long
+    /// a non-full batch waits for more requests)
+    pub serve_deadline_ms: f64,
+    /// `cavs serve`: request-queue capacity (admission control /
+    /// backpressure threshold)
+    pub serve_queue_cap: usize,
     pub artifacts_dir: String,
 }
 
@@ -58,6 +66,9 @@ impl Default for Config {
             streaming: false,
             threads: 1,
             pool: true,
+            serve_max_batch: 32,
+            serve_deadline_ms: 2.0,
+            serve_queue_cap: 256,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -118,10 +129,44 @@ impl Config {
                 self.threads = t;
             }
             "pool" => self.pool = parse_bool(val)?,
+            "serve_max_batch" => {
+                let b: usize = val.parse()?;
+                if b == 0 {
+                    bail!("serve_max_batch must be >= 1");
+                }
+                self.serve_max_batch = b;
+            }
+            "serve_deadline_ms" => {
+                let d: f64 = val.parse()?;
+                // finite + bounded so Duration::from_secs_f64 can never
+                // panic downstream (f64 parsing accepts "inf"/1e300)
+                if !d.is_finite() || !(0.0..=60_000.0).contains(&d) {
+                    bail!("serve_deadline_ms must be in 0..=60000");
+                }
+                self.serve_deadline_ms = d;
+            }
+            "serve_queue_cap" => {
+                let c: usize = val.parse()?;
+                if c == 0 {
+                    bail!("serve_queue_cap must be >= 1");
+                }
+                self.serve_queue_cap = c;
+            }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
+    }
+
+    /// Serving knobs for `cavs serve` (`serve_*` config keys).
+    pub fn serve_opts(&self) -> crate::serve::ServeOpts {
+        crate::serve::ServeOpts {
+            max_batch: self.serve_max_batch.max(1),
+            max_delay: std::time::Duration::from_secs_f64(
+                self.serve_deadline_ms.max(0.0) / 1e3,
+            ),
+            queue_cap: self.serve_queue_cap.max(1),
+        }
     }
 
     pub fn engine_opts(&self, training: bool) -> crate::exec::EngineOpts {
@@ -202,6 +247,27 @@ mod tests {
         c.apply("pool", "off").unwrap();
         assert!(!c.engine_opts(true).exec.pool, "scoped A/B baseline");
         assert!(c.apply("pool", "sometimes").is_err());
+    }
+
+    #[test]
+    fn serve_keys_flow_into_serve_opts() {
+        let mut c = Config::default();
+        let o = c.serve_opts();
+        assert_eq!(o.max_batch, 32);
+        assert_eq!(o.queue_cap, 256);
+        assert_eq!(o.max_delay, std::time::Duration::from_millis(2));
+        c.apply("serve_max_batch", "8").unwrap();
+        c.apply("serve_deadline_ms", "0.5").unwrap();
+        c.apply("serve_queue_cap", "64").unwrap();
+        let o = c.serve_opts();
+        assert_eq!(o.max_batch, 8);
+        assert_eq!(o.queue_cap, 64);
+        assert_eq!(o.max_delay, std::time::Duration::from_micros(500));
+        assert!(c.apply("serve_max_batch", "0").is_err());
+        assert!(c.apply("serve_deadline_ms", "-1").is_err());
+        assert!(c.apply("serve_deadline_ms", "inf").is_err());
+        assert!(c.apply("serve_deadline_ms", "1e300").is_err());
+        assert!(c.apply("serve_queue_cap", "0").is_err());
     }
 
     #[test]

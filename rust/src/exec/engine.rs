@@ -201,6 +201,56 @@ impl<'rt> Engine<'rt> {
         let batch = self.timers.time(Phase::Construction, || {
             GraphBatch::new(graphs, model.cell.arity())
         });
+        self.run_batch(model, &batch)
+    }
+
+    /// Forward-only inference over a pre-merged batch (the online serving
+    /// entry point — the server's batch former owns the merge). Skips all
+    /// backward work: no grad buffer, no gate retention, and the dynamic
+    /// tensors are recycled after every task instead of advanced, so the
+    /// chunks stay at single-task size instead of Σ task buckets.
+    /// Writes one root score per graph (sum of the root state's h-part,
+    /// in `batch.roots` order) into `root_scores`.
+    pub fn infer_batch(
+        &mut self,
+        model: &mut Model,
+        batch: &GraphBatch,
+        root_scores: &mut Vec<f32>,
+    ) -> Result<StepResult> {
+        let saved = self.opts.training;
+        self.opts.training = false;
+        let result = self.run_batch(model, batch);
+        self.opts.training = saved;
+        let result = result?;
+        root_scores.clear();
+        let ws = self.ws.as_ref().expect("run_batch recycles the workspace");
+        let (off, len) = model.cell.h_part(model.h);
+        for &r in &batch.roots {
+            let row = ws.state_buf.row(r as usize);
+            root_scores.push(row[off..off + len].iter().sum());
+        }
+        Ok(result)
+    }
+
+    /// Bytes retained by the workspace's dynamic-tensor chunks
+    /// (diagnostic). After forward-only inference these must stay at
+    /// single-task size — `infer_batch` never retains task history.
+    pub fn chunk_capacity_bytes(&self) -> usize {
+        self.ws.as_ref().map_or(0, |ws| {
+            ws.dt_x.capacity_bytes()
+                + ws.dt_s.iter().map(|d| d.capacity_bytes()).sum::<usize>()
+                + ws.dt_sout.capacity_bytes()
+                + ws.dt_gates.as_ref().map_or(0, |d| d.capacity_bytes())
+        })
+    }
+
+    /// Run one pre-merged batch: schedule, forward (+ head), and if
+    /// `opts.training`, backward (+ lazy parameter grads).
+    pub fn run_batch(
+        &mut self,
+        model: &mut Model,
+        batch: &GraphBatch,
+    ) -> Result<StepResult> {
         let buckets = self
             .rt
             .manifest
@@ -221,7 +271,7 @@ impl<'rt> Engine<'rt> {
             )
         })?;
         let tasks = self.timers.time(Phase::Scheduling, || {
-            scheduler::schedule(&batch, self.opts.policy, &buckets)
+            scheduler::schedule(batch, self.opts.policy, &buckets)
         });
         let sstats = scheduler::stats(&tasks);
 
@@ -263,11 +313,11 @@ impl<'rt> Engine<'rt> {
         };
 
         let span = self.trace.begin();
-        self.forward(model, &batch, &tasks, &mut ws)?;
-        self.run_heads(model, &batch, &tasks, &mut ws, &mut result)?;
+        self.forward(model, batch, &tasks, &mut ws)?;
+        self.run_heads(model, batch, &tasks, &mut ws, &mut result)?;
 
         if self.opts.training {
-            self.backward(model, &batch, &tasks, &mut ws)?;
+            self.backward(model, batch, &tasks, &mut ws)?;
             if ws.dt_gates.is_some() {
                 self.lazy_param_grads(model, &mut ws)?;
             }
@@ -385,17 +435,28 @@ impl<'rt> Engine<'rt> {
                 );
             });
 
-            // advance offsets (Alg. 2 L21); dt_gates reserves rows so the
-            // backward pass can fill them at matching offsets.
-            ws.dt_x.advance();
-            for d in &mut ws.dt_s {
-                d.advance();
-            }
-            ws.dt_sout.advance();
-            if let Some(g) = &mut ws.dt_gates {
-                g.set_bs(b);
-                g.zero_view();
-                g.advance();
+            if self.opts.training {
+                // advance offsets (Alg. 2 L21); dt_gates reserves rows so
+                // the backward pass can fill them at matching offsets.
+                ws.dt_x.advance();
+                for d in &mut ws.dt_s {
+                    d.advance();
+                }
+                ws.dt_sout.advance();
+                if let Some(g) = &mut ws.dt_gates {
+                    g.set_bs(b);
+                    g.zero_view();
+                    g.advance();
+                }
+            } else {
+                // Inference: nothing will rewind these views, so retaining
+                // per-task history only wastes memory — recycle the offset
+                // and let every task reuse the same single-bucket rows.
+                ws.dt_x.recycle();
+                for d in &mut ws.dt_s {
+                    d.recycle();
+                }
+                ws.dt_sout.recycle();
             }
             let _ = t;
         }

@@ -7,9 +7,27 @@ use super::InputGraph;
 /// `NO_VERTEX` marks a missing child slot (leaf positions).
 pub const NO_VERTEX: u32 = u32::MAX;
 
+/// One sample of a recycled merge: the graph plus its precomputed
+/// per-vertex depths and (first) root. The serve path computes these once
+/// at request admission so the hot merge never re-walks or allocates;
+/// [`GraphBatch::new`] computes them on the fly for the offline path.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeItem<'a> {
+    pub graph: &'a InputGraph,
+    /// `graph.depths()` (longest-path depth per vertex).
+    pub depths: &'a [u32],
+    /// First root of the graph (`graph.roots()[0]`, or 0 if rootless).
+    pub root: u32,
+}
+
 /// K graphs with globally renumbered vertices. `child(v, slot)` is either
 /// a global vertex id or `NO_VERTEX`.
-#[derive(Debug)]
+///
+/// `PartialEq` compares the live merged contents field-for-field, which is
+/// what the serve proptests use to pin the recycled
+/// [`GraphBatch::merge_indexed`] merge bitwise to the offline
+/// [`GraphBatch::new`] merge.
+#[derive(Debug, PartialEq)]
 pub struct GraphBatch {
     pub n_graphs: usize,
     pub n_vertices: usize,
@@ -32,18 +50,72 @@ pub struct GraphBatch {
 
 impl GraphBatch {
     pub fn new(graphs: &[&InputGraph], arity: usize) -> GraphBatch {
-        let n_vertices: usize = graphs.iter().map(|g| g.n()).sum();
-        let mut children = vec![NO_VERTEX; n_vertices * arity];
-        let mut tokens = Vec::with_capacity(n_vertices);
-        let mut labels = Vec::with_capacity(n_vertices);
-        let mut depth = Vec::with_capacity(n_vertices);
-        let mut owner = Vec::with_capacity(n_vertices);
-        let mut roots = Vec::with_capacity(graphs.len());
-        let mut root_labels = Vec::with_capacity(graphs.len());
+        let depths: Vec<Vec<u32>> = graphs
+            .iter()
+            .map(|g| g.depths().expect("graph validated at construction"))
+            .collect();
+        let roots: Vec<u32> = graphs
+            .iter()
+            .map(|g| g.roots().first().copied().unwrap_or(0))
+            .collect();
+        let mut batch = GraphBatch::empty(arity);
+        batch.merge_indexed(graphs.len(), arity, |i| MergeItem {
+            graph: graphs[i],
+            depths: &depths[i],
+            root: roots[i],
+        });
+        batch
+    }
+
+    /// An empty batch whose arenas a recycled merge will grow into.
+    pub fn empty(arity: usize) -> GraphBatch {
+        GraphBatch {
+            n_graphs: 0,
+            n_vertices: 0,
+            arity,
+            children: Vec::new(),
+            tokens: Vec::new(),
+            labels: Vec::new(),
+            depth: Vec::new(),
+            max_depth: 0,
+            roots: Vec::new(),
+            root_labels: Vec::new(),
+            owner: Vec::new(),
+        }
+    }
+
+    /// Recycled merge: rebuild this batch from `n` [`MergeItem`]s supplied
+    /// by `get(0..n)`. Every arena (child table, token/label/depth/owner
+    /// columns, root lists) is cleared and refilled in place, growing only
+    /// to its high-water mark — in the serve loop's steady state this
+    /// performs **zero** heap allocations (rust/tests/serve_zero_alloc.rs),
+    /// and the merged contents are bitwise identical to a fresh
+    /// [`GraphBatch::new`] over the same samples (a property test pins
+    /// this).
+    pub fn merge_indexed<'a>(
+        &mut self,
+        n: usize,
+        arity: usize,
+        get: impl Fn(usize) -> MergeItem<'a>,
+    ) {
+        let n_vertices: usize = (0..n).map(|i| get(i).graph.n()).sum();
+        self.n_graphs = n;
+        self.n_vertices = n_vertices;
+        self.arity = arity;
+        self.children.clear();
+        self.children.resize(n_vertices * arity, NO_VERTEX);
+        self.tokens.clear();
+        self.labels.clear();
+        self.depth.clear();
+        self.owner.clear();
+        self.roots.clear();
+        self.root_labels.clear();
+        self.max_depth = 0;
         let mut base = 0u32;
-        let mut max_depth = 0u32;
-        for (gi, g) in graphs.iter().enumerate() {
-            let d = g.depths().expect("graph validated at construction");
+        for gi in 0..n {
+            let item = get(gi);
+            let g = item.graph;
+            debug_assert_eq!(item.depths.len(), g.n(), "stale depth plan");
             for v in 0..g.n() {
                 let gv = base as usize + v;
                 for (slot, &c) in g.children[v].iter().enumerate() {
@@ -53,31 +125,17 @@ impl GraphBatch {
                         g.children[v].len(),
                         arity
                     );
-                    children[gv * arity + slot] = base + c;
+                    self.children[gv * arity + slot] = base + c;
                 }
-                tokens.push(g.tokens[v]);
-                labels.push(g.labels[v]);
-                depth.push(d[v]);
-                max_depth = max_depth.max(d[v]);
-                owner.push(gi as u32);
+                self.tokens.push(g.tokens[v]);
+                self.labels.push(g.labels[v]);
+                self.depth.push(item.depths[v]);
+                self.max_depth = self.max_depth.max(item.depths[v]);
+                self.owner.push(gi as u32);
             }
-            let r = g.roots();
-            roots.push(base + r.first().copied().unwrap_or(0));
-            root_labels.push(g.root_label);
+            self.roots.push(base + item.root);
+            self.root_labels.push(g.root_label);
             base += g.n() as u32;
-        }
-        GraphBatch {
-            n_graphs: graphs.len(),
-            n_vertices,
-            arity,
-            children,
-            tokens,
-            labels,
-            depth,
-            max_depth,
-            roots,
-            root_labels,
-            owner,
         }
     }
 
@@ -141,6 +199,39 @@ mod tests {
         // every vertex appears in exactly one level
         let total: usize = batch.levels().iter().map(Vec::len).sum();
         assert_eq!(total, batch.n_vertices);
+    }
+
+    #[test]
+    fn recycled_merge_is_identical_to_fresh() {
+        let mut rng = Rng::new(9);
+        let big: Vec<InputGraph> = (0..6)
+            .map(|_| synth::random_binary_tree(&mut rng, 10, 6, 5))
+            .collect();
+        let small: Vec<InputGraph> = (0..2)
+            .map(|_| synth::random_binary_tree(&mut rng, 10, 3, 5))
+            .collect();
+        let item = |graphs: &[InputGraph]| {
+            let depths: Vec<Vec<u32>> =
+                graphs.iter().map(|g| g.depths().unwrap()).collect();
+            let roots: Vec<u32> =
+                graphs.iter().map(|g| g.roots()[0]).collect();
+            (depths, roots)
+        };
+
+        let mut recycled = GraphBatch::empty(2);
+        // big -> small -> big again: live contents must match a fresh
+        // merge each time even though the arenas retain big's capacity
+        for graphs in [&big, &small, &big] {
+            let refs: Vec<&InputGraph> = graphs.iter().collect();
+            let fresh = GraphBatch::new(&refs, 2);
+            let (depths, roots) = item(graphs);
+            recycled.merge_indexed(graphs.len(), 2, |i| MergeItem {
+                graph: &graphs[i],
+                depths: &depths[i],
+                root: roots[i],
+            });
+            assert_eq!(recycled, fresh);
+        }
     }
 
     #[test]

@@ -116,8 +116,12 @@ pub fn parse_edge_list(text: &str) -> Result<InputGraph> {
             continue;
         }
         let mut it = line.split_whitespace();
-        let tag = it.next().unwrap();
         let ctx = || format!("line {}", lineno + 1);
+        // a parse error, never a panic, on any malformed record
+        let tag = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty record"))
+            .with_context(ctx)?;
         match tag {
             "v" => n = it.next().with_context(ctx)?.parse()?,
             "t" => {
@@ -187,6 +191,56 @@ mod tests {
         assert!(parse_sst("(3 (2 a) (1 b)", vocab).is_err()); // unbalanced
         assert!(parse_sst("(x (2 a))", vocab).is_err()); // non-int label
         assert!(parse_sst("(3 (2 a)) extra", vocab).is_err());
+    }
+
+    #[test]
+    fn malformed_sst_is_an_error_never_a_panic() {
+        // every shape of broken s-expression must come back as Err
+        let cases: &[&str] = &[
+            "",                // no node at all
+            "()",              // empty node
+            "( )",             // empty node with whitespace
+            "(",               // truncated after open
+            "(3",              // truncated after label
+            "(3 ",             // truncated with trailing space
+            "((2 a) (2 b))",   // missing label
+            "(3 (2 a) (1 b)",  // unbalanced parens
+            "(3 (2 a)))",      // extra close paren (trailing data)
+            ")",               // close before open
+            "word",            // bare token
+        ];
+        for c in cases {
+            let r = std::panic::catch_unwind(|| parse_sst(c, vocab));
+            match r {
+                Ok(parsed) => {
+                    assert!(parsed.is_err(), "input {c:?} must fail to parse")
+                }
+                Err(_) => panic!("input {c:?} panicked instead of Err"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_edge_list_is_an_error_never_a_panic() {
+        let cases: &[&str] = &[
+            "v",            // missing count
+            "v x",          // non-numeric count
+            "v 2\nt 0",     // truncated token record
+            "v 2\nt",       // token record with nothing
+            "v 2\ne 0",     // truncated edge record
+            "v 2\nl",       // truncated label record
+            "q 1 2",        // unknown record tag
+            "v 2\nt 5 1",   // token vertex out of range
+        ];
+        for c in cases {
+            let r = std::panic::catch_unwind(|| parse_edge_list(c));
+            match r {
+                Ok(parsed) => {
+                    assert!(parsed.is_err(), "input {c:?} must fail to parse")
+                }
+                Err(_) => panic!("input {c:?} panicked instead of Err"),
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod memory;
 pub mod models;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -85,6 +85,7 @@ fn main() -> Result<()> {
         "inspect" => cmd_inspect(&args),
         "analyze" => cmd_analyze(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -104,10 +105,23 @@ USAGE:
   cavs train   [--config cfg.json] [--threads N] [--set k=v ...]
                [--save ckpt] [--load ckpt]
   cavs eval    [--config cfg.json] [--threads N] [--set k=v ...]
-  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|loc|all
+  cavs serve   [--config cfg.json] [--threads N] [--set k=v ...]
+  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|loc|all
                [--scale 1.0] [--full true] [--threads N]
+               [--tiny true]   (serve only: bounded CI smoke)
   cavs inspect [--set artifacts_dir=...]
   cavs analyze [--set cell=treelstm] [--set h=256]
+
+`cavs serve` runs the online-inference demo: n_samples synthetic
+  concurrent requests with mixed tree/sequence structures flow through
+  the MPSC request queue, are merged on the fly by the deadline/max-batch
+  former (--set serve_max_batch=N, serve_deadline_ms=D,
+  serve_queue_cap=C), and execute forward-only on the pooled engine
+  (host reference cell when no artifact set is present). Prints
+  throughput + p50/p95/p99 latency + the batch-size distribution and
+  writes results/BENCH_serve.json. `cavs bench --exp serve` sweeps
+  offered load vs latency (closed- and open-loop); `--tiny true` is the
+  bounded CI smoke.
 
 --threads N shards every batching task's host-side rows (pull/gather/
   scatter/scatter-add) across N participants of a persistent worker
@@ -121,7 +135,8 @@ USAGE:
 
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
-  lazy_batching, fusion, streaming, threads, pool, artifacts_dir"
+  lazy_batching, fusion, streaming, threads, pool, serve_max_batch,
+  serve_deadline_ms, serve_queue_cap, artifacts_dir"
     );
 }
 
@@ -223,10 +238,83 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cavs serve`: the online-inference demo. Serves `n_samples` synthetic
+/// concurrent requests (mixed trees + sequences) through the dynamic
+/// batch former onto a forward-only executor: the PJRT engine when an
+/// artifact set is present, the host reference cell otherwise — the
+/// pipeline (queue, former, merge, plan, metrics) is identical.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use cavs::serve::loadgen::mixed_workload;
+    use cavs::serve::{EngineExec, HostExec};
+
+    let cfg = args.config()?;
+    let sopts = cfg.serve_opts();
+    let total = cfg.n_samples.max(1);
+    let have_artifacts =
+        Runtime::have_artifacts(Path::new(&cfg.artifacts_dir));
+    // the workload must fit the serving cell: arity-1 cells (lstm/gru)
+    // get a chains-only request mix, tree cells the mixed one
+    let arity = if have_artifacts { cfg.cell.arity() } else { 2 };
+    let graphs = mixed_workload(cfg.seed, 64.min(total), cfg.vocab, arity);
+    let concurrency = (2 * sopts.max_batch).min(total);
+    info!(
+        "serving {total} mixed tree/seq requests (max_batch {}, deadline {:?}, \
+         queue cap {}, {} in flight, {} worker threads)",
+        sopts.max_batch, sopts.max_delay, sopts.queue_cap, concurrency,
+        cfg.threads
+    );
+
+    fn demo<E: cavs::serve::ForwardExec>(
+        exec: E,
+        sopts: cavs::serve::ServeOpts,
+        graphs: &[cavs::graph::InputGraph],
+        total: usize,
+        concurrency: usize,
+    ) -> anyhow::Result<()> {
+        let mut server = cavs::serve::Server::new(exec, sopts.policy());
+        let report = cavs::serve::loadgen::run_closed_loop(
+            &mut server,
+            &sopts,
+            graphs,
+            total,
+            concurrency,
+        )?;
+        println!("\n{}", report.render());
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/BENCH_serve.json", report.json().render())?;
+        println!("(wrote results/BENCH_serve.json)");
+        Ok(())
+    }
+
+    if have_artifacts {
+        let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+        let model = make_model(&cfg);
+        info!(
+            "artifact set found: serving {} h={} on the PJRT engine",
+            cfg.cell.name(),
+            cfg.h
+        );
+        let exec = EngineExec::new(&rt, model, cfg.engine_opts(false));
+        demo(exec, sopts, &graphs, total, concurrency)
+    } else {
+        info!(
+            "no artifact set at {} — serving with the host reference cell \
+             (identical pipeline; build artifacts for real kernels)",
+            cfg.artifacts_dir
+        );
+        let exec =
+            HostExec::tree_fc(cfg.h.min(64), 2, cfg.vocab, cfg.threads, cfg.seed);
+        demo(exec, sopts, &graphs, total, concurrency)
+    }
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let cfg = args.config()?;
-    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
     let exp = args.get("exp").unwrap_or("all");
+    let tiny = args
+        .get("tiny")
+        .map(|s| s == "true" || s == "1")
+        .unwrap_or(false);
     let scale = Scale {
         samples: args
             .get("scale")
@@ -239,6 +327,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .unwrap_or(false),
         threads: cfg.threads,
     };
+    if exp == "serve" {
+        // host-cell serving sweep: needs no artifact set (and therefore
+        // no Runtime), so the CI smoke runs on clean checkouts
+        let t = experiments::serve(scale, tiny)?;
+        println!("\n{}", t.render());
+        println!("(results also written to results/*.txt and results/*.csv)");
+        return Ok(());
+    }
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
     let tables = match exp {
         "all" => experiments::run_all(&rt, scale)?,
         "serial" => vec![experiments::serial_vs_batched(&rt, scale)?],

@@ -106,8 +106,7 @@ pub fn schedule(
         Policy::Batched => {
             for level in frontier_levels(batch) {
                 for chunk in level.chunks(max_bucket) {
-                    let m = chunk.len();
-                    let bucket = pick_bucket(m, buckets, max_bucket);
+                    let bucket = pick_bucket(chunk.len(), buckets);
                     tasks.push(Task { verts: chunk.to_vec(), bucket });
                 }
             }
@@ -157,7 +156,12 @@ pub fn frontier_levels(batch: &GraphBatch) -> Vec<Vec<u32>> {
     levels
 }
 
-fn pick_bucket(m: usize, buckets: &[usize], max_bucket: usize) -> usize {
+/// Smallest compiled bucket covering `m` rows: power-of-two rounding
+/// capped at `buckets.last()`, then the first artifact bucket at least
+/// that large. Shared by the offline scheduler and the serve planner so
+/// both chunk identically.
+pub fn pick_bucket(m: usize, buckets: &[usize]) -> usize {
+    let max_bucket = *buckets.last().expect("bucket list validated");
     let want = bucket_for(m, max_bucket);
     *buckets
         .iter()

@@ -1,0 +1,235 @@
+//! Adaptive batch forming + recycled forward planning.
+//!
+//! [`BatchFormer`] implements the deadline/max-batch policy of
+//! just-in-time dynamic batching: the batch opens at the first request
+//! and closes when either `max_batch` requests merged or `max_delay`
+//! elapsed — small under light load (low latency), large under heavy
+//! load (high throughput).
+//!
+//! [`BatchPlan`] is the serving twin of `scheduler::schedule`
+//! (`Policy::Batched`): the same depth-level grouping and the same
+//! `pick_bucket` chunk rule, but driven by the *precomputed* per-request
+//! depths (carried by [`Request`](super::Request) since admission) via a
+//! counting sort, with every plan arena — level offsets, vertex order,
+//! task list — recycled across batches. Steady-state planning performs
+//! zero heap allocations, which `scheduler::schedule`'s BFS (fresh
+//! `Vec`s per call) cannot.
+
+use std::time::{Duration, Instant};
+
+use crate::graph::GraphBatch;
+use crate::scheduler::{pick_bucket, Task};
+
+use super::queue::{QueueWait, RequestQueue};
+use super::Request;
+
+/// How long the former sleeps per wait slice while the queue is idle
+/// (close is noticed at this granularity).
+const IDLE_WAIT_SLICE: Duration = Duration::from_millis(25);
+
+/// The dynamic-batching policy: close a batch at `max_batch` requests or
+/// `max_delay` after it opened, whichever comes first.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+/// Forms batches out of a [`RequestQueue`] into a reusable request
+/// arena.
+pub struct BatchFormer {
+    pub policy: BatchPolicy,
+    buf: Vec<Request>,
+}
+
+impl BatchFormer {
+    pub fn new(policy: BatchPolicy) -> BatchFormer {
+        BatchFormer { policy, buf: Vec::new() }
+    }
+
+    /// Form the next batch: blocks (in slices, so `close` is noticed)
+    /// until at least one request arrives, then keeps draining until
+    /// `max_batch` requests or `max_delay` since the batch opened.
+    /// Returns the batch size; `0` means the queue closed with nothing
+    /// left to serve.
+    pub fn form(&mut self, q: &RequestQueue) -> usize {
+        // normally drained by the server; after an executor error the
+        // stale batch is abandoned here (the serve loop is aborting)
+        self.buf.clear();
+        let max = self.policy.max_batch.max(1);
+        // wait for the batch-opening request
+        loop {
+            if q.drain_into(&mut self.buf, max) > 0 {
+                break;
+            }
+            if q.wait_nonempty(IDLE_WAIT_SLICE) == QueueWait::Closed
+                && q.drain_into(&mut self.buf, max) == 0
+            {
+                return 0;
+            }
+            if !self.buf.is_empty() {
+                break;
+            }
+        }
+        // fill until the deadline or the batch is full
+        let opened = Instant::now();
+        while self.buf.len() < max {
+            q.drain_into(&mut self.buf, max - self.buf.len());
+            if self.buf.len() >= max {
+                break;
+            }
+            let elapsed = opened.elapsed();
+            if elapsed >= self.policy.max_delay {
+                break;
+            }
+            if q.wait_nonempty(self.policy.max_delay - elapsed)
+                == QueueWait::Closed
+            {
+                break;
+            }
+        }
+        self.buf.len()
+    }
+
+    /// The formed batch, in arrival order.
+    pub fn requests(&self) -> &[Request] {
+        &self.buf
+    }
+
+    /// Hand the formed requests out (the arena keeps its capacity).
+    pub fn drain(&mut self) -> std::vec::Drain<'_, Request> {
+        self.buf.drain(..)
+    }
+}
+
+/// Recycled forward schedule over a merged batch: depth levels (from the
+/// precomputed per-vertex depths) chunked to the artifact bucket range,
+/// exactly like `scheduler::schedule(Policy::Batched)` — a property test
+/// pins forward results to the scheduler's plan bitwise.
+#[derive(Default)]
+pub struct BatchPlan {
+    /// Per-level end offsets into `order` (cursor during the counting
+    /// sort, end-of-level afterwards).
+    ends: Vec<usize>,
+    /// Vertices sorted by depth level, ascending vertex id within each
+    /// level (stable counting sort — matches `GraphBatch::levels`).
+    order: Vec<u32>,
+    tasks: Vec<Task>,
+    n_tasks: usize,
+}
+
+impl BatchPlan {
+    pub fn new() -> BatchPlan {
+        BatchPlan::default()
+    }
+
+    /// Build the task list for `batch`. All arenas are reused; steady
+    /// state allocates nothing once shapes stabilize.
+    pub fn plan(&mut self, batch: &GraphBatch, buckets: &[usize]) -> &[Task] {
+        let n = batch.n_vertices;
+        let nlv = batch.max_depth as usize + 1;
+        let max_bucket = *buckets.last().expect("bucket list validated");
+
+        // counting sort by depth: count, prefix, place
+        self.ends.clear();
+        self.ends.resize(nlv, 0);
+        for &d in &batch.depth {
+            self.ends[d as usize] += 1;
+        }
+        let mut acc = 0usize;
+        for e in self.ends.iter_mut() {
+            acc += *e;
+            *e = acc - *e; // start offset for now
+        }
+        self.order.clear();
+        self.order.resize(n, 0);
+        for v in 0..n {
+            let d = batch.depth[v] as usize;
+            self.order[self.ends[d]] = v as u32;
+            self.ends[d] += 1; // cursor -> end offset when done
+        }
+
+        // chunk each level to the bucket range
+        self.n_tasks = 0;
+        let mut start = 0usize;
+        for lv in 0..nlv {
+            let end = self.ends[lv];
+            for chunk in self.order[start..end].chunks(max_bucket) {
+                if self.n_tasks == self.tasks.len() {
+                    self.tasks.push(Task { verts: Vec::new(), bucket: 0 });
+                }
+                let t = &mut self.tasks[self.n_tasks];
+                t.verts.clear();
+                t.verts.extend_from_slice(chunk);
+                t.bucket = pick_bucket(chunk.len(), buckets);
+                self.n_tasks += 1;
+            }
+            start = end;
+        }
+        &self.tasks[..self.n_tasks]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synth, GraphBatch, InputGraph};
+    use crate::scheduler::{schedule, stats, Policy};
+    use crate::util::rng::Rng;
+
+    const BUCKETS: &[usize] = &[1, 2, 4, 8, 16];
+
+    #[test]
+    fn plan_matches_batched_schedule_on_trees() {
+        let mut rng = Rng::new(5);
+        let graphs: Vec<InputGraph> = (0..7)
+            .map(|_| synth::random_binary_tree(&mut rng, 20, 4, 5))
+            .collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let sched = schedule(&batch, Policy::Batched, BUCKETS);
+        let mut plan = BatchPlan::new();
+        let tasks = plan.plan(&batch, BUCKETS);
+        // identical chunk structure: same per-level vertex sets, same
+        // buckets, same padding totals
+        assert_eq!(tasks.len(), sched.len());
+        assert_eq!(stats(tasks).padded_rows, stats(&sched).padded_rows);
+        let mut a: Vec<u32> =
+            tasks.iter().flat_map(|t| t.verts.clone()).collect();
+        let mut b: Vec<u32> =
+            sched.iter().flat_map(|t| t.verts.clone()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "same vertex coverage");
+    }
+
+    #[test]
+    fn plan_is_recyclable_and_dependency_valid() {
+        let mut rng = Rng::new(6);
+        let mut plan = BatchPlan::new();
+        for trees in [6usize, 2, 6] {
+            let graphs: Vec<InputGraph> = (0..trees)
+                .map(|_| synth::random_binary_tree(&mut rng, 20, 3, 5))
+                .collect();
+            let refs: Vec<&InputGraph> = graphs.iter().collect();
+            let batch = GraphBatch::new(&refs, 2);
+            let tasks = plan.plan(&batch, BUCKETS);
+            let mut done = vec![false; batch.n_vertices];
+            for t in tasks {
+                assert!(t.bucket >= t.m() && BUCKETS.contains(&t.bucket));
+                for &v in &t.verts {
+                    for slot in 0..2 {
+                        if let Some(c) = batch.child(v, slot) {
+                            assert!(done[c as usize]);
+                        }
+                    }
+                }
+                for &v in &t.verts {
+                    assert!(!done[v as usize]);
+                    done[v as usize] = true;
+                }
+            }
+            assert!(done.iter().all(|&d| d), "every vertex scheduled");
+        }
+    }
+}

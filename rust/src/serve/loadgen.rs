@@ -1,0 +1,280 @@
+//! Load generators for the serving bench (`cavs bench --exp serve`) and
+//! the `cavs serve` demo.
+//!
+//! Two canonical load models:
+//!
+//! * **Closed loop** — `concurrency` clients, each submitting its next
+//!   request the moment its previous one completes (backpressure via
+//!   blocking enqueue). Measures capacity: throughput at a fixed number
+//!   in flight.
+//! * **Open loop** — requests arrive at an offered rate with
+//!   exponential inter-arrival gaps, independent of completions; a full
+//!   queue *rejects* (admission control) instead of blocking, so
+//!   overload shows up as shed load + queue-bound latency, not an
+//!   unbounded backlog. This is the sweep that exposes the
+//!   latency-vs-offered-load curve.
+//!
+//! The generator threads drive the [`RequestQueue`]; the server loop
+//! runs on the calling thread (the PJRT runtime is single-threaded by
+//! design, so [`EngineExec`](super::EngineExec) must stay where it was
+//! created). Every run verifies the exactly-once response invariant:
+//! each accepted request id is answered exactly once.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::graph::{synth, InputGraph};
+use crate::util::rng::Rng;
+
+use super::metrics::ServeReport;
+use super::queue::RequestQueue;
+use super::server::{ForwardExec, Server};
+use super::{Request, Response, ServeOpts};
+
+/// Synthetic mixed structure workload: alternating variable-length
+/// sequences (chain RNN requests) and random binary trees (parser
+/// requests) — the "concurrent requests whose graphs all differ" setting
+/// dynamic batching exists for. `arity` is the serving cell's child-slot
+/// count: below 2 the workload stays chains-only (a sequence cell cannot
+/// gather a tree's two children; merging would assert otherwise).
+pub fn mixed_workload(
+    seed: u64,
+    n: usize,
+    vocab: usize,
+    arity: usize,
+) -> Vec<InputGraph> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 2 == 0 || arity < 2 {
+                let len = 2 + rng.below(14);
+                let toks: Vec<i32> =
+                    (0..len).map(|_| rng.below(vocab) as i32).collect();
+                let labs = vec![-1i32; len];
+                InputGraph::chain(&toks, &labs)
+            } else {
+                let leaves = 2 + rng.below(7);
+                synth::random_binary_tree(&mut rng, vocab, leaves, 5)
+            }
+        })
+        .collect()
+}
+
+/// Closed loop: keep `concurrency` requests in flight until `total`
+/// responses arrived. Returns the server's metrics report (wall-clocked
+/// over the whole run).
+pub fn run_closed_loop<E: ForwardExec>(
+    server: &mut Server<E>,
+    opts: &ServeOpts,
+    graphs: &[InputGraph],
+    total: usize,
+    concurrency: usize,
+) -> Result<ServeReport> {
+    ensure!(
+        !graphs.is_empty() && total > 0 && concurrency > 0,
+        "closed loop needs graphs, a request count and a concurrency"
+    );
+    server.metrics.reset();
+    server.metrics.reserve_latencies(total);
+    let q = RequestQueue::bounded(opts.queue_cap);
+    let (tx, rx) = mpsc::channel::<Response>();
+    let t0 = Instant::now();
+    let (run_res, driver_res) = std::thread::scope(|s| {
+        let qref = &q;
+        let driver = s.spawn(move || -> Result<()> {
+            let mut got = vec![0u32; total];
+            let mut next_id = 0u64;
+            // prime the pipeline
+            while next_id < total as u64 && (next_id as usize) < concurrency {
+                let g = graphs[next_id as usize % graphs.len()].clone();
+                if qref.enqueue(Request::new(next_id, g)?).is_err() {
+                    bail!("queue closed before the run finished");
+                }
+                next_id += 1;
+            }
+            let mut received = 0usize;
+            while received < total {
+                let Ok(resp) = rx.recv() else {
+                    bail!("server stopped before all responses arrived");
+                };
+                got[resp.id() as usize] += 1;
+                received += 1;
+                if next_id < total as u64 {
+                    // recycle the returned request (graph + plan)
+                    let mut req = resp.request;
+                    req.id = next_id;
+                    if qref.enqueue(req).is_err() {
+                        bail!("queue closed before the run finished");
+                    }
+                    next_id += 1;
+                }
+            }
+            qref.close();
+            ensure!(
+                got.iter().all(|&c| c == 1),
+                "exactly-once response invariant violated"
+            );
+            Ok(())
+        });
+        let run = server.run(qref, move |resp| {
+            let _ = tx.send(resp);
+        });
+        // on a server error the driver would block forever: close the
+        // queue (idempotent); the moved-in sender is already dropped by
+        // run's closure, so the driver's recv fails fast
+        qref.close();
+        (run, driver.join().expect("driver panicked"))
+    });
+    run_res?;
+    driver_res?;
+    Ok(server.metrics.report(t0.elapsed().as_secs_f64()))
+}
+
+/// Open loop: offer `total` requests at `rate_rps` (exponential
+/// inter-arrival), shedding to admission control when the queue is full.
+pub fn run_open_loop<E: ForwardExec>(
+    server: &mut Server<E>,
+    opts: &ServeOpts,
+    graphs: &[InputGraph],
+    total: usize,
+    rate_rps: f64,
+    seed: u64,
+) -> Result<ServeReport> {
+    ensure!(
+        !graphs.is_empty() && total > 0 && rate_rps > 0.0,
+        "open loop needs graphs, a request count and a positive rate"
+    );
+    server.metrics.reset();
+    server.metrics.reserve_latencies(total);
+    let q = RequestQueue::bounded(opts.queue_cap);
+    let (tx, rx) = mpsc::channel::<Response>();
+    let accepted = AtomicUsize::new(0);
+    let offered_done = AtomicUsize::new(0); // 1 once the driver submitted all
+    let t0 = Instant::now();
+    let (run_res, driver_res, collector_res) = std::thread::scope(|s| {
+        let qref = &q;
+        let accepted_ref = &accepted;
+        let done_ref = &offered_done;
+        // pacing driver: submit or shed at the offered rate
+        let driver = s.spawn(move || -> Result<(u64, Vec<bool>)> {
+            let mut rng = Rng::new(seed ^ 0x5EED);
+            let mut admitted = vec![false; total];
+            let mut rejected = 0u64;
+            let start = Instant::now();
+            let mut next_at = Duration::ZERO;
+            for id in 0..total as u64 {
+                let now = start.elapsed();
+                if next_at > now {
+                    std::thread::sleep(next_at - now);
+                }
+                // exponential gap for the next arrival
+                let u = rng.f64().clamp(1e-12, 1.0 - 1e-12);
+                next_at += Duration::from_secs_f64(-(1.0 - u).ln() / rate_rps);
+                let g = graphs[id as usize % graphs.len()].clone();
+                match qref.try_enqueue(Request::new(id, g)?) {
+                    Ok(()) => {
+                        admitted[id as usize] = true;
+                        accepted_ref.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err((_, _)) => rejected += 1,
+                }
+            }
+            done_ref.store(1, Ordering::SeqCst);
+            Ok((rejected, admitted))
+        });
+        // collector: count responses, close the queue when every
+        // accepted request has been answered
+        let collector = s.spawn(move || -> Vec<u32> {
+            let mut got = vec![0u32; total];
+            let mut received = 0usize;
+            loop {
+                match rx.recv_timeout(Duration::from_millis(10)) {
+                    Ok(resp) => {
+                        got[resp.id() as usize] += 1;
+                        received += 1;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                if done_ref.load(Ordering::SeqCst) == 1
+                    && received >= accepted_ref.load(Ordering::SeqCst)
+                {
+                    break;
+                }
+            }
+            qref.close();
+            got
+        });
+        let run = server.run(qref, move |resp| {
+            let _ = tx.send(resp);
+        });
+        q.close(); // unblock collector/driver if the server errored
+        (
+            run,
+            driver.join().expect("driver panicked"),
+            collector.join().expect("collector panicked"),
+        )
+    });
+    run_res?;
+    let (rejected, admitted) = driver_res?;
+    for (id, (&c, &a)) in collector_res.iter().zip(&admitted).enumerate() {
+        ensure!(
+            c == u32::from(a),
+            "request {id}: admitted={a} but answered {c} times"
+        );
+    }
+    server.metrics.add_rejected(rejected);
+    Ok(server.metrics.report(t0.elapsed().as_secs_f64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::server::HostExec;
+    use crate::serve::BatchPolicy;
+
+    fn small_opts() -> ServeOpts {
+        ServeOpts {
+            max_batch: 4,
+            max_delay: Duration::from_micros(300),
+            queue_cap: 8,
+        }
+    }
+
+    fn server() -> Server<HostExec<crate::exec::parallel::HostTreeFc>> {
+        let opts = small_opts();
+        Server::new(
+            HostExec::tree_fc(5, 2, 20, 2, 11),
+            BatchPolicy {
+                max_batch: opts.max_batch,
+                max_delay: opts.max_delay,
+            },
+        )
+    }
+
+    #[test]
+    fn closed_loop_serves_all_requests() {
+        let graphs = mixed_workload(1, 10, 20, 2);
+        let mut sv = server();
+        let r =
+            run_closed_loop(&mut sv, &small_opts(), &graphs, 25, 3).unwrap();
+        assert_eq!(r.n_responses, 25);
+        assert_eq!(r.rejected, 0);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.latency.median_s > 0.0);
+    }
+
+    #[test]
+    fn open_loop_serves_or_sheds_every_request() {
+        let graphs = mixed_workload(2, 10, 20, 2);
+        let mut sv = server();
+        // modest rate: everything should be admitted and answered
+        let r = run_open_loop(&mut sv, &small_opts(), &graphs, 20, 2000.0, 3)
+            .unwrap();
+        assert_eq!(r.n_responses + r.rejected, 20);
+        assert!(r.n_responses > 0);
+    }
+}

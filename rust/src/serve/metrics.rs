@@ -1,0 +1,321 @@
+//! Serving metrics: latency percentiles (p50/p95/p99), a fixed-bucket
+//! latency histogram, batch-size distribution and queue-depth gauges.
+//!
+//! Observation is allocation-free once reserved (`reserve_latencies`):
+//! the latency reservoir, histogram and batch-size counters are all
+//! grow-only arenas, so the serve loop can record every response without
+//! perturbing its own tail latencies. Summarization (`report`) sorts a
+//! copy and is meant to run once, off the hot path.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::{fmt_duration, Histogram, Summary};
+
+/// Hard cap on the percentile reservoir: beyond this many responses the
+/// recorder switches to reservoir sampling (Algorithm R), so a
+/// long-running server stays at bounded memory and zero steady-state
+/// allocation while percentile estimates remain statistically valid.
+/// (The histogram always counts every response exactly.)
+const MAX_LAT_SAMPLES: usize = 65_536;
+
+/// Hot-path recorder owned by the server loop.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// Latency reservoir (seconds): every response until
+    /// [`MAX_LAT_SAMPLES`], a uniform sample of all responses after.
+    lat: Vec<f64>,
+    /// Total responses observed (reservoir denominator).
+    lat_seen: u64,
+    /// Deterministic index source for the sampling replacement.
+    rng: Rng,
+    hist: Histogram,
+    /// `batch_sizes[k]` = number of batches that served exactly `k`
+    /// requests (`0..=max_batch`).
+    batch_sizes: Vec<u64>,
+    n_batches: u64,
+    depth_sum: u64,
+    depth_max: usize,
+    depth_samples: u64,
+    rejected: u64,
+}
+
+impl ServeMetrics {
+    pub fn new(max_batch: usize) -> ServeMetrics {
+        ServeMetrics {
+            lat: Vec::new(),
+            lat_seen: 0,
+            rng: Rng::new(0x5A3E),
+            hist: Histogram::latency_default(),
+            batch_sizes: vec![0; max_batch.max(1) + 1],
+            n_batches: 0,
+            depth_sum: 0,
+            depth_max: 0,
+            depth_samples: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Pre-size the latency reservoir (the zero-alloc steady state needs
+    /// the expected response count reserved up front; capped at the
+    /// reservoir bound).
+    pub fn reserve_latencies(&mut self, n: usize) {
+        self.lat.reserve(n.min(MAX_LAT_SAMPLES));
+    }
+
+    pub fn observe_latency(&mut self, seconds: f64) {
+        self.lat_seen += 1;
+        if self.lat.len() < MAX_LAT_SAMPLES {
+            self.lat.push(seconds);
+        } else {
+            // Algorithm R: keep each of the `lat_seen` responses in the
+            // reservoir with equal probability, allocation-free.
+            let j = (self.rng.next_u64() % self.lat_seen) as usize;
+            if j < MAX_LAT_SAMPLES {
+                self.lat[j] = seconds;
+            }
+        }
+        self.hist.record(seconds);
+    }
+
+    pub fn observe_batch(&mut self, k: usize) {
+        self.n_batches += 1;
+        let i = k.min(self.batch_sizes.len() - 1);
+        self.batch_sizes[i] += 1;
+    }
+
+    pub fn observe_queue_depth(&mut self, depth: usize) {
+        self.depth_sum += depth as u64;
+        self.depth_max = self.depth_max.max(depth);
+        self.depth_samples += 1;
+    }
+
+    pub fn add_rejected(&mut self, n: u64) {
+        self.rejected += n;
+    }
+
+    pub fn n_responses(&self) -> usize {
+        self.lat_seen as usize
+    }
+
+    pub fn reset(&mut self) {
+        self.lat.clear();
+        self.lat_seen = 0;
+        self.hist.reset();
+        self.batch_sizes.fill(0);
+        self.n_batches = 0;
+        self.depth_sum = 0;
+        self.depth_max = 0;
+        self.depth_samples = 0;
+        self.rejected = 0;
+    }
+
+    /// Summarize (off the hot path): percentiles over the reservoir,
+    /// throughput over `wall_s`.
+    pub fn report(&self, wall_s: f64) -> ServeReport {
+        let lat = if self.lat.is_empty() {
+            Summary::default()
+        } else {
+            Summary::from_samples(&self.lat)
+        };
+        let served = self.lat_seen;
+        ServeReport {
+            n_responses: served,
+            n_batches: self.n_batches,
+            rejected: self.rejected,
+            wall_s,
+            throughput_rps: if wall_s > 0.0 {
+                served as f64 / wall_s
+            } else {
+                0.0
+            },
+            batch_mean: if self.n_batches > 0 {
+                served as f64 / self.n_batches as f64
+            } else {
+                0.0
+            },
+            latency: lat,
+            queue_depth_mean: if self.depth_samples > 0 {
+                self.depth_sum as f64 / self.depth_samples as f64
+            } else {
+                0.0
+            },
+            queue_depth_max: self.depth_max,
+            batch_sizes: self.batch_sizes.clone(),
+            hist: self.hist.clone(),
+        }
+    }
+}
+
+/// Summarized serving run — what `cavs serve` prints and
+/// `results/BENCH_serve.json` records.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub n_responses: u64,
+    pub n_batches: u64,
+    /// Requests refused by admission control (open-loop overload).
+    pub rejected: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// Mean requests per executed batch.
+    pub batch_mean: f64,
+    /// Latency percentiles over every response (p50/p95/p99 in
+    /// `median_s`/`p95_s`/`p99_s`).
+    pub latency: Summary,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    /// `batch_sizes[k]` = batches that served exactly `k` requests.
+    pub batch_sizes: Vec<u64>,
+    pub hist: Histogram,
+}
+
+impl ServeReport {
+    /// Compact `k:count` pairs of the non-empty batch sizes, e.g.
+    /// `"1:3 8:40"`.
+    pub fn batch_hist_compact(&self) -> String {
+        let mut out = String::new();
+        for (k, &c) in self.batch_sizes.iter().enumerate() {
+            if c > 0 {
+                if !out.is_empty() {
+                    out.push(' ');
+                }
+                out.push_str(&format!("{k}:{c}"));
+            }
+        }
+        out
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "served {} requests in {} batches over {:.2}s ({:.1} req/s, {} rejected)\n",
+            self.n_responses,
+            self.n_batches,
+            self.wall_s,
+            self.throughput_rps,
+            self.rejected
+        ));
+        s.push_str(&format!(
+            "latency  p50 {}  p95 {}  p99 {}  max {}\n",
+            fmt_duration(self.latency.median_s),
+            fmt_duration(self.latency.p95_s),
+            fmt_duration(self.latency.p99_s),
+            fmt_duration(self.latency.max_s),
+        ));
+        s.push_str(&format!(
+            "batch    mean {:.1} req  sizes {}\n",
+            self.batch_mean,
+            self.batch_hist_compact()
+        ));
+        s.push_str(&format!(
+            "queue    depth mean {:.1}  max {}\n",
+            self.queue_depth_mean, self.queue_depth_max
+        ));
+        s.push_str("latency histogram:\n");
+        for (label, c) in self.hist.nonzero() {
+            s.push_str(&format!("  {label:>10}  {c}\n"));
+        }
+        s
+    }
+
+    /// Machine-readable form (one point of `BENCH_serve.json`).
+    pub fn json(&self) -> Json {
+        Json::obj([
+            ("responses".to_string(), Json::num(self.n_responses as f64)),
+            ("batches".to_string(), Json::num(self.n_batches as f64)),
+            ("rejected".to_string(), Json::num(self.rejected as f64)),
+            ("wall_s".to_string(), Json::num(self.wall_s)),
+            ("rps".to_string(), Json::num(self.throughput_rps)),
+            ("batch_mean".to_string(), Json::num(self.batch_mean)),
+            ("p50_s".to_string(), Json::num(self.latency.median_s)),
+            ("p95_s".to_string(), Json::num(self.latency.p95_s)),
+            ("p99_s".to_string(), Json::num(self.latency.p99_s)),
+            ("max_s".to_string(), Json::num(self.latency.max_s)),
+            (
+                "queue_depth_mean".to_string(),
+                Json::num(self.queue_depth_mean),
+            ),
+            (
+                "queue_depth_max".to_string(),
+                Json::num(self.queue_depth_max as f64),
+            ),
+            (
+                "batch_sizes".to_string(),
+                Json::arr(
+                    self.batch_sizes.iter().map(|&c| Json::num(c as f64)),
+                ),
+            ),
+            (
+                "hist_bounds_s".to_string(),
+                Json::arr(self.hist.bounds().iter().map(|&b| Json::num(b))),
+            ),
+            (
+                "hist_counts".to_string(),
+                Json::arr(
+                    self.hist.counts().iter().map(|&c| Json::num(c as f64)),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = ServeMetrics::new(4);
+        m.reserve_latencies(8);
+        for (k, lat) in [(1usize, 0.001), (4, 0.002), (4, 0.004)] {
+            m.observe_batch(k);
+            m.observe_latency(lat);
+        }
+        m.observe_queue_depth(3);
+        m.observe_queue_depth(1);
+        m.add_rejected(2);
+        let r = m.report(2.0);
+        assert_eq!(r.n_responses, 3);
+        assert_eq!(r.n_batches, 3);
+        assert_eq!(r.rejected, 2);
+        assert!((r.throughput_rps - 1.5).abs() < 1e-9);
+        assert!((r.batch_mean - 1.0).abs() < 1e-9);
+        assert!((r.latency.median_s - 0.002).abs() < 1e-12);
+        assert!((r.latency.p99_s - 0.004).abs() < 1e-12);
+        assert_eq!(r.queue_depth_max, 3);
+        assert_eq!(r.batch_sizes, vec![0, 1, 0, 0, 2]);
+        assert_eq!(r.batch_hist_compact(), "1:1 4:2");
+        assert!(r.render().contains("p99"));
+        let j = r.json();
+        assert_eq!(j.get("responses").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            j.get("batch_sizes").unwrap().as_usize_vec(),
+            vec![0, 1, 0, 0, 2]
+        );
+        // the machine-readable form carries the full histogram
+        let bounds = j.get("hist_bounds_s").unwrap().as_arr().unwrap().len();
+        let counts = j.get("hist_counts").unwrap().as_arr().unwrap().len();
+        assert_eq!(counts, bounds + 1, "counts include the overflow bucket");
+        assert!(j.get("queue_depth_mean").unwrap().as_f64().is_some());
+        m.reset();
+        assert_eq!(m.n_responses(), 0);
+        assert_eq!(m.report(1.0).n_batches, 0);
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded() {
+        let mut m = ServeMetrics::new(2);
+        let n = super::MAX_LAT_SAMPLES + 5000;
+        for i in 0..n {
+            m.observe_latency(i as f64 * 1e-6);
+        }
+        // every response counted, reservoir capped
+        assert_eq!(m.n_responses(), n);
+        assert_eq!(m.lat.len(), super::MAX_LAT_SAMPLES);
+        assert_eq!(m.hist.total(), n as u64);
+        let r = m.report(1.0);
+        assert_eq!(r.n_responses, n as u64);
+        // percentiles still come from a uniform sample of the stream
+        assert!(r.latency.median_s > 0.0);
+    }
+}

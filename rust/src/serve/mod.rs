@@ -1,0 +1,220 @@
+//! Online inference serving: continuous dynamic batching over the
+//! frontier engine.
+//!
+//! The offline drivers (`train`, `bench`) own their minibatches; a server
+//! does not — concurrent requests arrive one input graph at a time, each
+//! with its own structure, and the system must form batches *on the fly*.
+//! Cavs' (F, G) split makes that cheap: a static vertex function `F` is
+//! scheduled over whatever merged graph `G` the moment provides, so
+//! batching across in-flight requests is the same frontier merge the
+//! training path already performs (cf. just-in-time dynamic batching and
+//! TF-Fold's depth batching).
+//!
+//! Pipeline (DESIGN.md §7):
+//!
+//! ```text
+//! clients -> RequestQueue -> BatchFormer -> GraphBatch::merge_indexed
+//!   (MPSC, admission        (deadline /      -> BatchPlan (recycled
+//!    control + back-         max-batch          depth levels + bucket
+//!    pressure)               policy)            chunking)
+//!                                        -> ForwardExec (forward-only
+//!                                           engine / host frontier on
+//!                                           the persistent worker pool)
+//!                                        -> per-request Response
+//!                                           + ServeMetrics (p50/p95/p99,
+//!                                             batch-size histogram,
+//!                                             queue depth)
+//! ```
+//!
+//! Every stage recycles its arenas: after warm-up the serve loop performs
+//! **zero** heap allocations in steady state
+//! (`rust/tests/serve_zero_alloc.rs` proves it with the counting
+//! allocator), which is what lets a single server thread sustain
+//! high request rates without allocator jitter in the tail latencies.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+
+pub use batcher::{BatchFormer, BatchPlan, BatchPolicy};
+pub use metrics::{ServeMetrics, ServeReport};
+pub use queue::{AdmitError, QueueWait, RequestQueue};
+pub use server::{EngineExec, ForwardExec, HostExec, Server};
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::graph::batch::MergeItem;
+use crate::graph::InputGraph;
+
+/// Serving knobs, surfaced as config keys (`serve_max_batch`,
+/// `serve_deadline_ms`, `serve_queue_cap`) and `cavs serve` CLI flags.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// Most requests merged into one batch.
+    pub max_batch: usize,
+    /// How long a non-full batch may wait for more requests after it
+    /// opens (the dynamic-batching deadline).
+    pub max_delay: Duration,
+    /// Request-queue capacity: beyond it, `try_enqueue` rejects
+    /// (admission control) and `enqueue` blocks (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 256,
+        }
+    }
+}
+
+impl ServeOpts {
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch,
+            max_delay: self.max_delay,
+        }
+    }
+}
+
+/// One in-flight inference request. Admission (`Request::new`) validates
+/// the graph and precomputes its schedule inputs (depths + root) so the
+/// hot serve loop never re-walks a graph or allocates per batch.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub graph: InputGraph,
+    depths: Vec<u32>,
+    root: u32,
+    /// Largest child count of any vertex (precomputed so the server can
+    /// check arity compatibility per request in O(1)).
+    max_children: usize,
+    /// Stamped by the queue at submission, so measured latency includes
+    /// any backpressure wait.
+    pub enqueued_at: Instant,
+}
+
+impl Request {
+    /// Validate + precompute: errors on malformed graphs (cycles,
+    /// out-of-range children) — the serve loop only ever sees admissible
+    /// requests.
+    pub fn new(id: u64, graph: InputGraph) -> Result<Request> {
+        if graph.n() == 0 {
+            anyhow::bail!("request graph has no vertices");
+        }
+        for (v, cs) in graph.children.iter().enumerate() {
+            for &c in cs {
+                if c as usize >= graph.n() || c as usize == v {
+                    anyhow::bail!(
+                        "request graph vertex {v} has invalid child {c}"
+                    );
+                }
+            }
+        }
+        let depths = graph.depths()?;
+        let root = graph.roots().first().copied().unwrap_or(0);
+        let max_children =
+            graph.children.iter().map(Vec::len).max().unwrap_or(0);
+        Ok(Request {
+            id,
+            graph,
+            depths,
+            root,
+            max_children,
+            enqueued_at: Instant::now(),
+        })
+    }
+
+    /// Largest child count of any vertex in this request's graph.
+    pub fn max_children(&self) -> usize {
+        self.max_children
+    }
+
+    pub fn depths(&self) -> &[u32] {
+        &self.depths
+    }
+
+    pub fn root(&self) -> u32 {
+        self.root
+    }
+
+    /// The precomputed merge view of this request.
+    pub fn merge_item(&self) -> MergeItem<'_> {
+        MergeItem { graph: &self.graph, depths: &self.depths, root: self.root }
+    }
+}
+
+/// Per-request model output: the root state's summary score (the h-part
+/// sum for engine cells, the full state sum for host reference cells) —
+/// the serving analogue of the Tree-FC `SumRootState` objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub score: f32,
+}
+
+/// One served request. Carries the original [`Request`] back to the
+/// caller so closed-loop clients can recycle its graph and precomputed
+/// schedule without reallocating.
+#[derive(Debug)]
+pub struct Response {
+    pub prediction: Prediction,
+    /// Submission-to-completion latency in seconds (queue wait + batch
+    /// forming + forward execution).
+    pub latency_s: f64,
+    /// How many requests rode in the same batch.
+    pub batch_k: usize,
+    pub request: Request,
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        self.request.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_rejects_malformed_graphs() {
+        // empty graph: nothing to serve, and a root would alias a
+        // neighboring request's vertex after merging
+        let empty = InputGraph {
+            children: vec![],
+            tokens: vec![],
+            labels: vec![],
+            root_label: -1,
+        };
+        assert!(Request::new(0, empty).is_err());
+        // out-of-range child
+        let bad = InputGraph {
+            children: vec![vec![7]],
+            tokens: vec![0],
+            labels: vec![-1],
+            root_label: -1,
+        };
+        assert!(Request::new(0, bad).is_err());
+        // self-loop
+        let cyclic = InputGraph {
+            children: vec![vec![0]],
+            tokens: vec![0],
+            labels: vec![-1],
+            root_label: -1,
+        };
+        assert!(Request::new(0, cyclic).is_err());
+        // well-formed chain admits with precomputed plan
+        let ok =
+            Request::new(3, InputGraph::chain(&[1, 2, 3], &[-1, -1, -1]))
+                .unwrap();
+        assert_eq!(ok.id, 3);
+        assert_eq!(ok.depths(), &[0, 1, 2]);
+        assert_eq!(ok.root(), 2);
+    }
+}

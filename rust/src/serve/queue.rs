@@ -1,0 +1,245 @@
+//! Bounded MPSC request queue with admission control and backpressure.
+//!
+//! Any number of producer threads submit [`Request`]s; the single server
+//! loop drains them in arrival order. Two producer paths:
+//!
+//! * [`RequestQueue::try_enqueue`] — **admission control**: a full queue
+//!   rejects immediately with [`AdmitError::Full`], handing the request
+//!   back so nothing is lost. Open-loop clients use this to shed load
+//!   instead of building an unbounded backlog.
+//! * [`RequestQueue::enqueue`] — **backpressure**: blocks the producer
+//!   until a slot frees up (closed-loop clients).
+//!
+//! The queue stamps `Request::enqueued_at` at submission, so measured
+//! latency includes backpressure wait. [`RequestQueue::close`] wakes all
+//! waiters: producers get their request back with [`AdmitError::Closed`];
+//! the consumer drains the remaining backlog and stops. The backing
+//! `VecDeque` is allocated once at capacity, so steady-state enqueue and
+//! drain never allocate.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// Why an enqueue was refused. The request itself is returned alongside.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Queue at capacity (admission control rejected the request).
+    Full,
+    /// Queue closed — the server is shutting down.
+    Closed,
+}
+
+/// Consumer-side wait outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueWait {
+    /// At least one request is queued.
+    Ready,
+    /// Timed out (or woke spuriously) with the queue still empty.
+    TimedOut,
+    /// Closed and drained: no request will ever arrive again.
+    Closed,
+}
+
+struct Inner {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// The bounded MPSC queue between clients and the server loop.
+pub struct RequestQueue {
+    cap: usize,
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl RequestQueue {
+    pub fn bounded(cap: usize) -> RequestQueue {
+        let cap = cap.max(1);
+        RequestQueue {
+            cap,
+            inner: Mutex::new(Inner {
+                q: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current backlog (the queue-depth gauge the metrics sample).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Admission control: accept iff a slot is free, else hand the
+    /// request straight back.
+    pub fn try_enqueue(
+        &self,
+        mut r: Request,
+    ) -> Result<(), (Request, AdmitError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((r, AdmitError::Closed));
+        }
+        if g.q.len() >= self.cap {
+            return Err((r, AdmitError::Full));
+        }
+        r.enqueued_at = Instant::now();
+        g.q.push_back(r);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Backpressure: block until a slot frees up (or the queue closes,
+    /// which returns the request with [`AdmitError::Closed`]).
+    pub fn enqueue(&self, mut r: Request) -> Result<(), (Request, AdmitError)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err((r, AdmitError::Closed));
+            }
+            if g.q.len() < self.cap {
+                break;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+        r.enqueued_at = Instant::now();
+        g.q.push_back(r);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: producers unblock with `Closed`, the consumer
+    /// drains whatever is left and stops. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Pop up to `max` requests (arrival order) into `dst`; non-blocking.
+    pub fn drain_into(&self, dst: &mut Vec<Request>, max: usize) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let n = max.min(g.q.len());
+        for _ in 0..n {
+            dst.push(g.q.pop_front().unwrap());
+        }
+        drop(g);
+        if n > 0 {
+            self.not_full.notify_all();
+        }
+        n
+    }
+
+    /// Block until the queue is non-empty, `timeout` expires, or the
+    /// queue is closed with an empty backlog.
+    pub fn wait_nonempty(&self, timeout: Duration) -> QueueWait {
+        let g = self.inner.lock().unwrap();
+        if !g.q.is_empty() {
+            return QueueWait::Ready;
+        }
+        if g.closed {
+            return QueueWait::Closed;
+        }
+        let (g, _res) = self.not_empty.wait_timeout(g, timeout).unwrap();
+        if !g.q.is_empty() {
+            QueueWait::Ready
+        } else if g.closed {
+            QueueWait::Closed
+        } else {
+            QueueWait::TimedOut
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::InputGraph;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, InputGraph::chain(&[1, 2], &[-1, -1])).unwrap()
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let q = RequestQueue::bounded(2);
+        q.try_enqueue(req(0)).unwrap();
+        q.try_enqueue(req(1)).unwrap();
+        let (r, e) = q.try_enqueue(req(2)).unwrap_err();
+        assert_eq!(e, AdmitError::Full);
+        assert_eq!(r.id, 2, "rejected request is handed back");
+        assert_eq!(q.depth(), 2);
+        // draining frees slots
+        let mut out = Vec::new();
+        assert_eq!(q.drain_into(&mut out, 1), 1);
+        assert_eq!(out[0].id, 0, "arrival order preserved");
+        q.try_enqueue(r).unwrap();
+    }
+
+    #[test]
+    fn close_rejects_producers_but_drains_backlog() {
+        let q = RequestQueue::bounded(4);
+        q.try_enqueue(req(0)).unwrap();
+        q.close();
+        let (_, e) = q.try_enqueue(req(1)).unwrap_err();
+        assert_eq!(e, AdmitError::Closed);
+        let (_, e) = q.enqueue(req(2)).unwrap_err();
+        assert_eq!(e, AdmitError::Closed);
+        let mut out = Vec::new();
+        assert_eq!(q.drain_into(&mut out, 8), 1, "backlog still drains");
+        assert_eq!(q.wait_nonempty(Duration::from_millis(1)), QueueWait::Closed);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_slot_frees() {
+        let q = RequestQueue::bounded(1);
+        q.try_enqueue(req(0)).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // blocks until the main thread drains
+                q.enqueue(req(1)).unwrap();
+            });
+            let mut out = Vec::new();
+            // wait for the producer to be queued behind the full queue,
+            // then drain: the blocked enqueue must complete
+            while q.depth() == 0 {
+                std::thread::yield_now();
+            }
+            out.clear();
+            q.drain_into(&mut out, 1);
+            while q.depth() == 0 {
+                std::thread::yield_now();
+            }
+            q.drain_into(&mut out, 1);
+            assert_eq!(out.last().unwrap().id, 1);
+        });
+    }
+
+    #[test]
+    fn wait_nonempty_sees_arrivals_and_timeouts() {
+        let q = RequestQueue::bounded(2);
+        assert_eq!(
+            q.wait_nonempty(Duration::from_millis(1)),
+            QueueWait::TimedOut
+        );
+        q.try_enqueue(req(0)).unwrap();
+        assert_eq!(q.wait_nonempty(Duration::from_millis(1)), QueueWait::Ready);
+    }
+}

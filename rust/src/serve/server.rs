@@ -1,0 +1,339 @@
+//! The server loop: drain → merge → plan → forward-only execute →
+//! respond, every stage on recycled arenas.
+//!
+//! Execution is pluggable through [`ForwardExec`]:
+//!
+//! * [`EngineExec`] drives the PJRT [`Engine`] forward-only
+//!   (`Engine::infer_batch`) — the production path when an artifact set
+//!   is present. The engine keeps its persistent worker pool and
+//!   recycled workspace across batches.
+//! * [`HostExec`] drives the host reference frontier
+//!   ([`HostFrontier`]) with a [`HostCell`] on its own persistent
+//!   [`WorkerPool`] — the artifact-free path the CI smoke and the
+//!   zero-alloc proof run on.
+//!
+//! Both paths return one [`Prediction`] per request (root order), and
+//! both are allocation-free in steady state.
+
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+use crate::exec::parallel::{HostCell, HostFrontier, HostTreeFc};
+use crate::exec::pool::{Sharder, WorkerPool};
+use crate::exec::{Engine, EngineOpts};
+use crate::graph::GraphBatch;
+use crate::models::Model;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use super::batcher::{BatchFormer, BatchPlan, BatchPolicy};
+use super::metrics::ServeMetrics;
+use super::queue::RequestQueue;
+use super::{Prediction, Response};
+
+/// A forward-only executor over merged batches.
+pub trait ForwardExec {
+    /// Child slots the cell gathers (the merge arity).
+    fn arity(&self) -> usize;
+    /// Evaluate `batch` forward-only; write one [`Prediction`] per graph
+    /// into `preds` (cleared first, `batch.roots` order).
+    fn infer(
+        &mut self,
+        batch: &GraphBatch,
+        preds: &mut Vec<Prediction>,
+    ) -> Result<()>;
+}
+
+/// Host-cell executor: [`HostFrontier`] + [`BatchPlan`] on a persistent
+/// [`WorkerPool`]. Runs anywhere (no artifact set), bitwise identical
+/// across thread counts like every sharded primitive.
+pub struct HostExec<C: HostCell> {
+    cell: C,
+    xtable: Vec<f32>,
+    buckets: Vec<usize>,
+    frontier: HostFrontier,
+    plan: BatchPlan,
+    pool: WorkerPool,
+    threads: usize,
+}
+
+impl HostExec<HostTreeFc> {
+    /// Tree-FC reference cell with a random `[vocab, h]` input table —
+    /// the serving analogue of the Tree-FC bench workload.
+    pub fn tree_fc(
+        h: usize,
+        arity: usize,
+        vocab: usize,
+        threads: usize,
+        seed: u64,
+    ) -> HostExec<HostTreeFc> {
+        let mut rng = Rng::new(seed);
+        let cell = HostTreeFc::random(h, arity, &mut rng);
+        let xtable: Vec<f32> =
+            (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+        HostExec::with_cell(cell, xtable, threads)
+    }
+}
+
+impl<C: HostCell> HostExec<C> {
+    /// Wrap an arbitrary host cell; `xtable` is the dense
+    /// `[vocab, x_cols]` pull source.
+    pub fn with_cell(cell: C, xtable: Vec<f32>, threads: usize) -> HostExec<C> {
+        let threads = threads.max(1);
+        HostExec {
+            cell,
+            xtable,
+            // power-of-two buckets up to 256, like the AOT artifact set
+            buckets: (0..=8).map(|i| 1usize << i).collect(),
+            frontier: HostFrontier::new(),
+            plan: BatchPlan::new(),
+            pool: WorkerPool::new(threads),
+            threads,
+        }
+    }
+}
+
+impl<C: HostCell> ForwardExec for HostExec<C> {
+    fn arity(&self) -> usize {
+        self.cell.arity()
+    }
+
+    fn infer(
+        &mut self,
+        batch: &GraphBatch,
+        preds: &mut Vec<Prediction>,
+    ) -> Result<()> {
+        let tasks = self.plan.plan(batch, &self.buckets);
+        let ex = if self.threads > 1 {
+            Sharder::Pool(&self.pool)
+        } else {
+            Sharder::Sequential
+        };
+        self.frontier
+            .run(batch, tasks, &self.cell, &self.xtable, ex, false);
+        preds.clear();
+        for &r in &batch.roots {
+            let row = self.frontier.states().row(r as usize);
+            preds.push(Prediction { score: row.iter().sum() });
+        }
+        Ok(())
+    }
+}
+
+/// PJRT-engine executor: forward-only `Engine::infer_batch` with the
+/// engine's persistent pool and recycled workspace.
+pub struct EngineExec<'rt> {
+    pub engine: Engine<'rt>,
+    pub model: Model,
+    scores: Vec<f32>,
+}
+
+impl<'rt> EngineExec<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        model: Model,
+        mut opts: EngineOpts,
+    ) -> EngineExec<'rt> {
+        opts.training = false;
+        EngineExec { engine: Engine::new(rt, opts), model, scores: Vec::new() }
+    }
+}
+
+impl ForwardExec for EngineExec<'_> {
+    fn arity(&self) -> usize {
+        self.model.cell.arity()
+    }
+
+    fn infer(
+        &mut self,
+        batch: &GraphBatch,
+        preds: &mut Vec<Prediction>,
+    ) -> Result<()> {
+        self.engine.infer_batch(&mut self.model, batch, &mut self.scores)?;
+        preds.clear();
+        preds.extend(self.scores.iter().map(|&score| Prediction { score }));
+        Ok(())
+    }
+}
+
+/// The serving loop: one instance per server thread, all state recycled.
+pub struct Server<E> {
+    pub exec: E,
+    former: BatchFormer,
+    merged: GraphBatch,
+    preds: Vec<Prediction>,
+    pub metrics: ServeMetrics,
+}
+
+impl<E: ForwardExec> Server<E> {
+    pub fn new(exec: E, policy: BatchPolicy) -> Server<E> {
+        let arity = exec.arity();
+        Server {
+            exec,
+            former: BatchFormer::new(policy),
+            merged: GraphBatch::empty(arity),
+            preds: Vec::new(),
+            metrics: ServeMetrics::new(policy.max_batch),
+        }
+    }
+
+    /// Serve one batch: form (blocking per the deadline policy), merge,
+    /// execute forward-only, respond via `on_response`. Returns `false`
+    /// once the queue is closed and fully drained.
+    pub fn step(
+        &mut self,
+        q: &RequestQueue,
+        on_response: &mut dyn FnMut(Response),
+    ) -> Result<bool> {
+        let k = self.former.form(q);
+        if k == 0 {
+            return Ok(false);
+        }
+        let arity = self.exec.arity();
+        {
+            let reqs = self.former.requests();
+            // admission validated graph shape, but only the server knows
+            // the cell's arity — refuse (with a clean error, not a merge
+            // panic) any request this executor cannot gather
+            for r in reqs {
+                ensure!(
+                    r.max_children() <= arity,
+                    "request {} needs {} child slots but the serving cell \
+                     has arity {arity}",
+                    r.id,
+                    r.max_children()
+                );
+            }
+            self.merged.merge_indexed(k, arity, |i| reqs[i].merge_item());
+        }
+        self.exec.infer(&self.merged, &mut self.preds)?;
+        ensure!(
+            self.preds.len() == k,
+            "executor returned {} predictions for {k} requests",
+            self.preds.len()
+        );
+        let done = Instant::now();
+        self.metrics.observe_batch(k);
+        self.metrics.observe_queue_depth(q.depth());
+        for (i, request) in self.former.drain().enumerate() {
+            let latency_s =
+                done.duration_since(request.enqueued_at).as_secs_f64();
+            self.metrics.observe_latency(latency_s);
+            on_response(Response {
+                prediction: self.preds[i],
+                latency_s,
+                batch_k: k,
+                request,
+            });
+        }
+        Ok(true)
+    }
+
+    /// Serve until the queue closes and drains.
+    pub fn run(
+        &mut self,
+        q: &RequestQueue,
+        mut on_response: impl FnMut(Response),
+    ) -> Result<()> {
+        while self.step(q, &mut on_response)? {}
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::serve::Request;
+    use std::time::Duration;
+
+    fn policy(max_batch: usize) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::ZERO }
+    }
+
+    fn mixed_requests(n: usize) -> Vec<Request> {
+        crate::serve::loadgen::mixed_workload(3, n, 20, 2)
+            .into_iter()
+            .enumerate()
+            .map(|(id, g)| Request::new(id as u64, g).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn server_answers_every_request_once_with_finite_scores() {
+        let exec = HostExec::tree_fc(6, 2, 20, 2, 7);
+        let mut server = Server::new(exec, policy(4));
+        let q = RequestQueue::bounded(64);
+        let n = 13;
+        for r in mixed_requests(n) {
+            q.try_enqueue(r).unwrap();
+        }
+        q.close();
+        let mut got = vec![0u32; n];
+        server
+            .run(&q, |resp| {
+                assert!(resp.prediction.score.is_finite());
+                assert!(resp.batch_k >= 1 && resp.batch_k <= 4);
+                assert!(resp.latency_s >= 0.0);
+                got[resp.id() as usize] += 1;
+            })
+            .unwrap();
+        assert!(got.iter().all(|&c| c == 1), "exactly one response each");
+        assert_eq!(server.metrics.n_responses(), n);
+        let report = server.metrics.report(1.0);
+        assert_eq!(report.n_batches, 4, "13 requests in max-4 batches");
+    }
+
+    #[test]
+    fn over_arity_request_is_a_clean_error_not_a_panic() {
+        // arity-1 cell serving a binary-tree request: must error, not
+        // corrupt the merge or abort the process
+        let mut rng = Rng::new(5);
+        let exec = HostExec::tree_fc(4, 1, 20, 1, 7);
+        let mut server = Server::new(exec, policy(4));
+        let q = RequestQueue::bounded(4);
+        let tree = synth::random_binary_tree(&mut rng, 20, 3, 5);
+        q.try_enqueue(Request::new(0, tree).unwrap()).unwrap();
+        q.close();
+        let r = server.step(&q, &mut |_resp| {});
+        assert!(r.is_err(), "arity mismatch must surface as an error");
+    }
+
+    #[test]
+    fn server_batches_match_single_request_results() {
+        // a request served in a batch must score identically to the same
+        // graph served alone (the batching is invisible to the client)
+        let reqs = mixed_requests(9);
+        let solo: Vec<f32> = reqs
+            .iter()
+            .map(|r| {
+                let mut server =
+                    Server::new(HostExec::tree_fc(6, 2, 20, 1, 7), policy(1));
+                let q = RequestQueue::bounded(4);
+                q.try_enqueue(Request::new(0, r.graph.clone()).unwrap())
+                    .unwrap();
+                q.close();
+                let mut score = f32::NAN;
+                server
+                    .run(&q, |resp| score = resp.prediction.score)
+                    .unwrap();
+                score
+            })
+            .collect();
+        let mut server =
+            Server::new(HostExec::tree_fc(6, 2, 20, 2, 7), policy(4));
+        let q = RequestQueue::bounded(64);
+        let n = reqs.len();
+        for r in reqs {
+            q.try_enqueue(r).unwrap();
+        }
+        q.close();
+        let mut batched = vec![f32::NAN; n];
+        server
+            .run(&q, |resp| {
+                batched[resp.id() as usize] = resp.prediction.score;
+            })
+            .unwrap();
+        assert_eq!(solo, batched, "batching must not change predictions");
+    }
+}

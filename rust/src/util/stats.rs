@@ -12,6 +12,8 @@ pub struct Summary {
     pub median_s: f64,
     /// p95 of the samples (nearest-rank; equals the max for tiny n).
     pub p95_s: f64,
+    /// p99 of the samples (nearest-rank; the serve tail-latency metric).
+    pub p99_s: f64,
     pub stddev_s: f64,
     pub min_s: f64,
     pub max_s: f64,
@@ -49,6 +51,7 @@ impl Summary {
             mean_s: mean,
             median_s: median,
             p95_s: percentile(&sorted, 95.0),
+            p99_s: percentile(&sorted, 99.0),
             stddev_s: var.sqrt(),
             min_s: sorted[0],
             max_s: sorted[n - 1],
@@ -79,6 +82,98 @@ pub fn fmt_duration(s: f64) -> String {
         format!("{:.2}ms", s * 1e3)
     } else {
         format!("{:.2}s", s)
+    }
+}
+
+/// Fixed-bucket histogram for latency-style samples (seconds).
+///
+/// Bucket `i` counts samples with `x <= bounds[i]` (first matching bound,
+/// ascending); the final slot counts overflow. Recording is O(log buckets)
+/// with no allocation, so the serve loop can feed it per response.
+/// NaN-safe like the percentiles above: NaN samples land in the overflow
+/// slot instead of panicking the recorder.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` slots; the last one is the overflow bucket.
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    /// `bounds` are ascending, finite upper edges (seconds).
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending: {bounds:?}"
+        );
+        assert!(
+            bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite: {bounds:?}"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+        }
+    }
+
+    /// Default latency buckets: a 1-2-5 series from 10µs to 10s (19
+    /// edges + overflow) — wide enough for host-cell microsecond batches
+    /// and deadline-bound tail latencies alike.
+    pub fn latency_default() -> Histogram {
+        let mut bounds = Vec::with_capacity(19);
+        let mut decade = 1e-5;
+        while decade < 10.1 {
+            for m in [1.0, 2.0, 5.0] {
+                bounds.push(decade * m);
+            }
+            decade *= 10.0;
+        }
+        bounds.truncate(19); // ...5, 10 s; drop the trailing 20/50 s edges
+        Histogram::new(&bounds)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let i = if x.is_nan() {
+            self.bounds.len() // overflow slot, not a panic
+        } else {
+            self.bounds.partition_point(|&b| b < x)
+        };
+        self.counts[i] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// One count per bucket; the last entry is the overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+    }
+
+    /// `(upper-edge label, count)` rows for the non-empty buckets —
+    /// the human-readable rendering the serve report prints.
+    pub fn nonzero(&self) -> Vec<(String, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let label = match self.bounds.get(i) {
+                    Some(&b) => format!("<={}", fmt_duration(b)),
+                    None => ">overflow".to_string(),
+                };
+                (label, c)
+            })
+            .collect()
     }
 }
 
@@ -182,6 +277,61 @@ mod tests {
         let s = Summary::from_samples(&[3.0, 1.0]);
         assert!((s.p95_s - 3.0).abs() < 1e-12);
         assert!((s.median_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p99_is_nearest_rank() {
+        let samples: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&samples);
+        assert!((s.p99_s - 198.0).abs() < 1e-12);
+        // tiny n: p99 collapses to the max, like p95
+        let s = Summary::from_samples(&[3.0, 1.0]);
+        assert!((s.p99_s - 3.0).abs() < 1e-12);
+        // NaN-safe: NaN sorts last, percentiles of the finite prefix hold
+        let s = Summary::from_samples(&[2.0, f64::NAN, 1.0]);
+        assert!((s.median_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_samples_at_first_covering_edge() {
+        let mut h = Histogram::new(&[0.001, 0.01, 0.1]);
+        h.record(0.0005); // <= 1ms
+        h.record(0.001); // edge value lands in its own bucket
+        h.record(0.05); // <= 100ms
+        h.record(2.0); // overflow
+        assert_eq!(h.counts(), &[2, 0, 1, 1]);
+        assert_eq!(h.total(), 4);
+        h.reset();
+        assert_eq!(h.total(), 0);
+    }
+
+    #[test]
+    fn histogram_is_nan_safe() {
+        let mut h = Histogram::new(&[0.001, 0.01]);
+        h.record(f64::NAN);
+        h.record(-1.0); // nonsense sample still lands somewhere (bucket 0)
+        assert_eq!(h.counts(), &[1, 0, 1]);
+    }
+
+    #[test]
+    fn histogram_default_covers_latency_range() {
+        let mut h = Histogram::latency_default();
+        assert_eq!(h.bounds().len(), 19);
+        assert!((h.bounds()[0] - 1e-5).abs() < 1e-18);
+        assert!((h.bounds().last().unwrap() - 10.0).abs() < 1e-9);
+        h.record(3e-5);
+        h.record(0.5);
+        h.record(100.0); // overflow
+        assert_eq!(h.total(), 3);
+        let nz = h.nonzero();
+        assert_eq!(nz.len(), 3);
+        assert!(nz.iter().any(|(l, _)| l == ">overflow"));
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn histogram_rejects_unsorted_bounds() {
+        Histogram::new(&[0.01, 0.001]);
     }
 
     #[test]

@@ -157,6 +157,55 @@ fn engine_threads_bitwise_identical() {
     }
 }
 
+/// Forward-only inference (`Engine::infer_batch`, the serving entry
+/// point) computes the same forward pass as the eval path, returns one
+/// root score per graph, and keeps the dynamic-tensor chunks at
+/// single-task size — the training run's Σ-task retention must cost
+/// strictly more.
+#[test]
+fn infer_batch_matches_eval_and_skips_retention() {
+    use cavs::graph::GraphBatch;
+
+    require_artifacts!();
+    let graphs = tree_batch(7, 6);
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let rt = Runtime::new(&artifacts_dir()).unwrap();
+
+    // eval baseline (training=false through run_minibatch)
+    let mut model = fresh_model(Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5);
+    let mut eval_eng = Engine::new(
+        &rt,
+        EngineOpts { training: false, ..Default::default() },
+    );
+    let eval = eval_eng.run_minibatch(&mut model, &refs).unwrap();
+    let infer_cap = eval_eng.chunk_capacity_bytes();
+
+    // serving path: pre-merged batch through infer_batch
+    let mut model2 = fresh_model(Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5);
+    let mut eng = Engine::new(&rt, EngineOpts::default());
+    let batch = GraphBatch::new(&refs, Cell::TreeLstm.arity());
+    let mut scores = Vec::new();
+    let r = eng.infer_batch(&mut model2, &batch, &mut scores).unwrap();
+    assert_eq!(r.loss, eval.loss, "infer_batch must match the eval forward");
+    assert_eq!(scores.len(), graphs.len(), "one score per request");
+    assert!(scores.iter().all(|s| s.is_finite()));
+    assert!(
+        eng.opts.training,
+        "infer_batch must restore the engine's training flag"
+    );
+
+    // training retains Σ-task history; inference must not
+    let mut model3 = fresh_model(Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5);
+    let mut train_eng = Engine::new(&rt, EngineOpts::default());
+    train_eng.run_minibatch(&mut model3, &refs).unwrap();
+    let train_cap = train_eng.chunk_capacity_bytes();
+    assert!(
+        infer_cap < train_cap,
+        "inference chunks ({infer_cap} B) must stay below the training \
+         retention ({train_cap} B)"
+    );
+}
+
 #[test]
 fn dyndecl_agrees_with_cavs() {
     require_artifacts!();

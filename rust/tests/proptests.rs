@@ -472,3 +472,142 @@ fn prop_bucket_selection() {
         }
     });
 }
+
+/// The serve batch former's merged `GraphBatch` over a random request set
+/// is bitwise identical to the offline `graph::batch` merge of the same
+/// samples — and re-merging through the recycled arenas changes nothing.
+#[test]
+fn prop_serve_merge_bitwise_matches_offline_merge() {
+    use cavs::serve::{BatchFormer, BatchPolicy, Request, RequestQueue};
+    use std::time::Duration;
+
+    check("serve-merge", 80, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let offline = GraphBatch::new(&refs, arity);
+
+        let q = RequestQueue::bounded(graphs.len());
+        for (id, g) in graphs.iter().enumerate() {
+            q.try_enqueue(Request::new(id as u64, g.clone()).unwrap())
+                .unwrap();
+        }
+        let mut former = BatchFormer::new(BatchPolicy {
+            max_batch: graphs.len(),
+            max_delay: Duration::ZERO,
+        });
+        let k = former.form(&q);
+        assert_eq!(k, graphs.len(), "one batch holds the whole request set");
+
+        let mut merged = GraphBatch::empty(arity);
+        for round in 0..2 {
+            // round 1 re-merges through the already-grown arenas: the
+            // recycled merge must stay bitwise identical to the fresh one
+            merged.merge_indexed(k, arity, |i| former.requests()[i].merge_item());
+            assert_eq!(merged, offline, "round {round}");
+        }
+    });
+}
+
+/// Every enqueued request gets exactly one response — no drops, no
+/// duplicates — across deadline settings (including a zero deadline),
+/// batch sizes, queue capacities and thread counts, with admission
+/// control (`Full`) handled by draining the server.
+#[test]
+fn prop_serve_every_request_answered_exactly_once() {
+    use cavs::serve::{HostExec, Request, RequestQueue, Server, ServeOpts};
+    use std::time::Duration;
+
+    check("serve-exactly-once", 25, |rng| {
+        let graphs = random_graphs(rng);
+        let n = 4 + rng.below(28);
+        let max_batch = 1 + rng.below(8);
+        let max_delay = match rng.below(3) {
+            0 => Duration::ZERO,
+            1 => Duration::from_micros(200),
+            _ => Duration::from_millis(2),
+        };
+        let cap = 1 + rng.below(n);
+        let threads = 1 + rng.below(3);
+        let opts = ServeOpts { max_batch, max_delay, queue_cap: cap };
+        let mut server = Server::new(
+            HostExec::tree_fc(4, 2, 20, threads, 7),
+            opts.policy(),
+        );
+        let q = RequestQueue::bounded(cap);
+        let mut got = vec![0u32; n];
+        let mut on_resp = |resp: cavs::serve::Response| {
+            assert!(resp.prediction.score.is_finite());
+            got[resp.id() as usize] += 1;
+        };
+        for id in 0..n as u64 {
+            let g = graphs[id as usize % graphs.len()].clone();
+            let mut req = Request::new(id, g).unwrap();
+            // admission control under a small queue: serve a batch to
+            // free capacity, then resubmit — nothing may be dropped
+            loop {
+                match q.try_enqueue(req) {
+                    Ok(()) => break,
+                    Err((back, _full)) => {
+                        req = back;
+                        assert!(server.step(&q, &mut on_resp).unwrap());
+                    }
+                }
+            }
+        }
+        q.close();
+        while server.step(&q, &mut on_resp).unwrap() {}
+        assert!(
+            got.iter().all(|&c| c == 1),
+            "response multiplicity violated: {got:?}"
+        );
+        assert_eq!(server.metrics.n_responses(), n);
+    });
+}
+
+/// The serve planner (recycled depth-level chunking) and the offline
+/// scheduler produce forward-equivalent plans: identical per-vertex
+/// states out of the host frontier, identical padding totals.
+#[test]
+fn prop_serve_plan_forward_matches_scheduler() {
+    use cavs::serve::BatchPlan;
+
+    check("serve-plan", 60, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let sched = schedule(&batch, Policy::Batched, BUCKETS);
+        let mut planner = BatchPlan::new();
+        let planned = planner.plan(&batch, BUCKETS).to_vec();
+        assert_eq!(
+            stats(&planned).padded_rows,
+            stats(&sched).padded_rows,
+            "identical bucket chunking"
+        );
+
+        let h = 4;
+        let cell = HostTreeFc::random(h, arity, rng);
+        let xtable: Vec<f32> =
+            (0..20 * h).map(|_| rng.normal_f32(0.5)).collect();
+        let a = run_host_frontier(&batch, &sched, &cell, &xtable, 1, false);
+        let b = run_host_frontier(&batch, &planned, &cell, &xtable, 1, false);
+        assert_eq!(
+            a.states.as_slice(),
+            b.states.as_slice(),
+            "planner and scheduler must compute identical states"
+        );
+    });
+}
