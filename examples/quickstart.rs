@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // the §3.5 static analyses on F (what the engine optimizes)
-    let program = Cell::TreeLstm.program(h).unwrap();
+    let program = Cell::TreeLstm.program(h);
     let analysis = program.analyze();
     println!(
         "F has {} ops; {} fuse-able element-wise groups; {} eager, {} lazy",

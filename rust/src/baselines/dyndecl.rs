@@ -390,12 +390,12 @@ impl<'rt> DynDecl<'rt> {
                 self.launches += 1;
                 outs[0].to_vec::<f32>()?
             }
-            OpKind::Sigmoid | OpKind::Tanh => {
+            OpKind::Sigmoid | OpKind::Tanh | OpKind::OneMinus => {
                 gather_input(self, built, 0, cols, scratch_a);
-                let op = if matches!(node.kind, OpKind::Sigmoid) {
-                    "sigmoid"
-                } else {
-                    "tanh"
+                let op = match node.kind {
+                    OpKind::Sigmoid => "sigmoid",
+                    OpKind::Tanh => "tanh",
+                    _ => "oneminus",
                 };
                 let name = format!("op_{op}_n{}", b * cols);
                 let exe = self.rt.load(&name)?;
@@ -447,17 +447,15 @@ impl<'rt> DynDecl<'rt> {
         model: &Model,
         graphs: &[&InputGraph],
     ) -> Result<Vec<Vec<f32>>> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
-        let program = cell
-            .program(h)
-            .ok_or_else(|| anyhow::anyhow!("no op program for {}", cell.name()))?;
+        let program = cell.program();
         let batch = GraphBatch::new(graphs, cell.arity());
         let buckets =
             self.rt.manifest.buckets(cell.name(), "cell_fwd", h).to_vec();
-        let mut built = self.construct(&program, &batch);
-        self.forward(model, &program, &batch, &mut built, &buckets)?;
-        let state_cols = cell.state_cols(h);
+        let mut built = self.construct(program, &batch);
+        self.forward(model, program, &batch, &mut built, &buckets)?;
+        let state_cols = cell.state_cols();
         Ok((0..batch.n_vertices)
             .map(|v| {
                 let (g, o) = built.state_loc[v];
@@ -474,11 +472,9 @@ impl<'rt> DynDecl<'rt> {
         graphs: &[&InputGraph],
         training: bool,
     ) -> Result<StepResult> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
-        let program = cell
-            .program(h)
-            .ok_or_else(|| anyhow::anyhow!("no op program for {}", cell.name()))?;
+        let program = cell.program();
         let batch = GraphBatch::new(graphs, cell.arity());
         let op_buckets: Vec<usize> = {
             // op artifacts share the cell bucket grid
@@ -490,11 +486,11 @@ impl<'rt> DynDecl<'rt> {
 
         // 1. per-sample graph construction (the dynamic-declaration cost)
         let t0 = std::time::Instant::now();
-        let mut built = self.construct(&program, &batch);
+        let mut built = self.construct(program, &batch);
         self.timers.add(Phase::Construction, t0.elapsed());
 
         // 2. agenda-batched forward
-        self.forward(model, &program, &batch, &mut built, &op_buckets)?;
+        self.forward(model, program, &batch, &mut built, &op_buckets)?;
 
         // 3+4. heads and backward (cell granularity against arena memory)
         let mut result = StepResult {
@@ -514,10 +510,10 @@ impl<'rt> DynDecl<'rt> {
         training: bool,
         result: &mut StepResult,
     ) -> Result<()> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
-        let state_cols = cell.state_cols(h);
-        let (hoff, _) = cell.h_part(h);
+        let state_cols = cell.state_cols();
+        let (hoff, _) = cell.h_part();
         let mut grad_buf = StateBuffer::new(batch.n_vertices, state_cols);
 
         // pack state rows from arenas on demand
@@ -757,6 +753,7 @@ fn signature(kind: &OpKind, cols: usize) -> u64 {
             (11, (*start as u64) << 12 | *len as u64)
         }
         OpKind::ConcatCols => (12, 0),
+        OpKind::OneMinus => (13, 0),
     };
     // non-overlapping fields: tag[56..], aux[32..56], cols[0..32]
     (tag << 56) | ((aux & 0xFF_FFFF) << 32) | cols as u64
@@ -775,7 +772,7 @@ mod tests {
         let mut seen = std::collections::HashMap::new();
         for cell in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc] {
             for h in [4usize, 32, 64, 256, 512, 1024] {
-                let p = cell.program(h).unwrap();
+                let p = cell.program(h);
                 for n in &p.nodes {
                     let s = signature(&n.kind, n.cols);
                     if let Some(prev) = seen.insert(s, (n.kind.clone(), n.cols)) {
@@ -798,5 +795,5 @@ fn pick(buckets: &[usize], m: usize) -> usize {
 
 /// A tiny summary of construction cost for Fig. 9.
 pub fn construction_instances(cell: Cell, h: usize, n_vertices: usize) -> usize {
-    cell.program(h).map(|p| p.nodes.len() * n_vertices).unwrap_or(0)
+    cell.program(h).nodes.len() * n_vertices
 }

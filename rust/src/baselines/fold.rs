@@ -154,10 +154,10 @@ impl<'rt> Fold<'rt> {
         graphs: &[&InputGraph],
         training: bool,
     ) -> Result<StepResult> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
         let arity = cell.arity();
-        let state_cols = cell.state_cols(h);
+        let state_cols = cell.state_cols();
         let batch = GraphBatch::new(graphs, arity);
 
         // 1. preprocessing — Fold's construction-side overhead
@@ -280,11 +280,11 @@ impl<'rt> Fold<'rt> {
         training: bool,
         result: &mut StepResult,
     ) -> Result<()> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
         let arity = cell.arity();
-        let state_cols = cell.state_cols(h);
-        let (hoff, _) = cell.h_part(h);
+        let state_cols = cell.state_cols();
+        let (hoff, _) = cell.h_part();
         let mut grad_buf = StateBuffer::new(batch.n_vertices, state_cols);
 
         let state_row = |v: u32| {

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::exec::{EngineOpts, ExecOpts};
 use crate::graph::Dataset;
-use crate::models::{Cell, HeadKind, Model};
+use crate::models::{CellSpec, HeadKind, Model};
 use crate::runtime::Runtime;
 use crate::scheduler::Policy;
 
@@ -39,42 +39,28 @@ fn n_scaled(base: usize, s: Scale) -> usize {
     ((base as f64 * s.samples).round() as usize).max(2)
 }
 
-fn model_for(cell: Cell, h: usize, rt: &Runtime) -> Model {
-    match cell {
-        Cell::Lstm | Cell::Gru => Model::new(
-            cell,
-            h,
-            rt.manifest.vocab,
-            HeadKind::LmPerVertex,
-            rt.manifest.vocab,
-            7,
-        ),
-        Cell::TreeLstm => Model::new(
-            cell,
-            h,
-            rt.manifest.vocab,
-            HeadKind::ClassifierAtRoot,
-            rt.manifest.ncls,
-            7,
-        ),
-        Cell::TreeFc => Model::new(
-            cell,
-            h,
-            rt.manifest.vocab,
-            HeadKind::SumRootState,
-            0,
-            7,
-        ),
-    }
+/// Head/dataset selection is by registered **name** (unknown user cells
+/// fall back to the LM-over-chains workload; `train_host` below picks by
+/// arity instead), not by enum dispatch — any cell the registry knows
+/// benches with no edits here.
+fn model_for(cell: &str, h: usize, rt: &Runtime) -> Result<Model> {
+    let (head, head_vocab) = match cell {
+        "treefc" => (HeadKind::SumRootState, 0),
+        "treelstm" | "cstreelstm" => {
+            (HeadKind::ClassifierAtRoot, rt.manifest.ncls)
+        }
+        _ => (HeadKind::LmPerVertex, rt.manifest.vocab),
+    };
+    Model::by_name(cell, h, rt.manifest.vocab, head, head_vocab, 7)
 }
 
-fn dataset_for(cell: Cell, n: usize, rt: &Runtime, seq_len: usize, leaves: usize) -> Dataset {
+fn dataset_for(cell: &str, n: usize, rt: &Runtime, seq_len: usize, leaves: usize) -> Dataset {
     match cell {
-        Cell::Lstm | Cell::Gru => {
-            Dataset::ptb_like_fixed(11, n, rt.manifest.vocab, seq_len)
+        "treefc" => Dataset::treefc(11, n, rt.manifest.vocab, leaves),
+        "treelstm" | "cstreelstm" => {
+            Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls)
         }
-        Cell::TreeLstm => Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls),
-        Cell::TreeFc => Dataset::treefc(11, n, rt.manifest.vocab, leaves),
+        _ => Dataset::ptb_like_fixed(11, n, rt.manifest.vocab, seq_len),
     }
 }
 
@@ -102,19 +88,19 @@ fn cavs_default(scale: Scale) -> System {
 fn point(
     rt: &Runtime,
     system: System,
-    cell: Cell,
+    cell: &str,
     h: usize,
     data: &Dataset,
     bs: usize,
     norm_n: usize,
     training: bool,
 ) -> Result<EpochMetrics> {
-    let mut model = model_for(cell, h, rt);
+    let mut model = model_for(cell, h, rt)?;
     // warmup: compile artifacts + fault in caches (1 minibatch)
     {
         let warm: Vec<&crate::graph::InputGraph> =
             data.graphs.iter().take(bs.min(data.len())).collect();
-        let mut wm = model_for(cell, h, rt);
+        let mut wm = model_for(cell, h, rt)?;
         let wd = Dataset {
             graphs: warm.into_iter().cloned().collect(),
             vocab: data.vocab,
@@ -139,24 +125,24 @@ fn point(
 // Fig. 8 (e)-(h): epoch time vs hidden size at bs=64
 // ---------------------------------------------------------------------
 
-fn fig8_systems(cell: Cell, scale: Scale) -> Vec<System> {
+fn fig8_systems(cell: &str, scale: Scale) -> Vec<System> {
     match cell {
-        Cell::Lstm => vec![
+        "lstm" => vec![
             System::ScanStatic { t: 64 }, // cuDNN-analogue == TF static decl
             cavs_default(scale),
             System::DynDecl,
         ],
-        Cell::TreeLstm => vec![
+        "treelstm" => vec![
             cavs_default(scale),
             System::Fold { threads: 32 },
             System::DynDecl,
         ],
-        Cell::TreeFc => vec![
+        "treefc" => vec![
             cavs_default(scale),
             System::Fold { threads: 1 },
             System::DynDecl,
         ],
-        Cell::Gru => vec![cavs_default(scale)],
+        _ => vec![cavs_default(scale)],
     }
 }
 
@@ -170,7 +156,7 @@ fn fig8_panel(
     rt: &Runtime,
     name: &str,
     title: &str,
-    cell: Cell,
+    cell: &str,
     var_len: bool,
     bs_list: &[usize],
     h_list: &[usize],
@@ -186,8 +172,8 @@ fn fig8_panel(
     for &h in h_list {
         for &bs in bs_list {
             let (norm_n, n_meas, leaves) = match cell {
-                Cell::TreeFc => (64, n_scaled(bs.max(8), scale), 256),
-                Cell::TreeLstm => (256, n_scaled((2 * bs).max(32), scale), 0),
+                "treefc" => (64, n_scaled(bs.max(8), scale), 256),
+                "treelstm" => (256, n_scaled((2 * bs).max(32), scale), 0),
                 _ => (256, n_scaled(bs.max(16), scale), 0),
             };
             let data = if var_len {
@@ -231,14 +217,14 @@ pub fn fig8(rt: &Runtime, panel: char, scale: Scale) -> Result<Table> {
         if scale.full { &[1, 4, 16, 64, 128, 256] } else { &[1, 16, 64, 256] };
     let h_sweep: &[usize] = &[64, 256, 512, 1024];
     match panel {
-        'a' => fig8_panel(rt, "fig8a", "Fig 8(a) Fixed-LSTM, h=512, bs sweep (s / 256 sentences)", Cell::Lstm, false, bs_sweep, &[512], scale),
-        'b' => fig8_panel(rt, "fig8b", "Fig 8(b) Var-LSTM, h=512, bs sweep (s / 256 sentences)", Cell::Lstm, true, bs_sweep, &[512], scale),
-        'c' => fig8_panel(rt, "fig8c", "Fig 8(c) Tree-FC (256 leaves), h=512, bs sweep (s / 64 trees)", Cell::TreeFc, false, bs_sweep, &[512], scale),
-        'd' => fig8_panel(rt, "fig8d", "Fig 8(d) Tree-LSTM (SST-like), h=512, bs sweep (s / 256 trees)", Cell::TreeLstm, false, bs_sweep, &[512], scale),
-        'e' => fig8_panel(rt, "fig8e", "Fig 8(e) Fixed-LSTM, bs=64, h sweep (s / 256 sentences)", Cell::Lstm, false, &[64], h_sweep, scale),
-        'f' => fig8_panel(rt, "fig8f", "Fig 8(f) Var-LSTM, bs=64, h sweep (s / 256 sentences)", Cell::Lstm, true, &[64], h_sweep, scale),
-        'g' => fig8_panel(rt, "fig8g", "Fig 8(g) Tree-FC, bs=64, h sweep (s / 64 trees)", Cell::TreeFc, false, &[64], h_sweep, scale),
-        'h' => fig8_panel(rt, "fig8h", "Fig 8(h) Tree-LSTM, bs=64, h sweep (s / 256 trees)", Cell::TreeLstm, false, &[64], h_sweep, scale),
+        'a' => fig8_panel(rt, "fig8a", "Fig 8(a) Fixed-LSTM, h=512, bs sweep (s / 256 sentences)", "lstm", false, bs_sweep, &[512], scale),
+        'b' => fig8_panel(rt, "fig8b", "Fig 8(b) Var-LSTM, h=512, bs sweep (s / 256 sentences)", "lstm", true, bs_sweep, &[512], scale),
+        'c' => fig8_panel(rt, "fig8c", "Fig 8(c) Tree-FC (256 leaves), h=512, bs sweep (s / 64 trees)", "treefc", false, bs_sweep, &[512], scale),
+        'd' => fig8_panel(rt, "fig8d", "Fig 8(d) Tree-LSTM (SST-like), h=512, bs sweep (s / 256 trees)", "treelstm", false, bs_sweep, &[512], scale),
+        'e' => fig8_panel(rt, "fig8e", "Fig 8(e) Fixed-LSTM, bs=64, h sweep (s / 256 sentences)", "lstm", false, &[64], h_sweep, scale),
+        'f' => fig8_panel(rt, "fig8f", "Fig 8(f) Var-LSTM, bs=64, h sweep (s / 256 sentences)", "lstm", true, &[64], h_sweep, scale),
+        'g' => fig8_panel(rt, "fig8g", "Fig 8(g) Tree-FC, bs=64, h sweep (s / 64 trees)", "treefc", false, &[64], h_sweep, scale),
+        'h' => fig8_panel(rt, "fig8h", "Fig 8(h) Tree-LSTM, bs=64, h sweep (s / 256 trees)", "treelstm", false, &[64], h_sweep, scale),
         _ => anyhow::bail!("fig8 panel must be a..h"),
     }
 }
@@ -259,9 +245,9 @@ pub fn serial_vs_batched(rt: &Runtime, scale: Scale) -> Result<Table> {
     };
     for &bs in bss {
         let n = n_scaled(bs.max(8), scale);
-        let data = dataset_for(Cell::Lstm, n, rt, 64, 0);
-        let b = point(rt, cavs_default(scale), Cell::Lstm, 512, &data, bs, 256, true)?;
-        let s = point(rt, System::CavsSerial, Cell::Lstm, 512, &data, bs, 256, true)?;
+        let data = dataset_for("lstm", n, rt, 64, 0);
+        let b = point(rt, cavs_default(scale), "lstm", 512, &data, bs, 256, true)?;
+        let s = point(rt, System::CavsSerial, "lstm", 512, &data, bs, 256, true)?;
         table.row(vec![
             bs.to_string(),
             fmt_s(b.seconds),
@@ -288,7 +274,7 @@ pub fn fig9a(rt: &Runtime, scale: Scale) -> Result<Table> {
         let bs = 64usize.min((n_scaled(64, scale)).max(2));
         let data = Dataset::treefc(11, bs, rt.manifest.vocab, leaves);
         for sys in [cavs_default(scale), System::Fold { threads: 1 }, System::DynDecl] {
-            let m = point(rt, sys, Cell::TreeFc, 512, &data, bs, bs, true)?;
+            let m = point(rt, sys, "treefc", 512, &data, bs, bs, true)?;
             let pct = 100.0 * m.construction_s() / m.seconds.max(1e-9);
             table.row(vec![
                 leaves.to_string(),
@@ -319,7 +305,7 @@ pub fn fig9b(rt: &Runtime, scale: Scale) -> Result<Table> {
             System::Fold { threads: 32 },
             System::DynDecl,
         ] {
-            let m = point(rt, sys, Cell::TreeLstm, 512, &data, bs, 256, true)?;
+            let m = point(rt, sys, "treelstm", 512, &data, bs, 256, true)?;
             let pct = 100.0 * m.construction_s() / m.seconds.max(1e-9);
             table.row(vec![
                 bs.to_string(),
@@ -350,9 +336,9 @@ pub fn table1(rt: &Runtime, scale: Scale) -> Result<Table> {
         let bs = 64usize;
         let n = n_scaled(8, scale).max(4);
         let data = Dataset::treefc(11, n, rt.manifest.vocab, leaves);
-        let c = point(rt, cavs_default(scale), Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
-        let f = point(rt, System::Fold { threads: 1 }, Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
-        let d = point(rt, System::DynDecl, Cell::TreeFc, 512, &data, bs.min(n), 64, true)?;
+        let c = point(rt, cavs_default(scale), "treefc", 512, &data, bs.min(n), 64, true)?;
+        let f = point(rt, System::Fold { threads: 1 }, "treefc", 512, &data, bs.min(n), 64, true)?;
+        let d = point(rt, System::DynDecl, "treefc", 512, &data, bs.min(n), 64, true)?;
         table.row(vec![
             format!("Tree-FC {leaves} leaves"),
             fmt_s(c.compute_s()),
@@ -367,9 +353,9 @@ pub fn table1(rt: &Runtime, scale: Scale) -> Result<Table> {
     for &bs in bss {
         let n = n_scaled((2 * bs).max(32), scale);
         let data = Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls);
-        let c = point(rt, cavs_default(scale), Cell::TreeLstm, 512, &data, bs, 256, true)?;
-        let f = point(rt, System::Fold { threads: 32 }, Cell::TreeLstm, 512, &data, bs, 256, true)?;
-        let d = point(rt, System::DynDecl, Cell::TreeLstm, 512, &data, bs, 256, true)?;
+        let c = point(rt, cavs_default(scale), "treelstm", 512, &data, bs, 256, true)?;
+        let f = point(rt, System::Fold { threads: 32 }, "treelstm", 512, &data, bs, 256, true)?;
+        let d = point(rt, System::DynDecl, "treelstm", 512, &data, bs, 256, true)?;
         table.row(vec![
             format!("Tree-LSTM bs={bs}"),
             fmt_s(c.compute_s()),
@@ -393,7 +379,7 @@ pub fn fig10(rt: &Runtime, scale: Scale) -> Result<Table> {
         &["model", "h", "lazy batching", "fusion", "streaming", "all on"],
     );
     let hs: &[usize] = if scale.full { &[256, 512, 1024] } else { &[256, 512] };
-    for (cell, label) in [(Cell::Lstm, "Fixed-LSTM"), (Cell::TreeLstm, "Tree-LSTM")] {
+    for (cell, label) in [("lstm", "Fixed-LSTM"), ("treelstm", "Tree-LSTM")] {
         for &h in hs {
             let n = n_scaled(32, scale);
             let data = dataset_for(cell, n, rt, 64, 0);
@@ -465,10 +451,10 @@ pub fn table2(rt: &Runtime, scale: Scale) -> Result<Table> {
         let n = n_scaled((2 * bs).max(32), scale);
         let data = Dataset::sst_like(11, n, rt.manifest.vocab, rt.manifest.ncls);
         let h = 256;
-        let ct = point(rt, cavs_default(scale), Cell::TreeLstm, h, &data, bs, 256, true)?;
-        let ci = point(rt, cavs_default(scale), Cell::TreeLstm, h, &data, bs, 256, false)?;
-        let dt = point(rt, System::DynDecl, Cell::TreeLstm, h, &data, bs, 256, true)?;
-        let di = point(rt, System::DynDecl, Cell::TreeLstm, h, &data, bs, 256, false)?;
+        let ct = point(rt, cavs_default(scale), "treelstm", h, &data, bs, 256, true)?;
+        let ci = point(rt, cavs_default(scale), "treelstm", h, &data, bs, 256, false)?;
+        let dt = point(rt, System::DynDecl, "treelstm", h, &data, bs, 256, true)?;
+        let di = point(rt, System::DynDecl, "treelstm", h, &data, bs, 256, false)?;
         table.row(vec![
             bs.to_string(),
             format!("{} / {}", fmt_s(ct.memory_s()), fmt_s(dt.memory_s())),
@@ -586,6 +572,67 @@ pub fn serve(scale: Scale, tiny: bool) -> Result<Table> {
     }
 
     write_results("serve", &table)?;
+    Ok(table)
+}
+
+/// Host-interpreter training curve for any registered cell
+/// (`cavs bench --exp train --cell gru`): artifact-free, so the open-API
+/// training path has a CI smoke (`--tiny true`) on clean checkouts.
+/// Writes `results/BENCH_train.json`.
+pub fn train_host(cell: &str, scale: Scale, tiny: bool) -> Result<Table> {
+    use crate::graph::Dataset as Ds;
+    use crate::train::host::train_host_epochs;
+
+    let (h, n, bs, epochs, vocab) = if tiny {
+        (8usize, 16usize, 4usize, 3usize, 20usize)
+    } else {
+        (32, n_scaled(128, scale).max(8), 16, 5, 100)
+    };
+    let spec = CellSpec::lookup(cell, h)?;
+    let data = match (cell, spec.arity()) {
+        ("treefc", _) => Ds::treefc(11, n, vocab, 32),
+        (_, a) if a >= 2 => Ds::sst_like(11, n, vocab, 5),
+        _ => Ds::ptb_like_var(11, n, vocab, 16),
+    };
+    let mut table = Table::new(
+        &format!(
+            "train (host interpreter): {cell} h={h}, {n} samples, bs={bs}, \
+             threads={} — loss must decrease",
+            scale.threads.max(1)
+        ),
+        &["epoch", "loss", "seconds", "vertices"],
+    );
+    let logs = train_host_epochs(
+        &spec,
+        &data,
+        bs,
+        0.02,
+        epochs,
+        scale.threads.max(1),
+        7,
+        |log| {
+            crate::info!(
+                "train {cell}: epoch {} loss {:.4} ({:.2}s)",
+                log.epoch,
+                log.loss,
+                log.seconds
+            );
+        },
+    )?;
+    for l in &logs {
+        table.row(vec![
+            l.epoch.to_string(),
+            format!("{:.4}", l.loss),
+            format!("{:.3}", l.seconds),
+            l.n_vertices.to_string(),
+        ]);
+    }
+    let (first, last) = (logs[0].loss, logs[logs.len() - 1].loss);
+    anyhow::ensure!(
+        last.is_finite() && last < first,
+        "host training of '{cell}' did not reduce loss ({first} -> {last})"
+    );
+    write_results("train", &table)?;
     Ok(table)
 }
 

@@ -5,13 +5,16 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::models::{Cell, HeadKind};
+use crate::models::HeadKind;
 use crate::scheduler::Policy;
 use crate::util::json::Json;
+use crate::vertex::registry;
 
 #[derive(Debug, Clone)]
 pub struct Config {
-    pub cell: Cell,
+    /// Registered cell name (builtin or user program) — resolved to a
+    /// `CellSpec` at model construction, never dispatched on as an enum.
+    pub cell: String,
     pub h: usize,
     pub vocab: usize,
     pub head: HeadKind,
@@ -47,7 +50,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Config {
         Config {
-            cell: Cell::TreeLstm,
+            cell: "treelstm".to_string(),
             h: 256,
             vocab: 1000,
             head: HeadKind::ClassifierAtRoot,
@@ -91,7 +94,15 @@ impl Config {
     /// Apply one `key=value` override.
     pub fn apply(&mut self, key: &str, val: &str) -> Result<()> {
         match key {
-            "cell" => self.cell = Cell::from_name(val)?,
+            "cell" => {
+                if !registry::is_registered(val) {
+                    bail!(
+                        "unknown cell '{val}' (registered: {})",
+                        registry::registered_cells().join(", ")
+                    );
+                }
+                self.cell = val.to_string();
+            }
             "h" => self.h = val.parse()?,
             "vocab" => self.vocab = val.parse()?,
             "head" => {
@@ -219,13 +230,19 @@ mod tests {
         c.apply("bs", "16").unwrap();
         c.apply("fusion", "off").unwrap();
         c.apply("policy", "serial").unwrap();
-        assert_eq!(c.cell, Cell::Lstm);
+        assert_eq!(c.cell, "lstm");
         assert_eq!(c.h, 512);
         assert_eq!(c.batch_size, 16);
         assert!(!c.fusion);
         assert_eq!(c.policy, Policy::Serial);
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("fusion", "maybe").is_err());
+        // program-only cells are first-class config values now
+        c.apply("cell", "gru").unwrap();
+        assert_eq!(c.cell, "gru");
+        c.apply("cell", "cstreelstm").unwrap();
+        let e = c.apply("cell", "not-a-cell").unwrap_err().to_string();
+        assert!(e.contains("registered:"), "{e}");
     }
 
     #[test]
@@ -276,7 +293,7 @@ mod tests {
         std::fs::write(&p, r#"{"cell": "treefc", "h": 64, "lr": 0.01, "lazy_batching": false}"#)
             .unwrap();
         let c = Config::load(&p).unwrap();
-        assert_eq!(c.cell, Cell::TreeFc);
+        assert_eq!(c.cell, "treefc");
         assert_eq!(c.h, 64);
         assert!((c.lr - 0.01).abs() < 1e-9);
         assert!(!c.lazy_batching);

@@ -7,7 +7,7 @@ use super::parallel::{self, ExecOpts};
 use super::pool::{ShardScratch, WorkerPool};
 use crate::graph::{GraphBatch, InputGraph};
 use crate::memory::{copy_col_slice, MemTraffic, StateBuffer};
-use crate::models::{Cell, HeadKind, Model};
+use crate::models::{HeadKind, Model};
 use crate::runtime::{literal_into, Arg, Runtime};
 use crate::scheduler::{self, Policy, Task};
 use crate::tensor::DynamicTensor;
@@ -224,7 +224,7 @@ impl<'rt> Engine<'rt> {
         let result = result?;
         root_scores.clear();
         let ws = self.ws.as_ref().expect("run_batch recycles the workspace");
-        let (off, len) = model.cell.h_part(model.h);
+        let (off, len) = model.cell.h_part();
         for &r in &batch.roots {
             let row = ws.state_buf.row(r as usize);
             root_scores.push(row[off..off + len].iter().sum());
@@ -275,15 +275,17 @@ impl<'rt> Engine<'rt> {
         });
         let sstats = scheduler::stats(&tasks);
 
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
-        let state_cols = cell.state_cols(h);
+        let state_cols = cell.state_cols();
         // lazy parameter grads need bwd_data + param_grad artifacts; fall
         // back to the eager adjoint when aot didn't emit them for this
-        // hidden size (e.g. h=64 outside the Fig. 10 set)
+        // cell or hidden size (e.g. h=64 outside the Fig. 10 set, or a
+        // program-only cell with no artifact family at all). The pgrad
+        // chunk layout packs at most two child-state blocks.
         let want_gates = (self.opts.training
             && self.opts.lazy_batching
-            && cell.has_lazy_bwd()
+            && cell.arity() <= 2
             && !self
                 .rt
                 .manifest
@@ -294,7 +296,7 @@ impl<'rt> Engine<'rt> {
                 .manifest
                 .buckets(cell.name(), "param_grad", h)
                 .is_empty())
-        .then(|| cell.gates_cols(h));
+        .then(|| cell.gates_cols());
         let mut ws = self.ws.take().unwrap_or_else(Workspace::new);
         ws.prepare(
             batch.n_vertices,
@@ -410,15 +412,19 @@ impl<'rt> Engine<'rt> {
 
             // -- evaluate F -------------------------------------------
             ws.dt_sout.set_bs(b);
-            if self.opts.fusion || model.cell.program(model.h).is_none() {
+            if self.opts.fusion || !model.cell.has_unfused_ops() {
                 self.exec_fused_fwd(model, b, ws)?;
             } else {
-                let program = model.cell.program(model.h).unwrap();
                 let x_view = ws.dt_x.view().to_vec();
                 let s_views: Vec<Vec<f32>> =
                     ws.dt_s.iter().map(|d| d.view().to_vec()).collect();
                 let out = unfused_fwd_dispatch(
-                    self, model, &program, b, &x_view, &s_views,
+                    self,
+                    model,
+                    model.cell.program(),
+                    b,
+                    &x_view,
+                    &s_views,
                 )?;
                 ws.dt_sout.view_mut().copy_from_slice(&out);
             }
@@ -541,7 +547,7 @@ impl<'rt> Engine<'rt> {
         match model.head_kind {
             HeadKind::SumRootState => {
                 // synthetic Tree-FC objective: loss = Σ root h-part
-                let (off, len) = model.cell.h_part(model.h);
+                let (off, len) = model.cell.h_part();
                 let mut loss = 0.0;
                 for &r in &batch.roots {
                     let row = ws.state_buf.row(r as usize);
@@ -621,7 +627,7 @@ impl<'rt> Engine<'rt> {
         scheduler::validate_buckets(&hbuckets)
             .with_context(|| format!("{kind} bucket list for {tag} h={h}"))?;
         let maxb = *hbuckets.last().unwrap();
-        let (hoff, hlen) = model.cell.h_part(h);
+        let (hoff, hlen) = model.cell.h_part();
         debug_assert_eq!(hlen, h);
 
         let mut start = 0;
@@ -695,9 +701,9 @@ impl<'rt> Engine<'rt> {
         tasks: &[Task],
         ws: &mut Workspace,
     ) -> Result<()> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
-        let state_cols = cell.state_cols(h);
+        let state_cols = cell.state_cols();
         let lazy = ws.dt_gates.is_some();
         let ex = self.opts.exec.sharder(&self.pool);
 
@@ -812,7 +818,7 @@ impl<'rt> Engine<'rt> {
     /// operators for computing gradients of the model parameters" are
     /// lazy ops).
     fn lazy_param_grads(&mut self, model: &mut Model, ws: &mut Workspace) -> Result<()> {
-        let cell = model.cell;
+        let cell = model.cell.clone();
         let h = model.h;
         let pg_buckets = self
             .rt
@@ -827,8 +833,8 @@ impl<'rt> Engine<'rt> {
         })?;
         let max_n = *pg_buckets.last().unwrap();
         let total = ws.dt_x.high_water_rows();
-        let gates_cols = cell.gates_cols(h);
-        let state_cols = cell.state_cols(h);
+        let gates_cols = cell.gates_cols();
+        let state_cols = cell.state_cols();
 
         // scratch packs sized for the largest chunk we will use
         let cap = max_n.min(total.next_power_of_two().max(pg_buckets[0]));
@@ -836,7 +842,7 @@ impl<'rt> Engine<'rt> {
         let mut h1 = vec![0.0f32; cap * h];
         let mut h2 = vec![0.0f32; cap * h];
         let mut gg = vec![0.0f32; cap * gates_cols];
-        let (hoff, _hlen) = cell.h_part(h);
+        let (hoff, _hlen) = cell.h_part();
 
         let mut start = 0;
         while start < total {
@@ -887,16 +893,15 @@ impl<'rt> Engine<'rt> {
             });
 
             let t0 = std::time::Instant::now();
-            let outs = match cell {
-                Cell::Lstm => self.rt.run(
-                    &exe,
-                    &[Arg::F32(&xs), Arg::F32(&h1), Arg::F32(&gg)],
-                )?,
-                Cell::TreeLstm | Cell::TreeFc => self.rt.run(
+            // argument layout is arity-driven (x, h-parts..., gates),
+            // mirroring aot.py's pgrad signature for 1- and 2-ary cells
+            let outs = if cell.arity() > 1 {
+                self.rt.run(
                     &exe,
                     &[Arg::F32(&xs), Arg::F32(&h1), Arg::F32(&h2), Arg::F32(&gg)],
-                )?,
-                Cell::Gru => bail!("gru has no lazy param grads"),
+                )?
+            } else {
+                self.rt.run(&exe, &[Arg::F32(&xs), Arg::F32(&h1), Arg::F32(&gg)])?
             };
             for (p, lit) in outs.iter().enumerate() {
                 let g = lit.to_vec::<f32>()?;

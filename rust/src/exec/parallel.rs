@@ -267,10 +267,53 @@ pub trait HostCell: Sync {
         let _ = (x, s, g_out, gx, gs, tmp);
         panic!("this host cell is forward-only (no backward implemented)");
     }
+    /// Parameter tensors whose gradients [`HostCell::acc_param_grads`]
+    /// accumulates (0 = the cell exposes no trainable parameters to the
+    /// host path — the hand-written reference cells).
+    fn n_params(&self) -> usize {
+        0
+    }
+    /// Flat element count of parameter tensor `i`.
+    fn param_len(&self, _i: usize) -> usize {
+        0
+    }
+    /// Scratch floats `acc_param_grads` needs per row.
+    fn pg_scratch_cols(&self) -> usize {
+        0
+    }
+    /// Accumulate one row's parameter gradients into `pg` (one flat
+    /// tensor per parameter, `param_len` sized). [`HostFrontier`] calls
+    /// this **sequentially** in row order, so accumulation is bitwise
+    /// identical for every executor and thread count.
+    fn acc_param_grads(
+        &self,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        pg: &mut [Vec<f32>],
+        tmp: &mut [f32],
+    ) {
+        let _ = (x, s, g_out, pg, tmp);
+        panic!("this host cell has no parameter gradients");
+    }
 }
 
-fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
+use crate::vertex::interp::sigmoid;
+
+/// `out = a @ p` for one row (`p` row-major `[a.len(), n]`): zeroed
+/// accumulation, k-outer / j-inner, skipping zero inputs — the exact
+/// loop the Program interpreter's MatMul performs, which is what makes
+/// the hand-written cells bitwise identical to interpretation.
+fn matvec_acc(a: &[f32], p: &[f32], n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for (k, &v) in a.iter().enumerate() {
+        if v != 0.0 {
+            let prow = &p[k * n..(k + 1) * n];
+            for (o, &w) in out.iter_mut().zip(prow) {
+                *o += v * w;
+            }
+        }
+    }
 }
 
 /// Tree-FC-style host cell: `out = tanh(Wx·x + Σ_slot Ws·s_slot + b)`.
@@ -298,28 +341,32 @@ impl HostTreeFc {
         }
     }
 
-    fn preactivation(&self, x: &[f32], s: &[f32], pre: &mut [f32]) {
+    /// `pre = ((x·Wx + s0·W0) + s1·W1 ...) + b`, accumulated in the same
+    /// association order as `treefc_program`'s op graph (MatMul nodes,
+    /// then pairwise Adds in slot order, then AddBias) — bitwise equal to
+    /// the Program interpreter. `t` is one h-wide temporary.
+    fn preactivation(&self, x: &[f32], s: &[f32], pre: &mut [f32], t: &mut [f32]) {
         let h = self.h;
-        pre.copy_from_slice(&self.b);
-        for k in 0..h {
-            let xv = x[k];
-            if xv != 0.0 {
-                for (j, p) in pre.iter_mut().enumerate() {
-                    *p += xv * self.wx[k * h + j];
-                }
-            }
-        }
+        matvec_acc(x, &self.wx, h, pre);
         for (slot, w) in self.ws.iter().enumerate() {
-            let sv = &s[slot * h..(slot + 1) * h];
-            for k in 0..h {
-                let hv = sv[k];
-                if hv != 0.0 {
-                    for (j, p) in pre.iter_mut().enumerate() {
-                        *p += hv * w[k * h + j];
-                    }
-                }
+            matvec_acc(&s[slot * h..(slot + 1) * h], w, h, t);
+            for (p, &tv) in pre.iter_mut().zip(&t[..h]) {
+                *p += tv;
             }
         }
+        for (p, &bv) in pre.iter_mut().zip(&self.b) {
+            *p += bv;
+        }
+    }
+
+    /// Parameter tensors in `treefc_program` declaration order
+    /// (Wx, W_slot..., b) — lets tests bind the same weights to a
+    /// [`ProgramCell`](crate::vertex::interp::ProgramCell).
+    pub fn params_vec(&self) -> Vec<Vec<f32>> {
+        let mut v = vec![self.wx.clone()];
+        v.extend(self.ws.iter().cloned());
+        v.push(self.b.clone());
+        v
     }
 }
 
@@ -336,12 +383,16 @@ impl HostCell for HostTreeFc {
         self.h
     }
 
-    fn bwd_scratch_cols(&self) -> usize {
+    fn fwd_scratch_cols(&self) -> usize {
         self.h
     }
 
-    fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], _tmp: &mut [f32]) {
-        self.preactivation(x, s, out);
+    fn bwd_scratch_cols(&self) -> usize {
+        2 * self.h
+    }
+
+    fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], tmp: &mut [f32]) {
+        self.preactivation(x, s, out, &mut tmp[..self.h]);
         for o in out.iter_mut() {
             *o = o.tanh();
         }
@@ -358,8 +409,9 @@ impl HostCell for HostTreeFc {
     ) {
         let h = self.h;
         // recompute the activation, then dpre = g_out * (1 - tanh^2)
-        let dpre = &mut tmp[..h];
-        self.preactivation(x, s, dpre);
+        let (dpre, t) = tmp.split_at_mut(h);
+        let dpre = &mut dpre[..h];
+        self.preactivation(x, s, dpre, &mut t[..h]);
         for (j, d) in dpre.iter_mut().enumerate() {
             let t = d.tanh();
             *d = g_out[j] * (1.0 - t * t);
@@ -406,6 +458,13 @@ impl HostLstm {
             b: init(rng, 4 * h),
         }
     }
+
+    /// Parameter tensors in `lstm_program` declaration order (W, U, b) —
+    /// lets tests bind the same weights to a
+    /// [`ProgramCell`](crate::vertex::interp::ProgramCell).
+    pub fn params_vec(&self) -> Vec<Vec<f32>> {
+        vec![self.w.clone(), self.u.clone(), self.b.clone()]
+    }
 }
 
 impl HostCell for HostLstm {
@@ -422,34 +481,29 @@ impl HostCell for HostLstm {
     }
 
     fn fwd_scratch_cols(&self) -> usize {
-        4 * self.h
+        8 * self.h
     }
 
     fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], tmp: &mut [f32]) {
         let h = self.h;
         let (c_in, h_in) = s.split_at(h);
-        let gates = &mut tmp[..4 * h];
-        gates.copy_from_slice(&self.b);
-        for k in 0..h {
-            let xv = x[k];
-            if xv != 0.0 {
-                for (j, g) in gates.iter_mut().enumerate() {
-                    *g += xv * self.w[k * 4 * h + j];
-                }
-            }
-            let hv = h_in[k];
-            if hv != 0.0 {
-                for (j, g) in gates.iter_mut().enumerate() {
-                    *g += hv * self.u[k * 4 * h + j];
-                }
-            }
-        }
+        // gate preactivations in lstm_program's op order: the two MatMul
+        // blocks, then (xW + hU) + b per element — bitwise equal to the
+        // Program interpreter's evaluation of the same graph
+        let (ga, gb) = tmp.split_at_mut(4 * h);
+        let gb = &mut gb[..4 * h];
+        matvec_acc(x, &self.w, 4 * h, ga);
+        matvec_acc(h_in, &self.u, 4 * h, gb);
         let (c_out, h_out) = out.split_at_mut(h);
         for j in 0..h {
-            let i = sigmoid(gates[j]);
-            let f = sigmoid(gates[h + j]);
-            let g = gates[2 * h + j].tanh();
-            let o = sigmoid(gates[3 * h + j]);
+            let pi = (ga[j] + gb[j]) + self.b[j];
+            let pf = (ga[h + j] + gb[h + j]) + self.b[h + j];
+            let po = (ga[2 * h + j] + gb[2 * h + j]) + self.b[2 * h + j];
+            let pu = (ga[3 * h + j] + gb[3 * h + j]) + self.b[3 * h + j];
+            let i = sigmoid(pi);
+            let f = sigmoid(pf);
+            let o = sigmoid(po);
+            let g = pu.tanh();
             let c = f * c_in[j] + i * g;
             c_out[j] = c;
             h_out[j] = o * c.tanh();
@@ -465,6 +519,9 @@ pub struct HostRun {
     pub grads: Option<StateBuffer>,
     /// Dense `[vocab, x_cols]` input-table gradients (backward runs only).
     pub x_grads: Option<Vec<f32>>,
+    /// Flat per-tensor parameter gradients (backward runs with a cell
+    /// that exposes parameters, e.g. a `ProgramCell`).
+    pub param_grads: Option<Vec<Vec<f32>>>,
     pub traffic_bytes: u64,
     pub traffic_ops: u64,
     /// **Observed** padding: Σ over tasks of `bucket − rows F actually
@@ -495,12 +552,17 @@ pub struct HostFrontier {
     gs: Vec<f32>,
     /// per-shard cell temporaries (`threads * max(fwd, bwd) scratch cols`)
     cell_tmp: Vec<f32>,
+    /// single-shard temporary for the sequential param-grad rows
+    pg_tmp: Vec<f32>,
+    /// flat per-tensor parameter-gradient accumulators
+    pgrads: Vec<Vec<f32>>,
     states: StateBuffer,
     grads: StateBuffer,
     x_grads: Vec<f32>,
     traffic: MemTraffic,
     padded_rows: usize,
     has_grads: bool,
+    has_pgrads: bool,
 }
 
 /// Grow-only arena slice: `buf[..n]`, zero-filled, allocating only when
@@ -577,12 +639,15 @@ impl HostFrontier {
             gx: Vec::new(),
             gs: Vec::new(),
             cell_tmp: Vec::new(),
+            pg_tmp: Vec::new(),
+            pgrads: Vec::new(),
             states: StateBuffer::new(0, 0),
             grads: StateBuffer::new(0, 0),
             x_grads: Vec::new(),
             traffic: MemTraffic::default(),
             padded_rows: 0,
             has_grads: false,
+            has_pgrads: false,
         }
     }
 
@@ -596,6 +661,14 @@ impl HostFrontier {
 
     pub fn x_grads(&self) -> Option<&[f32]> {
         self.has_grads.then_some(self.x_grads.as_slice())
+    }
+
+    /// Parameter gradients of the last backward run (cells with
+    /// `n_params() > 0` only), one flat tensor per parameter in the
+    /// cell's declaration order. Accumulated sequentially in task/row
+    /// order — bitwise identical for every executor and thread count.
+    pub fn param_grads(&self) -> Option<&[Vec<f32>]> {
+        self.has_pgrads.then_some(self.pgrads.as_slice())
     }
 
     pub fn traffic_bytes(&self) -> u64 {
@@ -643,6 +716,26 @@ impl HostFrontier {
         self.traffic.reset();
         self.padded_rows = 0;
         self.has_grads = false;
+        let np = cell.n_params();
+        self.has_pgrads = backward && np > 0;
+        if self.has_pgrads {
+            if self.pgrads.len() != np {
+                self.pgrads =
+                    (0..np).map(|i| vec![0.0; cell.param_len(i)]).collect();
+            }
+            for (i, g) in self.pgrads.iter_mut().enumerate() {
+                if g.len() != cell.param_len(i) {
+                    g.clear();
+                    g.resize(cell.param_len(i), 0.0);
+                } else {
+                    g.fill(0.0);
+                }
+            }
+            let pc = cell.pg_scratch_cols();
+            if self.pg_tmp.len() < pc {
+                self.pg_tmp.resize(pc, 0.0);
+            }
+        }
         self.states.reset_for(batch.n_vertices, sc);
         while self.saved_x.len() < tasks.len() {
             self.saved_x.push(Vec::new());
@@ -802,6 +895,24 @@ impl HostFrontier {
                 );
             }
 
+            // parameter gradients: sequential row order (bitwise
+            // invariant across thread counts), recomputing the row's
+            // tape inside the cell — the host analogue of the engine's
+            // lazy param-grad pass
+            if self.has_pgrads {
+                let pc = cell.pg_scratch_cols();
+                let pg_tmp = &mut self.pg_tmp[..pc];
+                for i in 0..m {
+                    cell.acc_param_grads(
+                        &x[i * xc..(i + 1) * xc],
+                        &sall[i * asc..(i + 1) * asc],
+                        &g_out[i * sc..(i + 1) * sc],
+                        &mut self.pgrads,
+                        pg_tmp,
+                    );
+                }
+            }
+
             // scatter-add per slot (shared children accumulate)
             for slot in 0..ar {
                 self.ids.clear();
@@ -858,15 +969,18 @@ pub fn run_host_frontier<C: HostCell>(
         states,
         grads,
         x_grads,
+        pgrads,
         traffic,
         padded_rows,
         has_grads,
+        has_pgrads,
         ..
     } = hf;
     HostRun {
         states,
         grads: has_grads.then_some(grads),
         x_grads: has_grads.then_some(x_grads),
+        param_grads: has_pgrads.then_some(pgrads),
         traffic_bytes: traffic.bytes(),
         traffic_ops: traffic.ops(),
         padded_rows,

@@ -85,13 +85,13 @@ pub fn run_forward(
                 eng.timers.add(Phase::Compute, t0.elapsed());
                 Some(outs[0].to_vec::<f32>()?)
             }
-            OpKind::Sigmoid | OpKind::Tanh => {
+            OpKind::Sigmoid | OpKind::Tanh | OpKind::OneMinus => {
                 let a = bufs[node.ins[0]].as_ref().unwrap();
                 let flat = b * node.cols;
-                let op = if matches!(node.kind, OpKind::Sigmoid) {
-                    "sigmoid"
-                } else {
-                    "tanh"
+                let op = match node.kind {
+                    OpKind::Sigmoid => "sigmoid",
+                    OpKind::Tanh => "tanh",
+                    _ => "oneminus",
                 };
                 let name = format!("op_{op}_n{flat}");
                 let exe = eng.rt.load(&name)?;

@@ -1,11 +1,13 @@
 //! `cavs` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   train      train a model (Tree-LSTM sentiment, LSTM LM, Tree-FC, GRU)
+//!   train      train a model (PJRT engine; host interpreter fallback)
 //!   bench      reproduce a paper table/figure (see DESIGN.md §4)
 //!   inspect    summarize the artifact manifest
 //!   analyze    run the §3.5 static analyses on a vertex function
+//!   cells      list registered cells with their program-derived metadata
 //!   eval       inference pass over a dataset
+//!   serve      online-inference demo (continuous dynamic batching)
 //!
 //! Offline-friendly hand-rolled argument parsing (no clap): flags are
 //! `--key value` pairs plus repeated `--set k=v` config overrides.
@@ -18,9 +20,10 @@ use cavs::bench::experiments::{self, Scale};
 use cavs::config::Config;
 use cavs::exec::Engine;
 use cavs::graph::Dataset;
-use cavs::models::{Cell, HeadKind, Model};
+use cavs::models::{CellSpec, HeadKind, Model};
 use cavs::runtime::Runtime;
-use cavs::train::{train_epochs, Optimizer};
+use cavs::train::{host, train_epochs, Optimizer};
+use cavs::vertex::registry;
 use cavs::{info, util};
 
 struct Args {
@@ -67,10 +70,13 @@ impl Args {
                 cfg.apply(key, val)?;
             }
         }
-        // first-class shorthand for the intra-task worker pool
+        // first-class shorthands
         if let Some(t) = self.get("threads") {
             cfg.apply("threads", t)
                 .context("--threads expects an integer >= 1")?;
+        }
+        if let Some(c) = self.get("cell") {
+            cfg.apply("cell", c).context("--cell expects a registered cell")?;
         }
         Ok(cfg)
     }
@@ -84,6 +90,7 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         "analyze" => cmd_analyze(&args),
+        "cells" => cmd_cells(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
@@ -102,22 +109,38 @@ fn print_help() {
         "cavs — vertex-centric dynamic-NN training system (paper reproduction)
 
 USAGE:
-  cavs train   [--config cfg.json] [--threads N] [--set k=v ...]
+  cavs train   [--config cfg.json] [--cell NAME] [--threads N] [--set k=v ...]
                [--save ckpt] [--load ckpt]
   cavs eval    [--config cfg.json] [--threads N] [--set k=v ...]
-  cavs serve   [--config cfg.json] [--threads N] [--set k=v ...]
-  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|loc|all
-               [--scale 1.0] [--full true] [--threads N]
-               [--tiny true]   (serve only: bounded CI smoke)
+  cavs serve   [--config cfg.json] [--cell NAME] [--threads N] [--set k=v ...]
+  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|loc|all
+               [--scale 1.0] [--full true] [--threads N] [--cell NAME]
+               [--tiny true]   (serve/train only: bounded CI smoke)
   cavs inspect [--set artifacts_dir=...]
-  cavs analyze [--set cell=treelstm] [--set h=256]
+  cavs analyze [--cell treelstm] [--set h=256]
+  cavs cells   [--set h=256]
+
+The cell is an **open API**: `vertex::Program` is the single source of
+  truth for F, and every cell — builtin or user-registered via
+  `vertex::registry::register_cell` — derives its arity, state width,
+  head slice, gate width and parameter shapes from its program
+  (DESIGN.md §8 walks through defining GRU this way). `cavs cells`
+  lists everything registered with the derived metadata. `gru` and
+  `cstreelstm` exist only as programs and still train (`cavs train
+  --cell gru`, host interpreter) and serve (`cavs serve --cell gru`).
+
+`cavs train` uses the PJRT engine when an artifact set is present; on a
+  clean checkout it falls back to host-only training through the Program
+  interpreter (synthetic sum-of-root-states objective, SGD), so every
+  registered cell trains end-to-end anywhere. `cavs bench --exp train
+  --cell gru --tiny true` is the CI smoke for that path.
 
 `cavs serve` runs the online-inference demo: n_samples synthetic
   concurrent requests with mixed tree/sequence structures flow through
   the MPSC request queue, are merged on the fly by the deadline/max-batch
   former (--set serve_max_batch=N, serve_deadline_ms=D,
   serve_queue_cap=C), and execute forward-only on the pooled engine
-  (host reference cell when no artifact set is present). Prints
+  (Program-interpreter host cell when no artifact set is present). Prints
   throughput + p50/p95/p99 latency + the batch-size distribution and
   writes results/BENCH_serve.json. `cavs bench --exp serve` sweeps
   offered load vs latency (closed- and open-loop); `--tiny true` is the
@@ -130,7 +153,7 @@ USAGE:
   A/B perf comparisons.
 
 `cavs bench` writes machine-readable results/BENCH_<exp>.json next to
-  the results/*.{txt,csv} tables; `cargo bench --bench micro` writes
+  the results/*.{{txt,csv}} tables; `cargo bench --bench micro` writes
   per-point stats to BENCH_micro.json (gitignored).
 
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
@@ -140,12 +163,14 @@ Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
     );
 }
 
-fn make_dataset(cfg: &Config) -> Dataset {
-    match (cfg.cell, cfg.head) {
-        (Cell::TreeFc, _) => {
+/// Pick a dataset matching the cell's structure (tree cells get tree
+/// data, arity-1 cells get chains) and the head kind.
+fn make_dataset(cfg: &Config, arity: usize) -> Dataset {
+    match (cfg.cell.as_str(), cfg.head) {
+        ("treefc", _) => {
             Dataset::treefc(cfg.seed, cfg.n_samples, cfg.vocab, cfg.tree_leaves)
         }
-        (Cell::TreeLstm, _) => {
+        _ if arity >= 2 => {
             Dataset::sst_like(cfg.seed, cfg.n_samples, cfg.vocab, cfg.n_classes)
         }
         (_, HeadKind::LmPerVertex) => {
@@ -155,28 +180,31 @@ fn make_dataset(cfg: &Config) -> Dataset {
     }
 }
 
-fn make_model(cfg: &Config) -> Model {
+fn make_model(cfg: &Config) -> Result<Model> {
     let head_vocab = match cfg.head {
         HeadKind::LmPerVertex => cfg.vocab,
         HeadKind::ClassifierAtRoot => cfg.n_classes,
         HeadKind::SumRootState => 0,
     };
-    Model::new(cfg.cell, cfg.h, cfg.vocab, cfg.head, head_vocab, cfg.seed)
+    Model::by_name(&cfg.cell, cfg.h, cfg.vocab, cfg.head, head_vocab, cfg.seed)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = args.config()?;
+    if !Runtime::have_artifacts(Path::new(&cfg.artifacts_dir)) {
+        return cmd_train_host(args, &cfg);
+    }
     let rt = Runtime::new(Path::new(&cfg.artifacts_dir))
         .context("loading artifacts (run `make artifacts` first)")?;
-    let data = make_dataset(&cfg);
-    let mut model = make_model(&cfg);
+    let mut model = make_model(&cfg)?;
+    let data = make_dataset(&cfg, model.cell.arity());
     if let Some(path) = args.get("load") {
         cavs::models::checkpoint::load(&mut model, Path::new(path))?;
         info!("loaded checkpoint {path}");
     }
     info!(
         "training {} h={} on {} samples ({} vertices), {} params",
-        cfg.cell.name(),
+        cfg.cell,
         cfg.h,
         data.len(),
         data.total_vertices(),
@@ -213,11 +241,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Artifact-free fallback: train the configured cell end-to-end through
+/// the host Program interpreter (any registered cell; synthetic
+/// sum-of-root-states objective, plain SGD).
+fn cmd_train_host(args: &Args, cfg: &Config) -> Result<()> {
+    if args.get("load").is_some() || args.get("save").is_some() {
+        bail!(
+            "--load/--save need the PJRT model store; the host interpreter \
+             path does not checkpoint (build artifacts first)"
+        );
+    }
+    let h = cfg.h.min(64);
+    let lr = cfg.lr.min(0.05);
+    if h != cfg.h || lr != cfg.lr {
+        info!(
+            "host interpreter path clamps h {} -> {h} and lr {} -> {lr} \
+             (interpretation is the correctness path, not the fast path)",
+            cfg.h, cfg.lr
+        );
+    }
+    let spec = CellSpec::lookup(&cfg.cell, h)?;
+    let data = make_dataset(cfg, spec.arity());
+    info!(
+        "no artifact set at {} — training {} h={h} host-only through the \
+         Program interpreter ({} samples, {} vertices, synthetic objective)",
+        cfg.artifacts_dir,
+        cfg.cell,
+        data.len(),
+        data.total_vertices()
+    );
+    host::train_host_epochs(
+        &spec,
+        &data,
+        cfg.batch_size,
+        lr,
+        cfg.epochs,
+        cfg.threads,
+        cfg.seed,
+        |log| {
+            println!(
+                "epoch {:3}  loss {:.4}  {:.2}s  ({} vertices)",
+                log.epoch, log.loss, log.seconds, log.n_vertices
+            );
+        },
+    )?;
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-    let data = make_dataset(&cfg);
-    let mut model = make_model(&cfg);
+    let mut model = make_model(&cfg)?;
+    let data = make_dataset(&cfg, model.cell.arity());
     let mut engine = Engine::new(&rt, cfg.engine_opts(false));
     let mut loss = 0.0f64;
     let mut ncorrect = 0.0f64;
@@ -241,8 +316,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// `cavs serve`: the online-inference demo. Serves `n_samples` synthetic
 /// concurrent requests (mixed trees + sequences) through the dynamic
 /// batch former onto a forward-only executor: the PJRT engine when an
-/// artifact set is present, the host reference cell otherwise — the
-/// pipeline (queue, former, merge, plan, metrics) is identical.
+/// artifact set is present, the Program-interpreter host cell otherwise —
+/// the pipeline (queue, former, merge, plan, metrics) is identical, and
+/// any registered cell serves.
 fn cmd_serve(args: &Args) -> Result<()> {
     use cavs::serve::loadgen::mixed_workload;
     use cavs::serve::{EngineExec, HostExec};
@@ -254,7 +330,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Runtime::have_artifacts(Path::new(&cfg.artifacts_dir));
     // the workload must fit the serving cell: arity-1 cells (lstm/gru)
     // get a chains-only request mix, tree cells the mixed one
-    let arity = if have_artifacts { cfg.cell.arity() } else { 2 };
+    let spec = CellSpec::lookup(&cfg.cell, cfg.h.min(64))?;
+    let arity = spec.arity();
     let graphs = mixed_workload(cfg.seed, 64.min(total), cfg.vocab, arity);
     let concurrency = (2 * sopts.max_batch).min(total);
     info!(
@@ -288,22 +365,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     if have_artifacts {
         let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
-        let model = make_model(&cfg);
+        let model = make_model(&cfg)?;
         info!(
             "artifact set found: serving {} h={} on the PJRT engine",
-            cfg.cell.name(),
-            cfg.h
+            cfg.cell, cfg.h
         );
         let exec = EngineExec::new(&rt, model, cfg.engine_opts(false));
         demo(exec, sopts, &graphs, total, concurrency)
     } else {
         info!(
-            "no artifact set at {} — serving with the host reference cell \
-             (identical pipeline; build artifacts for real kernels)",
-            cfg.artifacts_dir
+            "no artifact set at {} — serving {} through the host Program \
+             interpreter (identical pipeline; build artifacts for real kernels)",
+            cfg.artifacts_dir, cfg.cell
         );
-        let exec =
-            HostExec::tree_fc(cfg.h.min(64), 2, cfg.vocab, cfg.threads, cfg.seed);
+        let exec = HostExec::from_spec(&spec, cfg.vocab, cfg.threads, cfg.seed)?;
         demo(exec, sopts, &graphs, total, concurrency)
     }
 }
@@ -331,6 +406,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         // host-cell serving sweep: needs no artifact set (and therefore
         // no Runtime), so the CI smoke runs on clean checkouts
         let t = experiments::serve(scale, tiny)?;
+        println!("\n{}", t.render());
+        println!("(results also written to results/*.txt and results/*.csv)");
+        return Ok(());
+    }
+    if exp == "train" {
+        // host-interpreter training curve for any registered cell — the
+        // open-API smoke (`--cell gru --tiny true` in CI), artifact-free
+        let t = experiments::train_host(&cfg.cell, scale, tiny)?;
         println!("\n{}", t.render());
         println!("(results also written to results/*.txt and results/*.csv)");
         return Ok(());
@@ -373,9 +456,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     for (k, n) in kinds {
         println!("  {k:<16} {n}");
     }
-    for cell in ["lstm", "treelstm", "treefc", "gru"] {
+    for cell in registry::registered_cells() {
         for h in [32, 64, 256, 512, 1024] {
-            let b = m.buckets(cell, "cell_fwd", h);
+            let b = m.buckets(&cell, "cell_fwd", h);
             if !b.is_empty() {
                 println!("  {cell} h={h}: buckets {b:?}");
             }
@@ -386,10 +469,8 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
 fn cmd_analyze(args: &Args) -> Result<()> {
     let cfg = args.config()?;
-    let program = cfg
-        .cell
-        .program(cfg.h)
-        .ok_or_else(|| anyhow::anyhow!("no op program for {}", cfg.cell.name()))?;
+    let spec = CellSpec::lookup(&cfg.cell, cfg.h)?;
+    let program = spec.program();
     let a = program.analyze();
     println!("vertex function F = {} (h={})", program.name, cfg.h);
     println!("  ops                 : {}", program.nodes.len());
@@ -400,5 +481,43 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     for (i, n) in program.nodes.iter().enumerate() {
         println!("    [{i:2}] {:?} <- {:?} ({} cols)", n.kind, n.ins, n.cols);
     }
+    Ok(())
+}
+
+/// `cavs cells`: every registered cell with its program-derived metadata
+/// — the discoverability half of the open CellSpec API.
+fn cmd_cells(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let h = cfg.h;
+    println!("registered cells (metadata derived from vertex::Program at h={h}):\n");
+    println!(
+        "{:<12} {:>5} {:>10} {:>7} {:>9} {:>9} {:>5} {:>8}  params",
+        "name", "arity", "state_cols", "x_cols", "h_part", "gates", "ops", "unfused"
+    );
+    for name in registry::registered_cells() {
+        let spec = CellSpec::lookup(&name, h)?;
+        let (hoff, hlen) = spec.h_part();
+        let params: Vec<String> = spec
+            .param_shapes()
+            .iter()
+            .map(|p| format!("{}{:?}", p.name, p.shape))
+            .collect();
+        println!(
+            "{:<12} {:>5} {:>10} {:>7} {:>9} {:>9} {:>5} {:>8}  {}",
+            spec.name(),
+            spec.arity(),
+            spec.state_cols(),
+            spec.x_cols(),
+            format!("{hoff}+{hlen}"),
+            spec.gates_cols(),
+            spec.program().nodes.len(),
+            if spec.has_unfused_ops() { "yes" } else { "-" },
+            params.join(" ")
+        );
+    }
+    println!(
+        "\n(register more with vertex::registry::register_cell — programs are \
+         validated at registration; see DESIGN.md §8)"
+    );
     Ok(())
 }

@@ -1,14 +1,21 @@
 //! Model checkpointing: save/load full training state (cell params,
 //! embedding, head) to a self-describing binary format.
 //!
-//! Format (little-endian):
+//! Format v2 (little-endian):
 //! ```text
-//! magic "CAVSCKPT" | version u32 | n_sections u32
+//! magic "CAVSCKPT" | version u32
+//! header: cell_name str | h u32 | n_params u32
+//!   per param: name str | rank u32 | dims u64*
+//! n_sections u32
 //! per section: name_len u32 | name bytes | n_tensors u32
 //!   per tensor: name_len u32 | name | rank u32 | dims u64* | f32 data
 //! ```
+//! The header records the **cell identity** (registered name, hidden
+//! size, declared parameter shapes — all program-derived), so loading a
+//! checkpoint into a structurally different model fails with a clear
+//! error up front instead of silently misreading tensor buffers.
 //! No serde offline — the format is hand-rolled, versioned, and checked
-//! (magic, version, dim products) on load.
+//! (magic, version, header identity, dim products) on load.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -18,7 +25,7 @@ use anyhow::{bail, Context, Result};
 use super::{Model, ParamSet};
 
 const MAGIC: &[u8; 8] = b"CAVSCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -126,6 +133,17 @@ pub fn save(model: &Model, path: &Path) -> Result<()> {
     );
     w.write_all(MAGIC)?;
     write_u32(&mut w, VERSION)?;
+    // header: cell identity (name, h, declared parameter shapes)
+    write_str(&mut w, model.cell.name())?;
+    write_u32(&mut w, model.h as u32)?;
+    write_u32(&mut w, model.params.len() as u32)?;
+    for i in 0..model.params.len() {
+        write_str(&mut w, &model.params.names[i])?;
+        write_u32(&mut w, model.params.shapes[i].len() as u32)?;
+        for &d in &model.params.shapes[i] {
+            write_u64(&mut w, d as u64)?;
+        }
+    }
     let n_sections = 2 + usize::from(model.head.is_some());
     write_u32(&mut w, n_sections as u32)?;
     write_set(&mut w, "cell", &model.params)?;
@@ -157,7 +175,52 @@ pub fn load(model: &mut Model, path: &Path) -> Result<()> {
     }
     let version = read_u32(&mut r)?;
     if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
+        bail!(
+            "unsupported checkpoint version {version} (this build reads \
+             v{VERSION}; v1 checkpoints predate the CellSpec header — \
+             re-save them)"
+        );
+    }
+    // header: refuse mismatched cell identity before touching tensor data
+    let cell_name = read_str(&mut r)?;
+    if cell_name != model.cell.name() {
+        bail!(
+            "checkpoint was written for cell '{cell_name}', model is '{}'",
+            model.cell.name()
+        );
+    }
+    let h = read_u32(&mut r)? as usize;
+    if h != model.h {
+        bail!(
+            "checkpoint was written for {cell_name} h={h}, model has h={}",
+            model.h
+        );
+    }
+    let n_params = read_u32(&mut r)? as usize;
+    if n_params != model.params.len() {
+        bail!(
+            "checkpoint header lists {n_params} cell parameters, model \
+             declares {}",
+            model.params.len()
+        );
+    }
+    for i in 0..n_params {
+        let name = read_str(&mut r)?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 8 {
+            bail!("header parameter '{name}' has absurd rank {rank}");
+        }
+        let dims: Vec<usize> = (0..rank)
+            .map(|_| read_u64(&mut r).map(|v| v as usize))
+            .collect::<Result<_>>()?;
+        if name != model.params.names[i] || dims != model.params.shapes[i] {
+            bail!(
+                "checkpoint header parameter {i} is '{name}' {dims:?}, model \
+                 declares '{}' {:?}",
+                model.params.names[i],
+                model.params.shapes[i]
+            );
+        }
     }
     let n_sections = read_u32(&mut r)? as usize;
     for _ in 0..n_sections {
@@ -231,6 +294,46 @@ mod tests {
         let mut wrong_cell =
             Model::new(Cell::TreeFc, 8, 11, HeadKind::SumRootState, 0, 1);
         assert!(load(&mut wrong_cell, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn header_reports_cell_and_h_mismatch_clearly() {
+        // the v2 header catches identity mismatches up front with a
+        // message naming both sides — no silent buffer misreads
+        let m = Model::by_name("gru", 8, 11, HeadKind::LmPerVertex, 11, 1).unwrap();
+        let p = tmp("header.bin");
+        save(&m, &p).unwrap();
+
+        let mut wrong_cell =
+            Model::new(Cell::Lstm, 8, 11, HeadKind::LmPerVertex, 11, 1);
+        let e = load(&mut wrong_cell, &p).unwrap_err().to_string();
+        assert!(e.contains("'gru'") && e.contains("'lstm'"), "{e}");
+
+        let mut wrong_h =
+            Model::by_name("gru", 16, 11, HeadKind::LmPerVertex, 11, 1).unwrap();
+        let e = load(&mut wrong_h, &p).unwrap_err().to_string();
+        assert!(e.contains("h=8") && e.contains("h=16"), "{e}");
+
+        // same name + h loads fine (round trip for a program-only cell)
+        let mut ok = Model::by_name("gru", 8, 11, HeadKind::LmPerVertex, 11, 9).unwrap();
+        assert_ne!(m.params.host[0], ok.params.host[0]);
+        load(&mut ok, &p).unwrap();
+        assert_eq!(m.params.host, ok.params.host);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_old_version_with_guidance() {
+        // hand-craft a v1-looking file: magic + version 1
+        let p = tmp("v1.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let mut m = Model::new(Cell::Lstm, 8, 11, HeadKind::LmPerVertex, 11, 1);
+        let e = load(&mut m, &p).unwrap_err().to_string();
+        assert!(e.contains("version 1"), "{e}");
         std::fs::remove_file(&p).ok();
     }
 

@@ -10,16 +10,22 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
-use crate::vertex::{programs, Program};
+use crate::vertex::{ParamSpec, Program};
 
-/// The cells shipped with the repo (paper §5: Fixed/Var-LSTM, Tree-FC,
-/// Tree-LSTM; GRU as the §2.1 extension).
+pub use crate::vertex::registry::CellSpec;
+
+/// Thin alias for the three artifact-backed builtin cell names (paper §5:
+/// Fixed/Var-LSTM, Tree-FC, Tree-LSTM). Everything a cell *is* — arity,
+/// state width, head slice, gate width, parameter shapes — now lives on
+/// [`CellSpec`], derived from the cell's `vertex::Program`; this enum
+/// only names the builtins for tests and call sites that want an
+/// infallible spelling. Program-only cells (`gru`, `cstreelstm`, user
+/// registrations) are reached through [`CellSpec::lookup`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Cell {
     Lstm,
     TreeLstm,
     TreeFc,
-    Gru,
 }
 
 impl Cell {
@@ -28,7 +34,6 @@ impl Cell {
             Cell::Lstm => "lstm",
             Cell::TreeLstm => "treelstm",
             Cell::TreeFc => "treefc",
-            Cell::Gru => "gru",
         }
     }
 
@@ -37,88 +42,18 @@ impl Cell {
             "lstm" => Cell::Lstm,
             "treelstm" => Cell::TreeLstm,
             "treefc" => Cell::TreeFc,
-            "gru" => Cell::Gru,
-            _ => bail!("unknown cell '{s}'"),
+            _ => bail!("'{s}' is not a builtin cell (use CellSpec::lookup)"),
         })
     }
 
-    /// Child slots the cell consumes (gather arity).
-    pub fn arity(self) -> usize {
-        match self {
-            Cell::Lstm | Cell::Gru => 1,
-            Cell::TreeLstm | Cell::TreeFc => 2,
-        }
+    /// Instantiate the builtin's [`CellSpec`] at hidden size `h`.
+    pub fn spec(self, h: usize) -> CellSpec {
+        CellSpec::lookup(self.name(), h).expect("builtin cell is registered")
     }
 
-    /// Columns of the scattered state.
-    pub fn state_cols(self, h: usize) -> usize {
-        match self {
-            Cell::Lstm | Cell::TreeLstm => 2 * h,
-            Cell::TreeFc | Cell::Gru => h,
-        }
-    }
-
-    /// Column offset/width of the "h" part of the state that heads read.
-    pub fn h_part(self, h: usize) -> (usize, usize) {
-        match self {
-            Cell::Lstm | Cell::TreeLstm => (h, h),
-            Cell::TreeFc | Cell::Gru => (0, h),
-        }
-    }
-
-    /// Gate-preactivation columns emitted by bwd_data (lazy batching).
-    pub fn gates_cols(self, h: usize) -> usize {
-        match self {
-            Cell::Lstm => 4 * h,
-            Cell::TreeLstm => 5 * h,
-            Cell::TreeFc => h,
-            Cell::Gru => 3 * h,
-        }
-    }
-
-    /// Parameter (name, shape) list — must mirror aot.py's argument order.
-    pub fn param_shapes(self, h: usize) -> Vec<(&'static str, Vec<usize>)> {
-        match self {
-            Cell::Lstm => vec![
-                ("W", vec![h, 4 * h]),
-                ("U", vec![h, 4 * h]),
-                ("b", vec![4 * h]),
-            ],
-            Cell::TreeLstm => vec![
-                ("Wiou", vec![h, 3 * h]),
-                ("Wf", vec![h, h]),
-                ("Uiou", vec![h, 3 * h]),
-                ("Uf", vec![h, h]),
-                ("biou", vec![3 * h]),
-                ("bf", vec![h]),
-            ],
-            Cell::TreeFc => vec![
-                ("Wx", vec![h, h]),
-                ("Wl", vec![h, h]),
-                ("Wr", vec![h, h]),
-                ("b", vec![h]),
-            ],
-            Cell::Gru => vec![
-                ("W", vec![h, 3 * h]),
-                ("U", vec![h, 3 * h]),
-                ("b", vec![3 * h]),
-            ],
-        }
-    }
-
-    /// The op-graph of F (used by the §3.5 analyses and the unfused path).
-    pub fn program(self, h: usize) -> Option<Program> {
-        match self {
-            Cell::Lstm => Some(programs::lstm_program(h)),
-            Cell::TreeLstm => Some(programs::treelstm_program(h)),
-            Cell::TreeFc => Some(programs::treefc_program(h)),
-            Cell::Gru => None, // fused-only extension
-        }
-    }
-
-    /// Whether aot.py emits bwd_data/param_grad artifacts for this cell.
-    pub fn has_lazy_bwd(self) -> bool {
-        !matches!(self, Cell::Gru)
+    /// The op-graph of F (the authoritative definition; see vertex).
+    pub fn program(self, h: usize) -> Program {
+        self.spec(h).program().clone()
     }
 }
 
@@ -134,6 +69,13 @@ pub struct ParamSet {
 }
 
 impl ParamSet {
+    /// Zero-initialized store for a program's declared parameters.
+    pub fn from_specs(specs: &[ParamSpec]) -> ParamSet {
+        let pairs: Vec<(&str, Vec<usize>)> =
+            specs.iter().map(|p| (p.name.as_str(), p.shape.clone())).collect();
+        ParamSet::zeros(&pairs)
+    }
+
     pub fn zeros(shapes: &[(&str, Vec<usize>)]) -> ParamSet {
         let names = shapes.iter().map(|(n, _)| n.to_string()).collect();
         let shp: Vec<Vec<usize>> = shapes.iter().map(|(_, s)| s.clone()).collect();
@@ -324,9 +266,10 @@ pub enum HeadKind {
     SumRootState,
 }
 
-/// A complete model: cell + parameters + embedding + head.
+/// A complete model: cell spec + parameters + embedding + head.
 pub struct Model {
-    pub cell: Cell,
+    /// The cell's program-derived spec — every layer dispatches on this.
+    pub cell: CellSpec,
     pub h: usize,
     pub params: ParamSet,
     pub embedding: Embedding,
@@ -338,6 +281,9 @@ pub struct Model {
 }
 
 impl Model {
+    /// Builtin-cell constructor (infallible); any registered cell —
+    /// builtin or user program — goes through [`Model::by_name`] /
+    /// [`Model::from_spec`].
     pub fn new(
         cell: Cell,
         h: usize,
@@ -346,9 +292,41 @@ impl Model {
         head_vocab: usize,
         seed: u64,
     ) -> Model {
+        Model::from_spec(cell.spec(h), vocab, head_kind, head_vocab, seed)
+    }
+
+    /// Look the cell up in the registry and build a model around it.
+    pub fn by_name(
+        name: &str,
+        h: usize,
+        vocab: usize,
+        head_kind: HeadKind,
+        head_vocab: usize,
+        seed: u64,
+    ) -> Result<Model> {
+        Ok(Model::from_spec(
+            CellSpec::lookup(name, h)?,
+            vocab,
+            head_kind,
+            head_vocab,
+            seed,
+        ))
+    }
+
+    /// Build a model around any instantiated [`CellSpec`]: the parameter
+    /// store is shaped by the program's declared [`ParamSpec`]s, the
+    /// embedding by its pull width.
+    pub fn from_spec(
+        spec: CellSpec,
+        vocab: usize,
+        head_kind: HeadKind,
+        head_vocab: usize,
+        seed: u64,
+    ) -> Model {
+        let h = spec.h();
         let mut rng = Rng::new(seed);
-        let params = ParamSet::zeros(&cell.param_shapes(h)).init(&mut rng, 0.08);
-        let embedding = Embedding::new(&mut rng, vocab, h, 0.5);
+        let params = ParamSet::from_specs(spec.param_shapes()).init(&mut rng, 0.08);
+        let embedding = Embedding::new(&mut rng, vocab, spec.x_cols(), 0.5);
         let (head, head_tag) = match head_kind {
             HeadKind::SumRootState => (None, ""),
             HeadKind::LmPerVertex => (
@@ -373,7 +351,7 @@ impl Model {
             ),
         };
         Model {
-            cell,
+            cell: spec,
             h,
             params,
             embedding,
@@ -412,17 +390,32 @@ mod tests {
 
     #[test]
     fn cell_descriptor_consistency() {
-        for c in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc, Cell::Gru] {
+        for c in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc] {
             let h = 16;
             assert_eq!(Cell::from_name(c.name()).unwrap(), c);
-            let (off, len) = c.h_part(h);
-            assert!(off + len <= c.state_cols(h));
-            if let Some(p) = c.program(h) {
-                assert_eq!(p.state_cols, c.state_cols(h));
-                assert_eq!(p.n_children, c.arity());
-            }
+            let spec = c.spec(h);
+            let (off, len) = spec.h_part();
+            assert!(off + len <= spec.state_cols());
+            assert_eq!(spec.program().state_cols, spec.state_cols());
+            assert_eq!(spec.program().n_children, spec.arity());
         }
         assert!(Cell::from_name("bogus").is_err());
+        assert!(Cell::from_name("gru").is_err(), "gru is a program-only cell");
+    }
+
+    #[test]
+    fn models_build_for_program_only_cells() {
+        // gru / cstreelstm never touch models code: the store is shaped
+        // entirely by the program's declared parameters
+        let m = Model::by_name("gru", 8, 20, HeadKind::LmPerVertex, 20, 3).unwrap();
+        assert_eq!(m.cell.name(), "gru");
+        assert_eq!(m.params.names, vec!["W", "U", "b"]);
+        assert_eq!(m.params.n_elements(), 8 * 24 * 2 + 24);
+        let m = Model::by_name("cstreelstm", 4, 10, HeadKind::ClassifierAtRoot, 5, 3)
+            .unwrap();
+        assert_eq!(m.cell.arity(), 2);
+        assert_eq!(m.cell.state_cols(), 8);
+        assert!(Model::by_name("nope", 4, 10, HeadKind::SumRootState, 0, 1).is_err());
     }
 
     #[test]

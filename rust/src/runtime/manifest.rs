@@ -148,6 +148,21 @@ impl Manifest {
                     format!("manifest bucket list for ({cell}, {kind}, h={h})")
                 })?;
             }
+            // The Program is the single source of truth for F: validate
+            // the registered program of every cell this manifest ships
+            // forward artifacts for, at the hidden sizes it ships them
+            // for — a malformed cell definition fails here with context,
+            // not deep inside a minibatch.
+            if kind == "cell_fwd" && crate::vertex::registry::is_registered(cell)
+            {
+                crate::vertex::registry::CellSpec::lookup(cell, *h)
+                    .with_context(|| {
+                        format!(
+                            "manifest ships cell_fwd artifacts for '{cell}' \
+                             h={h}, but its program failed validation"
+                        )
+                    })?;
+            }
         }
         Ok(Manifest {
             dir: dir.to_path_buf(),

@@ -156,6 +156,14 @@ pub fn frontier_levels(batch: &GraphBatch) -> Vec<Vec<u32>> {
     levels
 }
 
+/// The power-of-two bucket grid the artifact-free host executors schedule
+/// against (serve's `HostExec` and the host training driver) — the same
+/// grid the default AOT artifact set compiles, so host plans chunk
+/// identically to engine plans.
+pub fn host_buckets() -> Vec<usize> {
+    (0..=8).map(|i| 1usize << i).collect()
+}
+
 /// Smallest compiled bucket covering `m` rows: power-of-two rounding
 /// capped at `buckets.last()`, then the first artifact bucket at least
 /// that large. Shared by the offline scheduler and the serve planner so

@@ -22,9 +22,10 @@ use crate::exec::parallel::{HostCell, HostFrontier, HostTreeFc};
 use crate::exec::pool::{Sharder, WorkerPool};
 use crate::exec::{Engine, EngineOpts};
 use crate::graph::GraphBatch;
-use crate::models::Model;
+use crate::models::{CellSpec, Model};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
+use crate::vertex::interp::ProgramCell;
 
 use super::batcher::{BatchFormer, BatchPlan, BatchPolicy};
 use super::metrics::ServeMetrics;
@@ -75,6 +76,25 @@ impl HostExec<HostTreeFc> {
     }
 }
 
+impl HostExec<ProgramCell> {
+    /// Serve **any registered cell** through the Program interpreter:
+    /// random parameters + a random `[vocab, x_cols]` pull table. This is
+    /// how program-only cells (`gru`, `cstreelstm`, user registrations)
+    /// are served with zero serve-layer code.
+    pub fn from_spec(
+        spec: &CellSpec,
+        vocab: usize,
+        threads: usize,
+        seed: u64,
+    ) -> Result<HostExec<ProgramCell>> {
+        let mut rng = Rng::new(seed);
+        let cell = spec.random_cell(&mut rng, 0.08)?;
+        let xtable: Vec<f32> =
+            (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
+        Ok(HostExec::with_cell(cell, xtable, threads))
+    }
+}
+
 impl<C: HostCell> HostExec<C> {
     /// Wrap an arbitrary host cell; `xtable` is the dense
     /// `[vocab, x_cols]` pull source.
@@ -84,7 +104,7 @@ impl<C: HostCell> HostExec<C> {
             cell,
             xtable,
             // power-of-two buckets up to 256, like the AOT artifact set
-            buckets: (0..=8).map(|i| 1usize << i).collect(),
+            buckets: crate::scheduler::host_buckets(),
             frontier: HostFrontier::new(),
             plan: BatchPlan::new(),
             pool: WorkerPool::new(threads),
@@ -282,6 +302,32 @@ mod tests {
         assert_eq!(server.metrics.n_responses(), n);
         let report = server.metrics.report(1.0);
         assert_eq!(report.n_batches, 4, "13 requests in max-4 batches");
+    }
+
+    #[test]
+    fn program_cells_serve_via_from_spec() {
+        // program-only cells flow through the serving stack untouched:
+        // spec -> ProgramCell -> HostExec, no serve-layer edits
+        for (name, arity) in [("gru", 1usize), ("cstreelstm", 2), ("treelstm", 2)] {
+            let spec = CellSpec::lookup(name, 6).unwrap();
+            let exec = HostExec::from_spec(&spec, 20, 2, 7).unwrap();
+            let mut server = Server::new(exec, policy(4));
+            assert_eq!(server.exec.arity(), arity);
+            let q = RequestQueue::bounded(64);
+            let graphs = crate::serve::loadgen::mixed_workload(3, 9, 20, arity);
+            for (id, g) in graphs.into_iter().enumerate() {
+                q.try_enqueue(Request::new(id as u64, g).unwrap()).unwrap();
+            }
+            q.close();
+            let mut n = 0usize;
+            server
+                .run(&q, |r| {
+                    assert!(r.prediction.score.is_finite(), "{name}");
+                    n += 1;
+                })
+                .unwrap();
+            assert_eq!(n, 9, "{name}: every request answered");
+        }
     }
 
     #[test]

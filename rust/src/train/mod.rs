@@ -1,6 +1,8 @@
 //! Training: host-side optimizers (SGD/momentum, Adagrad, Adam), gradient
 //! clipping, and the epoch driver that ties scheduler + engine + optimizer
-//! together.
+//! together. The artifact-free interpreter path lives in [`host`].
+
+pub mod host;
 
 use anyhow::Result;
 

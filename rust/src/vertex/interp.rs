@@ -1,0 +1,590 @@
+//! The host `Program` interpreter: any validated vertex function runs —
+//! forward *and* backward — with no per-cell code and no artifact set.
+//!
+//! [`ProgramCell`] wraps a [`Program`] plus host parameter tensors and
+//! implements [`HostCell`](crate::exec::parallel::HostCell), so every
+//! user-registered cell flows through [`HostFrontier`]
+//! (crate::exec::parallel::HostFrontier), `run_host_frontier`, the host
+//! training driver (`train::host`) and serve's `HostExec` exactly like
+//! the hand-written reference cells.
+//!
+//! * **Forward** evaluates the op graph row-by-row over a preplanned
+//!   *tape* (one scratch region per node, offsets fixed at construction)
+//!   — zero allocation per row, and **bitwise identical** to the
+//!   hand-written `HostLstm`/`HostTreeFc` cells: both sides perform the
+//!   same f32 operations in the same order (property-tested).
+//! * **Backward** is the §3.4 structural auto-differentiation: the tape
+//!   is re-evaluated, then adjoints flow through the graph in reverse
+//!   with per-op VJPs (MatMul, AddBias, Add, Mul, Sigmoid, Tanh,
+//!   OneMinus, SliceCols, ConcatCols) and the message-passing dualities
+//!   gather↔scatter-add and pull↔push: the scatter adjoint *seeds* the
+//!   tape from `g_out`, gather adjoints leave through `gs`, and the pull
+//!   adjoint leaves through `gx` (accumulated into the embedding table by
+//!   the frontier executor).
+//! * **Parameter gradients** accumulate per row through
+//!   `acc_param_grads` — called sequentially by the frontier so the
+//!   result is bitwise identical for every thread count.
+
+use anyhow::{bail, Result};
+
+use super::{OpKind, Program, ProgramMeta};
+use crate::exec::parallel::HostCell;
+use crate::util::rng::Rng;
+
+/// The logistic function shared by the interpreter and the hand-written
+/// host cells (one definition so equivalence is bitwise by construction).
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// A validated program bound to host parameter tensors: a generic
+/// [`HostCell`] that executes F by interpretation.
+pub struct ProgramCell {
+    program: Program,
+    meta: ProgramMeta,
+    /// host parameter tensors, `program.params` order (row-major)
+    params: Vec<Vec<f32>>,
+    /// per-node tape offsets (prefix sums of node widths)
+    off: Vec<usize>,
+    /// total tape width per row
+    tape_cols: usize,
+    /// the node whose value scatter publishes (the state source)
+    scatter_src: usize,
+}
+
+impl ProgramCell {
+    /// Bind `program` to parameter tensors (validated against the
+    /// declared [`ParamSpec`](super::ParamSpec) shapes).
+    pub fn new(program: Program, params: Vec<Vec<f32>>) -> Result<ProgramCell> {
+        let meta = program.validate()?;
+        if params.len() != program.params.len() {
+            bail!(
+                "program '{}' declares {} parameters, got {}",
+                program.name,
+                program.params.len(),
+                params.len()
+            );
+        }
+        for (i, spec) in program.params.iter().enumerate() {
+            if params[i].len() != spec.elements() {
+                bail!(
+                    "program '{}' parameter '{}' needs {} elements \
+                     (shape {:?}), got {}",
+                    program.name,
+                    spec.name,
+                    spec.elements(),
+                    spec.shape,
+                    params[i].len()
+                );
+            }
+        }
+        let mut off = Vec::with_capacity(program.nodes.len());
+        let mut tape_cols = 0usize;
+        for n in &program.nodes {
+            off.push(tape_cols);
+            tape_cols += n.cols;
+        }
+        let scatter_src = program
+            .nodes
+            .iter()
+            .find(|n| matches!(n.kind, OpKind::Scatter))
+            .map(|n| n.ins[0])
+            .expect("validated program has a scatter");
+        Ok(ProgramCell { program, meta, params, off, tape_cols, scatter_src })
+    }
+
+    /// Bind `program` to Gaussian-initialized parameters (the same init
+    /// the `ParamSet` model store uses).
+    pub fn random(program: Program, rng: &mut Rng, scale: f32) -> Result<ProgramCell> {
+        let params = program
+            .params
+            .iter()
+            .map(|p| (0..p.elements()).map(|_| rng.normal_f32(scale)).collect())
+            .collect();
+        ProgramCell::new(program, params)
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn meta(&self) -> &ProgramMeta {
+        &self.meta
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Mutable access for optimizers (host training).
+    pub fn params_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.params
+    }
+
+    /// Evaluate every node for one row into `tape` (length `tape_cols`).
+    fn eval_tape(&self, x: &[f32], s: &[f32], tape: &mut [f32]) {
+        let sc = self.meta.state_cols;
+        for (i, node) in self.program.nodes.iter().enumerate() {
+            if matches!(node.kind, OpKind::Scatter | OpKind::Push) {
+                continue; // pure outputs: no tape value of their own
+            }
+            let (lo, hi) = tape.split_at_mut(self.off[i]);
+            let out = &mut hi[..node.cols];
+            match &node.kind {
+                OpKind::Pull => out.copy_from_slice(x),
+                OpKind::Gather { slot } => {
+                    out.copy_from_slice(&s[slot * sc..(slot + 1) * sc])
+                }
+                OpKind::MatMul { param } => {
+                    let k = self.program.nodes[node.ins[0]].cols;
+                    let n = node.cols;
+                    let a = &lo[self.off[node.ins[0]]..][..k];
+                    let p = &self.params[*param];
+                    // identical loop shape (k-outer, j-inner, skip-zero)
+                    // to the hand-written host cells: bitwise equal sums
+                    out.fill(0.0);
+                    for (kk, &v) in a.iter().enumerate() {
+                        if v != 0.0 {
+                            let prow = &p[kk * n..(kk + 1) * n];
+                            for (o, &w) in out.iter_mut().zip(prow) {
+                                *o += v * w;
+                            }
+                        }
+                    }
+                }
+                OpKind::AddBias { param } => {
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    let b = &self.params[*param];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = a[j] + b[j];
+                    }
+                }
+                OpKind::Add => {
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    let b = &lo[self.off[node.ins[1]]..][..node.cols];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = a[j] + b[j];
+                    }
+                }
+                OpKind::Mul => {
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    let b = &lo[self.off[node.ins[1]]..][..node.cols];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = a[j] * b[j];
+                    }
+                }
+                OpKind::Sigmoid => {
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = sigmoid(a[j]);
+                    }
+                }
+                OpKind::Tanh => {
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = a[j].tanh();
+                    }
+                }
+                OpKind::OneMinus => {
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        *o = 1.0 - a[j];
+                    }
+                }
+                OpKind::SliceCols { start, len } => {
+                    let a = &lo[self.off[node.ins[0]]..];
+                    out.copy_from_slice(&a[*start..start + len]);
+                }
+                OpKind::ConcatCols => {
+                    let mut col = 0usize;
+                    for &src in &node.ins {
+                        let w = self.program.nodes[src].cols;
+                        out[col..col + w]
+                            .copy_from_slice(&lo[self.off[src]..][..w]);
+                        col += w;
+                    }
+                }
+                OpKind::Scatter | OpKind::Push => unreachable!(),
+            }
+        }
+    }
+
+    /// Re-evaluate the tape and run the reverse adjoint sweep: seeds the
+    /// scatter source with `g_out`, accumulates `gx` (pull adjoint) and
+    /// the slot-concatenated `gs` (gather adjoints). `gx`/`gs` must
+    /// arrive zeroed (the [`HostCell`] contract).
+    fn backprop(
+        &self,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [f32],
+        tape: &mut [f32],
+        adj: &mut [f32],
+    ) {
+        let sc = self.meta.state_cols;
+        self.eval_tape(x, s, tape);
+        adj.fill(0.0);
+        {
+            let seed = &mut adj[self.off[self.scatter_src]..][..sc];
+            for (a, &g) in seed.iter_mut().zip(g_out) {
+                *a += g;
+            }
+        }
+        for (i, node) in self.program.nodes.iter().enumerate().rev() {
+            match &node.kind {
+                OpKind::Scatter | OpKind::Push => {} // seed / external sink
+                OpKind::Pull => {
+                    let g = &adj[self.off[i]..][..node.cols];
+                    for (d, &v) in gx.iter_mut().zip(g) {
+                        *d += v;
+                    }
+                }
+                OpKind::Gather { slot } => {
+                    let g = &adj[self.off[i]..][..node.cols];
+                    let dst = &mut gs[slot * sc..(slot + 1) * sc];
+                    for (d, &v) in dst.iter_mut().zip(g) {
+                        *d += v;
+                    }
+                }
+                OpKind::MatMul { param } => {
+                    let k = self.program.nodes[node.ins[0]].cols;
+                    let n = node.cols;
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let g = &ahi[..n];
+                    let p = &self.params[*param];
+                    let din = &mut alo[self.off[node.ins[0]]..][..k];
+                    for (kk, d) in din.iter_mut().enumerate() {
+                        let prow = &p[kk * n..(kk + 1) * n];
+                        let mut acc = 0.0f32;
+                        for (j, &w) in prow.iter().enumerate() {
+                            acc += g[j] * w;
+                        }
+                        *d += acc;
+                    }
+                }
+                OpKind::AddBias { .. } => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let g = &ahi[..node.cols];
+                    let din = &mut alo[self.off[node.ins[0]]..][..node.cols];
+                    for (d, &v) in din.iter_mut().zip(g) {
+                        *d += v;
+                    }
+                }
+                OpKind::Add => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let cols = node.cols;
+                    // index loops: correct even if both inputs alias
+                    for &src in &node.ins {
+                        let o = self.off[src];
+                        for j in 0..cols {
+                            alo[o + j] += ahi[j];
+                        }
+                    }
+                }
+                OpKind::Mul => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let cols = node.cols;
+                    let (ia, ib) = (node.ins[0], node.ins[1]);
+                    let (oa, ob) = (self.off[ia], self.off[ib]);
+                    for j in 0..cols {
+                        let g = ahi[j];
+                        let va = tape[oa + j];
+                        let vb = tape[ob + j];
+                        alo[oa + j] += g * vb;
+                        alo[ob + j] += g * va;
+                    }
+                }
+                OpKind::Sigmoid => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let o_in = self.off[node.ins[0]];
+                    for j in 0..node.cols {
+                        let y = tape[self.off[i] + j];
+                        alo[o_in + j] += ahi[j] * (y * (1.0 - y));
+                    }
+                }
+                OpKind::Tanh => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let o_in = self.off[node.ins[0]];
+                    for j in 0..node.cols {
+                        let y = tape[self.off[i] + j];
+                        alo[o_in + j] += ahi[j] * (1.0 - y * y);
+                    }
+                }
+                OpKind::OneMinus => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let o_in = self.off[node.ins[0]];
+                    for j in 0..node.cols {
+                        alo[o_in + j] -= ahi[j];
+                    }
+                }
+                OpKind::SliceCols { start, .. } => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let o_in = self.off[node.ins[0]] + start;
+                    for j in 0..node.cols {
+                        alo[o_in + j] += ahi[j];
+                    }
+                }
+                OpKind::ConcatCols => {
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let mut col = 0usize;
+                    for &src in &node.ins {
+                        let w = self.program.nodes[src].cols;
+                        let o = self.off[src];
+                        for j in 0..w {
+                            alo[o + j] += ahi[col + j];
+                        }
+                        col += w;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl HostCell for ProgramCell {
+    fn arity(&self) -> usize {
+        self.meta.arity
+    }
+
+    fn x_cols(&self) -> usize {
+        self.meta.x_cols
+    }
+
+    fn state_cols(&self) -> usize {
+        self.meta.state_cols
+    }
+
+    fn fwd_scratch_cols(&self) -> usize {
+        self.tape_cols
+    }
+
+    fn bwd_scratch_cols(&self) -> usize {
+        2 * self.tape_cols
+    }
+
+    fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], tmp: &mut [f32]) {
+        let tape = &mut tmp[..self.tape_cols];
+        self.eval_tape(x, s, tape);
+        out.copy_from_slice(
+            &tape[self.off[self.scatter_src]..][..self.meta.state_cols],
+        );
+    }
+
+    fn backward(
+        &self,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [f32],
+        tmp: &mut [f32],
+    ) {
+        let (tape, adj) = tmp.split_at_mut(self.tape_cols);
+        self.backprop(x, s, g_out, gx, gs, tape, &mut adj[..self.tape_cols]);
+    }
+
+    fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn param_len(&self, i: usize) -> usize {
+        self.params[i].len()
+    }
+
+    fn pg_scratch_cols(&self) -> usize {
+        2 * self.tape_cols + self.meta.x_cols + self.meta.arity * self.meta.state_cols
+    }
+
+    fn acc_param_grads(
+        &self,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        pg: &mut [Vec<f32>],
+        tmp: &mut [f32],
+    ) {
+        let (tape, rest) = tmp.split_at_mut(self.tape_cols);
+        let (adj, rest) = rest.split_at_mut(self.tape_cols);
+        let (gx, gs) = rest.split_at_mut(self.meta.x_cols);
+        let gs = &mut gs[..self.meta.arity * self.meta.state_cols];
+        gx.fill(0.0);
+        gs.fill(0.0);
+        self.backprop(x, s, g_out, gx, gs, tape, adj);
+        for (i, node) in self.program.nodes.iter().enumerate() {
+            match &node.kind {
+                OpKind::MatMul { param } => {
+                    let k = self.program.nodes[node.ins[0]].cols;
+                    let n = node.cols;
+                    let a = &tape[self.off[node.ins[0]]..][..k];
+                    let g = &adj[self.off[i]..][..n];
+                    let dst = &mut pg[*param];
+                    for (kk, &v) in a.iter().enumerate() {
+                        if v != 0.0 {
+                            let drow = &mut dst[kk * n..(kk + 1) * n];
+                            for (d, &gj) in drow.iter_mut().zip(g) {
+                                *d += v * gj;
+                            }
+                        }
+                    }
+                }
+                OpKind::AddBias { param } => {
+                    let g = &adj[self.off[i]..][..node.cols];
+                    let dst = &mut pg[*param];
+                    for (d, &gj) in dst.iter_mut().zip(g) {
+                        *d += gj;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::programs;
+    use super::*;
+
+    fn cell(program: Program, seed: u64) -> ProgramCell {
+        let mut rng = Rng::new(seed);
+        ProgramCell::random(program, &mut rng, 0.2).unwrap()
+    }
+
+    #[test]
+    fn rejects_mismatched_params() {
+        let p = programs::treefc_program(4);
+        assert!(ProgramCell::new(p.clone(), vec![]).is_err(), "missing params");
+        let mut params: Vec<Vec<f32>> =
+            p.params.iter().map(|s| vec![0.0; s.elements()]).collect();
+        params[0].pop();
+        assert!(ProgramCell::new(p, params).is_err(), "wrong element count");
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_stateful() {
+        let h = 6;
+        for program in [
+            programs::lstm_program(h),
+            programs::gru_program(h),
+            programs::cstreelstm_program(h),
+        ] {
+            let c = cell(program, 3);
+            let mut rng = Rng::new(9);
+            let x: Vec<f32> = (0..c.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
+            let sc = c.state_cols() * c.arity();
+            let s0 = vec![0.0f32; sc];
+            let mut tmp = vec![0.0f32; c.fwd_scratch_cols()];
+            let mut out1 = vec![0.0f32; c.state_cols()];
+            c.forward(&x, &s0, &mut out1, &mut tmp);
+            let mut out1b = vec![0.0f32; c.state_cols()];
+            c.forward(&x, &s0, &mut out1b, &mut tmp);
+            assert_eq!(out1, out1b, "{}: deterministic", c.program().name);
+            assert!(out1.iter().all(|v| v.is_finite()));
+            // feed the state back in (chains: slot 0)
+            let mut s1 = vec![0.0f32; sc];
+            s1[..c.state_cols()].copy_from_slice(&out1);
+            let mut out2 = vec![0.0f32; c.state_cols()];
+            c.forward(&x, &s1, &mut out2, &mut tmp);
+            assert_ne!(out1, out2, "{}: state must matter", c.program().name);
+        }
+    }
+
+    #[test]
+    fn one_minus_forward_and_backward() {
+        // a minimal program exercising OneMinus end to end:
+        // state' = (1 - sigmoid(x + s)) — d/ds = -σ'(x+s)
+        let h = 3;
+        let mut p = Program::new("mini", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let s = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let a = p.node(OpKind::Add, vec![x, s], h);
+        let sg = p.node(OpKind::Sigmoid, vec![a], h);
+        let om = p.node(OpKind::OneMinus, vec![sg], h);
+        p.node(OpKind::Scatter, vec![om], h);
+        p.node(OpKind::Push, vec![om], h);
+        let c = ProgramCell::new(p, vec![]).unwrap();
+        let xv = [0.3f32, -0.7, 1.1];
+        let sv = [0.1f32, 0.2, -0.4];
+        let mut out = [0.0f32; 3];
+        let mut tmp = vec![0.0f32; c.bwd_scratch_cols()];
+        c.forward(&xv, &sv, &mut out, &mut tmp);
+        for j in 0..3 {
+            let want = 1.0 - sigmoid(xv[j] + sv[j]);
+            assert!((out[j] - want).abs() < 1e-6);
+        }
+        let g = [1.0f32, 1.0, 1.0];
+        let mut gx = [0.0f32; 3];
+        let mut gs = [0.0f32; 3];
+        c.backward(&xv, &sv, &g, &mut gx, &mut gs, &mut tmp);
+        for j in 0..3 {
+            let y = sigmoid(xv[j] + sv[j]);
+            let want = -(y * (1.0 - y));
+            assert!((gx[j] - want).abs() < 1e-5, "gx[{j}] {} vs {want}", gx[j]);
+            assert_eq!(gx[j], gs[j], "x and s adjoints are symmetric here");
+        }
+    }
+
+    #[test]
+    fn shared_input_adjoints_accumulate() {
+        // y = x * x (same node twice into Mul): dy/dx = 2x
+        let h = 2;
+        let mut p = Program::new("square", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let s = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let m = p.node(OpKind::Mul, vec![x, x], h);
+        let a = p.node(OpKind::Add, vec![m, s], h);
+        p.node(OpKind::Scatter, vec![a], h);
+        p.node(OpKind::Push, vec![a], h);
+        let c = ProgramCell::new(p, vec![]).unwrap();
+        let xv = [1.5f32, -2.0];
+        let sv = [0.0f32, 0.0];
+        let g = [1.0f32, 1.0];
+        let mut gx = [0.0f32; 2];
+        let mut gs = [0.0f32; 2];
+        let mut tmp = vec![0.0f32; c.bwd_scratch_cols()];
+        c.backward(&xv, &sv, &g, &mut gx, &mut gs, &mut tmp);
+        assert!((gx[0] - 3.0).abs() < 1e-6, "{}", gx[0]);
+        assert!((gx[1] + 4.0).abs() < 1e-6, "{}", gx[1]);
+        assert_eq!(gs, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn param_grads_match_finite_difference_probe() {
+        // one quick FD spot-check here; the full 5-cell gradcheck lives in
+        // rust/tests/gradcheck.rs
+        let h = 4;
+        let mut c = cell(programs::treefc_program(h), 11);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..h).map(|_| rng.normal_f32(0.5)).collect();
+        let s: Vec<f32> = (0..2 * h).map(|_| rng.normal_f32(0.5)).collect();
+        let w: Vec<f32> = (0..h).map(|_| rng.normal_f32(1.0)).collect();
+        let loss = |c: &ProgramCell, tmp: &mut Vec<f32>| -> f64 {
+            tmp.resize(c.fwd_scratch_cols().max(1), 0.0);
+            let mut out = vec![0.0f32; h];
+            c.forward(&x, &s, &mut out, tmp);
+            out.iter().zip(&w).map(|(&o, &wj)| o as f64 * wj as f64).sum()
+        };
+        let mut tmp = vec![0.0f32; c.pg_scratch_cols()];
+        let mut pg: Vec<Vec<f32>> =
+            c.params().iter().map(|p| vec![0.0; p.len()]).collect();
+        c.acc_param_grads(&x, &s, &w, &mut pg, &mut tmp);
+        let mut ftmp = Vec::new();
+        let eps = 1e-2f32;
+        for (pi, idx) in [(0usize, 3usize), (3, 1)] {
+            let analytic = pg[pi][idx] as f64;
+            let orig = c.params()[pi][idx];
+            c.params_mut()[pi][idx] = orig + eps;
+            let lp = loss(&c, &mut ftmp);
+            c.params_mut()[pi][idx] = orig - eps;
+            let lm = loss(&c, &mut ftmp);
+            c.params_mut()[pi][idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - analytic).abs() <= 1e-3 * analytic.abs().max(1.0),
+                "param {pi}[{idx}]: fd {fd} vs analytic {analytic}"
+            );
+        }
+    }
+}

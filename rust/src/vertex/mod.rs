@@ -12,16 +12,30 @@
 //! * structural **auto-differentiation** metadata (gather↔scatter,
 //!   pull↔push duality, §3.4).
 //!
+//! `Program` is the **single authoritative description of F**: everything
+//! the rest of the system needs — gather arity, state width, the slice of
+//! the state that heads read, gate-preactivation width, the named
+//! parameter shapes — is *derived* from the op graph by
+//! [`Program::validate`] (which also rejects malformed programs with a
+//! proper error instead of a debug assertion). The [`registry`] maps cell
+//! names to program builders (builtin + user-registered), and
+//! [`interp::ProgramCell`] executes any validated program on the host —
+//! forward and the §3.4 structural backward — with no per-cell code.
+//!
 //! The default engine executes F through the fused whole-cell artifact;
 //! the `fusion=false` ablation interprets this op graph node-by-node, one
 //! PJRT execution per operator (one "kernel launch" per op, like the
 //! paper's unfused GPU baseline).
 
+pub mod interp;
 pub mod programs;
+pub mod registry;
 
 use std::collections::BTreeSet;
 
-/// Op kinds. `param` indexes into the model's parameter list.
+use anyhow::{bail, Result};
+
+/// Op kinds. `param` indexes into the program's [`ParamSpec`] list.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum OpKind {
     /// gather(slot): child state -> dense task block
@@ -32,14 +46,16 @@ pub enum OpKind {
     Scatter,
     /// push: publish to the external connector (heads read it)
     Push,
-    /// x @ P (P is a model parameter)
+    /// x @ P (P is a model parameter, row-major `[in_cols, out_cols]`)
     MatMul { param: usize },
-    /// x + b (broadcast bias parameter)
+    /// x + b (broadcast bias parameter, `[cols]`)
     AddBias { param: usize },
     Add,
     Mul,
     Sigmoid,
     Tanh,
+    /// y = 1 - x (elementwise; the GRU update-gate complement)
+    OneMinus,
     /// take columns [start, start+len) of the input (host memcpy)
     SliceCols { start: usize, len: usize },
     /// concatenate inputs along columns (host memcpy)
@@ -50,7 +66,10 @@ impl OpKind {
     /// Element-wise ops are the fusion candidates (§3.5: "+, -, ×, ÷,
     /// tanh, sigmoid").
     pub fn is_elementwise(&self) -> bool {
-        matches!(self, OpKind::Add | OpKind::Mul | OpKind::Sigmoid | OpKind::Tanh)
+        matches!(
+            self,
+            OpKind::Add | OpKind::Mul | OpKind::Sigmoid | OpKind::Tanh | OpKind::OneMinus
+        )
     }
 
     /// The §3.4 adjoint duality for the four message-passing primitives.
@@ -62,6 +81,37 @@ impl OpKind {
             OpKind::Push => Some(OpKind::Pull),
             _ => None,
         }
+    }
+
+    /// Inputs this op consumes: `Some(n)` for a fixed count, `None` for
+    /// "one or more" (ConcatCols).
+    fn input_arity(&self) -> Option<usize> {
+        match self {
+            OpKind::Gather { .. } | OpKind::Pull => Some(0),
+            OpKind::Scatter
+            | OpKind::Push
+            | OpKind::MatMul { .. }
+            | OpKind::AddBias { .. }
+            | OpKind::Sigmoid
+            | OpKind::Tanh
+            | OpKind::OneMinus
+            | OpKind::SliceCols { .. } => Some(1),
+            OpKind::Add | OpKind::Mul => Some(2),
+            OpKind::ConcatCols => None,
+        }
+    }
+}
+
+/// A named model parameter the program references by index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
     }
 }
 
@@ -75,7 +125,8 @@ pub struct OpNode {
 }
 
 /// The vertex function as a DAG of ops. Node ids are topological by
-/// construction (builders append in dependency order).
+/// construction (builders append in dependency order); [`Program::validate`]
+/// rejects anything else with a proper error.
 #[derive(Debug, Clone)]
 pub struct Program {
     pub name: String,
@@ -84,6 +135,27 @@ pub struct Program {
     pub n_children: usize,
     /// columns of the scattered state
     pub state_cols: usize,
+    /// named parameters, referenced by `MatMul { param }` / `AddBias { param }`
+    pub params: Vec<ParamSpec>,
+}
+
+/// Everything the system derives from a validated program: the metadata
+/// that used to be hand-duplicated on the closed `Cell` enum.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgramMeta {
+    /// child slots gathered per vertex
+    pub arity: usize,
+    /// columns of the scattered state
+    pub state_cols: usize,
+    /// columns of the pull input `x`
+    pub x_cols: usize,
+    /// (offset, len) of the state slice heads read (the push source
+    /// located inside the scattered state)
+    pub h_off: usize,
+    pub h_len: usize,
+    /// gate-preactivation columns (Σ AddBias widths) — what bwd_data
+    /// emits for lazy parameter gradients
+    pub gates_cols: usize,
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -97,12 +169,324 @@ pub struct Analysis {
 }
 
 impl Program {
-    pub fn node(&mut self, kind: OpKind, ins: Vec<usize>, cols: usize) -> usize {
-        for &i in &ins {
-            assert!(i < self.nodes.len(), "forward reference in program");
+    /// Start an empty program. Append parameters with [`Program::param`]
+    /// and ops with [`Program::node`], then check it with
+    /// [`Program::validate`].
+    pub fn new(name: &str, n_children: usize, state_cols: usize) -> Program {
+        Program {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            n_children,
+            state_cols,
+            params: Vec::new(),
         }
+    }
+
+    /// Declare a named parameter; returns its index for `MatMul`/`AddBias`.
+    pub fn param(&mut self, name: &str, shape: &[usize]) -> usize {
+        self.params.push(ParamSpec { name: name.to_string(), shape: shape.to_vec() });
+        self.params.len() - 1
+    }
+
+    /// Append an op node. No checking happens here — malformed graphs are
+    /// reported by [`Program::validate`] (called at CellSpec registration
+    /// and manifest load), not by assertions.
+    pub fn node(&mut self, kind: OpKind, ins: Vec<usize>, cols: usize) -> usize {
         self.nodes.push(OpNode { kind, ins, cols });
         self.nodes.len() - 1
+    }
+
+    /// Check the program is a well-formed vertex function and derive its
+    /// metadata. Errors on:
+    ///
+    /// * forward references / cycles / dangling inputs,
+    /// * input-count or column-width mismatches on any op,
+    /// * parameter indices out of range or shapes inconsistent with use,
+    /// * missing or duplicate `pull` / `scatter` / `push`,
+    /// * gather slots that do not cover `0..n_children` exactly once,
+    /// * unconsumed intermediate nodes,
+    /// * a push source that is not locatable inside the scattered state
+    ///   (heads could not read it).
+    pub fn validate(&self) -> Result<ProgramMeta> {
+        let name = &self.name;
+        if self.nodes.is_empty() {
+            bail!("program '{name}': no ops");
+        }
+        if self.n_children == 0 {
+            bail!("program '{name}': n_children must be >= 1");
+        }
+        if self.state_cols == 0 {
+            bail!("program '{name}': state_cols must be >= 1");
+        }
+        for (i, p) in self.params.iter().enumerate() {
+            if p.name.is_empty() {
+                bail!("program '{name}': parameter {i} has an empty name");
+            }
+            if p.shape.is_empty() || p.shape.contains(&0) {
+                bail!(
+                    "program '{name}': parameter '{}' has invalid shape {:?}",
+                    p.name,
+                    p.shape
+                );
+            }
+            if self.params[..i].iter().any(|q| q.name == p.name) {
+                bail!("program '{name}': duplicate parameter name '{}'", p.name);
+            }
+        }
+
+        // topology: every input must reference an earlier node; since ids
+        // are appended in order, a forward (or self) reference is exactly
+        // what a cycle or a dangling input looks like here.
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &j in &n.ins {
+                if j >= i {
+                    bail!(
+                        "program '{name}': node {i} ({:?}) references node {j} \
+                         which is not defined before it (cycle or dangling input)",
+                        n.kind
+                    );
+                }
+            }
+            if n.cols == 0 {
+                bail!("program '{name}': node {i} ({:?}) has zero columns", n.kind);
+            }
+            if let Some(want) = n.kind.input_arity() {
+                if n.ins.len() != want {
+                    bail!(
+                        "program '{name}': node {i} ({:?}) takes {want} input(s), \
+                         got {}",
+                        n.kind,
+                        n.ins.len()
+                    );
+                }
+            } else if n.ins.is_empty() {
+                bail!("program '{name}': node {i} (ConcatCols) has no inputs");
+            }
+        }
+
+        // per-op width rules
+        let cols_of = |j: usize| self.nodes[j].cols;
+        for (i, n) in self.nodes.iter().enumerate() {
+            match &n.kind {
+                OpKind::MatMul { param } => {
+                    let p = self.params.get(*param).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "program '{name}': node {i} references parameter \
+                             {param}, but only {} are declared",
+                            self.params.len()
+                        )
+                    })?;
+                    let k = cols_of(n.ins[0]);
+                    if p.shape != [k, n.cols] {
+                        bail!(
+                            "program '{name}': node {i} MatMul needs parameter \
+                             '{}' of shape [{k}, {}], declared {:?}",
+                            p.name,
+                            n.cols,
+                            p.shape
+                        );
+                    }
+                }
+                OpKind::AddBias { param } => {
+                    let p = self.params.get(*param).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "program '{name}': node {i} references parameter \
+                             {param}, but only {} are declared",
+                            self.params.len()
+                        )
+                    })?;
+                    if cols_of(n.ins[0]) != n.cols {
+                        bail!(
+                            "program '{name}': node {i} AddBias input is \
+                             {} cols, node is {} cols",
+                            cols_of(n.ins[0]),
+                            n.cols
+                        );
+                    }
+                    if p.shape != [n.cols] {
+                        bail!(
+                            "program '{name}': node {i} AddBias needs parameter \
+                             '{}' of shape [{}], declared {:?}",
+                            p.name,
+                            n.cols,
+                            p.shape
+                        );
+                    }
+                }
+                OpKind::Add | OpKind::Mul => {
+                    for &j in &n.ins {
+                        if cols_of(j) != n.cols {
+                            bail!(
+                                "program '{name}': node {i} ({:?}) mixes widths \
+                                 {} and {}",
+                                n.kind,
+                                cols_of(j),
+                                n.cols
+                            );
+                        }
+                    }
+                }
+                OpKind::Sigmoid | OpKind::Tanh | OpKind::OneMinus | OpKind::Push => {
+                    if cols_of(n.ins[0]) != n.cols {
+                        bail!(
+                            "program '{name}': node {i} ({:?}) input is {} cols, \
+                             node is {} cols",
+                            n.kind,
+                            cols_of(n.ins[0]),
+                            n.cols
+                        );
+                    }
+                }
+                OpKind::SliceCols { start, len } => {
+                    if *len == 0 || n.cols != *len || start + len > cols_of(n.ins[0]) {
+                        bail!(
+                            "program '{name}': node {i} SliceCols [{start}, \
+                             {start}+{len}) of a {}-col input (node is {} cols)",
+                            cols_of(n.ins[0]),
+                            n.cols
+                        );
+                    }
+                }
+                OpKind::ConcatCols => {
+                    let total: usize = n.ins.iter().map(|&j| cols_of(j)).sum();
+                    if total != n.cols {
+                        bail!(
+                            "program '{name}': node {i} ConcatCols inputs sum to \
+                             {total} cols, node is {} cols",
+                            n.cols
+                        );
+                    }
+                }
+                OpKind::Scatter => {
+                    if cols_of(n.ins[0]) != self.state_cols || n.cols != self.state_cols
+                    {
+                        bail!(
+                            "program '{name}': scatter is {} cols (input {}), \
+                             state_cols is {}",
+                            n.cols,
+                            cols_of(n.ins[0]),
+                            self.state_cols
+                        );
+                    }
+                }
+                OpKind::Gather { .. } => {
+                    if n.cols != self.state_cols {
+                        bail!(
+                            "program '{name}': node {i} gathers {} cols, \
+                             state_cols is {}",
+                            n.cols,
+                            self.state_cols
+                        );
+                    }
+                }
+                OpKind::Pull => {}
+            }
+        }
+
+        // the message-passing skeleton: exactly one pull, one scatter, one
+        // push; gather slots cover 0..n_children exactly once each
+        let pulls = self.ids_of(|k| matches!(k, OpKind::Pull));
+        let scatters = self.ids_of(|k| matches!(k, OpKind::Scatter));
+        let pushes = self.ids_of(|k| matches!(k, OpKind::Push));
+        match pulls.len() {
+            0 => bail!("program '{name}': no pull (external input)"),
+            1 => {}
+            n => bail!("program '{name}': {n} pull ops (exactly one allowed)"),
+        }
+        match scatters.len() {
+            0 => bail!("program '{name}': no scatter (state is never published)"),
+            1 => {}
+            n => bail!("program '{name}': {n} scatter ops (exactly one allowed)"),
+        }
+        match pushes.len() {
+            0 => bail!("program '{name}': no push (heads have nothing to read)"),
+            1 => {}
+            n => bail!("program '{name}': {n} push ops (exactly one allowed)"),
+        }
+        let mut slots_seen = vec![0usize; self.n_children];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let OpKind::Gather { slot } = n.kind {
+                if slot >= self.n_children {
+                    bail!(
+                        "program '{name}': node {i} gathers slot {slot}, but \
+                         n_children is {}",
+                        self.n_children
+                    );
+                }
+                slots_seen[slot] += 1;
+            }
+        }
+        for (slot, &count) in slots_seen.iter().enumerate() {
+            match count {
+                0 => bail!("program '{name}': child slot {slot} is never gathered"),
+                1 => {}
+                n => bail!("program '{name}': child slot {slot} gathered {n} times"),
+            }
+        }
+
+        // every non-sink node must be consumed by someone (dead ops are a
+        // bug in the cell definition, not an optimization opportunity)
+        let mut used = vec![false; self.nodes.len()];
+        for n in &self.nodes {
+            for &j in &n.ins {
+                used[j] = true;
+            }
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !used[i] && !matches!(n.kind, OpKind::Scatter | OpKind::Push) {
+                bail!(
+                    "program '{name}': node {i} ({:?}) is computed but never \
+                     consumed",
+                    n.kind
+                );
+            }
+        }
+
+        // derive the head slice: where the push source lives inside the
+        // scattered state (so heads can gather it from the state buffer)
+        let s_in = self.nodes[scatters[0]].ins[0];
+        let p_in = self.nodes[pushes[0]].ins[0];
+        let (h_off, h_len) = if p_in == s_in {
+            (0, self.nodes[s_in].cols)
+        } else if matches!(self.nodes[s_in].kind, OpKind::ConcatCols)
+            && self.nodes[s_in].ins.contains(&p_in)
+        {
+            let mut off = 0;
+            let mut found = None;
+            for &j in &self.nodes[s_in].ins {
+                if j == p_in {
+                    found = Some(off);
+                    break;
+                }
+                off += self.nodes[j].cols;
+            }
+            (found.unwrap(), self.nodes[p_in].cols)
+        } else {
+            bail!(
+                "program '{name}': the push source (node {p_in}) is not part of \
+                 the scattered state (node {s_in}) — heads could not read it"
+            );
+        };
+
+        Ok(ProgramMeta {
+            arity: self.n_children,
+            state_cols: self.state_cols,
+            x_cols: self.nodes[pulls[0]].cols,
+            h_off,
+            h_len,
+            gates_cols: self.gates_cols(),
+        })
+    }
+
+    /// Gate-preactivation columns: the sum of all `AddBias` widths — the
+    /// per-vertex block `cell_bwd_data` artifacts emit for the lazy
+    /// parameter-gradient pass.
+    pub fn gates_cols(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::AddBias { .. }))
+            .map(|n| n.cols)
+            .sum()
     }
 
     fn reachable_from(&self, sources: &[usize]) -> Vec<bool> {
@@ -144,7 +528,7 @@ impl Program {
             .collect()
     }
 
-    /// Run the §3.5 static analyses.
+    /// Run the §3.5 static analyses (assumes a validated program).
     pub fn analyze(&self) -> Analysis {
         let gathers = self.ids_of(|k| matches!(k, OpKind::Gather { .. }));
         let scatters = self.ids_of(|k| matches!(k, OpKind::Scatter));
@@ -214,6 +598,7 @@ impl Program {
                         | OpKind::Mul
                         | OpKind::Sigmoid
                         | OpKind::Tanh
+                        | OpKind::OneMinus
                 )
             })
             .count()
@@ -284,7 +669,7 @@ mod tests {
 
     #[test]
     fn fusion_groups_are_elementwise_only() {
-        for p in [lstm_program(8), treelstm_program(8)] {
+        for p in [lstm_program(8), treelstm_program(8), gru_program(8)] {
             let a = p.analyze();
             for g in &a.fusion_groups {
                 for &i in g {
@@ -300,5 +685,156 @@ mod tests {
         assert!(lstm_program(8).launches_unfused() >= 10);
         assert!(treelstm_program(8).launches_unfused() >= 15);
         assert!(treefc_program(8).launches_unfused() >= 5);
+    }
+
+    // ---- Program::validate: every malformed-program class -------------
+
+    #[test]
+    fn validate_accepts_all_shipped_programs() {
+        for h in [1usize, 4, 8, 32] {
+            for p in [
+                lstm_program(h),
+                treelstm_program(h),
+                treefc_program(h),
+                gru_program(h),
+                cstreelstm_program(h),
+            ] {
+                let meta = p.validate().unwrap_or_else(|e| {
+                    panic!("{} h={h} failed validation: {e:#}", p.name)
+                });
+                assert_eq!(meta.arity, p.n_children);
+                assert_eq!(meta.state_cols, p.state_cols);
+                assert_eq!(meta.x_cols, h);
+                assert!(meta.h_off + meta.h_len <= meta.state_cols);
+                assert!(meta.gates_cols > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_derives_the_enum_metadata() {
+        // the derived values must match what the old Cell enum hard-coded
+        let h = 16;
+        let m = lstm_program(h).validate().unwrap();
+        assert_eq!((m.arity, m.state_cols, m.gates_cols), (1, 2 * h, 4 * h));
+        assert_eq!((m.h_off, m.h_len), (h, h));
+        let m = treelstm_program(h).validate().unwrap();
+        assert_eq!((m.arity, m.state_cols, m.gates_cols), (2, 2 * h, 5 * h));
+        assert_eq!((m.h_off, m.h_len), (h, h));
+        let m = treefc_program(h).validate().unwrap();
+        assert_eq!((m.arity, m.state_cols, m.gates_cols), (2, h, h));
+        assert_eq!((m.h_off, m.h_len), (0, h));
+        let m = gru_program(h).validate().unwrap();
+        assert_eq!((m.arity, m.state_cols, m.gates_cols), (1, h, 3 * h));
+        assert_eq!((m.h_off, m.h_len), (0, h));
+    }
+
+    #[test]
+    fn validate_rejects_forward_reference_cycle() {
+        let mut p = Program::new("bad", 1, 2);
+        let x = p.node(OpKind::Pull, vec![], 2);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], 2);
+        // node 2 references node 3 (not yet defined): a cycle/dangling input
+        let a = p.node(OpKind::Add, vec![x, 3], 2);
+        let b = p.node(OpKind::Add, vec![a, g], 2);
+        p.node(OpKind::Scatter, vec![b], 2);
+        p.node(OpKind::Push, vec![b], 2);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("cycle or dangling input"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_width_mismatch() {
+        let mut p = Program::new("bad", 1, 4);
+        let x = p.node(OpKind::Pull, vec![], 4);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], 4);
+        let t = p.node(OpKind::SliceCols { start: 0, len: 2 }, vec![g], 2);
+        let a = p.node(OpKind::Add, vec![x, t], 4); // 4 + 2: mismatch
+        p.node(OpKind::Scatter, vec![a], 4);
+        p.node(OpKind::Push, vec![a], 4);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("mixes widths"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_missing_scatter() {
+        let mut p = Program::new("bad", 1, 2);
+        let x = p.node(OpKind::Pull, vec![], 2);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], 2);
+        let a = p.node(OpKind::Add, vec![x, g], 2);
+        p.node(OpKind::Push, vec![a], 2);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("no scatter"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_pull() {
+        let mut p = Program::new("bad", 1, 2);
+        let x1 = p.node(OpKind::Pull, vec![], 2);
+        let x2 = p.node(OpKind::Pull, vec![], 2);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], 2);
+        let a = p.node(OpKind::Add, vec![x1, x2], 2);
+        let b = p.node(OpKind::Add, vec![a, g], 2);
+        p.node(OpKind::Scatter, vec![b], 2);
+        p.node(OpKind::Push, vec![b], 2);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("2 pull ops"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_missing_gather_slot() {
+        // declares 2 children but only gathers slot 0
+        let mut p = Program::new("bad", 2, 2);
+        let x = p.node(OpKind::Pull, vec![], 2);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], 2);
+        let a = p.node(OpKind::Add, vec![x, g], 2);
+        p.node(OpKind::Scatter, vec![a], 2);
+        p.node(OpKind::Push, vec![a], 2);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("slot 1 is never gathered"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_param_shape() {
+        let h = 4;
+        let mut p = Program::new("bad", 1, h);
+        let w = p.param("W", &[h, h + 1]); // wrong output width
+        let x = p.node(OpKind::Pull, vec![], h);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let mm = p.node(OpKind::MatMul { param: w }, vec![x], h);
+        let a = p.node(OpKind::Add, vec![mm, g], h);
+        p.node(OpKind::Scatter, vec![a], h);
+        p.node(OpKind::Push, vec![a], h);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("MatMul needs parameter"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_unread_push_source() {
+        // push publishes a value that is not inside the scattered state
+        let h = 4;
+        let mut p = Program::new("bad", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let a = p.node(OpKind::Add, vec![x, g], h);
+        let t = p.node(OpKind::Tanh, vec![a], h);
+        p.node(OpKind::Scatter, vec![a], h);
+        p.node(OpKind::Push, vec![t], h);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("not part of the scattered state"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_dead_nodes() {
+        let h = 4;
+        let mut p = Program::new("bad", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let a = p.node(OpKind::Add, vec![x, g], h);
+        p.node(OpKind::Tanh, vec![a], h); // computed, never consumed
+        p.node(OpKind::Scatter, vec![a], h);
+        p.node(OpKind::Push, vec![a], h);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("never consumed"), "{e}");
     }
 }

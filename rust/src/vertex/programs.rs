@@ -1,33 +1,40 @@
-//! Op-graph builders for the paper's cells. These mirror, operator by
-//! operator, the jnp reference implementations in
-//! `python/compile/kernels/ref.py` — the unfused interpreter (exec::unfused)
-//! executes them against the `op_*` artifacts and must agree numerically
-//! with the fused whole-cell artifact (tested in engine_equivalence.rs).
+//! Op-graph builders for the shipped cells. The three builtins (lstm,
+//! treelstm, treefc) mirror, operator by operator, the jnp reference
+//! implementations in `python/compile/kernels/ref.py` — the unfused
+//! interpreter (exec::unfused) executes them against the `op_*` artifacts
+//! and must agree numerically with the fused whole-cell artifact (tested
+//! in engine_equivalence.rs). The host `Program` interpreter
+//! (vertex::interp) evaluates the same graphs with no artifacts at all.
 //!
-//! Parameter indices refer to the model's parameter order:
-//!   lstm:     0=W [h,4h]  1=U [h,4h]  2=b [4h]
-//!   treelstm: 0=Wiou [h,3h] 1=Wf [h,h] 2=Uiou [h,3h] 3=Uf [h,h]
-//!             4=biou [3h] 5=bf [h]
-//!   treefc:   0=Wx 1=Wl 2=Wr [h,h]  3=b [h]
+//! `gru` and `cstreelstm` exist **only** as programs: no hand-written
+//! kernel, no engine/serve special-casing — they are the proof that the
+//! CellSpec API is open (DESIGN.md §8 walks through defining `gru`).
+//!
+//! Parameter indices refer to the `Program::param` declaration order,
+//! which for the builtins mirrors aot.py's argument order:
+//!   lstm:       0=W [h,4h]  1=U [h,4h]  2=b [4h]
+//!   treelstm:   0=Wiou [h,3h] 1=Wf [h,h] 2=Uiou [h,3h] 3=Uf [h,h]
+//!               4=biou [3h] 5=bf [h]
+//!   treefc:     0=Wx 1=Wl 2=Wr [h,h]  3=b [h]
+//!   gru:        0=W [h,3h]  1=U [h,3h]  2=b [3h]   (gates [r|z|n])
+//!   cstreelstm: 0=W [h,4h]  1=U [h,4h]  2=b [4h]   (gates [i|f|o|u])
 
 use super::{OpKind, Program};
 
 /// Sequence LSTM cell (state = [c | h], 2h columns).
 pub fn lstm_program(h: usize) -> Program {
-    let mut p = Program {
-        name: "lstm".into(),
-        nodes: Vec::new(),
-        n_children: 1,
-        state_cols: 2 * h,
-    };
+    let mut p = Program::new("lstm", 1, 2 * h);
+    let w = p.param("W", &[h, 4 * h]);
+    let u = p.param("U", &[h, 4 * h]);
+    let b = p.param("b", &[4 * h]);
     let x = p.node(OpKind::Pull, vec![], h);
     let s = p.node(OpKind::Gather { slot: 0 }, vec![], 2 * h);
     let cprev = p.node(OpKind::SliceCols { start: 0, len: h }, vec![s], h);
     let hprev = p.node(OpKind::SliceCols { start: h, len: h }, vec![s], h);
-    let g1 = p.node(OpKind::MatMul { param: 0 }, vec![x], 4 * h);
-    let g2 = p.node(OpKind::MatMul { param: 1 }, vec![hprev], 4 * h);
+    let g1 = p.node(OpKind::MatMul { param: w }, vec![x], 4 * h);
+    let g2 = p.node(OpKind::MatMul { param: u }, vec![hprev], 4 * h);
     let gsum = p.node(OpKind::Add, vec![g1, g2], 4 * h);
-    let pre = p.node(OpKind::AddBias { param: 2 }, vec![gsum], 4 * h);
+    let pre = p.node(OpKind::AddBias { param: b }, vec![gsum], 4 * h);
     let pi = p.node(OpKind::SliceCols { start: 0, len: h }, vec![pre], h);
     let pf = p.node(OpKind::SliceCols { start: h, len: h }, vec![pre], h);
     let po = p.node(OpKind::SliceCols { start: 2 * h, len: h }, vec![pre], h);
@@ -35,9 +42,9 @@ pub fn lstm_program(h: usize) -> Program {
     let i = p.node(OpKind::Sigmoid, vec![pi], h);
     let f = p.node(OpKind::Sigmoid, vec![pf], h);
     let o = p.node(OpKind::Sigmoid, vec![po], h);
-    let u = p.node(OpKind::Tanh, vec![pu], h);
+    let u2 = p.node(OpKind::Tanh, vec![pu], h);
     let fc = p.node(OpKind::Mul, vec![f, cprev], h);
-    let iu = p.node(OpKind::Mul, vec![i, u], h);
+    let iu = p.node(OpKind::Mul, vec![i, u2], h);
     let c2 = p.node(OpKind::Add, vec![fc, iu], h);
     let tc = p.node(OpKind::Tanh, vec![c2], h);
     let h2 = p.node(OpKind::Mul, vec![o, tc], h);
@@ -47,14 +54,16 @@ pub fn lstm_program(h: usize) -> Program {
     p
 }
 
-/// Binary child-sum Tree-LSTM cell (paper Fig. 4 / Fig. 7 with N=2).
+/// Binary child-sum Tree-LSTM cell (paper Fig. 4 / Fig. 7 with N=2),
+/// per-child forget gates sharing Uf.
 pub fn treelstm_program(h: usize) -> Program {
-    let mut p = Program {
-        name: "treelstm".into(),
-        nodes: Vec::new(),
-        n_children: 2,
-        state_cols: 2 * h,
-    };
+    let mut p = Program::new("treelstm", 2, 2 * h);
+    let wiou = p.param("Wiou", &[h, 3 * h]);
+    let wf = p.param("Wf", &[h, h]);
+    let uiou = p.param("Uiou", &[h, 3 * h]);
+    let uf = p.param("Uf", &[h, h]);
+    let biou = p.param("biou", &[3 * h]);
+    let bf = p.param("bf", &[h]);
     let x = p.node(OpKind::Pull, vec![], h);
     let s1 = p.node(OpKind::Gather { slot: 0 }, vec![], 2 * h);
     let s2 = p.node(OpKind::Gather { slot: 1 }, vec![], 2 * h);
@@ -64,18 +73,18 @@ pub fn treelstm_program(h: usize) -> Program {
     let h2 = p.node(OpKind::SliceCols { start: h, len: h }, vec![s2], h);
     let hsum = p.node(OpKind::Add, vec![h1, h2], h);
     // iou path
-    let giou_x = p.node(OpKind::MatMul { param: 0 }, vec![x], 3 * h);
-    let giou_h = p.node(OpKind::MatMul { param: 2 }, vec![hsum], 3 * h);
+    let giou_x = p.node(OpKind::MatMul { param: wiou }, vec![x], 3 * h);
+    let giou_h = p.node(OpKind::MatMul { param: uiou }, vec![hsum], 3 * h);
     let giou_s = p.node(OpKind::Add, vec![giou_x, giou_h], 3 * h);
-    let pre_iou = p.node(OpKind::AddBias { param: 4 }, vec![giou_s], 3 * h);
+    let pre_iou = p.node(OpKind::AddBias { param: biou }, vec![giou_s], 3 * h);
     // forget paths (shared x @ Wf)
-    let gf_x = p.node(OpKind::MatMul { param: 1 }, vec![x], h);
-    let gf1_h = p.node(OpKind::MatMul { param: 3 }, vec![h1], h);
-    let gf2_h = p.node(OpKind::MatMul { param: 3 }, vec![h2], h);
+    let gf_x = p.node(OpKind::MatMul { param: wf }, vec![x], h);
+    let gf1_h = p.node(OpKind::MatMul { param: uf }, vec![h1], h);
+    let gf2_h = p.node(OpKind::MatMul { param: uf }, vec![h2], h);
     let gf1_s = p.node(OpKind::Add, vec![gf_x, gf1_h], h);
     let gf2_s = p.node(OpKind::Add, vec![gf_x, gf2_h], h);
-    let pre_f1 = p.node(OpKind::AddBias { param: 5 }, vec![gf1_s], h);
-    let pre_f2 = p.node(OpKind::AddBias { param: 5 }, vec![gf2_s], h);
+    let pre_f1 = p.node(OpKind::AddBias { param: bf }, vec![gf1_s], h);
+    let pre_f2 = p.node(OpKind::AddBias { param: bf }, vec![gf2_s], h);
     // gates
     let pi = p.node(OpKind::SliceCols { start: 0, len: h }, vec![pre_iou], h);
     let po = p.node(OpKind::SliceCols { start: h, len: h }, vec![pre_iou], h);
@@ -100,24 +109,114 @@ pub fn treelstm_program(h: usize) -> Program {
 
 /// Tree-FC cell (Fold benchmark): h' = tanh(x Wx + h1 Wl + h2 Wr + b).
 pub fn treefc_program(h: usize) -> Program {
-    let mut p = Program {
-        name: "treefc".into(),
-        nodes: Vec::new(),
-        n_children: 2,
-        state_cols: h,
-    };
+    let mut p = Program::new("treefc", 2, h);
+    let wx = p.param("Wx", &[h, h]);
+    let wl = p.param("Wl", &[h, h]);
+    let wr = p.param("Wr", &[h, h]);
+    let b = p.param("b", &[h]);
     let x = p.node(OpKind::Pull, vec![], h);
     let h1 = p.node(OpKind::Gather { slot: 0 }, vec![], h);
     let h2 = p.node(OpKind::Gather { slot: 1 }, vec![], h);
-    let gx = p.node(OpKind::MatMul { param: 0 }, vec![x], h);
-    let gl = p.node(OpKind::MatMul { param: 1 }, vec![h1], h);
-    let gr = p.node(OpKind::MatMul { param: 2 }, vec![h2], h);
+    let gx = p.node(OpKind::MatMul { param: wx }, vec![x], h);
+    let gl = p.node(OpKind::MatMul { param: wl }, vec![h1], h);
+    let gr = p.node(OpKind::MatMul { param: wr }, vec![h2], h);
     let s1 = p.node(OpKind::Add, vec![gx, gl], h);
     let s2 = p.node(OpKind::Add, vec![s1, gr], h);
-    let pre = p.node(OpKind::AddBias { param: 3 }, vec![s2], h);
+    let pre = p.node(OpKind::AddBias { param: b }, vec![s2], h);
     let out = p.node(OpKind::Tanh, vec![pre], h);
     p.node(OpKind::Scatter, vec![out], h);
     p.node(OpKind::Push, vec![out], h);
+    p
+}
+
+/// GRU sequence cell (state = h), gates packed `[r | z | n]`:
+///
+/// ```text
+/// r = σ(xW_r + hU_r + b_r)        n = tanh(xW_n + b_n + r ⊙ hU_n)
+/// z = σ(xW_z + hU_z + b_z)        h' = (1-z) ⊙ n + z ⊙ h
+/// ```
+///
+/// Defined **only** as a program — the engine, serve, and training layers
+/// run it through the generic CellSpec machinery with zero cell-specific
+/// code (DESIGN.md §8 uses this builder as the worked example).
+pub fn gru_program(h: usize) -> Program {
+    let mut p = Program::new("gru", 1, h);
+    let w = p.param("W", &[h, 3 * h]);
+    let u = p.param("U", &[h, 3 * h]);
+    let b = p.param("b", &[3 * h]);
+    let x = p.node(OpKind::Pull, vec![], h);
+    let hp = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+    let gx = p.node(OpKind::MatMul { param: w }, vec![x], 3 * h);
+    let gh = p.node(OpKind::MatMul { param: u }, vec![hp], 3 * h);
+    let gxb = p.node(OpKind::AddBias { param: b }, vec![gx], 3 * h);
+    let xr = p.node(OpKind::SliceCols { start: 0, len: h }, vec![gxb], h);
+    let xz = p.node(OpKind::SliceCols { start: h, len: h }, vec![gxb], h);
+    let xn = p.node(OpKind::SliceCols { start: 2 * h, len: h }, vec![gxb], h);
+    let hr = p.node(OpKind::SliceCols { start: 0, len: h }, vec![gh], h);
+    let hz = p.node(OpKind::SliceCols { start: h, len: h }, vec![gh], h);
+    let hn = p.node(OpKind::SliceCols { start: 2 * h, len: h }, vec![gh], h);
+    let ar = p.node(OpKind::Add, vec![xr, hr], h);
+    let r = p.node(OpKind::Sigmoid, vec![ar], h);
+    let az = p.node(OpKind::Add, vec![xz, hz], h);
+    let z = p.node(OpKind::Sigmoid, vec![az], h);
+    let rhn = p.node(OpKind::Mul, vec![r, hn], h);
+    let an = p.node(OpKind::Add, vec![xn, rhn], h);
+    let n = p.node(OpKind::Tanh, vec![an], h);
+    let zc = p.node(OpKind::OneMinus, vec![z], h);
+    let zn = p.node(OpKind::Mul, vec![zc, n], h);
+    let zh = p.node(OpKind::Mul, vec![z, hp], h);
+    let hnew = p.node(OpKind::Add, vec![zn, zh], h);
+    p.node(OpKind::Scatter, vec![hnew], h);
+    p.node(OpKind::Push, vec![hnew], h);
+    p
+}
+
+/// Child-sum Tree-LSTM with a tied forget gate (state = [c | h]): the iou
+/// gates and a single forget gate are computed from the *summed* child
+/// state `h̃ = h1 + h2`, and the forget gate multiplies the summed cell
+/// `c̃ = c1 + c2` (Tai et al. 2015, the tied-forget simplification):
+///
+/// ```text
+/// [i|f|o|u] = xW + h̃U + b
+/// c' = σ(f) ⊙ c̃ + σ(i) ⊙ tanh(u)      h' = σ(o) ⊙ tanh(c')
+/// ```
+///
+/// Like `gru`, this cell is defined **only** as a program; it is distinct
+/// from the builtin `treelstm` (per-child forget gates, separate Wf/Uf).
+pub fn cstreelstm_program(h: usize) -> Program {
+    let mut p = Program::new("cstreelstm", 2, 2 * h);
+    let w = p.param("W", &[h, 4 * h]);
+    let u = p.param("U", &[h, 4 * h]);
+    let b = p.param("b", &[4 * h]);
+    let x = p.node(OpKind::Pull, vec![], h);
+    let s1 = p.node(OpKind::Gather { slot: 0 }, vec![], 2 * h);
+    let s2 = p.node(OpKind::Gather { slot: 1 }, vec![], 2 * h);
+    let c1 = p.node(OpKind::SliceCols { start: 0, len: h }, vec![s1], h);
+    let h1 = p.node(OpKind::SliceCols { start: h, len: h }, vec![s1], h);
+    let c2 = p.node(OpKind::SliceCols { start: 0, len: h }, vec![s2], h);
+    let h2 = p.node(OpKind::SliceCols { start: h, len: h }, vec![s2], h);
+    let hsum = p.node(OpKind::Add, vec![h1, h2], h);
+    let csum = p.node(OpKind::Add, vec![c1, c2], h);
+    let g1 = p.node(OpKind::MatMul { param: w }, vec![x], 4 * h);
+    let g2 = p.node(OpKind::MatMul { param: u }, vec![hsum], 4 * h);
+    let gsum = p.node(OpKind::Add, vec![g1, g2], 4 * h);
+    let pre = p.node(OpKind::AddBias { param: b }, vec![gsum], 4 * h);
+    let pi = p.node(OpKind::SliceCols { start: 0, len: h }, vec![pre], h);
+    let pf = p.node(OpKind::SliceCols { start: h, len: h }, vec![pre], h);
+    let po = p.node(OpKind::SliceCols { start: 2 * h, len: h }, vec![pre], h);
+    let pu = p.node(OpKind::SliceCols { start: 3 * h, len: h }, vec![pre], h);
+    let i = p.node(OpKind::Sigmoid, vec![pi], h);
+    let f = p.node(OpKind::Sigmoid, vec![pf], h);
+    let o = p.node(OpKind::Sigmoid, vec![po], h);
+    let uu = p.node(OpKind::Tanh, vec![pu], h);
+    let fc = p.node(OpKind::Mul, vec![f, csum], h);
+    let iu = p.node(OpKind::Mul, vec![i, uu], h);
+    let cnew = p.node(OpKind::Add, vec![fc, iu], h);
+    let tc = p.node(OpKind::Tanh, vec![cnew], h);
+    let hnew = p.node(OpKind::Mul, vec![o, tc], h);
+    let sout = p.node(OpKind::ConcatCols, vec![cnew, hnew], 2 * h);
+    p.node(OpKind::Scatter, vec![sout], 2 * h);
+    p.node(OpKind::Push, vec![hnew], h);
     p
 }
 
@@ -127,7 +226,13 @@ mod tests {
 
     #[test]
     fn programs_are_topological() {
-        for p in [lstm_program(4), treelstm_program(4), treefc_program(4)] {
+        for p in [
+            lstm_program(4),
+            treelstm_program(4),
+            treefc_program(4),
+            gru_program(4),
+            cstreelstm_program(4),
+        ] {
             for (i, n) in p.nodes.iter().enumerate() {
                 for &j in &n.ins {
                     assert!(j < i, "{}: node {i} uses later node {j}", p.name);
@@ -138,7 +243,13 @@ mod tests {
 
     #[test]
     fn state_cols_match_scatter() {
-        for p in [lstm_program(8), treelstm_program(8), treefc_program(8)] {
+        for p in [
+            lstm_program(8),
+            treelstm_program(8),
+            treefc_program(8),
+            gru_program(8),
+            cstreelstm_program(8),
+        ] {
             let scat = p
                 .nodes
                 .iter()
@@ -150,15 +261,28 @@ mod tests {
 
     #[test]
     fn child_slots_cover_arity() {
-        let p = treelstm_program(4);
-        let slots: Vec<usize> = p
-            .nodes
-            .iter()
-            .filter_map(|n| match n.kind {
-                OpKind::Gather { slot } => Some(slot),
-                _ => None,
-            })
-            .collect();
-        assert_eq!(slots, vec![0, 1]);
+        for p in [treelstm_program(4), cstreelstm_program(4)] {
+            let slots: Vec<usize> = p
+                .nodes
+                .iter()
+                .filter_map(|n| match n.kind {
+                    OpKind::Gather { slot } => Some(slot),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(slots, vec![0, 1], "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn param_declarations_match_use() {
+        // every program validates, so MatMul/AddBias shapes line up with
+        // the declared ParamSpecs by construction
+        for p in [gru_program(6), cstreelstm_program(6)] {
+            p.validate().unwrap();
+            assert_eq!(p.params.len(), 3);
+            assert_eq!(p.params[0].name, "W");
+            assert_eq!(p.params[2].name, "b");
+        }
     }
 }

@@ -1,0 +1,325 @@
+//! The CellSpec registry: cell names → program builders.
+//!
+//! This is the open end of the API (paper §3.1: users *write* F; the
+//! system derives scheduling, batching and backpropagation from it).
+//! Builtins are seeded at first use:
+//!
+//! | name         | arity | definition                                  |
+//! |--------------|-------|---------------------------------------------|
+//! | `lstm`       | 1     | program + fused/op artifacts (aot.py)       |
+//! | `treelstm`   | 2     | program + fused/op artifacts (aot.py)       |
+//! | `treefc`     | 2     | program + fused/op artifacts (aot.py)       |
+//! | `gru`        | 1     | **program only** (DESIGN.md §8 walkthrough) |
+//! | `cstreelstm` | 2     | **program only** (tied-forget child-sum)    |
+//!
+//! User cells are added with [`register_cell`]; the builder is probed and
+//! [`Program::validate`]d at registration, so a malformed cell fails
+//! *here* with a proper error, never inside a minibatch. A registered
+//! cell immediately works everywhere a builtin does: `cavs train` /
+//! `eval` / `serve` / `bench` / `analyze` / `cells`, the host training
+//! driver, and the PJRT engine (given artifacts compiled under the same
+//! name).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, LazyLock, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use super::interp::ProgramCell;
+use super::{programs, ParamSpec, Program, ProgramMeta};
+use crate::util::rng::Rng;
+
+type Builder = Arc<dyn Fn(usize) -> Program + Send + Sync>;
+
+struct Entry {
+    build: Builder,
+    /// aot.py emits per-operator (`op_*`) artifacts for this cell, so the
+    /// engine's `fusion=false` ablation can interpret it op-by-op on PJRT
+    unfused_ops: bool,
+    builtin: bool,
+}
+
+static REGISTRY: LazyLock<RwLock<BTreeMap<String, Entry>>> = LazyLock::new(|| {
+    let mut m = BTreeMap::new();
+    let builtin = |f: fn(usize) -> Program, unfused_ops: bool| Entry {
+        build: Arc::new(f),
+        unfused_ops,
+        builtin: true,
+    };
+    m.insert("lstm".to_string(), builtin(programs::lstm_program, true));
+    m.insert("treelstm".to_string(), builtin(programs::treelstm_program, true));
+    m.insert("treefc".to_string(), builtin(programs::treefc_program, true));
+    m.insert("gru".to_string(), builtin(programs::gru_program, false));
+    m.insert(
+        "cstreelstm".to_string(),
+        builtin(programs::cstreelstm_program, false),
+    );
+    RwLock::new(m)
+});
+
+/// Register a user-defined cell. The builder maps a hidden size `h` to a
+/// [`Program`]; it is probed at two sizes and validated immediately, so
+/// malformed programs are rejected at registration. Errors on duplicate
+/// names (builtins cannot be shadowed).
+pub fn register_cell(
+    name: &str,
+    build: impl Fn(usize) -> Program + Send + Sync + 'static,
+) -> Result<()> {
+    if name.is_empty() || name.chars().any(|c| c.is_whitespace() || c == '_') {
+        bail!(
+            "cell name '{name}' must be non-empty, without whitespace or '_' \
+             (artifact names use '_' as a separator)"
+        );
+    }
+    for h in [2usize, 8] {
+        let p = build(h);
+        p.validate()
+            .with_context(|| format!("registering cell '{name}' (probe h={h})"))?;
+    }
+    let mut reg = REGISTRY.write().unwrap();
+    if reg.contains_key(name) {
+        bail!("cell '{name}' is already registered");
+    }
+    reg.insert(
+        name.to_string(),
+        Entry { build: Arc::new(build), unfused_ops: false, builtin: false },
+    );
+    Ok(())
+}
+
+/// All registered cell names (builtins + user cells), sorted.
+pub fn registered_cells() -> Vec<String> {
+    REGISTRY.read().unwrap().keys().cloned().collect()
+}
+
+pub fn is_registered(name: &str) -> bool {
+    REGISTRY.read().unwrap().contains_key(name)
+}
+
+struct CellInfo {
+    name: String,
+    h: usize,
+    program: Program,
+    meta: ProgramMeta,
+    unfused_ops: bool,
+    builtin: bool,
+}
+
+/// A registered cell instantiated at a hidden size: the program plus its
+/// derived metadata, cheap to clone (one `Arc`). This is what `Model`
+/// carries and every layer dispatches on — the `Cell` enum survives only
+/// as a thin alias for the three artifact-backed builtin names.
+#[derive(Clone)]
+pub struct CellSpec(Arc<CellInfo>);
+
+impl std::fmt::Debug for CellSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CellSpec")
+            .field("name", &self.0.name)
+            .field("h", &self.0.h)
+            .field("meta", &self.0.meta)
+            .finish()
+    }
+}
+
+impl CellSpec {
+    /// Instantiate a registered cell at hidden size `h`.
+    pub fn lookup(name: &str, h: usize) -> Result<CellSpec> {
+        let (program, unfused_ops, builtin) = {
+            let reg = REGISTRY.read().unwrap();
+            let e = reg.get(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown cell '{name}' (registered: {})",
+                    registered_list(&reg)
+                )
+            })?;
+            ((e.build)(h), e.unfused_ops, e.builtin)
+        };
+        CellSpec::build(program, h, unfused_ops, builtin)
+    }
+
+    /// Wrap an ad-hoc (unregistered) program as a spec — handy for tests
+    /// and one-off experiments; registered cells should prefer
+    /// [`register_cell`] + [`CellSpec::lookup`].
+    pub fn from_program(program: Program, h: usize) -> Result<CellSpec> {
+        CellSpec::build(program, h, false, false)
+    }
+
+    fn build(
+        program: Program,
+        h: usize,
+        unfused_ops: bool,
+        builtin: bool,
+    ) -> Result<CellSpec> {
+        let meta = program
+            .validate()
+            .with_context(|| format!("cell '{}' at h={h}", program.name))?;
+        Ok(CellSpec(Arc::new(CellInfo {
+            name: program.name.clone(),
+            h,
+            program,
+            meta,
+            unfused_ops,
+            builtin,
+        })))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.0.name
+    }
+
+    /// The hidden size this spec was instantiated at (artifact names and
+    /// embedding dims are keyed by it).
+    pub fn h(&self) -> usize {
+        self.0.h
+    }
+
+    /// The authoritative description of F.
+    pub fn program(&self) -> &Program {
+        &self.0.program
+    }
+
+    pub fn meta(&self) -> &ProgramMeta {
+        &self.0.meta
+    }
+
+    /// Child slots the cell consumes (gather arity).
+    pub fn arity(&self) -> usize {
+        self.0.meta.arity
+    }
+
+    /// Columns of the scattered state.
+    pub fn state_cols(&self) -> usize {
+        self.0.meta.state_cols
+    }
+
+    /// Columns of the pull input `x` (the embedding dimension).
+    pub fn x_cols(&self) -> usize {
+        self.0.meta.x_cols
+    }
+
+    /// Column offset/width of the state slice that heads read.
+    pub fn h_part(&self) -> (usize, usize) {
+        (self.0.meta.h_off, self.0.meta.h_len)
+    }
+
+    /// Gate-preactivation columns emitted by bwd_data (lazy batching).
+    pub fn gates_cols(&self) -> usize {
+        self.0.meta.gates_cols
+    }
+
+    /// Named parameter (name, shape) list, program declaration order
+    /// (mirrors aot.py's argument order for the builtins).
+    pub fn param_shapes(&self) -> &[ParamSpec] {
+        &self.0.program.params
+    }
+
+    /// Whether aot.py emits per-operator artifacts for the `fusion=false`
+    /// ablation (builtin cells only).
+    pub fn has_unfused_ops(&self) -> bool {
+        self.0.unfused_ops
+    }
+
+    /// Whether this is one of the seeded builtin cells.
+    pub fn is_builtin(&self) -> bool {
+        self.0.builtin
+    }
+
+    /// Bind the program to host parameter tensors as an interpretable
+    /// [`HostCell`](crate::exec::parallel::HostCell).
+    pub fn instantiate(&self, params: Vec<Vec<f32>>) -> Result<ProgramCell> {
+        ProgramCell::new(self.0.program.clone(), params)
+    }
+
+    /// Bind the program to Gaussian-initialized parameters.
+    pub fn random_cell(&self, rng: &mut Rng, scale: f32) -> Result<ProgramCell> {
+        ProgramCell::random(self.0.program.clone(), rng, scale)
+    }
+}
+
+fn registered_list(reg: &BTreeMap<String, Entry>) -> String {
+    reg.keys().cloned().collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::OpKind;
+    use super::*;
+
+    #[test]
+    fn builtins_are_seeded_and_derivable() {
+        for name in ["lstm", "treelstm", "treefc", "gru", "cstreelstm"] {
+            assert!(is_registered(name), "{name} missing");
+            let spec = CellSpec::lookup(name, 8).unwrap();
+            assert_eq!(spec.name(), name);
+            assert_eq!(spec.h(), 8);
+            assert_eq!(spec.x_cols(), 8);
+            let (off, len) = spec.h_part();
+            assert!(off + len <= spec.state_cols());
+            assert!(!spec.param_shapes().is_empty());
+        }
+        assert!(CellSpec::lookup("bogus", 8).is_err());
+        // the three artifact-backed builtins keep the unfused ablation
+        assert!(CellSpec::lookup("lstm", 8).unwrap().has_unfused_ops());
+        assert!(!CellSpec::lookup("gru", 8).unwrap().has_unfused_ops());
+    }
+
+    #[test]
+    fn user_cells_register_and_instantiate() {
+        // a user-defined cell: h' = tanh(xW + (h1 + h2)U + b), written
+        // only as a program — no engine, model, or serve code
+        fn mini(h: usize) -> Program {
+            let mut p = Program::new("mini-reg-test", 2, h);
+            let w = p.param("W", &[h, h]);
+            let u = p.param("U", &[h, h]);
+            let b = p.param("b", &[h]);
+            let x = p.node(OpKind::Pull, vec![], h);
+            let s1 = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+            let s2 = p.node(OpKind::Gather { slot: 1 }, vec![], h);
+            let hs = p.node(OpKind::Add, vec![s1, s2], h);
+            let gx = p.node(OpKind::MatMul { param: w }, vec![x], h);
+            let gh = p.node(OpKind::MatMul { param: u }, vec![hs], h);
+            let g = p.node(OpKind::Add, vec![gx, gh], h);
+            let pre = p.node(OpKind::AddBias { param: b }, vec![g], h);
+            let out = p.node(OpKind::Tanh, vec![pre], h);
+            p.node(OpKind::Scatter, vec![out], h);
+            p.node(OpKind::Push, vec![out], h);
+            p
+        }
+        register_cell("mini-reg-test", mini).unwrap();
+        assert!(registered_cells().iter().any(|n| n == "mini-reg-test"));
+        // duplicate registration is an error
+        assert!(register_cell("mini-reg-test", mini).is_err());
+        assert!(register_cell("treelstm", mini).is_err(), "builtin shadowing");
+        let spec = CellSpec::lookup("mini-reg-test", 4).unwrap();
+        assert_eq!(spec.arity(), 2);
+        assert_eq!(spec.gates_cols(), 4);
+        let mut rng = Rng::new(1);
+        let cell = spec.random_cell(&mut rng, 0.2).unwrap();
+        use crate::exec::parallel::HostCell;
+        assert_eq!(cell.n_params(), 3);
+    }
+
+    #[test]
+    fn malformed_user_cell_is_rejected_at_registration() {
+        fn broken(h: usize) -> Program {
+            let mut p = Program::new("broken-reg-test", 1, h);
+            let x = p.node(OpKind::Pull, vec![], h);
+            p.node(OpKind::Push, vec![x], h);
+            p // no gather, no scatter
+        }
+        let e = register_cell("broken-reg-test", broken).unwrap_err();
+        assert!(format!("{e:#}").contains("registering cell"), "{e:#}");
+        assert!(!is_registered("broken-reg-test"));
+    }
+
+    #[test]
+    fn cell_names_with_separators_are_rejected() {
+        fn ok(h: usize) -> Program {
+            programs::treefc_program(h)
+        }
+        assert!(register_cell("bad name", ok).is_err());
+        assert!(register_cell("bad_name", ok).is_err());
+        assert!(register_cell("", ok).is_err());
+    }
+}

@@ -60,7 +60,8 @@ fn gru_chain_loss_decreases() {
     // the extension cell trains end-to-end too
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     let data = Dataset::ptb_like_fixed(5, 12, 50, 6);
-    let mut model = Model::new(Cell::Gru, 32, 50, HeadKind::LmPerVertex, 50, 6);
+    let mut model =
+        Model::by_name("gru", 32, 50, HeadKind::LmPerVertex, 50, 6).unwrap();
     let mut engine = Engine::new(
         &rt,
         EngineOpts { lazy_batching: false, ..Default::default() },

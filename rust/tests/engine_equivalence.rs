@@ -183,7 +183,7 @@ fn infer_batch_matches_eval_and_skips_retention() {
     // serving path: pre-merged batch through infer_batch
     let mut model2 = fresh_model(Cell::TreeLstm, HeadKind::ClassifierAtRoot, 5);
     let mut eng = Engine::new(&rt, EngineOpts::default());
-    let batch = GraphBatch::new(&refs, Cell::TreeLstm.arity());
+    let batch = GraphBatch::new(&refs, model2.cell.arity());
     let mut scores = Vec::new();
     let r = eng.infer_batch(&mut model2, &batch, &mut scores).unwrap();
     assert_eq!(r.loss, eval.loss, "infer_batch must match the eval forward");
@@ -317,12 +317,14 @@ fn scan_lm_agrees_with_cavs_on_chains() {
 #[test]
 fn gru_cell_runs_through_engine() {
     require_artifacts!();
-    // GRU is the fused-only extension cell: forward + backward on a chain.
+    // GRU is a program-only cell: the engine reaches it purely through
+    // the CellSpec registry (fused artifacts compiled under its name).
     let mut rng = Rng::new(9);
     let toks: Vec<i32> = (0..6).map(|_| rng.below(20) as i32).collect();
     let graph = InputGraph::chain(&toks[..5], &toks[1..]);
     let rt = Runtime::new(&artifacts_dir()).unwrap();
-    let mut model = fresh_model(Cell::Gru, HeadKind::LmPerVertex, 50);
+    let mut model =
+        Model::by_name("gru", H, 20, HeadKind::LmPerVertex, 50, 1234).unwrap();
     let mut eng = Engine::new(
         &rt,
         EngineOpts { lazy_batching: false, ..Default::default() },

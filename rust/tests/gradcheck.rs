@@ -1,0 +1,279 @@
+//! Finite-difference validation of the Program interpreter's structural
+//! backward (§3.4) for **all five shipped cells**, plus the open-API
+//! acceptance tests: program-only cells (`gru`, `cstreelstm`) train
+//! host-only end-to-end with decreasing loss and serve through the
+//! serving stack — zero engine/models/serve edits beyond registration.
+//!
+//! Everything here is artifact-free (no PJRT runtime), so it runs on
+//! every push in CI.
+
+use cavs::exec::parallel::{run_host_frontier, HostCell};
+use cavs::graph::{Dataset, GraphBatch, InputGraph};
+use cavs::models::CellSpec;
+use cavs::scheduler::{self, Policy};
+use cavs::serve::{HostExec, Request, RequestQueue, Server, ServeOpts};
+use cavs::train::host::train_host_epochs;
+use cavs::util::rng::Rng;
+use cavs::vertex::interp::ProgramCell;
+use cavs::vertex::programs;
+use cavs::vertex::{registry, OpKind, Program};
+
+/// Weighted-output loss `L = Σ_j w_j · out_j` for one vertex, summed in
+/// f64 so the finite-difference quotient is not noise-limited.
+fn loss_of(
+    cell: &ProgramCell,
+    x: &[f32],
+    s: &[f32],
+    w: &[f32],
+    tmp: &mut Vec<f32>,
+) -> f64 {
+    tmp.resize(cell.fwd_scratch_cols().max(1), 0.0);
+    let mut out = vec![0.0f32; cell.state_cols()];
+    cell.forward(x, s, &mut out, tmp);
+    out.iter().zip(w).map(|(&o, &wj)| o as f64 * wj as f64).sum()
+}
+
+fn sample_indices(len: usize) -> Vec<usize> {
+    let step = (len / 7).max(1);
+    (0..len).step_by(step).collect()
+}
+
+fn assert_close(an: f64, fd: f64, what: &str) {
+    // rel err <= 1e-3 on f32 forward values (central differences)
+    let tol = 1e-3 * an.abs().max(fd.abs()).max(1.0);
+    assert!(
+        (fd - an).abs() <= tol,
+        "{what}: fd {fd} vs analytic {an} (tol {tol})"
+    );
+}
+
+/// Cell-level gradcheck: dL/dx, dL/ds (gather adjoints) and dL/dθ for
+/// every parameter tensor, against central differences.
+fn gradcheck_program(program: Program, seed: u64) {
+    let name = program.name.clone();
+    let mut rng = Rng::new(seed);
+    let mut cell = ProgramCell::random(program, &mut rng, 0.2).unwrap();
+    let xc = cell.x_cols();
+    let sc_all = cell.state_cols() * cell.arity();
+    let x: Vec<f32> = (0..xc).map(|_| rng.normal_f32(0.5)).collect();
+    let s: Vec<f32> = (0..sc_all).map(|_| rng.normal_f32(0.5)).collect();
+    let w: Vec<f32> =
+        (0..cell.state_cols()).map(|_| rng.normal_f32(1.0)).collect();
+
+    let mut gx = vec![0.0f32; xc];
+    let mut gs = vec![0.0f32; sc_all];
+    let mut tmp = vec![0.0f32; cell.bwd_scratch_cols()];
+    cell.backward(&x, &s, &w, &mut gx, &mut gs, &mut tmp);
+    let mut pg: Vec<Vec<f32>> =
+        cell.params().iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut ptmp = vec![0.0f32; cell.pg_scratch_cols()];
+    cell.acc_param_grads(&x, &s, &w, &mut pg, &mut ptmp);
+
+    let eps = 1e-2f32;
+    let mut ftmp = Vec::new();
+
+    for j in sample_indices(xc) {
+        let mut xp = x.clone();
+        xp[j] += eps;
+        let mut xm = x.clone();
+        xm[j] -= eps;
+        let fd = (loss_of(&cell, &xp, &s, &w, &mut ftmp)
+            - loss_of(&cell, &xm, &s, &w, &mut ftmp))
+            / (2.0 * eps as f64);
+        assert_close(gx[j] as f64, fd, &format!("{name} gx[{j}]"));
+    }
+    for j in sample_indices(sc_all) {
+        let mut sp = s.clone();
+        sp[j] += eps;
+        let mut sm = s.clone();
+        sm[j] -= eps;
+        let fd = (loss_of(&cell, &x, &sp, &w, &mut ftmp)
+            - loss_of(&cell, &x, &sm, &w, &mut ftmp))
+            / (2.0 * eps as f64);
+        assert_close(gs[j] as f64, fd, &format!("{name} gs[{j}]"));
+    }
+    for pi in 0..pg.len() {
+        for j in sample_indices(pg[pi].len()) {
+            let orig = cell.params()[pi][j];
+            cell.params_mut()[pi][j] = orig + eps;
+            let lp = loss_of(&cell, &x, &s, &w, &mut ftmp);
+            cell.params_mut()[pi][j] = orig - eps;
+            let lm = loss_of(&cell, &x, &s, &w, &mut ftmp);
+            cell.params_mut()[pi][j] = orig;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert_close(
+                pg[pi][j] as f64,
+                fd,
+                &format!("{name} param {pi}[{j}]"),
+            );
+        }
+    }
+}
+
+#[test]
+fn gradcheck_all_five_cells() {
+    let h = 5;
+    gradcheck_program(programs::lstm_program(h), 11);
+    gradcheck_program(programs::treelstm_program(h), 12);
+    gradcheck_program(programs::treefc_program(h), 13);
+    gradcheck_program(programs::gru_program(h), 14);
+    gradcheck_program(programs::cstreelstm_program(h), 15);
+}
+
+/// End-to-end frontier gradcheck: the whole choreography — pull, gather,
+/// scatter-add, per-row backward, sequential parameter accumulation —
+/// against finite differences on a real multi-graph batch (gru).
+#[test]
+fn host_frontier_gradcheck_end_to_end() {
+    let h = 4;
+    let vocab = 12usize;
+    let spec = CellSpec::lookup("gru", h).unwrap();
+    let mut rng = Rng::new(21);
+    let graphs: Vec<InputGraph> = (0..4)
+        .map(|_| {
+            let len = 2 + rng.below(5);
+            let toks: Vec<i32> =
+                (0..len).map(|_| rng.below(vocab) as i32).collect();
+            let labs = vec![-1; len];
+            InputGraph::chain(&toks, &labs)
+        })
+        .collect();
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let batch = GraphBatch::new(&refs, 1);
+    let tasks = schedule_host(&batch);
+    let params: Vec<Vec<f32>> = spec
+        .param_shapes()
+        .iter()
+        .map(|p| (0..p.elements()).map(|_| rng.normal_f32(0.2)).collect())
+        .collect();
+    let xtable: Vec<f32> =
+        (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+
+    let loss = |params: &[Vec<f32>], xtable: &[f32]| -> f64 {
+        let cell = spec.instantiate(params.to_vec()).unwrap();
+        let r = run_host_frontier(&batch, &tasks, &cell, xtable, 1, false);
+        batch
+            .roots
+            .iter()
+            .map(|&v| {
+                r.states
+                    .row(v as usize)
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum::<f64>()
+            })
+            .sum()
+    };
+
+    let cell = spec.instantiate(params.clone()).unwrap();
+    let r = run_host_frontier(&batch, &tasks, &cell, &xtable, 1, true);
+    let pg = r.param_grads.unwrap();
+    let xg = r.x_grads.unwrap();
+
+    let eps = 1e-2f32;
+    let close = |an: f64, fd: f64, what: &str| {
+        let tol = 2e-3 * an.abs().max(fd.abs()).max(1.0);
+        assert!((fd - an).abs() <= tol, "{what}: fd {fd} vs analytic {an}");
+    };
+    for (pi, idx) in [(0usize, 0usize), (0, 7), (1, 5), (2, 3)] {
+        let mut pp = params.clone();
+        pp[pi][idx] += eps;
+        let mut pm = params.clone();
+        pm[pi][idx] -= eps;
+        let fd = (loss(&pp, &xtable) - loss(&pm, &xtable)) / (2.0 * eps as f64);
+        close(pg[pi][idx] as f64, fd, &format!("param {pi}[{idx}]"));
+    }
+    // an embedding row that actually occurs (token of the first vertex)
+    let tok = batch.tokens[0].max(0) as usize;
+    let e_idx = tok * h + 1;
+    let mut xp = xtable.clone();
+    xp[e_idx] += eps;
+    let mut xm = xtable.clone();
+    xm[e_idx] -= eps;
+    let fd = (loss(&params, &xp) - loss(&params, &xm)) / (2.0 * eps as f64);
+    close(xg[e_idx] as f64, fd, "xtable entry");
+}
+
+fn schedule_host(batch: &GraphBatch) -> Vec<cavs::scheduler::Task> {
+    scheduler::schedule(batch, Policy::Batched, &scheduler::host_buckets())
+}
+
+/// Acceptance: the two program-only cells train host-only end-to-end
+/// with decreasing loss — no artifacts, no engine edits.
+#[test]
+fn program_only_cells_train_end_to_end() {
+    let gru = CellSpec::lookup("gru", 6).unwrap();
+    let data = Dataset::ptb_like_var(5, 12, 20, 8);
+    let logs = train_host_epochs(&gru, &data, 4, 0.02, 5, 2, 7, |_| {}).unwrap();
+    assert!(
+        logs.last().unwrap().loss < logs[0].loss,
+        "gru loss {} -> {}",
+        logs[0].loss,
+        logs.last().unwrap().loss
+    );
+
+    let cst = CellSpec::lookup("cstreelstm", 6).unwrap();
+    let data = Dataset::sst_like(6, 12, 20, 5);
+    let logs = train_host_epochs(&cst, &data, 4, 0.02, 5, 2, 7, |_| {}).unwrap();
+    assert!(
+        logs.last().unwrap().loss < logs[0].loss,
+        "cstreelstm loss {} -> {}",
+        logs[0].loss,
+        logs.last().unwrap().loss
+    );
+}
+
+/// Acceptance: a cell a *user* registers at runtime — written only as a
+/// Program — immediately trains AND serves through the generic stack.
+#[test]
+fn user_registered_cell_trains_and_serves() {
+    fn leaky_gru(h: usize) -> Program {
+        // a GRU variant with an extra tanh squash on the candidate mix
+        let mut p = Program::new("leaky-gru-e2e", 1, h);
+        let w = p.param("W", &[h, 2 * h]);
+        let u = p.param("U", &[h, 2 * h]);
+        let b = p.param("b", &[2 * h]);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let hp = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let gx = p.node(OpKind::MatMul { param: w }, vec![x], 2 * h);
+        let gh = p.node(OpKind::MatMul { param: u }, vec![hp], 2 * h);
+        let gsum = p.node(OpKind::Add, vec![gx, gh], 2 * h);
+        let pre = p.node(OpKind::AddBias { param: b }, vec![gsum], 2 * h);
+        let pz = p.node(OpKind::SliceCols { start: 0, len: h }, vec![pre], h);
+        let pn = p.node(OpKind::SliceCols { start: h, len: h }, vec![pre], h);
+        let z = p.node(OpKind::Sigmoid, vec![pz], h);
+        let n = p.node(OpKind::Tanh, vec![pn], h);
+        let zc = p.node(OpKind::OneMinus, vec![z], h);
+        let zn = p.node(OpKind::Mul, vec![zc, n], h);
+        let zh = p.node(OpKind::Mul, vec![z, hp], h);
+        let hnew = p.node(OpKind::Add, vec![zn, zh], h);
+        p.node(OpKind::Scatter, vec![hnew], h);
+        p.node(OpKind::Push, vec![hnew], h);
+        p
+    }
+    registry::register_cell("leaky-gru-e2e", leaky_gru).unwrap();
+    gradcheck_program(leaky_gru(5), 31);
+
+    let spec = CellSpec::lookup("leaky-gru-e2e", 6).unwrap();
+    let data = Dataset::ptb_like_var(9, 10, 20, 8);
+    let logs = train_host_epochs(&spec, &data, 4, 0.02, 4, 1, 3, |_| {}).unwrap();
+    assert!(logs.last().unwrap().loss < logs[0].loss);
+
+    // ...and serve it
+    let exec = HostExec::from_spec(&spec, 20, 2, 7).unwrap();
+    let mut server = Server::new(exec, ServeOpts::default().policy());
+    let q = RequestQueue::bounded(16);
+    let reqs = cavs::serve::loadgen::mixed_workload(3, 7, 20, 1);
+    for (id, g) in reqs.into_iter().enumerate() {
+        q.try_enqueue(Request::new(id as u64, g).unwrap()).unwrap();
+    }
+    q.close();
+    let mut n = 0usize;
+    server
+        .run(&q, |resp| {
+            assert!(resp.prediction.score.is_finite());
+            n += 1;
+        })
+        .unwrap();
+    assert_eq!(n, 7);
+}

@@ -2,7 +2,7 @@
 //! util::propcheck — proptest is unavailable offline). Replay failures
 //! with `CAVS_PROP_SEED=<seed>`; scale effort with `CAVS_PROP_CASES`.
 
-use cavs::exec::parallel::{run_host_frontier, HostFrontier, HostTreeFc};
+use cavs::exec::parallel::{run_host_frontier, HostFrontier, HostLstm, HostTreeFc};
 use cavs::exec::pool::{Sharder, WorkerPool};
 use cavs::graph::{synth, GraphBatch, InputGraph};
 use cavs::memory::{MemTraffic, StateBuffer};
@@ -184,7 +184,7 @@ fn prop_program_analysis_invariants() {
     check("prop2-invariants", 60, |rng| {
         let h = 1 + rng.below(64);
         for cell in [Cell::Lstm, Cell::TreeLstm, Cell::TreeFc] {
-            let p = cell.program(h).unwrap();
+            let p = cell.program(h);
             let a = p.analyze();
             // reachability recomputed naively here as the oracle
             let n = p.nodes.len();
@@ -609,5 +609,96 @@ fn prop_serve_plan_forward_matches_scheduler() {
             b.states.as_slice(),
             "planner and scheduler must compute identical states"
         );
+    });
+}
+
+/// The Program interpreter is **bitwise identical** to the hand-written
+/// host cells on the same weights: both sides perform the same f32
+/// operations in the same order (matmul accumulation order, add/bias
+/// association, gate math). Forward for LSTM; forward + structural
+/// backward for Tree-FC — across random shapes, batches and thread
+/// counts. This is the acceptance gate for the open CellSpec API: a
+/// user-defined program computes exactly what a hand-tuned cell would.
+#[test]
+fn prop_interpreter_matches_hand_written_cells_bitwise() {
+    use cavs::vertex::interp::ProgramCell;
+    use cavs::vertex::programs::{lstm_program, treefc_program};
+
+    check("interp-equivalence", 25, |rng| {
+        let vocab = 20usize;
+
+        // ---- Tree-FC: forward + backward ------------------------------
+        let graphs = random_graphs(rng);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 2);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        let h = 1 + rng.below(6);
+        let hand = HostTreeFc::random(h, 2, rng);
+        let interp =
+            ProgramCell::new(treefc_program(h), hand.params_vec()).unwrap();
+        let xtable: Vec<f32> =
+            (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+        let a = run_host_frontier(&batch, &tasks, &hand, &xtable, 1, true);
+        for threads in [1usize, 3] {
+            let b =
+                run_host_frontier(&batch, &tasks, &interp, &xtable, threads, true);
+            assert_eq!(
+                a.states.as_slice(),
+                b.states.as_slice(),
+                "treefc forward diverges (threads={threads})"
+            );
+            assert_eq!(
+                a.grads.as_ref().unwrap().as_slice(),
+                b.grads.as_ref().unwrap().as_slice(),
+                "treefc state gradients diverge (threads={threads})"
+            );
+            assert_eq!(
+                a.x_grads, b.x_grads,
+                "treefc input-table gradients diverge (threads={threads})"
+            );
+            assert_eq!(a.padded_rows, b.padded_rows);
+            // the interpreter additionally produces parameter gradients;
+            // they must be thread-count invariant (sequential row order)
+            let pg = b.param_grads.as_ref().unwrap();
+            assert_eq!(pg.len(), 4, "Wx, Wl, Wr, b");
+            assert!(pg.iter().flat_map(|g| g.iter()).all(|v| v.is_finite()));
+        }
+        let pg1 = run_host_frontier(&batch, &tasks, &interp, &xtable, 1, true)
+            .param_grads
+            .unwrap();
+        let pg4 = run_host_frontier(&batch, &tasks, &interp, &xtable, 4, true)
+            .param_grads
+            .unwrap();
+        assert_eq!(pg1, pg4, "param grads diverge across thread counts");
+
+        // ---- LSTM: forward (hand cell is forward-only) ----------------
+        let k = 1 + rng.below(6);
+        let chains: Vec<InputGraph> = (0..k)
+            .map(|_| {
+                let len = 1 + rng.below(10);
+                let toks: Vec<i32> =
+                    (0..len).map(|_| rng.below(vocab) as i32).collect();
+                let labs = vec![-1; len];
+                InputGraph::chain(&toks, &labs)
+            })
+            .collect();
+        let crefs: Vec<&InputGraph> = chains.iter().collect();
+        let cbatch = GraphBatch::new(&crefs, 1);
+        let ctasks = schedule(&cbatch, Policy::Batched, BUCKETS);
+        let hl = 1 + rng.below(5);
+        let hand = HostLstm::random(hl, rng);
+        let interp =
+            ProgramCell::new(lstm_program(hl), hand.params_vec()).unwrap();
+        let xt: Vec<f32> =
+            (0..vocab * hl).map(|_| rng.normal_f32(0.5)).collect();
+        let a = run_host_frontier(&cbatch, &ctasks, &hand, &xt, 1, false);
+        for threads in [1usize, 4] {
+            let b = run_host_frontier(&cbatch, &ctasks, &interp, &xt, threads, false);
+            assert_eq!(
+                a.states.as_slice(),
+                b.states.as_slice(),
+                "lstm forward diverges (threads={threads})"
+            );
+        }
     });
 }

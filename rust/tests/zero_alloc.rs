@@ -95,4 +95,26 @@ fn steady_state_frontier_fwd_bwd_loop_allocates_nothing() {
         assert!(hf.states().as_slice().iter().any(|&v| v != 0.0));
         assert!(hf.grads().unwrap().as_slice().iter().any(|&v| v != 0.0));
     }
+
+    // The Program interpreter obeys the same invariant: tape evaluation,
+    // the structural backward, and the sequential parameter-gradient
+    // accumulation all run on preplanned arenas — a user-registered cell
+    // costs no steady-state allocations either.
+    let spec = cavs::models::CellSpec::lookup("gru", h).unwrap();
+    let pc = spec.random_cell(&mut rng, 0.2).unwrap();
+    let mut hf = HostFrontier::new();
+    for _ in 0..2 {
+        hf.run(&batch, &tasks, &pc, &xtable, Sharder::Sequential, true);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        hf.run(&batch, &tasks, &pc, &xtable, Sharder::Sequential, true);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state interpreter fwd+bwd+pgrad heap-allocated"
+    );
+    assert!(hf.param_grads().unwrap().iter().flatten().any(|&v| v != 0.0));
 }
