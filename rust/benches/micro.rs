@@ -167,10 +167,66 @@ fn main() -> anyhow::Result<()> {
             ));
         }
     }
+
+    // --- compiled F vs reference interpreter on the same frontier -------
+    // `spec.random_cell` binds the vertex::opt plan (folded views, fused
+    // sweeps, level-batched blocked GEMMs); the unoptimized twin draws
+    // the identical parameter stream, so the per-point delta is the
+    // optimizer's win in isolation. `cavs bench --exp micro` is the
+    // gated (baseline-checked) version of this instrument.
+    {
+        use cavs::models::CellSpec;
+        let spec = CellSpec::lookup("lstm", h)?;
+        let mut prng = Rng::new(13);
+        let interp = spec.random_cell_unoptimized(&mut prng, 0.08)?;
+        let mut prng = Rng::new(13);
+        let opt = spec.random_cell(&mut prng, 0.08)?;
+        println!("compiled F (opt) vs reference interpreter, same frontier:");
+        for &threads in &thread_list {
+            let pool = WorkerPool::new(threads);
+            let ex = if threads > 1 {
+                Sharder::Pool(&pool)
+            } else {
+                Sharder::Sequential
+            };
+            let mut hf = HostFrontier::new();
+            let si = measure(warmup, reps, || {
+                hf.run(&cbatch, &ctasks, &interp, &xtable, ex, false);
+                std::hint::black_box(hf.states());
+            });
+            let so = measure(warmup, reps, || {
+                hf.run(&cbatch, &ctasks, &opt, &xtable, ex, false);
+                std::hint::black_box(hf.states());
+            });
+            println!(
+                "  threads={threads} interp {} -> opt {} ({:.2}x)",
+                fmt_duration(si.median_s),
+                fmt_duration(so.median_s),
+                si.median_s / so.median_s.max(1e-12)
+            );
+            points.push(point_json(
+                "lstm_interp",
+                "interp",
+                threads,
+                &si,
+                hf.traffic_bytes(),
+            ));
+            points.push(point_json(
+                "lstm_interp",
+                "opt",
+                threads,
+                &so,
+                hf.traffic_bytes(),
+            ));
+        }
+    }
+
     let report = Json::obj([
         ("exp".to_string(), Json::text("micro")),
         ("case".to_string(), Json::text("lstm_frontier_thread_scaling")),
+        ("git_rev".to_string(), Json::text(&cavs::bench::git_revision())),
         ("h".to_string(), Json::num(h as f64)),
+        ("cell".to_string(), Json::text("lstm")),
         ("vertices".to_string(), Json::num(cbatch.n_vertices as f64)),
         ("tasks".to_string(), Json::num(ctasks.len() as f64)),
         ("tiny".to_string(), Json::Bool(tiny)),

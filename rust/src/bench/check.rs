@@ -1,0 +1,400 @@
+//! The CI bench-regression gate: compare a fresh `BENCH_*.json` against a
+//! committed baseline and fail loudly when a tracked metric regresses by
+//! more than the tolerance (`cavs bench --exp <e> ... --check <baseline>`).
+//!
+//! Two report shapes are understood:
+//!
+//! * the [`Table`](super::Table) form (`title`/`header`/`rows`) that
+//!   `cavs bench` writes under `results/` — metric columns are classified
+//!   by header (`p50`/`p95`/`p99`/`seconds`/`… (s)` are lower-better;
+//!   `speedup`/`rps`/`Mverts/s` are higher-better; everything else is
+//!   informational), rows are keyed by their leading textual cells;
+//! * the `points` form that `cargo bench --bench micro` writes at the
+//!   repo root (keyed by `name`/`mode`/`threads`, `mean_s`/`p95_s`
+//!   lower-better).
+//!
+//! Ratio metrics (`speedup`, measured within one run) are
+//! machine-independent, which is what lets a committed baseline catch "a
+//! future PR gave the optimizer win back" on any runner; absolute-time
+//! baselines carry deliberate slack until regenerated on the runner class
+//! that gates them (`--check-update` rewrites the baseline in place).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Which way a metric is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    LowerBetter,
+    HigherBetter,
+}
+
+/// One comparable measurement extracted from a bench report.
+#[derive(Debug, Clone)]
+pub struct MetricPoint {
+    /// stable row identity ("closed inflight=4", "lstm t=2 opt", …)
+    pub key: String,
+    /// metric name (the column header / points field)
+    pub metric: String,
+    pub value: f64,
+    pub dir: Direction,
+}
+
+/// Classify a table column. `None` = informational, not gated.
+fn direction_of(header: &str) -> Option<Direction> {
+    let h = header.to_ascii_lowercase();
+    if h.contains("speedup")
+        || h.contains("rps")
+        || h.contains("verts/s")
+        || h.contains("throughput")
+    {
+        return Some(Direction::HigherBetter);
+    }
+    if matches!(h.as_str(), "p50" | "p95" | "p99" | "mean_s" | "p50_s" | "p95_s" | "p99_s" | "seconds")
+        || h.ends_with("(s)")
+    {
+        return Some(Direction::LowerBetter);
+    }
+    None
+}
+
+/// Parse a rendered metric cell back to a base-unit number: bare floats,
+/// `1.53x` speedups, `fmt_duration` suffixes (`ns`/`µs`/`ms`/`s`),
+/// `200rps`, `12.5%`. Returns None for text cells (`-`, `inflight=4`,
+/// histograms).
+pub fn parse_metric(cell: &str) -> Option<f64> {
+    let t = cell.trim();
+    if t.is_empty() || t == "-" {
+        return None;
+    }
+    let num_end = t
+        .find(|c: char| {
+            !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+        })
+        .unwrap_or(t.len());
+    let (num, suffix) = t.split_at(num_end);
+    let v: f64 = num.parse().ok()?;
+    match suffix.trim() {
+        "" | "s" | "x" | "rps" | "%" => Some(v),
+        "ns" => Some(v * 1e-9),
+        "µs" | "us" => Some(v * 1e-6),
+        "ms" => Some(v * 1e-3),
+        _ => None,
+    }
+}
+
+/// Extract the comparable points of a bench report (either shape).
+pub fn extract_points(j: &Json) -> Vec<MetricPoint> {
+    let mut out = Vec::new();
+    if let Some(points) = j.get("points").and_then(|p| p.as_arr()) {
+        for p in points {
+            let name = p.get("name").and_then(Json::as_str).unwrap_or("?");
+            let mode = p.get("mode").and_then(Json::as_str).unwrap_or("?");
+            let threads = p.get("threads").and_then(Json::as_f64).unwrap_or(0.0);
+            let key = format!("{name} {mode} t{threads}");
+            for metric in ["mean_s", "p95_s"] {
+                if let Some(v) = p.get(metric).and_then(Json::as_f64) {
+                    out.push(MetricPoint {
+                        key: key.clone(),
+                        metric: metric.to_string(),
+                        value: v,
+                        dir: Direction::LowerBetter,
+                    });
+                }
+            }
+        }
+        return out;
+    }
+    let (Some(header), Some(rows)) = (
+        j.get("header").and_then(Json::as_arr),
+        j.get("rows").and_then(Json::as_arr),
+    ) else {
+        return out;
+    };
+    let headers: Vec<&str> =
+        header.iter().map(|h| h.as_str().unwrap_or("")).collect();
+    let mut seen_keys: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
+    for row in rows {
+        let Some(cells) = row.as_arr() else { continue };
+        let text = |i: usize| cells.get(i).and_then(Json::as_str).unwrap_or("");
+        // key = leading cell, plus the second cell when it is a textual
+        // (non-metric, non-numeric) qualifier like "inflight=4"
+        let mut key = text(0).to_string();
+        if headers.len() > 1
+            && direction_of(headers[1]).is_none()
+            && parse_metric(text(1)).is_none()
+            && !text(1).is_empty()
+        {
+            key = format!("{key} {}", text(1));
+        }
+        // disambiguate repeated keys by occurrence index
+        let n = seen_keys.entry(key.clone()).or_insert(0);
+        *n += 1;
+        if *n > 1 {
+            key = format!("{key}#{n}");
+        }
+        for (ci, h) in headers.iter().enumerate() {
+            let Some(dir) = direction_of(h) else { continue };
+            let Some(v) = parse_metric(text(ci)) else { continue };
+            out.push(MetricPoint {
+                key: key.clone(),
+                metric: (*h).to_string(),
+                value: v,
+                dir,
+            });
+        }
+    }
+    out
+}
+
+/// Outcome of a baseline comparison.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    pub compared: usize,
+    /// metric regressed past the tolerance
+    pub regressions: Vec<String>,
+    /// baseline point absent from the fresh run (coverage shrank)
+    pub missing: Vec<String>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Compare fresh against baseline at a relative `tolerance` (0.2 = 20%).
+pub fn compare(current: &Json, baseline: &Json, tolerance: f64) -> CheckReport {
+    let cur = extract_points(current);
+    let base = extract_points(baseline);
+    let mut report = CheckReport::default();
+    for b in &base {
+        let Some(c) = cur
+            .iter()
+            .find(|c| c.key == b.key && c.metric == b.metric)
+        else {
+            report.missing.push(format!(
+                "{} / {}: in baseline but not in this run",
+                b.key, b.metric
+            ));
+            continue;
+        };
+        report.compared += 1;
+        if !c.value.is_finite() || !b.value.is_finite() || b.value == 0.0 {
+            continue;
+        }
+        let (bad, arrow) = match b.dir {
+            Direction::LowerBetter => {
+                (c.value > b.value * (1.0 + tolerance), "above")
+            }
+            Direction::HigherBetter => {
+                (c.value < b.value * (1.0 - tolerance), "below")
+            }
+        };
+        if bad {
+            let pct = 100.0 * (c.value - b.value) / b.value;
+            report.regressions.push(format!(
+                "{} / {}: {:.4} vs baseline {:.4} ({:+.1}%, {} the {:.0}% gate)",
+                c.key,
+                c.metric,
+                c.value,
+                b.value,
+                pct,
+                arrow,
+                tolerance * 100.0
+            ));
+        }
+    }
+    report
+}
+
+/// Load both files, compare, and fail with actionable output on any
+/// regression. `update_hint` is the exact command that refreshes the
+/// baseline (printed in the error so the fix is one paste away).
+pub fn run_check(
+    fresh_path: &str,
+    baseline_path: &str,
+    tolerance: f64,
+    update_hint: &str,
+) -> Result<()> {
+    let fresh_text = std::fs::read_to_string(fresh_path)
+        .with_context(|| format!("reading fresh bench report {fresh_path}"))?;
+    let base_text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading bench baseline {baseline_path}"))?;
+    let fresh = Json::parse(&fresh_text)
+        .map_err(|e| anyhow::anyhow!("parsing {fresh_path}: {e}"))?;
+    let base = Json::parse(&base_text)
+        .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+    if extract_points(&base).is_empty() {
+        bail!("baseline {baseline_path} contains no comparable metrics");
+    }
+    let report = compare(&fresh, &base, tolerance);
+    println!(
+        "bench check vs {baseline_path}: {} metrics compared, {} regressions, \
+         {} missing (tolerance {:.0}%)",
+        report.compared,
+        report.regressions.len(),
+        report.missing.len(),
+        tolerance * 100.0
+    );
+    if report.ok() {
+        return Ok(());
+    }
+    let mut msg = format!(
+        "bench regression vs {baseline_path} (tolerance {:.0}%):\n",
+        tolerance * 100.0
+    );
+    for r in report.regressions.iter().chain(report.missing.iter()) {
+        msg.push_str("  ");
+        msg.push_str(r);
+        msg.push('\n');
+    }
+    msg.push_str(
+        "If this change is intentional, refresh the baseline and commit it:\n",
+    );
+    msg.push_str(&format!("  {update_hint}\n"));
+    bail!(msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_rendered_metric_cells() {
+        assert_eq!(parse_metric("1.53x"), Some(1.53));
+        assert_eq!(parse_metric("0.003"), Some(0.003));
+        assert_eq!(parse_metric("12.5µs"), Some(12.5e-6));
+        assert_eq!(parse_metric("3.00ms"), Some(3.0e-3));
+        assert_eq!(parse_metric("2.50s"), Some(2.5));
+        assert_eq!(parse_metric("450ns"), Some(450e-9));
+        assert_eq!(parse_metric("200rps"), Some(200.0));
+        assert_eq!(parse_metric("-"), None);
+        assert_eq!(parse_metric("inflight=4"), None);
+        assert_eq!(parse_metric("b1:3 b4:2"), None);
+    }
+
+    #[test]
+    fn header_classification() {
+        assert_eq!(direction_of("speedup"), Some(Direction::HigherBetter));
+        assert_eq!(direction_of("rps"), Some(Direction::HigherBetter));
+        assert_eq!(direction_of("Mverts/s"), Some(Direction::HigherBetter));
+        assert_eq!(direction_of("p95"), Some(Direction::LowerBetter));
+        assert_eq!(direction_of("fwd (s)"), Some(Direction::LowerBetter));
+        assert_eq!(direction_of("seconds"), Some(Direction::LowerBetter));
+        assert_eq!(direction_of("loss"), None);
+        assert_eq!(direction_of("batch_mean"), None);
+        assert_eq!(direction_of("responses"), None);
+    }
+
+    fn table_json(rows: &[(&str, &str, &str)]) -> Json {
+        let mut t = crate::bench::Table::new(
+            "t",
+            &["mode", "offered", "rps"],
+        );
+        for (a, b, c) in rows {
+            t.row(vec![a.to_string(), b.to_string(), c.to_string()]);
+        }
+        Json::parse(&t.json()).unwrap()
+    }
+
+    #[test]
+    fn keys_include_textual_qualifiers_and_dedupe() {
+        let j = table_json(&[
+            ("closed", "inflight=1", "100"),
+            ("closed", "inflight=4", "250"),
+            ("open", "200rps", "180"),
+        ]);
+        let pts = extract_points(&j);
+        let keys: Vec<&str> = pts.iter().map(|p| p.key.as_str()).collect();
+        // "inflight=N" is textual and joins the key; "200rps" parses as a
+        // number (machine-dependent in full mode), so the open row keys
+        // on the mode alone — stable across runs
+        assert_eq!(keys, vec!["closed inflight=1", "closed inflight=4", "open"]);
+        assert!(pts.iter().all(|p| p.metric == "rps"));
+    }
+
+    #[test]
+    fn repeated_keys_disambiguate_by_occurrence() {
+        let j = table_json(&[
+            ("open", "100rps", "90"),
+            ("open", "200rps", "170"),
+        ]);
+        let pts = extract_points(&j);
+        let keys: Vec<&str> = pts.iter().map(|p| p.key.as_str()).collect();
+        assert_eq!(keys, vec!["open", "open#2"]);
+    }
+
+    #[test]
+    fn regressions_fire_in_the_right_direction() {
+        let base = table_json(&[("closed", "inflight=1", "100")]);
+        // rps is higher-better: 90 at 20% tolerance passes, 70 fails
+        let ok = table_json(&[("closed", "inflight=1", "90")]);
+        let bad = table_json(&[("closed", "inflight=1", "70")]);
+        assert!(compare(&ok, &base, 0.2).ok());
+        let r = compare(&bad, &base, 0.2);
+        assert_eq!(r.regressions.len(), 1, "{r:?}");
+        assert_eq!(r.compared, 1);
+
+        // lower-better via a seconds column
+        let mk = |v: &str| {
+            let mut t = crate::bench::Table::new("t", &["epoch", "seconds"]);
+            t.row(vec!["0".into(), v.into()]);
+            Json::parse(&t.json()).unwrap()
+        };
+        assert!(compare(&mk("0.110"), &mk("0.100"), 0.2).ok());
+        assert!(!compare(&mk("0.130"), &mk("0.100"), 0.2).ok());
+    }
+
+    #[test]
+    fn missing_points_are_failures() {
+        let base = table_json(&[
+            ("closed", "inflight=1", "100"),
+            ("closed", "inflight=4", "200"),
+        ]);
+        let cur = table_json(&[("closed", "inflight=1", "100")]);
+        let r = compare(&cur, &base, 0.2);
+        assert!(!r.ok());
+        assert_eq!(r.missing.len(), 1, "{r:?}");
+        // extra points in the current run are fine (coverage can grow)
+        let r = compare(&base, &cur, 0.2);
+        assert!(r.ok());
+    }
+
+    #[test]
+    fn points_format_is_supported() {
+        let mk = |mean: f64| {
+            Json::obj([
+                (
+                    "points".to_string(),
+                    Json::arr([Json::obj([
+                        ("name".to_string(), Json::text("lstm_frontier")),
+                        ("mode".to_string(), Json::text("pool")),
+                        ("threads".to_string(), Json::num(2.0)),
+                        ("mean_s".to_string(), Json::num(mean)),
+                        ("p95_s".to_string(), Json::num(mean * 1.2)),
+                    ])]),
+                ),
+            ])
+        };
+        let r = compare(&mk(0.010), &mk(0.010), 0.2);
+        assert_eq!(r.compared, 2);
+        assert!(r.ok());
+        assert!(!compare(&mk(0.020), &mk(0.010), 0.2).ok());
+    }
+
+    #[test]
+    fn speedup_columns_guard_the_optimizer_win() {
+        let mk = |s: &str| {
+            let mut t = crate::bench::Table::new("t", &["config", "speedup"]);
+            t.row(vec!["lstm t=1 opt".into(), s.into()]);
+            Json::parse(&t.json()).unwrap()
+        };
+        // baseline 1.15: anything >= 0.92 passes at 20%; a run where the
+        // optimized path got *slower* than the reference (0.9x) fails
+        assert!(compare(&mk("1.60x"), &mk("1.15x"), 0.2).ok());
+        assert!(!compare(&mk("0.90x"), &mk("1.15x"), 0.2).ok());
+    }
+}

@@ -496,12 +496,13 @@ pub fn loc(_rt: &Runtime) -> Result<Table> {
 }
 
 /// Online-serving sweep (`cavs bench --exp serve`): offered load vs
-/// latency over the `serve` subsystem, on the host reference cell so the
-/// bench runs everywhere (CI smoke uses `tiny`). Closed-loop rows sweep
-/// concurrency (capacity); open-loop rows offer fractions of the measured
-/// capacity and show the latency curve + admission-control shedding.
-/// Writes `results/BENCH_serve.json`.
-pub fn serve(scale: Scale, tiny: bool) -> Result<Table> {
+/// latency over the `serve` subsystem, on the Tree-FC `ProgramCell`
+/// (compiled schedule by default, reference interpreter under `no_opt`)
+/// so the bench runs everywhere (CI smoke uses `tiny`). Closed-loop rows
+/// sweep concurrency (capacity); open-loop rows offer fixed rates in
+/// tiny mode (stable row keys for the regression gate) or fractions of
+/// the measured capacity otherwise. Writes `results/BENCH_serve.json`.
+pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
     use crate::serve::loadgen::{
         mixed_workload, run_closed_loop, run_open_loop,
     };
@@ -519,16 +520,20 @@ pub fn serve(scale: Scale, tiny: bool) -> Result<Table> {
         queue_cap: 4 * max_batch,
     };
     let graphs = mixed_workload(11, 64.min(total), vocab, 2);
+    let spec = CellSpec::lookup("treefc", h)?;
     let fresh_server = || {
-        Server::new(
-            HostExec::tree_fc(h, 2, vocab, scale.threads.max(1), 7),
-            opts.policy(),
-        )
+        let exec = if opt {
+            HostExec::from_spec(&spec, vocab, scale.threads.max(1), 7)
+        } else {
+            HostExec::from_spec_unoptimized(&spec, vocab, scale.threads.max(1), 7)
+        }
+        .expect("treefc spec instantiates");
+        Server::new(exec, opts.policy())
     };
     let mut table = Table::new(
         &format!(
             "serve: offered load vs latency ({total} mixed tree/seq requests, \
-             h={h}, max_batch={max_batch}, threads={})",
+             h={h}, max_batch={max_batch}, threads={}, opt={opt})",
             scale.threads.max(1)
         ),
         &[
@@ -536,6 +541,10 @@ pub fn serve(scale: Scale, tiny: bool) -> Result<Table> {
             "p50", "p95", "p99", "qdepth_max", "batch_hist",
         ],
     );
+    table.tag("cell", "treefc");
+    table.tag("threads", scale.threads.max(1));
+    table.tag("opt", opt);
+    table.tag("tiny", tiny);
     let mut row = |mode: &str, offered: String, r: &crate::serve::ServeReport| {
         table.row(vec![
             mode.into(),
@@ -562,24 +571,150 @@ pub fn serve(scale: Scale, tiny: bool) -> Result<Table> {
         row("closed", format!("inflight={c}"), &r);
     }
 
-    // open loop: offered-rate sweep around the measured capacity
-    let fracs: &[f64] = if tiny { &[0.5] } else { &[0.25, 0.5, 0.8, 1.2] };
-    for &f in fracs {
-        let rate = (capacity_rps * f).max(1.0);
+    // open loop: fixed offered rates in tiny mode (stable row keys for
+    // the CI regression gate), capacity fractions otherwise
+    if tiny {
         let mut sv = fresh_server();
-        let r = run_open_loop(&mut sv, &opts, &graphs, total, rate, 23)?;
-        row("open", format!("{rate:.0}rps"), &r);
+        let r = run_open_loop(&mut sv, &opts, &graphs, total, 200.0, 23)?;
+        row("open", "200rps".to_string(), &r);
+    } else {
+        for &f in &[0.25f64, 0.5, 0.8, 1.2] {
+            let rate = (capacity_rps * f).max(1.0);
+            let mut sv = fresh_server();
+            let r = run_open_loop(&mut sv, &opts, &graphs, total, rate, 23)?;
+            row("open", format!("{rate:.0}rps"), &r);
+        }
     }
 
     write_results("serve", &table)?;
     Ok(table)
 }
 
+/// Host-path optimizer microbenchmark (`cavs bench --exp micro`): the
+/// compiled schedule — folded views, wide GEMMs, fused elementwise
+/// sweeps, frontier-level row-blocked execution — against the reference
+/// per-row interpreter on the same weights and batches, within one
+/// process. The `speedup` columns are machine-relative ratios, which is
+/// what lets a committed tiny baseline catch "a later PR gave the
+/// optimizer win back" on any runner (`--check`). Writes
+/// `results/BENCH_micro.json`.
+pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
+    use crate::exec::parallel::HostFrontier;
+    use crate::exec::pool::{Sharder, WorkerPool};
+    use crate::graph::{GraphBatch, InputGraph};
+    use crate::scheduler::{self, Policy};
+    use crate::util::rng::Rng;
+    use crate::util::stats::measure;
+
+    let (h, n_chains, chain_len, n_trees, vocab, mut thread_list, warmup, reps) =
+        if tiny {
+            (16usize, 16usize, 8usize, 12usize, 30usize, vec![1usize, 2], 1usize, 3usize)
+        } else {
+            (64, 64, 32, 48, 100, vec![1, 2, 4], 2, 8)
+        };
+    // honor --threads by extending the sweep (the standard points keep
+    // their stable row keys for the --check baselines)
+    let want = scale.threads.max(1);
+    if !thread_list.contains(&want) {
+        thread_list.push(want);
+    }
+    let mut rng = Rng::new(7);
+    let chains: Vec<InputGraph> = (0..n_chains)
+        .map(|_| {
+            let toks: Vec<i32> =
+                (0..chain_len).map(|_| rng.below(vocab) as i32).collect();
+            let labs = vec![-1i32; chain_len];
+            InputGraph::chain(&toks, &labs)
+        })
+        .collect();
+    let crefs: Vec<&InputGraph> = chains.iter().collect();
+    let lstm_batch = GraphBatch::new(&crefs, 1);
+    let trees = Dataset::sst_like(11, n_trees, vocab, 5);
+    let trefs: Vec<&InputGraph> = trees.graphs.iter().collect();
+    let tree_batch = GraphBatch::new(&trefs, 2);
+    let buckets = scheduler::host_buckets();
+
+    let mut table = Table::new(
+        &format!(
+            "micro: compiled F (opt) vs reference interpreter (h={h}, \
+             fwd and fwd+bwd mean over {reps} reps)"
+        ),
+        &["config", "fwd (s)", "fwd+bwd (s)", "Mverts/s", "speedup", "speedup+bwd"],
+    );
+    table.tag("cell", "lstm,treelstm");
+    table.tag("opt", "both");
+    table.tag("tiny", tiny);
+    table.tag("threads", thread_list.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","));
+
+    for (name, batch) in [("lstm", &lstm_batch), ("treelstm", &tree_batch)] {
+        let tasks = scheduler::schedule(batch, Policy::Batched, &buckets);
+        let spec = CellSpec::lookup(name, h)?;
+        let mut prng = Rng::new(13);
+        let reference = spec.random_cell_unoptimized(&mut prng, 0.08)?;
+        let mut prng = Rng::new(13);
+        let optimized = spec.random_cell(&mut prng, 0.08)?;
+        let xtable: Vec<f32> =
+            (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+        for &threads in &thread_list {
+            let pool = WorkerPool::new(threads);
+            let ex = if threads > 1 {
+                Sharder::Pool(&pool)
+            } else {
+                Sharder::Sequential
+            };
+            let mut hf = HostFrontier::new();
+            let fi = measure(warmup, reps, || {
+                hf.run(batch, &tasks, &reference, &xtable, ex, false);
+            });
+            let fbi = measure(warmup, reps, || {
+                hf.run(batch, &tasks, &reference, &xtable, ex, true);
+            });
+            let fo = measure(warmup, reps, || {
+                hf.run(batch, &tasks, &optimized, &xtable, ex, false);
+            });
+            let fbo = measure(warmup, reps, || {
+                hf.run(batch, &tasks, &optimized, &xtable, ex, true);
+            });
+            let mverts = |s: f64| batch.n_vertices as f64 / s.max(1e-12) / 1e6;
+            table.row(vec![
+                format!("{name} t={threads} interp"),
+                format!("{:.5}", fi.mean_s),
+                format!("{:.5}", fbi.mean_s),
+                format!("{:.2}", mverts(fi.mean_s)),
+                "-".into(),
+                "-".into(),
+            ]);
+            let sp = fi.mean_s / fo.mean_s.max(1e-12);
+            let spb = fbi.mean_s / fbo.mean_s.max(1e-12);
+            table.row(vec![
+                format!("{name} t={threads} opt"),
+                format!("{:.5}", fo.mean_s),
+                format!("{:.5}", fbo.mean_s),
+                format!("{:.2}", mverts(fo.mean_s)),
+                format!("{sp:.2}x"),
+                format!("{spb:.2}x"),
+            ]);
+            crate::info!(
+                "micro {name} t={threads}: fwd {:.5}s -> {:.5}s ({sp:.2}x), \
+                 fwd+bwd {:.5}s -> {:.5}s ({spb:.2}x)",
+                fi.mean_s,
+                fo.mean_s,
+                fbi.mean_s,
+                fbo.mean_s
+            );
+        }
+    }
+    write_results("micro", &table)?;
+    Ok(table)
+}
+
 /// Host-interpreter training curve for any registered cell
 /// (`cavs bench --exp train --cell gru`): artifact-free, so the open-API
 /// training path has a CI smoke (`--tiny true`) on clean checkouts.
+/// Trains through the compiled schedule by default (`opt = false` is the
+/// `no_opt` escape hatch — bitwise-identical curve, reference speed).
 /// Writes `results/BENCH_train.json`.
-pub fn train_host(cell: &str, scale: Scale, tiny: bool) -> Result<Table> {
+pub fn train_host(cell: &str, scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
     use crate::graph::Dataset as Ds;
     use crate::train::host::train_host_epochs;
 
@@ -597,11 +732,15 @@ pub fn train_host(cell: &str, scale: Scale, tiny: bool) -> Result<Table> {
     let mut table = Table::new(
         &format!(
             "train (host interpreter): {cell} h={h}, {n} samples, bs={bs}, \
-             threads={} — loss must decrease",
+             threads={}, opt={opt} — loss must decrease",
             scale.threads.max(1)
         ),
         &["epoch", "loss", "seconds", "vertices"],
     );
+    table.tag("cell", cell);
+    table.tag("threads", scale.threads.max(1));
+    table.tag("opt", opt);
+    table.tag("tiny", tiny);
     let logs = train_host_epochs(
         &spec,
         &data,
@@ -610,6 +749,7 @@ pub fn train_host(cell: &str, scale: Scale, tiny: bool) -> Result<Table> {
         epochs,
         scale.threads.max(1),
         7,
+        opt,
         |log| {
             crate::info!(
                 "train {cell}: epoch {} loss {:.4} ({:.2}s)",
@@ -636,8 +776,10 @@ pub fn train_host(cell: &str, scale: Scale, tiny: bool) -> Result<Table> {
     Ok(table)
 }
 
-/// Run every experiment (the EXPERIMENTS.md driver).
-pub fn run_all(rt: &Runtime, scale: Scale) -> Result<Vec<Table>> {
+/// Run every experiment (the EXPERIMENTS.md driver). `opt` is the host
+/// interpreter's compiled-schedule switch (config `opt` / `no_opt`),
+/// honored by the serve sweep; `micro` always measures both sides.
+pub fn run_all(rt: &Runtime, scale: Scale, opt: bool) -> Result<Vec<Table>> {
     let mut out = Vec::new();
     for p in ['a', 'b', 'c', 'd', 'e', 'f', 'g', 'h'] {
         out.push(fig8(rt, p, scale)?);
@@ -649,6 +791,7 @@ pub fn run_all(rt: &Runtime, scale: Scale) -> Result<Vec<Table>> {
     out.push(fig10(rt, scale)?);
     out.push(table2(rt, scale)?);
     out.push(loc(rt)?);
-    out.push(serve(scale, false)?);
+    out.push(serve(scale, false, opt)?);
+    out.push(micro(scale, false)?);
     Ok(out)
 }

@@ -4,6 +4,7 @@
 //! criterion is unavailable offline, so measurement (warmup + reps +
 //! summary statistics) is provided by `util::stats` and this module.
 
+pub mod check;
 pub mod experiments;
 
 use anyhow::Result;
@@ -194,11 +195,31 @@ pub fn run_epoch(
     Ok(m)
 }
 
+/// The git revision the bench ran at: `git rev-parse`, falling back to
+/// `GITHUB_SHA` (CI checkouts without a `.git` dir), then `"unknown"`.
+/// Stamped into every `BENCH_*.json` so regression comparisons and the
+/// CI artifact trail stay traceable.
+pub fn git_revision() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .or_else(|| std::env::var("GITHUB_SHA").ok())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Simple fixed-width table renderer for the experiment outputs.
 pub struct Table {
     pub title: String,
     pub header: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    /// provenance stamps (`cell`, `threads`, `opt`, …) emitted into the
+    /// JSON form's `meta` object; `git_rev` is added automatically
+    pub meta: Vec<(String, String)>,
 }
 
 impl Table {
@@ -207,7 +228,13 @@ impl Table {
             title: title.to_string(),
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            meta: Vec::new(),
         }
+    }
+
+    /// Attach a provenance stamp (shows up under `meta` in the JSON).
+    pub fn tag(&mut self, key: &str, val: impl std::fmt::Display) {
+        self.meta.push((key.to_string(), val.to_string()));
     }
 
     pub fn row(&mut self, cells: Vec<String>) {
@@ -258,11 +285,22 @@ impl Table {
     }
 
     /// Machine-readable JSON form (`BENCH_<exp>.json`), so the perf
-    /// trajectory is trackable across PRs without scraping tables.
+    /// trajectory is trackable across PRs without scraping tables. Always
+    /// carries a `meta` object with the git revision plus any
+    /// [`Table::tag`] stamps (cell, thread count, opt on/off).
     pub fn json(&self) -> String {
         use crate::util::json::Json;
+        let mut meta: Vec<(String, Json)> = self
+            .meta
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::text(v)))
+            .collect();
+        if !self.meta.iter().any(|(k, _)| k == "git_rev") {
+            meta.push(("git_rev".to_string(), Json::text(&git_revision())));
+        }
         Json::obj([
             ("title".to_string(), Json::text(&self.title)),
+            ("meta".to_string(), Json::obj(meta)),
             (
                 "header".to_string(),
                 Json::arr(self.header.iter().map(|h| Json::text(h))),
@@ -304,6 +342,23 @@ mod tests {
         let j = crate::util::json::Json::parse(&t.json()).unwrap();
         assert_eq!(j.get("title").unwrap().as_str(), Some("demo"));
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        // every BENCH json is stamped with provenance
+        let meta = j.get("meta").unwrap();
+        assert!(meta.get("git_rev").is_some());
+    }
+
+    #[test]
+    fn table_tags_flow_into_json_meta() {
+        let mut t = Table::new("stamped", &["a"]);
+        t.tag("cell", "lstm");
+        t.tag("threads", 4);
+        t.tag("opt", true);
+        let j = crate::util::json::Json::parse(&t.json()).unwrap();
+        let meta = j.get("meta").unwrap();
+        assert_eq!(meta.get("cell").unwrap().as_str(), Some("lstm"));
+        assert_eq!(meta.get("threads").unwrap().as_str(), Some("4"));
+        assert_eq!(meta.get("opt").unwrap().as_str(), Some("true"));
+        assert!(meta.get("git_rev").is_some());
     }
 
     #[test]

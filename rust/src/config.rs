@@ -36,6 +36,11 @@ pub struct Config {
     /// persistent worker pool (default) vs the spawn-per-primitive scoped
     /// baseline (`--set pool=off`, for A/B perf comparisons)
     pub pool: bool,
+    /// execute host cells through the compiled `vertex::opt` schedule
+    /// (default). `--set no_opt=true` (or `opt=off`) falls back to the
+    /// reference per-row interpreter — bitwise identical, just slower;
+    /// the A/B escape hatch for the bench-regression harness.
+    pub opt: bool,
     /// `cavs serve`: most requests merged into one batch
     pub serve_max_batch: usize,
     /// `cavs serve`: dynamic-batching deadline in milliseconds (how long
@@ -69,6 +74,7 @@ impl Default for Config {
             streaming: false,
             threads: 1,
             pool: true,
+            opt: true,
             serve_max_batch: 32,
             serve_deadline_ms: 2.0,
             serve_queue_cap: 256,
@@ -140,6 +146,9 @@ impl Config {
                 self.threads = t;
             }
             "pool" => self.pool = parse_bool(val)?,
+            "opt" => self.opt = parse_bool(val)?,
+            // the spelled-out escape hatch: `--set no_opt=true`
+            "no_opt" => self.opt = !parse_bool(val)?,
             "serve_max_batch" => {
                 let b: usize = val.parse()?;
                 if b == 0 {
@@ -254,6 +263,20 @@ mod tests {
         assert_eq!(c.engine_opts(true).exec.threads, 8);
         assert!(c.apply("threads", "0").is_err());
         assert!(c.apply("threads", "lots").is_err());
+    }
+
+    #[test]
+    fn opt_key_and_no_opt_alias() {
+        let mut c = Config::default();
+        assert!(c.opt, "the compiled schedule is the default");
+        c.apply("opt", "off").unwrap();
+        assert!(!c.opt);
+        c.apply("opt", "on").unwrap();
+        c.apply("no_opt", "true").unwrap();
+        assert!(!c.opt, "no_opt=true disables the optimizer");
+        c.apply("no_opt", "false").unwrap();
+        assert!(c.opt);
+        assert!(c.apply("no_opt", "maybe").is_err());
     }
 
     #[test]

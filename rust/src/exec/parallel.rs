@@ -44,6 +44,11 @@ use crate::util::rng::Rng;
 
 /// Execution-layer options threaded from the CLI (`--threads N`, config
 /// key `pool`) through `config::Config` into `exec::EngineOpts`.
+///
+/// The compiled-vs-reference interpreter switch (`opt` / `no_opt` config
+/// keys) lives on `config::Config` and is consumed where host cells are
+/// *instantiated* (`CellSpec::instantiate` vs `instantiate_unoptimized`);
+/// the PJRT engine's analogue of that switch is `fusion`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecOpts {
     /// Worker threads for intra-task row sharding. 1 = the sequential
@@ -296,6 +301,63 @@ pub trait HostCell: Sync {
         let _ = (x, s, g_out, pg, tmp);
         panic!("this host cell has no parameter gradients");
     }
+
+    /// Level-granular execution hook: a cell that can evaluate whole row
+    /// blocks per (fused) op returns its [`LevelCell`] view and
+    /// [`HostFrontier`] switches from row-at-a-time `forward`/`backward`
+    /// calls to op-outer level sweeps (compiled `ProgramCell`s do; the
+    /// hand-written reference cells keep the per-row path).
+    fn level(&self) -> Option<&dyn LevelCell> {
+        None
+    }
+}
+
+/// Frontier-level execution of a vertex function: instead of evaluating
+/// F row by row, the executor gathers a level's rows once and the cell
+/// runs each (fused) op of its compiled schedule as a batched sweep over
+/// a contiguous row range — row-blocked GEMMs reuse each weight row
+/// across vertices, fused elementwise chains make one pass per row.
+///
+/// Shard contract: `rows` is the shard's absolute row range within the
+/// task. `x`, `s` and `g_out` are the task's **full** blocks (shared,
+/// indexed absolutely); `out`, `gx`, `gs`, `tape` and `adj` are the
+/// shard's **own** contiguous sub-blocks (indexed relative to
+/// `rows.start`). Per-row arithmetic is identical to the cell's per-row
+/// path, so results are bitwise identical for every shard plan.
+pub trait LevelCell: Sync {
+    /// Floats per row of the level value tape.
+    fn lvl_tape_cols(&self) -> usize;
+    /// Floats per row of the level adjoint tape.
+    fn lvl_adj_cols(&self) -> usize;
+    /// Forward: fill `tape` for the shard's rows and write the scattered
+    /// state into `out` (`state_cols` per row).
+    fn lvl_forward(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        s: &[f32],
+        out: &mut [f32],
+        tape: &mut [f32],
+    );
+    /// Backward: recompute `tape`, seed adjoints from `g_out`, run the
+    /// reverse VJP sweep; write `gx`/`gs` (arrive zeroed) and leave
+    /// `tape`/`adj` filled for [`LevelCell::lvl_param_grads`].
+    fn lvl_backward(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [f32],
+        tape: &mut [f32],
+        adj: &mut [f32],
+    );
+    /// Sequential parameter-gradient accumulation over the task's first
+    /// `rows` rows of a completed `tape`/`adj` pair (row order, then
+    /// node order — the reference accumulation order, bitwise invariant
+    /// across thread counts).
+    fn lvl_param_grads(&self, rows: usize, tape: &[f32], adj: &[f32], pg: &mut [Vec<f32>]);
 }
 
 use crate::vertex::interp::sigmoid;
@@ -552,6 +614,10 @@ pub struct HostFrontier {
     gs: Vec<f32>,
     /// per-shard cell temporaries (`threads * max(fwd, bwd) scratch cols`)
     cell_tmp: Vec<f32>,
+    /// level value tape (`bucket * lvl_tape_cols`, level-cell path only)
+    lvl_tape: Vec<f32>,
+    /// level adjoint tape (`bucket * lvl_adj_cols`, level-cell path only)
+    lvl_adj: Vec<f32>,
     /// single-shard temporary for the sequential param-grad rows
     pg_tmp: Vec<f32>,
     /// flat per-tensor parameter-gradient accumulators
@@ -574,6 +640,18 @@ fn arena(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
     let s = &mut buf[..n];
     s.fill(0.0);
     s
+}
+
+/// Grow-only arena slice **without** the zero fill — for buffers whose
+/// every read slot is overwritten before use (the level tapes: all fresh
+/// storage is written by the schedule, adjoint rows are zeroed per row by
+/// the cell). Skipping the memset keeps the level path's per-task cost at
+/// the work it actually does.
+fn arena_dirty(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
 }
 
 /// Arena forced to exactly `n` elements (for buffers whose full length is
@@ -639,6 +717,8 @@ impl HostFrontier {
             gx: Vec::new(),
             gs: Vec::new(),
             cell_tmp: Vec::new(),
+            lvl_tape: Vec::new(),
+            lvl_adj: Vec::new(),
             pg_tmp: Vec::new(),
             pgrads: Vec::new(),
             states: StateBuffer::new(0, 0),
@@ -789,9 +869,44 @@ impl HostFrontier {
                 );
             }
 
-            // evaluate F over row shards (per-shard cell temporaries)
+            // evaluate F: level-batched (op-outer sweeps over row shards)
+            // when the cell is compiled, per-row otherwise — bitwise
+            // identical either way
             let out = arena(&mut self.out, b * sc);
-            {
+            if let Some(lc) = cell.level() {
+                let ltc = lc.lvl_tape_cols();
+                let tape = arena_dirty(&mut self.lvl_tape, m * ltc);
+                let shards = ex.threads().min(m).max(1);
+                let locals = self.scratch.locals_for(shards);
+                let slots = ShardSlots::new(&mut *locals);
+                let out_ptr = SendPtr(out.as_mut_ptr());
+                let tape_ptr = SendPtr(tape.as_mut_ptr());
+                let xr: &[f32] = &*x;
+                let sr: &[f32] = &*sall;
+                ex.run(shards, &|sh: usize| {
+                    let range = shard_range(m, shards, sh);
+                    // SAFETY: shard sh owns a disjoint contiguous row
+                    // range — disjoint sc-/ltc-strided sub-blocks of
+                    // `out` / `tape` — and its own traffic slot.
+                    let tl = unsafe { slots.get(sh) };
+                    let out_sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out_ptr.0.add(range.start * sc),
+                            range.len() * sc,
+                        )
+                    };
+                    let tape_sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            tape_ptr.0.add(range.start * ltc),
+                            range.len() * ltc,
+                        )
+                    };
+                    tl.rows += range.len() as u64;
+                    lc.lvl_forward(range, xr, sr, out_sub, tape_sub);
+                });
+                let done: u64 = locals.iter().map(|t| t.rows).sum();
+                self.padded_rows += b - done as usize;
+            } else {
                 let out_ptr = SendPtr(out.as_mut_ptr());
                 let xr: &[f32] = &*x;
                 let sr: &[f32] = &*sall;
@@ -854,62 +969,114 @@ impl HostFrontier {
             let g_out = arena(&mut self.g_out, m * sc);
             self.grads.gather_mt(&self.ids, g_out, ex, &self.traffic);
 
-            // adjoint of F over row shards
+            // adjoint of F over row shards: level-batched when compiled
+            // (one op-outer reverse sweep per shard, tape + adjoints left
+            // filled for the parameter pass), per-row otherwise
             let gx = arena(&mut self.gx, m * xc);
             let gs = arena(&mut self.gs, m * asc);
-            {
+            if let Some(lc) = cell.level() {
+                let ltc = lc.lvl_tape_cols();
+                let lac = lc.lvl_adj_cols();
+                let tape = arena_dirty(&mut self.lvl_tape, m * ltc);
+                let adj = arena_dirty(&mut self.lvl_adj, m * lac);
+                let shards = ex.threads().min(m).max(1);
                 let gx_ptr = SendPtr(gx.as_mut_ptr());
                 let gs_ptr = SendPtr(gs.as_mut_ptr());
+                let tape_ptr = SendPtr(tape.as_mut_ptr());
+                let adj_ptr = SendPtr(adj.as_mut_ptr());
                 let gr: &[f32] = &*g_out;
-                for_rows_sharded(
-                    ex,
-                    m,
-                    &mut self.scratch,
-                    &mut self.cell_tmp,
-                    tc,
-                    |i, tmp| {
-                        // SAFETY: each row i is visited by exactly one
-                        // shard; rows are disjoint xc-/asc-blocks of
-                        // `gx` / `gs`.
-                        let gxr = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                gx_ptr.0.add(i * xc),
-                                xc,
-                            )
-                        };
-                        let gsr = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                gs_ptr.0.add(i * asc),
-                                asc,
-                            )
-                        };
-                        cell.backward(
+                ex.run(shards, &|sh: usize| {
+                    let range = shard_range(m, shards, sh);
+                    // SAFETY: shard sh owns a disjoint contiguous row
+                    // range — disjoint strided sub-blocks of `gx`, `gs`,
+                    // `tape` and `adj`.
+                    let gx_sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            gx_ptr.0.add(range.start * xc),
+                            range.len() * xc,
+                        )
+                    };
+                    let gs_sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            gs_ptr.0.add(range.start * asc),
+                            range.len() * asc,
+                        )
+                    };
+                    let tape_sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            tape_ptr.0.add(range.start * ltc),
+                            range.len() * ltc,
+                        )
+                    };
+                    let adj_sub = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            adj_ptr.0.add(range.start * lac),
+                            range.len() * lac,
+                        )
+                    };
+                    lc.lvl_backward(range, x, sall, gr, gx_sub, gs_sub, tape_sub, adj_sub);
+                });
+                // parameter gradients straight off the completed level
+                // tapes: row order then node order — the reference
+                // accumulation order, no per-row recomputation needed
+                if self.has_pgrads {
+                    lc.lvl_param_grads(m, tape, adj, &mut self.pgrads);
+                }
+            } else {
+                {
+                    let gx_ptr = SendPtr(gx.as_mut_ptr());
+                    let gs_ptr = SendPtr(gs.as_mut_ptr());
+                    let gr: &[f32] = &*g_out;
+                    for_rows_sharded(
+                        ex,
+                        m,
+                        &mut self.scratch,
+                        &mut self.cell_tmp,
+                        tc,
+                        |i, tmp| {
+                            // SAFETY: each row i is visited by exactly one
+                            // shard; rows are disjoint xc-/asc-blocks of
+                            // `gx` / `gs`.
+                            let gxr = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    gx_ptr.0.add(i * xc),
+                                    xc,
+                                )
+                            };
+                            let gsr = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    gs_ptr.0.add(i * asc),
+                                    asc,
+                                )
+                            };
+                            cell.backward(
+                                &x[i * xc..(i + 1) * xc],
+                                &sall[i * asc..(i + 1) * asc],
+                                &gr[i * sc..(i + 1) * sc],
+                                gxr,
+                                gsr,
+                                tmp,
+                            );
+                        },
+                    );
+                }
+
+                // parameter gradients: sequential row order (bitwise
+                // invariant across thread counts), recomputing the row's
+                // tape inside the cell — the host analogue of the engine's
+                // lazy param-grad pass
+                if self.has_pgrads {
+                    let pc = cell.pg_scratch_cols();
+                    let pg_tmp = &mut self.pg_tmp[..pc];
+                    for i in 0..m {
+                        cell.acc_param_grads(
                             &x[i * xc..(i + 1) * xc],
                             &sall[i * asc..(i + 1) * asc],
-                            &gr[i * sc..(i + 1) * sc],
-                            gxr,
-                            gsr,
-                            tmp,
+                            &g_out[i * sc..(i + 1) * sc],
+                            &mut self.pgrads,
+                            pg_tmp,
                         );
-                    },
-                );
-            }
-
-            // parameter gradients: sequential row order (bitwise
-            // invariant across thread counts), recomputing the row's
-            // tape inside the cell — the host analogue of the engine's
-            // lazy param-grad pass
-            if self.has_pgrads {
-                let pc = cell.pg_scratch_cols();
-                let pg_tmp = &mut self.pg_tmp[..pc];
-                for i in 0..m {
-                    cell.acc_param_grads(
-                        &x[i * xc..(i + 1) * xc],
-                        &sall[i * asc..(i + 1) * asc],
-                        &g_out[i * sc..(i + 1) * sc],
-                        &mut self.pgrads,
-                        pg_tmp,
-                    );
+                    }
                 }
             }
 

@@ -113,9 +113,11 @@ USAGE:
                [--save ckpt] [--load ckpt]
   cavs eval    [--config cfg.json] [--threads N] [--set k=v ...]
   cavs serve   [--config cfg.json] [--cell NAME] [--threads N] [--set k=v ...]
-  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|loc|all
+  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|micro|loc|all
                [--scale 1.0] [--full true] [--threads N] [--cell NAME]
-               [--tiny true]   (serve/train only: bounded CI smoke)
+               [--tiny true]   (serve/train/micro: bounded CI smoke)
+               [--check baseline.json] [--check-update baseline.json]
+               [--tolerance 0.2]   (serve/train/micro: regression gate)
   cavs inspect [--set artifacts_dir=...]
   cavs analyze [--cell treelstm] [--set h=256]
   cavs cells   [--set h=256]
@@ -152,14 +154,24 @@ The cell is an **open API**: `vertex::Program` is the single source of
   --set pool=off swaps in the spawn-per-primitive scoped baseline for
   A/B perf comparisons.
 
+The host interpreter compiles F by default (vertex::opt: DCE + CSE +
+  gate-GEMM concatenation + view folding + elementwise fusion, executed
+  per frontier level as row-blocked GEMM / fused sweeps). Results are
+  bitwise identical to the uncompiled interpreter; `--set no_opt=true`
+  (or opt=off) is the A/B escape hatch. `cavs bench --exp micro`
+  measures the win; in CI every push re-measures the micro/train/serve
+  tiny sweeps and `--check results/baselines/<f>.json` fails the build
+  on a >20% regression (refresh with --check-update).
+
 `cavs bench` writes machine-readable results/BENCH_<exp>.json next to
-  the results/*.{{txt,csv}} tables; `cargo bench --bench micro` writes
+  the results/*.{{txt,csv}} tables, each stamped with the git revision,
+  cell, thread count and opt flag; `cargo bench --bench micro` writes
   per-point stats to BENCH_micro.json (gitignored).
 
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
-  lazy_batching, fusion, streaming, threads, pool, serve_max_batch,
-  serve_deadline_ms, serve_queue_cap, artifacts_dir"
+  lazy_batching, fusion, streaming, threads, pool, opt, no_opt,
+  serve_max_batch, serve_deadline_ms, serve_queue_cap, artifacts_dir"
     );
 }
 
@@ -278,6 +290,7 @@ fn cmd_train_host(args: &Args, cfg: &Config) -> Result<()> {
         cfg.epochs,
         cfg.threads,
         cfg.seed,
+        cfg.opt,
         |log| {
             println!(
                 "epoch {:3}  loss {:.4}  {:.2}s  ({} vertices)",
@@ -347,7 +360,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         graphs: &[cavs::graph::InputGraph],
         total: usize,
         concurrency: usize,
+        stamp: &[(&str, String)],
     ) -> anyhow::Result<()> {
+        use cavs::util::json::Json;
         let mut server = cavs::serve::Server::new(exec, sopts.policy());
         let report = cavs::serve::loadgen::run_closed_loop(
             &mut server,
@@ -358,10 +373,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?;
         println!("\n{}", report.render());
         std::fs::create_dir_all("results")?;
-        std::fs::write("results/BENCH_serve.json", report.json().render())?;
+        // stamp the report with its provenance (git revision, cell,
+        // threads, opt) like every other BENCH_*.json
+        let mut j = report.json();
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "git_rev".to_string(),
+                Json::text(&cavs::bench::git_revision()),
+            );
+            for (k, v) in stamp {
+                m.insert((*k).to_string(), Json::text(v));
+            }
+        }
+        std::fs::write("results/BENCH_serve.json", j.render())?;
         println!("(wrote results/BENCH_serve.json)");
         Ok(())
     }
+    let stamp = [
+        ("cell", cfg.cell.clone()),
+        ("threads", cfg.threads.to_string()),
+        ("opt", cfg.opt.to_string()),
+    ];
 
     if have_artifacts {
         let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
@@ -371,15 +403,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.cell, cfg.h
         );
         let exec = EngineExec::new(&rt, model, cfg.engine_opts(false));
-        demo(exec, sopts, &graphs, total, concurrency)
+        demo(exec, sopts, &graphs, total, concurrency, &stamp)
     } else {
         info!(
             "no artifact set at {} — serving {} through the host Program \
              interpreter (identical pipeline; build artifacts for real kernels)",
             cfg.artifacts_dir, cfg.cell
         );
-        let exec = HostExec::from_spec(&spec, cfg.vocab, cfg.threads, cfg.seed)?;
-        demo(exec, sopts, &graphs, total, concurrency)
+        if cfg.opt {
+            let exec =
+                HostExec::from_spec(&spec, cfg.vocab, cfg.threads, cfg.seed)?;
+            demo(exec, sopts, &graphs, total, concurrency, &stamp)
+        } else {
+            info!("no_opt set: reference per-row interpreter (A/B baseline)");
+            let exec = HostExec::from_spec_unoptimized(
+                &spec, cfg.vocab, cfg.threads, cfg.seed,
+            )?;
+            demo(exec, sopts, &graphs, total, concurrency, &stamp)
+        }
     }
 }
 
@@ -402,25 +443,58 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .unwrap_or(false),
         threads: cfg.threads,
     };
-    if exp == "serve" {
-        // host-cell serving sweep: needs no artifact set (and therefore
-        // no Runtime), so the CI smoke runs on clean checkouts
-        let t = experiments::serve(scale, tiny)?;
+    // the three host-only (artifact-free) experiments: every one can be
+    // gated against a committed baseline with --check, and --check-update
+    // refreshes that baseline in place
+    if matches!(exp, "serve" | "train" | "micro") {
+        let t = match exp {
+            // host-cell serving sweep: needs no artifact set (and
+            // therefore no Runtime), so the CI smoke runs on clean
+            // checkouts
+            "serve" => experiments::serve(scale, tiny, cfg.opt)?,
+            // host-interpreter training curve for any registered cell —
+            // the open-API smoke (`--cell gru --tiny true` in CI)
+            "train" => experiments::train_host(&cfg.cell, scale, tiny, cfg.opt)?,
+            // compiled-F vs reference-interpreter speedup sweep — the
+            // optimizer's regression instrument
+            _ => experiments::micro(scale, tiny)?,
+        };
         println!("\n{}", t.render());
         println!("(results also written to results/*.txt and results/*.csv)");
-        return Ok(());
-    }
-    if exp == "train" {
-        // host-interpreter training curve for any registered cell — the
-        // open-API smoke (`--cell gru --tiny true` in CI), artifact-free
-        let t = experiments::train_host(&cfg.cell, scale, tiny)?;
-        println!("\n{}", t.render());
-        println!("(results also written to results/*.txt and results/*.csv)");
+        let fresh = format!("results/BENCH_{exp}.json");
+        let tolerance = args
+            .get("tolerance")
+            .map(|s| s.parse::<f64>())
+            .transpose()
+            .context("--tolerance expects a fraction like 0.2")?
+            .unwrap_or(0.2);
+        if let Some(update) = args.get("check-update") {
+            std::fs::create_dir_all(
+                Path::new(update).parent().unwrap_or(Path::new(".")),
+            )?;
+            std::fs::copy(&fresh, update)
+                .with_context(|| format!("copying {fresh} -> {update}"))?;
+            println!("(baseline {update} refreshed from {fresh})");
+        }
+        if let Some(baseline) = args.get("check") {
+            let tiny_flag = if tiny { " --tiny true" } else { "" };
+            let cell_flag = if exp == "train" {
+                format!(" --cell {}", cfg.cell)
+            } else {
+                String::new()
+            };
+            let hint = format!(
+                "cavs bench --exp {exp}{tiny_flag}{cell_flag} --threads {} \
+                 --check-update {baseline}",
+                cfg.threads
+            );
+            cavs::bench::check::run_check(&fresh, baseline, tolerance, &hint)?;
+        }
         return Ok(());
     }
     let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
     let tables = match exp {
-        "all" => experiments::run_all(&rt, scale)?,
+        "all" => experiments::run_all(&rt, scale, cfg.opt)?,
         "serial" => vec![experiments::serial_vs_batched(&rt, scale)?],
         "fig9a" => vec![experiments::fig9a(&rt, scale)?],
         "fig9b" => vec![experiments::fig9b(&rt, scale)?],
@@ -491,8 +565,9 @@ fn cmd_cells(args: &Args) -> Result<()> {
     let h = cfg.h;
     println!("registered cells (metadata derived from vertex::Program at h={h}):\n");
     println!(
-        "{:<12} {:>5} {:>10} {:>7} {:>9} {:>9} {:>5} {:>8}  params",
-        "name", "arity", "state_cols", "x_cols", "h_part", "gates", "ops", "unfused"
+        "{:<12} {:>5} {:>10} {:>7} {:>9} {:>9} {:>5} {:>9} {:>8}  params",
+        "name", "arity", "state_cols", "x_cols", "h_part", "gates", "ops",
+        "opt-ops", "unfused"
     );
     for name in registry::registered_cells() {
         let spec = CellSpec::lookup(&name, h)?;
@@ -503,7 +578,7 @@ fn cmd_cells(args: &Args) -> Result<()> {
             .map(|p| format!("{}{:?}", p.name, p.shape))
             .collect();
         println!(
-            "{:<12} {:>5} {:>10} {:>7} {:>9} {:>9} {:>5} {:>8}  {}",
+            "{:<12} {:>5} {:>10} {:>7} {:>9} {:>9} {:>5} {:>9} {:>8}  {}",
             spec.name(),
             spec.arity(),
             spec.state_cols(),
@@ -511,13 +586,22 @@ fn cmd_cells(args: &Args) -> Result<()> {
             format!("{hoff}+{hlen}"),
             spec.gates_cols(),
             spec.program().nodes.len(),
+            spec.opt_program().summary(),
             if spec.has_unfused_ops() { "yes" } else { "-" },
             params.join(" ")
+        );
+        let s = spec.opt_stats();
+        println!(
+            "{:<12} compiled: {} fused group(s) covering {} op(s), \
+             {} GEMM(s) merged, {} copies folded, {} CSE, {} DCE",
+            "", s.fused_groups, s.fused_ops, s.gemms_merged, s.folded_copies,
+            s.cse_merged, s.dce_removed
         );
     }
     println!(
         "\n(register more with vertex::registry::register_cell — programs are \
-         validated at registration; see DESIGN.md §8)"
+         validated AND compiled at registration; `opt-ops` is the \
+         before→after schedule size of Program::optimize, see DESIGN.md §9)"
     );
     Ok(())
 }

@@ -93,6 +93,23 @@ impl HostExec<ProgramCell> {
             (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
         Ok(HostExec::with_cell(cell, xtable, threads))
     }
+
+    /// [`HostExec::from_spec`] through the **reference** per-row
+    /// interpreter (`--set no_opt=true`): same parameter stream, bitwise
+    /// identical predictions, no compiled schedule — the serving half of
+    /// the optimizer's A/B escape hatch.
+    pub fn from_spec_unoptimized(
+        spec: &CellSpec,
+        vocab: usize,
+        threads: usize,
+        seed: u64,
+    ) -> Result<HostExec<ProgramCell>> {
+        let mut rng = Rng::new(seed);
+        let cell = spec.random_cell_unoptimized(&mut rng, 0.08)?;
+        let xtable: Vec<f32> =
+            (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
+        Ok(HostExec::with_cell(cell, xtable, threads))
+    }
 }
 
 impl<C: HostCell> HostExec<C> {
@@ -328,6 +345,32 @@ mod tests {
                 .unwrap();
             assert_eq!(n, 9, "{name}: every request answered");
         }
+    }
+
+    #[test]
+    fn optimized_and_reference_serving_score_identically() {
+        // the compiled schedule must be invisible to clients: bitwise
+        // equal predictions for the same spec/seed/workload
+        let spec = CellSpec::lookup("treelstm", 6).unwrap();
+        let serve_all = |exec: HostExec<ProgramCell>| -> Vec<f32> {
+            let mut server = Server::new(exec, policy(4));
+            let q = RequestQueue::bounded(32);
+            let graphs = crate::serve::loadgen::mixed_workload(5, 11, 20, 2);
+            let n = graphs.len();
+            for (id, g) in graphs.into_iter().enumerate() {
+                q.try_enqueue(Request::new(id as u64, g).unwrap()).unwrap();
+            }
+            q.close();
+            let mut scores = vec![f32::NAN; n];
+            server
+                .run(&q, |r| scores[r.id() as usize] = r.prediction.score)
+                .unwrap();
+            scores
+        };
+        let opt = serve_all(HostExec::from_spec(&spec, 20, 2, 7).unwrap());
+        let reference =
+            serve_all(HostExec::from_spec_unoptimized(&spec, 20, 2, 7).unwrap());
+        assert_eq!(opt, reference);
     }
 
     #[test]

@@ -44,15 +44,23 @@ pub struct HostTrainer {
 }
 
 impl HostTrainer {
+    /// `opt = false` trains through the reference per-row interpreter
+    /// (the `no_opt` escape hatch) — bitwise identical results, since
+    /// the compiled schedule preserves every reduction order.
     pub fn new(
         spec: &CellSpec,
         vocab: usize,
         threads: usize,
         seed: u64,
+        opt: bool,
     ) -> Result<HostTrainer> {
         let threads = threads.max(1);
         let mut rng = Rng::new(seed);
-        let cell = spec.random_cell(&mut rng, 0.08)?;
+        let cell = if opt {
+            spec.random_cell(&mut rng, 0.08)?
+        } else {
+            spec.random_cell_unoptimized(&mut rng, 0.08)?
+        };
         let xtable: Vec<f32> =
             (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
         Ok(HostTrainer {
@@ -98,6 +106,9 @@ impl HostTrainer {
                     *w -= lr * gv;
                 }
             }
+            // refresh the merged GEMM weights from the updated tensors
+            // (no-op for plans without merges / the reference path)
+            self.cell.sync_opt();
         }
         if let Some(xg) = self.frontier.x_grads() {
             for (w, &gv) in self.xtable.iter_mut().zip(xg) {
@@ -121,9 +132,10 @@ pub fn train_host_epochs(
     epochs: usize,
     threads: usize,
     seed: u64,
+    opt: bool,
     mut on_epoch: impl FnMut(&HostEpoch),
 ) -> Result<Vec<HostEpoch>> {
-    let mut trainer = HostTrainer::new(spec, data.vocab, threads, seed)?;
+    let mut trainer = HostTrainer::new(spec, data.vocab, threads, seed, opt)?;
     let mut logs = Vec::with_capacity(epochs);
     for epoch in 0..epochs {
         let t0 = std::time::Instant::now();
@@ -152,12 +164,13 @@ mod tests {
 
     #[test]
     fn builtin_cell_trains_host_only() {
-        // treelstm through the interpreter: loss decreases with no
-        // artifacts, no engine, no hand-written backward
+        // treelstm through the compiled interpreter: loss decreases with
+        // no artifacts, no engine, no hand-written backward — and the
+        // merged Wiou/Wf GEMM resyncs correctly after every SGD step
         let spec = CellSpec::lookup("treelstm", 6).unwrap();
         let data = Dataset::sst_like(3, 12, 20, 5);
         let logs =
-            train_host_epochs(&spec, &data, 4, 0.02, 4, 2, 7, |_| {}).unwrap();
+            train_host_epochs(&spec, &data, 4, 0.02, 4, 2, 7, true, |_| {}).unwrap();
         assert_eq!(logs.len(), 4);
         assert!(logs.iter().all(|l| l.loss.is_finite()));
         assert!(
@@ -173,12 +186,35 @@ mod tests {
         let spec = CellSpec::lookup("gru", 5).unwrap();
         let data = Dataset::ptb_like_var(9, 8, 15, 7);
         let run = |threads: usize| {
-            train_host_epochs(&spec, &data, 4, 0.05, 3, threads, 3, |_| {})
+            train_host_epochs(&spec, &data, 4, 0.05, 3, threads, 3, true, |_| {})
                 .unwrap()
                 .into_iter()
                 .map(|l| l.loss)
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(1), run(4), "bitwise identical across thread counts");
+    }
+
+    #[test]
+    fn optimized_training_curve_is_bitwise_identical_to_reference() {
+        // whole multi-epoch training runs — forward, structural backward,
+        // parameter + embedding SGD, merged-GEMM resync — produce the
+        // exact same loss sequence with the optimizer on and off
+        for cell in ["treelstm", "gru"] {
+            let spec = CellSpec::lookup(cell, 5).unwrap();
+            let data = if spec.arity() >= 2 {
+                Dataset::sst_like(11, 10, 18, 5)
+            } else {
+                Dataset::ptb_like_var(11, 10, 18, 7)
+            };
+            let run = |opt: bool| {
+                train_host_epochs(&spec, &data, 4, 0.03, 3, 2, 9, opt, |_| {})
+                    .unwrap()
+                    .into_iter()
+                    .map(|l| l.loss)
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(run(true), run(false), "{cell}: opt changed the curve");
+        }
     }
 }

@@ -25,10 +25,14 @@
 //!   `acc_param_grads` — called sequentially by the frontier so the
 //!   result is bitwise identical for every thread count.
 
+use std::ops::Range;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
-use super::{OpKind, Program, ProgramMeta};
-use crate::exec::parallel::HostCell;
+use super::opt::{OptProgram, OptStats, Step, WideGemm};
+use super::{OpKind, OpNode, Program, ProgramMeta};
+use crate::exec::parallel::{HostCell, LevelCell};
 use crate::util::rng::Rng;
 
 /// The logistic function shared by the interpreter and the hand-written
@@ -38,7 +42,13 @@ pub fn sigmoid(x: f32) -> f32 {
 }
 
 /// A validated program bound to host parameter tensors: a generic
-/// [`HostCell`] that executes F by interpretation.
+/// [`HostCell`] that executes F by interpretation — either through the
+/// reference per-node tape (the unoptimized baseline every equivalence
+/// test compares against) or, when constructed with an
+/// [`OptProgram`] plan, through the compiled schedule (views, wide
+/// GEMMs, fused elementwise sweeps) with frontier-level batching via
+/// [`LevelCell`]. Both paths are **bitwise identical** per output
+/// element (see `vertex::opt`).
 pub struct ProgramCell {
     program: Program,
     meta: ProgramMeta,
@@ -50,6 +60,83 @@ pub struct ProgramCell {
     tape_cols: usize,
     /// the node whose value scatter publishes (the state source)
     scatter_src: usize,
+    /// the compiled plan + bound merged weights (None = reference path)
+    opt: Option<OptBound>,
+}
+
+/// An [`OptProgram`] bound to this cell's parameters: the
+/// column-concatenated weight matrices of every merged GEMM, built once
+/// at bind time (and refreshed by [`ProgramCell::sync_opt`] after an
+/// optimizer step mutates the underlying parameters).
+struct OptBound {
+    plan: Arc<OptProgram>,
+    /// per-[`WideGemm`] concatenated `[k, n]` weights; empty for
+    /// single-segment GEMMs (those read the declared parameter directly)
+    wide_w: Vec<Vec<f32>>,
+}
+
+/// Row-block size for the level GEMM sweeps: each weight row is streamed
+/// once per block instead of once per vertex row. Blocking never touches
+/// an output element's k-reduction order, so results stay bitwise
+/// identical at any block size.
+const GEMM_ROW_BLOCK: usize = 4;
+
+/// The one Gaussian parameter-init stream (used by every constructor and
+/// by `CellSpec::random_cell*`): the compiled-vs-reference equivalence
+/// tests rely on both sides drawing the *identical* sequence, so this
+/// must stay the single definition.
+pub fn random_params(program: &Program, rng: &mut Rng, scale: f32) -> Vec<Vec<f32>> {
+    program
+        .params
+        .iter()
+        .map(|p| (0..p.elements()).map(|_| rng.normal_f32(scale)).collect())
+        .collect()
+}
+
+fn bind_wide(plan: &OptProgram, params: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    plan.wide
+        .iter()
+        .map(|w| {
+            if w.segs.len() < 2 {
+                Vec::new()
+            } else {
+                let mut buf = vec![0.0f32; w.k * w.n];
+                fill_wide(w, params, &mut buf);
+                buf
+            }
+        })
+        .collect()
+}
+
+/// Interleave the segment weight rows into the wide `[k, n]` matrix.
+fn fill_wide(w: &WideGemm, params: &[Vec<f32>], buf: &mut [f32]) {
+    let mut off = 0usize;
+    for seg in &w.segs {
+        let pm = &params[seg.param];
+        for kk in 0..w.k {
+            buf[kk * w.n + off..kk * w.n + off + seg.cols]
+                .copy_from_slice(&pm[kk * seg.cols..(kk + 1) * seg.cols]);
+        }
+        off += seg.cols;
+    }
+}
+
+/// Shared-read view of a tape region through its raw base pointer.
+///
+/// SAFETY: callers guarantee `[off, off + len)` is in bounds of the
+/// buffer `base` was derived from and disjoint from every concurrently
+/// live mutable region (the optimizer's layout invariant: a node's
+/// storage never overlaps its inputs').
+#[inline]
+unsafe fn region<'a>(base: *const f32, off: usize, len: usize) -> &'a [f32] {
+    std::slice::from_raw_parts(base.add(off), len)
+}
+
+/// Mutable view of a tape region through its raw base pointer (same
+/// safety contract as [`region`]).
+#[inline]
+unsafe fn region_mut<'a>(base: *mut f32, off: usize, len: usize) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(base.add(off), len)
 }
 
 impl ProgramCell {
@@ -90,18 +177,79 @@ impl ProgramCell {
             .find(|n| matches!(n.kind, OpKind::Scatter))
             .map(|n| n.ins[0])
             .expect("validated program has a scatter");
-        Ok(ProgramCell { program, meta, params, off, tape_cols, scatter_src })
+        Ok(ProgramCell { program, meta, params, off, tape_cols, scatter_src, opt: None })
+    }
+
+    /// Bind `program` to `params` and compile it: runs
+    /// [`Program::optimize`] and executes through the optimized schedule
+    /// (the default host path — `CellSpec` uses the cached plan via
+    /// [`ProgramCell::with_plan`] instead of re-running the passes).
+    pub fn optimized(program: Program, params: Vec<Vec<f32>>) -> Result<ProgramCell> {
+        let plan = Arc::new(program.optimize()?);
+        ProgramCell::with_plan(program, plan, params)
+    }
+
+    /// Bind `program` + a precompiled plan (must come from this program's
+    /// [`Program::optimize`]) to parameter tensors.
+    pub fn with_plan(
+        program: Program,
+        plan: Arc<OptProgram>,
+        params: Vec<Vec<f32>>,
+    ) -> Result<ProgramCell> {
+        debug_assert_eq!(plan.name, program.name, "plan/program mismatch");
+        let mut c = ProgramCell::new(program, params)?;
+        let wide_w = bind_wide(&plan, &c.params);
+        c.opt = Some(OptBound { plan, wide_w });
+        Ok(c)
     }
 
     /// Bind `program` to Gaussian-initialized parameters (the same init
-    /// the `ParamSet` model store uses).
+    /// the `ParamSet` model store uses). Reference (unoptimized) path.
     pub fn random(program: Program, rng: &mut Rng, scale: f32) -> Result<ProgramCell> {
-        let params = program
-            .params
-            .iter()
-            .map(|p| (0..p.elements()).map(|_| rng.normal_f32(scale)).collect())
-            .collect();
+        let params = random_params(&program, rng, scale);
         ProgramCell::new(program, params)
+    }
+
+    /// Gaussian-initialized **optimized** cell.
+    pub fn random_optimized(
+        program: Program,
+        rng: &mut Rng,
+        scale: f32,
+    ) -> Result<ProgramCell> {
+        let params = random_params(&program, rng, scale);
+        ProgramCell::optimized(program, params)
+    }
+
+    /// Whether this cell executes through a compiled [`OptProgram`].
+    pub fn is_optimized(&self) -> bool {
+        self.opt.is_some()
+    }
+
+    /// Pass-pipeline statistics of the bound plan (None on the reference
+    /// path).
+    pub fn opt_stats(&self) -> Option<&OptStats> {
+        self.opt.as_ref().map(|o| &o.plan.stats)
+    }
+
+    /// The bound plan (None on the reference path).
+    pub fn opt_plan(&self) -> Option<&OptProgram> {
+        self.opt.as_ref().map(|o| &*o.plan)
+    }
+
+    /// Re-interleave the merged GEMM weights from the (possibly mutated)
+    /// parameter tensors. Call after every optimizer step that writes
+    /// through [`ProgramCell::params_mut`]; allocation-free, and a no-op
+    /// for plans without merged GEMMs or on the reference path.
+    pub fn sync_opt(&mut self) {
+        let params = &self.params;
+        if let Some(o) = &mut self.opt {
+            let plan = Arc::clone(&o.plan);
+            for (i, w) in plan.wide.iter().enumerate() {
+                if w.segs.len() >= 2 {
+                    fill_wide(w, params, &mut o.wide_w[i]);
+                }
+            }
+        }
     }
 
     pub fn program(&self) -> &Program {
@@ -341,6 +489,443 @@ impl ProgramCell {
             }
         }
     }
+
+    // -----------------------------------------------------------------
+    // Optimized execution (the compiled OptProgram schedule)
+    // -----------------------------------------------------------------
+
+    /// Execute one forward step for one row of the optimized tape. All
+    /// tape access goes through the raw base pointer — regions are
+    /// disjoint by the optimizer's layout invariant (a node's storage
+    /// never overlaps its inputs'), and `tape` is not touched through the
+    /// safe reference while the derived regions are live.
+    fn exec_step_row(&self, o: &OptBound, step: &Step, x: &[f32], s: &[f32], tape: &mut [f32]) {
+        let p = &*o.plan;
+        let sc = p.meta.state_cols;
+        let base = tape.as_mut_ptr();
+        match step {
+            Step::Pull { node } => {
+                // SAFETY: the node's fresh/aliased region is in bounds
+                // and no other region is live.
+                let dst = unsafe { region_mut(base, p.addr[*node], p.meta.x_cols) };
+                dst.copy_from_slice(x);
+            }
+            Step::Gather { node, slot } => {
+                // SAFETY: as above.
+                let dst = unsafe { region_mut(base, p.addr[*node], sc) };
+                dst.copy_from_slice(&s[slot * sc..(slot + 1) * sc]);
+            }
+            Step::Concat { node } => {
+                let n = &p.nodes[*node];
+                let d0 = p.addr[*node];
+                let mut off = 0usize;
+                for &src in &n.ins {
+                    let w = p.nodes[src].cols;
+                    let sa = p.addr[src];
+                    if sa != d0 + off {
+                        // SAFETY: both ranges in bounds; `copy` tolerates
+                        // overlap (none occurs — aliased inputs take the
+                        // equal-address branch).
+                        unsafe {
+                            std::ptr::copy(
+                                base.add(sa) as *const f32,
+                                base.add(d0 + off),
+                                w,
+                            );
+                        }
+                    }
+                    off += w;
+                }
+            }
+            Step::Gemm { wide } => {
+                let w = &p.wide[*wide];
+                let weights: &[f32] = if w.segs.len() >= 2 {
+                    &o.wide_w[*wide]
+                } else {
+                    &self.params[w.segs[0].param]
+                };
+                // SAFETY: a GEMM's output storage is disjoint from its
+                // input's (layout invariant).
+                let a = unsafe { region(base as *const f32, p.addr[w.input], w.k) };
+                let out = unsafe { region_mut(base, p.addr[w.segs[0].node], w.n) };
+                // identical loop shape (k-outer, j-inner, skip-zero) to
+                // the reference MatMul: bitwise equal sums per column
+                out.fill(0.0);
+                for (kk, &v) in a.iter().enumerate() {
+                    if v != 0.0 {
+                        let prow = &weights[kk * w.n..(kk + 1) * w.n];
+                        for (ov, &pw) in out.iter_mut().zip(prow) {
+                            *ov += v * pw;
+                        }
+                    }
+                }
+            }
+            Step::Fused { group } => {
+                let g = &p.fused[*group];
+                let width = g.width;
+                for &m in &g.nodes {
+                    let node = &p.nodes[m];
+                    // SAFETY: a member's storage is disjoint from every
+                    // input's storage (layout invariant).
+                    let out = unsafe { region_mut(base, p.addr[m], width) };
+                    match &node.kind {
+                        OpKind::Add => {
+                            let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            let b = unsafe { region(base as *const f32, p.addr[node.ins[1]], width) };
+                            for ((ov, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                                *ov = av + bv;
+                            }
+                        }
+                        OpKind::Mul => {
+                            let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            let b = unsafe { region(base as *const f32, p.addr[node.ins[1]], width) };
+                            for ((ov, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+                                *ov = av * bv;
+                            }
+                        }
+                        OpKind::AddBias { param } => {
+                            let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            let bias = &self.params[*param];
+                            for ((ov, &av), &bv) in out.iter_mut().zip(a).zip(bias) {
+                                *ov = av + bv;
+                            }
+                        }
+                        OpKind::Sigmoid => {
+                            let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            for (ov, &av) in out.iter_mut().zip(a) {
+                                *ov = sigmoid(av);
+                            }
+                        }
+                        OpKind::Tanh => {
+                            let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            for (ov, &av) in out.iter_mut().zip(a) {
+                                *ov = av.tanh();
+                            }
+                        }
+                        OpKind::OneMinus => {
+                            let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            for (ov, &av) in out.iter_mut().zip(a) {
+                                *ov = 1.0 - av;
+                            }
+                        }
+                        _ => unreachable!("non-elementwise op in fused group"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Evaluate the whole optimized schedule for one row.
+    fn eval_opt_row(&self, o: &OptBound, x: &[f32], s: &[f32], tape: &mut [f32]) {
+        for step in &o.plan.steps {
+            self.exec_step_row(o, step, x, s, tape);
+        }
+    }
+
+    /// The §3.4 VJP of one node for one row over the optimized layout —
+    /// the *original* per-node adjoint arithmetic (adjoint slots are
+    /// never aliased), reading values through the view-resolved `addr`.
+    /// Entirely safe indexed code: per-element local copies avoid any
+    /// mutable/shared overlap in `adj`.
+    fn vjp_node_row(
+        &self,
+        o: &OptBound,
+        i: usize,
+        node: &OpNode,
+        tape: &[f32],
+        adj: &mut [f32],
+        gx: &mut [f32],
+        gs: &mut [f32],
+    ) {
+        let p = &*o.plan;
+        let sc = p.meta.state_cols;
+        match &node.kind {
+            OpKind::Scatter | OpKind::Push => {}
+            OpKind::Pull => {
+                let g = &adj[p.aoff[i]..][..node.cols];
+                for (d, &v) in gx.iter_mut().zip(g) {
+                    *d += v;
+                }
+            }
+            OpKind::Gather { slot } => {
+                let g = &adj[p.aoff[i]..][..node.cols];
+                let dst = &mut gs[slot * sc..(slot + 1) * sc];
+                for (d, &v) in dst.iter_mut().zip(g) {
+                    *d += v;
+                }
+            }
+            OpKind::MatMul { param } => {
+                let k = p.nodes[node.ins[0]].cols;
+                let n = node.cols;
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                let pm = &self.params[*param];
+                for kk in 0..k {
+                    let prow = &pm[kk * n..(kk + 1) * n];
+                    let mut acc = 0.0f32;
+                    for (j, &wv) in prow.iter().enumerate() {
+                        acc += adj[g0 + j] * wv;
+                    }
+                    adj[d0 + kk] += acc;
+                }
+            }
+            OpKind::AddBias { .. } => {
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                for j in 0..node.cols {
+                    let g = adj[g0 + j];
+                    adj[d0 + j] += g;
+                }
+            }
+            OpKind::Add => {
+                let g0 = p.aoff[i];
+                // index loops: correct even if both inputs alias
+                for &src in &node.ins {
+                    let d0 = p.aoff[src];
+                    for j in 0..node.cols {
+                        let g = adj[g0 + j];
+                        adj[d0 + j] += g;
+                    }
+                }
+            }
+            OpKind::Mul => {
+                let g0 = p.aoff[i];
+                let (ia, ib) = (node.ins[0], node.ins[1]);
+                let (oa, ob) = (p.aoff[ia], p.aoff[ib]);
+                let (va0, vb0) = (p.addr[ia], p.addr[ib]);
+                for j in 0..node.cols {
+                    let g = adj[g0 + j];
+                    let va = tape[va0 + j];
+                    let vb = tape[vb0 + j];
+                    adj[oa + j] += g * vb;
+                    adj[ob + j] += g * va;
+                }
+            }
+            OpKind::Sigmoid => {
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                let y0 = p.addr[i];
+                for j in 0..node.cols {
+                    let y = tape[y0 + j];
+                    let g = adj[g0 + j];
+                    adj[d0 + j] += g * (y * (1.0 - y));
+                }
+            }
+            OpKind::Tanh => {
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                let y0 = p.addr[i];
+                for j in 0..node.cols {
+                    let y = tape[y0 + j];
+                    let g = adj[g0 + j];
+                    adj[d0 + j] += g * (1.0 - y * y);
+                }
+            }
+            OpKind::OneMinus => {
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                for j in 0..node.cols {
+                    let g = adj[g0 + j];
+                    adj[d0 + j] -= g;
+                }
+            }
+            OpKind::SliceCols { start, .. } => {
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]] + start;
+                for j in 0..node.cols {
+                    let g = adj[g0 + j];
+                    adj[d0 + j] += g;
+                }
+            }
+            OpKind::ConcatCols => {
+                let g0 = p.aoff[i];
+                let mut col = 0usize;
+                for &src in &node.ins {
+                    let w = p.nodes[src].cols;
+                    let d0 = p.aoff[src];
+                    for j in 0..w {
+                        let g = adj[g0 + col + j];
+                        adj[d0 + j] += g;
+                    }
+                    col += w;
+                }
+            }
+        }
+    }
+
+    /// Optimized-path backward for one row: recompute the tape, seed the
+    /// scatter source's adjoint with `g_out`, run the reverse VJP sweep.
+    fn backprop_opt_row(
+        &self,
+        o: &OptBound,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [f32],
+        tape: &mut [f32],
+        adj: &mut [f32],
+    ) {
+        let p = &*o.plan;
+        self.eval_opt_row(o, x, s, tape);
+        adj.fill(0.0);
+        {
+            let seed = &mut adj[p.aoff[p.scatter_src]..][..p.meta.state_cols];
+            for (a, &g) in seed.iter_mut().zip(g_out) {
+                *a += g;
+            }
+        }
+        for (i, node) in p.nodes.iter().enumerate().rev() {
+            self.vjp_node_row(o, i, node, tape, adj, gx, gs);
+        }
+    }
+
+    /// Accumulate one row's parameter gradients from a completed
+    /// tape/adjoint pair — forward node order, exactly the reference
+    /// accumulation (merged GEMMs de-concatenate implicitly: each segment
+    /// node writes its own declared `ParamSpec` tensor).
+    fn acc_pg_row(&self, o: &OptBound, tape: &[f32], adj: &[f32], pg: &mut [Vec<f32>]) {
+        let p = &*o.plan;
+        for (i, node) in p.nodes.iter().enumerate() {
+            match &node.kind {
+                OpKind::MatMul { param } => {
+                    let k = p.nodes[node.ins[0]].cols;
+                    let n = node.cols;
+                    let a = &tape[p.addr[node.ins[0]]..][..k];
+                    let g = &adj[p.aoff[i]..][..n];
+                    let dst = &mut pg[*param];
+                    for (kk, &v) in a.iter().enumerate() {
+                        if v != 0.0 {
+                            let drow = &mut dst[kk * n..(kk + 1) * n];
+                            for (d, &gj) in drow.iter_mut().zip(g) {
+                                *d += v * gj;
+                            }
+                        }
+                    }
+                }
+                OpKind::AddBias { param } => {
+                    let g = &adj[p.aoff[i]..][..node.cols];
+                    let dst = &mut pg[*param];
+                    for (d, &gj) in dst.iter_mut().zip(g) {
+                        *d += gj;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Row-blocked level GEMM: streams each weight row once per
+    /// [`GEMM_ROW_BLOCK`] vertex rows. Raw access only — each row's
+    /// output region is disjoint from its input region and from every
+    /// other row.
+    fn gemm_rows(&self, o: &OptBound, wi: usize, tape: &mut [f32], tc: usize, m: usize) {
+        let p = &*o.plan;
+        let w = &p.wide[wi];
+        let weights: &[f32] = if w.segs.len() >= 2 {
+            &o.wide_w[wi]
+        } else {
+            &self.params[w.segs[0].param]
+        };
+        let src = p.addr[w.input];
+        let dst = p.addr[w.segs[0].node];
+        let (k, n) = (w.k, w.n);
+        let base = tape.as_mut_ptr();
+        let mut r0 = 0usize;
+        while r0 < m {
+            let rb = (m - r0).min(GEMM_ROW_BLOCK);
+            for r in r0..r0 + rb {
+                // SAFETY: row r's output region, in bounds and disjoint.
+                unsafe { region_mut(base, r * tc + dst, n) }.fill(0.0);
+            }
+            for kk in 0..k {
+                let wrow = &weights[kk * n..(kk + 1) * n];
+                for r in r0..r0 + rb {
+                    // SAFETY: in-bounds scalar read of row r's input.
+                    let v = unsafe { *base.add(r * tc + src + kk) };
+                    if v != 0.0 {
+                        // SAFETY: row r's output region again.
+                        let outr = unsafe { region_mut(base, r * tc + dst, n) };
+                        for (ov, &pw) in outr.iter_mut().zip(wrow) {
+                            *ov += v * pw;
+                        }
+                    }
+                }
+            }
+            r0 += rb;
+        }
+    }
+
+    /// Row-blocked level MatMul data-gradient: `din[k] += Σ_j g[j]·W[k,j]`
+    /// per row, weight rows streamed once per block. Per-element reduction
+    /// order (j ascending) is the reference order.
+    fn matmul_din_rows(
+        &self,
+        o: &OptBound,
+        i: usize,
+        node: &OpNode,
+        adj: &mut [f32],
+        lac: usize,
+        m: usize,
+    ) {
+        let p = &*o.plan;
+        let param = match node.kind {
+            OpKind::MatMul { param } => param,
+            _ => unreachable!(),
+        };
+        let k = p.nodes[node.ins[0]].cols;
+        let n = node.cols;
+        let g0 = p.aoff[i];
+        let d0 = p.aoff[node.ins[0]];
+        let pm = &self.params[param];
+        let base = adj.as_mut_ptr();
+        let mut r0 = 0usize;
+        while r0 < m {
+            let rb = (m - r0).min(GEMM_ROW_BLOCK);
+            for kk in 0..k {
+                let prow = &pm[kk * n..(kk + 1) * n];
+                for r in r0..r0 + rb {
+                    // SAFETY: row r's adjoint-of-output region (shared
+                    // read) and the disjoint din scalar (write).
+                    let g = unsafe { region(base as *const f32, r * lac + g0, n) };
+                    let mut acc = 0.0f32;
+                    for (j, &wv) in prow.iter().enumerate() {
+                        acc += g[j] * wv;
+                    }
+                    unsafe {
+                        *base.add(r * lac + d0 + kk) += acc;
+                    }
+                }
+            }
+            r0 += rb;
+        }
+    }
+
+    /// Level forward over a row range: op-outer, row-inner — each (fused)
+    /// op sweeps all rows before the next op runs, GEMMs row-blocked.
+    fn lvl_eval(&self, o: &OptBound, rows: &Range<usize>, x: &[f32], s: &[f32], tape: &mut [f32]) {
+        let p = &*o.plan;
+        let (xc, asc) = (p.meta.x_cols, p.meta.arity * p.meta.state_cols);
+        let tc = p.tape_cols;
+        let m = rows.len();
+        for step in &p.steps {
+            match step {
+                Step::Gemm { wide } => self.gemm_rows(o, *wide, tape, tc, m),
+                _ => {
+                    for r in 0..m {
+                        let abs = rows.start + r;
+                        self.exec_step_row(
+                            o,
+                            step,
+                            &x[abs * xc..(abs + 1) * xc],
+                            &s[abs * asc..(abs + 1) * asc],
+                            &mut tape[r * tc..(r + 1) * tc],
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl HostCell for ProgramCell {
@@ -357,19 +942,37 @@ impl HostCell for ProgramCell {
     }
 
     fn fwd_scratch_cols(&self) -> usize {
-        self.tape_cols
+        match &self.opt {
+            Some(o) => o.plan.tape_cols,
+            None => self.tape_cols,
+        }
     }
 
     fn bwd_scratch_cols(&self) -> usize {
-        2 * self.tape_cols
+        match &self.opt {
+            Some(o) => o.plan.tape_cols + o.plan.adj_cols,
+            None => 2 * self.tape_cols,
+        }
     }
 
     fn forward(&self, x: &[f32], s: &[f32], out: &mut [f32], tmp: &mut [f32]) {
-        let tape = &mut tmp[..self.tape_cols];
-        self.eval_tape(x, s, tape);
-        out.copy_from_slice(
-            &tape[self.off[self.scatter_src]..][..self.meta.state_cols],
-        );
+        match &self.opt {
+            Some(o) => {
+                let p = &*o.plan;
+                let tape = &mut tmp[..p.tape_cols];
+                self.eval_opt_row(o, x, s, tape);
+                out.copy_from_slice(
+                    &tape[p.addr[p.scatter_src]..][..p.meta.state_cols],
+                );
+            }
+            None => {
+                let tape = &mut tmp[..self.tape_cols];
+                self.eval_tape(x, s, tape);
+                out.copy_from_slice(
+                    &tape[self.off[self.scatter_src]..][..self.meta.state_cols],
+                );
+            }
+        }
     }
 
     fn backward(
@@ -381,8 +984,25 @@ impl HostCell for ProgramCell {
         gs: &mut [f32],
         tmp: &mut [f32],
     ) {
-        let (tape, adj) = tmp.split_at_mut(self.tape_cols);
-        self.backprop(x, s, g_out, gx, gs, tape, &mut adj[..self.tape_cols]);
+        match &self.opt {
+            Some(o) => {
+                let (tape, adj) = tmp.split_at_mut(o.plan.tape_cols);
+                self.backprop_opt_row(
+                    o,
+                    x,
+                    s,
+                    g_out,
+                    gx,
+                    gs,
+                    tape,
+                    &mut adj[..o.plan.adj_cols],
+                );
+            }
+            None => {
+                let (tape, adj) = tmp.split_at_mut(self.tape_cols);
+                self.backprop(x, s, g_out, gx, gs, tape, &mut adj[..self.tape_cols]);
+            }
+        }
     }
 
     fn n_params(&self) -> usize {
@@ -394,7 +1014,11 @@ impl HostCell for ProgramCell {
     }
 
     fn pg_scratch_cols(&self) -> usize {
-        2 * self.tape_cols + self.meta.x_cols + self.meta.arity * self.meta.state_cols
+        let tapes = match &self.opt {
+            Some(o) => o.plan.tape_cols + o.plan.adj_cols,
+            None => 2 * self.tape_cols,
+        };
+        tapes + self.meta.x_cols + self.meta.arity * self.meta.state_cols
     }
 
     fn acc_param_grads(
@@ -405,6 +1029,17 @@ impl HostCell for ProgramCell {
         pg: &mut [Vec<f32>],
         tmp: &mut [f32],
     ) {
+        if let Some(o) = &self.opt {
+            let (tape, rest) = tmp.split_at_mut(o.plan.tape_cols);
+            let (adj, rest) = rest.split_at_mut(o.plan.adj_cols);
+            let (gx, gs) = rest.split_at_mut(self.meta.x_cols);
+            let gs = &mut gs[..self.meta.arity * self.meta.state_cols];
+            gx.fill(0.0);
+            gs.fill(0.0);
+            self.backprop_opt_row(o, x, s, g_out, gx, gs, tape, adj);
+            self.acc_pg_row(o, tape, adj, pg);
+            return;
+        }
         let (tape, rest) = tmp.split_at_mut(self.tape_cols);
         let (adj, rest) = rest.split_at_mut(self.tape_cols);
         let (gx, gs) = rest.split_at_mut(self.meta.x_cols);
@@ -438,6 +1073,103 @@ impl HostCell for ProgramCell {
                 }
                 _ => {}
             }
+        }
+    }
+
+    fn level(&self) -> Option<&dyn LevelCell> {
+        self.opt.as_ref().map(|_| self as &dyn LevelCell)
+    }
+}
+
+/// Frontier-level execution of the compiled schedule: `HostFrontier`
+/// hands each worker shard a contiguous row range of the level's blocks
+/// and the cell runs every (fused) op as a row-sharded batched
+/// GEMM / fused elementwise sweep — op-outer, row-inner, weight rows
+/// streamed once per row block. Bitwise identical to the per-row path
+/// (which is itself bitwise identical to the reference interpreter).
+impl LevelCell for ProgramCell {
+    fn lvl_tape_cols(&self) -> usize {
+        self.opt.as_ref().map_or(0, |o| o.plan.tape_cols)
+    }
+
+    fn lvl_adj_cols(&self) -> usize {
+        self.opt.as_ref().map_or(0, |o| o.plan.adj_cols)
+    }
+
+    fn lvl_forward(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        s: &[f32],
+        out: &mut [f32],
+        tape: &mut [f32],
+    ) {
+        let o = self.opt.as_ref().expect("level execution needs a compiled plan");
+        let p = &*o.plan;
+        let (sc, tc) = (p.meta.state_cols, p.tape_cols);
+        let m = rows.len();
+        self.lvl_eval(o, &rows, x, s, tape);
+        let src = p.addr[p.scatter_src];
+        for r in 0..m {
+            out[r * sc..(r + 1) * sc].copy_from_slice(&tape[r * tc + src..][..sc]);
+        }
+    }
+
+    fn lvl_backward(
+        &self,
+        rows: Range<usize>,
+        x: &[f32],
+        s: &[f32],
+        g_out: &[f32],
+        gx: &mut [f32],
+        gs: &mut [f32],
+        tape: &mut [f32],
+        adj: &mut [f32],
+    ) {
+        let o = self.opt.as_ref().expect("level execution needs a compiled plan");
+        let p = &*o.plan;
+        let sc = p.meta.state_cols;
+        let (xc, asc) = (p.meta.x_cols, p.meta.arity * sc);
+        let (tc, lac) = (p.tape_cols, p.adj_cols);
+        let m = rows.len();
+        // recompute the forward tape for these rows (blocked GEMMs)
+        self.lvl_eval(o, &rows, x, s, tape);
+        // seed every row's adjoint with its g_out
+        for r in 0..m {
+            let abs = rows.start + r;
+            let arow = &mut adj[r * lac..(r + 1) * lac];
+            arow.fill(0.0);
+            let seed = &mut arow[p.aoff[p.scatter_src]..][..sc];
+            for (a, &g) in seed.iter_mut().zip(&g_out[abs * sc..(abs + 1) * sc]) {
+                *a += g;
+            }
+        }
+        // reverse VJP sweep, op-outer: MatMul data-grads row-blocked,
+        // everything else per row — per-row arithmetic is the reference's
+        for (i, node) in p.nodes.iter().enumerate().rev() {
+            if matches!(node.kind, OpKind::MatMul { .. }) {
+                self.matmul_din_rows(o, i, node, adj, lac, m);
+                continue;
+            }
+            for r in 0..m {
+                self.vjp_node_row(
+                    o,
+                    i,
+                    node,
+                    &tape[r * tc..(r + 1) * tc],
+                    &mut adj[r * lac..(r + 1) * lac],
+                    &mut gx[r * xc..(r + 1) * xc],
+                    &mut gs[r * asc..(r + 1) * asc],
+                );
+            }
+        }
+    }
+
+    fn lvl_param_grads(&self, rows: usize, tape: &[f32], adj: &[f32], pg: &mut [Vec<f32>]) {
+        let o = self.opt.as_ref().expect("level execution needs a compiled plan");
+        let (tc, lac) = (o.plan.tape_cols, o.plan.adj_cols);
+        for r in 0..rows {
+            self.acc_pg_row(o, &tape[r * tc..(r + 1) * tc], &adj[r * lac..(r + 1) * lac], pg);
         }
     }
 }

@@ -28,6 +28,7 @@
 //! paper's unfused GPU baseline).
 
 pub mod interp;
+pub mod opt;
 pub mod programs;
 pub mod registry;
 
@@ -36,7 +37,9 @@ use std::collections::BTreeSet;
 use anyhow::{bail, Result};
 
 /// Op kinds. `param` indexes into the program's [`ParamSpec`] list.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// (`Ord`/`Hash` exist so the optimizer's CSE pass can key on
+/// structural op equality.)
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum OpKind {
     /// gather(slot): child state -> dense task block
     Gather { slot: usize },

@@ -26,6 +26,7 @@ use std::sync::{Arc, LazyLock, RwLock};
 use anyhow::{bail, Context, Result};
 
 use super::interp::ProgramCell;
+use super::opt::{OptProgram, OptStats};
 use super::{programs, ParamSpec, Program, ProgramMeta};
 use crate::util::rng::Rng;
 
@@ -75,6 +76,11 @@ pub fn register_cell(
         let p = build(h);
         p.validate()
             .with_context(|| format!("registering cell '{name}' (probe h={h})"))?;
+        // the optimizer runs at every CellSpec lookup, so a program the
+        // pass pipeline rejects must fail here, not inside a minibatch
+        p.optimize().with_context(|| {
+            format!("registering cell '{name}' (optimizer probe h={h})")
+        })?;
     }
     let mut reg = REGISTRY.write().unwrap();
     if reg.contains_key(name) {
@@ -101,6 +107,9 @@ struct CellInfo {
     h: usize,
     program: Program,
     meta: ProgramMeta,
+    /// the compiled plan, built once at spec construction ("optimize at
+    /// registration") and shared by every cell instantiated from it
+    opt: Arc<OptProgram>,
     unfused_ops: bool,
     builtin: bool,
 }
@@ -154,11 +163,17 @@ impl CellSpec {
         let meta = program
             .validate()
             .with_context(|| format!("cell '{}' at h={h}", program.name))?;
+        let opt = Arc::new(
+            program
+                .optimize()
+                .with_context(|| format!("optimizing cell '{}' at h={h}", program.name))?,
+        );
         Ok(CellSpec(Arc::new(CellInfo {
             name: program.name.clone(),
             h,
             program,
             meta,
+            opt,
             unfused_ops,
             builtin,
         })))
@@ -225,14 +240,45 @@ impl CellSpec {
         self.0.builtin
     }
 
+    /// The compiled form of the program (pass-pipeline output), shared by
+    /// every cell instantiated from this spec.
+    pub fn opt_program(&self) -> &OptProgram {
+        &self.0.opt
+    }
+
+    /// What the pass pipeline did to this cell (op counts before/after,
+    /// per-pass counters) — `cavs cells` prints this.
+    pub fn opt_stats(&self) -> &OptStats {
+        &self.0.opt.stats
+    }
+
     /// Bind the program to host parameter tensors as an interpretable
-    /// [`HostCell`](crate::exec::parallel::HostCell).
+    /// [`HostCell`](crate::exec::parallel::HostCell) executing through
+    /// the cached compiled plan (the default host path).
     pub fn instantiate(&self, params: Vec<Vec<f32>>) -> Result<ProgramCell> {
+        ProgramCell::with_plan(
+            self.0.program.clone(),
+            Arc::clone(&self.0.opt),
+            params,
+        )
+    }
+
+    /// Bind to the **reference** per-row interpreter (the `no_opt`
+    /// escape hatch; bitwise identical, just slower).
+    pub fn instantiate_unoptimized(&self, params: Vec<Vec<f32>>) -> Result<ProgramCell> {
         ProgramCell::new(self.0.program.clone(), params)
     }
 
-    /// Bind the program to Gaussian-initialized parameters.
+    /// Bind the program to Gaussian-initialized parameters (optimized).
     pub fn random_cell(&self, rng: &mut Rng, scale: f32) -> Result<ProgramCell> {
+        let params = super::interp::random_params(&self.0.program, rng, scale);
+        self.instantiate(params)
+    }
+
+    /// Gaussian-initialized **reference** (unoptimized) cell — draws the
+    /// same parameter stream as [`CellSpec::random_cell`], so the two are
+    /// directly comparable.
+    pub fn random_cell_unoptimized(&self, rng: &mut Rng, scale: f32) -> Result<ProgramCell> {
         ProgramCell::random(self.0.program.clone(), rng, scale)
     }
 }

@@ -48,11 +48,17 @@ fn assert_close(an: f64, fd: f64, what: &str) {
 }
 
 /// Cell-level gradcheck: dL/dx, dL/ds (gather adjoints) and dL/dθ for
-/// every parameter tensor, against central differences.
-fn gradcheck_program(program: Program, seed: u64) {
+/// every parameter tensor, against central differences. `optimized`
+/// runs the same check on the compiled `OptProgram` tape (views, wide
+/// GEMMs, fused sweeps) instead of the reference per-node tape.
+fn gradcheck_program_mode(program: Program, seed: u64, optimized: bool) {
     let name = program.name.clone();
     let mut rng = Rng::new(seed);
-    let mut cell = ProgramCell::random(program, &mut rng, 0.2).unwrap();
+    let mut cell = if optimized {
+        ProgramCell::random_optimized(program, &mut rng, 0.2).unwrap()
+    } else {
+        ProgramCell::random(program, &mut rng, 0.2).unwrap()
+    };
     let xc = cell.x_cols();
     let sc_all = cell.state_cols() * cell.arity();
     let x: Vec<f32> = (0..xc).map(|_| rng.normal_f32(0.5)).collect();
@@ -94,12 +100,17 @@ fn gradcheck_program(program: Program, seed: u64) {
     }
     for pi in 0..pg.len() {
         for j in sample_indices(pg[pi].len()) {
+            // every perturbation resyncs the compiled plan's merged GEMM
+            // weights (no-op on the reference path / unmerged plans)
             let orig = cell.params()[pi][j];
             cell.params_mut()[pi][j] = orig + eps;
+            cell.sync_opt();
             let lp = loss_of(&cell, &x, &s, &w, &mut ftmp);
             cell.params_mut()[pi][j] = orig - eps;
+            cell.sync_opt();
             let lm = loss_of(&cell, &x, &s, &w, &mut ftmp);
             cell.params_mut()[pi][j] = orig;
+            cell.sync_opt();
             let fd = (lp - lm) / (2.0 * eps as f64);
             assert_close(
                 pg[pi][j] as f64,
@@ -108,6 +119,10 @@ fn gradcheck_program(program: Program, seed: u64) {
             );
         }
     }
+}
+
+fn gradcheck_program(program: Program, seed: u64) {
+    gradcheck_program_mode(program, seed, false);
 }
 
 #[test]
@@ -120,9 +135,25 @@ fn gradcheck_all_five_cells() {
     gradcheck_program(programs::cstreelstm_program(h), 15);
 }
 
+/// FD gradcheck directly on the **compiled** `OptProgram` tapes: the
+/// structural backward over the optimized value layout (folded views,
+/// concatenated gate GEMMs, fused elementwise groups) must carry the
+/// same analytic gradients as the reference interpreter does.
+#[test]
+fn gradcheck_all_five_cells_on_optimized_tapes() {
+    let h = 5;
+    gradcheck_program_mode(programs::lstm_program(h), 21, true);
+    gradcheck_program_mode(programs::treelstm_program(h), 22, true);
+    gradcheck_program_mode(programs::treefc_program(h), 23, true);
+    gradcheck_program_mode(programs::gru_program(h), 24, true);
+    gradcheck_program_mode(programs::cstreelstm_program(h), 25, true);
+}
+
 /// End-to-end frontier gradcheck: the whole choreography — pull, gather,
-/// scatter-add, per-row backward, sequential parameter accumulation —
+/// scatter-add, level backward, sequential parameter accumulation —
 /// against finite differences on a real multi-graph batch (gru).
+/// `spec.instantiate` binds the **compiled** plan, so this exercises the
+/// default (optimized, level-batched) execution path.
 #[test]
 fn host_frontier_gradcheck_end_to_end() {
     let h = 4;
@@ -204,7 +235,7 @@ fn schedule_host(batch: &GraphBatch) -> Vec<cavs::scheduler::Task> {
 fn program_only_cells_train_end_to_end() {
     let gru = CellSpec::lookup("gru", 6).unwrap();
     let data = Dataset::ptb_like_var(5, 12, 20, 8);
-    let logs = train_host_epochs(&gru, &data, 4, 0.02, 5, 2, 7, |_| {}).unwrap();
+    let logs = train_host_epochs(&gru, &data, 4, 0.02, 5, 2, 7, true, |_| {}).unwrap();
     assert!(
         logs.last().unwrap().loss < logs[0].loss,
         "gru loss {} -> {}",
@@ -214,7 +245,7 @@ fn program_only_cells_train_end_to_end() {
 
     let cst = CellSpec::lookup("cstreelstm", 6).unwrap();
     let data = Dataset::sst_like(6, 12, 20, 5);
-    let logs = train_host_epochs(&cst, &data, 4, 0.02, 5, 2, 7, |_| {}).unwrap();
+    let logs = train_host_epochs(&cst, &data, 4, 0.02, 5, 2, 7, true, |_| {}).unwrap();
     assert!(
         logs.last().unwrap().loss < logs[0].loss,
         "cstreelstm loss {} -> {}",
@@ -253,10 +284,12 @@ fn user_registered_cell_trains_and_serves() {
     }
     registry::register_cell("leaky-gru-e2e", leaky_gru).unwrap();
     gradcheck_program(leaky_gru(5), 31);
+    // the user cell's compiled tape gradchecks too
+    gradcheck_program_mode(leaky_gru(5), 32, true);
 
     let spec = CellSpec::lookup("leaky-gru-e2e", 6).unwrap();
     let data = Dataset::ptb_like_var(9, 10, 20, 8);
-    let logs = train_host_epochs(&spec, &data, 4, 0.02, 4, 1, 3, |_| {}).unwrap();
+    let logs = train_host_epochs(&spec, &data, 4, 0.02, 4, 1, 3, true, |_| {}).unwrap();
     assert!(logs.last().unwrap().loss < logs[0].loss);
 
     // ...and serve it

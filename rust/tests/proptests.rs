@@ -612,6 +612,89 @@ fn prop_serve_plan_forward_matches_scheduler() {
     });
 }
 
+/// The compiled host path — `Program::optimize()`'s folded views, wide
+/// gate GEMMs, fused elementwise sweeps, executed per frontier level by
+/// the `LevelCell` hooks — is **bitwise identical** to the reference
+/// per-row interpreter for every registered cell: forward states,
+/// backward state gradients, input-table gradients, parameter gradients,
+/// traffic accounting and padding, at thread counts {1, 2, 4}. This is
+/// the optimizer's acceptance contract: the speedup may never move a
+/// single output bit.
+#[test]
+fn prop_optimized_matches_unoptimized_bitwise() {
+    use cavs::models::CellSpec;
+
+    check("opt-equivalence", 10, |rng| {
+        let vocab = 20usize;
+        let h = 1 + rng.below(6);
+        for cell in ["lstm", "treelstm", "treefc", "gru", "cstreelstm"] {
+            let spec = CellSpec::lookup(cell, h).unwrap();
+            let arity = spec.arity();
+            // arity-1 cells batch chains; tree cells batch the mixed set
+            let graphs: Vec<InputGraph> = if arity == 1 {
+                let k = 1 + rng.below(6);
+                (0..k)
+                    .map(|_| {
+                        let len = 1 + rng.below(10);
+                        let toks: Vec<i32> =
+                            (0..len).map(|_| rng.below(vocab) as i32).collect();
+                        let labs = vec![-1; len];
+                        InputGraph::chain(&toks, &labs)
+                    })
+                    .collect()
+            } else {
+                random_graphs(rng)
+            };
+            let refs: Vec<&InputGraph> = graphs.iter().collect();
+            let batch = GraphBatch::new(&refs, arity);
+            let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+            let xtable: Vec<f32> =
+                (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+
+            // identical parameter stream on both sides
+            let mut prng = Rng::new(1000 + h as u64);
+            let reference = spec.random_cell_unoptimized(&mut prng, 0.2).unwrap();
+            let mut prng = Rng::new(1000 + h as u64);
+            let optimized = spec.random_cell(&mut prng, 0.2).unwrap();
+
+            let base =
+                run_host_frontier(&batch, &tasks, &reference, &xtable, 1, true);
+            for threads in [1usize, 2, 4] {
+                let r = run_host_frontier(
+                    &batch, &tasks, &optimized, &xtable, threads, true,
+                );
+                assert_eq!(
+                    base.states.as_slice(),
+                    r.states.as_slice(),
+                    "{cell} h={h} t={threads}: forward states diverge"
+                );
+                assert_eq!(
+                    base.grads.as_ref().unwrap().as_slice(),
+                    r.grads.as_ref().unwrap().as_slice(),
+                    "{cell} h={h} t={threads}: state gradients diverge"
+                );
+                assert_eq!(
+                    base.x_grads, r.x_grads,
+                    "{cell} h={h} t={threads}: input-table gradients diverge"
+                );
+                assert_eq!(
+                    base.param_grads, r.param_grads,
+                    "{cell} h={h} t={threads}: parameter gradients diverge"
+                );
+                assert_eq!(
+                    (base.traffic_bytes, base.traffic_ops),
+                    (r.traffic_bytes, r.traffic_ops),
+                    "{cell} h={h} t={threads}: traffic accounting diverges"
+                );
+                assert_eq!(
+                    base.padded_rows, r.padded_rows,
+                    "{cell} h={h} t={threads}: padding observation diverges"
+                );
+            }
+        }
+    });
+}
+
 /// The Program interpreter is **bitwise identical** to the hand-written
 /// host cells on the same weights: both sides perform the same f32
 /// operations in the same order (matmul accumulation order, add/bias

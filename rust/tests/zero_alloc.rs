@@ -96,25 +96,53 @@ fn steady_state_frontier_fwd_bwd_loop_allocates_nothing() {
         assert!(hf.grads().unwrap().as_slice().iter().any(|&v| v != 0.0));
     }
 
-    // The Program interpreter obeys the same invariant: tape evaluation,
-    // the structural backward, and the sequential parameter-gradient
-    // accumulation all run on preplanned arenas — a user-registered cell
-    // costs no steady-state allocations either.
+    // The Program interpreter obeys the same invariant — and since PR 5
+    // `spec.random_cell` binds the compiled OptProgram plan, so this
+    // measures the **optimized level path**: level tapes, blocked GEMM
+    // sweeps, fused elementwise groups and the level parameter pass all
+    // live on preplanned arenas. Sequential and pooled alike.
     let spec = cavs::models::CellSpec::lookup("gru", h).unwrap();
     let pc = spec.random_cell(&mut rng, 0.2).unwrap();
+    assert!(pc.is_optimized(), "spec cells run the compiled plan");
+    {
+        let pool2 = WorkerPool::new(2);
+        for (what, ex) in [
+            ("sequential", Sharder::Sequential),
+            ("pooled", Sharder::Pool(&pool2)),
+        ] {
+            let mut hf = HostFrontier::new();
+            for _ in 0..2 {
+                hf.run(&batch, &tasks, &pc, &xtable, ex, true);
+            }
+            let before = ALLOCS.load(Ordering::SeqCst);
+            for _ in 0..3 {
+                hf.run(&batch, &tasks, &pc, &xtable, ex, true);
+            }
+            let after = ALLOCS.load(Ordering::SeqCst);
+            assert_eq!(
+                after - before,
+                0,
+                "steady-state optimized fwd+bwd+pgrad heap-allocated ({what})"
+            );
+            assert!(hf.param_grads().unwrap().iter().flatten().any(|&v| v != 0.0));
+        }
+    }
+
+    // ...and the reference (no_opt) interpreter path stays clean too.
+    let pc_ref = spec.random_cell_unoptimized(&mut rng, 0.2).unwrap();
     let mut hf = HostFrontier::new();
     for _ in 0..2 {
-        hf.run(&batch, &tasks, &pc, &xtable, Sharder::Sequential, true);
+        hf.run(&batch, &tasks, &pc_ref, &xtable, Sharder::Sequential, true);
     }
     let before = ALLOCS.load(Ordering::SeqCst);
     for _ in 0..3 {
-        hf.run(&batch, &tasks, &pc, &xtable, Sharder::Sequential, true);
+        hf.run(&batch, &tasks, &pc_ref, &xtable, Sharder::Sequential, true);
     }
     let after = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(
         after - before,
         0,
-        "steady-state interpreter fwd+bwd+pgrad heap-allocated"
+        "steady-state reference interpreter fwd+bwd+pgrad heap-allocated"
     );
     assert!(hf.param_grads().unwrap().iter().flatten().any(|&v| v != 0.0));
 }
