@@ -496,17 +496,22 @@ pub fn loc(_rt: &Runtime) -> Result<Table> {
 }
 
 /// Online-serving sweep (`cavs bench --exp serve`): offered load vs
-/// latency over the `serve` subsystem, on the Tree-FC `ProgramCell`
+/// latency over the `serve` subsystem for **every batching policy**
+/// (fixed / agreement / adaptive), on the Tree-FC `ProgramCell`
 /// (compiled schedule by default, reference interpreter under `no_opt`)
 /// so the bench runs everywhere (CI smoke uses `tiny`). Closed-loop rows
-/// sweep concurrency (capacity); open-loop rows offer fixed rates in
-/// tiny mode (stable row keys for the regression gate) or fractions of
-/// the measured capacity otherwise. Writes `results/BENCH_serve.json`.
+/// sweep concurrency (capacity); open-loop rows offer the same rates to
+/// each policy — fixed rates in tiny mode (stable row keys for the
+/// regression gate), fractions of the fixed-policy capacity otherwise —
+/// so the per-policy latency/throughput curves are directly comparable.
+/// The policy is part of the mode cell ("closed/adaptive"), so the
+/// regression gate keys every policy's rows independently. Writes
+/// `results/BENCH_serve.json`.
 pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
     use crate::serve::loadgen::{
         mixed_workload, run_closed_loop, run_open_loop,
     };
-    use crate::serve::{HostExec, ServeOpts, Server};
+    use crate::serve::{HostExec, PolicyKind, ServeConfig, Server};
     use crate::util::stats::fmt_duration;
 
     let (total, h, vocab, max_batch) = if tiny {
@@ -514,43 +519,46 @@ pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
     } else {
         (n_scaled(512, scale), 64, 100, 32)
     };
-    let opts = ServeOpts {
+    let base = ServeConfig {
         max_batch,
-        max_delay: std::time::Duration::from_millis(2),
+        deadline_ms: 2.0,
         queue_cap: 4 * max_batch,
+        ..ServeConfig::default()
     };
     let graphs = mixed_workload(11, 64.min(total), vocab, 2);
     let spec = CellSpec::lookup("treefc", h)?;
-    let fresh_server = || {
+    let fresh_server = |serve: &ServeConfig| {
         let exec = if opt {
             HostExec::from_spec(&spec, vocab, scale.threads.max(1), 7)
         } else {
             HostExec::from_spec_unoptimized(&spec, vocab, scale.threads.max(1), 7)
         }
         .expect("treefc spec instantiates");
-        Server::new(exec, opts.policy())
+        Server::with_policy(exec, serve.make_policy())
     };
     let mut table = Table::new(
         &format!(
-            "serve: offered load vs latency ({total} mixed tree/seq requests, \
-             h={h}, max_batch={max_batch}, threads={}, opt={opt})",
+            "serve: offered load vs latency per policy ({total} mixed \
+             tree/seq requests, h={h}, max_batch={max_batch}, threads={}, \
+             opt={opt})",
             scale.threads.max(1)
         ),
         &[
-            "mode", "offered", "responses", "rejected", "rps", "batch_mean",
-            "p50", "p95", "p99", "qdepth_max", "batch_hist",
+            "mode", "offered", "responses", "rejected", "shed", "rps",
+            "batch_mean", "p50", "p95", "p99", "qdepth_max", "batch_hist",
         ],
     );
     table.tag("cell", "treefc");
     table.tag("threads", scale.threads.max(1));
     table.tag("opt", opt);
     table.tag("tiny", tiny);
-    let mut row = |mode: &str, offered: String, r: &crate::serve::ServeReport| {
+    let mut row = |mode: String, offered: String, r: &crate::serve::ServeReport| {
         table.row(vec![
-            mode.into(),
+            mode,
             offered,
             r.n_responses.to_string(),
             r.rejected.to_string(),
+            r.shed.to_string(),
             format!("{:.0}", r.throughput_rps),
             format!("{:.2}", r.batch_mean),
             fmt_duration(r.latency.median_s),
@@ -561,28 +569,42 @@ pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
         ]);
     };
 
-    // closed loop: capacity at increasing in-flight counts
+    // closed loop: capacity at increasing in-flight counts, per policy.
+    // The fixed-policy capacity anchors the open-loop rates below.
     let concs: &[usize] = if tiny { &[1, 4] } else { &[1, 4, 16, 64] };
     let mut capacity_rps = 0.0f64;
-    for &c in concs {
-        let mut sv = fresh_server();
-        let r = run_closed_loop(&mut sv, &opts, &graphs, total, c)?;
-        capacity_rps = capacity_rps.max(r.throughput_rps);
-        row("closed", format!("inflight={c}"), &r);
+    for kind in PolicyKind::ALL {
+        let serve = ServeConfig { policy: kind, ..base };
+        for &c in concs {
+            let mut sv = fresh_server(&serve);
+            let r = run_closed_loop(&mut sv, &serve, &graphs, total, c)?;
+            if kind == PolicyKind::Fixed {
+                capacity_rps = capacity_rps.max(r.throughput_rps);
+            }
+            row(format!("closed/{}", kind.name()), format!("inflight={c}"), &r);
+        }
     }
 
-    // open loop: fixed offered rates in tiny mode (stable row keys for
-    // the CI regression gate), capacity fractions otherwise
-    if tiny {
-        let mut sv = fresh_server();
-        let r = run_open_loop(&mut sv, &opts, &graphs, total, 200.0, 23)?;
-        row("open", "200rps".to_string(), &r);
+    // open loop: the same offered rates for every policy — fixed rates in
+    // tiny mode (stable row keys for the CI regression gate), fractions
+    // of the fixed-policy capacity otherwise. The low rate is where the
+    // adaptive policy should beat fixed on p99 (cuts early instead of
+    // waiting out the deadline); the high rate is past saturation, where
+    // it should hold throughput by shedding hopeless requests.
+    let rates: Vec<f64> = if tiny {
+        vec![50.0, 400.0]
     } else {
-        for &f in &[0.25f64, 0.5, 0.8, 1.2] {
-            let rate = (capacity_rps * f).max(1.0);
-            let mut sv = fresh_server();
-            let r = run_open_loop(&mut sv, &opts, &graphs, total, rate, 23)?;
-            row("open", format!("{rate:.0}rps"), &r);
+        [0.25f64, 0.5, 0.8, 1.2]
+            .iter()
+            .map(|f| (capacity_rps * f).max(1.0))
+            .collect()
+    };
+    for kind in PolicyKind::ALL {
+        let serve = ServeConfig { policy: kind, ..base };
+        for &rate in &rates {
+            let mut sv = fresh_server(&serve);
+            let r = run_open_loop(&mut sv, &serve, &graphs, total, rate, 23)?;
+            row(format!("open/{}", kind.name()), format!("{rate:.0}rps"), &r);
         }
     }
 

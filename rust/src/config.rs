@@ -7,6 +7,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::models::HeadKind;
 use crate::scheduler::Policy;
+use crate::serve::{PolicyKind, ServeConfig};
 use crate::util::json::Json;
 use crate::vertex::registry;
 
@@ -41,14 +42,11 @@ pub struct Config {
     /// reference per-row interpreter — bitwise identical, just slower;
     /// the A/B escape hatch for the bench-regression harness.
     pub opt: bool,
-    /// `cavs serve`: most requests merged into one batch
-    pub serve_max_batch: usize,
-    /// `cavs serve`: dynamic-batching deadline in milliseconds (how long
-    /// a non-full batch waits for more requests)
-    pub serve_deadline_ms: f64,
-    /// `cavs serve`: request-queue capacity (admission control /
-    /// backpressure threshold)
-    pub serve_queue_cap: usize,
+    /// `cavs serve`: the typed serving section (`serve.*` keys — policy,
+    /// batch caps, deadline, queue capacity, SLO budgets). The old flat
+    /// `serve_max_batch`/`serve_deadline_ms`/`serve_queue_cap` keys are
+    /// deprecated aliases into it for one release.
+    pub serve: ServeConfig,
     pub artifacts_dir: String,
 }
 
@@ -75,9 +73,7 @@ impl Default for Config {
             threads: 1,
             pool: true,
             opt: true,
-            serve_max_batch: 32,
-            serve_deadline_ms: 2.0,
-            serve_queue_cap: 256,
+            serve: ServeConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -91,10 +87,27 @@ impl Config {
         let mut c = Config::default();
         if let Some(obj) = j.as_obj() {
             for (k, v) in obj {
+                // the typed serve section: {"serve": {"policy": "...", ...}}
+                // expands to serve.* keys
+                if k == "serve" {
+                    if let Some(section) = v.as_obj() {
+                        for (sk, sv) in section {
+                            c.apply(&format!("serve.{sk}"), &json_to_string(sv))?;
+                        }
+                        continue;
+                    }
+                }
                 c.apply(k, &json_to_string(v))?;
             }
         }
+        c.validate()?;
         Ok(c)
+    }
+
+    /// Cross-field validation (run after a config file loads and after
+    /// CLI overrides apply; errors name the offending key).
+    pub fn validate(&self) -> Result<()> {
+        self.serve.validate()
     }
 
     /// Apply one `key=value` override.
@@ -149,44 +162,78 @@ impl Config {
             "opt" => self.opt = parse_bool(val)?,
             // the spelled-out escape hatch: `--set no_opt=true`
             "no_opt" => self.opt = !parse_bool(val)?,
-            "serve_max_batch" => {
+            "serve.policy" | "serve_policy" => {
+                self.serve.policy = PolicyKind::parse(val).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "serve.policy must be fixed|agreement|adaptive, \
+                         got '{val}'"
+                    )
+                })?;
+            }
+            "serve.max_batch" => {
                 let b: usize = val.parse()?;
                 if b == 0 {
-                    bail!("serve_max_batch must be >= 1");
+                    bail!("serve.max_batch must be >= 1");
                 }
-                self.serve_max_batch = b;
+                self.serve.max_batch = b;
             }
-            "serve_deadline_ms" => {
-                let d: f64 = val.parse()?;
-                // finite + bounded so Duration::from_secs_f64 can never
-                // panic downstream (f64 parsing accepts "inf"/1e300)
-                if !d.is_finite() || !(0.0..=60_000.0).contains(&d) {
-                    bail!("serve_deadline_ms must be in 0..=60000");
-                }
-                self.serve_deadline_ms = d;
+            "serve.deadline_ms" => {
+                self.serve.deadline_ms =
+                    parse_serve_ms("serve.deadline_ms", val, true)?;
             }
-            "serve_queue_cap" => {
+            "serve.queue_cap" => {
                 let c: usize = val.parse()?;
                 if c == 0 {
-                    bail!("serve_queue_cap must be >= 1");
+                    bail!("serve.queue_cap must be >= 1");
                 }
-                self.serve_queue_cap = c;
+                self.serve.queue_cap = c;
+            }
+            "serve.adaptive_max_batch" => {
+                // 0 = auto (4x max_batch); cross-field bound checked by
+                // Config::validate once every key has applied
+                self.serve.adaptive_max_batch = val.parse()?;
+            }
+            "serve.agreement_lookahead" => {
+                self.serve.agreement_lookahead = val.parse()?;
+            }
+            "serve.slo_interactive_ms" => {
+                self.serve.slo_interactive_ms =
+                    parse_serve_ms("serve.slo_interactive_ms", val, false)?;
+            }
+            "serve.slo_standard_ms" => {
+                self.serve.slo_standard_ms =
+                    parse_serve_ms("serve.slo_standard_ms", val, false)?;
+            }
+            "serve.slo_bulk_ms" => {
+                self.serve.slo_bulk_ms =
+                    parse_serve_ms("serve.slo_bulk_ms", val, false)?;
+            }
+            // deprecated flat aliases (one release of warning, then gone)
+            "serve_max_batch" => {
+                crate::warnlog!(
+                    "config key 'serve_max_batch' is deprecated; use \
+                     'serve.max_batch'"
+                );
+                return self.apply("serve.max_batch", val);
+            }
+            "serve_deadline_ms" => {
+                crate::warnlog!(
+                    "config key 'serve_deadline_ms' is deprecated; use \
+                     'serve.deadline_ms'"
+                );
+                return self.apply("serve.deadline_ms", val);
+            }
+            "serve_queue_cap" => {
+                crate::warnlog!(
+                    "config key 'serve_queue_cap' is deprecated; use \
+                     'serve.queue_cap'"
+                );
+                return self.apply("serve.queue_cap", val);
             }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
-    }
-
-    /// Serving knobs for `cavs serve` (`serve_*` config keys).
-    pub fn serve_opts(&self) -> crate::serve::ServeOpts {
-        crate::serve::ServeOpts {
-            max_batch: self.serve_max_batch.max(1),
-            max_delay: std::time::Duration::from_secs_f64(
-                self.serve_deadline_ms.max(0.0) / 1e3,
-            ),
-            queue_cap: self.serve_queue_cap.max(1),
-        }
     }
 
     pub fn engine_opts(&self, training: bool) -> crate::exec::EngineOpts {
@@ -202,6 +249,18 @@ impl Config {
             },
         }
     }
+}
+
+/// Parse a millisecond-valued `serve.*` key: finite + bounded so
+/// `Duration::from_secs_f64` can never panic downstream (f64 parsing
+/// accepts "inf"/1e300). SLO budgets additionally exclude zero.
+fn parse_serve_ms(key: &str, val: &str, zero_ok: bool) -> Result<f64> {
+    let d: f64 = val.parse()?;
+    if !d.is_finite() || !(0.0..=60_000.0).contains(&d) || (!zero_ok && d <= 0.0) {
+        let lo = if zero_ok { "0" } else { ">0" };
+        bail!("{key} must be in {lo}..=60000 (milliseconds), got '{val}'");
+    }
+    Ok(d)
 }
 
 fn parse_bool(v: &str) -> Result<bool> {
@@ -290,24 +349,79 @@ mod tests {
     }
 
     #[test]
-    fn serve_keys_flow_into_serve_opts() {
+    fn serve_keys_flow_into_serve_config() {
         let mut c = Config::default();
-        let o = c.serve_opts();
-        assert_eq!(o.max_batch, 32);
-        assert_eq!(o.queue_cap, 256);
-        assert_eq!(o.max_delay, std::time::Duration::from_millis(2));
+        assert_eq!(c.serve.max_batch, 32);
+        assert_eq!(c.serve.queue_cap, 256);
+        assert_eq!(c.serve.max_delay(), std::time::Duration::from_millis(2));
+        assert_eq!(c.serve.policy, PolicyKind::Fixed);
+        c.apply("serve.policy", "adaptive").unwrap();
+        c.apply("serve.max_batch", "8").unwrap();
+        c.apply("serve.deadline_ms", "0.5").unwrap();
+        c.apply("serve.queue_cap", "64").unwrap();
+        c.apply("serve.adaptive_max_batch", "16").unwrap();
+        c.apply("serve.slo_interactive_ms", "3").unwrap();
+        assert_eq!(c.serve.policy, PolicyKind::Adaptive);
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.queue_cap, 64);
+        assert_eq!(c.serve.max_delay(), std::time::Duration::from_micros(500));
+        assert_eq!(c.serve.adaptive_cap(), 16);
+        assert!((c.serve.slo().interactive.as_secs_f64() - 3e-3).abs() < 1e-9);
+        // the ISSUE's spelling of the policy key works too
+        c.apply("serve_policy", "agreement").unwrap();
+        assert_eq!(c.serve.policy, PolicyKind::Agreement);
+        // errors name the offending key
+        assert!(c.apply("serve.max_batch", "0").is_err());
+        let e = c.apply("serve.deadline_ms", "-1").unwrap_err().to_string();
+        assert!(e.contains("serve.deadline_ms"), "{e}");
+        assert!(c.apply("serve.deadline_ms", "inf").is_err());
+        assert!(c.apply("serve.deadline_ms", "1e300").is_err());
+        assert!(c.apply("serve.queue_cap", "0").is_err());
+        let e = c.apply("serve.policy", "greedy").unwrap_err().to_string();
+        assert!(e.contains("fixed|agreement|adaptive"), "{e}");
+        let e = c.apply("serve.slo_bulk_ms", "0").unwrap_err().to_string();
+        assert!(e.contains("serve.slo_bulk_ms"), "{e}");
+    }
+
+    #[test]
+    fn deprecated_flat_serve_aliases_still_apply() {
+        let mut c = Config::default();
         c.apply("serve_max_batch", "8").unwrap();
         c.apply("serve_deadline_ms", "0.5").unwrap();
         c.apply("serve_queue_cap", "64").unwrap();
-        let o = c.serve_opts();
-        assert_eq!(o.max_batch, 8);
-        assert_eq!(o.queue_cap, 64);
-        assert_eq!(o.max_delay, std::time::Duration::from_micros(500));
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.queue_cap, 64);
+        assert_eq!(c.serve.max_delay(), std::time::Duration::from_micros(500));
+        // aliases delegate, so they keep the new keys' validation
         assert!(c.apply("serve_max_batch", "0").is_err());
-        assert!(c.apply("serve_deadline_ms", "-1").is_err());
         assert!(c.apply("serve_deadline_ms", "inf").is_err());
-        assert!(c.apply("serve_deadline_ms", "1e300").is_err());
         assert!(c.apply("serve_queue_cap", "0").is_err());
+    }
+
+    #[test]
+    fn json_serve_section_and_cross_field_validation() {
+        let p = std::env::temp_dir()
+            .join(format!("cavs-serve-cfg-{}.json", std::process::id()));
+        std::fs::write(
+            &p,
+            r#"{"h": 64, "serve": {"policy": "agreement", "max_batch": 8,
+                "agreement_lookahead": 24, "deadline_ms": 1.5}}"#,
+        )
+        .unwrap();
+        let c = Config::load(&p).unwrap();
+        assert_eq!(c.h, 64);
+        assert_eq!(c.serve.policy, PolicyKind::Agreement);
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.lookahead(), 24);
+        // cross-field: a nonzero lookahead below max_batch fails at load
+        std::fs::write(
+            &p,
+            r#"{"serve": {"max_batch": 8, "agreement_lookahead": 4}}"#,
+        )
+        .unwrap();
+        let e = Config::load(&p).unwrap_err().to_string();
+        assert!(e.contains("serve.agreement_lookahead"), "{e}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -78,6 +78,9 @@ impl Args {
         if let Some(c) = self.get("cell") {
             cfg.apply("cell", c).context("--cell expects a registered cell")?;
         }
+        // cross-field validation after every override has applied (a
+        // config file validates at load, but --set can re-break it)
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -139,14 +142,20 @@ The cell is an **open API**: `vertex::Program` is the single source of
 
 `cavs serve` runs the online-inference demo: n_samples synthetic
   concurrent requests with mixed tree/sequence structures flow through
-  the MPSC request queue, are merged on the fly by the deadline/max-batch
-  former (--set serve_max_batch=N, serve_deadline_ms=D,
-  serve_queue_cap=C), and execute forward-only on the pooled engine
-  (Program-interpreter host cell when no artifact set is present). Prints
-  throughput + p50/p95/p99 latency + the batch-size distribution and
-  writes results/BENCH_serve.json. `cavs bench --exp serve` sweeps
-  offered load vs latency (closed- and open-loop); `--tiny true` is the
-  bounded CI smoke.
+  the MPSC request queue, are formed into batches by a pluggable
+  FormPolicy (--set serve.policy=fixed|agreement|adaptive), merged on
+  the fly, and executed forward-only on the pooled engine
+  (Program-interpreter host cell when no artifact set is present).
+    fixed      cut at serve.max_batch or serve.deadline_ms (baseline)
+    agreement  shape-aware grouping: picks the pending requests whose
+               level widths pad least when merged (serve.agreement_lookahead)
+    adaptive   load-proportional batching with per-request SLO classes
+               (interactive/standard/bulk priority lanes, deadline-based
+               shedding; serve.adaptive_max_batch, serve.slo_*_ms)
+  Prints throughput + p50/p95/p99 latency + the batch-size distribution
+  and writes results/BENCH_serve.json. `cavs bench --exp serve` sweeps
+  offered load vs latency per policy (closed- and open-loop); `--tiny
+  true` is the bounded CI smoke.
 
 --threads N shards every batching task's host-side rows (pull/gather/
   scatter/scatter-add) across N participants of a persistent worker
@@ -171,7 +180,12 @@ The host interpreter compiles F by default (vertex::opt: DCE + CSE +
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
   lazy_batching, fusion, streaming, threads, pool, opt, no_opt,
-  serve_max_batch, serve_deadline_ms, serve_queue_cap, artifacts_dir"
+  serve.policy, serve.max_batch, serve.deadline_ms, serve.queue_cap,
+  serve.adaptive_max_batch, serve.agreement_lookahead,
+  serve.slo_interactive_ms, serve.slo_standard_ms, serve.slo_bulk_ms,
+  artifacts_dir
+  (deprecated aliases, one release: serve_max_batch, serve_deadline_ms,
+  serve_queue_cap)"
     );
 }
 
@@ -334,10 +348,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// any registered cell serves.
 fn cmd_serve(args: &Args) -> Result<()> {
     use cavs::serve::loadgen::mixed_workload;
-    use cavs::serve::{EngineExec, HostExec};
+    use cavs::serve::{EngineExec, HostExec, ServeConfig};
 
     let cfg = args.config()?;
-    let sopts = cfg.serve_opts();
+    let serve = cfg.serve;
     let total = cfg.n_samples.max(1);
     let have_artifacts =
         Runtime::have_artifacts(Path::new(&cfg.artifacts_dir));
@@ -346,27 +360,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spec = CellSpec::lookup(&cfg.cell, cfg.h.min(64))?;
     let arity = spec.arity();
     let graphs = mixed_workload(cfg.seed, 64.min(total), cfg.vocab, arity);
-    let concurrency = (2 * sopts.max_batch).min(total);
+    let concurrency = (2 * serve.max_batch).min(total);
     info!(
-        "serving {total} mixed tree/seq requests (max_batch {}, deadline {:?}, \
-         queue cap {}, {} in flight, {} worker threads)",
-        sopts.max_batch, sopts.max_delay, sopts.queue_cap, concurrency,
+        "serving {total} mixed tree/seq requests (policy {}, max_batch {}, \
+         deadline {:?}, queue cap {}, {} in flight, {} worker threads)",
+        serve.policy.name(),
+        serve.max_batch,
+        serve.max_delay(),
+        serve.queue_cap,
+        concurrency,
         cfg.threads
     );
 
     fn demo<E: cavs::serve::ForwardExec>(
         exec: E,
-        sopts: cavs::serve::ServeOpts,
+        serve: &ServeConfig,
         graphs: &[cavs::graph::InputGraph],
         total: usize,
         concurrency: usize,
         stamp: &[(&str, String)],
     ) -> anyhow::Result<()> {
         use cavs::util::json::Json;
-        let mut server = cavs::serve::Server::new(exec, sopts.policy());
+        let mut server =
+            cavs::serve::Server::with_policy(exec, serve.make_policy());
         let report = cavs::serve::loadgen::run_closed_loop(
             &mut server,
-            &sopts,
+            serve,
             graphs,
             total,
             concurrency,
@@ -374,7 +393,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("\n{}", report.render());
         std::fs::create_dir_all("results")?;
         // stamp the report with its provenance (git revision, cell,
-        // threads, opt) like every other BENCH_*.json
+        // policy, threads, opt) like every other BENCH_*.json
         let mut j = report.json();
         if let Json::Obj(m) = &mut j {
             m.insert(
@@ -391,6 +410,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stamp = [
         ("cell", cfg.cell.clone()),
+        ("policy", serve.policy.name().to_string()),
         ("threads", cfg.threads.to_string()),
         ("opt", cfg.opt.to_string()),
     ];
@@ -403,7 +423,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.cell, cfg.h
         );
         let exec = EngineExec::new(&rt, model, cfg.engine_opts(false));
-        demo(exec, sopts, &graphs, total, concurrency, &stamp)
+        demo(exec, &serve, &graphs, total, concurrency, &stamp)
     } else {
         info!(
             "no artifact set at {} — serving {} through the host Program \
@@ -413,13 +433,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if cfg.opt {
             let exec =
                 HostExec::from_spec(&spec, cfg.vocab, cfg.threads, cfg.seed)?;
-            demo(exec, sopts, &graphs, total, concurrency, &stamp)
+            demo(exec, &serve, &graphs, total, concurrency, &stamp)
         } else {
             info!("no_opt set: reference per-row interpreter (A/B baseline)");
             let exec = HostExec::from_spec_unoptimized(
                 &spec, cfg.vocab, cfg.threads, cfg.seed,
             )?;
-            demo(exec, sopts, &graphs, total, concurrency, &stamp)
+            demo(exec, &serve, &graphs, total, concurrency, &stamp)
         }
     }
 }

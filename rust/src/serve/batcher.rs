@@ -1,10 +1,14 @@
-//! Adaptive batch forming + recycled forward planning.
+//! Policy-driven batch forming + recycled forward planning.
 //!
-//! [`BatchFormer`] implements the deadline/max-batch policy of
-//! just-in-time dynamic batching: the batch opens at the first request
-//! and closes when either `max_batch` requests merged or `max_delay`
-//! elapsed — small under light load (low latency), large under heavy
-//! load (high throughput).
+//! [`BatchFormer`] drives a [`FormPolicy`] over the request queue: it
+//! drains arrivals into a persistent pending pool (up to the policy's
+//! lookahead), asks the policy when to cut
+//! ([`FormPolicy::decide`]) and which pending requests join the batch
+//! ([`FormPolicy::select`]), and hands the batch to the server. Requests
+//! the policy leaves behind stay pending — their latency clocks keep
+//! running and they anchor the next batch, so no request starves. The
+//! former also maintains the arrival-rate EWMA the adaptive policy
+//! conditions on.
 //!
 //! [`BatchPlan`] is the serving twin of `scheduler::schedule`
 //! (`Policy::Batched`): the same depth-level grouping and the same
@@ -18,8 +22,9 @@
 use std::time::{Duration, Instant};
 
 use crate::graph::GraphBatch;
-use crate::scheduler::{pick_bucket, Task};
+use crate::scheduler::{pick_bucket, stats, Task};
 
+use super::policy::{Decision, Fixed, FormPolicy, PolicyCtx};
 use super::queue::{QueueWait, RequestQueue};
 use super::Request;
 
@@ -27,78 +32,136 @@ use super::Request;
 /// (close is noticed at this granularity).
 const IDLE_WAIT_SLICE: Duration = Duration::from_millis(25);
 
-/// The dynamic-batching policy: close a batch at `max_batch` requests or
-/// `max_delay` after it opened, whichever comes first.
+/// Arrival-rate EWMA time constant: observations older than a few τ stop
+/// mattering, so the rate tracks load shifts within ~100ms.
+const RATE_TAU_S: f64 = 0.05;
+
+/// The original hardcoded deadline/max-batch pair.
+#[deprecated(
+    since = "0.6.0",
+    note = "construct a `serve::Fixed` policy (or any other `FormPolicy`) \
+            and pass it to `Server::with_policy`"
+)]
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_delay: Duration,
 }
 
-/// Forms batches out of a [`RequestQueue`] into a reusable request
-/// arena.
-pub struct BatchFormer {
-    pub policy: BatchPolicy,
-    buf: Vec<Request>,
+#[allow(deprecated)]
+impl From<BatchPolicy> for Fixed {
+    fn from(p: BatchPolicy) -> Fixed {
+        Fixed { max_batch: p.max_batch, max_delay: p.max_delay }
+    }
 }
 
-impl BatchFormer {
-    pub fn new(policy: BatchPolicy) -> BatchFormer {
-        BatchFormer { policy, buf: Vec::new() }
+/// Forms batches out of a [`RequestQueue`] by consulting a
+/// [`FormPolicy`], over a persistent pending-request arena.
+pub struct BatchFormer<P: FormPolicy> {
+    pub policy: P,
+    /// Drained-but-unserved requests (priority order as drained; the
+    /// policy's `select` permutes the batch members to the front).
+    pending: Vec<Request>,
+    /// Arrival-rate EWMA state: last observation time, the queue's
+    /// admission counter at that time, and the blended rate (req/s).
+    rate_obs: Option<(Instant, u64)>,
+    rate: f64,
+}
+
+impl<P: FormPolicy> BatchFormer<P> {
+    pub fn new(policy: P) -> BatchFormer<P> {
+        BatchFormer { policy, pending: Vec::new(), rate_obs: None, rate: 0.0 }
+    }
+
+    /// Blend the queue's admission counter into the arrival-rate EWMA.
+    fn observe_rate(&mut self, q: &RequestQueue, now: Instant) {
+        let total = q.enqueued_total();
+        let Some((last, last_total)) = self.rate_obs else {
+            self.rate_obs = Some((now, total));
+            return;
+        };
+        let dt = now.saturating_duration_since(last).as_secs_f64();
+        if dt < 1e-4 {
+            return; // too close together to differentiate
+        }
+        let inst = total.saturating_sub(last_total) as f64 / dt;
+        let alpha = 1.0 - (-dt / RATE_TAU_S).exp();
+        self.rate = alpha * inst + (1.0 - alpha) * self.rate;
+        self.rate_obs = Some((now, total));
+    }
+
+    /// Smoothed queue arrival rate, requests/second.
+    pub fn arrival_rate(&self) -> f64 {
+        self.rate
     }
 
     /// Form the next batch: blocks (in slices, so `close` is noticed)
-    /// until at least one request arrives, then keeps draining until
-    /// `max_batch` requests or `max_delay` since the batch opened.
-    /// Returns the batch size; `0` means the queue closed with nothing
-    /// left to serve.
+    /// until at least one request is pending, then drains and waits as
+    /// the policy directs, cuts, and lets the policy pick the members.
+    /// Returns the batch size `k` (the batch is `requests()[..k]`); `0`
+    /// means the queue closed with nothing left to serve.
     pub fn form(&mut self, q: &RequestQueue) -> usize {
-        // normally drained by the server; after an executor error the
-        // stale batch is abandoned here (the serve loop is aborting)
-        self.buf.clear();
-        let max = self.policy.max_batch.max(1);
-        // wait for the batch-opening request
-        loop {
-            if q.drain_into(&mut self.buf, max) > 0 {
+        let look = self.policy.lookahead().max(self.policy.max_batch()).max(1);
+        // wait for the batch-opening request (leftovers from a previous
+        // cut already open this batch)
+        while self.pending.is_empty() {
+            if q.drain_into(&mut self.pending, look) > 0 {
                 break;
             }
             if q.wait_nonempty(IDLE_WAIT_SLICE) == QueueWait::Closed
-                && q.drain_into(&mut self.buf, max) == 0
+                && q.drain_into(&mut self.pending, look) == 0
             {
                 return 0;
             }
-            if !self.buf.is_empty() {
-                break;
-            }
         }
-        // fill until the deadline or the batch is full
+        // fill until the policy cuts (or the queue closes)
         let opened = Instant::now();
-        while self.buf.len() < max {
-            q.drain_into(&mut self.buf, max - self.buf.len());
-            if self.buf.len() >= max {
-                break;
+        loop {
+            let room = look.saturating_sub(self.pending.len());
+            if room > 0 {
+                q.drain_into(&mut self.pending, room);
             }
-            let elapsed = opened.elapsed();
-            if elapsed >= self.policy.max_delay {
-                break;
-            }
-            if q.wait_nonempty(self.policy.max_delay - elapsed)
-                == QueueWait::Closed
-            {
-                break;
+            let now = Instant::now();
+            self.observe_rate(q, now);
+            let decision = self.policy.decide(&PolicyCtx {
+                pending: &self.pending,
+                queue_depth: q.depth(),
+                opened,
+                now,
+                arrival_rate: self.rate,
+                service_s: q.service_estimate(),
+            });
+            match decision {
+                Decision::Cut => break,
+                Decision::Wait(d) => {
+                    if d.is_zero()
+                        || q.wait_nonempty(d) == QueueWait::Closed
+                    {
+                        break;
+                    }
+                }
             }
         }
-        self.buf.len()
+        let k = self.policy.select(&mut self.pending);
+        k.clamp(1, self.pending.len()).min(self.policy.max_batch().max(1))
     }
 
-    /// The formed batch, in arrival order.
+    /// The pending pool; after [`form`](BatchFormer::form) returned `k`,
+    /// the batch is the first `k` entries.
     pub fn requests(&self) -> &[Request] {
-        &self.buf
+        &self.pending
     }
 
-    /// Hand the formed requests out (the arena keeps its capacity).
-    pub fn drain(&mut self) -> std::vec::Drain<'_, Request> {
-        self.buf.drain(..)
+    /// Hand the batch (`..k`) out; requests beyond `k` stay pending for
+    /// the next batch. The arena keeps its capacity.
+    pub fn drain_batch(&mut self, k: usize) -> std::vec::Drain<'_, Request> {
+        self.pending.drain(..k.min(self.pending.len()))
+    }
+
+    /// Drop every pending request (the serve loop is aborting after an
+    /// executor error; the batch cannot be answered).
+    pub fn abandon(&mut self) {
+        self.pending.clear();
     }
 }
 
@@ -168,13 +231,19 @@ impl BatchPlan {
         }
         &self.tasks[..self.n_tasks]
     }
+
+    /// Padded rows of the last planned batch (bucket slack the padding
+    /// metric and the agreement policy's objective both price).
+    pub fn last_padded_rows(&self) -> usize {
+        stats(&self.tasks[..self.n_tasks]).padded_rows
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::{synth, GraphBatch, InputGraph};
-    use crate::scheduler::{schedule, stats, Policy};
+    use crate::scheduler::{schedule, Policy};
     use crate::util::rng::Rng;
 
     const BUCKETS: &[usize] = &[1, 2, 4, 8, 16];
@@ -194,6 +263,7 @@ mod tests {
         // buckets, same padding totals
         assert_eq!(tasks.len(), sched.len());
         assert_eq!(stats(tasks).padded_rows, stats(&sched).padded_rows);
+        assert_eq!(plan.last_padded_rows(), stats(&sched).padded_rows);
         let mut a: Vec<u32> =
             tasks.iter().flat_map(|t| t.verts.clone()).collect();
         let mut b: Vec<u32> =
@@ -231,5 +301,46 @@ mod tests {
             }
             assert!(done.iter().all(|&d| d), "every vertex scheduled");
         }
+    }
+
+    #[test]
+    fn former_serves_leftovers_without_starvation() {
+        use std::time::Duration;
+        // agreement with lookahead 4 but batch cap 2: the two requests
+        // left behind by the first cut must come back as the next batch
+        let policy = crate::serve::Agreement::new(2, Duration::ZERO, 4);
+        let mut former = BatchFormer::new(policy);
+        let q = RequestQueue::bounded(8);
+        for id in 0..4u64 {
+            q.try_enqueue(
+                Request::new(id, InputGraph::chain(&[1, 2], &[-1, -1]))
+                    .unwrap(),
+            )
+            .unwrap();
+        }
+        q.close();
+        let mut served = Vec::new();
+        loop {
+            let k = former.form(&q);
+            if k == 0 {
+                break;
+            }
+            assert!(k <= 2);
+            served.extend(former.drain_batch(k).map(|r| r.id));
+        }
+        served.sort_unstable();
+        assert_eq!(served, vec![0, 1, 2, 3], "every request served once");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_batch_policy_converts_to_fixed() {
+        let old = BatchPolicy {
+            max_batch: 6,
+            max_delay: Duration::from_millis(3),
+        };
+        let fixed: Fixed = old.into();
+        assert_eq!(fixed.max_batch, 6);
+        assert_eq!(fixed.max_delay, Duration::from_millis(3));
     }
 }

@@ -5,20 +5,24 @@
 //!
 //! * **Closed loop** — `concurrency` clients, each submitting its next
 //!   request the moment its previous one completes (backpressure via
-//!   blocking enqueue). Measures capacity: throughput at a fixed number
-//!   in flight.
+//!   blocking enqueue — never sheds). Measures capacity: throughput at a
+//!   fixed number in flight.
 //! * **Open loop** — requests arrive at an offered rate with
 //!   exponential inter-arrival gaps, independent of completions; a full
-//!   queue *rejects* (admission control) instead of blocking, so
-//!   overload shows up as shed load + queue-bound latency, not an
-//!   unbounded backlog. This is the sweep that exposes the
-//!   latency-vs-offered-load curve.
+//!   queue *rejects* (admission control) and — under the adaptive
+//!   policy's deadline admission — requests that can no longer meet
+//!   their SLO are *shed*, so overload shows up as refused load +
+//!   queue-bound latency, not an unbounded backlog. This is the sweep
+//!   that exposes the latency-vs-offered-load curve.
 //!
-//! The generator threads drive the [`RequestQueue`]; the server loop
-//! runs on the calling thread (the PJRT runtime is single-threaded by
-//! design, so [`EngineExec`](super::EngineExec) must stay where it was
-//! created). Every run verifies the exactly-once response invariant:
-//! each accepted request id is answered exactly once.
+//! Both build their [`RequestQueue`] from the [`ServeConfig`] (so the
+//! adaptive policy gets its deadline-admission queue). The generator
+//! threads drive the queue; the server loop runs on the calling thread
+//! (the PJRT runtime is single-threaded by design, so
+//! [`EngineExec`](super::EngineExec) must stay where it was created).
+//! Every run verifies the exactly-once response invariant: each accepted
+//! request id is answered exactly once, and refused requests are never
+//! answered.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -30,9 +34,10 @@ use crate::graph::{synth, InputGraph};
 use crate::util::rng::Rng;
 
 use super::metrics::ServeReport;
-use super::queue::RequestQueue;
+use super::policy::FormPolicy;
+use super::queue::AdmitError;
 use super::server::{ForwardExec, Server};
-use super::{Request, Response, ServeOpts};
+use super::{Request, Response, ServeConfig};
 
 /// Synthetic mixed structure workload: alternating variable-length
 /// sequences (chain RNN requests) and random binary trees (parser
@@ -66,9 +71,9 @@ pub fn mixed_workload(
 /// Closed loop: keep `concurrency` requests in flight until `total`
 /// responses arrived. Returns the server's metrics report (wall-clocked
 /// over the whole run).
-pub fn run_closed_loop<E: ForwardExec>(
-    server: &mut Server<E>,
-    opts: &ServeOpts,
+pub fn run_closed_loop<E: ForwardExec, P: FormPolicy>(
+    server: &mut Server<E, P>,
+    serve: &ServeConfig,
     graphs: &[InputGraph],
     total: usize,
     concurrency: usize,
@@ -79,7 +84,7 @@ pub fn run_closed_loop<E: ForwardExec>(
     );
     server.metrics.reset();
     server.metrics.reserve_latencies(total);
-    let q = RequestQueue::bounded(opts.queue_cap);
+    let q = serve.make_queue();
     let (tx, rx) = mpsc::channel::<Response>();
     let t0 = Instant::now();
     let (run_res, driver_res) = std::thread::scope(|s| {
@@ -134,10 +139,13 @@ pub fn run_closed_loop<E: ForwardExec>(
 }
 
 /// Open loop: offer `total` requests at `rate_rps` (exponential
-/// inter-arrival), shedding to admission control when the queue is full.
-pub fn run_open_loop<E: ForwardExec>(
-    server: &mut Server<E>,
-    opts: &ServeOpts,
+/// inter-arrival), refusing to admission control when the queue is full
+/// ([`AdmitError::Full`] → `rejected`) or the request's SLO is already
+/// unreachable ([`AdmitError::Shed`] → `shed`, deadline-admission queues
+/// only).
+pub fn run_open_loop<E: ForwardExec, P: FormPolicy>(
+    server: &mut Server<E, P>,
+    serve: &ServeConfig,
     graphs: &[InputGraph],
     total: usize,
     rate_rps: f64,
@@ -149,7 +157,7 @@ pub fn run_open_loop<E: ForwardExec>(
     );
     server.metrics.reset();
     server.metrics.reserve_latencies(total);
-    let q = RequestQueue::bounded(opts.queue_cap);
+    let q = serve.make_queue();
     let (tx, rx) = mpsc::channel::<Response>();
     let accepted = AtomicUsize::new(0);
     let offered_done = AtomicUsize::new(0); // 1 once the driver submitted all
@@ -159,10 +167,11 @@ pub fn run_open_loop<E: ForwardExec>(
         let accepted_ref = &accepted;
         let done_ref = &offered_done;
         // pacing driver: submit or shed at the offered rate
-        let driver = s.spawn(move || -> Result<(u64, Vec<bool>)> {
+        let driver = s.spawn(move || -> Result<(u64, u64, Vec<bool>)> {
             let mut rng = Rng::new(seed ^ 0x5EED);
             let mut admitted = vec![false; total];
             let mut rejected = 0u64;
+            let mut shed = 0u64;
             let start = Instant::now();
             let mut next_at = Duration::ZERO;
             for id in 0..total as u64 {
@@ -179,11 +188,12 @@ pub fn run_open_loop<E: ForwardExec>(
                         admitted[id as usize] = true;
                         accepted_ref.fetch_add(1, Ordering::SeqCst);
                     }
+                    Err((_, AdmitError::Shed)) => shed += 1,
                     Err((_, _)) => rejected += 1,
                 }
             }
             done_ref.store(1, Ordering::SeqCst);
-            Ok((rejected, admitted))
+            Ok((rejected, shed, admitted))
         });
         // collector: count responses, close the queue when every
         // accepted request has been answered
@@ -219,7 +229,7 @@ pub fn run_open_loop<E: ForwardExec>(
         )
     });
     run_res?;
-    let (rejected, admitted) = driver_res?;
+    let (rejected, shed, admitted) = driver_res?;
     for (id, (&c, &a)) in collector_res.iter().zip(&admitted).enumerate() {
         ensure!(
             c == u32::from(a),
@@ -227,6 +237,7 @@ pub fn run_open_loop<E: ForwardExec>(
         );
     }
     server.metrics.add_rejected(rejected);
+    server.metrics.add_shed(shed);
     Ok(server.metrics.report(t0.elapsed().as_secs_f64()))
 }
 
@@ -234,35 +245,35 @@ pub fn run_open_loop<E: ForwardExec>(
 mod tests {
     use super::*;
     use crate::serve::server::HostExec;
-    use crate::serve::BatchPolicy;
+    use crate::serve::{Fixed, PolicyKind};
 
-    fn small_opts() -> ServeOpts {
-        ServeOpts {
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
             max_batch: 4,
-            max_delay: Duration::from_micros(300),
+            deadline_ms: 0.3,
             queue_cap: 8,
+            ..ServeConfig::default()
         }
     }
 
-    fn server() -> Server<HostExec<crate::exec::parallel::HostTreeFc>> {
-        let opts = small_opts();
-        Server::new(
+    fn server(
+        cfg: &ServeConfig,
+    ) -> Server<HostExec<crate::exec::parallel::HostTreeFc>, Fixed> {
+        Server::with_policy(
             HostExec::tree_fc(5, 2, 20, 2, 11),
-            BatchPolicy {
-                max_batch: opts.max_batch,
-                max_delay: opts.max_delay,
-            },
+            Fixed { max_batch: cfg.max_batch, max_delay: cfg.max_delay() },
         )
     }
 
     #[test]
     fn closed_loop_serves_all_requests() {
         let graphs = mixed_workload(1, 10, 20, 2);
-        let mut sv = server();
-        let r =
-            run_closed_loop(&mut sv, &small_opts(), &graphs, 25, 3).unwrap();
+        let cfg = small_cfg();
+        let mut sv = server(&cfg);
+        let r = run_closed_loop(&mut sv, &cfg, &graphs, 25, 3).unwrap();
         assert_eq!(r.n_responses, 25);
         assert_eq!(r.rejected, 0);
+        assert_eq!(r.shed, 0);
         assert!(r.throughput_rps > 0.0);
         assert!(r.latency.median_s > 0.0);
     }
@@ -270,11 +281,30 @@ mod tests {
     #[test]
     fn open_loop_serves_or_sheds_every_request() {
         let graphs = mixed_workload(2, 10, 20, 2);
-        let mut sv = server();
+        let cfg = small_cfg();
+        let mut sv = server(&cfg);
         // modest rate: everything should be admitted and answered
-        let r = run_open_loop(&mut sv, &small_opts(), &graphs, 20, 2000.0, 3)
-            .unwrap();
-        assert_eq!(r.n_responses + r.rejected, 20);
+        let r = run_open_loop(&mut sv, &cfg, &graphs, 20, 2000.0, 3).unwrap();
+        assert_eq!(r.n_responses + r.rejected + r.shed, 20);
+        assert!(r.n_responses > 0);
+    }
+
+    #[test]
+    fn adaptive_config_open_loop_accounts_for_all_outcomes() {
+        // adaptive serving config: deadline-admission queue + boxed
+        // policy, every offered request is served, rejected or shed
+        let graphs = mixed_workload(4, 10, 20, 2);
+        let cfg = ServeConfig {
+            policy: PolicyKind::Adaptive,
+            max_batch: 4,
+            deadline_ms: 0.3,
+            queue_cap: 8,
+            ..ServeConfig::default()
+        };
+        let exec = HostExec::tree_fc(5, 2, 20, 2, 11);
+        let mut sv = Server::with_policy(exec, cfg.make_policy());
+        let r = run_open_loop(&mut sv, &cfg, &graphs, 24, 3000.0, 5).unwrap();
+        assert_eq!(r.n_responses + r.rejected + r.shed, 24);
         assert!(r.n_responses > 0);
     }
 }

@@ -37,6 +37,10 @@ pub struct ServeMetrics {
     depth_max: usize,
     depth_samples: u64,
     rejected: u64,
+    shed: u64,
+    /// Bucket-slack rows scheduled across all batches (what the
+    /// agreement policy minimizes).
+    padded_rows: u64,
 }
 
 impl ServeMetrics {
@@ -52,6 +56,8 @@ impl ServeMetrics {
             depth_max: 0,
             depth_samples: 0,
             rejected: 0,
+            shed: 0,
+            padded_rows: 0,
         }
     }
 
@@ -93,6 +99,17 @@ impl ServeMetrics {
         self.rejected += n;
     }
 
+    /// Requests refused by deadline admission ([`AdmitError::Shed`](super::AdmitError::Shed)).
+    pub fn add_shed(&mut self, n: u64) {
+        self.shed += n;
+    }
+
+    /// Bucket-slack rows the last batch scheduled (recorded per batch by
+    /// the server from `ForwardExec::last_batch_pad`).
+    pub fn observe_padding(&mut self, rows: u64) {
+        self.padded_rows += rows;
+    }
+
     pub fn n_responses(&self) -> usize {
         self.lat_seen as usize
     }
@@ -107,6 +124,8 @@ impl ServeMetrics {
         self.depth_max = 0;
         self.depth_samples = 0;
         self.rejected = 0;
+        self.shed = 0;
+        self.padded_rows = 0;
     }
 
     /// Summarize (off the hot path): percentiles over the reservoir,
@@ -122,6 +141,8 @@ impl ServeMetrics {
             n_responses: served,
             n_batches: self.n_batches,
             rejected: self.rejected,
+            shed: self.shed,
+            padded_rows: self.padded_rows,
             wall_s,
             throughput_rps: if wall_s > 0.0 {
                 served as f64 / wall_s
@@ -152,8 +173,13 @@ impl ServeMetrics {
 pub struct ServeReport {
     pub n_responses: u64,
     pub n_batches: u64,
-    /// Requests refused by admission control (open-loop overload).
+    /// Requests refused by capacity admission control (queue full).
     pub rejected: u64,
+    /// Requests refused by deadline admission (their SLO budget was
+    /// already unreachable at submission).
+    pub shed: u64,
+    /// Total bucket-slack rows scheduled across all batches.
+    pub padded_rows: u64,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// Mean requests per executed batch.
@@ -188,12 +214,15 @@ impl ServeReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "served {} requests in {} batches over {:.2}s ({:.1} req/s, {} rejected)\n",
+            "served {} requests in {} batches over {:.2}s ({:.1} req/s, {} \
+             rejected, {} shed, {} padded rows)\n",
             self.n_responses,
             self.n_batches,
             self.wall_s,
             self.throughput_rps,
-            self.rejected
+            self.rejected,
+            self.shed,
+            self.padded_rows
         ));
         s.push_str(&format!(
             "latency  p50 {}  p95 {}  p99 {}  max {}\n",
@@ -224,6 +253,11 @@ impl ServeReport {
             ("responses".to_string(), Json::num(self.n_responses as f64)),
             ("batches".to_string(), Json::num(self.n_batches as f64)),
             ("rejected".to_string(), Json::num(self.rejected as f64)),
+            ("shed".to_string(), Json::num(self.shed as f64)),
+            (
+                "padded_rows".to_string(),
+                Json::num(self.padded_rows as f64),
+            ),
             ("wall_s".to_string(), Json::num(self.wall_s)),
             ("rps".to_string(), Json::num(self.throughput_rps)),
             ("batch_mean".to_string(), Json::num(self.batch_mean)),
@@ -274,10 +308,15 @@ mod tests {
         m.observe_queue_depth(3);
         m.observe_queue_depth(1);
         m.add_rejected(2);
+        m.add_shed(3);
+        m.observe_padding(5);
+        m.observe_padding(2);
         let r = m.report(2.0);
         assert_eq!(r.n_responses, 3);
         assert_eq!(r.n_batches, 3);
         assert_eq!(r.rejected, 2);
+        assert_eq!(r.shed, 3);
+        assert_eq!(r.padded_rows, 7);
         assert!((r.throughput_rps - 1.5).abs() < 1e-9);
         assert!((r.batch_mean - 1.0).abs() < 1e-9);
         assert!((r.latency.median_s - 0.002).abs() < 1e-12);
@@ -288,6 +327,8 @@ mod tests {
         assert!(r.render().contains("p99"));
         let j = r.json();
         assert_eq!(j.get("responses").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("padded_rows").unwrap().as_usize(), Some(7));
         assert_eq!(
             j.get("batch_sizes").unwrap().as_usize_vec(),
             vec![0, 1, 0, 0, 2]

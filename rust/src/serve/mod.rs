@@ -10,37 +10,53 @@
 //! training path already performs (cf. just-in-time dynamic batching and
 //! TF-Fold's depth batching).
 //!
-//! Pipeline (DESIGN.md §7):
+//! Pipeline (DESIGN.md §7, policies §10):
 //!
 //! ```text
-//! clients -> RequestQueue -> BatchFormer -> GraphBatch::merge_indexed
-//!   (MPSC, admission        (deadline /      -> BatchPlan (recycled
-//!    control + back-         max-batch          depth levels + bucket
-//!    pressure)               policy)            chunking)
-//!                                        -> ForwardExec (forward-only
-//!                                           engine / host frontier on
-//!                                           the persistent worker pool)
-//!                                        -> per-request Response
-//!                                           + ServeMetrics (p50/p95/p99,
-//!                                             batch-size histogram,
-//!                                             queue depth)
+//! clients -> RequestQueue -> BatchFormer<P> -> GraphBatch::merge_indexed
+//!   (MPSC, priority lanes,   (P: FormPolicy      -> BatchPlan (recycled
+//!    admission control /      decides cut           depth levels + bucket
+//!    deadline shedding /      timing + batch         chunking)
+//!    backpressure)            membership)
+//!                                         -> ForwardExec (forward-only
+//!                                            engine / host frontier on
+//!                                            the persistent worker pool)
+//!                                         -> per-request Response
+//!                                            + ServeMetrics (p50/p95/p99,
+//!                                              batch-size histogram,
+//!                                              queue depth, shed count,
+//!                                              padded rows)
 //! ```
+//!
+//! Batch forming is a pluggable [`FormPolicy`] (`serve.policy` config
+//! key): [`Fixed`] is the classic deadline/max-batch former, [`Agreement`]
+//! groups requests whose depth/shape histograms agree so the merged batch
+//! pads less, and [`Adaptive`] scales the batch to the offered load under
+//! per-request SLO deadlines, shedding hopeless requests at admission.
 //!
 //! Every stage recycles its arenas: after warm-up the serve loop performs
 //! **zero** heap allocations in steady state
 //! (`rust/tests/serve_zero_alloc.rs` proves it with the counting
-//! allocator), which is what lets a single server thread sustain
-//! high request rates without allocator jitter in the tail latencies.
+//! allocator for all three policies), which is what lets a single server
+//! thread sustain high request rates without allocator jitter in the tail
+//! latencies.
 
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
+pub mod policy;
 pub mod queue;
 pub mod server;
 
-pub use batcher::{BatchFormer, BatchPlan, BatchPolicy};
+#[allow(deprecated)]
+pub use batcher::BatchPolicy;
+pub use batcher::{BatchFormer, BatchPlan};
 pub use metrics::{ServeMetrics, ServeReport};
-pub use queue::{AdmitError, QueueWait, RequestQueue};
+pub use policy::{
+    Adaptive, Agreement, Decision, Fixed, FormPolicy, PolicyCtx, PolicyKind,
+    SloDeadlines,
+};
+pub use queue::{Admission, AdmitError, QueueWait, RequestQueue};
 pub use server::{EngineExec, ForwardExec, HostExec, Server};
 
 use std::time::{Duration, Instant};
@@ -50,42 +66,207 @@ use anyhow::Result;
 use crate::graph::batch::MergeItem;
 use crate::graph::InputGraph;
 
-/// Serving knobs, surfaced as config keys (`serve_max_batch`,
-/// `serve_deadline_ms`, `serve_queue_cap`) and `cavs serve` CLI flags.
+/// Per-request SLO class: which default completion budget applies and
+/// which priority lane the request queues in (the queue drains
+/// `Interactive` before `Standard` before `Bulk`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Class {
+    /// Tightest budget, drained first.
+    Interactive,
+    /// The default for [`Request::new`].
+    #[default]
+    Standard,
+    /// Throughput traffic: biggest budget, drained last.
+    Bulk,
+}
+
+impl Class {
+    pub const ALL: [Class; 3] = [Class::Interactive, Class::Standard, Class::Bulk];
+
+    /// Priority-lane index (0 drains first).
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Standard => 1,
+            Class::Bulk => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Standard => "standard",
+            Class::Bulk => "bulk",
+        }
+    }
+}
+
+/// Typed serving configuration (the `serve.*` config-file section /
+/// `--set serve.*=…` CLI keys): which [`FormPolicy`] forms batches and
+/// its parameters. Replaces the flat `serve_max_batch` /
+/// `serve_deadline_ms` / `serve_queue_cap` knobs (still accepted as
+/// deprecated aliases for one release).
 #[derive(Debug, Clone, Copy)]
-pub struct ServeOpts {
-    /// Most requests merged into one batch.
+pub struct ServeConfig {
+    /// Which batch-forming policy serves (`serve.policy`, also the
+    /// `serve_policy` key: `fixed|agreement|adaptive`).
+    pub policy: PolicyKind,
+    /// Most requests merged into one batch (`serve.max_batch`). The
+    /// adaptive policy may exceed this up to [`ServeConfig::adaptive_max_batch`].
     pub max_batch: usize,
-    /// How long a non-full batch may wait for more requests after it
-    /// opens (the dynamic-batching deadline).
-    pub max_delay: Duration,
-    /// Request-queue capacity: beyond it, `try_enqueue` rejects
-    /// (admission control) and `enqueue` blocks (backpressure).
+    /// Dynamic-batching deadline in milliseconds (`serve.deadline_ms`):
+    /// how long a non-full batch may wait for more requests after it
+    /// opens. The adaptive policy treats it as an upper bound and usually
+    /// waits less.
+    pub deadline_ms: f64,
+    /// Request-queue capacity (`serve.queue_cap`): beyond it,
+    /// `try_enqueue` rejects (admission control) and `enqueue` blocks
+    /// (backpressure).
     pub queue_cap: usize,
+    /// Adaptive policy's batch cap under load (`serve.adaptive_max_batch`;
+    /// `0` = auto, 4× `max_batch`).
+    pub adaptive_max_batch: usize,
+    /// Agreement policy's pending-pool size (`serve.agreement_lookahead`;
+    /// `0` = auto, 2× `max_batch`).
+    pub agreement_lookahead: usize,
+    /// Default completion budget for [`Class::Interactive`] requests in
+    /// milliseconds (`serve.slo_interactive_ms`).
+    pub slo_interactive_ms: f64,
+    /// Default completion budget for [`Class::Standard`] requests
+    /// (`serve.slo_standard_ms`).
+    pub slo_standard_ms: f64,
+    /// Default completion budget for [`Class::Bulk`] requests
+    /// (`serve.slo_bulk_ms`).
+    pub slo_bulk_ms: f64,
 }
 
-impl Default for ServeOpts {
-    fn default() -> ServeOpts {
-        ServeOpts {
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            policy: PolicyKind::Fixed,
             max_batch: 32,
-            max_delay: Duration::from_millis(2),
+            deadline_ms: 2.0,
             queue_cap: 256,
+            adaptive_max_batch: 0,
+            agreement_lookahead: 0,
+            slo_interactive_ms: 5.0,
+            slo_standard_ms: 50.0,
+            slo_bulk_ms: 2_000.0,
         }
     }
 }
 
-impl ServeOpts {
-    pub fn policy(&self) -> BatchPolicy {
-        BatchPolicy {
-            max_batch: self.max_batch,
-            max_delay: self.max_delay,
+/// Milliseconds bound shared by every serve duration key: finite and
+/// small enough that `Duration::from_secs_f64` can never panic
+/// downstream (f64 parsing accepts "inf"/1e300).
+const MS_RANGE: std::ops::RangeInclusive<f64> = 0.0..=60_000.0;
+
+impl ServeConfig {
+    /// Check every field, naming the offending `serve.*` key in the
+    /// error. Called at config load and before serving.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.max_batch >= 1, "serve.max_batch must be >= 1");
+        anyhow::ensure!(self.queue_cap >= 1, "serve.queue_cap must be >= 1");
+        anyhow::ensure!(
+            self.deadline_ms.is_finite() && MS_RANGE.contains(&self.deadline_ms),
+            "serve.deadline_ms must be in 0..=60000"
+        );
+        for (key, v) in [
+            ("serve.slo_interactive_ms", self.slo_interactive_ms),
+            ("serve.slo_standard_ms", self.slo_standard_ms),
+            ("serve.slo_bulk_ms", self.slo_bulk_ms),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && MS_RANGE.contains(&v) && v > 0.0,
+                "{key} must be in (0..=60000]"
+            );
+        }
+        anyhow::ensure!(
+            self.adaptive_max_batch == 0
+                || self.adaptive_max_batch >= self.max_batch,
+            "serve.adaptive_max_batch must be 0 (auto) or >= serve.max_batch"
+        );
+        anyhow::ensure!(
+            self.agreement_lookahead == 0
+                || self.agreement_lookahead >= self.max_batch,
+            "serve.agreement_lookahead must be 0 (auto) or >= serve.max_batch"
+        );
+        Ok(())
+    }
+
+    /// The forming deadline as a [`Duration`].
+    pub fn max_delay(&self) -> Duration {
+        Duration::from_secs_f64(self.deadline_ms.clamp(0.0, 60_000.0) / 1e3)
+    }
+
+    /// Per-class SLO budgets.
+    pub fn slo(&self) -> SloDeadlines {
+        let ms = |v: f64| Duration::from_secs_f64(v.clamp(0.0, 60_000.0) / 1e3);
+        SloDeadlines {
+            interactive: ms(self.slo_interactive_ms),
+            standard: ms(self.slo_standard_ms),
+            bulk: ms(self.slo_bulk_ms),
+        }
+    }
+
+    /// Effective adaptive batch cap (`0` resolves to 4× `max_batch`).
+    pub fn adaptive_cap(&self) -> usize {
+        if self.adaptive_max_batch == 0 {
+            4 * self.max_batch.max(1)
+        } else {
+            self.adaptive_max_batch
+        }
+    }
+
+    /// Effective agreement lookahead (`0` resolves to 2× `max_batch`).
+    pub fn lookahead(&self) -> usize {
+        if self.agreement_lookahead == 0 {
+            2 * self.max_batch.max(1)
+        } else {
+            self.agreement_lookahead
+        }
+    }
+
+    /// Instantiate the configured policy (boxed, for config-driven
+    /// callers; code that knows its policy statically constructs
+    /// [`Fixed`]/[`Agreement`]/[`Adaptive`] directly).
+    pub fn make_policy(&self) -> Box<dyn FormPolicy> {
+        match self.policy {
+            PolicyKind::Fixed => Box::new(Fixed {
+                max_batch: self.max_batch,
+                max_delay: self.max_delay(),
+            }),
+            PolicyKind::Agreement => Box::new(Agreement::new(
+                self.max_batch,
+                self.max_delay(),
+                self.lookahead(),
+            )),
+            PolicyKind::Adaptive => Box::new(Adaptive {
+                max_batch: self.adaptive_cap(),
+                base_delay: self.max_delay(),
+                slo: self.slo(),
+            }),
+        }
+    }
+
+    /// Build the matching request queue: the adaptive policy pairs with
+    /// deadline admission (shed requests that cannot meet their SLO),
+    /// the others with plain capacity admission.
+    pub fn make_queue(&self) -> RequestQueue {
+        match self.policy {
+            PolicyKind::Adaptive => RequestQueue::with_admission(
+                self.queue_cap,
+                Admission::Deadline { slo: self.slo() },
+            ),
+            _ => RequestQueue::bounded(self.queue_cap),
         }
     }
 }
 
-/// One in-flight inference request. Admission (`Request::new`) validates
-/// the graph and precomputes its schedule inputs (depths + root) so the
-/// hot serve loop never re-walks a graph or allocates per batch.
+/// One in-flight inference request. Admission ([`Request::new`] /
+/// [`Request::builder`]) validates the graph and precomputes its schedule
+/// inputs (depths, root, per-level widths) so the hot serve loop never
+/// re-walks a graph or allocates per batch.
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
@@ -95,16 +276,56 @@ pub struct Request {
     /// Largest child count of any vertex (precomputed so the server can
     /// check arity compatibility per request in O(1)).
     max_children: usize,
+    /// `level_widths[d]` = vertices at depth `d` — the shape histogram
+    /// agreement batching groups on.
+    level_widths: Vec<u32>,
+    /// SLO class (priority lane + default deadline).
+    class: Class,
+    /// Explicit completion budget; `None` falls back to the class default.
+    deadline: Option<Duration>,
     /// Stamped by the queue at submission, so measured latency includes
     /// any backpressure wait.
     pub enqueued_at: Instant,
 }
 
-impl Request {
-    /// Validate + precompute: errors on malformed graphs (cycles,
+/// Staged [`Request`] construction: SLO class and deadline are admission
+/// properties, set before the request enters the queue.
+///
+/// ```ignore
+/// let r = Request::builder(id, graph)
+///     .slo(Class::Interactive)
+///     .deadline_ms(5.0)
+///     .build()?;
+/// ```
+#[derive(Debug)]
+pub struct RequestBuilder {
+    id: u64,
+    graph: InputGraph,
+    class: Class,
+    deadline: Option<Duration>,
+}
+
+impl RequestBuilder {
+    /// Set the SLO class (default [`Class::Standard`]).
+    pub fn slo(mut self, class: Class) -> RequestBuilder {
+        self.class = class;
+        self
+    }
+
+    /// Explicit completion budget in milliseconds, overriding the class
+    /// default. Non-finite or negative values are rejected by `build`.
+    pub fn deadline_ms(mut self, ms: f64) -> RequestBuilder {
+        self.deadline = Some(Duration::from_secs_f64(
+            ms.clamp(0.0, 60_000.0) / 1e3,
+        ));
+        self
+    }
+
+    /// Validate + precompute: errors on malformed graphs (empty, cycles,
     /// out-of-range children) — the serve loop only ever sees admissible
     /// requests.
-    pub fn new(id: u64, graph: InputGraph) -> Result<Request> {
+    pub fn build(self) -> Result<Request> {
+        let RequestBuilder { id, graph, class, deadline } = self;
         if graph.n() == 0 {
             anyhow::bail!("request graph has no vertices");
         }
@@ -121,14 +342,36 @@ impl Request {
         let root = graph.roots().first().copied().unwrap_or(0);
         let max_children =
             graph.children.iter().map(Vec::len).max().unwrap_or(0);
+        let n_levels =
+            depths.iter().copied().max().map_or(1, |d| d as usize + 1);
+        let mut level_widths = vec![0u32; n_levels];
+        for &d in &depths {
+            level_widths[d as usize] += 1;
+        }
         Ok(Request {
             id,
             graph,
             depths,
             root,
             max_children,
+            level_widths,
+            class,
+            deadline,
             enqueued_at: Instant::now(),
         })
+    }
+}
+
+impl Request {
+    /// Start building a request with explicit SLO class / deadline.
+    pub fn builder(id: u64, graph: InputGraph) -> RequestBuilder {
+        RequestBuilder { id, graph, class: Class::default(), deadline: None }
+    }
+
+    /// Default-class shorthand: [`Request::builder`] + `build()` with
+    /// [`Class::Standard`] and no explicit deadline.
+    pub fn new(id: u64, graph: InputGraph) -> Result<Request> {
+        Request::builder(id, graph).build()
     }
 
     /// Largest child count of any vertex in this request's graph.
@@ -142,6 +385,21 @@ impl Request {
 
     pub fn root(&self) -> u32 {
         self.root
+    }
+
+    /// Vertices per depth level (index = depth) — the shape histogram
+    /// [`Agreement`] batching minimizes padding over.
+    pub fn level_widths(&self) -> &[u32] {
+        &self.level_widths
+    }
+
+    pub fn class(&self) -> Class {
+        self.class
+    }
+
+    /// Explicit completion budget, if one was set at admission.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline
     }
 
     /// The precomputed merge view of this request.
@@ -216,5 +474,78 @@ mod tests {
         assert_eq!(ok.id, 3);
         assert_eq!(ok.depths(), &[0, 1, 2]);
         assert_eq!(ok.root(), 2);
+        assert_eq!(ok.level_widths(), &[1, 1, 1]);
+        assert_eq!(ok.class(), Class::Standard);
+        assert_eq!(ok.deadline(), None);
+    }
+
+    #[test]
+    fn builder_sets_slo_and_validates() {
+        let g = InputGraph::chain(&[1, 2], &[-1, -1]);
+        let r = Request::builder(7, g.clone())
+            .slo(Class::Interactive)
+            .deadline_ms(5.0)
+            .build()
+            .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.class(), Class::Interactive);
+        assert_eq!(r.deadline(), Some(Duration::from_millis(5)));
+        // the builder runs the same graph validation as Request::new
+        let bad = InputGraph {
+            children: vec![vec![9]],
+            tokens: vec![0],
+            labels: vec![-1],
+            root_label: -1,
+        };
+        assert!(Request::builder(0, bad).slo(Class::Bulk).build().is_err());
+        // lanes drain in priority order
+        assert_eq!(Class::Interactive.lane(), 0);
+        assert_eq!(Class::Standard.lane(), 1);
+        assert_eq!(Class::Bulk.lane(), 2);
+    }
+
+    #[test]
+    fn serve_config_validates_and_builds_policies() {
+        let cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.make_policy().max_batch(), 32);
+        assert_eq!(cfg.adaptive_cap(), 128, "auto = 4x max_batch");
+        assert_eq!(cfg.lookahead(), 64, "auto = 2x max_batch");
+        let adaptive = ServeConfig {
+            policy: PolicyKind::Adaptive,
+            ..ServeConfig::default()
+        };
+        assert_eq!(adaptive.make_policy().max_batch(), 128);
+        let agreement = ServeConfig {
+            policy: PolicyKind::Agreement,
+            ..ServeConfig::default()
+        };
+        assert_eq!(agreement.make_policy().lookahead(), 64);
+        // validation names the offending key
+        let bad = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("serve.max_batch"), "{e}");
+        let bad =
+            ServeConfig { deadline_ms: f64::NAN, ..ServeConfig::default() };
+        assert!(bad
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("serve.deadline_ms"));
+        let bad = ServeConfig {
+            adaptive_max_batch: 3,
+            ..ServeConfig::default()
+        };
+        assert!(bad
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("serve.adaptive_max_batch"));
+        let bad = ServeConfig { slo_standard_ms: 0.0, ..ServeConfig::default() };
+        assert!(bad
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("serve.slo_standard_ms"));
     }
 }

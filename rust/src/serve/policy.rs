@@ -1,0 +1,564 @@
+//! Pluggable batch-forming policies: the `FormPolicy` trait and the three
+//! shipped implementations.
+//!
+//! The seed server hardcoded one deadline/max-batch pair
+//! ([`BatchPolicy`](super::batcher::BatchPolicy), now deprecated), which
+//! sacrifices p99 at low load (every lone request waits the full
+//! deadline) and throughput at saturation (the batch cap cannot grow with
+//! the backlog). [`FormPolicy`] opens that decision: the former hands the
+//! policy a [`PolicyCtx`] view — the pending request pool, queue depth,
+//! an arrival-rate EWMA, a per-request service-time EWMA — and the policy
+//! decides **when to cut** a batch ([`FormPolicy::decide`]) and **which
+//! requests join it** ([`FormPolicy::select`]).
+//!
+//! Shipped policies:
+//!
+//! * [`Fixed`] — the seed behavior, bit-for-bit: cut at `max_batch`
+//!   requests or `max_delay` after the batch opened, members in arrival
+//!   order. The latency/throughput baseline every sweep compares against.
+//! * [`Agreement`] — depth/shape-aware grouping (TF Fold's depth-wise
+//!   batching, arXiv:1702.02181): drains a lookahead pool and greedily
+//!   picks the member set that minimizes predicted padding under the
+//!   bucket-chunk rule the planner actually uses, so
+//!   `GraphBatch::merge_indexed` + `BatchPlan` pad less.
+//! * [`Adaptive`] — just-in-time, load-proportional batching
+//!   (arXiv:1904.07421) with per-request SLO classes: the target batch
+//!   size follows the arrival rate (lone requests at low load cut
+//!   immediately; deep backlogs fill large batches), per-class deadlines
+//!   bound the forming wait, and the paired deadline-admission queue
+//!   sheds hopeless requests ([`AdmitError::Shed`](super::AdmitError))
+//!   instead of rejecting on queue-full.
+//!
+//! Custom policies implement the trait and plug in through
+//! [`Server::with_policy`](super::Server::with_policy) — no `serve/`
+//! edits required (DESIGN.md §10 documents the contract).
+
+use std::time::{Duration, Instant};
+
+use crate::scheduler::pick_bucket;
+
+use super::{Class, Request};
+
+/// Policy selector surfaced by the `serve.policy` config key and the
+/// `cavs serve` / `cavs bench --exp serve` CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fixed,
+    Agreement,
+    Adaptive,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::Fixed, PolicyKind::Agreement, PolicyKind::Adaptive];
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "fixed" => Some(PolicyKind::Fixed),
+            "agreement" => Some(PolicyKind::Agreement),
+            "adaptive" => Some(PolicyKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fixed => "fixed",
+            PolicyKind::Agreement => "agreement",
+            PolicyKind::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Per-class SLO deadlines: the default completion budget applied to a
+/// request that did not carry an explicit deadline
+/// ([`Request::builder`](super::Request::builder)`.deadline_ms(..)`).
+/// Used by [`Adaptive`] for deadline-bounded forming and by the
+/// deadline-admission queue for shedding.
+#[derive(Debug, Clone, Copy)]
+pub struct SloDeadlines {
+    pub interactive: Duration,
+    pub standard: Duration,
+    pub bulk: Duration,
+}
+
+impl Default for SloDeadlines {
+    fn default() -> SloDeadlines {
+        SloDeadlines {
+            interactive: Duration::from_millis(5),
+            standard: Duration::from_millis(50),
+            bulk: Duration::from_secs(2),
+        }
+    }
+}
+
+impl SloDeadlines {
+    pub fn for_class(&self, c: Class) -> Duration {
+        match c {
+            Class::Interactive => self.interactive,
+            Class::Standard => self.standard,
+            Class::Bulk => self.bulk,
+        }
+    }
+}
+
+/// What the former observes between draining the queue and cutting a
+/// batch — everything a policy may condition on.
+pub struct PolicyCtx<'a> {
+    /// Drained requests waiting to be batched, oldest first within each
+    /// SLO class, higher-priority classes first.
+    pub pending: &'a [Request],
+    /// Requests still queued beyond the lookahead drain.
+    pub queue_depth: usize,
+    /// When the current batch opened (the first pending request was
+    /// drained after the previous cut).
+    pub opened: Instant,
+    pub now: Instant,
+    /// EWMA of the queue's arrival rate, requests/second.
+    pub arrival_rate: f64,
+    /// EWMA of per-request service time in seconds (merge + plan +
+    /// forward, divided by batch size). `0.0` until the first batch.
+    pub service_s: f64,
+}
+
+/// A forming step's outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Close the batch now; the former will call
+    /// [`FormPolicy::select`] to pick the members.
+    Cut,
+    /// Wait up to this long for more arrivals, then ask again. A zero
+    /// wait is treated as [`Decision::Cut`].
+    Wait(Duration),
+}
+
+/// A batch-forming policy. Implementations must be allocation-free in
+/// steady state (scratch arenas recycled across calls) — the serve
+/// loop's zero-alloc proof (`rust/tests/serve_zero_alloc.rs`) runs over
+/// every shipped policy.
+pub trait FormPolicy: Send {
+    /// Hard cap on requests per batch (sizes the metrics histogram and
+    /// the merge arenas).
+    fn max_batch(&self) -> usize;
+
+    /// How many requests the former may drain into the pending pool
+    /// before cutting (≥ `max_batch`). Policies that *choose* members
+    /// from a pool ([`Agreement`]) want lookahead beyond the batch cap.
+    fn lookahead(&self) -> usize {
+        self.max_batch()
+    }
+
+    /// Cut the batch now, or wait for more arrivals. Must eventually
+    /// return [`Decision::Cut`] for any fixed pending set (e.g. once a
+    /// deadline elapses) — the former otherwise cuts on queue close.
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Decision;
+
+    /// Choose the members of the cut batch: permute `pending` so the
+    /// chosen requests occupy `pending[..k]` and return `k`
+    /// (`1..=max_batch`; the former clamps). Requests left beyond `k`
+    /// stay pending for the next batch with their latency clocks
+    /// running.
+    fn select(&mut self, pending: &mut [Request]) -> usize;
+}
+
+/// Boxed policies plug into the same generic [`Server`](super::Server) —
+/// this is how config-selected policies (`serve.policy`) are served.
+impl FormPolicy for Box<dyn FormPolicy> {
+    fn max_batch(&self) -> usize {
+        (**self).max_batch()
+    }
+
+    fn lookahead(&self) -> usize {
+        (**self).lookahead()
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Decision {
+        (**self).decide(ctx)
+    }
+
+    fn select(&mut self, pending: &mut [Request]) -> usize {
+        (**self).select(pending)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixed
+// ---------------------------------------------------------------------
+
+/// The seed deadline/max-batch policy: cut at `max_batch` requests or
+/// `max_delay` after the batch opened, members in arrival order. The
+/// bitwise and latency baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct Fixed {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl FormPolicy for Fixed {
+    fn max_batch(&self) -> usize {
+        self.max_batch.max(1)
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Decision {
+        if ctx.pending.len() >= self.max_batch() {
+            return Decision::Cut;
+        }
+        let elapsed = ctx.now.saturating_duration_since(ctx.opened);
+        if elapsed >= self.max_delay {
+            Decision::Cut
+        } else {
+            Decision::Wait(self.max_delay - elapsed)
+        }
+    }
+
+    fn select(&mut self, pending: &mut [Request]) -> usize {
+        pending.len().min(self.max_batch())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Agreement
+// ---------------------------------------------------------------------
+
+/// Depth/shape-aware grouping: drain a lookahead pool, then greedily
+/// build the member set that minimizes predicted padding under the exact
+/// level/bucket chunk rule `BatchPlan` schedules with. Starvation-free:
+/// the oldest pending request anchors every batch.
+pub struct Agreement {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    /// Pending-pool size the former drains before cutting (≥ max_batch).
+    pub lookahead: usize,
+    /// Artifact bucket list the padding model chunks against (the host
+    /// bucket set by default — pass the executor's own list when it
+    /// differs).
+    buckets: Vec<usize>,
+    /// Scratch: accumulated per-level widths of the chosen set.
+    lvl: Vec<u32>,
+}
+
+impl Agreement {
+    pub fn new(max_batch: usize, max_delay: Duration, lookahead: usize) -> Agreement {
+        Agreement::with_buckets(
+            max_batch,
+            max_delay,
+            lookahead,
+            crate::scheduler::host_buckets(),
+        )
+    }
+
+    pub fn with_buckets(
+        max_batch: usize,
+        max_delay: Duration,
+        lookahead: usize,
+        buckets: Vec<usize>,
+    ) -> Agreement {
+        let max_batch = max_batch.max(1);
+        Agreement {
+            max_batch,
+            max_delay,
+            lookahead: lookahead.max(max_batch),
+            buckets,
+            lvl: Vec::new(),
+        }
+    }
+
+    /// Padding of one level of width `w` under the planner's chunk rule:
+    /// full `max_bucket` chunks pad nothing, the remainder rounds up to
+    /// its bucket.
+    fn level_pad(&self, w: u32) -> u32 {
+        let maxb = *self.buckets.last().expect("bucket list non-empty") as u32;
+        let r = w % maxb;
+        if r == 0 {
+            0
+        } else {
+            pick_bucket(r as usize, &self.buckets) as u32 - r
+        }
+    }
+
+    /// Padding delta of adding `r` to the set whose level widths are
+    /// accumulated in `self.lvl`. Signed: filling a level toward its
+    /// bucket boundary *reduces* padding (width 3 + 5 rounds 4 → 8).
+    fn pad_delta(&self, r: &Request) -> i64 {
+        let mut delta = 0i64;
+        for (d, &w) in r.level_widths().iter().enumerate() {
+            let have = self.lvl.get(d).copied().unwrap_or(0);
+            delta += i64::from(self.level_pad(have + w));
+            delta -= i64::from(self.level_pad(have));
+        }
+        delta
+    }
+
+    fn add_to_set(&mut self, r: &Request) {
+        let widths = r.level_widths();
+        if self.lvl.len() < widths.len() {
+            self.lvl.resize(widths.len(), 0);
+        }
+        for (d, &w) in widths.iter().enumerate() {
+            self.lvl[d] += w;
+        }
+    }
+}
+
+impl FormPolicy for Agreement {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn lookahead(&self) -> usize {
+        self.lookahead
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Decision {
+        // enough pool to pick a well-agreeing group, or the deadline —
+        // the same latency bound Fixed gives its batches
+        if ctx.pending.len() >= self.lookahead {
+            return Decision::Cut;
+        }
+        let elapsed = ctx.now.saturating_duration_since(ctx.opened);
+        if elapsed >= self.max_delay {
+            Decision::Cut
+        } else {
+            Decision::Wait(self.max_delay - elapsed)
+        }
+    }
+
+    fn select(&mut self, pending: &mut [Request]) -> usize {
+        let k = pending.len().min(self.max_batch);
+        if k <= 1 {
+            return k;
+        }
+        // greedy min-incremental-padding, anchored at the oldest request
+        // (pending[0]) so nothing starves behind better-agreeing arrivals
+        self.lvl.clear();
+        let anchor = &pending[0];
+        self.add_to_set(anchor);
+        for i in 1..k {
+            let mut best = i;
+            let mut best_delta = self.pad_delta(&pending[i]);
+            for j in (i + 1)..pending.len() {
+                let d = self.pad_delta(&pending[j]);
+                // strict `<` keeps ties in arrival order
+                if d < best_delta {
+                    best = j;
+                    best_delta = d;
+                }
+            }
+            pending.swap(i, best);
+            let chosen = &pending[i];
+            self.add_to_set(chosen);
+        }
+        k
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adaptive
+// ---------------------------------------------------------------------
+
+/// Just-in-time, load-proportional batching with per-request SLO
+/// deadlines: the target batch size tracks the arrival rate (a lone
+/// request at low load cuts immediately instead of idling out the fixed
+/// deadline; a deep backlog fills batches up to `max_batch`, which may
+/// exceed the fixed policy's cap), and forming never waits past the most
+/// urgent pending request's remaining deadline slack.
+#[derive(Debug, Clone, Copy)]
+pub struct Adaptive {
+    /// Largest batch under load (the fixed policy's cap is its floor —
+    /// `ServeConfig` defaults this to 4× `serve.max_batch`).
+    pub max_batch: usize,
+    /// Upper bound on the added forming wait (the fixed policy's
+    /// `max_delay` — adaptive only ever waits *less*).
+    pub base_delay: Duration,
+    /// Per-class completion budgets for requests without an explicit
+    /// deadline.
+    pub slo: SloDeadlines,
+}
+
+impl FormPolicy for Adaptive {
+    fn max_batch(&self) -> usize {
+        self.max_batch.max(1)
+    }
+
+    fn decide(&mut self, ctx: &PolicyCtx<'_>) -> Decision {
+        let n = ctx.pending.len();
+        if n >= self.max_batch() {
+            return Decision::Cut;
+        }
+        let elapsed = ctx.now.saturating_duration_since(ctx.opened);
+        if elapsed >= self.base_delay {
+            return Decision::Cut;
+        }
+        // load-proportional target: how many requests are expected to
+        // arrive within the base delay — at low load that is 0, so a
+        // lone request is served immediately
+        let expected = ctx.arrival_rate * self.base_delay.as_secs_f64();
+        let target = (expected.ceil() as usize).clamp(1, self.max_batch());
+        if n + ctx.queue_depth >= target {
+            return Decision::Cut;
+        }
+        // deadline control: never wait past the most urgent pending
+        // request's slack (its budget minus time already waited minus
+        // the predicted execution time of the batch it will ride in)
+        let exec_est = ctx.service_s * (n.max(1) as f64);
+        let mut wait = self.base_delay - elapsed;
+        for r in ctx.pending {
+            let budget = r.deadline().unwrap_or(self.slo.for_class(r.class()));
+            let waited = ctx.now.saturating_duration_since(r.enqueued_at);
+            let slack =
+                budget.as_secs_f64() - waited.as_secs_f64() - exec_est;
+            if slack <= 0.0 {
+                return Decision::Cut;
+            }
+            wait = wait.min(Duration::from_secs_f64(slack));
+        }
+        if wait.is_zero() {
+            Decision::Cut
+        } else {
+            Decision::Wait(wait)
+        }
+    }
+
+    fn select(&mut self, pending: &mut [Request]) -> usize {
+        // the queue already drained priority lanes in class order; keep it
+        pending.len().min(self.max_batch())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::InputGraph;
+
+    fn req(id: u64, len: usize) -> Request {
+        let toks: Vec<i32> = (0..len as i32).collect();
+        let labs = vec![-1i32; len];
+        Request::new(id, InputGraph::chain(&toks, &labs)).unwrap()
+    }
+
+    fn ctx<'a>(
+        pending: &'a [Request],
+        opened: Instant,
+        rate: f64,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx {
+            pending,
+            queue_depth: 0,
+            opened,
+            now: Instant::now(),
+            arrival_rate: rate,
+            service_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn policy_kind_parses_round_trip() {
+        for pk in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(pk.name()), Some(pk));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn fixed_cuts_at_cap_or_deadline() {
+        let mut p = Fixed { max_batch: 2, max_delay: Duration::from_secs(5) };
+        let reqs = [req(0, 3)];
+        let opened = Instant::now();
+        assert!(matches!(p.decide(&ctx(&reqs, opened, 0.0)), Decision::Wait(_)));
+        let full = [req(0, 3), req(1, 4)];
+        assert_eq!(p.decide(&ctx(&full, opened, 0.0)), Decision::Cut);
+        // expired deadline cuts a non-full batch
+        let mut p = Fixed { max_batch: 8, max_delay: Duration::ZERO };
+        assert_eq!(p.decide(&ctx(&reqs, opened, 0.0)), Decision::Cut);
+        let mut pend = [req(0, 3), req(1, 4)];
+        assert_eq!(p.select(&mut pend), 2);
+        assert_eq!(pend[0].id, 0, "arrival order preserved");
+    }
+
+    #[test]
+    fn adaptive_cuts_immediately_at_low_load() {
+        let mut p = Adaptive {
+            max_batch: 32,
+            base_delay: Duration::from_millis(2),
+            slo: SloDeadlines::default(),
+        };
+        let lone = [req(0, 3)];
+        // no arrivals expected: a lone request is served at once
+        assert_eq!(p.decide(&ctx(&lone, Instant::now(), 0.0)), Decision::Cut);
+        // heavy arrivals: wait for a bigger batch
+        assert!(matches!(
+            p.decide(&ctx(&lone, Instant::now(), 50_000.0)),
+            Decision::Wait(_)
+        ));
+    }
+
+    #[test]
+    fn adaptive_respects_pending_deadlines() {
+        let mut p = Adaptive {
+            max_batch: 32,
+            base_delay: Duration::from_secs(10),
+            slo: SloDeadlines {
+                interactive: Duration::ZERO, // already expired
+                ..SloDeadlines::default()
+            },
+        };
+        let urgent = [Request::builder(0, InputGraph::chain(&[1, 2], &[-1, -1]))
+            .slo(Class::Interactive)
+            .build()
+            .unwrap()];
+        assert_eq!(
+            p.decide(&ctx(&urgent, Instant::now(), 50_000.0)),
+            Decision::Cut,
+            "expired per-request deadline forces the cut"
+        );
+    }
+
+    /// A star of `leaves` leaves under one root: level widths
+    /// `[leaves, 1]` — the shape whose level-0 width exercises the
+    /// bucket-rounding padding model.
+    fn star(id: u64, leaves: usize) -> Request {
+        let n = leaves + 1;
+        let children = (0..n)
+            .map(|v| if v == n - 1 { (0..leaves as u32).collect() } else { vec![] })
+            .collect();
+        let g = InputGraph {
+            children,
+            tokens: (0..n as i32).collect(),
+            labels: vec![-1; n],
+            root_label: -1,
+        };
+        Request::new(id, g).unwrap()
+    }
+
+    #[test]
+    fn agreement_picks_the_min_padding_partner() {
+        // arrival order star3 star3 star5 star5 with max_batch 2: the
+        // prefix pairing {3,3},{5,5} pads 2+6 rows at level 0 (widths 6
+        // and 10 round to 8 and 16); the agreement pairing {3,5} twice
+        // pads 0 (width 8 is a bucket). the greedy must find it while
+        // keeping the oldest request as the anchor
+        let mut p = Agreement::new(2, Duration::ZERO, 4);
+        let mut pending =
+            vec![star(0, 3), star(1, 3), star(2, 5), star(3, 5)];
+        let k = p.select(&mut pending);
+        assert_eq!(k, 2);
+        assert_eq!(pending[0].id, 0, "oldest request anchors the batch");
+        assert_eq!(pending[1].id, 2, "star5 complements star3 to a bucket");
+        // every request still present exactly once
+        let mut ids: Vec<u64> = pending.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn boxed_policies_delegate() {
+        let mut p: Box<dyn FormPolicy> =
+            Box::new(Fixed { max_batch: 4, max_delay: Duration::ZERO });
+        assert_eq!(p.max_batch(), 4);
+        assert_eq!(p.lookahead(), 4);
+        let reqs = [req(0, 2)];
+        assert_eq!(p.decide(&ctx(&reqs, Instant::now(), 0.0)), Decision::Cut);
+        let mut pend = [req(0, 2)];
+        assert_eq!(p.select(&mut pend), 1);
+    }
+}

@@ -1,33 +1,50 @@
-//! Bounded MPSC request queue with admission control and backpressure.
+//! Bounded MPSC request queue with priority lanes, admission control and
+//! backpressure.
 //!
 //! Any number of producer threads submit [`Request`]s; the single server
-//! loop drains them in arrival order. Two producer paths:
+//! loop drains them in priority order ([`Class::Interactive`] before
+//! [`Class::Standard`] before [`Class::Bulk`]), FIFO within each lane —
+//! all-default-class traffic therefore drains in plain arrival order,
+//! exactly like the pre-lane queue. Two producer paths:
 //!
 //! * [`RequestQueue::try_enqueue`] — **admission control**: a full queue
 //!   rejects immediately with [`AdmitError::Full`], handing the request
-//!   back so nothing is lost. Open-loop clients use this to shed load
-//!   instead of building an unbounded backlog.
+//!   back so nothing is lost. Under [`Admission::Deadline`] (the adaptive
+//!   policy's queue), a request whose estimated completion would already
+//!   blow its SLO budget is refused with [`AdmitError::Shed`] *before*
+//!   the queue fills — overload sheds the hopeless tail instead of
+//!   queueing it into a latency cliff.
 //! * [`RequestQueue::enqueue`] — **backpressure**: blocks the producer
-//!   until a slot frees up (closed-loop clients).
+//!   until a slot frees up (closed-loop clients). Never sheds: a client
+//!   prepared to wait has no arrival deadline to miss.
 //!
 //! The queue stamps `Request::enqueued_at` at submission, so measured
-//! latency includes backpressure wait. [`RequestQueue::close`] wakes all
+//! latency includes backpressure wait. The server feeds its measured
+//! per-request service time back via [`RequestQueue::note_service`]; the
+//! resulting EWMA drives both deadline admission and the adaptive
+//! policy's execution-time estimates. [`RequestQueue::close`] wakes all
 //! waiters: producers get their request back with [`AdmitError::Closed`];
 //! the consumer drains the remaining backlog and stops. The backing
-//! `VecDeque` is allocated once at capacity, so steady-state enqueue and
-//! drain never allocate.
+//! `VecDeque` lanes are allocated once at capacity, so steady-state
+//! enqueue and drain never allocate.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::Request;
+use super::policy::SloDeadlines;
+use super::{Class, Request};
 
 /// Why an enqueue was refused. The request itself is returned alongside.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitError {
     /// Queue at capacity (admission control rejected the request).
     Full,
+    /// Deadline admission predicted the request cannot meet its SLO
+    /// budget (queue wait + service estimate already exceed it) — served
+    /// never, answered immediately.
+    Shed,
     /// Queue closed — the server is shutting down.
     Closed,
 }
@@ -43,30 +60,69 @@ pub enum QueueWait {
     Closed,
 }
 
+/// Admission discipline applied by [`RequestQueue::try_enqueue`].
+#[derive(Debug, Clone, Copy)]
+pub enum Admission {
+    /// Refuse only when the queue is at capacity ([`AdmitError::Full`]).
+    CapOnly,
+    /// Additionally shed requests whose estimated completion time
+    /// (requests ahead of it × the service-time EWMA) already exceeds
+    /// their SLO budget ([`AdmitError::Shed`]). Until the first batch
+    /// completes there is no estimate and nothing sheds.
+    Deadline {
+        /// Per-class budgets for requests without an explicit deadline.
+        slo: SloDeadlines,
+    },
+}
+
 struct Inner {
-    q: VecDeque<Request>,
+    /// One FIFO lane per [`Class`], drained in lane order.
+    lanes: [VecDeque<Request>; 3],
     closed: bool,
+}
+
+impl Inner {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
 }
 
 /// The bounded MPSC queue between clients and the server loop.
 pub struct RequestQueue {
     cap: usize,
+    admission: Admission,
     inner: Mutex<Inner>,
     not_empty: Condvar,
     not_full: Condvar,
+    /// Total successful enqueues (arrival-rate observable for the
+    /// adaptive former's EWMA).
+    enqueued: AtomicU64,
+    /// Per-request service-time EWMA in seconds, stored as f64 bits
+    /// (0.0 until the server reports the first batch).
+    service_bits: AtomicU64,
 }
 
 impl RequestQueue {
+    /// Capacity-only admission — the classic bounded queue.
     pub fn bounded(cap: usize) -> RequestQueue {
+        RequestQueue::with_admission(cap, Admission::CapOnly)
+    }
+
+    /// Choose the admission discipline (deadline shedding pairs with the
+    /// adaptive policy — [`ServeConfig::make_queue`](super::ServeConfig::make_queue)).
+    pub fn with_admission(cap: usize, admission: Admission) -> RequestQueue {
         let cap = cap.max(1);
         RequestQueue {
             cap,
+            admission,
             inner: Mutex::new(Inner {
-                q: VecDeque::with_capacity(cap),
+                lanes: std::array::from_fn(|_| VecDeque::with_capacity(cap)),
                 closed: false,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            enqueued: AtomicU64::new(0),
+            service_bits: AtomicU64::new(0),
         }
     }
 
@@ -76,15 +132,48 @@ impl RequestQueue {
 
     /// Current backlog (the queue-depth gauge the metrics sample).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        self.inner.lock().unwrap().len()
     }
 
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
     }
 
-    /// Admission control: accept iff a slot is free, else hand the
-    /// request straight back.
+    /// Total requests admitted so far (monotonic; the adaptive former
+    /// differentiates this into an arrival rate).
+    pub fn enqueued_total(&self) -> u64 {
+        self.enqueued.load(Ordering::Relaxed)
+    }
+
+    /// Feed back a measured per-request service time (batch wall time /
+    /// batch size). Maintains an EWMA read by [`service_estimate`](RequestQueue::service_estimate).
+    pub fn note_service(&self, per_request_s: f64) {
+        if !per_request_s.is_finite() || per_request_s <= 0.0 {
+            return;
+        }
+        let prev = f64::from_bits(self.service_bits.load(Ordering::Relaxed));
+        let next = if prev == 0.0 {
+            per_request_s
+        } else {
+            0.8 * prev + 0.2 * per_request_s
+        };
+        self.service_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// EWMA of per-request service time in seconds (`0.0` = no data yet).
+    pub fn service_estimate(&self) -> f64 {
+        f64::from_bits(self.service_bits.load(Ordering::Relaxed))
+    }
+
+    /// Requests that will be served no later than a new arrival of
+    /// `class`: everything in its own lane and the higher-priority ones.
+    fn ahead_of(inner: &Inner, class: Class) -> usize {
+        inner.lanes[..=class.lane()].iter().map(VecDeque::len).sum()
+    }
+
+    /// Admission control: accept iff a slot is free and (under deadline
+    /// admission) the request can still meet its SLO budget; else hand
+    /// the request straight back.
     pub fn try_enqueue(
         &self,
         mut r: Request,
@@ -93,32 +182,48 @@ impl RequestQueue {
         if g.closed {
             return Err((r, AdmitError::Closed));
         }
-        if g.q.len() >= self.cap {
+        if let Admission::Deadline { slo } = self.admission {
+            let service_s = self.service_estimate();
+            if service_s > 0.0 {
+                let ahead = Self::ahead_of(&g, r.class()) as f64;
+                let est_s = (ahead + 1.0) * service_s;
+                let budget = r.deadline().unwrap_or(slo.for_class(r.class()));
+                if est_s > budget.as_secs_f64() {
+                    return Err((r, AdmitError::Shed));
+                }
+            }
+        }
+        if g.len() >= self.cap {
             return Err((r, AdmitError::Full));
         }
         r.enqueued_at = Instant::now();
-        g.q.push_back(r);
+        let lane = r.class().lane();
+        g.lanes[lane].push_back(r);
         drop(g);
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
         self.not_empty.notify_one();
         Ok(())
     }
 
     /// Backpressure: block until a slot frees up (or the queue closes,
-    /// which returns the request with [`AdmitError::Closed`]).
+    /// which returns the request with [`AdmitError::Closed`]). Never
+    /// sheds — a blocking producer has no arrival deadline to protect.
     pub fn enqueue(&self, mut r: Request) -> Result<(), (Request, AdmitError)> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
                 return Err((r, AdmitError::Closed));
             }
-            if g.q.len() < self.cap {
+            if g.len() < self.cap {
                 break;
             }
             g = self.not_full.wait(g).unwrap();
         }
         r.enqueued_at = Instant::now();
-        g.q.push_back(r);
+        let lane = r.class().lane();
+        g.lanes[lane].push_back(r);
         drop(g);
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
         self.not_empty.notify_one();
         Ok(())
     }
@@ -133,12 +238,22 @@ impl RequestQueue {
         self.not_full.notify_all();
     }
 
-    /// Pop up to `max` requests (arrival order) into `dst`; non-blocking.
+    /// Pop up to `max` requests (priority order, FIFO within a lane)
+    /// into `dst`; non-blocking.
     pub fn drain_into(&self, dst: &mut Vec<Request>, max: usize) -> usize {
         let mut g = self.inner.lock().unwrap();
-        let n = max.min(g.q.len());
-        for _ in 0..n {
-            dst.push(g.q.pop_front().unwrap());
+        let mut n = 0usize;
+        'lanes: for lane in 0..g.lanes.len() {
+            while n < max {
+                match g.lanes[lane].pop_front() {
+                    Some(r) => {
+                        dst.push(r);
+                        n += 1;
+                    }
+                    None => continue 'lanes,
+                }
+            }
+            break;
         }
         drop(g);
         if n > 0 {
@@ -151,14 +266,14 @@ impl RequestQueue {
     /// queue is closed with an empty backlog.
     pub fn wait_nonempty(&self, timeout: Duration) -> QueueWait {
         let g = self.inner.lock().unwrap();
-        if !g.q.is_empty() {
+        if g.len() > 0 {
             return QueueWait::Ready;
         }
         if g.closed {
             return QueueWait::Closed;
         }
         let (g, _res) = self.not_empty.wait_timeout(g, timeout).unwrap();
-        if !g.q.is_empty() {
+        if g.len() > 0 {
             QueueWait::Ready
         } else if g.closed {
             QueueWait::Closed
@@ -177,6 +292,13 @@ mod tests {
         Request::new(id, InputGraph::chain(&[1, 2], &[-1, -1])).unwrap()
     }
 
+    fn req_class(id: u64, class: Class) -> Request {
+        Request::builder(id, InputGraph::chain(&[1, 2], &[-1, -1]))
+            .slo(class)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn admission_control_rejects_when_full() {
         let q = RequestQueue::bounded(2);
@@ -186,6 +308,7 @@ mod tests {
         assert_eq!(e, AdmitError::Full);
         assert_eq!(r.id, 2, "rejected request is handed back");
         assert_eq!(q.depth(), 2);
+        assert_eq!(q.enqueued_total(), 2, "rejected submits are not counted");
         // draining frees slots
         let mut out = Vec::new();
         assert_eq!(q.drain_into(&mut out, 1), 1);
@@ -241,5 +364,65 @@ mod tests {
         );
         q.try_enqueue(req(0)).unwrap();
         assert_eq!(q.wait_nonempty(Duration::from_millis(1)), QueueWait::Ready);
+    }
+
+    #[test]
+    fn priority_lanes_drain_in_class_order() {
+        let q = RequestQueue::bounded(8);
+        q.try_enqueue(req_class(0, Class::Bulk)).unwrap();
+        q.try_enqueue(req_class(1, Class::Standard)).unwrap();
+        q.try_enqueue(req_class(2, Class::Interactive)).unwrap();
+        q.try_enqueue(req_class(3, Class::Interactive)).unwrap();
+        q.try_enqueue(req_class(4, Class::Standard)).unwrap();
+        let mut out = Vec::new();
+        assert_eq!(q.drain_into(&mut out, 8), 5);
+        let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        // interactive first (FIFO within the lane), then standard, then
+        // bulk
+        assert_eq!(ids, vec![2, 3, 1, 4, 0]);
+    }
+
+    #[test]
+    fn deadline_admission_sheds_hopeless_requests() {
+        let slo = SloDeadlines {
+            interactive: Duration::from_millis(1),
+            standard: Duration::from_millis(20),
+            bulk: Duration::from_secs(5),
+        };
+        let q = RequestQueue::with_admission(16, Admission::Deadline { slo });
+        // no service estimate yet: nothing sheds
+        q.try_enqueue(req_class(0, Class::Interactive)).unwrap();
+        // server reports 10ms/request: one queued request ahead means an
+        // interactive arrival (1ms budget) is hopeless, a bulk one fine
+        q.note_service(10e-3);
+        assert!((q.service_estimate() - 10e-3).abs() < 1e-12);
+        let (r, e) = q.try_enqueue(req_class(1, Class::Interactive)).unwrap_err();
+        assert_eq!(e, AdmitError::Shed);
+        assert_eq!(r.id, 1, "shed request is handed back");
+        q.try_enqueue(req_class(2, Class::Bulk)).unwrap();
+        // an explicit generous deadline overrides the class default
+        let generous = Request::builder(3, InputGraph::chain(&[1], &[-1]))
+            .slo(Class::Interactive)
+            .deadline_ms(500.0)
+            .build()
+            .unwrap();
+        q.try_enqueue(generous).unwrap();
+        // blocking enqueue never sheds
+        q.enqueue(req_class(4, Class::Interactive)).unwrap();
+        assert_eq!(q.depth(), 4);
+    }
+
+    #[test]
+    fn service_estimate_is_an_ewma() {
+        let q = RequestQueue::bounded(4);
+        assert_eq!(q.service_estimate(), 0.0);
+        q.note_service(10e-3);
+        q.note_service(20e-3);
+        let e = q.service_estimate();
+        assert!(e > 10e-3 && e < 20e-3, "{e}");
+        // junk observations are ignored
+        q.note_service(f64::NAN);
+        q.note_service(-1.0);
+        assert_eq!(q.service_estimate(), e);
     }
 }

@@ -12,8 +12,11 @@
 //!   [`WorkerPool`] — the artifact-free path the CI smoke and the
 //!   zero-alloc proof run on.
 //!
-//! Both paths return one [`Prediction`] per request (root order), and
-//! both are allocation-free in steady state.
+//! Batch forming is pluggable through [`FormPolicy`]
+//! ([`Server::with_policy`]): the server is generic over the policy, so
+//! external callers ship custom policies without touching `serve/`
+//! (DESIGN.md §10). Both executors return one [`Prediction`] per request
+//! (root order), and both are allocation-free in steady state.
 
 use anyhow::{ensure, Result};
 use std::time::Instant;
@@ -27,8 +30,9 @@ use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 use crate::vertex::interp::ProgramCell;
 
-use super::batcher::{BatchFormer, BatchPlan, BatchPolicy};
+use super::batcher::{BatchFormer, BatchPlan};
 use super::metrics::ServeMetrics;
+use super::policy::{Fixed, FormPolicy};
 use super::queue::RequestQueue;
 use super::{Prediction, Response};
 
@@ -43,6 +47,12 @@ pub trait ForwardExec {
         batch: &GraphBatch,
         preds: &mut Vec<Prediction>,
     ) -> Result<()>;
+    /// Padded rows the last `infer` scheduled (bucket slack; drives the
+    /// `padded_rows` serve metric the agreement policy minimizes).
+    /// Executors without plan introspection report 0.
+    fn last_batch_pad(&self) -> usize {
+        0
+    }
 }
 
 /// Host-cell executor: [`HostFrontier`] + [`BatchPlan`] on a persistent
@@ -56,6 +66,7 @@ pub struct HostExec<C: HostCell> {
     plan: BatchPlan,
     pool: WorkerPool,
     threads: usize,
+    last_pad: usize,
 }
 
 impl HostExec<HostTreeFc> {
@@ -126,6 +137,7 @@ impl<C: HostCell> HostExec<C> {
             plan: BatchPlan::new(),
             pool: WorkerPool::new(threads),
             threads,
+            last_pad: 0,
         }
     }
 }
@@ -148,12 +160,17 @@ impl<C: HostCell> ForwardExec for HostExec<C> {
         };
         self.frontier
             .run(batch, tasks, &self.cell, &self.xtable, ex, false);
+        self.last_pad = self.plan.last_padded_rows();
         preds.clear();
         for &r in &batch.roots {
             let row = self.frontier.states().row(r as usize);
             preds.push(Prediction { score: row.iter().sum() });
         }
         Ok(())
+    }
+
+    fn last_batch_pad(&self) -> usize {
+        self.last_pad
     }
 }
 
@@ -194,29 +211,49 @@ impl ForwardExec for EngineExec<'_> {
 }
 
 /// The serving loop: one instance per server thread, all state recycled.
-pub struct Server<E> {
+/// Generic over the batch-forming policy `P` —
+/// [`Server::with_policy`] accepts any [`FormPolicy`], boxed or
+/// concrete.
+pub struct Server<E, P: FormPolicy = Fixed> {
     pub exec: E,
-    former: BatchFormer,
+    former: BatchFormer<P>,
     merged: GraphBatch,
     preds: Vec<Prediction>,
     pub metrics: ServeMetrics,
 }
 
-impl<E: ForwardExec> Server<E> {
-    pub fn new(exec: E, policy: BatchPolicy) -> Server<E> {
+impl<E: ForwardExec> Server<E, Fixed> {
+    /// Construct with the original deadline/max-batch policy struct.
+    #[deprecated(
+        since = "0.6.0",
+        note = "use `Server::with_policy(exec, serve::Fixed { .. })` (or \
+                any other `FormPolicy`)"
+    )]
+    #[allow(deprecated)]
+    pub fn new(exec: E, policy: super::batcher::BatchPolicy) -> Server<E, Fixed> {
+        Server::with_policy(exec, Fixed::from(policy))
+    }
+}
+
+impl<E: ForwardExec, P: FormPolicy> Server<E, P> {
+    /// Construct a server around any batch-forming policy (the
+    /// config-driven path passes `Box<dyn FormPolicy>` from
+    /// [`ServeConfig::make_policy`](super::ServeConfig::make_policy)).
+    pub fn with_policy(exec: E, policy: P) -> Server<E, P> {
         let arity = exec.arity();
+        let max_batch = policy.max_batch();
         Server {
             exec,
             former: BatchFormer::new(policy),
             merged: GraphBatch::empty(arity),
             preds: Vec::new(),
-            metrics: ServeMetrics::new(policy.max_batch),
+            metrics: ServeMetrics::new(max_batch),
         }
     }
 
-    /// Serve one batch: form (blocking per the deadline policy), merge,
-    /// execute forward-only, respond via `on_response`. Returns `false`
-    /// once the queue is closed and fully drained.
+    /// Serve one batch: form (blocking per the policy), merge, execute
+    /// forward-only, respond via `on_response`. Returns `false` once the
+    /// queue is closed and fully drained.
     pub fn step(
         &mut self,
         q: &RequestQueue,
@@ -228,31 +265,44 @@ impl<E: ForwardExec> Server<E> {
         }
         let arity = self.exec.arity();
         {
-            let reqs = self.former.requests();
+            let reqs = &self.former.requests()[..k];
             // admission validated graph shape, but only the server knows
             // the cell's arity — refuse (with a clean error, not a merge
             // panic) any request this executor cannot gather
             for r in reqs {
-                ensure!(
-                    r.max_children() <= arity,
-                    "request {} needs {} child slots but the serving cell \
-                     has arity {arity}",
-                    r.id,
-                    r.max_children()
-                );
+                if r.max_children() > arity {
+                    let (id, needs) = (r.id, r.max_children());
+                    // the batch cannot be served; drop it so a later
+                    // step starts clean
+                    self.former.abandon();
+                    anyhow::bail!(
+                        "request {id} needs {needs} child slots but the \
+                         serving cell has arity {arity}"
+                    );
+                }
             }
             self.merged.merge_indexed(k, arity, |i| reqs[i].merge_item());
         }
-        self.exec.infer(&self.merged, &mut self.preds)?;
+        let infer_t0 = Instant::now();
+        if let Err(e) = self.exec.infer(&self.merged, &mut self.preds) {
+            self.former.abandon();
+            return Err(e);
+        }
+        let done = Instant::now();
+        // feed the measured per-request service time back to the queue:
+        // deadline admission and the adaptive policy both condition on it
+        q.note_service(
+            done.duration_since(infer_t0).as_secs_f64() / k as f64,
+        );
         ensure!(
             self.preds.len() == k,
             "executor returned {} predictions for {k} requests",
             self.preds.len()
         );
-        let done = Instant::now();
         self.metrics.observe_batch(k);
         self.metrics.observe_queue_depth(q.depth());
-        for (i, request) in self.former.drain().enumerate() {
+        self.metrics.observe_padding(self.exec.last_batch_pad() as u64);
+        for (i, request) in self.former.drain_batch(k).enumerate() {
             let latency_s =
                 done.duration_since(request.enqueued_at).as_secs_f64();
             self.metrics.observe_latency(latency_s);
@@ -281,11 +331,11 @@ impl<E: ForwardExec> Server<E> {
 mod tests {
     use super::*;
     use crate::graph::synth;
-    use crate::serve::Request;
+    use crate::serve::{Adaptive, Agreement, Request, SloDeadlines};
     use std::time::Duration;
 
-    fn policy(max_batch: usize) -> BatchPolicy {
-        BatchPolicy { max_batch, max_delay: Duration::ZERO }
+    fn policy(max_batch: usize) -> Fixed {
+        Fixed { max_batch, max_delay: Duration::ZERO }
     }
 
     fn mixed_requests(n: usize) -> Vec<Request> {
@@ -299,7 +349,7 @@ mod tests {
     #[test]
     fn server_answers_every_request_once_with_finite_scores() {
         let exec = HostExec::tree_fc(6, 2, 20, 2, 7);
-        let mut server = Server::new(exec, policy(4));
+        let mut server = Server::with_policy(exec, policy(4));
         let q = RequestQueue::bounded(64);
         let n = 13;
         for r in mixed_requests(n) {
@@ -322,13 +372,55 @@ mod tests {
     }
 
     #[test]
+    fn every_policy_serves_the_same_offline_workload() {
+        // all three policies answer every request exactly once and score
+        // identically: batch composition is invisible to predictions
+        let n = 11usize;
+        let run = |which: usize| -> Vec<f32> {
+            let exec = HostExec::tree_fc(6, 2, 20, 2, 7);
+            let q = RequestQueue::bounded(64);
+            for r in mixed_requests(n) {
+                q.try_enqueue(r).unwrap();
+            }
+            q.close();
+            let mut scores = vec![f32::NAN; n];
+            let mut on = |resp: Response| {
+                scores[resp.id() as usize] = resp.prediction.score;
+            };
+            match which {
+                0 => Server::with_policy(exec, policy(4)).run(&q, &mut on),
+                1 => Server::with_policy(
+                    exec,
+                    Agreement::new(4, Duration::ZERO, 8),
+                )
+                .run(&q, &mut on),
+                _ => Server::with_policy(
+                    exec,
+                    Adaptive {
+                        max_batch: 16,
+                        base_delay: Duration::ZERO,
+                        slo: SloDeadlines::default(),
+                    },
+                )
+                .run(&q, &mut on),
+            }
+            .unwrap();
+            scores
+        };
+        let fixed = run(0);
+        assert!(fixed.iter().all(|s| s.is_finite()));
+        assert_eq!(fixed, run(1), "agreement scores match fixed");
+        assert_eq!(fixed, run(2), "adaptive scores match fixed");
+    }
+
+    #[test]
     fn program_cells_serve_via_from_spec() {
         // program-only cells flow through the serving stack untouched:
         // spec -> ProgramCell -> HostExec, no serve-layer edits
         for (name, arity) in [("gru", 1usize), ("cstreelstm", 2), ("treelstm", 2)] {
             let spec = CellSpec::lookup(name, 6).unwrap();
             let exec = HostExec::from_spec(&spec, 20, 2, 7).unwrap();
-            let mut server = Server::new(exec, policy(4));
+            let mut server = Server::with_policy(exec, policy(4));
             assert_eq!(server.exec.arity(), arity);
             let q = RequestQueue::bounded(64);
             let graphs = crate::serve::loadgen::mixed_workload(3, 9, 20, arity);
@@ -353,7 +445,7 @@ mod tests {
         // equal predictions for the same spec/seed/workload
         let spec = CellSpec::lookup("treelstm", 6).unwrap();
         let serve_all = |exec: HostExec<ProgramCell>| -> Vec<f32> {
-            let mut server = Server::new(exec, policy(4));
+            let mut server = Server::with_policy(exec, policy(4));
             let q = RequestQueue::bounded(32);
             let graphs = crate::serve::loadgen::mixed_workload(5, 11, 20, 2);
             let n = graphs.len();
@@ -379,13 +471,36 @@ mod tests {
         // corrupt the merge or abort the process
         let mut rng = Rng::new(5);
         let exec = HostExec::tree_fc(4, 1, 20, 1, 7);
-        let mut server = Server::new(exec, policy(4));
+        let mut server = Server::with_policy(exec, policy(4));
         let q = RequestQueue::bounded(4);
         let tree = synth::random_binary_tree(&mut rng, 20, 3, 5);
         q.try_enqueue(Request::new(0, tree).unwrap()).unwrap();
         q.close();
         let r = server.step(&q, &mut |_resp| {});
         assert!(r.is_err(), "arity mismatch must surface as an error");
+        // the poisoned batch was abandoned: the next step sees a clean,
+        // drained queue and reports closure instead of re-erroring
+        let r = server.step(&q, &mut |_resp| {});
+        assert!(matches!(r, Ok(false)), "{r:?}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_construction_path_still_serves() {
+        use crate::serve::BatchPolicy;
+        let exec = HostExec::tree_fc(6, 2, 20, 1, 7);
+        let mut server = Server::new(
+            exec,
+            BatchPolicy { max_batch: 4, max_delay: Duration::ZERO },
+        );
+        let q = RequestQueue::bounded(8);
+        for r in mixed_requests(5) {
+            q.try_enqueue(r).unwrap();
+        }
+        q.close();
+        let mut n = 0;
+        server.run(&q, |_| n += 1).unwrap();
+        assert_eq!(n, 5);
     }
 
     #[test]
@@ -396,8 +511,10 @@ mod tests {
         let solo: Vec<f32> = reqs
             .iter()
             .map(|r| {
-                let mut server =
-                    Server::new(HostExec::tree_fc(6, 2, 20, 1, 7), policy(1));
+                let mut server = Server::with_policy(
+                    HostExec::tree_fc(6, 2, 20, 1, 7),
+                    policy(1),
+                );
                 let q = RequestQueue::bounded(4);
                 q.try_enqueue(Request::new(0, r.graph.clone()).unwrap())
                     .unwrap();
@@ -409,8 +526,10 @@ mod tests {
                 score
             })
             .collect();
-        let mut server =
-            Server::new(HostExec::tree_fc(6, 2, 20, 2, 7), policy(4));
+        let mut server = Server::with_policy(
+            HostExec::tree_fc(6, 2, 20, 2, 7),
+            policy(4),
+        );
         let q = RequestQueue::bounded(64);
         let n = reqs.len();
         for r in reqs {

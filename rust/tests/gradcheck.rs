@@ -11,7 +11,7 @@ use cavs::exec::parallel::{run_host_frontier, HostCell};
 use cavs::graph::{Dataset, GraphBatch, InputGraph};
 use cavs::models::CellSpec;
 use cavs::scheduler::{self, Policy};
-use cavs::serve::{HostExec, Request, RequestQueue, Server, ServeOpts};
+use cavs::serve::{HostExec, Request, RequestQueue, ServeConfig, Server};
 use cavs::train::host::train_host_epochs;
 use cavs::util::rng::Rng;
 use cavs::vertex::interp::ProgramCell;
@@ -294,7 +294,8 @@ fn user_registered_cell_trains_and_serves() {
 
     // ...and serve it
     let exec = HostExec::from_spec(&spec, 20, 2, 7).unwrap();
-    let mut server = Server::new(exec, ServeOpts::default().policy());
+    let mut server =
+        Server::with_policy(exec, ServeConfig::default().make_policy());
     let q = RequestQueue::bounded(16);
     let reqs = cavs::serve::loadgen::mixed_workload(3, 7, 20, 1);
     for (id, g) in reqs.into_iter().enumerate() {

@@ -478,7 +478,7 @@ fn prop_bucket_selection() {
 /// samples — and re-merging through the recycled arenas changes nothing.
 #[test]
 fn prop_serve_merge_bitwise_matches_offline_merge() {
-    use cavs::serve::{BatchFormer, BatchPolicy, Request, RequestQueue};
+    use cavs::serve::{BatchFormer, Fixed, Request, RequestQueue};
     use std::time::Duration;
 
     check("serve-merge", 80, |rng| {
@@ -498,7 +498,7 @@ fn prop_serve_merge_bitwise_matches_offline_merge() {
             q.try_enqueue(Request::new(id as u64, g.clone()).unwrap())
                 .unwrap();
         }
-        let mut former = BatchFormer::new(BatchPolicy {
+        let mut former = BatchFormer::new(Fixed {
             max_batch: graphs.len(),
             max_delay: Duration::ZERO,
         });
@@ -516,30 +516,41 @@ fn prop_serve_merge_bitwise_matches_offline_merge() {
 }
 
 /// Every enqueued request gets exactly one response — no drops, no
-/// duplicates — across deadline settings (including a zero deadline),
-/// batch sizes, queue capacities and thread counts, with admission
-/// control (`Full`) handled by draining the server.
+/// duplicates — across **all three batching policies**, deadline settings
+/// (including a zero deadline), batch sizes, queue capacities and thread
+/// counts, with admission control (`Full`) handled by draining the
+/// server.
 #[test]
 fn prop_serve_every_request_answered_exactly_once() {
-    use cavs::serve::{HostExec, Request, RequestQueue, Server, ServeOpts};
-    use std::time::Duration;
+    use cavs::serve::{
+        HostExec, PolicyKind, Request, RequestQueue, ServeConfig, Server,
+    };
 
     check("serve-exactly-once", 25, |rng| {
         let graphs = random_graphs(rng);
         let n = 4 + rng.below(28);
         let max_batch = 1 + rng.below(8);
-        let max_delay = match rng.below(3) {
-            0 => Duration::ZERO,
-            1 => Duration::from_micros(200),
-            _ => Duration::from_millis(2),
+        let deadline_ms = match rng.below(3) {
+            0 => 0.0,
+            1 => 0.2,
+            _ => 2.0,
         };
         let cap = 1 + rng.below(n);
         let threads = 1 + rng.below(3);
-        let opts = ServeOpts { max_batch, max_delay, queue_cap: cap };
-        let mut server = Server::new(
+        let cfg = ServeConfig {
+            policy: PolicyKind::ALL[rng.below(3)],
+            max_batch,
+            deadline_ms,
+            queue_cap: cap,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::with_policy(
             HostExec::tree_fc(4, 2, 20, threads, 7),
-            opts.policy(),
+            cfg.make_policy(),
         );
+        // capacity-only admission: the exactly-once invariant must hold
+        // for every policy even without deadline shedding in play (the
+        // shed path has its own accounting test in serve_policy.rs)
         let q = RequestQueue::bounded(cap);
         let mut got = vec![0u32; n];
         let mut on_resp = |resp: cavs::serve::Response| {

@@ -1,0 +1,174 @@
+//! Acceptance tests for the pluggable batching-policy API (DESIGN.md
+//! §10): per-policy serving equivalence, deadline shedding accounting,
+//! and the agreement policy's padding guarantee. Artifact-free (host
+//! executors only), so everything here runs on every push in CI.
+
+use std::time::Duration;
+
+use cavs::exec::parallel::HostTreeFc;
+use cavs::graph::InputGraph;
+use cavs::serve::{
+    Admission, AdmitError, Agreement, Class, Fixed, FormPolicy, HostExec,
+    PolicyKind, Request, RequestQueue, ServeConfig, Server, SloDeadlines,
+};
+
+/// A star of `leaves` leaves under one root: level widths `[leaves, 1]`.
+/// Stars of complementary widths are what the agreement policy pairs to
+/// hit the planner's bucket boundaries exactly.
+fn star(id: u64, leaves: usize) -> Request {
+    let n = leaves + 1;
+    let children = (0..n)
+        .map(|v| if v == n - 1 { (0..leaves as u32).collect() } else { vec![] })
+        .collect();
+    let g = InputGraph {
+        children,
+        tokens: (0..n as i32).collect(),
+        labels: vec![-1; n],
+        root_label: -1,
+    };
+    Request::new(id, g).unwrap()
+}
+
+/// Serve `reqs` offline (enqueue everything, close, drain) through
+/// `policy` and return (total padded rows, responses).
+fn serve_offline<P: FormPolicy>(
+    policy: P,
+    reqs: Vec<Request>,
+) -> (u64, usize) {
+    let exec = HostExec::tree_fc(4, 8, 40, 1, 7);
+    let mut server: Server<HostExec<HostTreeFc>, P> =
+        Server::with_policy(exec, policy);
+    let q = RequestQueue::bounded(reqs.len().max(1));
+    let n = reqs.len();
+    for r in reqs {
+        q.try_enqueue(r).unwrap();
+    }
+    q.close();
+    let mut served = 0usize;
+    server.run(&q, |_| served += 1).unwrap();
+    assert_eq!(served, n, "offline serving answers everything");
+    (server.metrics.report(1.0).padded_rows, served)
+}
+
+#[test]
+fn agreement_never_pads_more_rows_than_fixed() {
+    // arrival order interleaves 3-leaf and 5-leaf stars so the fixed
+    // policy's arrival-order pairs (3,3) and (5,5) round their level-0
+    // widths 6 and 10 up to buckets 8 and 16 (2 + 6 padded rows per
+    // pair-of-pairs), while the agreement pairing (3,5) hits bucket 8
+    // exactly. Same workload, same executor, same batch cap.
+    let workload = || -> Vec<Request> {
+        (0..16u64)
+            .map(|id| star(id, if (id / 2) % 2 == 0 { 3 } else { 5 }))
+            .collect()
+    };
+    let (fixed_pad, _) = serve_offline(
+        Fixed { max_batch: 2, max_delay: Duration::ZERO },
+        workload(),
+    );
+    let (agree_pad, _) = serve_offline(
+        Agreement::new(2, Duration::ZERO, 8),
+        workload(),
+    );
+    assert!(
+        agree_pad <= fixed_pad,
+        "agreement padded {agree_pad} rows, fixed {fixed_pad}"
+    );
+    assert!(
+        agree_pad < fixed_pad,
+        "this workload is constructed so agreement strictly wins \
+         (agreement {agree_pad} vs fixed {fixed_pad})"
+    );
+}
+
+#[test]
+fn deadline_admission_sheds_and_every_request_is_accounted() {
+    // the adaptive pairing: deadline-admission queue + adaptive policy.
+    // Force a pessimistic service estimate, then offer a mix of
+    // interactive (1ms budget — hopeless at 100ms/request) and bulk
+    // (5s budget — fine) requests: the interactive tail is shed at
+    // admission, everything admitted is answered exactly once, and
+    // offered == responses + shed.
+    let slo = SloDeadlines {
+        interactive: Duration::from_millis(1),
+        standard: Duration::from_millis(50),
+        bulk: Duration::from_secs(5),
+    };
+    let q = RequestQueue::with_admission(32, Admission::Deadline { slo });
+    q.note_service(0.1); // 100ms/request: interactive SLOs are hopeless
+    let exec = HostExec::tree_fc(4, 2, 40, 1, 7);
+    let mut server = Server::with_policy(
+        exec,
+        cavs::serve::Adaptive {
+            max_batch: 8,
+            base_delay: Duration::ZERO,
+            slo,
+        },
+    );
+    let offered = 12u64;
+    let mut shed = 0u64;
+    let mut admitted = 0u64;
+    for id in 0..offered {
+        let class = if id % 3 == 0 { Class::Interactive } else { Class::Bulk };
+        let r = Request::builder(id, InputGraph::chain(&[1, 2], &[-1, -1]))
+            .slo(class)
+            .build()
+            .unwrap();
+        match q.try_enqueue(r) {
+            Ok(()) => admitted += 1,
+            Err((back, AdmitError::Shed)) => {
+                assert_eq!(back.class(), Class::Interactive);
+                shed += 1;
+            }
+            Err((_, e)) => panic!("unexpected admission error {e:?}"),
+        }
+    }
+    assert_eq!(shed, 4, "every interactive request is hopeless");
+    q.close();
+    server.metrics.add_shed(shed);
+    let mut responses = 0u64;
+    server.run(&q, |_| responses += 1).unwrap();
+    assert_eq!(responses, admitted, "admitted requests answered once");
+    assert_eq!(responses + shed, offered, "no request unaccounted");
+    let report = server.metrics.report(1.0);
+    assert_eq!(report.shed, 4);
+    assert_eq!(report.n_responses, admitted);
+}
+
+#[test]
+fn config_policies_serve_identical_predictions() {
+    // the three config-selected (boxed) policies answer the same offline
+    // workload with identical scores: batch composition must be
+    // invisible to clients
+    let graphs = cavs::serve::loadgen::mixed_workload(9, 10, 40, 2);
+    let mut per_policy: Vec<Vec<f32>> = Vec::new();
+    for kind in PolicyKind::ALL {
+        let cfg = ServeConfig {
+            policy: kind,
+            max_batch: 4,
+            deadline_ms: 0.0,
+            queue_cap: 32,
+            ..ServeConfig::default()
+        };
+        let exec = HostExec::tree_fc(4, 2, 40, 1, 7);
+        let mut server = Server::with_policy(exec, cfg.make_policy());
+        let q = cfg.make_queue();
+        for (id, g) in graphs.iter().enumerate() {
+            q.try_enqueue(Request::new(id as u64, g.clone()).unwrap())
+                .unwrap();
+        }
+        q.close();
+        let mut scores = vec![f32::NAN; graphs.len()];
+        server
+            .run(&q, |r| scores[r.id() as usize] = r.prediction.score)
+            .unwrap();
+        assert!(
+            scores.iter().all(|s| s.is_finite()),
+            "{}: every request answered",
+            kind.name()
+        );
+        per_policy.push(scores);
+    }
+    assert_eq!(per_policy[0], per_policy[1], "agreement matches fixed");
+    assert_eq!(per_policy[0], per_policy[2], "adaptive matches fixed");
+}

@@ -1,9 +1,12 @@
 //! Counting-allocator proof that the **serve loop** is zero-alloc in
-//! steady state: once warm, a full serve cycle — enqueue, batch forming
-//! (deadline/max-batch drain), recycled `GraphBatch` merge, recycled
-//! `BatchPlan` scheduling, forward-only host-frontier execution on the
-//! persistent worker pool, response delivery and metric recording —
-//! performs **zero** heap allocations, sequential and pooled alike.
+//! steady state under **every shipped batching policy**: once warm, a
+//! full serve cycle — enqueue, policy-driven batch forming, recycled
+//! `GraphBatch` merge, recycled `BatchPlan` scheduling, forward-only
+//! host-frontier execution on the persistent worker pool, response
+//! delivery and metric recording — performs **zero** heap allocations,
+//! sequential and pooled alike. The `FormPolicy` contract requires
+//! policies to recycle their scratch (`Agreement`'s level-width arena,
+//! the queue's EWMA atomics), and this test is what holds them to it.
 //!
 //! This is the serving extension of `rust/tests/zero_alloc.rs` (which
 //! proves the same for the training fwd+bwd loop). Like that file, this
@@ -19,7 +22,8 @@ use cavs::exec::parallel::HostTreeFc;
 use cavs::graph::InputGraph;
 use cavs::serve::loadgen::mixed_workload;
 use cavs::serve::{
-    HostExec, Request, RequestQueue, Response, Server, ServeOpts,
+    Adaptive, Agreement, Fixed, FormPolicy, HostExec, Request, RequestQueue,
+    Response, Server, SloDeadlines,
 };
 
 struct CountingAlloc;
@@ -50,70 +54,101 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static A: CountingAlloc = CountingAlloc;
 
+/// Run the warm-up + measured window for one policy/thread combination.
+/// `label` names the combination in the failure message.
+fn run_policy<P: FormPolicy>(
+    policy: P,
+    threads: usize,
+    graphs: &[InputGraph],
+    label: &str,
+) {
+    let n = graphs.len();
+    let exec = HostExec::tree_fc(8, 2, 20, threads, 7);
+    let mut server: Server<HostExec<HostTreeFc>, P> =
+        Server::with_policy(exec, policy);
+    let iters_total = 6usize; // 2 warm-up + 3 measured + 1 slack
+    server.metrics.reserve_latencies(n * iters_total);
+    let q = RequestQueue::bounded(2 * n);
+    let mut idle: Vec<Request> = graphs
+        .iter()
+        .enumerate()
+        .map(|(id, g)| Request::new(id as u64, g.clone()).unwrap())
+        .collect();
+    let mut responses: Vec<Response> = Vec::with_capacity(n);
+
+    let mut serve_once =
+        |server: &mut Server<HostExec<HostTreeFc>, P>,
+         idle: &mut Vec<Request>| {
+            for req in idle.drain(..) {
+                q.try_enqueue(req).expect("queue sized for the set");
+            }
+            while responses.len() < n {
+                let more = server
+                    .step(&q, &mut |resp| responses.push(resp))
+                    .expect("host serving cannot fail");
+                assert!(more, "queue is never closed in this test");
+            }
+            // recycle every request for the next iteration
+            for resp in responses.drain(..) {
+                assert!(resp.prediction.score.is_finite());
+                idle.push(resp.request);
+            }
+        };
+
+    // Warm-up: the first iterations grow every arena (former pool,
+    // policy scratch, merged batch, plan, frontier blocks, metrics
+    // reservoir) to the request set's high-water mark; the second
+    // proves it's stable.
+    for _ in 0..2 {
+        serve_once(&mut server, &mut idle);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        serve_once(&mut server, &mut idle);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state serve loop heap-allocated ({label})"
+    );
+    // sanity: the loop really served everything, 5 iterations' worth
+    assert_eq!(server.metrics.n_responses(), 5 * n);
+    assert_eq!(idle.len(), n);
+}
+
 #[test]
 fn steady_state_serve_loop_allocates_nothing() {
     // The canonical mixed tree/sequence request set, recycled through
     // the server every iteration: responses hand each Request (graph +
-    // precomputed depths/root) back, so the client side allocates
-    // nothing either.
+    // precomputed schedule) back, so the client side allocates nothing
+    // either. Zero deadlines keep the loop cut-immediately (no sleeps);
+    // generous SLOs keep the adaptive path from ever wanting to shed.
     let n = 12usize;
     let graphs: Vec<InputGraph> = mixed_workload(42, n, 20, 2);
-    let opts = ServeOpts {
-        max_batch: 4,
-        max_delay: Duration::ZERO,
-        queue_cap: 2 * n,
-    };
 
     for threads in [1usize, 2] {
-        let exec = HostExec::tree_fc(8, 2, 20, threads, 7);
-        let mut server = Server::new(exec, opts.policy());
-        let iters_total = 6usize; // 2 warm-up + 3 measured + 1 slack
-        server.metrics.reserve_latencies(n * iters_total);
-        let q = RequestQueue::bounded(opts.queue_cap);
-        let mut idle: Vec<Request> = graphs
-            .iter()
-            .enumerate()
-            .map(|(id, g)| Request::new(id as u64, g.clone()).unwrap())
-            .collect();
-        let mut responses: Vec<Response> = Vec::with_capacity(n);
-
-        let mut serve_once =
-            |server: &mut Server<HostExec<HostTreeFc>>,
-             idle: &mut Vec<Request>| {
-                for req in idle.drain(..) {
-                    q.try_enqueue(req).expect("queue sized for the set");
-                }
-                while responses.len() < n {
-                    let more = server
-                        .step(&q, &mut |resp| responses.push(resp))
-                        .expect("host serving cannot fail");
-                    assert!(more, "queue is never closed in this test");
-                }
-                // recycle every request for the next iteration
-                for resp in responses.drain(..) {
-                    assert!(resp.prediction.score.is_finite());
-                    idle.push(resp.request);
-                }
-            };
-
-        // Warm-up: the first iterations grow every arena (former buffer,
-        // merged batch, plan, frontier blocks, metrics reservoir) to the
-        // request set's high-water mark; the second proves it's stable.
-        for _ in 0..2 {
-            serve_once(&mut server, &mut idle);
-        }
-        let before = ALLOCS.load(Ordering::SeqCst);
-        for _ in 0..3 {
-            serve_once(&mut server, &mut idle);
-        }
-        let after = ALLOCS.load(Ordering::SeqCst);
-        assert_eq!(
-            after - before,
-            0,
-            "steady-state serve loop heap-allocated (threads={threads})"
+        run_policy(
+            Fixed { max_batch: 4, max_delay: Duration::ZERO },
+            threads,
+            &graphs,
+            &format!("fixed, threads={threads}"),
         );
-        // sanity: the loop really served everything, 5 iterations' worth
-        assert_eq!(server.metrics.n_responses(), 5 * n);
-        assert_eq!(idle.len(), n);
+        run_policy(
+            Agreement::new(4, Duration::ZERO, 8),
+            threads,
+            &graphs,
+            &format!("agreement, threads={threads}"),
+        );
+        run_policy(
+            Adaptive {
+                max_batch: 8,
+                base_delay: Duration::ZERO,
+                slo: SloDeadlines::default(),
+            },
+            threads,
+            &graphs,
+            &format!("adaptive, threads={threads}"),
+        );
     }
 }
