@@ -623,6 +623,7 @@ pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
 pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
     use crate::exec::parallel::HostFrontier;
     use crate::exec::pool::{Sharder, WorkerPool};
+    use crate::exec::Variant;
     use crate::graph::{GraphBatch, InputGraph};
     use crate::scheduler::{self, Policy};
     use crate::util::rng::Rng;
@@ -661,7 +662,7 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
             "micro: compiled F (opt) vs reference interpreter (h={h}, \
              fwd and fwd+bwd mean over {reps} reps)"
         ),
-        &["config", "fwd (s)", "fwd+bwd (s)", "Mverts/s", "speedup", "speedup+bwd"],
+        &["config", "fwd (s)", "fwd+bwd (s)", "Mverts/s", "speedup", "speedup+bwd", "simd speedup"],
     );
     table.tag("cell", "lstm,treelstm");
     table.tag("opt", "both");
@@ -675,6 +676,12 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
         let reference = spec.random_cell_unoptimized(&mut prng, 0.08)?;
         let mut prng = Rng::new(13);
         let optimized = spec.random_cell(&mut prng, 0.08)?;
+        // same compiled cell forced onto the portable kernels, isolating
+        // the SIMD dispatch win (exact mode is bitwise across variants,
+        // so only the clock differs)
+        let mut prng = Rng::new(13);
+        let mut opt_scalar = spec.random_cell(&mut prng, 0.08)?;
+        opt_scalar.set_kernel_variant(Variant::Scalar);
         let xtable: Vec<f32> =
             (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
         for &threads in &thread_list {
@@ -697,6 +704,9 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
             let fbo = measure(warmup, reps, || {
                 hf.run(batch, &tasks, &optimized, &xtable, ex, true);
             });
+            let fos = measure(warmup, reps, || {
+                hf.run(batch, &tasks, &opt_scalar, &xtable, ex, false);
+            });
             let mverts = |s: f64| batch.n_vertices as f64 / s.max(1e-12) / 1e6;
             table.row(vec![
                 format!("{name} t={threads} interp"),
@@ -705,9 +715,11 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
                 format!("{:.2}", mverts(fi.mean_s)),
                 "-".into(),
                 "-".into(),
+                "-".into(),
             ]);
             let sp = fi.mean_s / fo.mean_s.max(1e-12);
             let spb = fbi.mean_s / fbo.mean_s.max(1e-12);
+            let sps = fos.mean_s / fo.mean_s.max(1e-12);
             table.row(vec![
                 format!("{name} t={threads} opt"),
                 format!("{:.5}", fo.mean_s),
@@ -715,10 +727,11 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
                 format!("{:.2}", mverts(fo.mean_s)),
                 format!("{sp:.2}x"),
                 format!("{spb:.2}x"),
+                format!("{sps:.2}x"),
             ]);
             crate::info!(
                 "micro {name} t={threads}: fwd {:.5}s -> {:.5}s ({sp:.2}x), \
-                 fwd+bwd {:.5}s -> {:.5}s ({spb:.2}x)",
+                 fwd+bwd {:.5}s -> {:.5}s ({spb:.2}x), simd {sps:.2}x over scalar",
                 fi.mean_s,
                 fo.mean_s,
                 fbi.mean_s,
@@ -727,6 +740,156 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
         }
     }
     write_results("micro", &table)?;
+    Ok(table)
+}
+
+/// Scalar-vs-SIMD microkernel sweep (`cavs bench --exp kernel`): times
+/// the dispatch table's packed forward GEMM, MatMul data-gradient (din)
+/// and activation kernels directly — no frontier, no scheduler — at the
+/// level-GEMM shapes (k = h, n = 4h, the concatenated-gates width). The
+/// `speedup` column is the scalar-variant time over the detected-variant
+/// time within one run (exact math on both sides, so the arithmetic is
+/// bitwise identical and only the clock differs); activation rows gate
+/// exact libm vs the fast polynomial path the same way. Like `micro`,
+/// the ratios are machine-relative, which is what lets the committed
+/// tiny baseline fail CI when the SIMD win regresses on any runner.
+/// `tiny` shrinks the per-rep work, never the row keys. Writes
+/// `results/BENCH_kernel.json`.
+pub fn kernel(_scale: Scale, tiny: bool) -> Result<Table> {
+    use crate::exec::kernels::{self, Kernels, MathMode, Variant};
+    use crate::util::rng::Rng;
+    use crate::util::stats::{fmt_duration, measure};
+
+    // each measured rep performs ~`work` multiply-adds (the inner loop
+    // repeats the kernel call), keeping every sample far above timer
+    // resolution at every shape
+    let (warmup, reps, work) =
+        if tiny { (1usize, 5usize, 1usize << 21) } else { (3, 16, 1 << 24) };
+    let detected = Variant::detect();
+    let scalar = Kernels::for_variant(Variant::Scalar, MathMode::Exact);
+    let simd = Kernels::for_variant(detected, MathMode::Exact);
+    let fast = Kernels::for_variant(detected, MathMode::Fast);
+
+    let mut table = Table::new(
+        &format!(
+            "kernel: scalar vs {} microkernels at the level-GEMM shapes \
+             (k=h, n=4h; per-call mean over {reps} reps)",
+            detected.name()
+        ),
+        &["kernel", "base (s)", "simd (s)", "speedup", "variant"],
+    );
+    table.tag("variant", detected.name());
+    table.tag("tiny", tiny);
+    table.tag("threads", 1);
+
+    for &h in &[64usize, 256] {
+        for &rows in &[4usize, 64] {
+            let (k, n) = (h, 4 * h);
+            let inner = (work / (rows * k * n)).max(1);
+            let mut rng = Rng::new(11 + (h * rows) as u64);
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.3)).collect();
+            let mut panels = vec![0.0f32; kernels::panel_len(k, n)];
+            kernels::fill_panels(&w, k, n, &mut panels);
+            let mut wt = vec![0.0f32; k * n];
+            kernels::fill_transpose(&w, k, n, &mut wt);
+            // row layout: [input k][output n][slack] — src/dst disjoint,
+            // exactly the kernels' level-buffer contract
+            let stride = k + n + 1;
+            let proto: Vec<f32> =
+                (0..rows * stride).map(|_| rng.normal_f32(0.5)).collect();
+
+            let mut buf = proto.clone();
+            let mut time_gemm = |kt: Kernels| {
+                measure(warmup, reps, || {
+                    for _ in 0..inner {
+                        (kt.gemm)(&mut buf, stride, rows, 0, k, k, n, &w, &panels);
+                    }
+                })
+                .mean_s
+                    / inner as f64
+            };
+            let ts = time_gemm(scalar);
+            let tv = time_gemm(simd);
+            table.row(vec![
+                format!("gemm h={h} rows={rows}"),
+                fmt_duration(ts),
+                fmt_duration(tv),
+                speedup(ts, tv),
+                detected.name().to_string(),
+            ]);
+
+            let mut adj = proto.clone();
+            let mut time_din = |kt: Kernels| {
+                measure(warmup, reps, || {
+                    for _ in 0..inner {
+                        // (adj, stride, rows, g0, d0, k, n, w, wt): the
+                        // n-wide gate gradient lives at 0, the k-wide
+                        // accumulator behind it
+                        (kt.din)(&mut adj, stride, rows, 0, n, k, n, &w, &wt);
+                    }
+                })
+                .mean_s
+                    / inner as f64
+            };
+            let ds = time_din(scalar);
+            let dv = time_din(simd);
+            table.row(vec![
+                format!("din h={h} rows={rows}"),
+                fmt_duration(ds),
+                fmt_duration(dv),
+                speedup(ds, dv),
+                detected.name().to_string(),
+            ]);
+            crate::info!(
+                "kernel h={h} rows={rows}: gemm {} -> {} ({}), din {} -> {} ({})",
+                fmt_duration(ts),
+                fmt_duration(tv),
+                speedup(ts, tv),
+                fmt_duration(ds),
+                fmt_duration(dv),
+                speedup(ds, dv)
+            );
+        }
+    }
+
+    // activations: exact libm vs the fast polynomial kernels (the only
+    // rows where the two sides compute different bits — DESIGN.md §11)
+    let alen = 4096usize;
+    let mut rng = Rng::new(29);
+    let act_in: Vec<f32> = (0..alen).map(|_| rng.normal_f32(1.5)).collect();
+    let mut act_out = vec![0.0f32; alen];
+    // one exp costs roughly an order of magnitude more than one MAC
+    let ainner = (work / (16 * alen)).max(1);
+    for (name, exact_fn, fast_fn) in
+        [("sigmoid", simd.sigmoid, fast.sigmoid), ("tanh", simd.tanh, fast.tanh)]
+    {
+        let mut time_act = |f: kernels::ActFn| {
+            measure(warmup, reps, || {
+                for _ in 0..ainner {
+                    f(&mut act_out, &act_in);
+                }
+            })
+            .mean_s
+                / ainner as f64
+        };
+        let te = time_act(exact_fn);
+        let tf = time_act(fast_fn);
+        table.row(vec![
+            format!("{name} fast n={alen}"),
+            fmt_duration(te),
+            fmt_duration(tf),
+            speedup(te, tf),
+            detected.name().to_string(),
+        ]);
+        crate::info!(
+            "kernel {name} n={alen}: exact {} -> fast {} ({})",
+            fmt_duration(te),
+            fmt_duration(tf),
+            speedup(te, tf)
+        );
+    }
+
+    write_results("kernel", &table)?;
     Ok(table)
 }
 

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::exec::MathMode;
 use crate::models::HeadKind;
 use crate::scheduler::Policy;
 use crate::serve::{PolicyKind, ServeConfig};
@@ -42,10 +43,14 @@ pub struct Config {
     /// reference per-row interpreter — bitwise identical, just slower;
     /// the A/B escape hatch for the bench-regression harness.
     pub opt: bool,
+    /// activation math for the compiled path's SIMD kernels
+    /// (`--set math=exact|fast`). `exact` (default) keeps the bitwise
+    /// opt-vs-reference and thread-invariance guarantees; `fast` swaps in
+    /// vectorized polynomial sigmoid/tanh and FMA GEMM contraction,
+    /// accurate to ~1e-5 relative (gradcheck-verified, DESIGN.md §11).
+    pub math: MathMode,
     /// `cavs serve`: the typed serving section (`serve.*` keys — policy,
-    /// batch caps, deadline, queue capacity, SLO budgets). The old flat
-    /// `serve_max_batch`/`serve_deadline_ms`/`serve_queue_cap` keys are
-    /// deprecated aliases into it for one release.
+    /// batch caps, deadline, queue capacity, SLO budgets).
     pub serve: ServeConfig,
     pub artifacts_dir: String,
 }
@@ -73,6 +78,7 @@ impl Default for Config {
             threads: 1,
             pool: true,
             opt: true,
+            math: MathMode::Exact,
             serve: ServeConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
@@ -162,6 +168,7 @@ impl Config {
             "opt" => self.opt = parse_bool(val)?,
             // the spelled-out escape hatch: `--set no_opt=true`
             "no_opt" => self.opt = !parse_bool(val)?,
+            "math" => self.math = MathMode::parse(val)?,
             "serve.policy" | "serve_policy" => {
                 self.serve.policy = PolicyKind::parse(val).ok_or_else(|| {
                     anyhow::anyhow!(
@@ -207,28 +214,6 @@ impl Config {
             "serve.slo_bulk_ms" => {
                 self.serve.slo_bulk_ms =
                     parse_serve_ms("serve.slo_bulk_ms", val, false)?;
-            }
-            // deprecated flat aliases (one release of warning, then gone)
-            "serve_max_batch" => {
-                crate::warnlog!(
-                    "config key 'serve_max_batch' is deprecated; use \
-                     'serve.max_batch'"
-                );
-                return self.apply("serve.max_batch", val);
-            }
-            "serve_deadline_ms" => {
-                crate::warnlog!(
-                    "config key 'serve_deadline_ms' is deprecated; use \
-                     'serve.deadline_ms'"
-                );
-                return self.apply("serve.deadline_ms", val);
-            }
-            "serve_queue_cap" => {
-                crate::warnlog!(
-                    "config key 'serve_queue_cap' is deprecated; use \
-                     'serve.queue_cap'"
-                );
-                return self.apply("serve.queue_cap", val);
             }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             _ => bail!("unknown config key '{key}'"),
@@ -384,18 +369,26 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_flat_serve_aliases_still_apply() {
+    fn removed_flat_serve_aliases_are_rejected() {
+        // the one-release deprecation window closed: the flat spellings
+        // now fail like any unknown key, pointing users at `serve.*`
         let mut c = Config::default();
-        c.apply("serve_max_batch", "8").unwrap();
-        c.apply("serve_deadline_ms", "0.5").unwrap();
-        c.apply("serve_queue_cap", "64").unwrap();
-        assert_eq!(c.serve.max_batch, 8);
-        assert_eq!(c.serve.queue_cap, 64);
-        assert_eq!(c.serve.max_delay(), std::time::Duration::from_micros(500));
-        // aliases delegate, so they keep the new keys' validation
-        assert!(c.apply("serve_max_batch", "0").is_err());
-        assert!(c.apply("serve_deadline_ms", "inf").is_err());
-        assert!(c.apply("serve_queue_cap", "0").is_err());
+        for key in ["serve_max_batch", "serve_deadline_ms", "serve_queue_cap"] {
+            let e = c.apply(key, "8").unwrap_err().to_string();
+            assert!(e.contains("unknown config key"), "{key}: {e}");
+        }
+    }
+
+    #[test]
+    fn math_key_parses_and_rejects_garbage() {
+        let mut c = Config::default();
+        assert_eq!(c.math, MathMode::Exact, "exact math is the default");
+        c.apply("math", "fast").unwrap();
+        assert_eq!(c.math, MathMode::Fast);
+        c.apply("math", "exact").unwrap();
+        assert_eq!(c.math, MathMode::Exact);
+        let e = c.apply("math", "sloppy").unwrap_err().to_string();
+        assert!(e.contains("exact") && e.contains("fast"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Activation kernels: the exact (libm) slice sweeps used by
+//! [`MathMode::Exact`](super::MathMode) and the polynomial fast path
+//! behind `math=fast`.
+//!
+//! The fast `exp` is the classic cephes/sse_mathfun reduction: clamp,
+//! split `x = n·ln2 + r` with a two-constant ln2 (so the reduction is
+//! exact in f32), a degree-6 polynomial for `e^r`, and `2^n` assembled
+//! directly in the exponent bits. Branch-free, smooth, relative error
+//! ~1e-7 over the clamped range — far inside the 1e-3 tolerance the
+//! fast-math gradcheck and exact-vs-fast proptest enforce. `sigmoid` and
+//! `tanh` derive from it; their VJPs reuse the stored activation value
+//! (`y·(1−y)`, `1−y²`), so the backward pass needs no extra kernels.
+//!
+//! The AVX2 lane-parallel twins in `kernels::avx2` use the same
+//! constants and reduction, so vector body and scalar tail of one slice
+//! agree to the last bit.
+
+/// The logistic function shared by the interpreter, the hand-written
+/// host cells and the exact activation kernels (one definition so
+/// equivalence is bitwise by construction).
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Exact slice sigmoid: the reference interpreter's loop.
+pub fn sigmoid_exact(out: &mut [f32], inp: &[f32]) {
+    for (ov, &av) in out.iter_mut().zip(inp) {
+        *ov = sigmoid(av);
+    }
+}
+
+/// Exact slice tanh: the reference interpreter's loop.
+pub fn tanh_exact(out: &mut [f32], inp: &[f32]) {
+    for (ov, &av) in out.iter_mut().zip(inp) {
+        *ov = av.tanh();
+    }
+}
+
+// cephes f32 exp constants (shared with the AVX2 lane version)
+pub(super) const EXP_HI: f32 = 88.3762626647950;
+pub(super) const EXP_LO: f32 = -88.3762626647949;
+pub(super) const LOG2EF: f32 = 1.44269504088896341;
+pub(super) const EXP_C1: f32 = 0.693359375;
+pub(super) const EXP_C2: f32 = -2.12194440e-4;
+pub(super) const EXP_P0: f32 = 1.9875691500e-4;
+pub(super) const EXP_P1: f32 = 1.3981999507e-3;
+pub(super) const EXP_P2: f32 = 8.3334519073e-3;
+pub(super) const EXP_P3: f32 = 4.1665795894e-2;
+pub(super) const EXP_P4: f32 = 1.6666665459e-1;
+pub(super) const EXP_P5: f32 = 5.0000001201e-1;
+
+/// Polynomial `e^x` (see module docs). `mul_add` mirrors the FMA the
+/// AVX2 lanes use, keeping scalar tail and vector body identical.
+#[inline]
+pub fn fast_exp(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let fx = x.mul_add(LOG2EF, 0.5).floor();
+    let r = fx.mul_add(-EXP_C2, fx.mul_add(-EXP_C1, x));
+    let z = r * r;
+    let mut y = EXP_P0;
+    y = y.mul_add(r, EXP_P1);
+    y = y.mul_add(r, EXP_P2);
+    y = y.mul_add(r, EXP_P3);
+    y = y.mul_add(r, EXP_P4);
+    y = y.mul_add(r, EXP_P5);
+    y = y.mul_add(z, r + 1.0);
+    // 2^n straight into the exponent field; the clamp keeps n in range
+    let pow2n = f32::from_bits((((fx as i32) + 0x7f) as u32) << 23);
+    y * pow2n
+}
+
+#[inline]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + fast_exp(-x))
+}
+
+#[inline]
+pub fn fast_tanh(x: f32) -> f32 {
+    // tanh(x) = sign(x) · (1 − e^(−2|x|)) / (1 + e^(−2|x|))
+    let t = fast_exp(-2.0 * x.abs());
+    ((1.0 - t) / (1.0 + t)).copysign(x)
+}
+
+/// Fast slice sigmoid (scalar; the AVX2 table overrides with lanes).
+pub fn sigmoid_fast(out: &mut [f32], inp: &[f32]) {
+    for (ov, &av) in out.iter_mut().zip(inp) {
+        *ov = fast_sigmoid(av);
+    }
+}
+
+/// Fast slice tanh (scalar; the AVX2 table overrides with lanes).
+pub fn tanh_fast(out: &mut [f32], inp: &[f32]) {
+    for (ov, &av) in out.iter_mut().zip(inp) {
+        *ov = fast_tanh(av);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_exp_tracks_libm_within_rel_1e5() {
+        let mut x = -30.0f32;
+        while x <= 30.0 {
+            let want = (x as f64).exp();
+            let got = fast_exp(x) as f64;
+            let rel = (got - want).abs() / want.max(f64::MIN_POSITIVE);
+            assert!(rel < 1e-5, "exp({x}): got {got}, want {want}, rel {rel}");
+            x += 0.0137;
+        }
+        // saturation ends: clamped, finite, monotone direction preserved
+        assert!(fast_exp(1000.0).is_finite());
+        assert_eq!(fast_exp(-1000.0), 0.0);
+    }
+
+    #[test]
+    fn fast_sigmoid_and_tanh_track_libm() {
+        let mut x = -20.0f32;
+        while x <= 20.0 {
+            let s = (fast_sigmoid(x) - sigmoid(x)).abs();
+            let t = (fast_tanh(x) - x.tanh()).abs();
+            assert!(s < 1e-6, "sigmoid({x}) abs err {s}");
+            assert!(t < 1e-6, "tanh({x}) abs err {t}");
+            x += 0.0173;
+        }
+        // odd/even structure survives the approximation
+        assert_eq!(fast_tanh(0.0), 0.0);
+        assert_eq!(fast_tanh(-3.0), -fast_tanh(3.0));
+        assert!((fast_sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,435 @@
+//! Runtime-dispatched SIMD microkernels under the compiled level path.
+//!
+//! The frontier-level executor (`vertex::interp::ProgramCell` as
+//! [`LevelCell`](crate::exec::parallel::LevelCell)) lowers the hot inner
+//! loops of the compiled schedule — the wide level GEMM, its MatMul
+//! data-gradient, and the fused elementwise activations — to the function
+//! pointers in a [`Kernels`] table resolved **once at bind time** from
+//! runtime CPU-feature detection:
+//!
+//! * [`Variant::Scalar`] — portable fallback, **bitwise identical** to the
+//!   seed's `gemm_rows`/`matmul_din_rows` loops (it *is* those loops).
+//! * [`Variant::Avx2`] — `core::arch::x86_64` AVX2 kernels over weights
+//!   repacked at bind time (see [`fill_panels`]/[`fill_transpose`]). In
+//!   [`MathMode::Exact`] they use separate mul+add so every output
+//!   element sees the same operations in the same order as the scalar
+//!   reference — still bitwise identical; FMA contraction is reserved
+//!   for [`MathMode::Fast`].
+//! * [`Variant::Neon`] — aarch64 twin of the AVX2 kernels (same packed
+//!   layouts, `float32x4_t` lanes), compiled only on that target.
+//!
+//! [`MathMode`] additionally selects the activation kernels: `Exact`
+//! keeps libm `exp`/`tanh` (the bitwise opt-vs-reference contract),
+//! `Fast` substitutes the polynomial approximations in [`act`]
+//! (rel err ~1e-7, accepted by tolerance tests + FD gradcheck, never by
+//! bitwise comparison). Both modes stay thread-count invariant: each
+//! row's arithmetic is independent of which worker shard it lands in.
+//!
+//! Everything here is allocation-free at execution time — packing happens
+//! at `OptProgram` bind / `sync_opt` into buffers owned by the cell, and
+//! the table itself is a `Copy` struct of function pointers.
+
+pub mod act;
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+
+use anyhow::{bail, Result};
+
+/// Panel width of the packed forward-GEMM weight layout, in f32 columns
+/// (one AVX2 register; NEON consumes a panel as two 4-lane halves).
+pub const NR: usize = 8;
+
+/// Row-block size of the level GEMM sweeps: each weight row is streamed
+/// once per block of vertex rows instead of once per row. Blocking never
+/// touches an output element's k-reduction order, so results stay
+/// bitwise identical at any block size.
+pub const GEMM_ROW_BLOCK: usize = 4;
+
+/// Exact vs fast math for the compiled path (the `math` config key).
+///
+/// `Exact` (the default) keeps the bitwise opt-vs-reference guarantee:
+/// libm activations and uncontracted mul+add GEMMs. `Fast` enables FMA
+/// contraction and the polynomial `exp`/`sigmoid`/`tanh` in [`act`] —
+/// accepted by tolerance (proptest rel-err bound + FD gradcheck), not by
+/// bitwise equality. The reference (unoptimized) path is always exact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MathMode {
+    #[default]
+    Exact,
+    Fast,
+}
+
+impl MathMode {
+    pub fn parse(s: &str) -> Result<MathMode> {
+        match s {
+            "exact" => Ok(MathMode::Exact),
+            "fast" => Ok(MathMode::Fast),
+            _ => bail!("math must be 'exact' or 'fast', got '{s}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MathMode::Exact => "exact",
+            MathMode::Fast => "fast",
+        }
+    }
+}
+
+/// A kernel implementation, selected at bind time by CPU detection (or
+/// forced through [`Kernels::for_variant`] by dispatch tests and the
+/// scalar-vs-simd bench columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Variant {
+    /// The best variant this CPU supports (feature detection is cached by
+    /// std, so this is cheap to call at every bind).
+    pub fn detect() -> Variant {
+        for v in [Variant::Avx2, Variant::Neon] {
+            if v.available() {
+                return v;
+            }
+        }
+        Variant::Scalar
+    }
+
+    /// Whether this variant can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            Variant::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Variant::Avx2 => {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Variant::Avx2 => false,
+            // NEON is baseline on aarch64
+            #[cfg(target_arch = "aarch64")]
+            Variant::Neon => true,
+            #[cfg(not(target_arch = "aarch64"))]
+            Variant::Neon => false,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Scalar => "scalar",
+            Variant::Avx2 => "avx2",
+            Variant::Neon => "neon",
+        }
+    }
+
+    /// Every variant, for dispatch tests to filter by [`Variant::available`].
+    pub fn all() -> [Variant; 3] {
+        [Variant::Scalar, Variant::Avx2, Variant::Neon]
+    }
+}
+
+/// Forward level GEMM over a row-strided buffer. Argument order:
+/// `(buf, stride, rows, src, dst, k, n, w, panels)` — for each row `r`
+/// in `0..rows`, `buf[r*stride + dst ..][..n] = buf[r*stride + src ..][..k] @ W`
+/// where `W` (`w`) is `[k, n]` row-major and `panels` is its packed
+/// panel form ([`fill_panels`]). The scalar variant reads `w`, SIMD
+/// variants read `panels`. Callers guarantee the per-row `src`/`dst`
+/// regions are in bounds and disjoint (the optimizer's layout invariant).
+pub type GemmFn = fn(&mut [f32], usize, usize, usize, usize, usize, usize, &[f32], &[f32]);
+
+/// MatMul data-gradient over a row-strided adjoint buffer. Argument
+/// order: `(adj, stride, rows, g, din, k, n, w, wt)` — for each row `r`,
+/// `adj[r*stride + din + kk] += Σ_j adj[r*stride + g + j] · W[kk, j]`
+/// with the j-ascending reduction order of the reference interpreter.
+/// `wt` is the `[n, k]` transpose of `W` ([`fill_transpose`]), read by
+/// the SIMD variants; the scalar variant reads `w`. The `g` and `din`
+/// regions of a row are disjoint (adjoint slots are never aliased).
+pub type DinFn = fn(&mut [f32], usize, usize, usize, usize, usize, usize, &[f32], &[f32]);
+
+/// Elementwise activation over equal-length slices: `out[i] = f(inp[i])`.
+pub type ActFn = fn(out: &mut [f32], inp: &[f32]);
+
+/// The resolved kernel table a compiled cell executes through. `Copy`
+/// function pointers only — resolving or swapping a table never
+/// allocates, so the steady-state zero-allocation proof covers it.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    pub variant: Variant,
+    pub math: MathMode,
+    pub gemm: GemmFn,
+    pub din: DinFn,
+    pub sigmoid: ActFn,
+    pub tanh: ActFn,
+}
+
+impl Kernels {
+    /// The table for the best CPU-supported variant.
+    pub fn resolve(math: MathMode) -> Kernels {
+        Kernels::for_variant(Variant::detect(), math)
+    }
+
+    /// The table for a specific variant (dispatch tests, bench columns).
+    /// Panics if the variant is unavailable on this CPU — check
+    /// [`Variant::available`] first.
+    pub fn for_variant(variant: Variant, math: MathMode) -> Kernels {
+        assert!(
+            variant.available(),
+            "kernel variant '{}' is not supported on this CPU",
+            variant.name()
+        );
+        let (sigmoid, tanh): (ActFn, ActFn) = match math {
+            MathMode::Exact => (act::sigmoid_exact, act::tanh_exact),
+            MathMode::Fast => (act::sigmoid_fast, act::tanh_fast),
+        };
+        match (variant, math) {
+            (Variant::Scalar, _) => Kernels {
+                variant,
+                math,
+                gemm: scalar::gemm,
+                din: scalar::din,
+                sigmoid,
+                tanh,
+            },
+            #[cfg(target_arch = "x86_64")]
+            (Variant::Avx2, MathMode::Exact) => Kernels {
+                variant,
+                math,
+                gemm: avx2::gemm_exact,
+                din: avx2::din_exact,
+                sigmoid,
+                tanh,
+            },
+            #[cfg(target_arch = "x86_64")]
+            (Variant::Avx2, MathMode::Fast) => Kernels {
+                variant,
+                math,
+                gemm: avx2::gemm_fast,
+                din: avx2::din_fast,
+                sigmoid: avx2::sigmoid_fast,
+                tanh: avx2::tanh_fast,
+            },
+            #[cfg(target_arch = "aarch64")]
+            (Variant::Neon, MathMode::Exact) => Kernels {
+                variant,
+                math,
+                gemm: neon::gemm_exact,
+                din: neon::din_exact,
+                sigmoid,
+                tanh,
+            },
+            #[cfg(target_arch = "aarch64")]
+            (Variant::Neon, MathMode::Fast) => Kernels {
+                variant,
+                math,
+                gemm: neon::gemm_fast,
+                din: neon::din_fast,
+                sigmoid,
+                tanh,
+            },
+            #[allow(unreachable_patterns)]
+            _ => unreachable!("available() admitted an uncompiled variant"),
+        }
+    }
+}
+
+impl std::fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernels")
+            .field("variant", &self.variant)
+            .field("math", &self.math)
+            .finish()
+    }
+}
+
+/// f32s a packed panel buffer needs for a `[k, n]` weight matrix.
+pub fn panel_len(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * k * NR
+}
+
+/// Pack a `[k, n]` row-major weight matrix into the forward-GEMM panel
+/// layout: panel `p` holds columns `p*NR .. p*NR+NR` as a contiguous
+/// `[k, NR]` block (`out[p*k*NR + kk*NR + jj] = w[kk*n + p*NR + jj]`),
+/// zero-padded past `n`. Each panel row is then one aligned-free SIMD
+/// load shared across a whole row block of the GEMM. In-place refill:
+/// `out` must already have [`panel_len`] elements (sized at bind time,
+/// refreshed allocation-free by `sync_opt`).
+pub fn fill_panels(w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), panel_len(k, n));
+    let np = n.div_ceil(NR);
+    for p in 0..np {
+        let j0 = p * NR;
+        let jw = NR.min(n - j0);
+        let pbase = p * k * NR;
+        for kk in 0..k {
+            let dst = &mut out[pbase + kk * NR..pbase + (kk + 1) * NR];
+            dst[..jw].copy_from_slice(&w[kk * n + j0..kk * n + j0 + jw]);
+            dst[jw..].fill(0.0);
+        }
+    }
+}
+
+/// Transpose a `[k, n]` row-major weight matrix into `[n, k]`
+/// (`out[j*k + kk] = w[kk*n + j]`): the backward din kernels vectorize
+/// across k lanes, so they need the k index contiguous. In-place refill
+/// with the same contract as [`fill_panels`] (`out.len() == k*n`).
+pub fn fill_transpose(w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), k * n);
+    for kk in 0..k {
+        for j in 0..n {
+            out[j * k + kk] = w[kk * n + j];
+        }
+    }
+}
+
+/// Shared-read view of a row-strided buffer region through its raw base
+/// pointer.
+///
+/// SAFETY: callers guarantee `[off, off + len)` is in bounds of the
+/// buffer `base` was derived from and disjoint from every concurrently
+/// live mutable region.
+#[inline]
+pub(crate) unsafe fn view<'a>(base: *const f32, off: usize, len: usize) -> &'a [f32] {
+    std::slice::from_raw_parts(base.add(off), len)
+}
+
+/// Mutable view of a buffer region (same safety contract as [`view`]).
+#[inline]
+pub(crate) unsafe fn view_mut<'a>(base: *mut f32, off: usize, len: usize) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(base.add(off), len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(a: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        for (kk, &v) in a.iter().enumerate().take(k) {
+            for j in 0..n {
+                out[j] += v * w[kk * n + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn panel_pack_covers_every_column_with_zero_padding() {
+        let (k, n) = (3usize, 13usize); // forces a ragged tail panel
+        let w: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+        let mut panels = vec![-1.0f32; panel_len(k, n)];
+        fill_panels(&w, k, n, &mut panels);
+        for p in 0..n.div_ceil(NR) {
+            for kk in 0..k {
+                for jj in 0..NR {
+                    let j = p * NR + jj;
+                    let got = panels[p * k * NR + kk * NR + jj];
+                    let want = if j < n { w[kk * n + j] } else { 0.0 };
+                    assert_eq!(got, want, "panel {p} kk={kk} jj={jj}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_pack_roundtrips() {
+        let (k, n) = (5usize, 7usize);
+        let w: Vec<f32> = (0..k * n).map(|i| (i * 3) as f32).collect();
+        let mut wt = vec![0.0f32; k * n];
+        fill_transpose(&w, k, n, &mut wt);
+        for kk in 0..k {
+            for j in 0..n {
+                assert_eq!(wt[j * k + kk], w[kk * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_consistent_and_scalar_always_available() {
+        assert!(Variant::Scalar.available());
+        assert!(Variant::detect().available());
+        // the resolved table reports what was asked of it
+        for math in [MathMode::Exact, MathMode::Fast] {
+            let t = Kernels::resolve(math);
+            assert_eq!(t.math, math);
+            assert_eq!(t.variant, Variant::detect());
+        }
+    }
+
+    #[test]
+    fn every_available_variant_matches_naive_gemm_exactly_in_exact_mode() {
+        // ragged shapes exercise both the full-panel and tail paths
+        for &(rows, k, n) in &[(1usize, 4usize, 8usize), (5, 7, 13), (6, 16, 32), (3, 3, 5)] {
+            let mut rng = Rng::new(42 + (rows + k + n) as u64);
+            let stride = k + n + 3; // rows carry src then dst plus slack
+            let (src, dst) = (0usize, k + 1);
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(1.0)).collect();
+            let mut panels = vec![0.0f32; panel_len(k, n)];
+            fill_panels(&w, k, n, &mut panels);
+            let mut proto = vec![0.0f32; rows * stride];
+            for r in 0..rows {
+                for kk in 0..k {
+                    proto[r * stride + src + kk] = rng.normal_f32(1.0);
+                }
+            }
+            for v in Variant::all() {
+                if !v.available() {
+                    continue;
+                }
+                let kt = Kernels::for_variant(v, MathMode::Exact);
+                let mut buf = proto.clone();
+                (kt.gemm)(&mut buf, stride, rows, src, dst, k, n, &w, &panels);
+                for r in 0..rows {
+                    let a = &proto[r * stride + src..][..k];
+                    let want = naive_gemm(a, &w, k, n);
+                    let got = &buf[r * stride + dst..][..n];
+                    assert_eq!(got, &want[..], "variant {} row {r} k={k} n={n}", v.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_available_variant_matches_naive_din_exactly_in_exact_mode() {
+        for &(rows, k, n) in &[(1usize, 8usize, 4usize), (5, 13, 7), (6, 32, 16), (3, 5, 3)] {
+            let mut rng = Rng::new(7 + (rows * k * n) as u64);
+            let stride = k + n + 2;
+            let (g0, d0) = (0usize, n + 1);
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(1.0)).collect();
+            let mut wt = vec![0.0f32; k * n];
+            fill_transpose(&w, k, n, &mut wt);
+            let mut proto = vec![0.0f32; rows * stride];
+            for v in proto.iter_mut() {
+                *v = rng.normal_f32(0.5);
+            }
+            for v in Variant::all() {
+                if !v.available() {
+                    continue;
+                }
+                let kt = Kernels::for_variant(v, MathMode::Exact);
+                let mut buf = proto.clone();
+                (kt.din)(&mut buf, stride, rows, g0, d0, k, n, &w, &wt);
+                for r in 0..rows {
+                    for kk in 0..k {
+                        let g = &proto[r * stride + g0..][..n];
+                        let mut acc = 0.0f32;
+                        for (j, &gv) in g.iter().enumerate() {
+                            acc += gv * w[kk * n + j];
+                        }
+                        let want = proto[r * stride + d0 + kk] + acc;
+                        let got = buf[r * stride + d0 + kk];
+                        let tag = format!("variant {} row {r} kk={kk} k={k} n={n}", v.name());
+                        assert_eq!(got, want, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Portable scalar kernels: the dispatch fallback **and** the bitwise
+//! reference. These are the seed's `gemm_rows`/`matmul_din_rows` loops
+//! moved verbatim out of `vertex/interp.rs` (minus the `v != 0.0` skip,
+//! which was removed everywhere the compiler-path GEMMs run — it defeats
+//! vectorization and only pays off on degenerate inputs; the reference
+//! interpreter's MatMul dropped it in the same commit, so both sides of
+//! the bitwise-equality contract changed together).
+
+use super::{view, view_mut, GEMM_ROW_BLOCK};
+
+/// Row-blocked forward GEMM ([`GemmFn`](super::GemmFn) contract): each
+/// weight row is streamed once per [`GEMM_ROW_BLOCK`] vertex rows. Reads
+/// the row-major `w`; `_panels` is for the SIMD variants.
+pub(super) fn gemm(
+    buf: &mut [f32],
+    stride: usize,
+    rows: usize,
+    src: usize,
+    dst: usize,
+    k: usize,
+    n: usize,
+    w: &[f32],
+    _panels: &[f32],
+) {
+    let base = buf.as_mut_ptr();
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rb = (rows - r0).min(GEMM_ROW_BLOCK);
+        for r in r0..r0 + rb {
+            // SAFETY: row r's output region, in bounds and disjoint from
+            // its input region (the caller's layout contract).
+            unsafe { view_mut(base, r * stride + dst, n) }.fill(0.0);
+        }
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for r in r0..r0 + rb {
+                // SAFETY: in-bounds scalar read of row r's input.
+                let v = unsafe { *base.add(r * stride + src + kk) };
+                // SAFETY: row r's output region again.
+                let outr = unsafe { view_mut(base, r * stride + dst, n) };
+                for (ov, &pw) in outr.iter_mut().zip(wrow) {
+                    *ov += v * pw;
+                }
+            }
+        }
+        r0 += rb;
+    }
+}
+
+/// Row-blocked MatMul data-gradient ([`DinFn`](super::DinFn) contract):
+/// `din[kk] += Σ_j g[j]·W[kk,j]` per row, j ascending — the reference
+/// reduction order. Reads the row-major `w`; `_wt` is for SIMD variants.
+pub(super) fn din(
+    adj: &mut [f32],
+    stride: usize,
+    rows: usize,
+    g0: usize,
+    d0: usize,
+    k: usize,
+    n: usize,
+    w: &[f32],
+    _wt: &[f32],
+) {
+    let base = adj.as_mut_ptr();
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let rb = (rows - r0).min(GEMM_ROW_BLOCK);
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for r in r0..r0 + rb {
+                // SAFETY: row r's adjoint-of-output region (shared read)
+                // and the disjoint din scalar (write).
+                let g = unsafe { view(base as *const f32, r * stride + g0, n) };
+                let mut acc = 0.0f32;
+                for (j, &wv) in wrow.iter().enumerate() {
+                    acc += g[j] * wv;
+                }
+                unsafe {
+                    *base.add(r * stride + d0 + kk) += acc;
+                }
+            }
+        }
+        r0 += rb;
+    }
+}

@@ -18,12 +18,18 @@
 //! fwd+bwd loop allocates nothing (DESIGN.md §5). The pre-pool
 //! spawn-per-primitive scoped path survives as `ExecOpts::scoped` /
 //! `pool::Sharder::Scoped`, the A/B baseline for `benches/micro.rs`.
+//!
+//! The compiled level path's hot loops (wide GEMM, MatMul data-gradient,
+//! fused activations) execute through the runtime-dispatched SIMD
+//! microkernels in `kernels` (DESIGN.md §11).
 
 pub mod engine;
+pub mod kernels;
 pub mod parallel;
 pub mod pool;
 pub mod unfused;
 
 pub use engine::{Engine, EngineOpts, StepResult};
+pub use kernels::{Kernels, MathMode, Variant};
 pub use parallel::ExecOpts;
 pub use pool::{Sharder, ShardScratch, WorkerPool};

@@ -325,9 +325,12 @@ pub trait HostCell: Sync {
 /// `rows.start`). Per-row arithmetic is identical to the cell's per-row
 /// path, so results are bitwise identical for every shard plan.
 pub trait LevelCell: Sync {
-    /// Floats per row of the level value tape.
+    /// Row pitch (floats) of the level value tape. May exceed the dense
+    /// per-row width: compiled cells pad rows to a cache-line multiple so
+    /// shard sub-blocks never share a line (the padding is never read).
     fn lvl_tape_cols(&self) -> usize;
-    /// Floats per row of the level adjoint tape.
+    /// Row pitch (floats) of the level adjoint tape (see
+    /// [`LevelCell::lvl_tape_cols`]).
     fn lvl_adj_cols(&self) -> usize;
     /// Forward: fill `tape` for the shard's rows and write the scattered
     /// state into `out` (`state_cols` per row).
@@ -363,17 +366,17 @@ pub trait LevelCell: Sync {
 use crate::vertex::interp::sigmoid;
 
 /// `out = a @ p` for one row (`p` row-major `[a.len(), n]`): zeroed
-/// accumulation, k-outer / j-inner, skipping zero inputs — the exact
-/// loop the Program interpreter's MatMul performs, which is what makes
-/// the hand-written cells bitwise identical to interpretation.
+/// accumulation, k-outer / j-inner — the exact loop the Program
+/// interpreter's MatMul performs, which is what makes the hand-written
+/// cells bitwise identical to interpretation. (An earlier `v != 0.0`
+/// skip was removed in lockstep with the interpreter's: it defeated
+/// vectorization of the inner loop — see `exec::kernels::scalar`.)
 fn matvec_acc(a: &[f32], p: &[f32], n: usize, out: &mut [f32]) {
     out.fill(0.0);
     for (k, &v) in a.iter().enumerate() {
-        if v != 0.0 {
-            let prow = &p[k * n..(k + 1) * n];
-            for (o, &w) in out.iter_mut().zip(prow) {
-                *o += v * w;
-            }
+        let prow = &p[k * n..(k + 1) * n];
+        for (o, &w) in out.iter_mut().zip(prow) {
+            *o += v * w;
         }
     }
 }

@@ -116,11 +116,11 @@ USAGE:
                [--save ckpt] [--load ckpt]
   cavs eval    [--config cfg.json] [--threads N] [--set k=v ...]
   cavs serve   [--config cfg.json] [--cell NAME] [--threads N] [--set k=v ...]
-  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|micro|loc|all
+  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|micro|kernel|loc|all
                [--scale 1.0] [--full true] [--threads N] [--cell NAME]
-               [--tiny true]   (serve/train/micro: bounded CI smoke)
+               [--tiny true]   (serve/train/micro/kernel: bounded CI smoke)
                [--check baseline.json] [--check-update baseline.json]
-               [--tolerance 0.2]   (serve/train/micro: regression gate)
+               [--tolerance 0.2]   (serve/train/micro/kernel: regression gate)
   cavs inspect [--set artifacts_dir=...]
   cavs analyze [--cell treelstm] [--set h=256]
   cavs cells   [--set h=256]
@@ -165,12 +165,18 @@ The cell is an **open API**: `vertex::Program` is the single source of
 
 The host interpreter compiles F by default (vertex::opt: DCE + CSE +
   gate-GEMM concatenation + view folding + elementwise fusion, executed
-  per frontier level as row-blocked GEMM / fused sweeps). Results are
-  bitwise identical to the uncompiled interpreter; `--set no_opt=true`
-  (or opt=off) is the A/B escape hatch. `cavs bench --exp micro`
-  measures the win; in CI every push re-measures the micro/train/serve
-  tiny sweeps and `--check results/baselines/<f>.json` fails the build
-  on a >20% regression (refresh with --check-update).
+  per frontier level as packed SIMD GEMM / fused sweeps; runtime CPU
+  dispatch picks AVX2/NEON kernels with a scalar fallback, DESIGN.md
+  §11). Results are bitwise identical to the uncompiled interpreter;
+  `--set no_opt=true` (or opt=off) is the A/B escape hatch. `--set
+  math=fast` swaps the exact libm sigmoid/tanh for vectorized
+  polynomial approximations (~1e-5 relative error, gradcheck-verified;
+  `exact` is the default and stays bitwise reproducible). `cavs bench
+  --exp micro` measures the compiled win, `--exp kernel` the
+  scalar-vs-SIMD microkernel win; in CI every push re-measures the
+  micro/train/serve/kernel tiny sweeps and `--check
+  results/baselines/<f>.json` fails the build on a >20% regression
+  (refresh with --check-update).
 
 `cavs bench` writes machine-readable results/BENCH_<exp>.json next to
   the results/*.{{txt,csv}} tables, each stamped with the git revision,
@@ -180,12 +186,11 @@ The host interpreter compiles F by default (vertex::opt: DCE + CSE +
 Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
   lazy_batching, fusion, streaming, threads, pool, opt, no_opt,
+  math (exact|fast),
   serve.policy, serve.max_batch, serve.deadline_ms, serve.queue_cap,
   serve.adaptive_max_batch, serve.agreement_lookahead,
   serve.slo_interactive_ms, serve.slo_standard_ms, serve.slo_bulk_ms,
-  artifacts_dir
-  (deprecated aliases, one release: serve_max_batch, serve_deadline_ms,
-  serve_queue_cap)"
+  artifacts_dir"
     );
 }
 
@@ -296,7 +301,7 @@ fn cmd_train_host(args: &Args, cfg: &Config) -> Result<()> {
         data.len(),
         data.total_vertices()
     );
-    host::train_host_epochs(
+    host::train_host_epochs_math(
         &spec,
         &data,
         cfg.batch_size,
@@ -305,6 +310,7 @@ fn cmd_train_host(args: &Args, cfg: &Config) -> Result<()> {
         cfg.threads,
         cfg.seed,
         cfg.opt,
+        cfg.math,
         |log| {
             println!(
                 "epoch {:3}  loss {:.4}  {:.2}s  ({} vertices)",
@@ -431,8 +437,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.artifacts_dir, cfg.cell
         );
         if cfg.opt {
-            let exec =
-                HostExec::from_spec(&spec, cfg.vocab, cfg.threads, cfg.seed)?;
+            let exec = HostExec::from_spec_math(
+                &spec, cfg.vocab, cfg.threads, cfg.seed, cfg.math,
+            )?;
             demo(exec, &serve, &graphs, total, concurrency, &stamp)
         } else {
             info!("no_opt set: reference per-row interpreter (A/B baseline)");
@@ -463,10 +470,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .unwrap_or(false),
         threads: cfg.threads,
     };
-    // the three host-only (artifact-free) experiments: every one can be
+    // the four host-only (artifact-free) experiments: every one can be
     // gated against a committed baseline with --check, and --check-update
     // refreshes that baseline in place
-    if matches!(exp, "serve" | "train" | "micro") {
+    if matches!(exp, "serve" | "train" | "micro" | "kernel") {
         let t = match exp {
             // host-cell serving sweep: needs no artifact set (and
             // therefore no Runtime), so the CI smoke runs on clean
@@ -475,6 +482,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             // host-interpreter training curve for any registered cell —
             // the open-API smoke (`--cell gru --tiny true` in CI)
             "train" => experiments::train_host(&cfg.cell, scale, tiny, cfg.opt)?,
+            // scalar vs SIMD microkernel sweep (packed GEMM, din,
+            // activations) — the dispatch layer's regression instrument
+            "kernel" => experiments::kernel(scale, tiny)?,
             // compiled-F vs reference-interpreter speedup sweep — the
             // optimizer's regression instrument
             _ => experiments::micro(scale, tiny)?,

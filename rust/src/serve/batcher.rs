@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 use crate::graph::GraphBatch;
 use crate::scheduler::{pick_bucket, stats, Task};
 
-use super::policy::{Decision, Fixed, FormPolicy, PolicyCtx};
+use super::policy::{Decision, FormPolicy, PolicyCtx};
 use super::queue::{QueueWait, RequestQueue};
 use super::Request;
 
@@ -35,25 +35,6 @@ const IDLE_WAIT_SLICE: Duration = Duration::from_millis(25);
 /// Arrival-rate EWMA time constant: observations older than a few τ stop
 /// mattering, so the rate tracks load shifts within ~100ms.
 const RATE_TAU_S: f64 = 0.05;
-
-/// The original hardcoded deadline/max-batch pair.
-#[deprecated(
-    since = "0.6.0",
-    note = "construct a `serve::Fixed` policy (or any other `FormPolicy`) \
-            and pass it to `Server::with_policy`"
-)]
-#[derive(Debug, Clone, Copy)]
-pub struct BatchPolicy {
-    pub max_batch: usize,
-    pub max_delay: Duration,
-}
-
-#[allow(deprecated)]
-impl From<BatchPolicy> for Fixed {
-    fn from(p: BatchPolicy) -> Fixed {
-        Fixed { max_batch: p.max_batch, max_delay: p.max_delay }
-    }
-}
 
 /// Forms batches out of a [`RequestQueue`] by consulting a
 /// [`FormPolicy`], over a persistent pending-request arena.
@@ -330,17 +311,5 @@ mod tests {
         }
         served.sort_unstable();
         assert_eq!(served, vec![0, 1, 2, 3], "every request served once");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_batch_policy_converts_to_fixed() {
-        let old = BatchPolicy {
-            max_batch: 6,
-            max_delay: Duration::from_millis(3),
-        };
-        let fixed: Fixed = old.into();
-        assert_eq!(fixed.max_batch, 6);
-        assert_eq!(fixed.max_delay, Duration::from_millis(3));
     }
 }

@@ -48,8 +48,6 @@ pub mod policy;
 pub mod queue;
 pub mod server;
 
-#[allow(deprecated)]
-pub use batcher::BatchPolicy;
 pub use batcher::{BatchFormer, BatchPlan};
 pub use metrics::{ServeMetrics, ServeReport};
 pub use policy::{
@@ -103,9 +101,9 @@ impl Class {
 
 /// Typed serving configuration (the `serve.*` config-file section /
 /// `--set serve.*=…` CLI keys): which [`FormPolicy`] forms batches and
-/// its parameters. Replaces the flat `serve_max_batch` /
-/// `serve_deadline_ms` / `serve_queue_cap` knobs (still accepted as
-/// deprecated aliases for one release).
+/// its parameters. The flat `serve_max_batch` / `serve_deadline_ms` /
+/// `serve_queue_cap` spellings rode through one release as deprecated
+/// aliases and are now rejected as unknown keys.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// Which batch-forming policy serves (`serve.policy`, also the

@@ -1,11 +1,10 @@
 //! Pluggable batch-forming policies: the `FormPolicy` trait and the three
 //! shipped implementations.
 //!
-//! The seed server hardcoded one deadline/max-batch pair
-//! ([`BatchPolicy`](super::batcher::BatchPolicy), now deprecated), which
-//! sacrifices p99 at low load (every lone request waits the full
-//! deadline) and throughput at saturation (the batch cap cannot grow with
-//! the backlog). [`FormPolicy`] opens that decision: the former hands the
+//! The seed server hardcoded one deadline/max-batch pair (the since
+//! removed `BatchPolicy` struct), which sacrifices p99 at low load
+//! (every lone request waits the full deadline) and throughput at
+//! saturation (the batch cap cannot grow with the backlog). [`FormPolicy`] opens that decision: the former hands the
 //! policy a [`PolicyCtx`] view — the pending request pool, queue depth,
 //! an arrival-rate EWMA, a per-request service-time EWMA — and the policy
 //! decides **when to cut** a batch ([`FormPolicy::decide`]) and **which

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use crate::exec::parallel::{HostCell, HostFrontier, HostTreeFc};
 use crate::exec::pool::{Sharder, WorkerPool};
-use crate::exec::{Engine, EngineOpts};
+use crate::exec::{Engine, EngineOpts, MathMode};
 use crate::graph::GraphBatch;
 use crate::models::{CellSpec, Model};
 use crate::runtime::Runtime;
@@ -98,8 +98,21 @@ impl HostExec<ProgramCell> {
         threads: usize,
         seed: u64,
     ) -> Result<HostExec<ProgramCell>> {
+        HostExec::from_spec_math(spec, vocab, threads, seed, MathMode::Exact)
+    }
+
+    /// [`HostExec::from_spec`] with an explicit math mode: `fast` serves
+    /// through the vectorized polynomial activations (`--set math=fast`,
+    /// DESIGN.md §11) instead of the bitwise-exact `libm` path.
+    pub fn from_spec_math(
+        spec: &CellSpec,
+        vocab: usize,
+        threads: usize,
+        seed: u64,
+        math: MathMode,
+    ) -> Result<HostExec<ProgramCell>> {
         let mut rng = Rng::new(seed);
-        let cell = spec.random_cell(&mut rng, 0.08)?;
+        let cell = spec.random_cell_math(&mut rng, 0.08, math)?;
         let xtable: Vec<f32> =
             (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
         Ok(HostExec::with_cell(cell, xtable, threads))
@@ -220,19 +233,6 @@ pub struct Server<E, P: FormPolicy = Fixed> {
     merged: GraphBatch,
     preds: Vec<Prediction>,
     pub metrics: ServeMetrics,
-}
-
-impl<E: ForwardExec> Server<E, Fixed> {
-    /// Construct with the original deadline/max-batch policy struct.
-    #[deprecated(
-        since = "0.6.0",
-        note = "use `Server::with_policy(exec, serve::Fixed { .. })` (or \
-                any other `FormPolicy`)"
-    )]
-    #[allow(deprecated)]
-    pub fn new(exec: E, policy: super::batcher::BatchPolicy) -> Server<E, Fixed> {
-        Server::with_policy(exec, Fixed::from(policy))
-    }
 }
 
 impl<E: ForwardExec, P: FormPolicy> Server<E, P> {
@@ -482,25 +482,6 @@ mod tests {
         // drained queue and reports closure instead of re-erroring
         let r = server.step(&q, &mut |_resp| {});
         assert!(matches!(r, Ok(false)), "{r:?}");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_construction_path_still_serves() {
-        use crate::serve::BatchPolicy;
-        let exec = HostExec::tree_fc(6, 2, 20, 1, 7);
-        let mut server = Server::new(
-            exec,
-            BatchPolicy { max_batch: 4, max_delay: Duration::ZERO },
-        );
-        let q = RequestQueue::bounded(8);
-        for r in mixed_requests(5) {
-            q.try_enqueue(r).unwrap();
-        }
-        q.close();
-        let mut n = 0;
-        server.run(&q, |_| n += 1).unwrap();
-        assert_eq!(n, 5);
     }
 
     #[test]

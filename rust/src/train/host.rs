@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::exec::parallel::HostFrontier;
 use crate::exec::pool::{Sharder, WorkerPool};
+use crate::exec::MathMode;
 use crate::graph::{Dataset, GraphBatch, InputGraph};
 use crate::models::CellSpec;
 use crate::scheduler::{self, Policy};
@@ -54,10 +55,25 @@ impl HostTrainer {
         seed: u64,
         opt: bool,
     ) -> Result<HostTrainer> {
+        HostTrainer::new_math(spec, vocab, threads, seed, opt, MathMode::Exact)
+    }
+
+    /// [`HostTrainer::new`] with an explicit math mode: `fast` trains
+    /// through the vectorized polynomial activations (`--set math=fast`,
+    /// DESIGN.md §11). The reference per-row path (`opt = false`) has no
+    /// kernel table, so `math` only applies to the compiled cell.
+    pub fn new_math(
+        spec: &CellSpec,
+        vocab: usize,
+        threads: usize,
+        seed: u64,
+        opt: bool,
+        math: MathMode,
+    ) -> Result<HostTrainer> {
         let threads = threads.max(1);
         let mut rng = Rng::new(seed);
         let cell = if opt {
-            spec.random_cell(&mut rng, 0.08)?
+            spec.random_cell_math(&mut rng, 0.08, math)?
         } else {
             spec.random_cell_unoptimized(&mut rng, 0.08)?
         };
@@ -133,9 +149,38 @@ pub fn train_host_epochs(
     threads: usize,
     seed: u64,
     opt: bool,
+    on_epoch: impl FnMut(&HostEpoch),
+) -> Result<Vec<HostEpoch>> {
+    train_host_epochs_math(
+        spec,
+        data,
+        bs,
+        lr,
+        epochs,
+        threads,
+        seed,
+        opt,
+        MathMode::Exact,
+        on_epoch,
+    )
+}
+
+/// [`train_host_epochs`] with an explicit math mode (`--set math=fast`
+/// routes here from the CLI).
+pub fn train_host_epochs_math(
+    spec: &CellSpec,
+    data: &Dataset,
+    bs: usize,
+    lr: f32,
+    epochs: usize,
+    threads: usize,
+    seed: u64,
+    opt: bool,
+    math: MathMode,
     mut on_epoch: impl FnMut(&HostEpoch),
 ) -> Result<Vec<HostEpoch>> {
-    let mut trainer = HostTrainer::new(spec, data.vocab, threads, seed, opt)?;
+    let mut trainer =
+        HostTrainer::new_math(spec, data.vocab, threads, seed, opt, math)?;
     let mut logs = Vec::with_capacity(epochs);
     for epoch in 0..epochs {
         let t0 = std::time::Instant::now();

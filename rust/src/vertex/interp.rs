@@ -32,14 +32,15 @@ use anyhow::{bail, Result};
 
 use super::opt::{OptProgram, OptStats, Step, WideGemm};
 use super::{OpKind, OpNode, Program, ProgramMeta};
+use crate::exec::kernels::{self, Kernels, MathMode, Variant};
 use crate::exec::parallel::{HostCell, LevelCell};
 use crate::util::rng::Rng;
 
-/// The logistic function shared by the interpreter and the hand-written
-/// host cells (one definition so equivalence is bitwise by construction).
-pub fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
+/// The logistic function shared by the interpreter, the hand-written
+/// host cells and the exact activation kernels (one definition — it
+/// lives in `exec::kernels::act` — so equivalence is bitwise by
+/// construction).
+pub use crate::exec::kernels::act::sigmoid;
 
 /// A validated program bound to host parameter tensors: a generic
 /// [`HostCell`] that executes F by interpretation — either through the
@@ -65,21 +66,27 @@ pub struct ProgramCell {
 }
 
 /// An [`OptProgram`] bound to this cell's parameters: the
-/// column-concatenated weight matrices of every merged GEMM, built once
-/// at bind time (and refreshed by [`ProgramCell::sync_opt`] after an
+/// column-concatenated weight matrices of every merged GEMM plus their
+/// SIMD-packed forms and the resolved kernel table, all built once at
+/// bind time (and refreshed by [`ProgramCell::sync_opt`] after an
 /// optimizer step mutates the underlying parameters).
 struct OptBound {
     plan: Arc<OptProgram>,
     /// per-[`WideGemm`] concatenated `[k, n]` weights; empty for
     /// single-segment GEMMs (those read the declared parameter directly)
     wide_w: Vec<Vec<f32>>,
+    /// per-[`WideGemm`] panel-packed weights for the SIMD forward GEMM
+    /// ([`kernels::fill_panels`]), packed from `wide_w` or the declared
+    /// parameter
+    panels: Vec<Vec<f32>>,
+    /// per-parameter `[n, k]` transposed weights for the SIMD MatMul
+    /// data-gradient ([`kernels::fill_transpose`]); empty for parameters
+    /// no MatMul node reads
+    wt: Vec<Vec<f32>>,
+    /// GEMM/din/activation kernels resolved at bind time by runtime CPU
+    /// detection ([`Variant::detect`]) and the cell's [`MathMode`]
+    kernels: Kernels,
 }
-
-/// Row-block size for the level GEMM sweeps: each weight row is streamed
-/// once per block instead of once per vertex row. Blocking never touches
-/// an output element's k-reduction order, so results stay bitwise
-/// identical at any block size.
-const GEMM_ROW_BLOCK: usize = 4;
 
 /// The one Gaussian parameter-init stream (used by every constructor and
 /// by `CellSpec::random_cell*`): the compiled-vs-reference equivalence
@@ -119,6 +126,46 @@ fn fill_wide(w: &WideGemm, params: &[Vec<f32>], buf: &mut [f32]) {
         }
         off += seg.cols;
     }
+}
+
+/// The row-major weights a [`WideGemm`] multiplies by: the interleaved
+/// wide matrix for merged GEMMs, the declared parameter otherwise.
+fn wide_weights<'a>(w: &WideGemm, wide_w: &'a [f32], params: &'a [Vec<f32>]) -> &'a [f32] {
+    if w.segs.len() >= 2 {
+        wide_w
+    } else {
+        &params[w.segs[0].param]
+    }
+}
+
+/// Panel-pack every wide GEMM's weights for the SIMD forward kernels.
+fn bind_panels(plan: &OptProgram, params: &[Vec<f32>], wide_w: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    plan.wide
+        .iter()
+        .zip(wide_w)
+        .map(|(w, ww)| {
+            let mut buf = vec![0.0f32; kernels::panel_len(w.k, w.n)];
+            kernels::fill_panels(wide_weights(w, ww, params), w.k, w.n, &mut buf);
+            buf
+        })
+        .collect()
+}
+
+/// Transpose-pack every MatMul-read parameter for the SIMD din kernels.
+fn bind_wt(plan: &OptProgram, params: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut wt: Vec<Vec<f32>> = params.iter().map(|_| Vec::new()).collect();
+    for node in &plan.nodes {
+        if let OpKind::MatMul { param } = node.kind {
+            if wt[param].is_empty() {
+                let k = plan.nodes[node.ins[0]].cols;
+                let n = node.cols;
+                let mut buf = vec![0.0f32; k * n];
+                kernels::fill_transpose(&params[param], k, n, &mut buf);
+                wt[param] = buf;
+            }
+        }
+    }
+    wt
 }
 
 /// Shared-read view of a tape region through its raw base pointer.
@@ -199,7 +246,10 @@ impl ProgramCell {
         debug_assert_eq!(plan.name, program.name, "plan/program mismatch");
         let mut c = ProgramCell::new(program, params)?;
         let wide_w = bind_wide(&plan, &c.params);
-        c.opt = Some(OptBound { plan, wide_w });
+        let panels = bind_panels(&plan, &c.params, &wide_w);
+        let wt = bind_wt(&plan, &c.params);
+        let kernels = Kernels::resolve(MathMode::Exact);
+        c.opt = Some(OptBound { plan, wide_w, panels, wt, kernels });
         Ok(c)
     }
 
@@ -236,10 +286,11 @@ impl ProgramCell {
         self.opt.as_ref().map(|o| &*o.plan)
     }
 
-    /// Re-interleave the merged GEMM weights from the (possibly mutated)
-    /// parameter tensors. Call after every optimizer step that writes
-    /// through [`ProgramCell::params_mut`]; allocation-free, and a no-op
-    /// for plans without merged GEMMs or on the reference path.
+    /// Re-interleave the merged GEMM weights — and refresh their SIMD
+    /// packs — from the (possibly mutated) parameter tensors. Call after
+    /// every optimizer step that writes through
+    /// [`ProgramCell::params_mut`]; allocation-free (every pack refills
+    /// its bind-time buffer in place), and a no-op on the reference path.
     pub fn sync_opt(&mut self) {
         let params = &self.params;
         if let Some(o) = &mut self.opt {
@@ -249,7 +300,54 @@ impl ProgramCell {
                     fill_wide(w, params, &mut o.wide_w[i]);
                 }
             }
+            for (i, w) in plan.wide.iter().enumerate() {
+                let src = wide_weights(w, &o.wide_w[i], params);
+                kernels::fill_panels(src, w.k, w.n, &mut o.panels[i]);
+            }
+            for node in &plan.nodes {
+                if let OpKind::MatMul { param } = node.kind {
+                    if !o.wt[param].is_empty() {
+                        let k = plan.nodes[node.ins[0]].cols;
+                        let n = node.cols;
+                        kernels::fill_transpose(&params[param], k, n, &mut o.wt[param]);
+                    }
+                }
+            }
         }
+    }
+
+    /// Switch exact/fast math for the compiled path (the reference path
+    /// is always exact). Re-resolves the kernel table in place —
+    /// allocation-free; a no-op on the reference path.
+    pub fn set_math(&mut self, math: MathMode) {
+        if let Some(o) = &mut self.opt {
+            o.kernels = Kernels::for_variant(o.kernels.variant, math);
+        }
+    }
+
+    /// The compiled path's math mode (reference cells report `Exact`).
+    pub fn math(&self) -> MathMode {
+        self.opt.as_ref().map_or(MathMode::Exact, |o| o.kernels.math)
+    }
+
+    /// Force a specific kernel [`Variant`] through the dispatch table
+    /// (dispatch tests and the scalar-vs-simd bench columns). Returns
+    /// `false` — leaving the table untouched — if the CPU doesn't
+    /// support the variant or this is a reference cell.
+    pub fn set_kernel_variant(&mut self, variant: Variant) -> bool {
+        match &mut self.opt {
+            Some(o) if variant.available() => {
+                o.kernels = Kernels::for_variant(variant, o.kernels.math);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The kernel variant the compiled path dispatches to (None on the
+    /// reference path).
+    pub fn kernel_variant(&self) -> Option<Variant> {
+        self.opt.as_ref().map(|o| o.kernels.variant)
     }
 
     pub fn program(&self) -> &Program {
@@ -288,15 +386,13 @@ impl ProgramCell {
                     let n = node.cols;
                     let a = &lo[self.off[node.ins[0]]..][..k];
                     let p = &self.params[*param];
-                    // identical loop shape (k-outer, j-inner, skip-zero)
-                    // to the hand-written host cells: bitwise equal sums
+                    // identical loop shape (k-outer, j-inner) to the
+                    // hand-written host cells: bitwise equal sums
                     out.fill(0.0);
                     for (kk, &v) in a.iter().enumerate() {
-                        if v != 0.0 {
-                            let prow = &p[kk * n..(kk + 1) * n];
-                            for (o, &w) in out.iter_mut().zip(prow) {
-                                *o += v * w;
-                            }
+                        let prow = &p[kk * n..(kk + 1) * n];
+                        for (o, &w) in out.iter_mut().zip(prow) {
+                            *o += v * w;
                         }
                     }
                 }
@@ -539,26 +635,14 @@ impl ProgramCell {
             }
             Step::Gemm { wide } => {
                 let w = &p.wide[*wide];
-                let weights: &[f32] = if w.segs.len() >= 2 {
-                    &o.wide_w[*wide]
-                } else {
-                    &self.params[w.segs[0].param]
-                };
-                // SAFETY: a GEMM's output storage is disjoint from its
-                // input's (layout invariant).
-                let a = unsafe { region(base as *const f32, p.addr[w.input], w.k) };
-                let out = unsafe { region_mut(base, p.addr[w.segs[0].node], w.n) };
-                // identical loop shape (k-outer, j-inner, skip-zero) to
-                // the reference MatMul: bitwise equal sums per column
-                out.fill(0.0);
-                for (kk, &v) in a.iter().enumerate() {
-                    if v != 0.0 {
-                        let prow = &weights[kk * w.n..(kk + 1) * w.n];
-                        for (ov, &pw) in out.iter_mut().zip(prow) {
-                            *ov += v * pw;
-                        }
-                    }
-                }
+                let weights = wide_weights(w, &o.wide_w[*wide], &self.params);
+                let (src, dst) = (p.addr[w.input], p.addr[w.segs[0].node]);
+                // one-row dispatch into the kernel table: the scalar
+                // variant is the reference MatMul loop shape (k-outer,
+                // j-inner), the SIMD exact variants reproduce its
+                // per-element operation order — bitwise equal sums
+                let stride = tape.len();
+                (o.kernels.gemm)(tape, stride, 1, src, dst, w.k, w.n, weights, &o.panels[*wide]);
             }
             Step::Fused { group } => {
                 let g = &p.fused[*group];
@@ -592,15 +676,11 @@ impl ProgramCell {
                         }
                         OpKind::Sigmoid => {
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
-                            for (ov, &av) in out.iter_mut().zip(a) {
-                                *ov = sigmoid(av);
-                            }
+                            (o.kernels.sigmoid)(out, a);
                         }
                         OpKind::Tanh => {
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
-                            for (ov, &av) in out.iter_mut().zip(a) {
-                                *ov = av.tanh();
-                            }
+                            (o.kernels.tanh)(out, a);
                         }
                         OpKind::OneMinus => {
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
@@ -794,6 +874,13 @@ impl ProgramCell {
                     let a = &tape[p.addr[node.ins[0]]..][..k];
                     let g = &adj[p.aoff[i]..][..n];
                     let dst = &mut pg[*param];
+                    // the `v != 0.0` gate survives *only* here: gradient
+                    // rows for zero activations are whole-row no-ops, and
+                    // skipping the k·n row write still wins in the
+                    // `bench --exp micro` fwd+bwd column — unlike the
+                    // GEMM/din inner loops, where the same branch
+                    // defeated vectorization for no measured gain and was
+                    // removed (see `exec::kernels::scalar`)
                     for (kk, &v) in a.iter().enumerate() {
                         if v != 0.0 {
                             let drow = &mut dst[kk * n..(kk + 1) * n];
@@ -815,50 +902,22 @@ impl ProgramCell {
         }
     }
 
-    /// Row-blocked level GEMM: streams each weight row once per
-    /// [`GEMM_ROW_BLOCK`] vertex rows. Raw access only — each row's
-    /// output region is disjoint from its input region and from every
-    /// other row.
+    /// Row-blocked level GEMM through the dispatch table: the selected
+    /// kernel register-blocks [`kernels::GEMM_ROW_BLOCK`] vertex rows
+    /// against the bind-time weight panels (SIMD variants) or streams
+    /// each weight row once per block (scalar variant).
     fn gemm_rows(&self, o: &OptBound, wi: usize, tape: &mut [f32], tc: usize, m: usize) {
         let p = &*o.plan;
         let w = &p.wide[wi];
-        let weights: &[f32] = if w.segs.len() >= 2 {
-            &o.wide_w[wi]
-        } else {
-            &self.params[w.segs[0].param]
-        };
-        let src = p.addr[w.input];
-        let dst = p.addr[w.segs[0].node];
-        let (k, n) = (w.k, w.n);
-        let base = tape.as_mut_ptr();
-        let mut r0 = 0usize;
-        while r0 < m {
-            let rb = (m - r0).min(GEMM_ROW_BLOCK);
-            for r in r0..r0 + rb {
-                // SAFETY: row r's output region, in bounds and disjoint.
-                unsafe { region_mut(base, r * tc + dst, n) }.fill(0.0);
-            }
-            for kk in 0..k {
-                let wrow = &weights[kk * n..(kk + 1) * n];
-                for r in r0..r0 + rb {
-                    // SAFETY: in-bounds scalar read of row r's input.
-                    let v = unsafe { *base.add(r * tc + src + kk) };
-                    if v != 0.0 {
-                        // SAFETY: row r's output region again.
-                        let outr = unsafe { region_mut(base, r * tc + dst, n) };
-                        for (ov, &pw) in outr.iter_mut().zip(wrow) {
-                            *ov += v * pw;
-                        }
-                    }
-                }
-            }
-            r0 += rb;
-        }
+        let weights = wide_weights(w, &o.wide_w[wi], &self.params);
+        let (src, dst) = (p.addr[w.input], p.addr[w.segs[0].node]);
+        (o.kernels.gemm)(tape, tc, m, src, dst, w.k, w.n, weights, &o.panels[wi]);
     }
 
-    /// Row-blocked level MatMul data-gradient: `din[k] += Σ_j g[j]·W[k,j]`
-    /// per row, weight rows streamed once per block. Per-element reduction
-    /// order (j ascending) is the reference order.
+    /// Row-blocked level MatMul data-gradient through the dispatch
+    /// table: `din[k] += Σ_j g[j]·W[k,j]` per row, with the SIMD variants
+    /// reading the bind-time transposed pack. Per-element reduction order
+    /// (j ascending) is the reference order in every variant.
     fn matmul_din_rows(
         &self,
         o: &OptBound,
@@ -875,30 +934,8 @@ impl ProgramCell {
         };
         let k = p.nodes[node.ins[0]].cols;
         let n = node.cols;
-        let g0 = p.aoff[i];
-        let d0 = p.aoff[node.ins[0]];
-        let pm = &self.params[param];
-        let base = adj.as_mut_ptr();
-        let mut r0 = 0usize;
-        while r0 < m {
-            let rb = (m - r0).min(GEMM_ROW_BLOCK);
-            for kk in 0..k {
-                let prow = &pm[kk * n..(kk + 1) * n];
-                for r in r0..r0 + rb {
-                    // SAFETY: row r's adjoint-of-output region (shared
-                    // read) and the disjoint din scalar (write).
-                    let g = unsafe { region(base as *const f32, r * lac + g0, n) };
-                    let mut acc = 0.0f32;
-                    for (j, &wv) in prow.iter().enumerate() {
-                        acc += g[j] * wv;
-                    }
-                    unsafe {
-                        *base.add(r * lac + d0 + kk) += acc;
-                    }
-                }
-            }
-            r0 += rb;
-        }
+        let (g0, d0) = (p.aoff[i], p.aoff[node.ins[0]]);
+        (o.kernels.din)(adj, lac, m, g0, d0, k, n, &self.params[param], &o.wt[param]);
     }
 
     /// Level forward over a row range: op-outer, row-inner — each (fused)
@@ -906,7 +943,7 @@ impl ProgramCell {
     fn lvl_eval(&self, o: &OptBound, rows: &Range<usize>, x: &[f32], s: &[f32], tape: &mut [f32]) {
         let p = &*o.plan;
         let (xc, asc) = (p.meta.x_cols, p.meta.arity * p.meta.state_cols);
-        let tc = p.tape_cols;
+        let tc = p.tape_stride;
         let m = rows.len();
         for step in &p.steps {
             match step {
@@ -1084,16 +1121,20 @@ impl HostCell for ProgramCell {
 /// Frontier-level execution of the compiled schedule: `HostFrontier`
 /// hands each worker shard a contiguous row range of the level's blocks
 /// and the cell runs every (fused) op as a row-sharded batched
-/// GEMM / fused elementwise sweep — op-outer, row-inner, weight rows
-/// streamed once per row block. Bitwise identical to the per-row path
-/// (which is itself bitwise identical to the reference interpreter).
+/// GEMM / fused elementwise sweep — op-outer, row-inner, with the GEMM
+/// and MatMul-din loops dispatched to the SIMD microkernels in
+/// `exec::kernels` (register-blocked rows against bind-time weight
+/// packs). Rows are laid out at the plan's cache-line-padded
+/// `tape_stride`/`adj_stride` pitch. In exact math the result is bitwise
+/// identical to the per-row path (which is itself bitwise identical to
+/// the reference interpreter).
 impl LevelCell for ProgramCell {
     fn lvl_tape_cols(&self) -> usize {
-        self.opt.as_ref().map_or(0, |o| o.plan.tape_cols)
+        self.opt.as_ref().map_or(0, |o| o.plan.tape_stride)
     }
 
     fn lvl_adj_cols(&self) -> usize {
-        self.opt.as_ref().map_or(0, |o| o.plan.adj_cols)
+        self.opt.as_ref().map_or(0, |o| o.plan.adj_stride)
     }
 
     fn lvl_forward(
@@ -1106,7 +1147,7 @@ impl LevelCell for ProgramCell {
     ) {
         let o = self.opt.as_ref().expect("level execution needs a compiled plan");
         let p = &*o.plan;
-        let (sc, tc) = (p.meta.state_cols, p.tape_cols);
+        let (sc, tc) = (p.meta.state_cols, p.tape_stride);
         let m = rows.len();
         self.lvl_eval(o, &rows, x, s, tape);
         let src = p.addr[p.scatter_src];
@@ -1130,7 +1171,7 @@ impl LevelCell for ProgramCell {
         let p = &*o.plan;
         let sc = p.meta.state_cols;
         let (xc, asc) = (p.meta.x_cols, p.meta.arity * sc);
-        let (tc, lac) = (p.tape_cols, p.adj_cols);
+        let (tc, lac) = (p.tape_stride, p.adj_stride);
         let m = rows.len();
         // recompute the forward tape for these rows (blocked GEMMs)
         self.lvl_eval(o, &rows, x, s, tape);
@@ -1167,7 +1208,7 @@ impl LevelCell for ProgramCell {
 
     fn lvl_param_grads(&self, rows: usize, tape: &[f32], adj: &[f32], pg: &mut [Vec<f32>]) {
         let o = self.opt.as_ref().expect("level execution needs a compiled plan");
-        let (tc, lac) = (o.plan.tape_cols, o.plan.adj_cols);
+        let (tc, lac) = (o.plan.tape_stride, o.plan.adj_stride);
         for r in 0..rows {
             self.acc_pg_row(o, &tape[r * tc..(r + 1) * tc], &adj[r * lac..(r + 1) * lac], pg);
         }

@@ -146,6 +146,15 @@ pub struct OptProgram {
     pub tape_cols: usize,
     /// adjoint tape floats per row
     pub adj_cols: usize,
+    /// forward tape row pitch for *level* (multi-row) execution:
+    /// `tape_cols` rounded up to 16 floats (one 64-byte cache line) so a
+    /// worker shard's sub-block never shares a line with its neighbour's
+    /// and SIMD row bases stay line-aligned relative to each other. The
+    /// per-row [`HostCell`](crate::exec::parallel::HostCell) path keeps
+    /// the dense `tape_cols` pitch; the padding is never read
+    pub tape_stride: usize,
+    /// adjoint row pitch for level execution (see [`Self::tape_stride`])
+    pub adj_stride: usize,
     /// node whose value the scatter publishes
     pub scatter_src: usize,
     pub steps: Vec<Step>,
@@ -485,6 +494,8 @@ fn build(p: &Program, meta: ProgramMeta) -> Result<OptProgram> {
         aoff,
         tape_cols,
         adj_cols,
+        tape_stride: tape_cols.next_multiple_of(16),
+        adj_stride: adj_cols.next_multiple_of(16),
         scatter_src,
         steps,
         wide,

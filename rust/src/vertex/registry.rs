@@ -28,6 +28,7 @@ use anyhow::{bail, Context, Result};
 use super::interp::ProgramCell;
 use super::opt::{OptProgram, OptStats};
 use super::{programs, ParamSpec, Program, ProgramMeta};
+use crate::exec::kernels::MathMode;
 use crate::util::rng::Rng;
 
 type Builder = Arc<dyn Fn(usize) -> Program + Send + Sync>;
@@ -280,6 +281,31 @@ impl CellSpec {
     /// directly comparable.
     pub fn random_cell_unoptimized(&self, rng: &mut Rng, scale: f32) -> Result<ProgramCell> {
         ProgramCell::random(self.0.program.clone(), rng, scale)
+    }
+
+    /// [`CellSpec::instantiate`] with an explicit [`MathMode`] for the
+    /// compiled path's kernel table (`Exact` is the plain `instantiate`).
+    pub fn instantiate_math(
+        &self,
+        params: Vec<Vec<f32>>,
+        math: MathMode,
+    ) -> Result<ProgramCell> {
+        let mut cell = self.instantiate(params)?;
+        cell.set_math(math);
+        Ok(cell)
+    }
+
+    /// [`CellSpec::random_cell`] with an explicit [`MathMode`] — the same
+    /// parameter stream, so exact and fast cells are directly comparable.
+    pub fn random_cell_math(
+        &self,
+        rng: &mut Rng,
+        scale: f32,
+        math: MathMode,
+    ) -> Result<ProgramCell> {
+        let mut cell = self.random_cell(rng, scale)?;
+        cell.set_math(math);
+        Ok(cell)
     }
 }
 

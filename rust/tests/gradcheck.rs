@@ -8,6 +8,7 @@
 //! every push in CI.
 
 use cavs::exec::parallel::{run_host_frontier, HostCell};
+use cavs::exec::MathMode;
 use cavs::graph::{Dataset, GraphBatch, InputGraph};
 use cavs::models::CellSpec;
 use cavs::scheduler::{self, Policy};
@@ -52,6 +53,19 @@ fn assert_close(an: f64, fd: f64, what: &str) {
 /// runs the same check on the compiled `OptProgram` tape (views, wide
 /// GEMMs, fused sweeps) instead of the reference per-node tape.
 fn gradcheck_program_mode(program: Program, seed: u64, optimized: bool) {
+    gradcheck_program_math(program, seed, optimized, MathMode::Exact);
+}
+
+/// [`gradcheck_program_mode`] with an explicit math mode: `fast` swaps in
+/// the polynomial sigmoid/tanh kernels (DESIGN.md §11). The backward pass
+/// differentiates through the *approximated* forward values, so analytic
+/// and central-difference gradients still agree to the same 1e-3 bound.
+fn gradcheck_program_math(
+    program: Program,
+    seed: u64,
+    optimized: bool,
+    math: MathMode,
+) {
     let name = program.name.clone();
     let mut rng = Rng::new(seed);
     let mut cell = if optimized {
@@ -59,6 +73,7 @@ fn gradcheck_program_mode(program: Program, seed: u64, optimized: bool) {
     } else {
         ProgramCell::random(program, &mut rng, 0.2).unwrap()
     };
+    cell.set_math(math);
     let xc = cell.x_cols();
     let sc_all = cell.state_cols() * cell.arity();
     let x: Vec<f32> = (0..xc).map(|_| rng.normal_f32(0.5)).collect();
@@ -147,6 +162,26 @@ fn gradcheck_all_five_cells_on_optimized_tapes() {
     gradcheck_program_mode(programs::treefc_program(h), 23, true);
     gradcheck_program_mode(programs::gru_program(h), 24, true);
     gradcheck_program_mode(programs::cstreelstm_program(h), 25, true);
+}
+
+/// Acceptance for `--set math=fast`: the full FD gradcheck — gx, gs and
+/// every parameter tensor — passes the same 1e-3 relative bound for all
+/// five cells with the vectorized polynomial activations enabled. Fast
+/// math only exists on the compiled path (`optimized = true`); on a
+/// reference cell `set_math` is a no-op.
+#[test]
+fn gradcheck_all_five_cells_fast_math() {
+    let h = 5;
+    gradcheck_program_math(programs::lstm_program(h), 41, true, MathMode::Fast);
+    gradcheck_program_math(programs::treelstm_program(h), 42, true, MathMode::Fast);
+    gradcheck_program_math(programs::treefc_program(h), 43, true, MathMode::Fast);
+    gradcheck_program_math(programs::gru_program(h), 44, true, MathMode::Fast);
+    gradcheck_program_math(
+        programs::cstreelstm_program(h),
+        45,
+        true,
+        MathMode::Fast,
+    );
 }
 
 /// End-to-end frontier gradcheck: the whole choreography — pull, gather,

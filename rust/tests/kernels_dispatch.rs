@@ -1,0 +1,233 @@
+//! Runtime kernel-dispatch coverage for the SIMD microkernels
+//! (DESIGN.md §11). Exact math mode is a **bitwise** contract: every
+//! variant the host CPU supports — scalar always, AVX2+FMA or NEON when
+//! detected — must reproduce the reference interpreter's forward,
+//! backward and parameter-gradient results bit for bit, at the cell
+//! level and through the whole level-batched frontier. The exact SIMD
+//! kernels keep separate mul+add and per-lane scalar-order reductions
+//! precisely so this holds. Fast math is accepted by tolerance instead
+//! (the full finite-difference gradcheck lives in `gradcheck.rs`).
+
+use cavs::exec::parallel::{HostCell, HostFrontier};
+use cavs::exec::pool::Sharder;
+use cavs::exec::{MathMode, Variant};
+use cavs::graph::{synth, GraphBatch, InputGraph};
+use cavs::models::CellSpec;
+use cavs::scheduler::{schedule, Policy, Task};
+use cavs::util::rng::Rng;
+use cavs::vertex::interp::ProgramCell;
+use cavs::vertex::programs;
+
+/// Chains or shared trees sized so frontier levels span rows from 1 up
+/// past `GEMM_ROW_BLOCK`: the packed kernels hit both the blocked body
+/// and the remainder tail.
+fn build_batch(arity: usize, vocab: usize) -> (GraphBatch, Vec<Task>) {
+    let mut rng = Rng::new(97);
+    let graphs: Vec<InputGraph> = (0..6)
+        .map(|i| {
+            if arity >= 2 {
+                synth::random_binary_tree(&mut rng, vocab, 3 + i, 5)
+            } else {
+                let len = 3 + i;
+                let toks: Vec<i32> =
+                    (0..len).map(|_| rng.below(vocab) as i32).collect();
+                let labs = vec![-1; len];
+                InputGraph::chain(&toks, &labs)
+            }
+        })
+        .collect();
+    let refs: Vec<&InputGraph> = graphs.iter().collect();
+    let batch = GraphBatch::new(&refs, arity);
+    let tasks = schedule(&batch, Policy::Batched, &[1, 2, 4, 8, 16]);
+    (batch, tasks)
+}
+
+/// Full fwd+bwd+param-grad frontier pass; returns everything observable.
+fn run_frontier(
+    cell: &ProgramCell,
+    batch: &GraphBatch,
+    tasks: &[Task],
+    xtable: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<Vec<f32>>) {
+    let mut hf = HostFrontier::new();
+    hf.run(batch, tasks, cell, xtable, Sharder::Sequential, true);
+    (
+        hf.states().as_slice().to_vec(),
+        hf.grads().unwrap().as_slice().to_vec(),
+        hf.param_grads().unwrap().to_vec(),
+    )
+}
+
+/// Cell-level fwd+bwd+param-grads on one vertex (the per-row path).
+fn eval_cell(cell: &ProgramCell, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let xc = cell.x_cols();
+    let sc_all = cell.state_cols() * cell.arity();
+    let x: Vec<f32> = (0..xc).map(|_| rng.normal_f32(0.5)).collect();
+    let s: Vec<f32> = (0..sc_all).map(|_| rng.normal_f32(0.5)).collect();
+    let w: Vec<f32> =
+        (0..cell.state_cols()).map(|_| rng.normal_f32(1.0)).collect();
+    let mut out = vec![0.0f32; cell.state_cols()];
+    let mut ftmp = vec![0.0f32; cell.fwd_scratch_cols().max(1)];
+    cell.forward(&x, &s, &mut out, &mut ftmp);
+    let mut gx = vec![0.0f32; xc];
+    let mut gs = vec![0.0f32; sc_all];
+    let mut btmp = vec![0.0f32; cell.bwd_scratch_cols()];
+    cell.backward(&x, &s, &w, &mut gx, &mut gs, &mut btmp);
+    let mut pg: Vec<Vec<f32>> =
+        cell.params().iter().map(|p| vec![0.0; p.len()]).collect();
+    let mut ptmp = vec![0.0f32; cell.pg_scratch_cols()];
+    cell.acc_param_grads(&x, &s, &w, &mut pg, &mut ptmp);
+    (out, gx, gs, pg)
+}
+
+/// Every CPU-supported variant, forced through `set_kernel_variant`,
+/// reproduces the reference interpreter bit for bit on a whole
+/// level-batched frontier pass (exact mode): states, input gradients and
+/// accumulated parameter gradients. This is the invariant that lets
+/// `--set math=exact` (the default) stay bitwise reproducible across
+/// machines with different SIMD support.
+#[test]
+fn forced_variants_bitwise_match_reference_in_exact_mode() {
+    for name in ["gru", "treelstm"] {
+        let h = 8;
+        let vocab = 20usize;
+        let spec = CellSpec::lookup(name, h).unwrap();
+        let (batch, tasks) = build_batch(spec.arity(), vocab);
+
+        let mut rng = Rng::new(7);
+        let reference = spec.random_cell_unoptimized(&mut rng, 0.2).unwrap();
+        let xtable: Vec<f32> =
+            (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
+        let want = run_frontier(&reference, &batch, &tasks, &xtable);
+
+        for v in Variant::all() {
+            if !v.available() {
+                continue;
+            }
+            // same seed => identical parameters and embedding table
+            let mut rng = Rng::new(7);
+            let mut cell = spec.random_cell(&mut rng, 0.2).unwrap();
+            assert!(cell.set_kernel_variant(v), "{name}: {v:?} probed available");
+            assert_eq!(cell.kernel_variant(), Some(v));
+            assert_eq!(cell.math(), MathMode::Exact);
+            let got = run_frontier(&cell, &batch, &tasks, &xtable);
+            assert_eq!(got.0, want.0, "{name}/{}: states diverged", v.name());
+            assert_eq!(got.1, want.1, "{name}/{}: grads diverged", v.name());
+            assert_eq!(got.2, want.2, "{name}/{}: param grads diverged", v.name());
+        }
+    }
+}
+
+/// The same bitwise contract on the per-row (cell-level) entry points,
+/// for all five shipped cells — these feed the serving path's small
+/// batches, where the SIMD kernels run with `rows = 1`.
+#[test]
+fn forced_variants_bitwise_match_reference_per_row() {
+    let h = 6;
+    let cells = [
+        programs::lstm_program(h),
+        programs::treelstm_program(h),
+        programs::treefc_program(h),
+        programs::gru_program(h),
+        programs::cstreelstm_program(h),
+    ];
+    for program in cells {
+        let name = program.name.clone();
+        let mut rng = Rng::new(51);
+        let reference =
+            ProgramCell::random(program.clone(), &mut rng, 0.2).unwrap();
+        let want = eval_cell(&reference, 52);
+
+        for v in Variant::all() {
+            if !v.available() {
+                continue;
+            }
+            let mut rng = Rng::new(51);
+            let mut cell =
+                ProgramCell::random_optimized(program.clone(), &mut rng, 0.2)
+                    .unwrap();
+            assert!(cell.set_kernel_variant(v));
+            let got = eval_cell(&cell, 52);
+            assert_eq!(got, want, "{name}/{}: per-row results diverged", v.name());
+        }
+    }
+}
+
+/// Fast math trades bitwise identity for throughput: forced through the
+/// same dispatch table, its forward/backward results stay within a 1e-3
+/// relative bound of exact mode (the polynomial kernels themselves are
+/// accurate to ~1e-5; the bound leaves headroom for composition).
+#[test]
+fn fast_math_stays_within_tolerance_of_exact() {
+    let close = |a: &[f32], b: &[f32], what: &str| {
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let tol = 1e-3 * x.abs().max(y.abs()).max(1.0);
+            assert!(
+                (x - y).abs() <= tol,
+                "{what}[{i}]: fast {y} vs exact {x} (tol {tol})"
+            );
+        }
+    };
+    let h = 6;
+    for (seed, program) in
+        [(61, programs::gru_program(h)), (62, programs::treelstm_program(h))]
+    {
+        let name = program.name.clone();
+        let mut rng = Rng::new(seed);
+        let exact =
+            ProgramCell::random_optimized(program.clone(), &mut rng, 0.2)
+                .unwrap();
+        let want = eval_cell(&exact, seed + 100);
+
+        let mut rng = Rng::new(seed);
+        let mut cell =
+            ProgramCell::random_optimized(program, &mut rng, 0.2).unwrap();
+        cell.set_math(MathMode::Fast);
+        assert_eq!(cell.math(), MathMode::Fast);
+        let got = eval_cell(&cell, seed + 100);
+        close(&want.0, &got.0, &format!("{name} out"));
+        close(&want.1, &got.1, &format!("{name} gx"));
+        close(&want.2, &got.2, &format!("{name} gs"));
+        for (pi, (wp, gp)) in want.3.iter().zip(&got.3).enumerate() {
+            close(wp, gp, &format!("{name} param {pi}"));
+        }
+    }
+}
+
+/// Dispatch-control edge cases: unavailable variants are refused with the
+/// table untouched; reference cells have no kernel table at all, so both
+/// `set_kernel_variant` and `set_math` are inert on them.
+#[test]
+fn dispatch_controls_reject_unavailable_and_reference_cells() {
+    let h = 5;
+    let mut rng = Rng::new(71);
+    let mut opt =
+        ProgramCell::random_optimized(programs::gru_program(h), &mut rng, 0.2)
+            .unwrap();
+    assert!(opt.is_optimized());
+    let detected = Variant::detect();
+    assert!(detected.available());
+    assert_eq!(opt.kernel_variant(), Some(detected), "cells bind the detected variant");
+    for v in Variant::all() {
+        if v.available() {
+            assert!(opt.set_kernel_variant(v));
+            assert_eq!(opt.kernel_variant(), Some(v));
+        } else {
+            let before = opt.kernel_variant();
+            assert!(!opt.set_kernel_variant(v), "{v:?} must be refused");
+            assert_eq!(opt.kernel_variant(), before, "refusal left table untouched");
+        }
+    }
+    // scalar is universal: forcing it always succeeds
+    assert!(opt.set_kernel_variant(Variant::Scalar));
+
+    let mut rng = Rng::new(71);
+    let mut reference =
+        ProgramCell::random(programs::gru_program(h), &mut rng, 0.2).unwrap();
+    assert!(!reference.is_optimized());
+    assert_eq!(reference.kernel_variant(), None);
+    assert!(!reference.set_kernel_variant(Variant::Scalar), "no table to force");
+    reference.set_math(MathMode::Fast);
+    assert_eq!(reference.math(), MathMode::Exact, "set_math is a no-op off-plan");
+}

@@ -706,6 +706,94 @@ fn prop_optimized_matches_unoptimized_bitwise() {
     });
 }
 
+/// `--set math=fast` swaps the compiled path's sigmoid/tanh for the
+/// vectorized polynomial kernels (DESIGN.md §11). Outputs are no longer
+/// bitwise against exact mode, but on whole frontier batches they must
+/// stay within a tight relative bound — and fast mode must remain
+/// **bitwise thread-count invariant against itself**, since the kernel
+/// table changes the math, never the shard plan or reduction order.
+#[test]
+fn prop_fast_math_close_to_exact_and_thread_invariant() {
+    use cavs::exec::MathMode;
+    use cavs::models::CellSpec;
+
+    check("fast-math", 10, |rng| {
+        let vocab = 20usize;
+        let h = 2 + rng.below(7);
+        for cell in ["gru", "treelstm"] {
+            let spec = CellSpec::lookup(cell, h).unwrap();
+            let arity = spec.arity();
+            let graphs: Vec<InputGraph> = if arity == 1 {
+                let k = 1 + rng.below(6);
+                (0..k)
+                    .map(|_| {
+                        let len = 1 + rng.below(10);
+                        let toks: Vec<i32> =
+                            (0..len).map(|_| rng.below(vocab) as i32).collect();
+                        let labs = vec![-1; len];
+                        InputGraph::chain(&toks, &labs)
+                    })
+                    .collect()
+            } else {
+                random_graphs(rng)
+            };
+            let refs: Vec<&InputGraph> = graphs.iter().collect();
+            let batch = GraphBatch::new(&refs, arity);
+            let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+            let xtable: Vec<f32> =
+                (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+
+            // identical parameter stream on both sides
+            let mut prng = Rng::new(2000 + h as u64);
+            let exact = spec.random_cell(&mut prng, 0.2).unwrap();
+            let mut prng = Rng::new(2000 + h as u64);
+            let mut fast = spec.random_cell(&mut prng, 0.2).unwrap();
+            fast.set_math(MathMode::Fast);
+
+            let base = run_host_frontier(&batch, &tasks, &exact, &xtable, 1, true);
+            let f1 = run_host_frontier(&batch, &tasks, &fast, &xtable, 1, true);
+            let close = |a: &[f32], b: &[f32], what: &str| {
+                for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+                    let tol = 1e-3 * x.abs().max(y.abs()).max(1.0);
+                    assert!(
+                        (x - y).abs() <= tol,
+                        "{cell} h={h} {what}[{i}]: fast {y} vs exact {x} (tol {tol})"
+                    );
+                }
+            };
+            close(base.states.as_slice(), f1.states.as_slice(), "states");
+            close(
+                base.grads.as_ref().unwrap().as_slice(),
+                f1.grads.as_ref().unwrap().as_slice(),
+                "grads",
+            );
+
+            for threads in [2usize, 4] {
+                let ft =
+                    run_host_frontier(&batch, &tasks, &fast, &xtable, threads, true);
+                assert_eq!(
+                    f1.states.as_slice(),
+                    ft.states.as_slice(),
+                    "{cell} h={h} t={threads}: fast states not thread-invariant"
+                );
+                assert_eq!(
+                    f1.grads.as_ref().unwrap().as_slice(),
+                    ft.grads.as_ref().unwrap().as_slice(),
+                    "{cell} h={h} t={threads}: fast grads not thread-invariant"
+                );
+                assert_eq!(
+                    f1.x_grads, ft.x_grads,
+                    "{cell} h={h} t={threads}: fast x-grads not thread-invariant"
+                );
+                assert_eq!(
+                    f1.param_grads, ft.param_grads,
+                    "{cell} h={h} t={threads}: fast param grads not thread-invariant"
+                );
+            }
+        }
+    });
+}
+
 /// The Program interpreter is **bitwise identical** to the hand-written
 /// host cells on the same weights: both sides perform the same f32
 /// operations in the same order (matmul accumulation order, add/bias

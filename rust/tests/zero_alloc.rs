@@ -128,6 +128,33 @@ fn steady_state_frontier_fwd_bwd_loop_allocates_nothing() {
         }
     }
 
+    // The SIMD kernel path (DESIGN.md §11) binds packed weight panels
+    // and a transposed copy at instantiation and refreshes them in place
+    // via `sync_opt` — so a steady-state train-style loop (fwd+bwd plus
+    // an SGD-shaped `sync_opt` per minibatch, fast-math activations on)
+    // still allocates nothing.
+    let mut pc_fast = spec.random_cell(&mut rng, 0.2).unwrap();
+    pc_fast.set_math(cavs::exec::MathMode::Fast);
+    {
+        let mut hf = HostFrontier::new();
+        for _ in 0..2 {
+            hf.run(&batch, &tasks, &pc_fast, &xtable, Sharder::Sequential, true);
+            pc_fast.sync_opt();
+        }
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..3 {
+            hf.run(&batch, &tasks, &pc_fast, &xtable, Sharder::Sequential, true);
+            pc_fast.sync_opt();
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state fast-math packed-kernel loop heap-allocated"
+        );
+        assert!(hf.param_grads().unwrap().iter().flatten().any(|&v| v != 0.0));
+    }
+
     // ...and the reference (no_opt) interpreter path stays clean too.
     let pc_ref = spec.random_cell_unoptimized(&mut rng, 0.2).unwrap();
     let mut hf = HostFrontier::new();
