@@ -545,7 +545,8 @@ pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
         ),
         &[
             "mode", "offered", "responses", "rejected", "shed", "rps",
-            "batch_mean", "p50", "p95", "p99", "qdepth_max", "batch_hist",
+            "batch_mean", "p50", "p95", "p99", "qdepth", "qdepth_max",
+            "batch_hist",
         ],
     );
     table.tag("cell", "treefc");
@@ -564,6 +565,7 @@ pub fn serve(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
             fmt_duration(r.latency.median_s),
             fmt_duration(r.latency.p95_s),
             fmt_duration(r.latency.p99_s),
+            format!("{:.2}", r.queue_depth_mean),
             r.queue_depth_max.to_string(),
             r.batch_hist_compact(),
         ]);
@@ -662,7 +664,10 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
             "micro: compiled F (opt) vs reference interpreter (h={h}, \
              fwd and fwd+bwd mean over {reps} reps)"
         ),
-        &["config", "fwd (s)", "fwd+bwd (s)", "Mverts/s", "speedup", "speedup+bwd", "simd speedup"],
+        &[
+            "config", "fwd (s)", "fwd+bwd (s)", "Mverts/s", "speedup",
+            "speedup+bwd", "simd speedup", "breakdown",
+        ],
     );
     table.tag("cell", "lstm,treelstm");
     table.tag("opt", "both");
@@ -707,12 +712,21 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
             let fos = measure(warmup, reps, || {
                 hf.run(batch, &tasks, &opt_scalar, &xtable, ex, false);
             });
+            // per-op-class time breakdown (DESIGN.md §12): one extra
+            // UNTIMED fwd+bwd pass with the profiler on, so the gated
+            // numbers above never pay for the instrumentation
+            crate::obs::profile::reset();
+            crate::obs::profile::set_enabled(true);
+            hf.run(batch, &tasks, &optimized, &xtable, ex, true);
+            crate::obs::profile::set_enabled(false);
+            let breakdown = crate::obs::profile::breakdown();
             let mverts = |s: f64| batch.n_vertices as f64 / s.max(1e-12) / 1e6;
             table.row(vec![
                 format!("{name} t={threads} interp"),
                 format!("{:.5}", fi.mean_s),
                 format!("{:.5}", fbi.mean_s),
                 format!("{:.2}", mverts(fi.mean_s)),
+                "-".into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -728,6 +742,7 @@ pub fn micro(scale: Scale, tiny: bool) -> Result<Table> {
                 format!("{sp:.2}x"),
                 format!("{spb:.2}x"),
                 format!("{sps:.2}x"),
+                breakdown,
             ]);
             crate::info!(
                 "micro {name} t={threads}: fwd {:.5}s -> {:.5}s ({sp:.2}x), \

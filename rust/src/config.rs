@@ -52,6 +52,9 @@ pub struct Config {
     /// `cavs serve`: the typed serving section (`serve.*` keys — policy,
     /// batch caps, deadline, queue capacity, SLO budgets).
     pub serve: ServeConfig,
+    /// per-thread span-ring capacity for `--trace` (`--set
+    /// obs.ring_cap=N`, DESIGN.md §12); clamped to >= 16 downstream
+    pub obs_ring_cap: usize,
     pub artifacts_dir: String,
 }
 
@@ -80,6 +83,7 @@ impl Default for Config {
             opt: true,
             math: MathMode::Exact,
             serve: ServeConfig::default(),
+            obs_ring_cap: crate::obs::trace::DEFAULT_RING_CAP,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -214,6 +218,13 @@ impl Config {
             "serve.slo_bulk_ms" => {
                 self.serve.slo_bulk_ms =
                     parse_serve_ms("serve.slo_bulk_ms", val, false)?;
+            }
+            "obs.ring_cap" => {
+                let c: usize = val.parse()?;
+                if c == 0 {
+                    bail!("obs.ring_cap must be >= 1");
+                }
+                self.obs_ring_cap = c;
             }
             "artifacts_dir" => self.artifacts_dir = val.to_string(),
             _ => bail!("unknown config key '{key}'"),
@@ -366,6 +377,16 @@ mod tests {
         assert!(e.contains("fixed|agreement|adaptive"), "{e}");
         let e = c.apply("serve.slo_bulk_ms", "0").unwrap_err().to_string();
         assert!(e.contains("serve.slo_bulk_ms"), "{e}");
+    }
+
+    #[test]
+    fn obs_ring_cap_key_parses_and_rejects_zero() {
+        let mut c = Config::default();
+        assert_eq!(c.obs_ring_cap, crate::obs::trace::DEFAULT_RING_CAP);
+        c.apply("obs.ring_cap", "4096").unwrap();
+        assert_eq!(c.obs_ring_cap, 4096);
+        assert!(c.apply("obs.ring_cap", "0").is_err());
+        assert!(c.apply("obs.ring_cap", "many").is_err());
     }
 
     #[test]

@@ -11,8 +11,8 @@ use crate::models::{HeadKind, Model};
 use crate::runtime::{literal_into, Arg, Runtime};
 use crate::scheduler::{self, Policy, Task};
 use crate::tensor::DynamicTensor;
+use crate::obs;
 use crate::util::stats::{Phase, PhaseTimer};
-use crate::util::trace::Trace;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineOpts {
@@ -62,9 +62,6 @@ pub struct Engine<'rt> {
     pub opts: EngineOpts,
     pub timers: PhaseTimer,
     pub traffic: MemTraffic,
-    /// Chrome-trace recorder (enable with CAVS_TRACE=/path/out.json; see
-    /// util::trace) — the §Perf profiling instrument.
-    pub trace: Trace,
     /// Persistent worker pool for the sharded host-side primitives —
     /// created once per engine, reused by every task of every minibatch
     /// (no spawn/join per primitive; see exec::pool).
@@ -177,7 +174,6 @@ impl<'rt> Engine<'rt> {
             opts,
             timers: PhaseTimer::default(),
             traffic: MemTraffic::default(),
-            trace: Trace::from_env(),
             pool: WorkerPool::new(pool_threads),
             scratch: ShardScratch::new(),
             ws: None,
@@ -314,23 +310,24 @@ impl<'rt> Engine<'rt> {
             ..Default::default()
         };
 
-        let span = self.trace.begin();
-        self.forward(model, batch, &tasks, &mut ws)?;
-        self.run_heads(model, batch, &tasks, &mut ws, &mut result)?;
-
-        if self.opts.training {
-            self.backward(model, batch, &tasks, &mut ws)?;
-            if ws.dt_gates.is_some() {
-                self.lazy_param_grads(model, &mut ws)?;
+        {
+            let _mb = obs::span("minibatch", obs::Cat::Engine)
+                .args(batch.n_graphs as u32, batch.n_vertices as u32);
+            {
+                let _fwd = obs::span("fwd", obs::Cat::Engine)
+                    .args(tasks.len() as u32, batch.n_vertices as u32);
+                self.forward(model, batch, &tasks, &mut ws)?;
+                self.run_heads(model, batch, &tasks, &mut ws, &mut result)?;
             }
-        }
-        self.trace.end(
-            span,
-            "minibatch",
-            format!("minibatch k={} v={}", batch.n_graphs, batch.n_vertices),
-        );
-        if self.trace.enabled() {
-            self.trace.flush().ok();
+
+            if self.opts.training {
+                let _bwd = obs::span("bwd", obs::Cat::Engine)
+                    .args(tasks.len() as u32, batch.n_vertices as u32);
+                self.backward(model, batch, &tasks, &mut ws)?;
+                if ws.dt_gates.is_some() {
+                    self.lazy_param_grads(model, &mut ws)?;
+                }
+            }
         }
         // Recycle the workspace: the next minibatch reuses every chunk,
         // buffer and index plan at its high-water capacity.
@@ -477,7 +474,7 @@ impl<'rt> Engine<'rt> {
             b,
         );
         let exe = self.rt.load(&name)?;
-        let span = self.trace.begin();
+        let _sp = obs::span("artifact", obs::Cat::Kernel).args(b as u32, 0);
         let t0 = std::time::Instant::now();
         model.params.with_buffers(self.rt, |pb| {
             let mut args: Vec<Arg<'_>> = pb.iter().map(|p| Arg::Buf(p)).collect();
@@ -490,7 +487,6 @@ impl<'rt> Engine<'rt> {
             Ok(())
         })?;
         self.timers.add(Phase::Compute, t0.elapsed());
-        self.trace.end(span, "compute", name);
         Ok(())
     }
 
@@ -741,7 +737,8 @@ impl<'rt> Engine<'rt> {
                 .rt
                 .load(&name)
                 .with_context(|| format!("backward artifact {name}"))?;
-            let span = self.trace.begin();
+            let _sp =
+                obs::span("artifact", obs::Cat::Kernel).args(b as u32, 1);
             let t0 = std::time::Instant::now();
             let outs = model.params.with_buffers(self.rt, |pb| {
                 let mut args: Vec<Arg<'_>> =
@@ -754,7 +751,6 @@ impl<'rt> Engine<'rt> {
                 self.rt.run(&exe, &args)
             })?;
             self.timers.add(Phase::Compute, t0.elapsed());
-            self.trace.end(span, "compute", name);
 
             // outputs: [param grads...,] gx, gs*arity [, g_gates]
             let n_params = model.params.len();

@@ -39,6 +39,7 @@ use std::ops::Range;
 use crate::exec::pool::{shard_range, Sharder, ShardScratch, ShardSlots, WorkerPool};
 use crate::graph::GraphBatch;
 use crate::memory::{MemTraffic, StateBuffer, TrafficLocal};
+use crate::obs;
 use crate::scheduler::Task;
 use crate::util::rng::Rng;
 
@@ -831,9 +832,13 @@ impl HostFrontier {
         }
 
         // ---- forward sweep ------------------------------------------
+        let fwd_span = obs::span("fwd", obs::Cat::Engine)
+            .args(tasks.len() as u32, batch.n_vertices as u32);
         for (ti, task) in tasks.iter().enumerate() {
             let m = task.m();
             let b = task.bucket;
+            let _lvl = obs::span("level", obs::Cat::Level)
+                .args(ti as u32, m as u32);
 
             // pull: stage x rows (token lookups; invalid tokens stay
             // zero); blocks are bucket-padded like the engine's dynamic
@@ -949,11 +954,15 @@ impl HostFrontier {
             );
         }
 
+        drop(fwd_span);
+
         if !backward {
             return;
         }
 
         // ---- backward sweep (exact LIFO) ----------------------------
+        let _bwd_span = obs::span("bwd", obs::Cat::Engine)
+            .args(tasks.len() as u32, batch.n_vertices as u32);
         self.has_grads = true;
         self.grads.reset_for(batch.n_vertices, sc);
         for &r in &batch.roots {
@@ -963,6 +972,8 @@ impl HostFrontier {
 
         for (ti, task) in tasks.iter().enumerate().rev() {
             let m = task.m();
+            let _lvl = obs::span("level.bwd", obs::Cat::Level)
+                .args(ti as u32, m as u32);
             let x: &[f32] = &self.saved_x[ti];
             let sall: &[f32] = &self.saved_s[ti];
 

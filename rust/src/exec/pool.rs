@@ -39,6 +39,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::memory::TrafficLocal;
+use crate::obs;
 
 /// A borrowed shard job with its lifetime erased for the worker hand-off.
 /// Only ever dereferenced between job publication and the join in
@@ -133,6 +134,8 @@ impl WorkerPool {
         // current epoch fully drains (poisoning is benign — the guard
         // protects no data, so a panicked predecessor doesn't matter).
         let _turn = self.submit.lock().unwrap_or_else(|p| p.into_inner());
+        let _sp = obs::span("dispatch", obs::Cat::Pool)
+            .args(n_shards as u32, (self.workers + 1) as u32);
         // SAFETY: the erased borrow is published under the lock, and this
         // function does not return (or unwind) until every worker reported
         // done for this epoch, so `f` strictly outlives all uses; the
@@ -204,6 +207,8 @@ fn worker_loop(shared: &PoolShared, idx: usize, participants: usize) {
         };
         let mut panicked = false;
         if let Some(f) = job {
+            let _sp = obs::span("shard", obs::Cat::Pool)
+                .args((idx + 1) as u32, n_shards as u32);
             // Worker `idx` is participant `idx + 1`: run shards
             // idx+1, idx+1+P, idx+1+2P, ...
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

@@ -13,6 +13,7 @@ pub mod exec;
 pub mod graph;
 pub mod memory;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod serve;

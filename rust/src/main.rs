@@ -8,9 +8,12 @@
 //!   cells      list registered cells with their program-derived metadata
 //!   eval       inference pass over a dataset
 //!   serve      online-inference demo (continuous dynamic batching)
+//!   trace      capture or validate a chrome://tracing span export
 //!
 //! Offline-friendly hand-rolled argument parsing (no clap): flags are
 //! `--key value` pairs plus repeated `--set k=v` config overrides.
+//! `--trace FILE` on any workload command enables the span tracer
+//! (DESIGN.md §12) and writes the capture when the command succeeds.
 
 use std::path::Path;
 
@@ -81,6 +84,9 @@ impl Args {
         // cross-field validation after every override has applied (a
         // config file validates at load, but --set can re-break it)
         cfg.validate()?;
+        // ring capacity must be pinned before the first span records
+        // (rings size themselves at creation, not per push)
+        cavs::obs::trace::set_ring_capacity(cfg.obs_ring_cap);
         Ok(cfg)
     }
 }
@@ -88,7 +94,13 @@ impl Args {
 fn main() -> Result<()> {
     util::logger::init();
     let args = parse_args()?;
-    match args.cmd.as_str() {
+    // `--trace FILE` turns the span tracer on for the whole command and
+    // exports the rings on success (chrome://tracing / Perfetto JSON)
+    let trace_out = args.get("trace").map(str::to_string);
+    if trace_out.is_some() {
+        cavs::obs::trace::set_enabled(true);
+    }
+    let result = match args.cmd.as_str() {
         "train" => cmd_train(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
@@ -96,6 +108,7 @@ fn main() -> Result<()> {
         "cells" => cmd_cells(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -104,7 +117,19 @@ fn main() -> Result<()> {
             print_help();
             bail!("unknown command '{other}'")
         }
+    };
+    if result.is_ok() {
+        if let Some(path) = &trace_out {
+            cavs::obs::trace::write_json(path)
+                .with_context(|| format!("writing trace to {path}"))?;
+            println!(
+                "(wrote {} span(s) to {path} — open in chrome://tracing \
+                 or https://ui.perfetto.dev)",
+                cavs::obs::trace::total_live()
+            );
+        }
     }
+    result
 }
 
 fn print_help() {
@@ -121,9 +146,28 @@ USAGE:
                [--tiny true]   (serve/train/micro/kernel: bounded CI smoke)
                [--check baseline.json] [--check-update baseline.json]
                [--tolerance 0.2]   (serve/train/micro/kernel: regression gate)
+  cavs trace   [--out trace.json] [--cell NAME] [--threads N] [--set k=v ...]
+  cavs trace   --check trace.json     (validate a capture; the CI smoke)
   cavs inspect [--set artifacts_dir=...]
   cavs analyze [--cell treelstm] [--set h=256]
   cavs cells   [--set h=256]
+
+Observability (DESIGN.md §12): `--trace FILE` on train/eval/serve/bench
+  enables the structured span tracer — preallocated per-thread ring
+  buffers (capacity --set obs.ring_cap=N, default 16384 spans/thread,
+  overwrite-oldest) record engine fwd/bwd, per-frontier-level sweeps,
+  kernel GEMM/fused/din calls, pool dispatch and the serve
+  queue→form→exec→respond stages with zero steady-state allocation —
+  and writes a chrome://tracing JSON capture on success (open in
+  chrome://tracing or https://ui.perfetto.dev). `cavs trace` records a
+  bounded host-training demo and writes --out; `cavs trace --check f`
+  validates that a capture contains every core pipeline stage. `cavs
+  serve --metrics-addr HOST:PORT` additionally exposes the serving
+  metrics registry (counters/gauges/histograms backing the report) as
+  plain text over HTTP, one scrape per GET, plus a registry dump on
+  shutdown. `cavs bench --exp micro` reports a per-op-class time
+  breakdown column (gemm/fused/move/din/vjp/pgrad) from the per-level
+  profiler, measured on a separate untimed pass.
 
 The cell is an **open API**: `vertex::Program` is the single source of
   truth for F, and every cell — builtin or user-registered via
@@ -190,7 +234,7 @@ Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
   serve.policy, serve.max_batch, serve.deadline_ms, serve.queue_cap,
   serve.adaptive_max_batch, serve.agreement_lookahead,
   serve.slo_interactive_ms, serve.slo_standard_ms, serve.slo_bulk_ms,
-  artifacts_dir"
+  obs.ring_cap, artifacts_dir"
     );
 }
 
@@ -385,10 +429,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total: usize,
         concurrency: usize,
         stamp: &[(&str, String)],
+        metrics_addr: Option<&str>,
     ) -> anyhow::Result<()> {
         use cavs::util::json::Json;
         let mut server =
             cavs::serve::Server::with_policy(exec, serve.make_policy());
+        if let Some(addr) = metrics_addr {
+            serve_metrics_text(addr, server.metrics.registry())?;
+        }
         let report = cavs::serve::loadgen::run_closed_loop(
             &mut server,
             serve,
@@ -397,6 +445,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             concurrency,
         )?;
         println!("\n{}", report.render());
+        if metrics_addr.is_some() {
+            // shutdown dump: the same exposition text a scrape would get
+            println!("\n{}", server.metrics.registry().render());
+        }
         std::fs::create_dir_all("results")?;
         // stamp the report with its provenance (git revision, cell,
         // policy, threads, opt) like every other BENCH_*.json
@@ -420,6 +472,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ("threads", cfg.threads.to_string()),
         ("opt", cfg.opt.to_string()),
     ];
+    let maddr = args.get("metrics-addr");
 
     if have_artifacts {
         let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
@@ -429,7 +482,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.cell, cfg.h
         );
         let exec = EngineExec::new(&rt, model, cfg.engine_opts(false));
-        demo(exec, &serve, &graphs, total, concurrency, &stamp)
+        demo(exec, &serve, &graphs, total, concurrency, &stamp, maddr)
     } else {
         info!(
             "no artifact set at {} — serving {} through the host Program \
@@ -440,15 +493,148 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let exec = HostExec::from_spec_math(
                 &spec, cfg.vocab, cfg.threads, cfg.seed, cfg.math,
             )?;
-            demo(exec, &serve, &graphs, total, concurrency, &stamp)
+            demo(exec, &serve, &graphs, total, concurrency, &stamp, maddr)
         } else {
             info!("no_opt set: reference per-row interpreter (A/B baseline)");
             let exec = HostExec::from_spec_unoptimized(
                 &spec, cfg.vocab, cfg.threads, cfg.seed,
             )?;
-            demo(exec, &serve, &graphs, total, concurrency, &stamp)
+            demo(exec, &serve, &graphs, total, concurrency, &stamp, maddr)
         }
     }
+}
+
+/// Expose a metrics [`Registry`](cavs::obs::Registry) as plain text over
+/// HTTP (`cavs serve --metrics-addr 127.0.0.1:9898`): every GET gets one
+/// fresh scrape of `Registry::render`. The listener thread is detached —
+/// it serves for the lifetime of the demo and dies with the process.
+fn serve_metrics_text(addr: &str, reg: cavs::obs::Registry) -> Result<()> {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding --metrics-addr {addr}"))?;
+    let local = listener.local_addr()?;
+    info!("metrics exposition on http://{local}/ (text/plain)");
+    std::thread::Builder::new()
+        .name("cavs-metrics".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                // drain whatever request line arrived — the response is
+                // the same for every path, so nothing needs parsing
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let body = reg.render();
+                let _ = write!(
+                    stream,
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; \
+                     version=0.0.4\r\nContent-Length: {}\r\n\
+                     Connection: close\r\n\r\n{body}",
+                    body.len()
+                );
+            }
+        })
+        .context("spawning the metrics exposition thread")?;
+    Ok(())
+}
+
+/// `cavs trace`: the observability capture tool. Default mode runs a
+/// bounded host-training demo with the tracer on and writes `--out`
+/// (every traced stage fires: step/fwd/bwd, frontier levels, kernels,
+/// pool dispatch). `--check FILE` instead validates an existing capture
+/// — ≥1 duration event per core pipeline stage — which is what the CI
+/// bench-smoke job runs against the `--trace` output of a real bench.
+fn cmd_trace(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("check") {
+        return trace_check(path);
+    }
+    let mut cfg = args.config()?;
+    // bounded demo workload: one epoch over a small slice of the
+    // configured dataset covers every traced stage
+    cfg.h = cfg.h.min(64);
+    cfg.n_samples = cfg.n_samples.min(64);
+    cavs::obs::trace::set_enabled(true);
+    let spec = CellSpec::lookup(&cfg.cell, cfg.h)?;
+    let data = make_dataset(&cfg, spec.arity());
+    host::train_host_epochs_math(
+        &spec,
+        &data,
+        cfg.batch_size,
+        cfg.lr.min(0.05),
+        1,
+        cfg.threads,
+        cfg.seed,
+        cfg.opt,
+        cfg.math,
+        |_| {},
+    )?;
+    let out = args.get("out").unwrap_or("trace.json");
+    cavs::obs::trace::write_json(out)
+        .with_context(|| format!("writing {out}"))?;
+    println!(
+        "traced {} h={} for 1 epoch ({} graphs, {} threads): {} span(s) \
+         live across the thread rings",
+        cfg.cell,
+        cfg.h,
+        data.len(),
+        cfg.threads,
+        cavs::obs::trace::total_live()
+    );
+    println!(
+        "(wrote {out} — open in chrome://tracing or https://ui.perfetto.dev)"
+    );
+    Ok(())
+}
+
+/// Validate a chrome://tracing capture: parse it, count the "X"
+/// (duration) events per span name, and require at least one event for
+/// every core pipeline stage the tracer is supposed to cover.
+fn trace_check(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let j = util::json::Json::parse(&text)
+        .with_context(|| format!("parsing {path}"))?;
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{path}: no traceEvents array"))?;
+    let mut counts: std::collections::BTreeMap<&str, usize> =
+        Default::default();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        if let Some(name) = ev.get("name").and_then(|n| n.as_str()) {
+            *counts.entry(name).or_default() += 1;
+        }
+    }
+    // the stages every traced training run must produce; serve-only
+    // stages (form/exec/respond) are validated by the serve tests, not
+    // here, since this gate runs against a training capture
+    let required = ["fwd", "bwd", "level", "gemm"];
+    let missing: Vec<&str> = required
+        .iter()
+        .filter(|n| !counts.contains_key(**n))
+        .copied()
+        .collect();
+    for (name, n) in &counts {
+        println!("  {name:<12} {n:>6} event(s)");
+    }
+    if !missing.is_empty() {
+        bail!(
+            "{path}: {} duration event(s), but required stage(s) missing: \
+             {} (have: {})",
+            events.len(),
+            missing.join(", "),
+            counts.keys().copied().collect::<Vec<_>>().join(", ")
+        );
+    }
+    println!(
+        "{path}: OK — {} duration event(s), all required stages present \
+         ({})",
+        events.len(),
+        required.join(", ")
+    );
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -1,0 +1,505 @@
+//! The typed metrics registry (DESIGN.md §12): counters, gauges,
+//! histograms, fixed-bucket counter vectors and bounded reservoirs behind
+//! one get-or-create API with a text exposition dump.
+//!
+//! A [`Registry`] is a cheap-clone handle (`Arc` inside): the recording
+//! side (e.g. `serve::ServeMetrics`) and a reader (the `--metrics-addr`
+//! exposition thread, the shutdown report) share the same instruments.
+//! Registries are **per-instance**, not process-global — two servers (or
+//! two parallel tests) never share counters.
+//!
+//! Every instrument observes through atomics or a preallocated arena
+//! behind a short lock, so the hot path records without allocating —
+//! the same zero-steady-state-allocation discipline as the span tracer
+//! ([`super::trace`]). Summarization ([`Registry::render`]) allocates and
+//! is meant to run off the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Sampled instantaneous value (queue depth, batch fill): tracks last /
+/// sum / max / sample count, so mean and peak survive summarization.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    last: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Gauge {
+    pub fn observe(&self, v: u64) {
+        self.last.store(v, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn last(&self) -> u64 {
+        self.last.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn reset(&self) {
+        self.last.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Shared fixed-bucket histogram: [`Histogram`] behind a mutex (bucket
+/// search + one increment per record — no allocation).
+#[derive(Debug)]
+pub struct Hist {
+    inner: Mutex<Histogram>,
+}
+
+impl Hist {
+    fn new(h: Histogram) -> Hist {
+        Hist { inner: Mutex::new(h) }
+    }
+
+    pub fn record(&self, x: f64) {
+        self.inner.lock().unwrap().record(x);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total()
+    }
+
+    /// Clone of the underlying histogram (for reports).
+    pub fn snapshot(&self) -> Histogram {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().reset();
+    }
+}
+
+/// Fixed-length vector of counters indexed by a small integer key (e.g.
+/// `batch_sizes[k]` = batches that served exactly `k` requests).
+/// Observations beyond the end clamp into the last slot.
+#[derive(Debug)]
+pub struct CounterVec {
+    counts: Vec<AtomicU64>,
+}
+
+impl CounterVec {
+    fn new(len: usize) -> CounterVec {
+        CounterVec {
+            counts: (0..len.max(1)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn inc(&self, i: usize) {
+        let i = i.min(self.counts.len() - 1);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, i: usize) -> u64 {
+        self.counts[i].load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ReservoirInner {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+}
+
+/// Bounded uniform sample of a value stream (Algorithm R): every
+/// observation until `cap`, then each subsequent one replaces a uniform
+/// slot with probability `cap/seen` — bounded memory, zero steady-state
+/// allocation once [`Reservoir::reserve`]d, statistically valid
+/// percentiles forever.
+#[derive(Debug)]
+pub struct Reservoir {
+    cap: usize,
+    inner: Mutex<ReservoirInner>,
+}
+
+impl Reservoir {
+    fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            inner: Mutex::new(ReservoirInner {
+                samples: Vec::new(),
+                seen: 0,
+                rng: Rng::new(seed),
+            }),
+        }
+    }
+
+    /// Pre-size the sample arena (capped at the reservoir bound) so the
+    /// fill phase never reallocates.
+    pub fn reserve(&self, n: usize) {
+        let cap = self.cap;
+        self.inner.lock().unwrap().samples.reserve(n.min(cap));
+    }
+
+    pub fn observe(&self, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.seen += 1;
+        if g.samples.len() < self.cap {
+            g.samples.push(v);
+        } else {
+            let seen = g.seen;
+            let j = (g.rng.next_u64() % seen) as usize;
+            if j < self.cap {
+                g.samples[j] = v;
+            }
+        }
+    }
+
+    /// Observations seen (the reservoir denominator — may exceed
+    /// [`Reservoir::len`]).
+    pub fn seen(&self) -> u64 {
+        self.inner.lock().unwrap().seen
+    }
+
+    /// Samples currently held (≤ the capacity bound).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read the held samples without copying them out.
+    pub fn with_samples<R>(&self, f: impl FnOnce(&[f64]) -> R) -> R {
+        f(&self.inner.lock().unwrap().samples)
+    }
+
+    /// Drop all samples (the arena's allocation is kept; the RNG stream
+    /// continues — reset affects *what* is held, not determinism of the
+    /// recorder object).
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.samples.clear();
+        g.seen = 0;
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: Vec<(String, Arc<Counter>)>,
+    gauges: Vec<(String, Arc<Gauge>)>,
+    hists: Vec<(String, Arc<Hist>)>,
+    vecs: Vec<(String, Arc<CounterVec>)>,
+    reservoirs: Vec<(String, Arc<Reservoir>)>,
+}
+
+fn get_or_insert<T>(
+    list: &mut Vec<(String, Arc<T>)>,
+    name: &str,
+    make: impl FnOnce() -> T,
+) -> Arc<T> {
+    if let Some((_, v)) = list.iter().find(|(n, _)| n == name) {
+        return Arc::clone(v);
+    }
+    let v = Arc::new(make());
+    list.push((name.to_string(), Arc::clone(&v)));
+    v
+}
+
+/// Get-or-create registry of named instruments. Clones share the same
+/// underlying instruments (handle semantics), so a background exposition
+/// thread can render while the owner records.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_insert(&mut self.inner.lock().unwrap().counters, name, || {
+            Counter::default()
+        })
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_insert(&mut self.inner.lock().unwrap().gauges, name, || {
+            Gauge::default()
+        })
+    }
+
+    /// Fixed-bucket histogram with explicit ascending bounds.
+    pub fn hist(&self, name: &str, bounds: &[f64]) -> Arc<Hist> {
+        get_or_insert(&mut self.inner.lock().unwrap().hists, name, || {
+            Hist::new(Histogram::new(bounds))
+        })
+    }
+
+    /// Histogram with the default latency buckets (10µs–10s, 1-2-5).
+    pub fn hist_latency(&self, name: &str) -> Arc<Hist> {
+        get_or_insert(&mut self.inner.lock().unwrap().hists, name, || {
+            Hist::new(Histogram::latency_default())
+        })
+    }
+
+    pub fn counter_vec(&self, name: &str, len: usize) -> Arc<CounterVec> {
+        get_or_insert(&mut self.inner.lock().unwrap().vecs, name, || {
+            CounterVec::new(len)
+        })
+    }
+
+    pub fn reservoir(
+        &self,
+        name: &str,
+        cap: usize,
+        seed: u64,
+    ) -> Arc<Reservoir> {
+        get_or_insert(&mut self.inner.lock().unwrap().reservoirs, name, || {
+            Reservoir::new(cap, seed)
+        })
+    }
+
+    /// Publish a point-in-time value from an external counter (bridging
+    /// legacy sources like `MemTraffic`/`OptStats` snapshots into the
+    /// exposition without migrating their hot paths).
+    pub fn publish(&self, name: &str, value: u64) {
+        self.gauge(name).observe(value);
+    }
+
+    /// Reset every instrument (allocations kept).
+    pub fn reset(&self) {
+        let g = self.inner.lock().unwrap();
+        for (_, c) in &g.counters {
+            c.reset();
+        }
+        for (_, c) in &g.gauges {
+            c.reset();
+        }
+        for (_, c) in &g.hists {
+            c.reset();
+        }
+        for (_, c) in &g.vecs {
+            c.reset();
+        }
+        for (_, c) in &g.reservoirs {
+            c.reset();
+        }
+    }
+
+    /// Text exposition (Prometheus-style lines): every counter, gauge
+    /// (last/mean/max), histogram (cumulative buckets + count), counter
+    /// vector and reservoir (p50/p95/p99 over the held sample).
+    pub fn render(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, c) in &g.counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        for (name, v) in &g.gauges {
+            out.push_str(&format!(
+                "# TYPE {name} gauge\n{name} {}\n{name}_mean {:.6}\n\
+                 {name}_max {}\n",
+                v.last(),
+                v.mean(),
+                v.max()
+            ));
+        }
+        for (name, h) in &g.hists {
+            let snap = h.snapshot();
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in snap.counts().iter().enumerate() {
+                cum += c;
+                let le = match snap.bounds().get(i) {
+                    Some(b) => format!("{b}"),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_count {cum}\n"));
+        }
+        for (name, v) in &g.vecs {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            for (i, c) in v.snapshot().into_iter().enumerate() {
+                out.push_str(&format!("{name}{{k=\"{i}\"}} {c}\n"));
+            }
+        }
+        for (name, r) in &g.reservoirs {
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            r.with_samples(|s| {
+                let mut sorted = s.to_vec();
+                sorted.sort_by(f64::total_cmp);
+                for (q, label) in
+                    [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")]
+                {
+                    let v = if sorted.is_empty() {
+                        0.0
+                    } else {
+                        let idx = ((sorted.len() as f64 - 1.0) * q).round()
+                            as usize;
+                        sorted[idx.min(sorted.len() - 1)]
+                    };
+                    out.push_str(&format!(
+                        "{name}{{quantile=\"{label}\"}} {v:.6}\n"
+                    ));
+                }
+            });
+            out.push_str(&format!("{name}_count {}\n", r.seen()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_gets_or_creates_shared_instruments() {
+        let reg = Registry::new();
+        let c1 = reg.counter("requests");
+        let c2 = reg.counter("requests");
+        c1.add(3);
+        c2.inc();
+        assert_eq!(reg.counter("requests").get(), 4, "same instrument");
+        // clones are handles onto the same inner
+        let clone = reg.clone();
+        clone.counter("requests").inc();
+        assert_eq!(c1.get(), 5);
+        // distinct registries are isolated
+        let other = Registry::new();
+        assert_eq!(other.counter("requests").get(), 0);
+    }
+
+    #[test]
+    fn gauge_tracks_last_mean_max() {
+        let g = Gauge::default();
+        assert_eq!(g.mean(), 0.0);
+        g.observe(3);
+        g.observe(1);
+        assert_eq!(g.last(), 1);
+        assert_eq!(g.max(), 3);
+        assert_eq!(g.count(), 2);
+        assert!((g.mean() - 2.0).abs() < 1e-12);
+        g.reset();
+        assert_eq!(g.max(), 0);
+    }
+
+    #[test]
+    fn counter_vec_clamps_to_last_slot() {
+        let v = CounterVec::new(3);
+        v.inc(0);
+        v.inc(2);
+        v.inc(99); // clamps
+        assert_eq!(v.snapshot(), vec![1, 0, 2]);
+        assert_eq!(v.len(), 3);
+        v.reset();
+        assert_eq!(v.snapshot(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_counts_the_stream() {
+        let r = Reservoir::new(8, 0x5A3E);
+        r.reserve(100);
+        for i in 0..100 {
+            r.observe(i as f64);
+        }
+        assert_eq!(r.seen(), 100);
+        assert_eq!(r.len(), 8, "bounded at capacity");
+        r.with_samples(|s| assert!(s.iter().all(|&x| (0.0..100.0).contains(&x))));
+        r.reset();
+        assert_eq!(r.seen(), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn render_is_parseable_exposition_text() {
+        let reg = Registry::new();
+        reg.counter("cavs_responses").add(7);
+        reg.gauge("cavs_queue_depth").observe(4);
+        reg.hist("cavs_latency_s", &[0.001, 0.01]).record(0.002);
+        reg.counter_vec("cavs_batch_size", 3).inc(2);
+        reg.reservoir("cavs_lat", 16, 1).observe(0.5);
+        reg.publish("cavs_mem_bytes", 1024);
+        let text = reg.render();
+        assert!(text.contains("cavs_responses 7"));
+        assert!(text.contains("cavs_queue_depth 4"));
+        assert!(text.contains("cavs_latency_s_bucket{le=\"0.01\"} 1"));
+        assert!(text.contains("cavs_latency_s_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("cavs_batch_size{k=\"2\"} 1"));
+        assert!(text.contains("cavs_lat{quantile=\"0.99\"} 0.500000"));
+        assert!(text.contains("cavs_mem_bytes 1024"));
+        // every line is `# …` or `name[{labels}] value`
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# ")
+                    || line.rsplit_once(' ').is_some_and(|(_, v)| {
+                        v.parse::<f64>().is_ok()
+                    }),
+                "unparseable line: {line}"
+            );
+        }
+    }
+}

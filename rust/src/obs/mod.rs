@@ -1,0 +1,41 @@
+//! The unified zero-alloc observability layer (DESIGN.md §12): one place
+//! for every signal the system emits about itself.
+//!
+//! Three instruments, one discipline:
+//!
+//! * [`trace`] — structured span tracing into preallocated per-thread
+//!   ring buffers (fixed capacity, overwrite-oldest), exported as
+//!   chrome://tracing JSON (`cavs trace`, `--trace <path>` on
+//!   `train`/`serve`/`bench`). Spans cover engine fwd/bwd, per-frontier-
+//!   level sweeps, kernel GEMM/din/fused calls, pool dispatch, and the
+//!   serve queue→form→exec→respond stages.
+//! * [`metrics`] — a typed counter/gauge/histogram registry (reusing
+//!   [`Histogram`](crate::util::stats::Histogram)) with a text exposition
+//!   dump; `serve::ServeMetrics` is built on it, and `cavs serve` can
+//!   expose it over `--metrics-addr` or print it on shutdown.
+//! * [`profile`] — per-op-class wall-time accounting for the compiled
+//!   level path, behind a static enable flag, feeding the
+//!   `bench --exp micro` breakdown column.
+//!
+//! Two invariants, both enforced by tests:
+//!
+//! * **Zero steady-state allocation.** Ring buffers, counters and
+//!   reservoirs are preallocated; recording a span or a sample is an
+//!   index write / atomic add. `rust/tests/zero_alloc.rs` proves the
+//!   instrumented train and serve loops allocate nothing with tracing
+//!   *enabled*.
+//! * **Bitwise non-perturbation.** Enabling or disabling any instrument
+//!   never changes an engine output: observation only reads clocks and
+//!   writes side buffers (`rust/tests/proptests.rs`
+//!   `prop_observability_never_perturbs_results`).
+//!
+//! Disabled instruments cost one relaxed atomic load and a branch per
+//! site — no clock read, no lock, no write.
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{Counter, CounterVec, Gauge, Hist, Registry, Reservoir};
+pub use profile::OpClass;
+pub use trace::{span, Cat, SpanGuard};

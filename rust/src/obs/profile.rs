@@ -1,0 +1,191 @@
+//! Per-op-class wall-time profiling for the compiled level path
+//! (DESIGN.md §12): where does a frontier-level sweep spend its time —
+//! GEMM, fused elementwise, data movement, MatMul data-gradients, the
+//! scalar VJP sweep, or parameter-gradient accumulation?
+//!
+//! The accounting is a pair of static atomic arrays (`nanos`, `calls`)
+//! indexed by [`OpClass`], written by RAII guards from the level
+//! executor's op-outer loops (`vertex::interp` `lvl_eval`/`lvl_backward`
+//! /`lvl_param_grads`). Disabled profiling costs one relaxed load and a
+//! branch per op sweep — no clock read — so the gated micro-bench numbers
+//! are unperturbed; `bench --exp micro` turns it on only for a separate
+//! untimed pass that feeds the `breakdown` column.
+//!
+//! Worker threads add into the same atomics, so a sharded sweep's
+//! breakdown aggregates CPU time across all participants.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Op classes attributed by the level executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// Row-blocked wide/level GEMMs (forward).
+    Gemm,
+    /// Fused elementwise sweeps (adds, gates, activations).
+    Fused,
+    /// Data movement: pull/gather/concat staging of the tape.
+    Move,
+    /// MatMul data-gradient (`din`) kernels (backward).
+    Din,
+    /// The per-row reverse VJP sweep (everything backward but `din`).
+    Vjp,
+    /// Parameter-gradient accumulation.
+    Pgrad,
+}
+
+pub const N_CLASSES: usize = 6;
+
+impl OpClass {
+    pub const ALL: [OpClass; N_CLASSES] = [
+        OpClass::Gemm,
+        OpClass::Fused,
+        OpClass::Move,
+        OpClass::Din,
+        OpClass::Vjp,
+        OpClass::Pgrad,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Gemm => "gemm",
+            OpClass::Fused => "fused",
+            OpClass::Move => "move",
+            OpClass::Din => "din",
+            OpClass::Vjp => "vjp",
+            OpClass::Pgrad => "pgrad",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        match self {
+            OpClass::Gemm => 0,
+            OpClass::Fused => 1,
+            OpClass::Move => 2,
+            OpClass::Din => 3,
+            OpClass::Vjp => 4,
+            OpClass::Pgrad => 5,
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NANOS: [AtomicU64; N_CLASSES] = [const { AtomicU64::new(0) }; N_CLASSES];
+static CALLS: [AtomicU64; N_CLASSES] = [const { AtomicU64::new(0) }; N_CLASSES];
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Zero all accumulators.
+pub fn reset() {
+    for i in 0..N_CLASSES {
+        NANOS[i].store(0, Ordering::Relaxed);
+        CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII accumulator: created by [`time`], adds its elapsed nanoseconds
+/// (and one call) to the class on drop. Holds no timestamp — and reads
+/// no clock — when profiling is disabled.
+#[must_use = "a profile guard measures until it is dropped"]
+pub struct ProfGuard {
+    class: OpClass,
+    start: Option<Instant>,
+}
+
+impl Drop for ProfGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let i = self.class.idx();
+            NANOS[i]
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            CALLS[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Time one op sweep under `class` (no-op when profiling is disabled).
+#[inline]
+pub fn time(class: OpClass) -> ProfGuard {
+    ProfGuard { class, start: enabled().then(Instant::now) }
+}
+
+/// `(class name, accumulated nanoseconds, calls)` for every class.
+pub fn snapshot() -> [(&'static str, u64, u64); N_CLASSES] {
+    let mut out = [("", 0u64, 0u64); N_CLASSES];
+    for (i, c) in OpClass::ALL.iter().enumerate() {
+        out[i] = (
+            c.name(),
+            NANOS[i].load(Ordering::Relaxed),
+            CALLS[i].load(Ordering::Relaxed),
+        );
+    }
+    out
+}
+
+/// Compact percentage breakdown of the accumulated time, largest class
+/// first — the `bench --exp micro` `breakdown` cell (e.g.
+/// `"gemm:54% fused:28% move:11% din:4% vjp:3%"`). `"-"` when nothing
+/// was profiled. Space-separated (no commas), so it survives the CSV
+/// rendering of bench tables.
+pub fn breakdown() -> String {
+    let snap = snapshot();
+    let total: u64 = snap.iter().map(|(_, ns, _)| ns).sum();
+    if total == 0 {
+        return "-".to_string();
+    }
+    let mut parts: Vec<(&str, u64)> = snap
+        .iter()
+        .filter(|(_, ns, _)| *ns > 0)
+        .map(|&(name, ns, _)| (name, ns))
+        .collect();
+    parts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    parts
+        .iter()
+        .map(|(name, ns)| {
+            format!("{name}:{:.0}%", 100.0 * *ns as f64 / total as f64)
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test for the global accumulators (parallel test threads must
+    /// not race the process-wide flag mid-assertion).
+    #[test]
+    fn profiling_accumulates_and_renders_a_breakdown() {
+        // disabled: no clock, no accumulation
+        assert!(time(OpClass::Gemm).start.is_none());
+
+        set_enabled(true);
+        reset();
+        {
+            let _g = time(OpClass::Gemm);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        {
+            let _g = time(OpClass::Vjp);
+        }
+        set_enabled(false);
+        let snap = snapshot();
+        let gemm = snap.iter().find(|(n, _, _)| *n == "gemm").unwrap();
+        assert!(gemm.1 > 0, "gemm nanos accumulated");
+        assert_eq!(gemm.2, 1, "one gemm call");
+        let b = breakdown();
+        assert!(b.starts_with("gemm:"), "largest class leads: {b}");
+        assert!(!b.contains(','), "must survive CSV cells: {b}");
+        reset();
+        assert_eq!(breakdown(), "-");
+    }
+}

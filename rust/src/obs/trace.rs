@@ -1,0 +1,399 @@
+//! Structured span tracing into preallocated per-thread ring buffers,
+//! exported as chrome://tracing JSON (load in Perfetto or
+//! `chrome://tracing`).
+//!
+//! Design (DESIGN.md §12):
+//!
+//! * A global `ENABLED` flag (relaxed atomic). Every instrumentation site
+//!   is `obs::trace::span("name", Cat::…)` returning a [`SpanGuard`];
+//!   when tracing is off the guard holds no timestamp — the whole site
+//!   compiles to one atomic load and a branch, with no clock read.
+//! * Each recording thread owns one [`Ring`]: a `Vec<Span>` preallocated
+//!   at registration (capacity [`set_ring_capacity`], default
+//!   [`DEFAULT_RING_CAP`]), written head-forward with overwrite-oldest
+//!   semantics. Pushing a span is an index write — **zero allocation in
+//!   steady state**, proven by `rust/tests/zero_alloc.rs` with the
+//!   counting allocator. A thread's ring is created on its *first* span
+//!   (warm-up territory), never in the measured window.
+//! * Span names are `&'static str` and payloads are two `u32` args, so a
+//!   [`Span`] is `Copy` and recording never formats or allocates.
+//! * [`export_json`] walks every registered ring (oldest span first) and
+//!   renders the Chrome `traceEvents` array, one `tid` per ring plus a
+//!   `thread_name` metadata event.
+//!
+//! Timestamps are nanoseconds since the trace epoch (first
+//! [`set_enabled`]`(true)`), rendered as microseconds in the export.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity in spans (`obs.ring_cap` config key).
+pub const DEFAULT_RING_CAP: usize = 16 * 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Every ring ever registered (one per recording thread), for export.
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    /// This thread's ring; created on first record, registered in
+    /// [`RINGS`].
+    static LOCAL: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn tracing on or off globally. The first enable pins the trace
+/// epoch; rings persist across off/on cycles (use [`reset`] to clear).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are being recorded (one relaxed load).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Capacity (in spans) for rings created *after* this call; existing
+/// rings keep their allocation. Clamped to at least 16.
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(16), Ordering::Relaxed);
+}
+
+/// Span category — the Chrome trace `cat` field, one per subsystem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cat {
+    /// Whole fwd/bwd passes and training steps.
+    Engine,
+    /// One frontier level (batching task).
+    Level,
+    /// Kernel calls: GEMM, MatMul data-gradient, fused elementwise.
+    Kernel,
+    /// Worker-pool dispatch and shard execution.
+    Pool,
+    /// Serve stages: queue wait, batch forming, merge, exec, respond.
+    Serve,
+}
+
+impl Cat {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Engine => "engine",
+            Cat::Level => "level",
+            Cat::Kernel => "kernel",
+            Cat::Pool => "pool",
+            Cat::Serve => "serve",
+        }
+    }
+}
+
+/// One recorded span: `Copy`, fixed-size, no owned data — pushing it is
+/// an index write.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub name: &'static str,
+    pub cat: Cat,
+    /// Nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Site-defined payload (e.g. task index / row count).
+    pub a: u32,
+    pub b: u32,
+}
+
+impl Span {
+    const EMPTY: Span =
+        Span { name: "", cat: Cat::Engine, start_ns: 0, dur_ns: 0, a: 0, b: 0 };
+}
+
+/// Fixed-capacity overwrite-oldest span store. `spans` is fully
+/// preallocated at construction (`len == capacity`); `push` writes at
+/// `head` and wraps — an over-full ring silently drops its oldest spans,
+/// never errors, never grows.
+#[derive(Debug)]
+struct Ring {
+    /// Registration-time thread name (the export's `thread_name`).
+    thread: String,
+    spans: Vec<Span>,
+    /// Next write index.
+    head: usize,
+    /// Total spans ever pushed (`> spans.len()` ⇒ the ring has wrapped).
+    written: u64,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize, thread: String) -> Ring {
+        Ring { thread, spans: vec![Span::EMPTY; cap], head: 0, written: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, s: Span) {
+        self.spans[self.head] = s;
+        self.head = (self.head + 1) % self.spans.len();
+        self.written += 1;
+    }
+
+    /// Live spans, oldest first (the retained window after any wrap).
+    fn oldest_first(&self) -> impl Iterator<Item = &Span> {
+        let wrapped = self.written > self.spans.len() as u64;
+        let (tail, front) = if wrapped {
+            (&self.spans[self.head..], &self.spans[..self.head])
+        } else {
+            (&self.spans[..self.head], &self.spans[..0])
+        };
+        tail.iter().chain(front.iter())
+    }
+
+    fn live(&self) -> usize {
+        (self.written as usize).min(self.spans.len())
+    }
+}
+
+/// Record a finished span into this thread's ring. The ring (and its
+/// registry slot) is created on the thread's first span — the only
+/// allocating path, reached during warm-up, never again.
+fn record(s: Span) {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.is_none() {
+            let name = std::thread::current()
+                .name()
+                .unwrap_or("thread")
+                .to_string();
+            let ring = Arc::new(Mutex::new(Ring::with_capacity(
+                RING_CAP.load(Ordering::Relaxed),
+                name,
+            )));
+            RINGS.lock().unwrap().push(Arc::clone(&ring));
+            *l = Some(ring);
+        }
+        l.as_ref().unwrap().lock().unwrap().push(s);
+    });
+}
+
+/// RAII span: created by [`span`], records on drop. When tracing is
+/// disabled `start` is `None` and drop is a no-op (no clock was read).
+#[must_use = "a span guard measures until it is dropped"]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: Cat,
+    a: u32,
+    b: u32,
+    start: Option<Instant>,
+}
+
+impl SpanGuard {
+    /// Attach the two payload args (rendered under `args` in the export).
+    #[inline]
+    pub fn args(mut self, a: u32, b: u32) -> SpanGuard {
+        self.a = a;
+        self.b = b;
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            record(Span {
+                name: self.name,
+                cat: self.cat,
+                start_ns: t0.saturating_duration_since(epoch()).as_nanos()
+                    as u64,
+                dur_ns: t0.elapsed().as_nanos() as u64,
+                a: self.a,
+                b: self.b,
+            });
+        }
+    }
+}
+
+/// Open a span; it records when the returned guard drops. This is the
+/// one instrumentation entry point — when tracing is disabled it costs a
+/// relaxed load and a branch.
+#[inline]
+pub fn span(name: &'static str, cat: Cat) -> SpanGuard {
+    SpanGuard { name, cat, a: 0, b: 0, start: enabled().then(Instant::now) }
+}
+
+/// Record a span retroactively from two timestamps the caller already
+/// holds (e.g. a request's queue wait: `enqueued_at → exec start`).
+#[inline]
+pub fn record_span(
+    name: &'static str,
+    cat: Cat,
+    start: Instant,
+    end: Instant,
+    a: u32,
+    b: u32,
+) {
+    if !enabled() {
+        return;
+    }
+    record(Span {
+        name,
+        cat,
+        start_ns: start.saturating_duration_since(epoch()).as_nanos() as u64,
+        dur_ns: end.saturating_duration_since(start).as_nanos() as u64,
+        a,
+        b,
+    });
+}
+
+/// Total spans recorded since the last [`reset`] (including any the
+/// rings have since overwritten).
+pub fn total_recorded() -> u64 {
+    RINGS
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|r| r.lock().unwrap().written)
+        .sum()
+}
+
+/// Spans currently retained across all rings.
+pub fn total_live() -> usize {
+    RINGS.lock().unwrap().iter().map(|r| r.lock().unwrap().live()).sum()
+}
+
+/// Clear every ring's contents (the allocations are kept — rings stay
+/// registered at full capacity).
+pub fn reset() {
+    for ring in RINGS.lock().unwrap().iter() {
+        let mut r = ring.lock().unwrap();
+        r.head = 0;
+        r.written = 0;
+    }
+}
+
+fn push_event(out: &mut String, first: &mut bool, event: &str) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push_str(event);
+}
+
+/// Render every ring as a Chrome `traceEvents` JSON document: one `tid`
+/// per ring (with a `thread_name` metadata event), complete (`"ph":"X"`)
+/// events with microsecond `ts`/`dur` and the two span args.
+pub fn export_json() -> String {
+    let rings = RINGS.lock().unwrap();
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for (i, ring) in rings.iter().enumerate() {
+        let r = ring.lock().unwrap();
+        let tid = i + 1;
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                 \"name\":\"thread_name\",\"args\":{{\"name\":{:?}}}}}",
+                r.thread
+            ),
+        );
+        for s in r.oldest_first() {
+            push_event(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"name\":{:?},\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\
+                     \"tid\":{tid},\"ts\":{:.3},\"dur\":{:.3},\
+                     \"args\":{{\"a\":{},\"b\":{}}}}}",
+                    s.name,
+                    s.cat.name(),
+                    s.start_ns as f64 / 1e3,
+                    s.dur_ns as f64 / 1e3,
+                    s.a,
+                    s.b
+                ),
+            );
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write [`export_json`] to `path`.
+pub fn write_json(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, export_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The overwrite-oldest contract: a full ring keeps accepting spans,
+    /// silently dropping the oldest, and always reports the newest
+    /// `capacity` spans oldest-first.
+    #[test]
+    fn full_ring_overwrites_oldest_spans_without_error() {
+        let mut r = Ring::with_capacity(4, "t".to_string());
+        assert_eq!(r.live(), 0);
+        for i in 0..3u32 {
+            r.push(Span { a: i, ..Span::EMPTY });
+        }
+        assert_eq!(r.live(), 3);
+        let got: Vec<u32> = r.oldest_first().map(|s| s.a).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+        // wrap several times over
+        for i in 3..11u32 {
+            r.push(Span { a: i, ..Span::EMPTY });
+        }
+        assert_eq!(r.written, 11);
+        assert_eq!(r.live(), 4, "capacity bounds the retained window");
+        let got: Vec<u32> = r.oldest_first().map(|s| s.a).collect();
+        assert_eq!(got, vec![7, 8, 9, 10], "newest 4, oldest first");
+        // exactly-full boundary: written == capacity, no wrap yet
+        let mut r = Ring::with_capacity(2, "t".to_string());
+        r.push(Span { a: 1, ..Span::EMPTY });
+        r.push(Span { a: 2, ..Span::EMPTY });
+        let got: Vec<u32> = r.oldest_first().map(|s| s.a).collect();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    /// One test for all the global-state behavior (enable → record →
+    /// export → disable), so parallel test threads never race on the
+    /// process-wide flag mid-assertion.
+    #[test]
+    fn spans_record_and_export_as_chrome_json() {
+        // disabled: no clock read, nothing recorded
+        let g = span("idle", Cat::Engine);
+        assert!(g.start.is_none());
+        drop(g);
+
+        set_enabled(true);
+        let before = total_recorded();
+        {
+            let _g = span("fwd", Cat::Engine).args(3, 128);
+        }
+        let t0 = Instant::now();
+        record_span("queue", Cat::Serve, t0, Instant::now(), 7, 0);
+        assert!(total_recorded() >= before + 2);
+
+        let j = export_json();
+        set_enabled(false);
+        assert!(j.contains("\"fwd\""));
+        assert!(j.contains("\"queue\""));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("thread_name"));
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.len() >= 3, "metadata + 2 spans");
+
+        // disabled again: a guard holds no timestamp
+        assert!(span("off", Cat::Kernel).start.is_none());
+    }
+}

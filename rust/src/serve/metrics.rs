@@ -1,14 +1,21 @@
 //! Serving metrics: latency percentiles (p50/p95/p99), a fixed-bucket
-//! latency histogram, batch-size distribution and queue-depth gauges.
+//! latency histogram, batch-size distribution and queue-depth gauges —
+//! all held as typed instruments in an [`obs::Registry`](crate::obs::Registry)
+//! (DESIGN.md §12), so a `--metrics-addr` exposition thread can render
+//! the live server's counters while the loop records.
 //!
 //! Observation is allocation-free once reserved (`reserve_latencies`):
 //! the latency reservoir, histogram and batch-size counters are all
 //! grow-only arenas, so the serve loop can record every response without
 //! perturbing its own tail latencies. Summarization (`report`) sorts a
-//! copy and is meant to run once, off the hot path.
+//! copy and is meant to run once, off the hot path. The report's shape
+//! (and its JSON form) is unchanged by the registry migration — `bench
+//! --check` baselines stay comparable.
 
+use std::sync::Arc;
+
+use crate::obs::{Counter, CounterVec, Gauge, Hist, Registry, Reservoir};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 use crate::util::stats::{fmt_duration, Histogram, Summary};
 
 /// Hard cap on the percentile reservoir: beyond this many responses the
@@ -18,151 +25,134 @@ use crate::util::stats::{fmt_duration, Histogram, Summary};
 /// (The histogram always counts every response exactly.)
 const MAX_LAT_SAMPLES: usize = 65_536;
 
-/// Hot-path recorder owned by the server loop.
+/// Seed of the reservoir's deterministic replacement stream (unchanged
+/// across the registry migration, so sampled percentiles reproduce).
+const LAT_SEED: u64 = 0x5A3E;
+
+/// Hot-path recorder owned by the server loop: handles onto the typed
+/// instruments of a per-server [`Registry`] (no process-global state —
+/// two servers never share counters).
 #[derive(Debug)]
 pub struct ServeMetrics {
+    reg: Registry,
     /// Latency reservoir (seconds): every response until
-    /// [`MAX_LAT_SAMPLES`], a uniform sample of all responses after.
-    lat: Vec<f64>,
-    /// Total responses observed (reservoir denominator).
-    lat_seen: u64,
-    /// Deterministic index source for the sampling replacement.
-    rng: Rng,
-    hist: Histogram,
+    /// [`MAX_LAT_SAMPLES`], a uniform Algorithm-R sample after.
+    lat: Arc<Reservoir>,
+    hist: Arc<Hist>,
     /// `batch_sizes[k]` = number of batches that served exactly `k`
-    /// requests (`0..=max_batch`).
-    batch_sizes: Vec<u64>,
-    n_batches: u64,
-    depth_sum: u64,
-    depth_max: usize,
-    depth_samples: u64,
-    rejected: u64,
-    shed: u64,
+    /// requests (`0..=max_batch`, clamped into the last slot).
+    batch_sizes: Arc<CounterVec>,
+    n_batches: Arc<Counter>,
+    depth: Arc<Gauge>,
+    rejected: Arc<Counter>,
+    shed: Arc<Counter>,
     /// Bucket-slack rows scheduled across all batches (what the
     /// agreement policy minimizes).
-    padded_rows: u64,
+    padded_rows: Arc<Counter>,
 }
 
 impl ServeMetrics {
     pub fn new(max_batch: usize) -> ServeMetrics {
+        let reg = Registry::new();
         ServeMetrics {
-            lat: Vec::new(),
-            lat_seen: 0,
-            rng: Rng::new(0x5A3E),
-            hist: Histogram::latency_default(),
-            batch_sizes: vec![0; max_batch.max(1) + 1],
-            n_batches: 0,
-            depth_sum: 0,
-            depth_max: 0,
-            depth_samples: 0,
-            rejected: 0,
-            shed: 0,
-            padded_rows: 0,
+            lat: reg.reservoir("cavs_latency_s", MAX_LAT_SAMPLES, LAT_SEED),
+            hist: reg.hist_latency("cavs_latency_hist_s"),
+            batch_sizes: reg
+                .counter_vec("cavs_batch_size", max_batch.max(1) + 1),
+            n_batches: reg.counter("cavs_batches"),
+            depth: reg.gauge("cavs_queue_depth"),
+            rejected: reg.counter("cavs_rejected"),
+            shed: reg.counter("cavs_shed"),
+            padded_rows: reg.counter("cavs_padded_rows"),
+            reg,
         }
+    }
+
+    /// Handle onto the underlying registry (clone-cheap) — what `cavs
+    /// serve --metrics-addr` hands its exposition thread and the
+    /// shutdown report renders.
+    pub fn registry(&self) -> Registry {
+        self.reg.clone()
     }
 
     /// Pre-size the latency reservoir (the zero-alloc steady state needs
     /// the expected response count reserved up front; capped at the
     /// reservoir bound).
     pub fn reserve_latencies(&mut self, n: usize) {
-        self.lat.reserve(n.min(MAX_LAT_SAMPLES));
+        self.lat.reserve(n);
     }
 
     pub fn observe_latency(&mut self, seconds: f64) {
-        self.lat_seen += 1;
-        if self.lat.len() < MAX_LAT_SAMPLES {
-            self.lat.push(seconds);
-        } else {
-            // Algorithm R: keep each of the `lat_seen` responses in the
-            // reservoir with equal probability, allocation-free.
-            let j = (self.rng.next_u64() % self.lat_seen) as usize;
-            if j < MAX_LAT_SAMPLES {
-                self.lat[j] = seconds;
-            }
-        }
+        self.lat.observe(seconds);
         self.hist.record(seconds);
     }
 
     pub fn observe_batch(&mut self, k: usize) {
-        self.n_batches += 1;
-        let i = k.min(self.batch_sizes.len() - 1);
-        self.batch_sizes[i] += 1;
+        self.n_batches.inc();
+        self.batch_sizes.inc(k);
     }
 
     pub fn observe_queue_depth(&mut self, depth: usize) {
-        self.depth_sum += depth as u64;
-        self.depth_max = self.depth_max.max(depth);
-        self.depth_samples += 1;
+        self.depth.observe(depth as u64);
     }
 
     pub fn add_rejected(&mut self, n: u64) {
-        self.rejected += n;
+        self.rejected.add(n);
     }
 
     /// Requests refused by deadline admission ([`AdmitError::Shed`](super::AdmitError::Shed)).
     pub fn add_shed(&mut self, n: u64) {
-        self.shed += n;
+        self.shed.add(n);
     }
 
     /// Bucket-slack rows the last batch scheduled (recorded per batch by
     /// the server from `ForwardExec::last_batch_pad`).
     pub fn observe_padding(&mut self, rows: u64) {
-        self.padded_rows += rows;
+        self.padded_rows.add(rows);
     }
 
     pub fn n_responses(&self) -> usize {
-        self.lat_seen as usize
+        self.lat.seen() as usize
     }
 
     pub fn reset(&mut self) {
-        self.lat.clear();
-        self.lat_seen = 0;
-        self.hist.reset();
-        self.batch_sizes.fill(0);
-        self.n_batches = 0;
-        self.depth_sum = 0;
-        self.depth_max = 0;
-        self.depth_samples = 0;
-        self.rejected = 0;
-        self.shed = 0;
-        self.padded_rows = 0;
+        self.reg.reset();
     }
 
     /// Summarize (off the hot path): percentiles over the reservoir,
     /// throughput over `wall_s`.
     pub fn report(&self, wall_s: f64) -> ServeReport {
-        let lat = if self.lat.is_empty() {
-            Summary::default()
-        } else {
-            Summary::from_samples(&self.lat)
-        };
-        let served = self.lat_seen;
+        let lat = self.lat.with_samples(|s| {
+            if s.is_empty() {
+                Summary::default()
+            } else {
+                Summary::from_samples(s)
+            }
+        });
+        let served = self.lat.seen();
+        let n_batches = self.n_batches.get();
         ServeReport {
             n_responses: served,
-            n_batches: self.n_batches,
-            rejected: self.rejected,
-            shed: self.shed,
-            padded_rows: self.padded_rows,
+            n_batches,
+            rejected: self.rejected.get(),
+            shed: self.shed.get(),
+            padded_rows: self.padded_rows.get(),
             wall_s,
             throughput_rps: if wall_s > 0.0 {
                 served as f64 / wall_s
             } else {
                 0.0
             },
-            batch_mean: if self.n_batches > 0 {
-                served as f64 / self.n_batches as f64
+            batch_mean: if n_batches > 0 {
+                served as f64 / n_batches as f64
             } else {
                 0.0
             },
             latency: lat,
-            queue_depth_mean: if self.depth_samples > 0 {
-                self.depth_sum as f64 / self.depth_samples as f64
-            } else {
-                0.0
-            },
-            queue_depth_max: self.depth_max,
-            batch_sizes: self.batch_sizes.clone(),
-            hist: self.hist.clone(),
+            queue_depth_mean: self.depth.mean(),
+            queue_depth_max: self.depth.max() as usize,
+            batch_sizes: self.batch_sizes.snapshot(),
+            hist: self.hist.snapshot(),
         }
     }
 }

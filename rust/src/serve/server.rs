@@ -26,6 +26,7 @@ use crate::exec::pool::{Sharder, WorkerPool};
 use crate::exec::{Engine, EngineOpts, MathMode};
 use crate::graph::GraphBatch;
 use crate::models::{CellSpec, Model};
+use crate::obs;
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 use crate::vertex::interp::ProgramCell;
@@ -259,7 +260,9 @@ impl<E: ForwardExec, P: FormPolicy> Server<E, P> {
         q: &RequestQueue,
         on_response: &mut dyn FnMut(Response),
     ) -> Result<bool> {
+        let form_sp = obs::span("form", obs::Cat::Serve);
         let k = self.former.form(q);
+        drop(form_sp.args(k as u32, 0));
         if k == 0 {
             return Ok(false);
         }
@@ -289,6 +292,14 @@ impl<E: ForwardExec, P: FormPolicy> Server<E, P> {
             return Err(e);
         }
         let done = Instant::now();
+        obs::trace::record_span(
+            "exec",
+            obs::Cat::Serve,
+            infer_t0,
+            done,
+            k as u32,
+            self.merged.n_vertices as u32,
+        );
         // feed the measured per-request service time back to the queue:
         // deadline admission and the adaptive policy both condition on it
         q.note_service(
@@ -302,7 +313,18 @@ impl<E: ForwardExec, P: FormPolicy> Server<E, P> {
         self.metrics.observe_batch(k);
         self.metrics.observe_queue_depth(q.depth());
         self.metrics.observe_padding(self.exec.last_batch_pad() as u64);
+        let _respond = obs::span("respond", obs::Cat::Serve).args(k as u32, 0);
         for (i, request) in self.former.drain_batch(k).enumerate() {
+            // retroactive queue-wait span: the timestamps already exist,
+            // so the stage traces with no extra clock reads per request
+            obs::trace::record_span(
+                "queue",
+                obs::Cat::Serve,
+                request.enqueued_at,
+                infer_t0,
+                request.id as u32,
+                k as u32,
+            );
             let latency_s =
                 done.duration_since(request.enqueued_at).as_secs_f64();
             self.metrics.observe_latency(latency_s);

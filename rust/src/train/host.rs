@@ -18,6 +18,7 @@ use crate::exec::pool::{Sharder, WorkerPool};
 use crate::exec::MathMode;
 use crate::graph::{Dataset, GraphBatch, InputGraph};
 use crate::models::CellSpec;
+use crate::obs;
 use crate::scheduler::{self, Policy};
 use crate::util::rng::Rng;
 use crate::vertex::interp::ProgramCell;
@@ -95,6 +96,8 @@ impl HostTrainer {
     /// (before the step) and the vertex count.
     pub fn step(&mut self, graphs: &[&InputGraph], lr: f32) -> (f64, usize) {
         let batch = GraphBatch::new(graphs, self.arity);
+        let _sp = obs::span("step", obs::Cat::Engine)
+            .args(graphs.len() as u32, batch.n_vertices as u32);
         let tasks = scheduler::schedule(&batch, Policy::Batched, &self.buckets);
         let ex = if self.threads > 1 {
             Sharder::Pool(&self.pool)

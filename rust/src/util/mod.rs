@@ -9,7 +9,6 @@ pub mod json;
 pub mod logger;
 pub mod propcheck;
 pub mod rng;
-pub mod trace;
 pub mod stats;
 
 /// Round `m` up to the next power-of-two bucket, capped at `max_bucket`.

@@ -34,6 +34,7 @@ use super::opt::{OptProgram, OptStats, Step, WideGemm};
 use super::{OpKind, OpNode, Program, ProgramMeta};
 use crate::exec::kernels::{self, Kernels, MathMode, Variant};
 use crate::exec::parallel::{HostCell, LevelCell};
+use crate::obs;
 use crate::util::rng::Rng;
 
 /// The logistic function shared by the interpreter, the hand-written
@@ -946,9 +947,26 @@ impl ProgramCell {
         let tc = p.tape_stride;
         let m = rows.len();
         for step in &p.steps {
+            // Observability is attributed op-outer — one guard per batched
+            // sweep, never per row (DESIGN.md §12): profiling classes
+            // Gemm / Fused / Move, spans only for the compute sweeps.
             match step {
-                Step::Gemm { wide } => self.gemm_rows(o, *wide, tape, tc, m),
+                Step::Gemm { wide } => {
+                    let _prof = obs::profile::time(obs::OpClass::Gemm);
+                    let _sp = obs::span("gemm", obs::Cat::Kernel)
+                        .args(m as u32, p.wide[*wide].n as u32);
+                    self.gemm_rows(o, *wide, tape, tc, m);
+                }
                 _ => {
+                    let fused = matches!(step, Step::Fused { .. });
+                    let _prof = obs::profile::time(if fused {
+                        obs::OpClass::Fused
+                    } else {
+                        obs::OpClass::Move
+                    });
+                    let _sp = fused.then(|| {
+                        obs::span("fused", obs::Cat::Kernel).args(m as u32, 0)
+                    });
                     for r in 0..m {
                         let abs = rows.start + r;
                         self.exec_step_row(
@@ -1189,9 +1207,13 @@ impl LevelCell for ProgramCell {
         // everything else per row — per-row arithmetic is the reference's
         for (i, node) in p.nodes.iter().enumerate().rev() {
             if matches!(node.kind, OpKind::MatMul { .. }) {
+                let _prof = obs::profile::time(obs::OpClass::Din);
+                let _sp = obs::span("din", obs::Cat::Kernel)
+                    .args(m as u32, node.cols as u32);
                 self.matmul_din_rows(o, i, node, adj, lac, m);
                 continue;
             }
+            let _prof = obs::profile::time(obs::OpClass::Vjp);
             for r in 0..m {
                 self.vjp_node_row(
                     o,
@@ -1209,6 +1231,7 @@ impl LevelCell for ProgramCell {
     fn lvl_param_grads(&self, rows: usize, tape: &[f32], adj: &[f32], pg: &mut [Vec<f32>]) {
         let o = self.opt.as_ref().expect("level execution needs a compiled plan");
         let (tc, lac) = (o.plan.tape_stride, o.plan.adj_stride);
+        let _prof = obs::profile::time(obs::OpClass::Pgrad);
         for r in 0..rows {
             self.acc_pg_row(o, &tape[r * tc..(r + 1) * tc], &adj[r * lac..(r + 1) * lac], pg);
         }

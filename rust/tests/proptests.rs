@@ -794,6 +794,90 @@ fn prop_fast_math_close_to_exact_and_thread_invariant() {
     });
 }
 
+/// Observability is a pure observer (DESIGN.md §12): running the exact
+/// same frontier batch with the span tracer and the per-op-class
+/// profiler enabled produces **bitwise identical** forward states,
+/// backward gradients, input-table gradients, parameter gradients and
+/// traffic accounting to the untraced run, at every thread count. The
+/// instrumentation may read clocks and fill rings, but it may never
+/// touch a result bit.
+#[test]
+fn prop_observability_never_perturbs_results() {
+    use cavs::models::CellSpec;
+
+    check("obs-transparent", 10, |rng| {
+        let vocab = 20usize;
+        let h = 1 + rng.below(6);
+        for cell in ["gru", "treelstm"] {
+            let spec = CellSpec::lookup(cell, h).unwrap();
+            let arity = spec.arity();
+            let graphs: Vec<InputGraph> = if arity == 1 {
+                let k = 1 + rng.below(6);
+                (0..k)
+                    .map(|_| {
+                        let len = 1 + rng.below(10);
+                        let toks: Vec<i32> =
+                            (0..len).map(|_| rng.below(vocab) as i32).collect();
+                        let labs = vec![-1; len];
+                        InputGraph::chain(&toks, &labs)
+                    })
+                    .collect()
+            } else {
+                random_graphs(rng)
+            };
+            let refs: Vec<&InputGraph> = graphs.iter().collect();
+            let batch = GraphBatch::new(&refs, arity);
+            let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+            let xtable: Vec<f32> =
+                (0..vocab * h).map(|_| rng.normal_f32(0.5)).collect();
+            let mut prng = Rng::new(3000 + h as u64);
+            let pc = spec.random_cell(&mut prng, 0.2).unwrap();
+
+            cavs::obs::trace::set_enabled(false);
+            cavs::obs::profile::set_enabled(false);
+            let base = run_host_frontier(&batch, &tasks, &pc, &xtable, 1, true);
+
+            cavs::obs::trace::set_ring_capacity(64);
+            cavs::obs::trace::set_enabled(true);
+            cavs::obs::profile::set_enabled(true);
+            let spans_before = cavs::obs::trace::total_recorded();
+            for threads in [1usize, 2, 4] {
+                let r =
+                    run_host_frontier(&batch, &tasks, &pc, &xtable, threads, true);
+                assert_eq!(
+                    base.states.as_slice(),
+                    r.states.as_slice(),
+                    "{cell} h={h} t={threads}: tracing perturbed forward states"
+                );
+                assert_eq!(
+                    base.grads.as_ref().unwrap().as_slice(),
+                    r.grads.as_ref().unwrap().as_slice(),
+                    "{cell} h={h} t={threads}: tracing perturbed state gradients"
+                );
+                assert_eq!(
+                    base.x_grads, r.x_grads,
+                    "{cell} h={h} t={threads}: tracing perturbed x-grads"
+                );
+                assert_eq!(
+                    base.param_grads, r.param_grads,
+                    "{cell} h={h} t={threads}: tracing perturbed param grads"
+                );
+                assert_eq!(
+                    (base.traffic_bytes, base.traffic_ops),
+                    (r.traffic_bytes, r.traffic_ops),
+                    "{cell} h={h} t={threads}: tracing perturbed traffic"
+                );
+            }
+            cavs::obs::trace::set_enabled(false);
+            cavs::obs::profile::set_enabled(false);
+            assert!(
+                cavs::obs::trace::total_recorded() > spans_before,
+                "{cell} h={h}: the traced runs recorded no spans"
+            );
+        }
+    });
+}
+
 /// The Program interpreter is **bitwise identical** to the hand-written
 /// host cells on the same weights: both sides perform the same f32
 /// operations in the same order (matmul accumulation order, add/bias

@@ -151,4 +151,26 @@ fn steady_state_serve_loop_allocates_nothing() {
             &format!("adaptive, threads={threads}"),
         );
     }
+
+    // Observability (DESIGN.md §12): the serve stages trace through the
+    // same preallocated rings — `form`/`exec`/`respond` guards plus the
+    // retroactive per-request `queue` span reuse timestamps the server
+    // already takes — so a traced steady-state serve loop still allocates
+    // nothing. Rings are created during `run_policy`'s warm-up window.
+    cavs::obs::trace::set_ring_capacity(512);
+    cavs::obs::trace::set_enabled(true);
+    let spans_before = cavs::obs::trace::total_recorded();
+    for threads in [1usize, 2] {
+        run_policy(
+            Fixed { max_batch: 4, max_delay: Duration::ZERO },
+            threads,
+            &graphs,
+            &format!("fixed traced, threads={threads}"),
+        );
+    }
+    cavs::obs::trace::set_enabled(false);
+    assert!(
+        cavs::obs::trace::total_recorded() > spans_before,
+        "the traced serve window recorded no spans"
+    );
 }

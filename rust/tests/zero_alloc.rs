@@ -172,4 +172,49 @@ fn steady_state_frontier_fwd_bwd_loop_allocates_nothing() {
         "steady-state reference interpreter fwd+bwd+pgrad heap-allocated"
     );
     assert!(hf.param_grads().unwrap().iter().flatten().any(|&v| v != 0.0));
+
+    // Observability (DESIGN.md §12): with the span tracer AND the
+    // per-op-class profiler turned on, the same compiled-path loop still
+    // allocates nothing — each thread's ring is preallocated on its first
+    // span (warm-up territory) and overwrites oldest thereafter; the
+    // profiler is a fixed array of atomics. Sequential and pooled alike
+    // (the pool's worker threads get their rings during warm-up too).
+    cavs::obs::trace::set_ring_capacity(512);
+    cavs::obs::trace::set_enabled(true);
+    cavs::obs::profile::set_enabled(true);
+    {
+        let pool2 = WorkerPool::new(2);
+        for (what, ex) in [
+            ("sequential", Sharder::Sequential),
+            ("pooled", Sharder::Pool(&pool2)),
+        ] {
+            let mut hf = HostFrontier::new();
+            for _ in 0..2 {
+                hf.run(&batch, &tasks, &pc, &xtable, ex, true);
+            }
+            let spans_before = cavs::obs::trace::total_recorded();
+            let before = ALLOCS.load(Ordering::SeqCst);
+            for _ in 0..3 {
+                hf.run(&batch, &tasks, &pc, &xtable, ex, true);
+            }
+            let after = ALLOCS.load(Ordering::SeqCst);
+            assert_eq!(
+                after - before,
+                0,
+                "steady-state traced+profiled fwd+bwd heap-allocated ({what})"
+            );
+            assert!(
+                cavs::obs::trace::total_recorded() > spans_before,
+                "the traced window recorded no spans ({what})"
+            );
+        }
+    }
+    cavs::obs::profile::set_enabled(false);
+    cavs::obs::trace::set_enabled(false);
+    assert!(
+        cavs::obs::profile::snapshot().iter().any(|&(_, ns, calls)| {
+            ns > 0 && calls > 0
+        }),
+        "the profiled window attributed no kernel time"
+    );
 }
