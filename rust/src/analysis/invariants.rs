@@ -1,0 +1,166 @@
+//! The registry of named soundness invariants (DESIGN.md §13).
+//!
+//! Every `unsafe` site in the crate carries a `// SAFETY:` comment naming
+//! the invariant it relies on with an `[inv:<tag>]` tag. This table is
+//! the single source of truth for those tags: the xtask lint
+//! (`cargo run -p xtask -- safety-lint`) parses the `tag:` literals below
+//! and fails CI on any unsafe site whose tag is missing or unregistered,
+//! and `cavs check` prints the registry so the mapping from invariant to
+//! proving pass stays discoverable.
+//!
+//! To register a new invariant: add an [`Invariant`] entry here, state
+//! which analysis pass (or test) proves it, and reference it from the new
+//! unsafe site's SAFETY comment as `[inv:your-tag]`.
+
+/// One named invariant an `unsafe` site may rely on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Invariant {
+    /// stable kebab-case tag referenced as `[inv:tag]` in SAFETY comments
+    pub tag: &'static str,
+    /// one-line statement of the invariant
+    pub what: &'static str,
+    /// which analysis pass, runtime check or test proves it
+    pub proved_by: &'static str,
+}
+
+/// Every registered invariant, in taxonomy order (sharding, layout,
+/// pool, dispatch).
+pub const INVARIANTS: &[Invariant] = &[
+    Invariant {
+        tag: "shard-rows",
+        what: "shard s owns the contiguous row range shard_range(rows, \
+               shards, s); ranges are pairwise disjoint and tile [0, rows)",
+        proved_by: "analysis::plan::check_shard_rows (replayed for every \
+                    thread count by `cavs check`; debug-checked at schedule)",
+    },
+    Invariant {
+        tag: "owner-partition",
+        what: "owner partitioning routes key v to shard v % shards, so no \
+               two shards ever touch the same destination row, and each \
+               shard's keys stay in ascending source order",
+        proved_by: "analysis::plan::check_owner_partition (scatter, \
+                    scatter_add and embedding-grad owner rows)",
+    },
+    Invariant {
+        tag: "slot-window",
+        what: "a gather/scatter slot writes the column window [slot*c, \
+               slot*c + c) of its row, inside the destination pitch and \
+               disjoint from every other slot's window",
+        proved_by: "analysis::plan::check_slot_windows",
+    },
+    Invariant {
+        tag: "level-frontier",
+        what: "a frontier level's write rows are disjoint from the child \
+               rows it reads: children were published by strictly earlier \
+               levels",
+        proved_by: "analysis::plan::check_levels (debug-checked at \
+                    GraphBatch merge; shadow-replayed under shadow-check)",
+    },
+    Invariant {
+        tag: "layout-disjoint",
+        what: "in the compiled value layout, a step's output storage is \
+               disjoint from every input view it reads; alias chains are \
+               acyclic and resolve in bounds",
+        proved_by: "OptProgram::verify (analysis::layout), run at cell \
+                    registration and bind",
+    },
+    Invariant {
+        tag: "adjoint-private",
+        what: "every value-producing node owns a private adjoint slot; \
+               adjoint slots never alias each other or the forward tape",
+        proved_by: "OptProgram::verify (analysis::layout)",
+    },
+    Invariant {
+        tag: "tape-stride",
+        what: "level execution strides rows at cols rounded up to 16 \
+               floats, so a shard's sub-block never shares a cache line \
+               with its neighbour's",
+        proved_by: "OptProgram::verify (analysis::layout) checks the \
+                    padding arithmetic",
+    },
+    Invariant {
+        tag: "pool-quiesce",
+        what: "WorkerPool::run publishes the erased job under the submit \
+               lock and does not return (or unwind) until every worker \
+               reported done for the epoch, so the erased 'static borrow \
+               never outlives the real closure",
+        proved_by: "exec::pool epoch/condvar protocol (TSan'd pool tests \
+                    in the CI soundness job)",
+    },
+    Invariant {
+        tag: "shard-scratch",
+        what: "each shard owns a private scratch slot (ShardSlots / \
+               per-shard tmp windows); slots are created one per shard \
+               and indexed only by that shard's id",
+        proved_by: "exec::pool::ShardScratch construction + \
+                    analysis::plan::check_shard_rows over the slot index \
+                    space",
+    },
+    Invariant {
+        tag: "simd-gated",
+        what: "#[target_feature] kernels are reached only through the \
+               dispatch table, which resolves a variant after probing CPU \
+               feature availability",
+        proved_by: "exec::kernels::Variant::detect / for_variant (the \
+                    kernels_dispatch suite runs every available variant)",
+    },
+    Invariant {
+        tag: "inbounds-view",
+        what: "raw-pointer region views are carved at offsets the caller \
+               proves in bounds of the backing allocation (plan row \
+               ranges or verified layout addresses)",
+        proved_by: "analysis::plan + analysis::layout bounds passes; Miri \
+                    runs the non-SIMD interpreter/memory suites in CI",
+    },
+];
+
+/// Look up a registered invariant by tag.
+pub fn lookup(tag: &str) -> Option<&'static Invariant> {
+    INVARIANTS.iter().find(|i| i.tag == tag)
+}
+
+/// Render the registry as the table `cavs check` prints.
+pub fn render() -> String {
+    let mut out = String::new();
+    for inv in INVARIANTS {
+        out.push_str(&format!(
+            "  [inv:{:<16}] {}\n{:21}proved by: {}\n",
+            inv.tag,
+            inv.what.split_whitespace().collect::<Vec<_>>().join(" "),
+            "",
+            inv.proved_by.split_whitespace().collect::<Vec<_>>().join(" "),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_unique_kebab_case_and_resolvable() {
+        let mut seen = std::collections::BTreeSet::new();
+        for inv in INVARIANTS {
+            assert!(seen.insert(inv.tag), "duplicate tag {}", inv.tag);
+            assert!(
+                inv.tag
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c == '-'),
+                "tag {} is not kebab-case",
+                inv.tag
+            );
+            assert_eq!(lookup(inv.tag), Some(inv));
+            assert!(!inv.what.is_empty() && !inv.proved_by.is_empty());
+        }
+        assert_eq!(lookup("no-such-invariant"), None);
+    }
+
+    #[test]
+    fn registry_renders_every_tag() {
+        let r = render();
+        for inv in INVARIANTS {
+            assert!(r.contains(inv.tag), "{} missing from render", inv.tag);
+        }
+    }
+}

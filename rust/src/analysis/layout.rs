@@ -1,0 +1,456 @@
+//! Pass 2: layout soundness of a compiled [`OptProgram`].
+//!
+//! The optimized executor reads and writes the forward tape through raw
+//! pointers on the strength of the view-folded value layout: every step
+//! writes a region provably disjoint from the views it reads
+//! (`[inv:layout-disjoint]`), adjoint slots are private
+//! (`[inv:adjoint-private]`), and level execution strides rows at
+//! cache-line-padded pitches (`[inv:tape-stride]`). [`verify`] re-walks
+//! the alias-chain record ([`Alloc`]) instead of trusting the resolved
+//! addresses: chains must be acyclic and in-bounds, their resolution must
+//! agree with `addr`, fresh regions must tile the tape exactly, and every
+//! scheduled step's output must be disjoint from its inputs. It runs at
+//! `Program::optimize` (hence cell registration) and at cell bind —
+//! construction-time only, zero steady-state cost.
+
+use super::{plan::WriteSet, SoundnessError};
+use crate::vertex::opt::{Alloc, OptProgram};
+use crate::vertex::OpKind;
+
+/// What [`verify`] proved, for `cavs check`'s per-cell line.
+#[derive(Debug, Clone, Default)]
+pub struct LayoutReport {
+    /// nodes whose storage was resolved and bounded
+    pub nodes: usize,
+    /// fresh (region-owning) nodes
+    pub fresh: usize,
+    /// view nodes whose alias chains were re-walked
+    pub views: usize,
+    /// (step output, input view) pairs proven disjoint
+    pub disjoint_pairs: usize,
+}
+
+fn is_real(kind: &OpKind) -> bool {
+    !matches!(kind, OpKind::Scatter | OpKind::Push)
+}
+
+fn overlap(a: (usize, usize), b: (usize, usize)) -> bool {
+    a.0 < b.1 && b.0 < a.1
+}
+
+/// Verify the layout of a compiled program. See the module docs for the
+/// property list; errors are [`SoundnessError`] values naming the
+/// offending nodes.
+pub fn verify(o: &OptProgram) -> Result<LayoutReport, SoundnessError> {
+    let n = o.nodes.len();
+    for (what, got) in [
+        ("addr", o.addr.len()),
+        ("aoff", o.aoff.len()),
+        ("alloc", o.alloc.len()),
+    ] {
+        if got != n {
+            return Err(SoundnessError::LayoutArity { what, got, nodes: n });
+        }
+    }
+
+    // a multi-segment wide-GEMM leader's fresh region holds the whole
+    // wide output; everywhere else a node's region is its own cols
+    let mut region_width: Vec<usize> =
+        o.nodes.iter().map(|x| x.cols).collect();
+    for w in &o.wide {
+        if w.segs.len() > 1 {
+            let leader = w.segs[0].node;
+            if leader >= n {
+                return Err(SoundnessError::LayoutArity {
+                    what: "wide segs",
+                    got: leader,
+                    nodes: n,
+                });
+            }
+            region_width[leader] = w.n;
+        }
+    }
+
+    let mut report = LayoutReport { nodes: n, ..LayoutReport::default() };
+
+    // ---- storage presence + alias chains ----------------------------
+    for i in 0..n {
+        let real = is_real(&o.nodes[i].kind);
+        match (real, o.alloc[i]) {
+            (true, Alloc::None) | (false, Alloc::Fresh | Alloc::At(..)) => {
+                return Err(if real {
+                    SoundnessError::MissingStorage { node: i }
+                } else {
+                    SoundnessError::PhantomStorage { node: i }
+                });
+            }
+            _ => {}
+        }
+        if !real {
+            if o.addr[i] != usize::MAX || o.aoff[i] != usize::MAX {
+                return Err(SoundnessError::PhantomStorage { node: i });
+            }
+            continue;
+        }
+        if o.addr[i] == usize::MAX {
+            return Err(SoundnessError::MissingStorage { node: i });
+        }
+        // re-walk the alias chain: acyclic (<= n hops), each view inside
+        // its backing value, and the resolution agreeing with addr
+        if let Alloc::At(..) = o.alloc[i] {
+            report.views += 1;
+            let mut cur = i;
+            let mut off_sum = 0usize;
+            let mut hops = 0usize;
+            loop {
+                match o.alloc[cur] {
+                    Alloc::At(parent, off) => {
+                        if parent >= n {
+                            return Err(SoundnessError::LayoutArity {
+                                what: "alias parent",
+                                got: parent,
+                                nodes: n,
+                            });
+                        }
+                        if !is_real(&o.nodes[parent].kind) {
+                            return Err(SoundnessError::MissingStorage {
+                                node: parent,
+                            });
+                        }
+                        if off + region_width[cur] > region_width[parent] {
+                            return Err(SoundnessError::AliasOutOfBounds {
+                                node: cur,
+                                parent,
+                                off,
+                                cols: region_width[cur],
+                                backing: region_width[parent],
+                            });
+                        }
+                        off_sum += off;
+                        cur = parent;
+                        hops += 1;
+                        if hops > n {
+                            return Err(SoundnessError::AliasCycle { node: i });
+                        }
+                    }
+                    Alloc::Fresh => break,
+                    Alloc::None => {
+                        return Err(SoundnessError::MissingStorage { node: cur })
+                    }
+                }
+            }
+            let resolved = o.addr[cur] + off_sum;
+            if resolved != o.addr[i] {
+                return Err(SoundnessError::AddrMismatch {
+                    node: i,
+                    addr: o.addr[i],
+                    resolved,
+                });
+            }
+        }
+        // every region — fresh or view — stays on the tape
+        let (lo, hi) = (o.addr[i], o.addr[i] + region_width[i]);
+        if hi > o.tape_cols {
+            return Err(SoundnessError::TapeOutOfBounds {
+                node: i,
+                lo,
+                hi,
+                tape_cols: o.tape_cols,
+            });
+        }
+    }
+
+    // ---- fresh regions tile the tape --------------------------------
+    let mut fresh = WriteSet::new();
+    for i in 0..n {
+        if matches!(o.alloc[i], Alloc::Fresh) {
+            report.fresh += 1;
+            fresh
+                .claim("fresh regions", i, o.addr[i]..o.addr[i] + region_width[i])
+                .map_err(|e| match e {
+                    SoundnessError::ShardOverlap { shard_a, shard_b, .. } => {
+                        SoundnessError::FreshOverlap {
+                            node_a: shard_a,
+                            node_b: shard_b,
+                        }
+                    }
+                    other => other,
+                })?;
+        }
+    }
+    if fresh.covered() != o.tape_cols {
+        return Err(SoundnessError::TapeCoverage {
+            covered: fresh.covered(),
+            tape_cols: o.tape_cols,
+        });
+    }
+
+    // ---- step outputs disjoint from their input views ---------------
+    // [inv:layout-disjoint]: the regions a scheduled step writes must
+    // never intersect the regions it reads. Fused members and wide GEMMs
+    // are the raw-pointer writers; concat copy steps use an
+    // overlap-tolerant copy but the layout still never overlaps them.
+    let mut check_pair = |out: usize, out_w: usize, inp: usize| {
+        let a = (o.addr[out], o.addr[out] + out_w);
+        let b = (o.addr[inp], o.addr[inp] + o.nodes[inp].cols);
+        if overlap(a, b) {
+            return Err(SoundnessError::InputAliased { node: out, input: inp });
+        }
+        report.disjoint_pairs += 1;
+        Ok(())
+    };
+    for step in &o.steps {
+        match *step {
+            crate::vertex::opt::Step::Gemm { wide } => {
+                let Some(w) = o.wide.get(wide) else {
+                    return Err(SoundnessError::LayoutArity {
+                        what: "gemm step",
+                        got: wide,
+                        nodes: o.wide.len(),
+                    });
+                };
+                let leader = w.segs[0].node;
+                check_pair(leader, w.n, w.input)?;
+            }
+            crate::vertex::opt::Step::Fused { group } => {
+                let Some(g) = o.fused.get(group) else {
+                    return Err(SoundnessError::LayoutArity {
+                        what: "fused step",
+                        got: group,
+                        nodes: o.fused.len(),
+                    });
+                };
+                for &m in &g.nodes {
+                    for &inp in &o.nodes[m].ins {
+                        check_pair(m, o.nodes[m].cols, inp)?;
+                    }
+                }
+            }
+            crate::vertex::opt::Step::Concat { node } => {
+                let mut off = 0usize;
+                for &src in &o.nodes[node].ins {
+                    // aliased inputs already live at their target offset;
+                    // copied inputs must not overlap the concat region
+                    if o.addr[src] != o.addr[node] + off {
+                        check_pair(node, o.nodes[node].cols, src)?;
+                    }
+                    off += o.nodes[src].cols;
+                }
+            }
+            crate::vertex::opt::Step::Pull { .. }
+            | crate::vertex::opt::Step::Gather { .. } => {}
+        }
+    }
+
+    // ---- adjoint slots are private ----------------------------------
+    // [inv:adjoint-private]
+    let mut adj = WriteSet::new();
+    for i in 0..n {
+        if !is_real(&o.nodes[i].kind) {
+            continue;
+        }
+        let (lo, hi) = (o.aoff[i], o.aoff[i] + o.nodes[i].cols);
+        if hi > o.adj_cols {
+            return Err(SoundnessError::AdjointOutOfBounds {
+                node: i,
+                hi,
+                adj_cols: o.adj_cols,
+            });
+        }
+        adj.claim("adjoint slots", i, lo..hi).map_err(|e| match e {
+            SoundnessError::ShardOverlap { shard_a, shard_b, .. } => {
+                SoundnessError::AdjointAliased {
+                    node_a: shard_a,
+                    node_b: shard_b,
+                }
+            }
+            other => other,
+        })?;
+    }
+
+    // ---- level-execution row pitches --------------------------------
+    // [inv:tape-stride]
+    if o.tape_stride != o.tape_cols.next_multiple_of(16) {
+        return Err(SoundnessError::BadStride {
+            what: "forward tape",
+            cols: o.tape_cols,
+            stride: o.tape_stride,
+        });
+    }
+    if o.adj_stride != o.adj_cols.next_multiple_of(16) {
+        return Err(SoundnessError::BadStride {
+            what: "adjoint tape",
+            cols: o.adj_cols,
+            stride: o.adj_stride,
+        });
+    }
+
+    // ---- the scattered state ----------------------------------------
+    let src = o.scatter_src;
+    if src >= n
+        || !is_real(&o.nodes[src].kind)
+        || o.nodes[src].cols != o.meta.state_cols
+    {
+        return Err(SoundnessError::BadScatterSrc {
+            node: src,
+            cols: o.nodes.get(src).map_or(0, |x| x.cols),
+            state_cols: o.meta.state_cols,
+        });
+    }
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vertex::programs;
+
+    fn opt(name: &str) -> OptProgram {
+        match name {
+            "lstm" => programs::lstm_program(8).optimize().unwrap(),
+            "treelstm" => programs::treelstm_program(8).optimize().unwrap(),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn shipped_layouts_verify() {
+        for name in ["lstm", "treelstm"] {
+            let r = verify(&opt(name)).unwrap();
+            assert!(r.views > 0, "{name}: no view folded?");
+            assert!(r.fresh > 0 && r.disjoint_pairs > 0);
+        }
+    }
+
+    #[test]
+    fn cyclic_alias_chain_is_rejected() {
+        let mut o = opt("lstm");
+        // find two view nodes and point them at each other
+        let views: Vec<usize> = (0..o.nodes.len())
+            .filter(|&i| matches!(o.alloc[i], Alloc::At(..)))
+            .collect();
+        assert!(views.len() >= 2);
+        let (a, b) = (views[0], views[1]);
+        o.alloc[a] = Alloc::At(b, 0);
+        o.alloc[b] = Alloc::At(a, 0);
+        let e = verify(&o).unwrap_err();
+        assert!(
+            matches!(
+                e,
+                SoundnessError::AliasCycle { .. }
+                    | SoundnessError::AddrMismatch { .. }
+                    | SoundnessError::AliasOutOfBounds { .. }
+            ),
+            "{e}"
+        );
+        // a genuine self-cycle is always AliasCycle
+        let mut o = opt("lstm");
+        o.alloc[views[0]] = Alloc::At(views[0], 0);
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::AliasCycle { .. }
+        ));
+    }
+
+    #[test]
+    fn out_of_bounds_view_segment_is_rejected() {
+        let mut o = opt("lstm");
+        let i = (0..o.nodes.len())
+            .find(|&i| matches!(o.alloc[i], Alloc::At(..)))
+            .unwrap();
+        if let Alloc::At(parent, _) = o.alloc[i] {
+            // push the view past the end of its backing region
+            o.alloc[i] = Alloc::At(parent, usize::MAX / 2);
+        }
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::AliasOutOfBounds { .. }
+        ));
+    }
+
+    #[test]
+    fn stale_resolved_address_is_rejected() {
+        let mut o = opt("lstm");
+        let i = (0..o.nodes.len())
+            .find(|&i| matches!(o.alloc[i], Alloc::At(..)))
+            .unwrap();
+        o.addr[i] += 1;
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::AddrMismatch { .. }
+                | SoundnessError::TapeOutOfBounds { .. }
+        ));
+    }
+
+    #[test]
+    fn overlapping_fresh_regions_are_rejected() {
+        let mut o = opt("lstm");
+        let fresh: Vec<usize> = (0..o.nodes.len())
+            .filter(|&i| matches!(o.alloc[i], Alloc::Fresh))
+            .collect();
+        assert!(fresh.len() >= 2);
+        o.addr[fresh[1]] = o.addr[fresh[0]];
+        let e = verify(&o).unwrap_err();
+        assert!(
+            matches!(
+                e,
+                SoundnessError::FreshOverlap { .. }
+                    | SoundnessError::AddrMismatch { .. }
+            ),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn aliased_adjoint_slots_are_rejected() {
+        let mut o = opt("treelstm");
+        let reals: Vec<usize> = (0..o.nodes.len())
+            .filter(|&i| o.aoff[i] != usize::MAX)
+            .collect();
+        o.aoff[reals[1]] = o.aoff[reals[0]];
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::AdjointAliased { .. }
+        ));
+    }
+
+    #[test]
+    fn unpadded_strides_are_rejected() {
+        let mut o = opt("lstm");
+        o.tape_stride = o.tape_cols; // drop the 16-float padding
+        if o.tape_cols % 16 == 0 {
+            o.tape_stride += 1;
+        }
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::BadStride { what: "forward tape", .. }
+        ));
+        let mut o = opt("lstm");
+        o.adj_stride = o.adj_stride.wrapping_add(16);
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::BadStride { what: "adjoint tape", .. }
+        ));
+    }
+
+    #[test]
+    fn corrupted_scatter_source_is_rejected() {
+        let mut o = opt("lstm");
+        o.scatter_src = o.nodes.len();
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::BadScatterSrc { .. }
+        ));
+    }
+
+    #[test]
+    fn truncated_layout_arrays_are_rejected() {
+        let mut o = opt("lstm");
+        o.addr.pop();
+        assert!(matches!(
+            verify(&o).unwrap_err(),
+            SoundnessError::LayoutArity { what: "addr", .. }
+        ));
+    }
+}

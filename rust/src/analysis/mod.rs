@@ -1,0 +1,359 @@
+//! Static soundness verification (DESIGN.md §13).
+//!
+//! The executor's performance story rests on batched gather/scatter over
+//! instance-specific graphs being *disjoint by construction* (paper §3.2):
+//! every `unsafe` raw-pointer shard in `exec::parallel`, `exec::pool`,
+//! `memory` and `vertex::interp` exploits an invariant this module proves
+//! statically, once per plan or bind — never per step. Three passes:
+//!
+//! 1. [`plan`] — interval-set algebra over every precomputed write set
+//!    (per-shard contiguous row sub-blocks, owner-sharded scatter and
+//!    scatter_add partitions, strided slot windows, embedding-grad owner
+//!    rows), proving pairwise disjointness across shards and no overlap
+//!    between a level's write set and its read views. Runs at
+//!    `GraphBatch`/schedule construction in debug builds and on demand
+//!    via `cavs check`.
+//! 2. [`layout`] — [`OptProgram::verify`](crate::vertex::OptProgram::verify):
+//!    alias chains acyclic and in-bounds, view segments within their
+//!    backing values, adjoint slots provably never aliased, 16-float
+//!    stride padding respected. Runs at cell registration and bind.
+//! 3. [`shadow`] — a shadow-memory race detector: per-float last-writer
+//!    `(shard, epoch)` tags that replay frontier sweeps and flag any
+//!    cross-shard overlapping write or stale read. The replay hook in the
+//!    executor is gated behind the `shadow-check` cargo feature; the data
+//!    structure itself is always compiled so its negative tests run in
+//!    every configuration.
+//!
+//! Every `unsafe` site names the invariant it relies on with an
+//! `[inv:<tag>]` tag registered in [`invariants`]; `cargo run -p xtask --
+//! safety-lint` enforces the tagging in CI.
+//!
+//! All passes report through one typed error, [`SoundnessError`] —
+//! uniform, actionable, free of file:line noise — which `cavs check`
+//! renders for plans, layouts and bucket lists alike.
+
+pub mod invariants;
+pub mod layout;
+pub mod plan;
+pub mod shadow;
+
+use std::fmt;
+
+/// One typed error for every soundness pass (plan, layout, shadow,
+/// bucket validation). Messages are actionable and self-contained: they
+/// name the violated invariant and the offending indices/ranges, never a
+/// source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SoundnessError {
+    // ---- bucket lists (scheduler::validate_buckets routes here) ------
+    EmptyBucketList,
+    ZeroBucket { buckets: Vec<usize> },
+    UnsortedBuckets { buckets: Vec<usize> },
+
+    // ---- plan disjointness -------------------------------------------
+    /// Two shards' write ranges intersect (`what` names the write set).
+    ShardOverlap { what: &'static str, shard_a: usize, shard_b: usize, lo: usize, hi: usize },
+    /// The shard ranges do not exactly cover the row space.
+    ShardCoverage { what: &'static str, covered: usize, rows: usize },
+    /// An owner-partitioned key landed on the wrong shard.
+    MisroutedOwner { what: &'static str, key: u32, shard: usize, expect: usize },
+    /// Owner-partitioned keys are not in ascending source order
+    /// (bitwise determinism of scatter_add depends on it).
+    UnorderedShard { what: &'static str, shard: usize },
+    /// A vertex appears in more than one task/level write set.
+    DuplicateVertex { vertex: u32 },
+    /// A vertex was never scheduled.
+    UnscheduledVertices { missing: usize, total: usize },
+    /// A task executes a vertex before its child slot was produced.
+    DependencyViolation { vertex: u32, child: u32 },
+    /// A level both writes a row and reads it through a child view.
+    LevelReadWriteOverlap { level: usize, vertex: u32, child: u32 },
+    /// A gather/scatter slot window escapes the destination row pitch.
+    SlotWindowOverflow { slot: usize, cols: usize, stride: usize },
+    /// A task's bucket cannot hold its vertices.
+    BucketTooSmall { m: usize, bucket: usize },
+    /// A child edge points outside the merged vertex space.
+    ChildOutOfBounds { vertex: u32, child: u32, n_vertices: usize },
+    /// A child edge crosses graph ownership (merge corruption).
+    CrossGraphEdge { vertex: u32, child: u32 },
+    /// A child is not strictly shallower than its parent.
+    DepthInversion { vertex: u32, child: u32 },
+
+    // ---- layout soundness --------------------------------------------
+    /// An alias chain revisits a node (must resolve in <= n hops).
+    AliasCycle { node: usize },
+    /// A view escapes its backing value's storage.
+    AliasOutOfBounds { node: usize, parent: usize, off: usize, cols: usize, backing: usize },
+    /// A node's resolved address disagrees with its alias chain.
+    AddrMismatch { node: usize, addr: usize, resolved: usize },
+    /// A value region escapes the forward tape.
+    TapeOutOfBounds { node: usize, lo: usize, hi: usize, tape_cols: usize },
+    /// Two fresh (non-view) value regions intersect.
+    FreshOverlap { node_a: usize, node_b: usize },
+    /// Fresh regions do not exactly tile the forward tape.
+    TapeCoverage { covered: usize, tape_cols: usize },
+    /// A step's output storage intersects one of its input views.
+    InputAliased { node: usize, input: usize },
+    /// Two adjoint slots intersect (adjoints must never alias).
+    AdjointAliased { node_a: usize, node_b: usize },
+    /// An adjoint slot escapes the adjoint tape.
+    AdjointOutOfBounds { node: usize, hi: usize, adj_cols: usize },
+    /// A value-producing node has no storage (or a sink has some).
+    MissingStorage { node: usize },
+    PhantomStorage { node: usize },
+    /// A level-execution row pitch is not the padded column count.
+    BadStride { what: &'static str, cols: usize, stride: usize },
+    /// Per-node layout arrays disagree in length.
+    LayoutArity { what: &'static str, got: usize, nodes: usize },
+    /// The scatter source is missing or has the wrong width.
+    BadScatterSrc { node: usize, cols: usize, state_cols: usize },
+
+    // ---- shadow memory -----------------------------------------------
+    /// Two shards wrote the same float in one epoch.
+    RaceOverlap { offset: usize, shard_a: usize, shard_b: usize, epoch: u32 },
+    /// A shard read a float another shard wrote in the same epoch.
+    StaleRead { offset: usize, reader: usize, writer: usize, epoch: u32 },
+    /// A shadow access escaped the tracked buffer.
+    ShadowOutOfBounds { offset: usize, len: usize },
+}
+
+impl fmt::Display for SoundnessError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use SoundnessError::*;
+        match self {
+            EmptyBucketList => write!(
+                f,
+                "artifact bucket list is empty — rebuild artifacts or pass \
+                 a non-empty bucket grid"
+            ),
+            ZeroBucket { buckets } => write!(
+                f,
+                "artifact bucket list contains a zero bucket: {buckets:?} \
+                 (every bucket must hold at least one row)"
+            ),
+            UnsortedBuckets { buckets } => write!(
+                f,
+                "artifact bucket list must be strictly ascending (sorted, \
+                 deduped): {buckets:?}"
+            ),
+            ShardOverlap { what, shard_a, shard_b, lo, hi } => write!(
+                f,
+                "{what}: shards {shard_a} and {shard_b} both claim rows \
+                 [{lo}, {hi}) — shard write sets must be pairwise disjoint"
+            ),
+            ShardCoverage { what, covered, rows } => write!(
+                f,
+                "{what}: shard ranges cover {covered} of {rows} rows — the \
+                 partition must tile the row space exactly"
+            ),
+            MisroutedOwner { what, key, shard, expect } => write!(
+                f,
+                "{what}: key {key} found on shard {shard}, but owner \
+                 partitioning (key mod shards) routes it to shard {expect}"
+            ),
+            UnorderedShard { what, shard } => write!(
+                f,
+                "{what}: shard {shard}'s keys are not in ascending source \
+                 order — scatter_add accumulation order (and bitwise \
+                 reproducibility) depends on it"
+            ),
+            DuplicateVertex { vertex } => write!(
+                f,
+                "vertex {vertex} is written by more than one task — each \
+                 vertex must be evaluated exactly once"
+            ),
+            UnscheduledVertices { missing, total } => write!(
+                f,
+                "{missing} of {total} vertices were never scheduled — the \
+                 plan must cover every vertex"
+            ),
+            DependencyViolation { vertex, child } => write!(
+                f,
+                "vertex {vertex} is scheduled before its child {child} — \
+                 tasks must respect the frontier order"
+            ),
+            LevelReadWriteOverlap { level, vertex, child } => write!(
+                f,
+                "level {level}: vertex {vertex} reads child {child}, which \
+                 the same level writes — a level's read views must come \
+                 from earlier levels"
+            ),
+            SlotWindowOverflow { slot, cols, stride } => write!(
+                f,
+                "slot {slot}'s {cols}-column window escapes the {stride}\
+                 -column destination pitch — slot windows must stay inside \
+                 their row"
+            ),
+            BucketTooSmall { m, bucket } => write!(
+                f,
+                "task of {m} vertices assigned bucket {bucket} — the \
+                 artifact bucket must hold the whole task"
+            ),
+            ChildOutOfBounds { vertex, child, n_vertices } => write!(
+                f,
+                "vertex {vertex}'s child {child} is outside the merged \
+                 vertex space of {n_vertices}"
+            ),
+            CrossGraphEdge { vertex, child } => write!(
+                f,
+                "vertex {vertex}'s child {child} belongs to a different \
+                 input graph — the merge must keep samples disjoint"
+            ),
+            DepthInversion { vertex, child } => write!(
+                f,
+                "vertex {vertex} is not strictly deeper than its child \
+                 {child} — activation depths must increase along edges"
+            ),
+            AliasCycle { node } => write!(
+                f,
+                "node {node}'s alias chain cycles — views must resolve to \
+                 a fresh region in finitely many hops"
+            ),
+            AliasOutOfBounds { node, parent, off, cols, backing } => write!(
+                f,
+                "node {node} views [{off}, {}) of node {parent}, whose \
+                 backing region holds only {backing} columns",
+                off + cols
+            ),
+            AddrMismatch { node, addr, resolved } => write!(
+                f,
+                "node {node}'s recorded address {addr} disagrees with its \
+                 alias chain, which resolves to {resolved}"
+            ),
+            TapeOutOfBounds { node, lo, hi, tape_cols } => write!(
+                f,
+                "node {node}'s storage [{lo}, {hi}) escapes the {tape_cols}\
+                 -column forward tape"
+            ),
+            FreshOverlap { node_a, node_b } => write!(
+                f,
+                "nodes {node_a} and {node_b} both own overlapping fresh \
+                 storage — non-view regions must be disjoint"
+            ),
+            TapeCoverage { covered, tape_cols } => write!(
+                f,
+                "fresh regions cover {covered} of {tape_cols} tape columns \
+                 — the layout must tile the tape exactly"
+            ),
+            InputAliased { node, input } => write!(
+                f,
+                "node {node}'s output storage overlaps input {input}'s \
+                 storage — a step must never write over a value it reads"
+            ),
+            AdjointAliased { node_a, node_b } => write!(
+                f,
+                "adjoint slots of nodes {node_a} and {node_b} overlap — \
+                 adjoints are never aliased"
+            ),
+            AdjointOutOfBounds { node, hi, adj_cols } => write!(
+                f,
+                "node {node}'s adjoint slot ends at {hi}, past the \
+                 {adj_cols}-column adjoint tape"
+            ),
+            MissingStorage { node } => write!(
+                f,
+                "value-producing node {node} has no storage address"
+            ),
+            PhantomStorage { node } => write!(
+                f,
+                "sink node {node} (scatter/push) carries storage it must \
+                 not have"
+            ),
+            BadStride { what, cols, stride } => write!(
+                f,
+                "{what} row pitch is {stride} for {cols} columns — must be \
+                 cols rounded up to 16 floats (one cache line)"
+            ),
+            LayoutArity { what, got, nodes } => write!(
+                f,
+                "layout array '{what}' has {got} entries for {nodes} nodes"
+            ),
+            BadScatterSrc { node, cols, state_cols } => write!(
+                f,
+                "scatter source node {node} has {cols} columns, but the \
+                 scattered state is {state_cols} wide"
+            ),
+            RaceOverlap { offset, shard_a, shard_b, epoch } => write!(
+                f,
+                "shadow: float {offset} written by shard {shard_a} and \
+                 shard {shard_b} in epoch {epoch} — overlapping cross-shard \
+                 write (a data race in the real executor)"
+            ),
+            StaleRead { offset, reader, writer, epoch } => write!(
+                f,
+                "shadow: shard {reader} read float {offset} which shard \
+                 {writer} wrote in the same epoch {epoch} — unsynchronized \
+                 read-after-write across shards"
+            ),
+            ShadowOutOfBounds { offset, len } => write!(
+                f,
+                "shadow: access at float {offset} escapes the tracked \
+                 buffer of {len}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SoundnessError {}
+
+/// What a full `cavs check` pass proved, for the one-line report.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// frontier levels replayed
+    pub levels: usize,
+    /// batching tasks covered
+    pub tasks: usize,
+    /// vertices proven to be written exactly once
+    pub vertices: usize,
+    /// disjoint write intervals claimed across all passes
+    pub intervals: usize,
+    /// layout nodes whose alias chains were resolved and bounded
+    pub layout_nodes: usize,
+    /// thread counts whose shard partitions were replayed
+    pub thread_counts: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_render_actionably_without_source_locations() {
+        let cases: Vec<SoundnessError> = vec![
+            SoundnessError::EmptyBucketList,
+            SoundnessError::ZeroBucket { buckets: vec![0, 1] },
+            SoundnessError::ShardOverlap {
+                what: "scatter rows",
+                shard_a: 0,
+                shard_b: 1,
+                lo: 3,
+                hi: 7,
+            },
+            SoundnessError::AliasCycle { node: 4 },
+            SoundnessError::RaceOverlap {
+                offset: 12,
+                shard_a: 0,
+                shard_b: 2,
+                epoch: 5,
+            },
+        ];
+        for e in cases {
+            let msg = e.to_string();
+            assert!(!msg.is_empty());
+            // file:line-free: no path separators or rust source suffixes
+            assert!(!msg.contains(".rs"), "{msg}");
+            assert!(!msg.contains("src/"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn error_interops_with_anyhow_context() {
+        use anyhow::Context;
+        let r: Result<(), SoundnessError> =
+            Err(SoundnessError::EmptyBucketList);
+        let e = r.context("cell_fwd bucket list for lstm h=64").unwrap_err();
+        let chain = format!("{e:#}");
+        assert!(chain.contains("cell_fwd bucket list"), "{chain}");
+        assert!(chain.contains("bucket list is empty"), "{chain}");
+    }
+}

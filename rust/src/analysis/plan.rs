@@ -1,0 +1,573 @@
+//! Pass 1: plan disjointness (interval-set algebra over precomputed
+//! write sets).
+//!
+//! The sharded executor writes through raw pointers on the strength of
+//! four partitioning schemes, all decided *before* any worker runs:
+//! contiguous per-shard row sub-blocks (`pool::shard_range`),
+//! owner-sharded scatter/scatter_add partitions (`key % shards`, which
+//! also covers embedding-gradient owner rows), strided slot windows
+//! (`dst_col = slot * c` inside a row pitch), and the frontier levels
+//! themselves (a level writes rows its own reads never touch). Each
+//! checker here replays one scheme into a [`WriteSet`] and errors on the
+//! first overlap, gap, or misrouting; [`check_cell_plan`] composes them
+//! into the `cavs check` sweep. Debug builds also run [`check_batch`] at
+//! merge and [`check_tasks`] at schedule, so a corrupted plan fails
+//! loudly before a single raw-pointer write.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use super::{CheckReport, SoundnessError};
+use crate::exec::pool::shard_range;
+use crate::graph::GraphBatch;
+use crate::scheduler::Task;
+
+/// An interval set that records which shard claimed each half-open
+/// range and rejects the first overlapping claim.
+#[derive(Debug, Default)]
+pub struct WriteSet {
+    /// start -> (end, shard)
+    claimed: BTreeMap<usize, (usize, usize)>,
+    total: usize,
+}
+
+impl WriteSet {
+    pub fn new() -> WriteSet {
+        WriteSet::default()
+    }
+
+    /// Number of disjoint intervals claimed so far.
+    pub fn len(&self) -> usize {
+        self.claimed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.claimed.is_empty()
+    }
+
+    /// Total columns covered (intervals are disjoint by construction).
+    pub fn covered(&self) -> usize {
+        self.total
+    }
+
+    /// Claim `range` for `shard`; errors if any part is already claimed
+    /// (by any shard, including `shard` itself — a double write is a
+    /// plan bug even without a cross-thread race).
+    pub fn claim(
+        &mut self,
+        what: &'static str,
+        shard: usize,
+        range: Range<usize>,
+    ) -> Result<(), SoundnessError> {
+        if range.is_empty() {
+            return Ok(());
+        }
+        if let Some(shard_b) = self.overlapping(range.clone()) {
+            return Err(SoundnessError::ShardOverlap {
+                what,
+                shard_a: shard_b,
+                shard_b: shard,
+                lo: range.start,
+                hi: range.end,
+            });
+        }
+        self.total += range.len();
+        self.claimed.insert(range.start, (range.end, shard));
+        Ok(())
+    }
+
+    /// Shard that already claimed part of `range`, if any.
+    pub fn overlapping(&self, range: Range<usize>) -> Option<usize> {
+        // the predecessor interval may extend into `range`...
+        if let Some((_, &(end, s))) =
+            self.claimed.range(..=range.start).next_back()
+        {
+            if end > range.start {
+                return Some(s);
+            }
+        }
+        // ...and any interval starting inside `range` overlaps it
+        self.claimed
+            .range(range.start..range.end)
+            .next()
+            .map(|(_, &(_, s))| s)
+    }
+}
+
+/// Bucket-list validation (`scheduler::validate_buckets` routes here so
+/// `cavs check` reports bucket and plan violations uniformly): the list
+/// must be non-empty, zero-free and strictly ascending — `schedule` and
+/// the engine's chunking both rely on `buckets.last()` being the usable
+/// maximum.
+pub fn check_buckets(buckets: &[usize]) -> Result<(), SoundnessError> {
+    if buckets.is_empty() {
+        return Err(SoundnessError::EmptyBucketList);
+    }
+    if buckets[0] == 0 {
+        return Err(SoundnessError::ZeroBucket { buckets: buckets.to_vec() });
+    }
+    for w in buckets.windows(2) {
+        if w[1] <= w[0] {
+            return Err(SoundnessError::UnsortedBuckets {
+                buckets: buckets.to_vec(),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// `[inv:shard-rows]`: the contiguous shard ranges of
+/// [`shard_range`] are pairwise disjoint and tile `[0, rows)` exactly.
+pub fn check_shard_rows(
+    rows: usize,
+    shards: usize,
+) -> Result<usize, SoundnessError> {
+    let shards = shards.max(1);
+    let mut ws = WriteSet::new();
+    for s in 0..shards {
+        let r = shard_range(rows, shards, s);
+        if r.end > rows {
+            return Err(SoundnessError::ShardCoverage {
+                what: "shard rows",
+                covered: r.end,
+                rows,
+            });
+        }
+        ws.claim("shard rows", s, r)?;
+    }
+    if ws.covered() != rows {
+        return Err(SoundnessError::ShardCoverage {
+            what: "shard rows",
+            covered: ws.covered(),
+            rows,
+        });
+    }
+    Ok(ws.len())
+}
+
+/// `[inv:owner-partition]`: replay the `key % shards` routing the
+/// executor's `partition_pairs`/`owner_add_rows` use for scatter,
+/// scatter_add and embedding-grad owner rows. Verifies every key landed
+/// on its owner shard, per-shard source order stayed ascending (the
+/// accumulation-order half of the bitwise contract), and — when
+/// `unique_rows` — that no destination row is written twice.
+pub fn check_owner_partition(
+    what: &'static str,
+    partitions: &[Vec<(u32, u32)>],
+    unique_rows: bool,
+) -> Result<usize, SoundnessError> {
+    let shards = partitions.len().max(1);
+    let mut ws = WriteSet::new();
+    for (s, part) in partitions.iter().enumerate() {
+        let mut last_m: Option<u32> = None;
+        for &(m, v) in part {
+            let expect = v as usize % shards;
+            if expect != s {
+                return Err(SoundnessError::MisroutedOwner {
+                    what,
+                    key: v,
+                    shard: s,
+                    expect,
+                });
+            }
+            if let Some(prev) = last_m {
+                if m < prev {
+                    return Err(SoundnessError::UnorderedShard { what, shard: s });
+                }
+            }
+            last_m = Some(m);
+            if unique_rows {
+                let v = v as usize;
+                ws.claim(what, s, v..v + 1)
+                    .map_err(|_| SoundnessError::DuplicateVertex { vertex: v as u32 })?;
+            }
+        }
+    }
+    Ok(if unique_rows { ws.len() } else { 0 })
+}
+
+/// `[inv:slot-window]`: every gather/scatter slot window
+/// `[slot*c, slot*c + c)` stays inside the destination row pitch and the
+/// windows are pairwise disjoint.
+pub fn check_slot_windows(
+    arity: usize,
+    cols: usize,
+    dst_stride: usize,
+) -> Result<usize, SoundnessError> {
+    let mut ws = WriteSet::new();
+    for slot in 0..arity.max(1) {
+        let lo = slot * cols;
+        if lo + cols > dst_stride {
+            return Err(SoundnessError::SlotWindowOverflow {
+                slot,
+                cols,
+                stride: dst_stride,
+            });
+        }
+        ws.claim("slot windows", slot, lo..lo + cols)?;
+    }
+    Ok(ws.len())
+}
+
+/// Structural soundness of a merged batch: every child edge lands inside
+/// the vertex space, inside the same input graph, and strictly below its
+/// parent's activation depth (the property the frontier sweep's
+/// disjointness rests on). Debug builds run this at every merge.
+pub fn check_batch(batch: &GraphBatch) -> Result<(), SoundnessError> {
+    let n = batch.n_vertices;
+    for v in 0..n as u32 {
+        for slot in 0..batch.arity {
+            let Some(c) = batch.child(v, slot) else { continue };
+            if c as usize >= n {
+                return Err(SoundnessError::ChildOutOfBounds {
+                    vertex: v,
+                    child: c,
+                    n_vertices: n,
+                });
+            }
+            if batch.owner[v as usize] != batch.owner[c as usize] {
+                return Err(SoundnessError::CrossGraphEdge { vertex: v, child: c });
+            }
+            if batch.depth[c as usize] >= batch.depth[v as usize] {
+                return Err(SoundnessError::DepthInversion { vertex: v, child: c });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `[inv:level-frontier]`: each level's write rows are claimed exactly
+/// once across the whole sweep, and no level reads (through a child
+/// slot) a row it also writes — the read views of level L were published
+/// by strictly earlier levels.
+pub fn check_levels(
+    batch: &GraphBatch,
+    levels: &[Vec<u32>],
+) -> Result<usize, SoundnessError> {
+    let n = batch.n_vertices;
+    let mut written_at = vec![u32::MAX; n]; // level index or MAX
+    let mut total = 0usize;
+    for (li, level) in levels.iter().enumerate() {
+        for &v in level {
+            if (v as usize) >= n {
+                return Err(SoundnessError::ChildOutOfBounds {
+                    vertex: v,
+                    child: v,
+                    n_vertices: n,
+                });
+            }
+            if written_at[v as usize] != u32::MAX {
+                return Err(SoundnessError::DuplicateVertex { vertex: v });
+            }
+            written_at[v as usize] = li as u32;
+            total += 1;
+        }
+        // the level's reads must not intersect its own write set
+        for &v in level {
+            for slot in 0..batch.arity {
+                if let Some(c) = batch.child(v, slot) {
+                    if written_at[c as usize] == li as u32 {
+                        return Err(SoundnessError::LevelReadWriteOverlap {
+                            level: li,
+                            vertex: v,
+                            child: c,
+                        });
+                    }
+                    if written_at[c as usize] == u32::MAX {
+                        return Err(SoundnessError::DependencyViolation {
+                            vertex: v,
+                            child: c,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    if total != n {
+        return Err(SoundnessError::UnscheduledVertices {
+            missing: n - total,
+            total: n,
+        });
+    }
+    Ok(levels.len())
+}
+
+/// Task-list soundness (the scheduler's output): every vertex exactly
+/// once, children evaluated by a strictly earlier task, and each task's
+/// bucket large enough. Debug builds run this at every `schedule`.
+pub fn check_tasks(
+    batch: &GraphBatch,
+    tasks: &[Task],
+) -> Result<(), SoundnessError> {
+    let n = batch.n_vertices;
+    let mut done = vec![false; n];
+    let mut total = 0usize;
+    for t in tasks {
+        if t.bucket < t.m() {
+            return Err(SoundnessError::BucketTooSmall {
+                m: t.m(),
+                bucket: t.bucket,
+            });
+        }
+        for &v in &t.verts {
+            for slot in 0..batch.arity {
+                if let Some(c) = batch.child(v, slot) {
+                    if !done[c as usize] {
+                        return Err(SoundnessError::DependencyViolation {
+                            vertex: v,
+                            child: c,
+                        });
+                    }
+                }
+            }
+        }
+        for &v in &t.verts {
+            if done[v as usize] {
+                return Err(SoundnessError::DuplicateVertex { vertex: v });
+            }
+            done[v as usize] = true;
+            total += 1;
+        }
+    }
+    if total != n {
+        return Err(SoundnessError::UnscheduledVertices {
+            missing: n - total,
+            total: n,
+        });
+    }
+    Ok(())
+}
+
+/// Replay the owner partitioning exactly as the executor computes it:
+/// route `(source index, destination key)` pairs to `key % shards`,
+/// preserving source order. Shared by [`check_cell_plan`] and the shadow
+/// replay so both exercise the very same routing the unsafe code uses.
+pub fn owner_partitions(
+    keys: impl Iterator<Item = u32>,
+    shards: usize,
+) -> Vec<Vec<(u32, u32)>> {
+    let shards = shards.max(1);
+    let mut parts: Vec<Vec<(u32, u32)>> = vec![Vec::new(); shards];
+    for (m, v) in keys.enumerate() {
+        parts[v as usize % shards].push((m as u32, v));
+    }
+    parts
+}
+
+/// The full plan sweep `cavs check` runs for one cell: batch structure,
+/// frontier levels, scheduled tasks, and — for every thread count in
+/// `thread_counts` — the per-level shard-row partitions, owner-sharded
+/// scatter partitions, embedding-grad owner rows, and slot windows.
+pub fn check_cell_plan(
+    batch: &GraphBatch,
+    tasks: &[Task],
+    levels: &[Vec<u32>],
+    state_cols: usize,
+    thread_counts: &[usize],
+) -> Result<CheckReport, SoundnessError> {
+    let mut report = CheckReport {
+        tasks: tasks.len(),
+        vertices: batch.n_vertices,
+        thread_counts: thread_counts.len(),
+        ..CheckReport::default()
+    };
+    check_batch(batch)?;
+    report.levels = check_levels(batch, levels)?;
+    check_tasks(batch, tasks)?;
+    for &threads in thread_counts {
+        for t in tasks {
+            // per-shard contiguous row sub-blocks of the task's m rows
+            report.intervals += check_shard_rows(t.m(), threads)?;
+            // owner-sharded scatter of the task's vertices
+            let parts = owner_partitions(t.verts.iter().copied(), threads);
+            report.intervals +=
+                check_owner_partition("scatter rows", &parts, true)?;
+        }
+        // embedding-grad owner rows: adjoint pull rows partitioned by
+        // token id (invalid tokens are filtered before routing, exactly
+        // as `owner_add_rows` does)
+        let toks = batch
+            .tokens
+            .iter()
+            .filter(|&&t| t >= 0)
+            .map(|&t| t as u32);
+        let parts = owner_partitions(toks, threads);
+        report.intervals +=
+            check_owner_partition("embedding-grad rows", &parts, false)?;
+    }
+    // strided slot windows of the gather destination rows
+    report.intervals +=
+        check_slot_windows(batch.arity, state_cols, batch.arity * state_cols)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synth, InputGraph};
+    use crate::scheduler::{self, Policy};
+    use crate::util::rng::Rng;
+
+    fn tree_batch(seed: u64, k: usize) -> GraphBatch {
+        let mut rng = Rng::new(seed);
+        let graphs: Vec<InputGraph> = (0..k)
+            .map(|_| {
+                let leaves = 3 + rng.below(6);
+                synth::random_binary_tree(&mut rng, 20, leaves, 5)
+            })
+            .collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        GraphBatch::new(&refs, 2)
+    }
+
+    #[test]
+    fn write_set_rejects_overlaps_and_reports_claimant() {
+        let mut ws = WriteSet::new();
+        ws.claim("t", 0, 0..10).unwrap();
+        ws.claim("t", 1, 10..20).unwrap();
+        assert_eq!(ws.covered(), 20);
+        let e = ws.claim("t", 2, 5..6).unwrap_err();
+        assert!(matches!(
+            e,
+            SoundnessError::ShardOverlap { shard_a: 0, shard_b: 2, .. }
+        ));
+        let e = ws.claim("t", 2, 19..25).unwrap_err();
+        assert!(matches!(
+            e,
+            SoundnessError::ShardOverlap { shard_a: 1, shard_b: 2, .. }
+        ));
+        ws.claim("t", 2, 20..25).unwrap();
+    }
+
+    #[test]
+    fn shard_rows_tile_exactly_for_every_split() {
+        for rows in [0usize, 1, 7, 16, 100, 129] {
+            for shards in 1..=9 {
+                let n = check_shard_rows(rows, shards).unwrap();
+                assert!(n <= shards);
+            }
+        }
+    }
+
+    #[test]
+    fn owner_partition_catches_misrouting_and_disorder() {
+        // valid: keys routed by v % 2, ascending m per shard
+        let parts = owner_partitions([4u32, 1, 2, 7].into_iter(), 2);
+        check_owner_partition("t", &parts, true).unwrap();
+        // misrouted: key 3 on shard 0 of 2
+        let bad = vec![vec![(0u32, 3u32)], vec![]];
+        assert!(matches!(
+            check_owner_partition("t", &bad, true),
+            Err(SoundnessError::MisroutedOwner { key: 3, .. })
+        ));
+        // disordered m within a shard
+        let bad = vec![vec![(2u32, 0u32), (1, 2)], vec![]];
+        assert!(matches!(
+            check_owner_partition("t", &bad, true),
+            Err(SoundnessError::UnorderedShard { .. })
+        ));
+        // duplicate destination row under unique_rows
+        let bad = vec![vec![(0u32, 2u32), (1, 2)], vec![]];
+        assert!(matches!(
+            check_owner_partition("t", &bad, true),
+            Err(SoundnessError::DuplicateVertex { vertex: 2 })
+        ));
+        // ... which scatter_add explicitly allows
+        check_owner_partition("t", &bad, false).unwrap();
+    }
+
+    #[test]
+    fn slot_windows_must_fit_the_pitch() {
+        assert!(check_slot_windows(2, 8, 16).is_ok());
+        assert!(matches!(
+            check_slot_windows(2, 8, 15),
+            Err(SoundnessError::SlotWindowOverflow { slot: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn scheduler_output_passes_the_full_sweep() {
+        let batch = tree_batch(11, 6);
+        let buckets = scheduler::host_buckets();
+        let tasks = scheduler::schedule(&batch, Policy::Batched, &buckets);
+        let levels = scheduler::frontier_levels(&batch);
+        let r =
+            check_cell_plan(&batch, &tasks, &levels, 16, &[1, 2, 3, 8]).unwrap();
+        assert_eq!(r.vertices, batch.n_vertices);
+        assert!(r.levels > 1);
+        assert!(r.intervals > 0);
+    }
+
+    #[test]
+    fn corrupted_levels_are_rejected() {
+        let batch = tree_batch(12, 4);
+        let mut levels = scheduler::frontier_levels(&batch);
+        // duplicate a vertex
+        let v = levels[0][0];
+        levels[1].push(v);
+        assert!(matches!(
+            check_levels(&batch, &levels),
+            Err(SoundnessError::DuplicateVertex { .. })
+        ));
+        // merge two levels: a parent now shares a level with its child
+        let mut levels = scheduler::frontier_levels(&batch);
+        let l1 = levels.remove(1);
+        levels[0].extend(l1);
+        assert!(matches!(
+            check_levels(&batch, &levels),
+            Err(SoundnessError::LevelReadWriteOverlap { .. })
+        ));
+        // drop the last level entirely
+        let mut levels = scheduler::frontier_levels(&batch);
+        let dropped = levels.pop().unwrap();
+        let err = check_levels(&batch, &levels).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SoundnessError::UnscheduledVertices { .. }
+                    | SoundnessError::DependencyViolation { .. }
+            ),
+            "{err} (dropped {dropped:?})"
+        );
+    }
+
+    #[test]
+    fn corrupted_tasks_are_rejected() {
+        let batch = tree_batch(13, 4);
+        let buckets = scheduler::host_buckets();
+        let good = scheduler::schedule(&batch, Policy::Batched, &buckets);
+        check_tasks(&batch, &good).unwrap();
+        // bucket smaller than the task
+        let mut tasks = good.clone();
+        tasks[0].bucket = tasks[0].m().saturating_sub(1);
+        assert!(matches!(
+            check_tasks(&batch, &tasks),
+            Err(SoundnessError::BucketTooSmall { .. })
+        ));
+        // reversed order violates dependencies
+        let mut tasks = good.clone();
+        tasks.reverse();
+        assert!(matches!(
+            check_tasks(&batch, &tasks),
+            Err(SoundnessError::DependencyViolation { .. })
+        ));
+    }
+
+    #[test]
+    fn buckets_route_through_the_typed_error() {
+        check_buckets(&[1, 2, 4]).unwrap();
+        assert_eq!(check_buckets(&[]), Err(SoundnessError::EmptyBucketList));
+        assert!(matches!(
+            check_buckets(&[0, 1]),
+            Err(SoundnessError::ZeroBucket { .. })
+        ));
+        assert!(matches!(
+            check_buckets(&[1, 4, 2]),
+            Err(SoundnessError::UnsortedBuckets { .. })
+        ));
+        assert!(matches!(
+            check_buckets(&[1, 2, 2]),
+            Err(SoundnessError::UnsortedBuckets { .. })
+        ));
+    }
+}

@@ -1,0 +1,246 @@
+//! Pass 3: the shadow-memory race/overlap detector.
+//!
+//! A race detector specialized to the sharded frontier executor: every
+//! float of a tracked buffer carries a last-writer `(shard, epoch)` tag.
+//! An epoch is one parallel region (one primitive of one frontier level —
+//! a scatter, a scatter_add, a level-tape sweep). Within an epoch,
+//! [`ShadowMem::write`] flags any float two distinct shards both write
+//! (an overlapping write — a data race in the real executor), and
+//! [`ShadowMem::read`] flags a read of a float a *different* shard wrote
+//! in the same epoch (an unsynchronized read-after-write: the real
+//! executor has no ordering between shards inside an epoch).
+//!
+//! The data structure is always compiled so its negative tests run under
+//! plain `cargo test`; the executor replay hook
+//! ([`replay_level_writes`] called from `exec::parallel`) is gated behind
+//! the `shadow-check` cargo feature and replays each level's precomputed
+//! write sets — per-shard row sub-blocks and owner partitions — through a
+//! shadow of the state buffer before the unsafe writes run.
+
+use std::ops::Range;
+
+use super::SoundnessError;
+
+/// Tag value for "never written".
+const CLEAN: u32 = 0;
+
+/// Per-float last-writer tags over one tracked buffer.
+#[derive(Debug, Clone)]
+pub struct ShadowMem {
+    /// shard id + 1 of the last writer (CLEAN = never written)
+    writer: Vec<u32>,
+    /// epoch of the last write, parallel to `writer`
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl ShadowMem {
+    pub fn new(len: usize) -> ShadowMem {
+        ShadowMem { writer: vec![CLEAN; len], stamp: vec![0; len], epoch: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.writer.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.writer.is_empty()
+    }
+
+    /// Grow (never shrink) the tracked buffer — mirrors the executor's
+    /// high-water-mark arenas.
+    pub fn ensure_len(&mut self, len: usize) {
+        if len > self.writer.len() {
+            self.writer.resize(len, CLEAN);
+            self.stamp.resize(len, 0);
+        }
+    }
+
+    /// Open a new epoch (one parallel region). Tags from earlier epochs
+    /// stay readable — only same-epoch conflicts are races.
+    pub fn begin_epoch(&mut self) -> u32 {
+        self.epoch += 1;
+        self.epoch
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Record shard `shard` writing `range`; errors on the first float a
+    /// different shard already wrote in this epoch.
+    pub fn write(
+        &mut self,
+        shard: usize,
+        range: Range<usize>,
+    ) -> Result<(), SoundnessError> {
+        if range.end > self.writer.len() {
+            return Err(SoundnessError::ShadowOutOfBounds {
+                offset: range.end,
+                len: self.writer.len(),
+            });
+        }
+        let tag = shard as u32 + 1;
+        for i in range {
+            if self.stamp[i] == self.epoch
+                && self.writer[i] != CLEAN
+                && self.writer[i] != tag
+            {
+                return Err(SoundnessError::RaceOverlap {
+                    offset: i,
+                    shard_a: (self.writer[i] - 1) as usize,
+                    shard_b: shard,
+                    epoch: self.epoch,
+                });
+            }
+            self.writer[i] = tag;
+            self.stamp[i] = self.epoch;
+        }
+        Ok(())
+    }
+
+    /// Record shard `shard` reading `range`; errors on the first float a
+    /// *different* shard wrote in the current epoch (stale read: nothing
+    /// orders that write before this read).
+    pub fn read(
+        &self,
+        shard: usize,
+        range: Range<usize>,
+    ) -> Result<(), SoundnessError> {
+        if range.end > self.writer.len() {
+            return Err(SoundnessError::ShadowOutOfBounds {
+                offset: range.end,
+                len: self.writer.len(),
+            });
+        }
+        let tag = shard as u32 + 1;
+        for i in range {
+            if self.stamp[i] == self.epoch
+                && self.writer[i] != CLEAN
+                && self.writer[i] != tag
+            {
+                return Err(SoundnessError::StaleRead {
+                    offset: i,
+                    reader: shard,
+                    writer: (self.writer[i] - 1) as usize,
+                    epoch: self.epoch,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Replay one parallel region's precomputed per-shard write intervals
+/// (row ranges scaled by the row pitch) through `shadow` as a fresh
+/// epoch. `intervals` yields `(shard, float range)` exactly as the
+/// executor will write them; the first cross-shard overlap errors.
+pub fn replay_level_writes(
+    shadow: &mut ShadowMem,
+    intervals: impl Iterator<Item = (usize, Range<usize>)>,
+) -> Result<u32, SoundnessError> {
+    let epoch = shadow.begin_epoch();
+    for (shard, r) in intervals {
+        shadow.ensure_len(r.end);
+        shadow.write(shard, r)?;
+    }
+    Ok(epoch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::pool::shard_range;
+
+    #[test]
+    fn disjoint_shard_writes_pass() {
+        let mut sh = ShadowMem::new(100);
+        sh.begin_epoch();
+        for s in 0..4 {
+            sh.write(s, shard_range(100, 4, s)).unwrap();
+        }
+        // next epoch may rewrite everything
+        sh.begin_epoch();
+        for s in 0..3 {
+            sh.write(s, shard_range(100, 3, s)).unwrap();
+        }
+    }
+
+    /// The seeded-overlap negative test: two shards claim intersecting
+    /// ranges in one epoch and the checker must flag the race.
+    #[test]
+    fn seeded_overlap_fails_the_shadow_checker() {
+        let mut sh = ShadowMem::new(64);
+        sh.begin_epoch();
+        sh.write(0, 0..40).unwrap();
+        let e = sh.write(1, 32..48).unwrap_err();
+        assert_eq!(
+            e,
+            SoundnessError::RaceOverlap {
+                offset: 32,
+                shard_a: 0,
+                shard_b: 1,
+                epoch: 1
+            }
+        );
+        // same-shard rewrite in one epoch is not a race
+        sh.write(0, 0..40).unwrap();
+    }
+
+    #[test]
+    fn stale_cross_shard_read_is_flagged() {
+        let mut sh = ShadowMem::new(32);
+        sh.begin_epoch();
+        sh.write(0, 0..16).unwrap();
+        // shard 1 reading shard 0's same-epoch output: unsynchronized
+        let e = sh.read(1, 8..12).unwrap_err();
+        assert!(matches!(
+            e,
+            SoundnessError::StaleRead { reader: 1, writer: 0, .. }
+        ));
+        // shard 0 may read its own output; anyone may read after the
+        // epoch closes (the pool's quiesce is the synchronization point)
+        sh.read(0, 8..12).unwrap();
+        sh.begin_epoch();
+        sh.read(1, 8..12).unwrap();
+    }
+
+    #[test]
+    fn replay_flags_overlapping_plans_and_grows_on_demand() {
+        let mut sh = ShadowMem::new(0);
+        // a healthy 3-shard partition of 50 rows at pitch 4
+        let pitch = 4usize;
+        let ok = (0..3).map(|s| {
+            let r = shard_range(50, 3, s);
+            (s, r.start * pitch..r.end * pitch)
+        });
+        replay_level_writes(&mut sh, ok).unwrap();
+        assert_eq!(sh.len(), 200);
+        // a corrupted partition: shard 1 starts one row early
+        let bad = (0..3).map(|s| {
+            let mut r = shard_range(50, 3, s);
+            if s == 1 {
+                r.start -= 1;
+            }
+            (s, r.start * pitch..r.end * pitch)
+        });
+        assert!(matches!(
+            replay_level_writes(&mut sh, bad).unwrap_err(),
+            SoundnessError::RaceOverlap { .. }
+        ));
+    }
+
+    #[test]
+    fn out_of_bounds_access_is_flagged() {
+        let mut sh = ShadowMem::new(8);
+        sh.begin_epoch();
+        assert!(matches!(
+            sh.write(0, 4..12),
+            Err(SoundnessError::ShadowOutOfBounds { .. })
+        ));
+        assert!(matches!(
+            sh.read(0, 4..12),
+            Err(SoundnessError::ShadowOutOfBounds { .. })
+        ));
+    }
+}

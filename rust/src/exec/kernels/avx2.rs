@@ -36,7 +36,7 @@ pub(super) fn gemm_exact(
     _w: &[f32],
     panels: &[f32],
 ) {
-    // SAFETY: dispatch guarantees avx2+fma are present.
+    // SAFETY: [inv:simd-gated] dispatch guarantees avx2+fma are present.
     unsafe { gemm::<false>(buf, stride, rows, src, dst, k, n, panels) }
 }
 
@@ -51,7 +51,7 @@ pub(super) fn gemm_fast(
     _w: &[f32],
     panels: &[f32],
 ) {
-    // SAFETY: as above.
+    // SAFETY: [inv:simd-gated] as above.
     unsafe { gemm::<true>(buf, stride, rows, src, dst, k, n, panels) }
 }
 
@@ -67,41 +67,47 @@ unsafe fn gemm<const FMA: bool>(
     panels: &[f32],
 ) {
     debug_assert_eq!(panels.len(), super::panel_len(k, n));
-    let np = n.div_ceil(NR);
-    let base = buf.as_mut_ptr();
-    let mut r0 = 0usize;
-    while r0 < rows {
-        let rb = (rows - r0).min(MR);
-        for p in 0..np {
-            let j0 = p * NR;
-            let jw = NR.min(n - j0);
-            let panel = panels.as_ptr().add(p * k * NR);
-            let mut acc = [_mm256_setzero_ps(); MR];
-            for kk in 0..k {
-                let wv = _mm256_loadu_ps(panel.add(kk * NR));
-                for (ri, a) in acc.iter_mut().enumerate().take(rb) {
-                    let av = _mm256_broadcast_ss(&*base.add((r0 + ri) * stride + src + kk));
-                    *a = if FMA {
-                        _mm256_fmadd_ps(av, wv, *a)
+    // SAFETY: [inv:layout-disjoint] per the GemmFn contract every row's
+    // src/dst regions are in bounds of `buf` and disjoint, and the panel
+    // buffer has `panel_len(k, n)` elements; the intrinsics themselves
+    // are admitted by the `#[target_feature]` gate ([inv:simd-gated]).
+    unsafe {
+        let np = n.div_ceil(NR);
+        let base = buf.as_mut_ptr();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = (rows - r0).min(MR);
+            for p in 0..np {
+                let j0 = p * NR;
+                let jw = NR.min(n - j0);
+                let panel = panels.as_ptr().add(p * k * NR);
+                let mut acc = [_mm256_setzero_ps(); MR];
+                for kk in 0..k {
+                    let wv = _mm256_loadu_ps(panel.add(kk * NR));
+                    for (ri, a) in acc.iter_mut().enumerate().take(rb) {
+                        let av = _mm256_broadcast_ss(&*base.add((r0 + ri) * stride + src + kk));
+                        *a = if FMA {
+                            _mm256_fmadd_ps(av, wv, *a)
+                        } else {
+                            _mm256_add_ps(*a, _mm256_mul_ps(av, wv))
+                        };
+                    }
+                }
+                for (ri, a) in acc.iter().enumerate().take(rb) {
+                    let out = base.add((r0 + ri) * stride + dst + j0);
+                    if jw == NR {
+                        _mm256_storeu_ps(out, *a);
                     } else {
-                        _mm256_add_ps(*a, _mm256_mul_ps(av, wv))
-                    };
+                        // ragged tail panel: the output region ends at n —
+                        // spill to the stack, copy only the live columns
+                        let mut tail = [0.0f32; NR];
+                        _mm256_storeu_ps(tail.as_mut_ptr(), *a);
+                        std::ptr::copy_nonoverlapping(tail.as_ptr(), out, jw);
+                    }
                 }
             }
-            for (ri, a) in acc.iter().enumerate().take(rb) {
-                let out = base.add((r0 + ri) * stride + dst + j0);
-                if jw == NR {
-                    _mm256_storeu_ps(out, *a);
-                } else {
-                    // ragged tail panel: the output region ends at n —
-                    // spill to the stack, copy only the live columns
-                    let mut tail = [0.0f32; NR];
-                    _mm256_storeu_ps(tail.as_mut_ptr(), *a);
-                    std::ptr::copy_nonoverlapping(tail.as_ptr(), out, jw);
-                }
-            }
+            r0 += rb;
         }
-        r0 += rb;
     }
 }
 
@@ -116,7 +122,7 @@ pub(super) fn din_exact(
     _w: &[f32],
     wt: &[f32],
 ) {
-    // SAFETY: dispatch guarantees avx2+fma are present.
+    // SAFETY: [inv:simd-gated] dispatch guarantees avx2+fma are present.
     unsafe { din::<false>(adj, stride, rows, g0, d0, k, n, wt) }
 }
 
@@ -131,7 +137,7 @@ pub(super) fn din_fast(
     _w: &[f32],
     wt: &[f32],
 ) {
-    // SAFETY: as above.
+    // SAFETY: [inv:simd-gated] as above.
     unsafe { din::<true>(adj, stride, rows, g0, d0, k, n, wt) }
 }
 
@@ -147,46 +153,52 @@ unsafe fn din<const FMA: bool>(
     wt: &[f32],
 ) {
     debug_assert_eq!(wt.len(), k * n);
-    let base = adj.as_mut_ptr();
-    let mut r0 = 0usize;
-    while r0 < rows {
-        let rb = (rows - r0).min(MR);
-        let mut kk = 0usize;
-        // k lanes: each lane's j-reduction is sequential and ascending,
-        // matching the scalar reference order element for element
-        while kk + NR <= k {
-            let mut acc = [_mm256_setzero_ps(); MR];
-            for j in 0..n {
-                let wv = _mm256_loadu_ps(wt.as_ptr().add(j * k + kk));
-                for (ri, a) in acc.iter_mut().enumerate().take(rb) {
-                    let gv = _mm256_broadcast_ss(&*base.add((r0 + ri) * stride + g0 + j));
-                    *a = if FMA {
-                        _mm256_fmadd_ps(gv, wv, *a)
-                    } else {
-                        _mm256_add_ps(*a, _mm256_mul_ps(gv, wv))
-                    };
+    // SAFETY: [inv:adjoint-private] per the DinFn contract each row's g
+    // and din regions are in bounds of `adj` and never aliased, and `wt`
+    // holds the full `[n, k]` transpose; the intrinsics are admitted by
+    // the `#[target_feature]` gate ([inv:simd-gated]).
+    unsafe {
+        let base = adj.as_mut_ptr();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = (rows - r0).min(MR);
+            let mut kk = 0usize;
+            // k lanes: each lane's j-reduction is sequential and ascending,
+            // matching the scalar reference order element for element
+            while kk + NR <= k {
+                let mut acc = [_mm256_setzero_ps(); MR];
+                for j in 0..n {
+                    let wv = _mm256_loadu_ps(wt.as_ptr().add(j * k + kk));
+                    for (ri, a) in acc.iter_mut().enumerate().take(rb) {
+                        let gv = _mm256_broadcast_ss(&*base.add((r0 + ri) * stride + g0 + j));
+                        *a = if FMA {
+                            _mm256_fmadd_ps(gv, wv, *a)
+                        } else {
+                            _mm256_add_ps(*a, _mm256_mul_ps(gv, wv))
+                        };
+                    }
                 }
-            }
-            for (ri, a) in acc.iter().enumerate().take(rb) {
-                let d = base.add((r0 + ri) * stride + d0 + kk);
-                _mm256_storeu_ps(d, _mm256_add_ps(_mm256_loadu_ps(d), *a));
-            }
-            kk += NR;
-        }
-        // k tail: scalar, same j-ascending order as the lanes
-        while kk < k {
-            for ri in 0..rb {
-                let r = r0 + ri;
-                let g = view(base as *const f32, r * stride + g0, n);
-                let mut acc = 0.0f32;
-                for (j, &gv) in g.iter().enumerate() {
-                    acc += gv * wt[j * k + kk];
+                for (ri, a) in acc.iter().enumerate().take(rb) {
+                    let d = base.add((r0 + ri) * stride + d0 + kk);
+                    _mm256_storeu_ps(d, _mm256_add_ps(_mm256_loadu_ps(d), *a));
                 }
-                *base.add(r * stride + d0 + kk) += acc;
+                kk += NR;
             }
-            kk += 1;
+            // k tail: scalar, same j-ascending order as the lanes
+            while kk < k {
+                for ri in 0..rb {
+                    let r = r0 + ri;
+                    let g = view(base as *const f32, r * stride + g0, n);
+                    let mut acc = 0.0f32;
+                    for (j, &gv) in g.iter().enumerate() {
+                        acc += gv * wt[j * k + kk];
+                    }
+                    *base.add(r * stride + d0 + kk) += acc;
+                }
+                kk += 1;
+            }
+            r0 += rb;
         }
-        r0 += rb;
     }
 }
 
@@ -201,69 +213,83 @@ use super::act::{
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn exp_ps(x: __m256) -> __m256 {
-    let one = _mm256_set1_ps(1.0);
-    let x = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(EXP_HI)), _mm256_set1_ps(EXP_LO));
-    let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, _mm256_set1_ps(LOG2EF), _mm256_set1_ps(0.5)));
-    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(EXP_C1), x);
-    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(EXP_C2), r);
-    let z = _mm256_mul_ps(r, r);
-    let mut y = _mm256_set1_ps(EXP_P0);
-    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P1));
-    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P2));
-    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P3));
-    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P4));
-    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P5));
-    y = _mm256_fmadd_ps(y, z, _mm256_add_ps(r, one));
-    // 2^n straight into the exponent field (fx is integral post-floor)
-    let n = _mm256_cvtps_epi32(fx);
-    let bits = _mm256_slli_epi32(_mm256_add_epi32(n, _mm256_set1_epi32(0x7f)), 23);
-    _mm256_mul_ps(y, _mm256_castsi256_ps(bits))
+    // SAFETY: [inv:simd-gated] register-only arithmetic; the intrinsics
+    // are admitted by the enclosing `#[target_feature]` gate.
+    unsafe {
+        let one = _mm256_set1_ps(1.0);
+        let x = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(EXP_HI)), _mm256_set1_ps(EXP_LO));
+        let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, _mm256_set1_ps(LOG2EF), _mm256_set1_ps(0.5)));
+        let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(EXP_C1), x);
+        let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(EXP_C2), r);
+        let z = _mm256_mul_ps(r, r);
+        let mut y = _mm256_set1_ps(EXP_P0);
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P1));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P2));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P3));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P4));
+        y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(EXP_P5));
+        y = _mm256_fmadd_ps(y, z, _mm256_add_ps(r, one));
+        // 2^n straight into the exponent field (fx is integral post-floor)
+        let n = _mm256_cvtps_epi32(fx);
+        let bits = _mm256_slli_epi32(_mm256_add_epi32(n, _mm256_set1_epi32(0x7f)), 23);
+        _mm256_mul_ps(y, _mm256_castsi256_ps(bits))
+    }
 }
 
 pub(super) fn sigmoid_fast(out: &mut [f32], inp: &[f32]) {
-    // SAFETY: dispatch guarantees avx2+fma are present.
+    // SAFETY: [inv:simd-gated] dispatch guarantees avx2+fma are present.
     unsafe { sigmoid_lanes(out, inp) }
 }
 
 pub(super) fn tanh_fast(out: &mut [f32], inp: &[f32]) {
-    // SAFETY: as above.
+    // SAFETY: [inv:simd-gated] as above.
     unsafe { tanh_lanes(out, inp) }
 }
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn sigmoid_lanes(out: &mut [f32], inp: &[f32]) {
     debug_assert_eq!(out.len(), inp.len());
-    let one = _mm256_set1_ps(1.0);
-    let mut j = 0usize;
-    while j + NR <= out.len() {
-        let x = _mm256_loadu_ps(inp.as_ptr().add(j));
-        let e = exp_ps(_mm256_sub_ps(_mm256_setzero_ps(), x));
-        let y = _mm256_div_ps(one, _mm256_add_ps(one, e));
-        _mm256_storeu_ps(out.as_mut_ptr().add(j), y);
-        j += NR;
-    }
-    for i in j..out.len() {
-        out[i] = act::fast_sigmoid(inp[i]);
+    // SAFETY: [inv:simd-gated] lane loads/stores stay within the
+    // equal-length slices (`j + NR <= len` bound); intrinsics admitted by
+    // the enclosing `#[target_feature]` gate.
+    unsafe {
+        let one = _mm256_set1_ps(1.0);
+        let mut j = 0usize;
+        while j + NR <= out.len() {
+            let x = _mm256_loadu_ps(inp.as_ptr().add(j));
+            let e = exp_ps(_mm256_sub_ps(_mm256_setzero_ps(), x));
+            let y = _mm256_div_ps(one, _mm256_add_ps(one, e));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), y);
+            j += NR;
+        }
+        for i in j..out.len() {
+            out[i] = act::fast_sigmoid(inp[i]);
+        }
     }
 }
 
 #[target_feature(enable = "avx2,fma")]
 unsafe fn tanh_lanes(out: &mut [f32], inp: &[f32]) {
     debug_assert_eq!(out.len(), inp.len());
-    let one = _mm256_set1_ps(1.0);
-    let sign_mask = _mm256_set1_ps(-0.0);
-    let mut j = 0usize;
-    while j + NR <= out.len() {
-        let x = _mm256_loadu_ps(inp.as_ptr().add(j));
-        let absx = _mm256_andnot_ps(sign_mask, x);
-        let t = exp_ps(_mm256_mul_ps(absx, _mm256_set1_ps(-2.0)));
-        let y = _mm256_div_ps(_mm256_sub_ps(one, t), _mm256_add_ps(one, t));
-        // copysign: magnitude from y, sign bit from x
-        let y = _mm256_or_ps(_mm256_andnot_ps(sign_mask, y), _mm256_and_ps(sign_mask, x));
-        _mm256_storeu_ps(out.as_mut_ptr().add(j), y);
-        j += NR;
-    }
-    for i in j..out.len() {
-        out[i] = act::fast_tanh(inp[i]);
+    // SAFETY: [inv:simd-gated] lane loads/stores stay within the
+    // equal-length slices (`j + NR <= len` bound); intrinsics admitted by
+    // the enclosing `#[target_feature]` gate.
+    unsafe {
+        let one = _mm256_set1_ps(1.0);
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let mut j = 0usize;
+        while j + NR <= out.len() {
+            let x = _mm256_loadu_ps(inp.as_ptr().add(j));
+            let absx = _mm256_andnot_ps(sign_mask, x);
+            let t = exp_ps(_mm256_mul_ps(absx, _mm256_set1_ps(-2.0)));
+            let y = _mm256_div_ps(_mm256_sub_ps(one, t), _mm256_add_ps(one, t));
+            // copysign: magnitude from y, sign bit from x
+            let y = _mm256_or_ps(_mm256_andnot_ps(sign_mask, y), _mm256_and_ps(sign_mask, x));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), y);
+            j += NR;
+        }
+        for i in j..out.len() {
+            out[i] = act::fast_tanh(inp[i]);
+        }
     }
 }

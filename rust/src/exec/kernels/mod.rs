@@ -296,13 +296,18 @@ pub fn fill_transpose(w: &[f32], k: usize, n: usize, out: &mut [f32]) {
 /// live mutable region.
 #[inline]
 pub(crate) unsafe fn view<'a>(base: *const f32, off: usize, len: usize) -> &'a [f32] {
-    std::slice::from_raw_parts(base.add(off), len)
+    // SAFETY: [inv:inbounds-view] caller guarantees `[off, off + len)`
+    // is in bounds of `base`'s buffer and disjoint from live `&mut`
+    // regions (the layout pass proves the plan's regions are).
+    unsafe { std::slice::from_raw_parts(base.add(off), len) }
 }
 
 /// Mutable view of a buffer region (same safety contract as [`view`]).
 #[inline]
 pub(crate) unsafe fn view_mut<'a>(base: *mut f32, off: usize, len: usize) -> &'a mut [f32] {
-    std::slice::from_raw_parts_mut(base.add(off), len)
+    // SAFETY: [inv:inbounds-view] as [`view`], plus exclusivity: no other
+    // live view overlaps `[off, off + len)` while this borrow exists.
+    unsafe { std::slice::from_raw_parts_mut(base.add(off), len) }
 }
 
 #[cfg(test)]

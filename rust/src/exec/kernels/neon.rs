@@ -24,7 +24,8 @@ pub(super) fn gemm_exact(
     _w: &[f32],
     panels: &[f32],
 ) {
-    // SAFETY: NEON is baseline on aarch64; layout per the GemmFn contract.
+    // SAFETY: [inv:simd-gated] NEON is baseline on aarch64; layout per
+    // the GemmFn contract.
     unsafe { gemm::<false>(buf, stride, rows, src, dst, k, n, panels) }
 }
 
@@ -39,7 +40,7 @@ pub(super) fn gemm_fast(
     _w: &[f32],
     panels: &[f32],
 ) {
-    // SAFETY: as above.
+    // SAFETY: [inv:simd-gated] as above.
     unsafe { gemm::<true>(buf, stride, rows, src, dst, k, n, panels) }
 }
 
@@ -55,45 +56,51 @@ unsafe fn gemm<const FMA: bool>(
     panels: &[f32],
 ) {
     debug_assert_eq!(panels.len(), super::panel_len(k, n));
-    let np = n.div_ceil(NR);
-    let base = buf.as_mut_ptr();
-    let mut r0 = 0usize;
-    while r0 < rows {
-        let rb = (rows - r0).min(MR);
-        for p in 0..np {
-            let j0 = p * NR;
-            let jw = NR.min(n - j0);
-            let panel = panels.as_ptr().add(p * k * NR);
-            let mut lo = [vdupq_n_f32(0.0); MR];
-            let mut hi = [vdupq_n_f32(0.0); MR];
-            for kk in 0..k {
-                let wlo = vld1q_f32(panel.add(kk * NR));
-                let whi = vld1q_f32(panel.add(kk * NR + 4));
+    // SAFETY: [inv:layout-disjoint] per the GemmFn contract every row's
+    // src/dst regions are in bounds of `buf` and disjoint, and the panel
+    // buffer has `panel_len(k, n)` elements; the intrinsics themselves
+    // are admitted by the `#[target_feature]` gate ([inv:simd-gated]).
+    unsafe {
+        let np = n.div_ceil(NR);
+        let base = buf.as_mut_ptr();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = (rows - r0).min(MR);
+            for p in 0..np {
+                let j0 = p * NR;
+                let jw = NR.min(n - j0);
+                let panel = panels.as_ptr().add(p * k * NR);
+                let mut lo = [vdupq_n_f32(0.0); MR];
+                let mut hi = [vdupq_n_f32(0.0); MR];
+                for kk in 0..k {
+                    let wlo = vld1q_f32(panel.add(kk * NR));
+                    let whi = vld1q_f32(panel.add(kk * NR + 4));
+                    for ri in 0..rb {
+                        let av = vdupq_n_f32(*base.add((r0 + ri) * stride + src + kk));
+                        if FMA {
+                            lo[ri] = vfmaq_f32(lo[ri], av, wlo);
+                            hi[ri] = vfmaq_f32(hi[ri], av, whi);
+                        } else {
+                            lo[ri] = vaddq_f32(lo[ri], vmulq_f32(av, wlo));
+                            hi[ri] = vaddq_f32(hi[ri], vmulq_f32(av, whi));
+                        }
+                    }
+                }
                 for ri in 0..rb {
-                    let av = vdupq_n_f32(*base.add((r0 + ri) * stride + src + kk));
-                    if FMA {
-                        lo[ri] = vfmaq_f32(lo[ri], av, wlo);
-                        hi[ri] = vfmaq_f32(hi[ri], av, whi);
+                    let out = base.add((r0 + ri) * stride + dst + j0);
+                    if jw == NR {
+                        vst1q_f32(out, lo[ri]);
+                        vst1q_f32(out.add(4), hi[ri]);
                     } else {
-                        lo[ri] = vaddq_f32(lo[ri], vmulq_f32(av, wlo));
-                        hi[ri] = vaddq_f32(hi[ri], vmulq_f32(av, whi));
+                        let mut tail = [0.0f32; NR];
+                        vst1q_f32(tail.as_mut_ptr(), lo[ri]);
+                        vst1q_f32(tail.as_mut_ptr().add(4), hi[ri]);
+                        std::ptr::copy_nonoverlapping(tail.as_ptr(), out, jw);
                     }
                 }
             }
-            for ri in 0..rb {
-                let out = base.add((r0 + ri) * stride + dst + j0);
-                if jw == NR {
-                    vst1q_f32(out, lo[ri]);
-                    vst1q_f32(out.add(4), hi[ri]);
-                } else {
-                    let mut tail = [0.0f32; NR];
-                    vst1q_f32(tail.as_mut_ptr(), lo[ri]);
-                    vst1q_f32(tail.as_mut_ptr().add(4), hi[ri]);
-                    std::ptr::copy_nonoverlapping(tail.as_ptr(), out, jw);
-                }
-            }
+            r0 += rb;
         }
-        r0 += rb;
     }
 }
 
@@ -108,7 +115,8 @@ pub(super) fn din_exact(
     _w: &[f32],
     wt: &[f32],
 ) {
-    // SAFETY: NEON is baseline on aarch64; layout per the DinFn contract.
+    // SAFETY: [inv:simd-gated] NEON is baseline on aarch64; layout per
+    // the DinFn contract.
     unsafe { din::<false>(adj, stride, rows, g0, d0, k, n, wt) }
 }
 
@@ -123,7 +131,7 @@ pub(super) fn din_fast(
     _w: &[f32],
     wt: &[f32],
 ) {
-    // SAFETY: as above.
+    // SAFETY: [inv:simd-gated] as above.
     unsafe { din::<true>(adj, stride, rows, g0, d0, k, n, wt) }
 }
 
@@ -139,44 +147,50 @@ unsafe fn din<const FMA: bool>(
     wt: &[f32],
 ) {
     debug_assert_eq!(wt.len(), k * n);
-    let base = adj.as_mut_ptr();
-    let mut r0 = 0usize;
-    while r0 < rows {
-        let rb = (rows - r0).min(MR);
-        let mut kk = 0usize;
-        // 4 k-lanes: each lane's j-reduction is sequential and ascending
-        while kk + 4 <= k {
-            let mut acc = [vdupq_n_f32(0.0); MR];
-            for j in 0..n {
-                let wv = vld1q_f32(wt.as_ptr().add(j * k + kk));
+    // SAFETY: [inv:adjoint-private] per the DinFn contract each row's g
+    // and din regions are in bounds of `adj` and never aliased, and `wt`
+    // holds the full `[n, k]` transpose; the intrinsics are admitted by
+    // the `#[target_feature]` gate ([inv:simd-gated]).
+    unsafe {
+        let base = adj.as_mut_ptr();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rb = (rows - r0).min(MR);
+            let mut kk = 0usize;
+            // 4 k-lanes: each lane's j-reduction is sequential and ascending
+            while kk + 4 <= k {
+                let mut acc = [vdupq_n_f32(0.0); MR];
+                for j in 0..n {
+                    let wv = vld1q_f32(wt.as_ptr().add(j * k + kk));
+                    for ri in 0..rb {
+                        let gv = vdupq_n_f32(*base.add((r0 + ri) * stride + g0 + j));
+                        acc[ri] = if FMA {
+                            vfmaq_f32(acc[ri], gv, wv)
+                        } else {
+                            vaddq_f32(acc[ri], vmulq_f32(gv, wv))
+                        };
+                    }
+                }
                 for ri in 0..rb {
-                    let gv = vdupq_n_f32(*base.add((r0 + ri) * stride + g0 + j));
-                    acc[ri] = if FMA {
-                        vfmaq_f32(acc[ri], gv, wv)
-                    } else {
-                        vaddq_f32(acc[ri], vmulq_f32(gv, wv))
-                    };
+                    let d = base.add((r0 + ri) * stride + d0 + kk);
+                    vst1q_f32(d, vaddq_f32(vld1q_f32(d), acc[ri]));
                 }
+                kk += 4;
             }
-            for ri in 0..rb {
-                let d = base.add((r0 + ri) * stride + d0 + kk);
-                vst1q_f32(d, vaddq_f32(vld1q_f32(d), acc[ri]));
-            }
-            kk += 4;
-        }
-        // k tail: scalar, same j-ascending order as the lanes
-        while kk < k {
-            for ri in 0..rb {
-                let r = r0 + ri;
-                let g = view(base as *const f32, r * stride + g0, n);
-                let mut acc = 0.0f32;
-                for (j, &gv) in g.iter().enumerate() {
-                    acc += gv * wt[j * k + kk];
+            // k tail: scalar, same j-ascending order as the lanes
+            while kk < k {
+                for ri in 0..rb {
+                    let r = r0 + ri;
+                    let g = view(base as *const f32, r * stride + g0, n);
+                    let mut acc = 0.0f32;
+                    for (j, &gv) in g.iter().enumerate() {
+                        acc += gv * wt[j * k + kk];
+                    }
+                    *base.add(r * stride + d0 + kk) += acc;
                 }
-                *base.add(r * stride + d0 + kk) += acc;
+                kk += 1;
             }
-            kk += 1;
+            r0 += rb;
         }
-        r0 += rb;
     }
 }

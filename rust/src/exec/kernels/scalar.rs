@@ -27,16 +27,18 @@ pub(super) fn gemm(
     while r0 < rows {
         let rb = (rows - r0).min(GEMM_ROW_BLOCK);
         for r in r0..r0 + rb {
-            // SAFETY: row r's output region, in bounds and disjoint from
-            // its input region (the caller's layout contract).
+            // SAFETY: [inv:layout-disjoint] row r's output region, in
+            // bounds and disjoint from its input region (the caller's
+            // layout contract).
             unsafe { view_mut(base, r * stride + dst, n) }.fill(0.0);
         }
         for kk in 0..k {
             let wrow = &w[kk * n..(kk + 1) * n];
             for r in r0..r0 + rb {
-                // SAFETY: in-bounds scalar read of row r's input.
+                // SAFETY: [inv:inbounds-view] in-bounds scalar read of
+                // row r's input.
                 let v = unsafe { *base.add(r * stride + src + kk) };
-                // SAFETY: row r's output region again.
+                // SAFETY: [inv:layout-disjoint] row r's output region again.
                 let outr = unsafe { view_mut(base, r * stride + dst, n) };
                 for (ov, &pw) in outr.iter_mut().zip(wrow) {
                     *ov += v * pw;
@@ -68,13 +70,15 @@ pub(super) fn din(
         for kk in 0..k {
             let wrow = &w[kk * n..(kk + 1) * n];
             for r in r0..r0 + rb {
-                // SAFETY: row r's adjoint-of-output region (shared read)
-                // and the disjoint din scalar (write).
+                // SAFETY: [inv:adjoint-private] row r's adjoint-of-output
+                // region (shared read) and the disjoint din scalar (write).
                 let g = unsafe { view(base as *const f32, r * stride + g0, n) };
                 let mut acc = 0.0f32;
                 for (j, &wv) in wrow.iter().enumerate() {
                     acc += g[j] * wv;
                 }
+                // SAFETY: [inv:adjoint-private] as above — the din scalar
+                // is disjoint from the g region being read.
                 unsafe {
                     *base.add(r * stride + d0 + kk) += acc;
                 }

@@ -130,10 +130,11 @@ where
     let ptr = SendPtr(dst.as_mut_ptr());
     let fr = &f;
     ex.run(shards, &|s: usize| {
-        // SAFETY: shard s owns a disjoint contiguous row range and its own
-        // traffic slot; rows are cols-element blocks in the live buffer.
+        // SAFETY: [inv:shard-scratch] shard s owns its own traffic slot.
         let tl = unsafe { slots.get(s) };
         for i in shard_range(rows, shards, s) {
+            // SAFETY: [inv:shard-rows] shard s owns a disjoint contiguous
+            // row range; rows are cols-element blocks in the live buffer.
             let row = unsafe {
                 std::slice::from_raw_parts_mut(ptr.0.add(i * cols), cols)
             };
@@ -152,7 +153,13 @@ where
 /// disjointness arguments.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr(pub(crate) *mut f32);
+// SAFETY: [inv:shard-rows] the pointer is only dereferenced inside a
+// shard job, at offsets the shard plan assigns exclusively to that shard
+// (contiguous row ranges or owner partitions), so no two threads ever
+// form overlapping references through it.
 unsafe impl Send for SendPtr {}
+// SAFETY: [inv:owner-partition] as above — sharing the handle is sound
+// because every dereference site carves a shard-exclusive region.
 unsafe impl Sync for SendPtr {}
 
 /// Partition `(row, owner_key)` pairs into the pre-cleared per-owner lists
@@ -212,9 +219,9 @@ pub fn owner_add_rows(
     let ptr = SendPtr(dst.as_mut_ptr());
     ex.run(shards, &|s: usize| {
         for &(i, t) in &owned_r[s] {
-            // SAFETY: the owner partition puts each token row in exactly
-            // one shard's list; rows are disjoint dim-blocks inside the
-            // live allocation.
+            // SAFETY: [inv:owner-partition] the owner partition puts each
+            // token row in exactly one shard's list; rows are disjoint
+            // dim-blocks inside the live allocation.
             let row = unsafe {
                 std::slice::from_raw_parts_mut(ptr.0.add(t * dim), dim)
             };
@@ -633,6 +640,11 @@ pub struct HostFrontier {
     padded_rows: usize,
     has_grads: bool,
     has_pgrads: bool,
+    /// Shadow of the level sweeps' per-shard write plans, replayed (as
+    /// one epoch per parallel region) before the raw-pointer writes run.
+    /// `shadow-check` builds only; see `analysis::shadow`.
+    #[cfg(feature = "shadow-check")]
+    shadow: crate::analysis::shadow::ShadowMem,
 }
 
 /// Grow-only arena slice: `buf[..n]`, zero-filled, allocating only when
@@ -694,9 +706,11 @@ where
     let tmp_ptr = SendPtr(cell_tmp.as_mut_ptr());
     let fr = &f;
     ex.run(shards, &|s: usize| {
-        // SAFETY: shard s owns a disjoint row range, its own traffic
-        // slot, and its own tc-wide tmp window.
+        // SAFETY: [inv:shard-scratch] shard s owns its own traffic slot
+        // and its own tc-wide tmp window.
         let tl = unsafe { slots.get(s) };
+        // SAFETY: [inv:shard-scratch] as above — windows are disjoint
+        // tc-strided blocks of `cell_tmp` (sized `shards * tc`).
         let tmp = unsafe {
             std::slice::from_raw_parts_mut(tmp_ptr.0.add(s * tc), tc)
         };
@@ -732,6 +746,8 @@ impl HostFrontier {
             padded_rows: 0,
             has_grads: false,
             has_pgrads: false,
+            #[cfg(feature = "shadow-check")]
+            shadow: crate::analysis::shadow::ShadowMem::new(0),
         }
     }
 
@@ -891,18 +907,37 @@ impl HostFrontier {
                 let tape_ptr = SendPtr(tape.as_mut_ptr());
                 let xr: &[f32] = &*x;
                 let sr: &[f32] = &*sall;
+                // replay the sweep's write plan through the shadow tags
+                // before any raw-pointer write runs: each pitch is one
+                // epoch, and any cross-shard overlap aborts here
+                #[cfg(feature = "shadow-check")]
+                for pitch in [sc, ltc] {
+                    let iv = (0..shards).map(|sh| {
+                        let r = shard_range(m, shards, sh);
+                        (sh, r.start * pitch..r.end * pitch)
+                    });
+                    if let Err(e) = crate::analysis::shadow::replay_level_writes(
+                        &mut self.shadow,
+                        iv,
+                    ) {
+                        panic!("shadow check: forward level sweep: {e}");
+                    }
+                }
                 ex.run(shards, &|sh: usize| {
                     let range = shard_range(m, shards, sh);
-                    // SAFETY: shard sh owns a disjoint contiguous row
-                    // range — disjoint sc-/ltc-strided sub-blocks of
-                    // `out` / `tape` — and its own traffic slot.
+                    // SAFETY: [inv:shard-scratch] shard sh owns its own
+                    // traffic slot.
                     let tl = unsafe { slots.get(sh) };
+                    // SAFETY: [inv:level-frontier] shard sh owns a
+                    // disjoint contiguous row range — disjoint sc-/ltc-
+                    // strided sub-blocks of `out` / `tape`.
                     let out_sub = unsafe {
                         std::slice::from_raw_parts_mut(
                             out_ptr.0.add(range.start * sc),
                             range.len() * sc,
                         )
                     };
+                    // SAFETY: [inv:level-frontier] as above.
                     let tape_sub = unsafe {
                         std::slice::from_raw_parts_mut(
                             tape_ptr.0.add(range.start * ltc),
@@ -925,8 +960,9 @@ impl HostFrontier {
                     &mut self.cell_tmp,
                     tc,
                     |i, tmp| {
-                        // SAFETY: each row i is visited by exactly one
-                        // shard; rows are disjoint sc-blocks of `out`.
+                        // SAFETY: [inv:shard-rows] each row i is visited
+                        // by exactly one shard; rows are disjoint
+                        // sc-blocks of `out`.
                         let orow = unsafe {
                             std::slice::from_raw_parts_mut(
                                 out_ptr.0.add(i * sc),
@@ -999,29 +1035,47 @@ impl HostFrontier {
                 let tape_ptr = SendPtr(tape.as_mut_ptr());
                 let adj_ptr = SendPtr(adj.as_mut_ptr());
                 let gr: &[f32] = &*g_out;
+                // replay the reverse sweep's write plan (gx/gs/tape/adj
+                // sub-blocks, one epoch per pitch) before the raw writes
+                #[cfg(feature = "shadow-check")]
+                for pitch in [xc, asc, ltc, lac] {
+                    let iv = (0..shards).map(|sh| {
+                        let r = shard_range(m, shards, sh);
+                        (sh, r.start * pitch..r.end * pitch)
+                    });
+                    if let Err(e) = crate::analysis::shadow::replay_level_writes(
+                        &mut self.shadow,
+                        iv,
+                    ) {
+                        panic!("shadow check: backward level sweep: {e}");
+                    }
+                }
                 ex.run(shards, &|sh: usize| {
                     let range = shard_range(m, shards, sh);
-                    // SAFETY: shard sh owns a disjoint contiguous row
-                    // range — disjoint strided sub-blocks of `gx`, `gs`,
-                    // `tape` and `adj`.
+                    // SAFETY: [inv:level-frontier] shard sh owns a
+                    // disjoint contiguous row range — disjoint strided
+                    // sub-blocks of `gx`, `gs`, `tape` and `adj`.
                     let gx_sub = unsafe {
                         std::slice::from_raw_parts_mut(
                             gx_ptr.0.add(range.start * xc),
                             range.len() * xc,
                         )
                     };
+                    // SAFETY: [inv:level-frontier] as above.
                     let gs_sub = unsafe {
                         std::slice::from_raw_parts_mut(
                             gs_ptr.0.add(range.start * asc),
                             range.len() * asc,
                         )
                     };
+                    // SAFETY: [inv:level-frontier] as above.
                     let tape_sub = unsafe {
                         std::slice::from_raw_parts_mut(
                             tape_ptr.0.add(range.start * ltc),
                             range.len() * ltc,
                         )
                     };
+                    // SAFETY: [inv:level-frontier] as above.
                     let adj_sub = unsafe {
                         std::slice::from_raw_parts_mut(
                             adj_ptr.0.add(range.start * lac),
@@ -1048,15 +1102,16 @@ impl HostFrontier {
                         &mut self.cell_tmp,
                         tc,
                         |i, tmp| {
-                            // SAFETY: each row i is visited by exactly one
-                            // shard; rows are disjoint xc-/asc-blocks of
-                            // `gx` / `gs`.
+                            // SAFETY: [inv:shard-rows] each row i is
+                            // visited by exactly one shard; rows are
+                            // disjoint xc-/asc-blocks of `gx` / `gs`.
                             let gxr = unsafe {
                                 std::slice::from_raw_parts_mut(
                                     gx_ptr.0.add(i * xc),
                                     xc,
                                 )
                             };
+                            // SAFETY: [inv:shard-rows] as above.
                             let gsr = unsafe {
                                 std::slice::from_raw_parts_mut(
                                     gs_ptr.0.add(i * asc),
@@ -1273,6 +1328,35 @@ mod tests {
             assert_eq!(base.traffic_bytes, r.traffic_bytes);
             assert_eq!(base.traffic_ops, r.traffic_ops);
             assert_eq!(base.padded_rows, r.padded_rows);
+        }
+    }
+
+    /// With `shadow-check` on, a healthy compiled-cell run must replay
+    /// every level sweep through the shadow tags without a race — the
+    /// positive half of the seeded-overlap negative test in
+    /// `analysis::shadow`.
+    #[cfg(feature = "shadow-check")]
+    #[test]
+    fn shadow_replay_passes_on_a_real_compiled_run() {
+        use crate::vertex::registry::CellSpec;
+        let mut rng = Rng::new(23);
+        let graphs: Vec<InputGraph> = (0..5)
+            .map(|_| {
+                let leaves = 3 + rng.below(5);
+                crate::graph::synth::random_binary_tree(&mut rng, 20, leaves, 5)
+            })
+            .collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let h = 8;
+        let spec = CellSpec::lookup("treelstm", h).unwrap();
+        let cell = spec.random_cell(&mut rng, 0.2).unwrap();
+        let batch = GraphBatch::new(&refs, cell.arity());
+        let tasks = schedule(&batch, Policy::Batched, &[1, 2, 4, 8]);
+        let xtable: Vec<f32> =
+            (0..20 * cell.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
+        for threads in [1usize, 3] {
+            let r = run_host_frontier(&batch, &tasks, &cell, &xtable, threads, true);
+            assert!(r.states.as_slice().iter().all(|v| v.is_finite()));
         }
     }
 

@@ -136,10 +136,11 @@ impl WorkerPool {
         let _turn = self.submit.lock().unwrap_or_else(|p| p.into_inner());
         let _sp = obs::span("dispatch", obs::Cat::Pool)
             .args(n_shards as u32, (self.workers + 1) as u32);
-        // SAFETY: the erased borrow is published under the lock, and this
-        // function does not return (or unwind) until every worker reported
-        // done for this epoch, so `f` strictly outlives all uses; the
-        // `submit` guard above guarantees a single live epoch at a time.
+        // SAFETY: [inv:pool-quiesce] the erased borrow is published under
+        // the lock, and this function does not return (or unwind) until
+        // every worker reported done for this epoch, so `f` strictly
+        // outlives all uses; the `submit` guard above guarantees a single
+        // live epoch at a time.
         let job: JobRef = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), JobRef>(f)
         };
@@ -334,7 +335,13 @@ impl ShardScratch {
 #[derive(Clone, Copy)]
 pub(crate) struct ShardSlots<T>(*mut T);
 
+// SAFETY: [inv:shard-scratch] ShardSlots is a raw view over a `&mut [T]`
+// whose slots are only ever touched by the participant running that slot's
+// shard (the contract of `get`), so sending/sharing the handle is sound
+// whenever `T` itself is `Send`.
 unsafe impl<T: Send> Send for ShardSlots<T> {}
+// SAFETY: [inv:shard-scratch] as above — shard-disjoint `&mut` access is
+// the only access pattern, so shared references to the handle are sound.
 unsafe impl<T: Send> Sync for ShardSlots<T> {}
 
 impl<T> ShardSlots<T> {
@@ -346,7 +353,10 @@ impl<T> ShardSlots<T> {
     /// shard plan) and in bounds of the slice passed to `new`.
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn get(&self, i: usize) -> &mut T {
-        &mut *self.0.add(i)
+        // SAFETY: [inv:shard-scratch] caller passes its own shard index,
+        // in bounds of the slice handed to `new`; no other participant
+        // touches slot `i`, so the exclusive borrow is unique.
+        unsafe { &mut *self.0.add(i) }
     }
 }
 

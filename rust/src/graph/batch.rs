@@ -137,6 +137,15 @@ impl GraphBatch {
             self.root_labels.push(g.root_label);
             base += g.n() as u32;
         }
+        // debug builds prove the merged batch structurally sound (child
+        // edges in bounds, sample-disjoint, depths strictly increasing —
+        // the properties the frontier sweep's disjointness rests on)
+        // before any plan is built over it; release builds pay nothing
+        // (DESIGN.md §13)
+        #[cfg(debug_assertions)]
+        if let Err(e) = crate::analysis::plan::check_batch(self) {
+            panic!("merged batch is unsound: {e}");
+        }
     }
 
     #[inline]

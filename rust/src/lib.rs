@@ -6,6 +6,15 @@
 //! architecture, the module map, and the intra-task parallel executor;
 //! bench tables land under `results/` (run `cavs bench`).
 
+// Unsafe hygiene (DESIGN.md §13): every unsafe operation inside an
+// `unsafe fn` needs its own block (with its own SAFETY comment), and no
+// ceremonial unsafe survives. The xtask lint additionally requires every
+// SAFETY comment to name a registered invariant ([inv:<tag>], see
+// `analysis::invariants`).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unused_unsafe)]
+
+pub mod analysis;
 pub mod baselines;
 pub mod bench;
 pub mod config;

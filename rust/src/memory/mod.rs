@@ -241,8 +241,9 @@ impl StateBuffer {
         let ptr = SendPtr(dst.as_mut_ptr());
         ex.run(shards, &|s: usize| {
             for m in shard_range(rows, shards, s) {
-                // SAFETY: shard s owns a disjoint row range; windows of
-                // distinct rows never overlap (dst_col + c <= dst_stride).
+                // SAFETY: [inv:shard-rows] shard s owns a disjoint row
+                // range; windows of distinct rows never overlap
+                // (dst_col + c <= dst_stride).
                 let d = unsafe {
                     std::slice::from_raw_parts_mut(
                         ptr.0.add(m * dst_stride + dst_col),
@@ -300,9 +301,10 @@ impl StateBuffer {
         ex.run(shards, &|s: usize| {
             for &(m, v) in &owned_r[s] {
                 assert!(v < n, "scatter id {v} out of range {n}");
-                // SAFETY: the owner partition puts row v in exactly one
-                // shard's list; rows are non-overlapping c-element blocks
-                // inside the live allocation.
+                // SAFETY: [inv:owner-partition] the owner partition puts
+                // row v in exactly one shard's list; rows are
+                // non-overlapping c-element blocks inside the live
+                // allocation.
                 unsafe {
                     std::ptr::copy_nonoverlapping(
                         src.as_ptr().add(m * c),
@@ -394,8 +396,9 @@ impl StateBuffer {
         ex.run(shards, &|s: usize| {
             for &(m, v) in &owned_r[s] {
                 assert!(v < n, "scatter_add id {v} out of range {n}");
-                // SAFETY: the owner partition puts row v in exactly one
-                // shard's list (disjoint c-element blocks).
+                // SAFETY: [inv:owner-partition] the owner partition puts
+                // row v in exactly one shard's list (disjoint c-element
+                // blocks).
                 let row = unsafe {
                     std::slice::from_raw_parts_mut(ptr.0.add(v * c), c)
                 };

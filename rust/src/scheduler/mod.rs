@@ -5,7 +5,7 @@
 //! a breadth-first frontier sweep, chunks tasks to the artifact bucket
 //! range, and records them on a stack for the exactly-LIFO backward pass.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::graph::GraphBatch;
 use crate::util::bucket_for;
@@ -51,21 +51,13 @@ pub struct ScheduleStats {
 /// implies deduped). `schedule` and the engine's chunking logic both
 /// assume `buckets.last()` is the usable maximum — callers get a proper
 /// error here instead of a panic (or silent mis-chunking) downstream.
+///
+/// Routes through [`analysis::plan::check_buckets`](crate::analysis::plan::check_buckets)
+/// so `cavs check` and the engine/manifest call sites report bucket
+/// violations through the same typed [`SoundnessError`](crate::analysis::SoundnessError)
+/// as every other plan violation.
 pub fn validate_buckets(buckets: &[usize]) -> Result<()> {
-    if buckets.is_empty() {
-        bail!("artifact bucket list is empty");
-    }
-    if buckets[0] == 0 {
-        bail!("artifact bucket list contains a zero bucket: {buckets:?}");
-    }
-    for w in buckets.windows(2) {
-        if w[1] <= w[0] {
-            bail!(
-                "artifact bucket list must be strictly ascending \
-                 (sorted, deduped): {buckets:?}"
-            );
-        }
-    }
+    crate::analysis::plan::check_buckets(buckets)?;
     Ok(())
 }
 
@@ -117,6 +109,14 @@ pub fn schedule(
         n,
         "every vertex scheduled exactly once"
     );
+    // debug builds prove the full plan-disjointness property (every
+    // vertex exactly once, dependencies respected, buckets large enough)
+    // before any raw-pointer executor consumes the tasks; release builds
+    // pay nothing (DESIGN.md §13)
+    #[cfg(debug_assertions)]
+    if let Err(e) = crate::analysis::plan::check_tasks(batch, &tasks) {
+        panic!("schedule produced an unsound plan: {e}");
+    }
     tasks
 }
 

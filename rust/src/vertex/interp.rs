@@ -28,7 +28,7 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::opt::{OptProgram, OptStats, Step, WideGemm};
 use super::{OpKind, OpNode, Program, ProgramMeta};
@@ -177,14 +177,19 @@ fn bind_wt(plan: &OptProgram, params: &[Vec<f32>]) -> Vec<Vec<f32>> {
 /// storage never overlaps its inputs').
 #[inline]
 unsafe fn region<'a>(base: *const f32, off: usize, len: usize) -> &'a [f32] {
-    std::slice::from_raw_parts(base.add(off), len)
+    // SAFETY: [inv:inbounds-view] caller guarantees the region is in
+    // bounds of `base`'s buffer (the layout pass proves every plan
+    // region is) and disjoint from live mutable regions.
+    unsafe { std::slice::from_raw_parts(base.add(off), len) }
 }
 
 /// Mutable view of a tape region through its raw base pointer (same
 /// safety contract as [`region`]).
 #[inline]
 unsafe fn region_mut<'a>(base: *mut f32, off: usize, len: usize) -> &'a mut [f32] {
-    std::slice::from_raw_parts_mut(base.add(off), len)
+    // SAFETY: [inv:inbounds-view] as [`region`], plus exclusivity: no
+    // other live view overlaps ([inv:layout-disjoint]).
+    unsafe { std::slice::from_raw_parts_mut(base.add(off), len) }
 }
 
 impl ProgramCell {
@@ -245,6 +250,11 @@ impl ProgramCell {
         params: Vec<Vec<f32>>,
     ) -> Result<ProgramCell> {
         debug_assert_eq!(plan.name, program.name, "plan/program mismatch");
+        // bind-time layout soundness: a cached/deserialized plan is
+        // re-verified before any executor trusts its addresses
+        plan.verify().with_context(|| {
+            format!("program '{}': bound plan failed layout verification", plan.name)
+        })?;
         let mut c = ProgramCell::new(program, params)?;
         let wide_w = bind_wide(&plan, &c.params);
         let panels = bind_panels(&plan, &c.params, &wide_w);
@@ -602,13 +612,13 @@ impl ProgramCell {
         let base = tape.as_mut_ptr();
         match step {
             Step::Pull { node } => {
-                // SAFETY: the node's fresh/aliased region is in bounds
-                // and no other region is live.
+                // SAFETY: [inv:layout-disjoint] the node's fresh/aliased
+                // region is in bounds and no other region is live.
                 let dst = unsafe { region_mut(base, p.addr[*node], p.meta.x_cols) };
                 dst.copy_from_slice(x);
             }
             Step::Gather { node, slot } => {
-                // SAFETY: as above.
+                // SAFETY: [inv:layout-disjoint] as above.
                 let dst = unsafe { region_mut(base, p.addr[*node], sc) };
                 dst.copy_from_slice(&s[slot * sc..(slot + 1) * sc]);
             }
@@ -620,9 +630,9 @@ impl ProgramCell {
                     let w = p.nodes[src].cols;
                     let sa = p.addr[src];
                     if sa != d0 + off {
-                        // SAFETY: both ranges in bounds; `copy` tolerates
-                        // overlap (none occurs — aliased inputs take the
-                        // equal-address branch).
+                        // SAFETY: [inv:layout-disjoint] both ranges in
+                        // bounds; `copy` tolerates overlap (none occurs —
+                        // aliased inputs take the equal-address branch).
                         unsafe {
                             std::ptr::copy(
                                 base.add(sa) as *const f32,
@@ -650,25 +660,31 @@ impl ProgramCell {
                 let width = g.width;
                 for &m in &g.nodes {
                     let node = &p.nodes[m];
-                    // SAFETY: a member's storage is disjoint from every
-                    // input's storage (layout invariant).
+                    // SAFETY: [inv:layout-disjoint] a member's storage is
+                    // disjoint from every input's storage (layout
+                    // invariant) — and so for every `region` read below.
                     let out = unsafe { region_mut(base, p.addr[m], width) };
                     match &node.kind {
                         OpKind::Add => {
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let b = unsafe { region(base as *const f32, p.addr[node.ins[1]], width) };
                             for ((ov, &av), &bv) in out.iter_mut().zip(a).zip(b) {
                                 *ov = av + bv;
                             }
                         }
                         OpKind::Mul => {
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let b = unsafe { region(base as *const f32, p.addr[node.ins[1]], width) };
                             for ((ov, &av), &bv) in out.iter_mut().zip(a).zip(b) {
                                 *ov = av * bv;
                             }
                         }
                         OpKind::AddBias { param } => {
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
                             let bias = &self.params[*param];
                             for ((ov, &av), &bv) in out.iter_mut().zip(a).zip(bias) {
@@ -676,14 +692,17 @@ impl ProgramCell {
                             }
                         }
                         OpKind::Sigmoid => {
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
                             (o.kernels.sigmoid)(out, a);
                         }
                         OpKind::Tanh => {
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
                             (o.kernels.tanh)(out, a);
                         }
                         OpKind::OneMinus => {
+                            // SAFETY: [inv:layout-disjoint] as above.
                             let a = unsafe { region(base as *const f32, p.addr[node.ins[0]], width) };
                             for (ov, &av) in out.iter_mut().zip(a) {
                                 *ov = 1.0 - av;

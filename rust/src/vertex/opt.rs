@@ -49,7 +49,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::{OpKind, OpNode, ParamSpec, Program, ProgramMeta};
 
@@ -105,6 +105,21 @@ pub struct FusedGroup {
     pub nodes: Vec<usize>,
 }
 
+/// How a node's storage was assigned by view folding — retained on the
+/// [`OptProgram`] so [`OptProgram::verify`] can re-walk the alias chains
+/// instead of trusting the resolved addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Alloc {
+    /// owns a fresh region of the forward tape
+    Fresh,
+    /// view into another node's storage at a column offset — a folded
+    /// slice, aliased concat input, or non-leading wide-GEMM segment
+    /// (`At(parent, off)`)
+    At(usize, usize),
+    /// no storage (scatter/push)
+    None,
+}
+
 /// One step of the optimized forward schedule. Steps execute in order;
 /// view nodes (folded slices, aliased concat inputs, non-leading GEMM
 /// segments) emit no step at all.
@@ -146,6 +161,9 @@ pub struct OptProgram {
     pub tape_cols: usize,
     /// adjoint tape floats per row
     pub adj_cols: usize,
+    /// per-node storage assignment (the alias-chain record behind
+    /// `addr`; [`Self::verify`] re-resolves it)
+    pub alloc: Vec<Alloc>,
     /// forward tape row pitch for *level* (multi-row) execution:
     /// `tape_cols` rounded up to 16 floats (one 64-byte cache line) so a
     /// worker shard's sub-block never shares a line with its neighbour's
@@ -164,11 +182,16 @@ pub struct OptProgram {
 }
 
 impl Program {
-    /// Compile this (validated) program: run the pass pipeline and lower
-    /// to an [`OptProgram`]. Errors if the program fails validation.
+    /// Compile this (validated) program: run the pass pipeline, lower to
+    /// an [`OptProgram`], and prove the resulting layout sound. Errors if
+    /// the program fails validation or the layout fails verification.
     pub fn optimize(&self) -> Result<OptProgram> {
         let meta = self.validate()?;
-        build(self, meta)
+        let opt = build(self, meta)?;
+        opt.verify().with_context(|| {
+            format!("program '{}': compiled layout failed verification", self.name)
+        })?;
+        Ok(opt)
     }
 }
 
@@ -315,12 +338,6 @@ fn build(p: &Program, meta: ProgramMeta) -> Result<OptProgram> {
     // aliases into the region of a concat it feeds (higher id) or of an
     // earlier GEMM segment, and a concat's own region is fresh or again
     // aliased into a strictly later concat.
-    #[derive(Clone, Copy)]
-    enum Alloc {
-        Fresh,
-        At(usize, usize),
-        None,
-    }
     let mut alloc = vec![Alloc::Fresh; n2];
     for (i, node) in nodes.iter().enumerate() {
         match node.kind {
@@ -492,6 +509,7 @@ fn build(p: &Program, meta: ProgramMeta) -> Result<OptProgram> {
         params: p.params.clone(),
         addr,
         aoff,
+        alloc,
         tape_cols,
         adj_cols,
         tape_stride: tape_cols.next_multiple_of(16),
@@ -508,6 +526,21 @@ impl OptProgram {
     /// Columns of the pull input (convenience mirror of `meta.x_cols`).
     pub fn x_cols(&self) -> usize {
         self.meta.x_cols
+    }
+
+    /// The layout soundness pass (DESIGN.md §13): alias chains acyclic
+    /// and in-bounds, view segments within their backing values, step
+    /// outputs disjoint from their input views, adjoint slots never
+    /// aliased, 16-float stride padding respected. Runs at every
+    /// [`Program::optimize`] (hence cell registration) and again at cell
+    /// bind — never in the per-step hot path.
+    pub fn verify(
+        &self,
+    ) -> std::result::Result<
+        crate::analysis::layout::LayoutReport,
+        crate::analysis::SoundnessError,
+    > {
+        crate::analysis::layout::verify(self)
     }
 
     /// Human-readable `before→after` op-count summary for `cavs cells`.

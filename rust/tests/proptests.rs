@@ -968,3 +968,175 @@ fn prop_interpreter_matches_hand_written_cells_bitwise() {
         }
     });
 }
+
+// ------------------------------------------------------------------------
+// Soundness verifier (DESIGN.md §13): every plan the scheduler emits must
+// pass the full disjointness sweep, and randomly corrupted plans/layouts
+// must always be rejected.
+
+/// Whatever the scheduler produces for arbitrary graph mixes passes the
+/// full `cavs check` plan sweep, at every thread count.
+#[test]
+fn prop_plan_sweep_accepts_scheduler_output() {
+    use cavs::analysis::plan::check_cell_plan;
+    check("plan-sweep-accepts", 100, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        let levels = frontier_levels(&batch);
+        let threads = [1, 1 + rng.below(7), 1 + rng.below(15)];
+        let state_cols = 1 + rng.below(32);
+        let rep =
+            check_cell_plan(&batch, &tasks, &levels, state_cols, &threads)
+                .expect("scheduler output must be sound");
+        assert_eq!(rep.vertices, batch.n_vertices);
+        assert_eq!(rep.tasks, tasks.len());
+        assert_eq!(rep.levels, levels.len());
+        assert!(rep.intervals > 0);
+    });
+}
+
+/// Randomly corrupting a valid plan (duplicated vertex, merged levels,
+/// dropped level, reordered tasks, shrunken bucket) is always caught by
+/// the plan pass — never silently accepted.
+#[test]
+fn prop_corrupted_plans_are_rejected() {
+    use cavs::analysis::plan::{check_levels, check_tasks};
+    check("plan-corruption-rejected", 120, |rng| {
+        let graphs = random_graphs(rng);
+        let arity = graphs
+            .iter()
+            .flat_map(|g| g.children.iter())
+            .map(Vec::len)
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, arity);
+        let tasks = schedule(&batch, Policy::Batched, BUCKETS);
+        let levels = frontier_levels(&batch);
+        check_levels(&batch, &levels).expect("baseline levels sound");
+        check_tasks(&batch, &tasks).expect("baseline tasks sound");
+
+        match rng.below(4) {
+            0 => {
+                // duplicate a vertex into another (or the same) level
+                let mut bad = levels.clone();
+                let li = rng.below(bad.len());
+                let v = bad[li][rng.below(bad[li].len())];
+                let lj = rng.below(bad.len());
+                bad[lj].push(v);
+                assert!(check_levels(&batch, &bad).is_err());
+            }
+            1 => {
+                // merge two adjacent levels (parent joins its child's
+                // level) — needs a second level to merge
+                if levels.len() >= 2 {
+                    let mut bad = levels.clone();
+                    let l1 = bad.remove(1);
+                    bad[0].extend(l1);
+                    assert!(check_levels(&batch, &bad).is_err());
+                }
+            }
+            2 => {
+                // drop the deepest level entirely
+                let mut bad = levels.clone();
+                bad.pop();
+                assert!(check_levels(&batch, &bad).is_err());
+            }
+            _ => {
+                // task corruption: reversal breaks dependencies when the
+                // plan is deeper than one level; otherwise shrink a
+                // bucket below its task size
+                if levels.len() >= 2 {
+                    let mut bad = tasks.clone();
+                    bad.reverse();
+                    assert!(check_tasks(&batch, &bad).is_err());
+                } else {
+                    let mut bad = tasks.clone();
+                    let ti = rng.below(bad.len());
+                    bad[ti].bucket = bad[ti].m() - 1;
+                    assert!(check_tasks(&batch, &bad).is_err());
+                }
+            }
+        }
+    });
+}
+
+/// Every registered cell's compiled layout verifies at arbitrary widths,
+/// and randomly corrupting the layout record (aliased adjoints, broken
+/// stride, cyclic or out-of-bounds alias chains) is always rejected.
+#[test]
+fn prop_corrupted_layouts_are_rejected() {
+    use cavs::vertex::opt::Alloc;
+    use cavs::vertex::registry::{registered_cells, CellSpec};
+    check("layout-corruption-rejected", 80, |rng| {
+        let cells = registered_cells();
+        let name = &cells[rng.below(cells.len())];
+        let h = [4usize, 8, 12, 16][rng.below(4)];
+        let spec = CellSpec::lookup(name, h).expect("registered cell");
+        let good = spec.opt_program();
+        let rep = good.verify().expect("registered layout must verify");
+        assert!(rep.nodes > 0);
+
+        let mut bad = good.clone();
+        match rng.below(4) {
+            0 => {
+                // alias two adjoint slots: pick two distinct real nodes
+                let real: Vec<usize> = (0..bad.nodes.len())
+                    .filter(|&i| bad.aoff[i] != usize::MAX)
+                    .collect();
+                if real.len() >= 2 {
+                    let a = real[rng.below(real.len())];
+                    let mut b = real[rng.below(real.len())];
+                    if a == b {
+                        b = if a == real[0] { real[1] } else { real[0] };
+                    }
+                    bad.aoff[a] = bad.aoff[b];
+                    assert!(bad.verify().is_err(), "{name} h={h}: aliased adjoints accepted");
+                }
+            }
+            1 => {
+                // break the 16-float level-execution row pitch
+                bad.tape_stride += 1;
+                assert!(bad.verify().is_err(), "{name} h={h}: bad stride accepted");
+            }
+            2 => {
+                // make an alias chain cyclic: a view that views itself
+                let view: Vec<usize> = (0..bad.nodes.len())
+                    .filter(|&i| matches!(bad.alloc[i], Alloc::At(..)))
+                    .collect();
+                if let Some(&i) =
+                    view.get(rng.below(view.len().max(1)))
+                {
+                    if let Alloc::At(_, off) = bad.alloc[i] {
+                        bad.alloc[i] = Alloc::At(i, off);
+                        assert!(bad.verify().is_err(), "{name} h={h}: alias cycle accepted");
+                    }
+                }
+            }
+            _ => {
+                // push a view far out of its parent's backing region
+                let view: Vec<usize> = (0..bad.nodes.len())
+                    .filter(|&i| matches!(bad.alloc[i], Alloc::At(..)))
+                    .collect();
+                if let Some(&i) =
+                    view.get(rng.below(view.len().max(1)))
+                {
+                    if let Alloc::At(p, _) = bad.alloc[i] {
+                        bad.alloc[i] = Alloc::At(p, bad.tape_cols + 1);
+                        assert!(bad.verify().is_err(), "{name} h={h}: oob view accepted");
+                    }
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,311 @@
+//! Repo automation tasks (`cargo run -p xtask -- <task>`). Std only —
+//! the lint must run on the hermetic CI runners with no extra deps.
+//!
+//! `safety-lint` enforces the unsafe-hygiene half of DESIGN.md §13: every
+//! `unsafe` block / `unsafe impl` in `rust/src` must carry a `SAFETY:`
+//! comment naming at least one invariant registered in
+//! `rust/src/analysis/invariants.rs` (as `[inv:<tag>]`). Declarations of
+//! `unsafe fn` are exempt — they *create* an obligation (documented as
+//! their safety contract) rather than discharging one; the operations
+//! inside their bodies sit in their own tagged blocks.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("safety-lint") => safety_lint(),
+        Some(t) => {
+            eprintln!("unknown task '{t}'");
+            eprintln!("tasks:\n  safety-lint   check SAFETY comments on every unsafe site");
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo run -p xtask -- <task>");
+            eprintln!("tasks:\n  safety-lint   check SAFETY comments on every unsafe site");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn safety_lint() -> ExitCode {
+    let root = repo_root();
+    let inv_file = root.join("rust/src/analysis/invariants.rs");
+    let tags = match std::fs::read_to_string(&inv_file) {
+        Ok(src) => registered_tags(&src),
+        Err(e) => {
+            eprintln!("safety-lint: cannot read {}: {e}", inv_file.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if tags.is_empty() {
+        eprintln!("safety-lint: no invariant tags found in {}", inv_file.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut files);
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut sites = 0usize;
+    for f in &files {
+        let src = match std::fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("safety-lint: cannot read {}: {e}", f.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        sites += lint_file(f, &src, &tags, &mut violations);
+    }
+
+    if violations.is_empty() {
+        println!(
+            "safety-lint: {} unsafe sites across {} files, all tagged with registered invariants ({} tags)",
+            sites,
+            files.len(),
+            tags.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!(
+            "safety-lint: {} violation(s). Every unsafe block/impl needs a `// SAFETY:` comment \
+             naming a registered invariant `[inv:<tag>]` (see rust/src/analysis/invariants.rs \
+             and DESIGN.md §13).",
+            violations.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// The repository root: walk up from CWD until Cargo.toml + rust/src exist.
+fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().expect("cwd");
+    loop {
+        if dir.join("Cargo.toml").is_file() && dir.join("rust/src").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            panic!("repo root (Cargo.toml + rust/src) not found above cwd");
+        }
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Extract every `tag: "<kebab>"` literal from invariants.rs. The quote
+/// must follow `tag:` directly (whitespace only in between) so prose
+/// mentions of `tag:` and the `lookup(tag: &str)` signature don't pair
+/// up with an unrelated later string literal.
+fn registered_tags(src: &str) -> Vec<String> {
+    let mut tags = Vec::new();
+    let mut rest = src;
+    while let Some(i) = rest.find("tag:") {
+        rest = &rest[i + 4..];
+        let after_ws = rest.trim_start();
+        let Some(lit) = after_ws.strip_prefix('"') else { continue };
+        let Some(q1) = lit.find('"') else { break };
+        tags.push(lit[..q1].to_string());
+        rest = &lit[q1 + 1..];
+    }
+    tags
+}
+
+/// A code line's content with line comments stripped (no string-literal
+/// awareness needed: no shipped source puts `unsafe` in a string).
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn is_comment_line(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//")
+}
+
+/// Whether the stripped code contains `unsafe` as its own token.
+fn has_unsafe_token(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(i) = code[from..].find("unsafe") {
+        let at = from + i;
+        let pre_ok = at == 0 || !is_ident(b[at - 1]);
+        let end = at + "unsafe".len();
+        let post_ok = end == b.len() || !is_ident(b[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whether this token occurrence is an `unsafe fn` declaration (possibly
+/// `unsafe extern "C" fn`): creating, not discharging, an obligation.
+fn is_unsafe_fn_decl(code: &str) -> bool {
+    if let Some(i) = code.find("unsafe") {
+        let after = code[i + "unsafe".len()..].trim_start();
+        return after.starts_with("fn ")
+            || after.starts_with("fn(")
+            || after.starts_with("extern");
+    }
+    false
+}
+
+/// Lint one file; returns the number of unsafe sites checked and pushes
+/// human-readable violations.
+fn lint_file(
+    path: &Path,
+    src: &str,
+    tags: &[String],
+    violations: &mut Vec<String>,
+) -> usize {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut sites = 0usize;
+    for (idx, line) in lines.iter().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        let code = code_part(line);
+        if !has_unsafe_token(code) || is_unsafe_fn_decl(code) {
+            continue;
+        }
+        sites += 1;
+        // gather the contiguous comment block directly above (plus any
+        // trailing comment on the line itself)
+        let mut block = String::new();
+        if let Some(i) = line.find("//") {
+            block.push_str(&line[i..]);
+            block.push('\n');
+        }
+        let mut j = idx;
+        while j > 0 && is_comment_line(lines[j - 1]) {
+            j -= 1;
+        }
+        for l in &lines[j..idx] {
+            block.push_str(l);
+            block.push('\n');
+        }
+        let loc = format!("{}:{}", path.display(), idx + 1);
+        if !block.contains("SAFETY") {
+            violations.push(format!("{loc}: unsafe site without a SAFETY comment"));
+            continue;
+        }
+        let named: Vec<&str> = inv_refs(&block);
+        if named.is_empty() {
+            violations.push(format!(
+                "{loc}: SAFETY comment names no invariant ([inv:<tag>] missing)"
+            ));
+            continue;
+        }
+        for t in named {
+            if !tags.iter().any(|k| k == t) {
+                violations.push(format!(
+                    "{loc}: SAFETY comment references unregistered invariant '[inv:{t}]'"
+                ));
+            }
+        }
+    }
+    sites
+}
+
+/// Every `[inv:<tag>]` reference inside a comment block.
+fn inv_refs(block: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = block;
+    while let Some(i) = rest.find("[inv:") {
+        let after = &rest[i + 5..];
+        let Some(j) = after.find(']') else { break };
+        out.push(&after[..j]);
+        rest = &after[j + 1..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_extraction_reads_quoted_literals() {
+        let src = r#"
+            Invariant { tag: "shard-rows", what: "w", proved_by: "p" },
+            Invariant { tag: "owner-partition", what: "w", proved_by: "p" },
+        "#;
+        assert_eq!(registered_tags(src), vec!["shard-rows", "owner-partition"]);
+        // prose/signature mentions of `tag:` must not swallow a later
+        // unrelated string literal
+        let noisy = r#"
+            //! the `tag:` literals below
+            pub fn lookup(tag: &str) -> bool { tag == "x" }
+            Invariant { tag: "pool-quiesce", what: "w", proved_by: "p" },
+        "#;
+        assert_eq!(registered_tags(noisy), vec!["pool-quiesce"]);
+    }
+
+    #[test]
+    fn unsafe_token_matching_ignores_identifiers_and_comments() {
+        assert!(has_unsafe_token("let x = unsafe { y };"));
+        assert!(has_unsafe_token("unsafe impl Send for T {}"));
+        assert!(!has_unsafe_token("#![deny(unsafe_op_in_unsafe_fn)]"));
+        assert!(!has_unsafe_token("let unsafer = 1;"));
+        assert!(!has_unsafe_token(code_part("// unsafe in a comment")));
+    }
+
+    #[test]
+    fn unsafe_fn_declarations_are_exempt() {
+        assert!(is_unsafe_fn_decl("pub(crate) unsafe fn get(&self) {}"));
+        assert!(is_unsafe_fn_decl("unsafe fn gemm<const F: bool>("));
+        assert!(!is_unsafe_fn_decl("let x = unsafe { f() };"));
+        assert!(!is_unsafe_fn_decl("unsafe impl Send for T {}"));
+    }
+
+    #[test]
+    fn lint_accepts_tagged_and_rejects_untagged() {
+        let tags = vec!["shard-rows".to_string()];
+        let good = "fn f() {\n    // SAFETY: [inv:shard-rows] disjoint.\n    unsafe { g() }\n}\n";
+        let mut v = Vec::new();
+        assert_eq!(lint_file(Path::new("good.rs"), good, &tags, &mut v), 1);
+        assert!(v.is_empty(), "{v:?}");
+
+        let missing = "fn f() {\n    unsafe { g() }\n}\n";
+        let mut v = Vec::new();
+        lint_file(Path::new("m.rs"), missing, &tags, &mut v);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("without a SAFETY comment"));
+
+        let untagged = "fn f() {\n    // SAFETY: fine, trust me.\n    unsafe { g() }\n}\n";
+        let mut v = Vec::new();
+        lint_file(Path::new("u.rs"), untagged, &tags, &mut v);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("names no invariant"));
+
+        let unknown =
+            "fn f() {\n    // SAFETY: [inv:not-a-tag] nope.\n    unsafe { g() }\n}\n";
+        let mut v = Vec::new();
+        lint_file(Path::new("k.rs"), unknown, &tags, &mut v);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("unregistered invariant"));
+    }
+}
