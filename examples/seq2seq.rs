@@ -19,7 +19,7 @@ use cavs::exec::{Engine, EngineOpts};
 use cavs::graph::{Dataset, InputGraph};
 use cavs::models::{Cell, HeadKind, Model};
 use cavs::runtime::Runtime;
-use cavs::train::{train_epochs, Optimizer};
+use cavs::train::{train_epochs, ModelOptimizer};
 use cavs::util::rng::Rng;
 
 /// Build a "translation" sample: encode `src`, then decode `tgt` (the
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         &mut model,
         &data,
         32,
-        Optimizer::adam(0.003),
+        ModelOptimizer::adam(0.003),
         12,
         5.0,
         |log| {

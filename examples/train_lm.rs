@@ -10,7 +10,7 @@ use cavs::exec::Engine;
 use cavs::graph::Dataset;
 use cavs::models::{Cell, HeadKind, Model};
 use cavs::runtime::Runtime;
-use cavs::train::{train_epochs, Optimizer};
+use cavs::train::{train_epochs, ModelOptimizer};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         &mut model,
         &data,
         bs,
-        Optimizer::adam(0.002),
+        ModelOptimizer::adam(0.002),
         epochs,
         5.0,
         |log| {

@@ -13,7 +13,7 @@ use cavs::exec::Engine;
 use cavs::graph::Dataset;
 use cavs::models::{Cell, HeadKind, Model};
 use cavs::runtime::Runtime;
-use cavs::train::{train_epochs, Optimizer};
+use cavs::train::{train_epochs, ModelOptimizer};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         &mut model,
         &data,
         bs,
-        Optimizer::adam(0.003),
+        ModelOptimizer::adam(0.003),
         epochs,
         5.0,
         |log| {

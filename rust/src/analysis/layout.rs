@@ -237,6 +237,20 @@ pub fn verify(o: &OptProgram) -> Result<LayoutReport, SoundnessError> {
                     off += o.nodes[src].cols;
                 }
             }
+            crate::vertex::opt::Step::RowOp { node } => {
+                if node >= n {
+                    return Err(SoundnessError::LayoutArity {
+                        what: "rowop step",
+                        got: node,
+                        nodes: n,
+                    });
+                }
+                // a row-local op (softmax/broadcast) reads every input
+                // column while writing its output region: full disjointness
+                for &inp in &o.nodes[node].ins {
+                    check_pair(node, o.nodes[node].cols, inp)?;
+                }
+            }
             crate::vertex::opt::Step::Pull { .. }
             | crate::vertex::opt::Step::Gather { .. } => {}
         }

@@ -78,6 +78,12 @@ pub enum SoundnessError {
     CrossGraphEdge { vertex: u32, child: u32 },
     /// A child is not strictly shallower than its parent.
     DepthInversion { vertex: u32, child: u32 },
+    /// A stored activation depth disagrees with the longest-path
+    /// recomputation over the child edges (a dropped or phantom edge).
+    DepthMismatch { vertex: u32, stored: u32, computed: u32 },
+    /// Frontier propagation over the child edges starved before covering
+    /// every vertex — the "DAG" smuggles a cycle.
+    FrontierCycle { unresolved: usize },
 
     // ---- layout soundness --------------------------------------------
     /// An alias chain revisits a node (must resolve in <= n hops).
@@ -203,6 +209,18 @@ impl fmt::Display for SoundnessError {
                 f,
                 "vertex {vertex} is not strictly deeper than its child \
                  {child} — activation depths must increase along edges"
+            ),
+            DepthMismatch { vertex, stored, computed } => write!(
+                f,
+                "vertex {vertex} stores activation depth {stored}, but the \
+                 longest path over its child edges computes {computed} — an \
+                 edge was dropped or invented after the merge"
+            ),
+            FrontierCycle { unresolved } => write!(
+                f,
+                "frontier propagation starved with {unresolved} vertices \
+                 unresolved — the child edges contain a cycle, so no \
+                 frontier order exists"
             ),
             AliasCycle { node } => write!(
                 f,

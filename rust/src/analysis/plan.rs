@@ -236,6 +236,68 @@ pub fn check_batch(batch: &GraphBatch) -> Result<(), SoundnessError> {
     Ok(())
 }
 
+/// `[inv:dag-frontier]`: multi-parent fan-in soundness — the check that
+/// extends the frontier proof from trees to general DAGs. Recomputes
+/// every vertex's longest-path activation depth by Kahn propagation over
+/// the *stored* child edges and demands the stored `depth` array match
+/// exactly. A dropped or phantom edge shifts some longest path
+/// ([`SoundnessError::DepthMismatch`]); a smuggled cycle starves the
+/// propagation before it covers every vertex
+/// ([`SoundnessError::FrontierCycle`]). Tree batches pass trivially.
+pub fn check_dag_frontier(batch: &GraphBatch) -> Result<(), SoundnessError> {
+    let n = batch.n_vertices;
+    // unresolved-children count per vertex and a parents-of adjacency;
+    // duplicate child slots count twice on both sides, exactly as the
+    // scheduler's per-edge indegree does
+    let mut pending = vec![0u32; n];
+    let mut parents: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for v in 0..n as u32 {
+        for slot in 0..batch.arity {
+            let Some(c) = batch.child(v, slot) else { continue };
+            if c as usize >= n {
+                return Err(SoundnessError::ChildOutOfBounds {
+                    vertex: v,
+                    child: c,
+                    n_vertices: n,
+                });
+            }
+            pending[v as usize] += 1;
+            parents[c as usize].push(v);
+        }
+    }
+    let mut computed = vec![0u32; n];
+    let mut stack: Vec<u32> =
+        (0..n as u32).filter(|&v| pending[v as usize] == 0).collect();
+    let mut done = 0usize;
+    while let Some(v) = stack.pop() {
+        done += 1;
+        let mut d = 0u32;
+        for slot in 0..batch.arity {
+            if let Some(c) = batch.child(v, slot) {
+                d = d.max(computed[c as usize] + 1);
+            }
+        }
+        computed[v as usize] = d;
+        if d != batch.depth[v as usize] {
+            return Err(SoundnessError::DepthMismatch {
+                vertex: v,
+                stored: batch.depth[v as usize],
+                computed: d,
+            });
+        }
+        for &p in &parents[v as usize] {
+            pending[p as usize] -= 1;
+            if pending[p as usize] == 0 {
+                stack.push(p);
+            }
+        }
+    }
+    if done != n {
+        return Err(SoundnessError::FrontierCycle { unresolved: n - done });
+    }
+    Ok(())
+}
+
 /// `[inv:level-frontier]`: each level's write rows are claimed exactly
 /// once across the whole sweep, and no level reads (through a child
 /// slot) a row it also writes — the read views of level L were published
@@ -372,6 +434,7 @@ pub fn check_cell_plan(
         ..CheckReport::default()
     };
     check_batch(batch)?;
+    check_dag_frontier(batch)?;
     report.levels = check_levels(batch, levels)?;
     check_tasks(batch, tasks)?;
     for &threads in thread_counts {
@@ -529,6 +592,66 @@ mod tests {
             ),
             "{err} (dropped {dropped:?})"
         );
+    }
+
+    fn dag_batch(seed: u64, k: usize) -> GraphBatch {
+        let mut rng = Rng::new(seed);
+        let graphs: Vec<InputGraph> = (0..k)
+            .map(|_| synth::gnn_dag(&mut rng, 20, 3, 3, 4, 5))
+            .collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        GraphBatch::new(&refs, 4)
+    }
+
+    #[test]
+    fn dag_batches_pass_the_full_sweep() {
+        let batch = dag_batch(21, 5);
+        check_dag_frontier(&batch).unwrap();
+        let buckets = scheduler::host_buckets();
+        let tasks = scheduler::schedule(&batch, Policy::Batched, &buckets);
+        let levels = scheduler::frontier_levels(&batch);
+        let r =
+            check_cell_plan(&batch, &tasks, &levels, 16, &[1, 2, 4]).unwrap();
+        assert_eq!(r.vertices, batch.n_vertices);
+        assert!(r.levels > 1);
+    }
+
+    #[test]
+    fn dropped_dag_edge_is_caught_by_depth_recomputation() {
+        let mut batch = dag_batch(22, 3);
+        // sever every child edge of a graph's readout root: its stored
+        // depth now exceeds any remaining path to it
+        let root = batch.roots[0];
+        for slot in 0..batch.arity {
+            batch.corrupt_child_slot(root, slot, crate::graph::batch::NO_VERTEX);
+        }
+        assert!(matches!(
+            check_dag_frontier(&batch),
+            Err(SoundnessError::DepthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn smuggled_cycle_starves_the_frontier() {
+        let mut batch = dag_batch(23, 3);
+        let root = batch.roots[0];
+        // point an input vertex of the root's own graph back at the
+        // root: input -> ... -> root -> input is now a cycle
+        let v0 = (0..batch.n_vertices as u32)
+            .find(|&v| {
+                batch.depth[v as usize] == 0
+                    && batch.owner[v as usize] == batch.owner[root as usize]
+            })
+            .unwrap();
+        batch.corrupt_child_slot(v0, 0, root);
+        let err = check_dag_frontier(&batch).unwrap_err();
+        assert!(
+            matches!(err, SoundnessError::FrontierCycle { .. }),
+            "{err}"
+        );
+        // the cheap structural pass also refuses it (depth inversion on
+        // the smuggled edge)
+        assert!(check_batch(&batch).is_err());
     }
 
     #[test]

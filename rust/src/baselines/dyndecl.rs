@@ -405,6 +405,15 @@ impl<'rt> DynDecl<'rt> {
                 self.launches += 1;
                 outs[0].to_vec::<f32>()?
             }
+            OpKind::SoftmaxCols | OpKind::Broadcast => {
+                // row-local attention ops have no AOT kernel artifacts —
+                // the dynamic-declaration baseline only covers the
+                // artifact-backed recurrent cells
+                bail!(
+                    "dyndecl baseline does not support row-local op {:?}",
+                    node.kind
+                )
+            }
             _ => unreachable!("memory ops handled above"),
         };
 
@@ -754,6 +763,8 @@ fn signature(kind: &OpKind, cols: usize) -> u64 {
         }
         OpKind::ConcatCols => (12, 0),
         OpKind::OneMinus => (13, 0),
+        OpKind::SoftmaxCols => (14, 0),
+        OpKind::Broadcast => (15, 0),
     };
     // non-overlapping fields: tag[56..], aux[32..56], cols[0..32]
     (tag << 56) | ((aux & 0xFF_FFFF) << 32) | cols as u64

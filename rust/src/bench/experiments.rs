@@ -916,7 +916,8 @@ pub fn kernel(_scale: Scale, tiny: bool) -> Result<Table> {
 /// Writes `results/BENCH_train.json`.
 pub fn train_host(cell: &str, scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
     use crate::graph::Dataset as Ds;
-    use crate::train::host::train_host_epochs;
+    use crate::train::host::HostTrainer;
+    use crate::train::Sgd;
 
     let (h, n, bs, epochs, vocab) = if tiny {
         (8usize, 16usize, 4usize, 3usize, 20usize)
@@ -926,6 +927,8 @@ pub fn train_host(cell: &str, scale: Scale, tiny: bool, opt: bool) -> Result<Tab
     let spec = CellSpec::lookup(cell, h)?;
     let data = match (cell, spec.arity()) {
         ("treefc", _) => Ds::treefc(11, n, vocab, 32),
+        ("gnn", _) => Ds::gnn_synth(11, n, vocab, 5, 4),
+        ("attnseq2seq", _) => Ds::seq2seq_copy(11, n, vocab, 10, 3),
         (_, a) if a >= 2 => Ds::sst_like(11, n, vocab, 5),
         _ => Ds::ptb_like_var(11, n, vocab, 16),
     };
@@ -941,24 +944,20 @@ pub fn train_host(cell: &str, scale: Scale, tiny: bool, opt: bool) -> Result<Tab
     table.tag("threads", scale.threads.max(1));
     table.tag("opt", opt);
     table.tag("tiny", tiny);
-    let logs = train_host_epochs(
-        &spec,
-        &data,
-        bs,
-        0.02,
-        epochs,
-        scale.threads.max(1),
-        7,
-        opt,
-        |log| {
+    let logs = HostTrainer::builder(&spec, data.vocab)
+        .threads(scale.threads.max(1))
+        .seed(7)
+        .compiled(opt)
+        .optimizer(Sgd::new(0.02))
+        .build()?
+        .train_epochs(&data, bs, epochs, |log| {
             crate::info!(
                 "train {cell}: epoch {} loss {:.4} ({:.2}s)",
                 log.epoch,
                 log.loss,
                 log.seconds
             );
-        },
-    )?;
+        });
     for l in &logs {
         table.row(vec![
             l.epoch.to_string(),
@@ -973,6 +972,123 @@ pub fn train_host(cell: &str, scale: Scale, tiny: bool, opt: bool) -> Result<Tab
         "host training of '{cell}' did not reduce loss ({first} -> {last})"
     );
     write_results("train", &table)?;
+    Ok(table)
+}
+
+/// End-to-end accuracy-vs-epoch for the DAG workloads (`cavs bench --exp
+/// e2e`): the GNN message-passing classifier (softmax cross-entropy at
+/// each graph's readout root over layered multi-parent DAGs) and the
+/// attention seq2seq copy task (per-vertex cross-entropy over decoder
+/// vertices attending across encoder anchors), both trained host-only
+/// through the compiled level path with Adam, plus an SGD reference for
+/// the GNN. Loss must decrease for every workload; accuracy must beat
+/// chance by the final epoch. Artifact-free — the CI smoke (`--tiny
+/// true`) gates against `results/baselines/BENCH_e2e.tiny.json`. Writes
+/// `results/BENCH_e2e.json`.
+pub fn e2e(scale: Scale, tiny: bool, opt: bool) -> Result<Table> {
+    use crate::graph::Dataset as Ds;
+    use crate::train::host::HostTrainer;
+    use crate::train::{Adam, LossHead, Optimizer, Sgd};
+
+    let threads = scale.threads.max(1);
+    let (h, n, bs, epochs) = if tiny {
+        (8usize, 12usize, 4usize, 4usize)
+    } else {
+        (16, n_scaled(48, scale).max(8), 8, 8)
+    };
+    // seq2seq vocab doubles as its class count, so it must fit the
+    // state width (the loss head reads logits from state columns)
+    let (gnn_classes, seq_vocab) = (5usize, h.min(8));
+    let mut table = Table::new(
+        &format!(
+            "e2e (host interpreter): DAG workloads, h={h}, {n} samples, \
+             bs={bs}, threads={threads}, opt={opt} — loss decreases, \
+             accuracy beats chance"
+        ),
+        &["workload", "epoch", "loss", "accuracy", "seconds", "vertices"],
+    );
+    table.tag("threads", threads);
+    table.tag("opt", opt);
+    table.tag("tiny", tiny);
+
+    struct Workload {
+        name: &'static str,
+        cell: &'static str,
+        data: Ds,
+        loss: LossHead,
+        optim: Box<dyn Optimizer>,
+        chance: f32,
+    }
+    let runs = [
+        Workload {
+            name: "gnn+adam",
+            cell: "gnn",
+            data: Ds::gnn_synth(11, n, 24, gnn_classes, 4),
+            loss: LossHead::ClassifierAtRoot { n_classes: gnn_classes },
+            optim: Box::new(Adam::new(0.02)),
+            chance: 1.0 / gnn_classes as f32,
+        },
+        Workload {
+            name: "gnn+sgd",
+            cell: "gnn",
+            data: Ds::gnn_synth(11, n, 24, gnn_classes, 4),
+            loss: LossHead::ClassifierAtRoot { n_classes: gnn_classes },
+            optim: Box::new(Sgd::new(0.1)),
+            chance: 1.0 / gnn_classes as f32,
+        },
+        Workload {
+            name: "seq2seq+adam",
+            cell: "attnseq2seq",
+            data: Ds::seq2seq_copy(11, n, seq_vocab, 8, 3),
+            loss: LossHead::PerVertex { n_classes: seq_vocab },
+            optim: Box::new(Adam::new(0.02)),
+            chance: 1.0 / seq_vocab as f32,
+        },
+    ];
+    for w in runs {
+        let spec = CellSpec::lookup(w.cell, h)?;
+        let logs = HostTrainer::builder(&spec, w.data.vocab)
+            .threads(threads)
+            .seed(7)
+            .compiled(opt)
+            .loss(w.loss)
+            .optimizer(w.optim)
+            .build()?
+            .train_epochs(&w.data, bs, epochs, |log| {
+                crate::info!(
+                    "e2e {}: epoch {} loss {:.4} acc {:.3} ({:.2}s)",
+                    w.name,
+                    log.epoch,
+                    log.loss,
+                    log.accuracy,
+                    log.seconds
+                );
+            });
+        for l in &logs {
+            table.row(vec![
+                w.name.to_string(),
+                l.epoch.to_string(),
+                format!("{:.4}", l.loss),
+                format!("{:.3}", l.accuracy),
+                format!("{:.3}", l.seconds),
+                l.n_vertices.to_string(),
+            ]);
+        }
+        let (first, last) = (logs[0].loss, logs[logs.len() - 1].loss);
+        anyhow::ensure!(
+            last.is_finite() && last < first,
+            "e2e workload '{}' did not reduce cross-entropy ({first} -> {last})",
+            w.name
+        );
+        let acc = logs.iter().map(|l| l.accuracy).fold(0.0f32, f32::max);
+        anyhow::ensure!(
+            acc > w.chance,
+            "e2e workload '{}' best accuracy {acc} is not above chance {}",
+            w.name,
+            w.chance
+        );
+    }
+    write_results("e2e", &table)?;
     Ok(table)
 }
 

@@ -17,7 +17,7 @@ use crate::graph::Dataset;
 use crate::models::Model;
 use crate::runtime::Runtime;
 use crate::scheduler::Policy;
-use crate::train::{ModelOpt, Optimizer};
+use crate::train::{ModelOpt, ModelOptimizer};
 use crate::util::stats::PhaseTimer;
 
 /// The systems compared in Fig. 8/9 and Tables 1–2.
@@ -90,7 +90,7 @@ pub fn run_epoch(
     optimize: bool,
 ) -> Result<EpochMetrics> {
     let mut opt_state = ModelOpt::default();
-    let opt = Optimizer::sgd(0.01);
+    let opt = ModelOptimizer::sgd(0.01);
     let t0 = std::time::Instant::now();
     let mut m = EpochMetrics::default();
 

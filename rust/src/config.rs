@@ -9,6 +9,7 @@ use crate::exec::MathMode;
 use crate::models::HeadKind;
 use crate::scheduler::Policy;
 use crate::serve::{PolicyKind, ServeConfig};
+use crate::train::{LossKind, OptimKind, TrainConfig};
 use crate::util::json::Json;
 use crate::vertex::registry;
 
@@ -22,11 +23,9 @@ pub struct Config {
     pub head: HeadKind,
     pub n_classes: usize,
     pub batch_size: usize,
-    pub epochs: usize,
     pub seq_len: usize,
     pub n_samples: usize,
     pub tree_leaves: usize,
-    pub lr: f32,
     pub max_grad_norm: f32,
     pub seed: u64,
     pub policy: Policy,
@@ -52,6 +51,11 @@ pub struct Config {
     /// `cavs serve`: the typed serving section (`serve.*` keys — policy,
     /// batch caps, deadline, queue capacity, SLO budgets).
     pub serve: ServeConfig,
+    /// `cavs train`: the typed training section (`train.*` keys —
+    /// optimizer, learning rate, Adam betas, epochs, loss head). The
+    /// flat `lr`/`epochs` spellings still apply as deprecated aliases
+    /// for one release.
+    pub train: TrainConfig,
     /// per-thread span-ring capacity for `--trace` (`--set
     /// obs.ring_cap=N`, DESIGN.md §12); clamped to >= 16 downstream
     pub obs_ring_cap: usize,
@@ -67,11 +71,9 @@ impl Default for Config {
             head: HeadKind::ClassifierAtRoot,
             n_classes: 5,
             batch_size: 64,
-            epochs: 3,
             seq_len: 64,
             n_samples: 512,
             tree_leaves: 256,
-            lr: 0.05,
             max_grad_norm: 5.0,
             seed: 42,
             policy: Policy::Batched,
@@ -83,6 +85,7 @@ impl Default for Config {
             opt: true,
             math: MathMode::Exact,
             serve: ServeConfig::default(),
+            train: TrainConfig::default(),
             obs_ring_cap: crate::obs::trace::DEFAULT_RING_CAP,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -97,12 +100,13 @@ impl Config {
         let mut c = Config::default();
         if let Some(obj) = j.as_obj() {
             for (k, v) in obj {
-                // the typed serve section: {"serve": {"policy": "...", ...}}
-                // expands to serve.* keys
-                if k == "serve" {
+                // the typed sections: {"serve": {"policy": "...", ...}}
+                // and {"train": {"optimizer": "...", ...}} expand to
+                // dotted keys
+                if k == "serve" || k == "train" {
                     if let Some(section) = v.as_obj() {
                         for (sk, sv) in section {
-                            c.apply(&format!("serve.{sk}"), &json_to_string(sv))?;
+                            c.apply(&format!("{k}.{sk}"), &json_to_string(sv))?;
                         }
                         continue;
                     }
@@ -117,7 +121,8 @@ impl Config {
     /// Cross-field validation (run after a config file loads and after
     /// CLI overrides apply; errors name the offending key).
     pub fn validate(&self) -> Result<()> {
-        self.serve.validate()
+        self.serve.validate()?;
+        self.train.validate()
     }
 
     /// Apply one `key=value` override.
@@ -144,12 +149,55 @@ impl Config {
             }
             "n_classes" => self.n_classes = val.parse()?,
             "batch_size" | "bs" => self.batch_size = val.parse()?,
-            "epochs" => self.epochs = val.parse()?,
             "seq_len" => self.seq_len = val.parse()?,
             "n_samples" => self.n_samples = val.parse()?,
             "tree_leaves" => self.tree_leaves = val.parse()?,
-            "lr" => self.lr = val.parse()?,
             "max_grad_norm" => self.max_grad_norm = val.parse()?,
+            // the flat spellings are deprecated aliases of the typed
+            // train.* section, kept for one release (serve.* precedent)
+            "epochs" | "lr" => {
+                crate::warnlog!(
+                    "config key '{key}' is deprecated; use 'train.{key}'"
+                );
+                return self.apply(&format!("train.{key}"), val);
+            }
+            "train.optimizer" => {
+                self.train.optimizer =
+                    OptimKind::parse(val).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "train.optimizer must be sgd|adam, got '{val}'"
+                        )
+                    })?;
+            }
+            "train.lr" => {
+                let lr: f32 = val.parse()?;
+                if !lr.is_finite() || lr <= 0.0 {
+                    bail!("train.lr must be a finite positive rate, got '{val}'");
+                }
+                self.train.lr = lr;
+            }
+            "train.beta1" => {
+                self.train.beta1 = Some(parse_beta("train.beta1", val)?);
+            }
+            "train.beta2" => {
+                self.train.beta2 = Some(parse_beta("train.beta2", val)?);
+            }
+            "train.epochs" => {
+                let e: usize = val.parse()?;
+                if e == 0 {
+                    bail!("train.epochs must be >= 1");
+                }
+                self.train.epochs = e;
+            }
+            "train.loss" => {
+                self.train.loss =
+                    Some(LossKind::parse(val).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "train.loss must be sum|classifier|pervertex, \
+                             got '{val}'"
+                        )
+                    })?);
+            }
             "seed" => self.seed = val.parse()?,
             "policy" => {
                 self.policy = match val {
@@ -245,6 +293,15 @@ impl Config {
             },
         }
     }
+}
+
+/// Parse an Adam decay rate: moment decays live in `[0, 1)`.
+fn parse_beta(key: &str, val: &str) -> Result<f32> {
+    let b: f32 = val.parse()?;
+    if !b.is_finite() || !(0.0..1.0).contains(&b) {
+        bail!("{key} must be in [0, 1), got '{val}'");
+    }
+    Ok(b)
 }
 
 /// Parse a millisecond-valued `serve.*` key: finite + bounded so
@@ -446,8 +503,79 @@ mod tests {
         let c = Config::load(&p).unwrap();
         assert_eq!(c.cell, "treefc");
         assert_eq!(c.h, 64);
-        assert!((c.lr - 0.01).abs() < 1e-9);
+        // the flat "lr" spelling is a deprecated alias of train.lr
+        assert!((c.train.lr - 0.01).abs() < 1e-9);
         assert!(!c.lazy_batching);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn train_keys_flow_into_train_config() {
+        use crate::train::{LossKind, OptimKind, Optimizer as _};
+        let mut c = Config::default();
+        assert_eq!(c.train.optimizer, OptimKind::Sgd);
+        assert_eq!(c.train.epochs, 3);
+        assert!(c.train.loss.is_none());
+        c.apply("train.optimizer", "adam").unwrap();
+        c.apply("train.lr", "0.01").unwrap();
+        c.apply("train.beta1", "0.8").unwrap();
+        c.apply("train.beta2", "0.95").unwrap();
+        c.apply("train.epochs", "7").unwrap();
+        c.apply("train.loss", "classifier").unwrap();
+        assert_eq!(c.train.optimizer, OptimKind::Adam);
+        assert!((c.train.lr - 0.01).abs() < 1e-9);
+        assert_eq!(c.train.beta1, Some(0.8));
+        assert_eq!(c.train.beta2, Some(0.95));
+        assert_eq!(c.train.epochs, 7);
+        assert_eq!(c.train.loss, Some(LossKind::Classifier));
+        c.validate().unwrap();
+        assert_eq!(c.train.make_optimizer().name(), "adam");
+        // deprecated flat aliases still write into the section
+        c.apply("lr", "0.2").unwrap();
+        c.apply("epochs", "2").unwrap();
+        assert!((c.train.lr - 0.2).abs() < 1e-9);
+        assert_eq!(c.train.epochs, 2);
+        // errors name the offending key and enumerate the values
+        let e = c.apply("train.optimizer", "lion").unwrap_err().to_string();
+        assert!(e.contains("sgd|adam"), "{e}");
+        let e = c.apply("train.loss", "huber").unwrap_err().to_string();
+        assert!(e.contains("sum|classifier|pervertex"), "{e}");
+        let e = c.apply("train.beta1", "1.5").unwrap_err().to_string();
+        assert!(e.contains("train.beta1"), "{e}");
+        assert!(c.apply("train.lr", "-0.1").is_err());
+        assert!(c.apply("train.lr", "inf").is_err());
+        assert!(c.apply("train.epochs", "0").is_err());
+    }
+
+    #[test]
+    fn train_cross_field_validation_rejects_betas_under_sgd() {
+        use crate::train::Optimizer as _;
+        let mut c = Config::default();
+        c.apply("train.beta1", "0.8").unwrap();
+        let e = c.validate().unwrap_err().to_string();
+        assert!(e.contains("train.beta1"), "{e}");
+        c.apply("train.optimizer", "adam").unwrap();
+        c.validate().unwrap();
+        // the same check fires from a config file load
+        let p = std::env::temp_dir()
+            .join(format!("cavs-train-cfg-{}.json", std::process::id()));
+        std::fs::write(
+            &p,
+            r#"{"train": {"optimizer": "sgd", "beta2": 0.99}}"#,
+        )
+        .unwrap();
+        let e = Config::load(&p).unwrap_err().to_string();
+        assert!(e.contains("train.beta2"), "{e}");
+        // a fully-typed section loads and builds the boxed rule
+        std::fs::write(
+            &p,
+            r#"{"train": {"optimizer": "adam", "lr": 0.005, "epochs": 9,
+                "loss": "pervertex"}}"#,
+        )
+        .unwrap();
+        let c = Config::load(&p).unwrap();
+        assert_eq!(c.train.epochs, 9);
+        assert_eq!(c.train.make_optimizer().name(), "adam");
         std::fs::remove_file(&p).ok();
     }
 }

@@ -802,6 +802,33 @@ impl HostFrontier {
         ex: Sharder<'_>,
         backward: bool,
     ) {
+        self.run_with_seed(batch, tasks, cell, xtable, ex, backward, |b, _s, g| {
+            for &r in &b.roots {
+                g.row_mut(r as usize).fill(1.0);
+            }
+        })
+    }
+
+    /// [`HostFrontier::run`] with a pluggable backward seed: after the
+    /// forward sweep (and only when `backward`), `seed` reads the
+    /// scattered states and writes `d(loss)/d(state)` into the zeroed
+    /// gradient buffer. Loss heads
+    /// ([`LossHead`](crate::train::LossHead)) route here; plain [`run`]
+    /// seeds ones over every root — the legacy sum-of-root-states
+    /// objective. Seeding runs once on the coordinator before the
+    /// sharded reverse sweep, so it cannot perturb thread determinism.
+    ///
+    /// [`run`]: HostFrontier::run
+    pub fn run_with_seed<C: HostCell>(
+        &mut self,
+        batch: &GraphBatch,
+        tasks: &[Task],
+        cell: &C,
+        xtable: &[f32],
+        ex: Sharder<'_>,
+        backward: bool,
+        seed: impl FnOnce(&GraphBatch, &StateBuffer, &mut StateBuffer),
+    ) {
         let xc = cell.x_cols();
         let sc = cell.state_cols();
         let ar = cell.arity();
@@ -1001,9 +1028,7 @@ impl HostFrontier {
             .args(tasks.len() as u32, batch.n_vertices as u32);
         self.has_grads = true;
         self.grads.reset_for(batch.n_vertices, sc);
-        for &r in &batch.roots {
-            self.grads.row_mut(r as usize).fill(1.0);
-        }
+        seed(batch, &self.states, &mut self.grads);
         arena_exact(&mut self.x_grads, xtable.len());
 
         for (ti, task) in tasks.iter().enumerate().rev() {

@@ -100,6 +100,45 @@ pub fn run_forward(
                 eng.timers.add(Phase::Compute, t0.elapsed());
                 Some(outs[0].to_vec::<f32>()?)
             }
+            OpKind::SoftmaxCols => {
+                // row-local, no parameters: computed on host (same
+                // arithmetic order as the interpreter's reference arm)
+                let a = bufs[node.ins[0]].as_ref().unwrap();
+                let w = node.cols;
+                let mut dst = vec![0.0f32; b * w];
+                eng.timers.time(Phase::Compute, || {
+                    for r in 0..b {
+                        let row = &a[r * w..(r + 1) * w];
+                        let out = &mut dst[r * w..(r + 1) * w];
+                        let mut mx = f32::NEG_INFINITY;
+                        for &v in row {
+                            mx = mx.max(v);
+                        }
+                        let mut sum = 0.0f32;
+                        for (j, o) in out.iter_mut().enumerate() {
+                            let e = (row[j] - mx).exp();
+                            *o = e;
+                            sum += e;
+                        }
+                        let inv = 1.0 / sum;
+                        for o in out.iter_mut() {
+                            *o *= inv;
+                        }
+                    }
+                });
+                Some(dst)
+            }
+            OpKind::Broadcast => {
+                let a = bufs[node.ins[0]].as_ref().unwrap();
+                let w = node.cols;
+                let mut dst = vec![0.0f32; b * w];
+                eng.timers.time(Phase::Memory, || {
+                    for r in 0..b {
+                        dst[r * w..(r + 1) * w].fill(a[r]);
+                    }
+                });
+                Some(dst)
+            }
             OpKind::Scatter => {
                 scattered = Some(node.ins[0]);
                 None

@@ -149,6 +149,15 @@ impl GraphBatch {
     }
 
     #[inline]
+    /// Test-only corruption hook: overwrite one child slot in place.
+    /// Exists so soundness negative tests can drop edges or smuggle
+    /// cycles into an otherwise well-formed batch; never used by the
+    /// executor.
+    #[doc(hidden)]
+    pub fn corrupt_child_slot(&mut self, v: u32, slot: usize, c: u32) {
+        self.children[v as usize * self.arity + slot] = c;
+    }
+
     pub fn child(&self, v: u32, slot: usize) -> Option<u32> {
         let c = self.children[v as usize * self.arity + slot];
         (c != NO_VERTEX).then_some(c)

@@ -4,6 +4,8 @@
 //! and only once before training commences" (paper §3) — `Dataset` is that
 //! function's output, shared across epochs.
 
+use std::fs::File;
+use std::io::{BufRead, BufReader, Lines};
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -11,6 +13,16 @@ use anyhow::{Context, Result};
 use crate::util::rng::Rng;
 
 use super::{parse, synth, InputGraph};
+
+/// FNV-1a token hashing into `vocab` buckets — a real run would use a
+/// proper vocabulary; hashing keeps the loaders dependency-free.
+fn hash_token(w: &str, vocab: usize) -> i32 {
+    let mut acc: u64 = 1469598103934665603;
+    for b in w.bytes() {
+        acc = (acc ^ b as u64).wrapping_mul(1099511628211);
+    }
+    (acc % vocab as u64) as i32
+}
 
 #[derive(Debug)]
 pub struct Dataset {
@@ -53,27 +65,52 @@ impl Dataset {
         Dataset { graphs, vocab, n_classes: 0 }
     }
 
-    /// Load a real SST-format file (one s-expression tree per line).
-    /// Tokens are hashed into `vocab` buckets (a real run would use a
-    /// proper vocabulary; hashing keeps the loader dependency-free).
+    /// GNN classification corpus: layered message-passing DAGs with a
+    /// single readout root; the label is the input-token sum modulo
+    /// `n_classes` (see [`synth::gnn_dag`]). `fanin` bounds each
+    /// vertex's children and must match the cell's gather arity.
+    pub fn gnn_synth(
+        seed: u64,
+        n: usize,
+        vocab: usize,
+        n_classes: usize,
+        fanin: usize,
+    ) -> Dataset {
+        assert!(fanin >= 2, "gnn corpus needs fan-in of at least 2");
+        let mut rng = Rng::new(seed);
+        let graphs = (0..n)
+            .map(|_| {
+                let layers = 2 + rng.below(3);
+                let width = 2 + rng.below(fanin - 1); // 2..=fanin
+                synth::gnn_dag(&mut rng, vocab, layers, width, fanin, n_classes)
+            })
+            .collect();
+        Dataset { graphs, vocab, n_classes }
+    }
+
+    /// Seq2seq copy-reverse corpus for the attention cell: encoder chain
+    /// plus decoder vertices with `mem` attention memory slots (see
+    /// [`synth::seq2seq_copy`]). Labels are target tokens on the decoder
+    /// vertices, so `n_classes == vocab`.
+    pub fn seq2seq_copy(
+        seed: u64,
+        n: usize,
+        vocab: usize,
+        max_len: usize,
+        mem: usize,
+    ) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let graphs = (0..n)
+            .map(|_| synth::seq2seq_copy(&mut rng, vocab, 3, max_len, mem))
+            .collect();
+        Dataset { graphs, vocab, n_classes: vocab }
+    }
+
+    /// Load a real SST-format file (one s-expression tree per line),
+    /// materializing the whole corpus. Streaming variant:
+    /// [`GraphStream::from_sst_file`].
     pub fn from_sst_file(path: &Path, vocab: usize, n_classes: usize) -> Result<Dataset> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let mut graphs = Vec::new();
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            graphs.push(parse::parse_sst(line, |w| {
-                let mut acc: u64 = 1469598103934665603;
-                for b in w.bytes() {
-                    acc = (acc ^ b as u64).wrapping_mul(1099511628211);
-                }
-                (acc % vocab as u64) as i32
-            })?);
-        }
-        Ok(Dataset { graphs, vocab, n_classes })
+        GraphStream::from_sst_file(path, vocab, n_classes)?.into_dataset()
     }
 
     pub fn len(&self) -> usize {
@@ -91,6 +128,107 @@ impl Dataset {
     /// Minibatches of (up to) `bs` graph references, in dataset order.
     pub fn minibatches(&self, bs: usize) -> impl Iterator<Item = Vec<&InputGraph>> {
         self.graphs.chunks(bs.max(1)).map(|c| c.iter().collect())
+    }
+}
+
+enum StreamSource {
+    /// Line-oriented SST file, read incrementally.
+    Lines(Lines<BufReader<File>>),
+    /// Synthetic generator with a remaining-sample budget.
+    Synth {
+        rng: Rng,
+        left: usize,
+        make: Box<dyn FnMut(&mut Rng) -> InputGraph + Send>,
+    },
+}
+
+/// Streaming corpus: yields owned minibatches without materializing the
+/// whole corpus. The paper's one-time I/O function (§3) restated for
+/// corpora that do not fit in memory — training loops pull
+/// [`next_minibatch`](GraphStream::next_minibatch) until it comes back
+/// empty, and each pulled chunk is dropped before the next is read.
+pub struct GraphStream {
+    source: StreamSource,
+    pub vocab: usize,
+    pub n_classes: usize,
+}
+
+impl GraphStream {
+    /// Stream a real SST-format file (one s-expression tree per line,
+    /// blank lines skipped), hashing tokens into `vocab` buckets.
+    pub fn from_sst_file(
+        path: &Path,
+        vocab: usize,
+        n_classes: usize,
+    ) -> Result<GraphStream> {
+        let f = File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(GraphStream {
+            source: StreamSource::Lines(BufReader::new(f).lines()),
+            vocab,
+            n_classes,
+        })
+    }
+
+    /// Stream `n` synthetic samples drawn from `make` — the generator
+    /// runs lazily, one minibatch at a time.
+    pub fn synthetic(
+        seed: u64,
+        n: usize,
+        vocab: usize,
+        n_classes: usize,
+        make: impl FnMut(&mut Rng) -> InputGraph + Send + 'static,
+    ) -> GraphStream {
+        GraphStream {
+            source: StreamSource::Synth {
+                rng: Rng::new(seed),
+                left: n,
+                make: Box::new(make),
+            },
+            vocab,
+            n_classes,
+        }
+    }
+
+    /// The next minibatch of up to `bs` owned graphs; an empty vector
+    /// means the stream is exhausted.
+    pub fn next_minibatch(&mut self, bs: usize) -> Result<Vec<InputGraph>> {
+        let bs = bs.max(1);
+        let mut out = Vec::with_capacity(bs);
+        match &mut self.source {
+            StreamSource::Lines(lines) => {
+                let vocab = self.vocab;
+                while out.len() < bs {
+                    let Some(line) = lines.next() else { break };
+                    let line = line.context("reading sst stream")?;
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    out.push(parse::parse_sst(line, |w| hash_token(w, vocab))?);
+                }
+            }
+            StreamSource::Synth { rng, left, make } => {
+                while out.len() < bs && *left > 0 {
+                    out.push(make(rng));
+                    *left -= 1;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Drain the remainder into an in-memory [`Dataset`].
+    pub fn into_dataset(mut self) -> Result<Dataset> {
+        let mut graphs = Vec::new();
+        loop {
+            let chunk = self.next_minibatch(256)?;
+            if chunk.is_empty() {
+                break;
+            }
+            graphs.extend(chunk);
+        }
+        Ok(Dataset { graphs, vocab: self.vocab, n_classes: self.n_classes })
     }
 }
 
@@ -123,6 +261,78 @@ mod tests {
             assert_eq!(x.tokens, y.tokens);
             assert_eq!(x.children, y.children);
         }
+    }
+
+    #[test]
+    fn gnn_corpus_is_learnable_and_bounded() {
+        let d = Dataset::gnn_synth(3, 12, 40, 5, 4);
+        assert_eq!(d.len(), 12);
+        assert_eq!(d.n_classes, 5);
+        for g in &d.graphs {
+            assert_eq!(g.roots().len(), 1);
+            assert!((0..5).contains(&g.root_label));
+            assert!(g.children.iter().all(|cs| cs.len() <= 4));
+        }
+    }
+
+    #[test]
+    fn seq2seq_corpus_labels_decoder_vertices() {
+        let d = Dataset::seq2seq_copy(4, 8, 16, 10, 3);
+        assert_eq!(d.n_classes, 16);
+        for g in &d.graphs {
+            let n = g.n();
+            // exactly the decoder half carries labels
+            let labeled = g.labels.iter().filter(|&&l| l >= 0).count();
+            assert_eq!(labeled, n / 2);
+            assert_eq!(g.roots(), vec![(n - 1) as u32]);
+        }
+    }
+
+    #[test]
+    fn synthetic_stream_chunks_and_matches_eager_dataset() {
+        let mut s = GraphStream::synthetic(7, 10, 50, 5, |rng| {
+            synth::sst_like_tree(rng, 50, 5)
+        });
+        let mut total = 0;
+        let mut sizes = Vec::new();
+        loop {
+            let chunk = s.next_minibatch(4).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            sizes.push(chunk.len());
+            total += chunk.len();
+        }
+        assert_eq!(total, 10);
+        assert_eq!(sizes, vec![4, 4, 2]);
+        // same seed through into_dataset reproduces the eager corpus
+        let d = GraphStream::synthetic(7, 10, 50, 5, |rng| {
+            synth::sst_like_tree(rng, 50, 5)
+        })
+        .into_dataset()
+        .unwrap();
+        let e = Dataset::sst_like(7, 10, 50, 5);
+        for (a, b) in d.graphs.iter().zip(&e.graphs) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.children, b.children);
+        }
+    }
+
+    #[test]
+    fn sst_stream_yields_the_same_graphs_as_the_eager_loader() {
+        let dir = tempdir();
+        let p = dir.join("s.txt");
+        std::fs::write(&p, "(3 (2 good) (1 movie))\n\n(0 (1 bad) (1 film))\n")
+            .unwrap();
+        let mut s = GraphStream::from_sst_file(&p, 100, 5).unwrap();
+        let b1 = s.next_minibatch(1).unwrap();
+        assert_eq!(b1.len(), 1);
+        assert_eq!(b1[0].root_label, 3);
+        let b2 = s.next_minibatch(8).unwrap();
+        assert_eq!(b2.len(), 1);
+        assert_eq!(b2[0].root_label, 0);
+        assert!(s.next_minibatch(8).unwrap().is_empty());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

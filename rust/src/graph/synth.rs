@@ -194,6 +194,102 @@ pub fn random_dag(
         .expect("dag generator is well-formed")
 }
 
+/// GNN classification DAG: a layered message-passing graph topped by a
+/// single readout root that aggregates the whole last layer. Every
+/// layer-`l` vertex keeps its aligned layer-`l-1` predecessor as a child
+/// (so no interior vertex is left parentless — the readout is the unique
+/// root) plus random extra fan-in, up to `fanin` children total. The
+/// root label is the input-token sum modulo `n_classes`, a signal a
+/// message-passing cell can actually learn, unlike a random label.
+pub fn gnn_dag(
+    rng: &mut Rng,
+    vocab: usize,
+    layers: usize,
+    width: usize,
+    fanin: usize,
+    n_classes: usize,
+) -> InputGraph {
+    assert!(layers >= 1 && width >= 1 && fanin >= 1 && n_classes >= 1);
+    assert!(width <= fanin, "readout root must reach the whole last layer");
+    let n = layers * width + 1;
+    let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut tokens = vec![-1i32; n];
+    let mut tok_sum = 0i64;
+    for slot in tokens.iter_mut().take(width) {
+        let t = rng.zipf(vocab) as i32;
+        tok_sum += t as i64;
+        *slot = t;
+    }
+    for l in 1..layers {
+        for w in 0..width {
+            // aligned predecessor first, so every layer-(l-1) vertex is
+            // guaranteed a parent
+            let mut picked = vec![((l - 1) * width + w) as u32];
+            for _ in 0..rng.below(fanin.min(width)) {
+                let c = ((l - 1) * width + rng.below(width)) as u32;
+                if !picked.contains(&c) {
+                    picked.push(c);
+                }
+            }
+            children[l * width + w] = picked;
+        }
+    }
+    children[n - 1] =
+        ((layers - 1) * width..layers * width).map(|v| v as u32).collect();
+    let root_label = (tok_sum % n_classes as i64) as i32;
+    InputGraph::from_children(children, tokens, vec![-1; n], root_label)
+        .expect("gnn generator is well-formed")
+}
+
+/// Attention seq2seq sample for the copy-reverse task: an encoder chain
+/// over `len` source tokens, then `len` decoder vertices that each
+/// depend on their predecessor state (slot 0) plus `mem` evenly spaced
+/// encoder states (memory slots 1..=mem) — genuine multi-parent fan-in.
+/// Decoder vertex `t` is teacher-forced with the previous target token
+/// (BOS = token 0 at `t = 0`) and labeled with `source[len-1-t]`, the
+/// reversed source. Labels live on the decoder vertices (LM-style);
+/// `root_label` is unset.
+pub fn seq2seq_copy(
+    rng: &mut Rng,
+    vocab: usize,
+    len_lo: usize,
+    len_hi: usize,
+    mem: usize,
+) -> InputGraph {
+    assert!(vocab >= 2 && mem >= 1);
+    let lo = len_lo.max(mem).max(2);
+    let hi = len_hi.max(lo);
+    let len = lo + rng.below(hi - lo + 1);
+    let src: Vec<i32> = (0..len).map(|_| rng.below(vocab) as i32).collect();
+    let n = 2 * len;
+    let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut tokens = vec![-1i32; n];
+    let mut labels = vec![-1i32; n];
+    for (i, &t) in src.iter().enumerate() {
+        tokens[i] = t;
+        if i > 0 {
+            children[i] = vec![(i - 1) as u32];
+        }
+    }
+    // evenly spaced attention anchors over the encoder states (distinct
+    // because len >= mem)
+    let anchors: Vec<u32> = (0..mem)
+        .map(|k| (k * (len - 1) / (mem - 1).max(1)) as u32)
+        .collect();
+    for t in 0..len {
+        let v = len + t;
+        let prev = if t == 0 { len - 1 } else { v - 1 };
+        let mut cs = Vec::with_capacity(1 + mem);
+        cs.push(prev as u32);
+        cs.extend_from_slice(&anchors);
+        children[v] = cs;
+        tokens[v] = if t == 0 { 0 } else { src[len - t] };
+        labels[v] = src[len - 1 - t];
+    }
+    InputGraph::from_children(children, tokens, labels, -1)
+        .expect("seq2seq generator is well-formed")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +366,52 @@ mod tests {
             assert!(cs.is_empty() || cs.len() == 3);
         }
         assert_eq!(g.roots().len(), 1);
+    }
+
+    #[test]
+    fn gnn_dag_has_unique_readout_root_and_learnable_label() {
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let g = gnn_dag(&mut rng, 30, 3, 3, 4, 5);
+            assert_eq!(g.n(), 10);
+            assert_eq!(g.roots(), vec![9]);
+            let tok_sum: i64 =
+                g.tokens.iter().filter(|&&t| t >= 0).map(|&t| t as i64).sum();
+            assert_eq!(g.root_label, (tok_sum % 5) as i32);
+            for cs in &g.children {
+                assert!(cs.len() <= 4);
+            }
+            assert_eq!(g.depths().unwrap()[9], 3);
+        }
+    }
+
+    #[test]
+    fn seq2seq_copy_reverses_the_source() {
+        let mut rng = Rng::new(10);
+        for _ in 0..20 {
+            let g = seq2seq_copy(&mut rng, 12, 4, 9, 3);
+            let n = g.n();
+            assert_eq!(n % 2, 0);
+            let s = n / 2;
+            assert!((4..=9).contains(&s));
+            assert_eq!(g.roots(), vec![(n - 1) as u32]);
+            for t in 0..s {
+                // decoder t is labeled with the reversed source and has
+                // 1 recurrent + 3 memory children
+                assert_eq!(g.labels[s + t], g.tokens[s - 1 - t]);
+                assert_eq!(g.children[s + t].len(), 4);
+            }
+            // teacher forcing: BOS first, then the previous target
+            assert_eq!(g.tokens[s], 0);
+            for t in 1..s {
+                assert_eq!(g.tokens[s + t], g.labels[s + t - 1]);
+            }
+            // genuine multi-parent fan-in: the first encoder state feeds
+            // encoder 1 and every decoder
+            let fanin =
+                (0..n).filter(|&v| g.children[v].contains(&0)).count();
+            assert_eq!(fanin, s + 1);
+        }
     }
 
     #[test]

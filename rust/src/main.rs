@@ -26,7 +26,7 @@ use cavs::exec::Engine;
 use cavs::graph::Dataset;
 use cavs::models::{CellSpec, HeadKind, Model};
 use cavs::runtime::Runtime;
-use cavs::train::{host, train_epochs, Optimizer};
+use cavs::train::{host, train_epochs, Optimizer as _};
 use cavs::vertex::registry;
 use cavs::{info, util};
 
@@ -143,11 +143,11 @@ USAGE:
                [--save ckpt] [--load ckpt]
   cavs eval    [--config cfg.json] [--threads N] [--set k=v ...]
   cavs serve   [--config cfg.json] [--cell NAME] [--threads N] [--set k=v ...]
-  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|micro|kernel|loc|all
+  cavs bench   --exp fig8a..fig8h|fig9a|fig9b|fig10|table1|table2|serial|serve|train|e2e|micro|kernel|loc|all
                [--scale 1.0] [--full true] [--threads N] [--cell NAME]
-               [--tiny true]   (serve/train/micro/kernel: bounded CI smoke)
+               [--tiny true]   (serve/train/e2e/micro/kernel: bounded CI smoke)
                [--check baseline.json] [--check-update baseline.json]
-               [--tolerance 0.2]   (serve/train/micro/kernel: regression gate)
+               [--tolerance 0.2]   (serve/train/e2e/micro/kernel: regression gate)
   cavs trace   [--out trace.json] [--cell NAME] [--threads N] [--set k=v ...]
   cavs trace   --check trace.json     (validate a capture; the CI smoke)
   cavs inspect [--set artifacts_dir=...]
@@ -197,9 +197,33 @@ The cell is an **open API**: `vertex::Program` is the single source of
 
 `cavs train` uses the PJRT engine when an artifact set is present; on a
   clean checkout it falls back to host-only training through the Program
-  interpreter (synthetic sum-of-root-states objective, SGD), so every
-  registered cell trains end-to-end anywhere. `cavs bench --exp train
-  --cell gru --tiny true` is the CI smoke for that path.
+  interpreter, so every registered cell trains end-to-end anywhere. The
+  typed train.* section picks the objective and update rule:
+    train.optimizer  sgd|adam           (adam keeps recycled moment buffers)
+    train.lr         learning rate      (finite, > 0)
+    train.beta1/2    adam moment decays in [0,1) (error under sgd)
+    train.epochs     epoch count (>= 1)
+    train.loss       sum|classifier|pervertex (default derives from `head`:
+                     classifier = cross-entropy at each root over the first
+                     n_classes state columns, pervertex = cross-entropy at
+                     every labeled vertex over vocab columns, sum = the
+                     legacy synthetic sum-of-root-states objective)
+  The flat `lr`/`epochs` spellings still work as deprecated aliases for
+  one release. `cavs bench --exp train --cell gru --tiny true` is the CI
+  smoke for the host path.
+
+The scheduler and GraphBatch handle arbitrary DAGs, not just trees: a
+  vertex may feed any number of parents, and `analysis::plan` proves
+  every merged batch's frontier depths/acyclicity by Kahn recomputation
+  (DESIGN.md §14). Two workloads are defined purely as Programs on top:
+    gnn          layered message-passing cell (fan-in 4, summed messages,
+                 readout root; data: synthetic token-sum classification)
+    attnseq2seq  attention-bearing seq2seq cell (recurrent slot + 3
+                 encoder anchors, SoftmaxCols attention; data: copy-reverse
+                 with teacher forcing)
+  `cavs bench --exp e2e` trains both end-to-end (accuracy-vs-epoch,
+  Adam + cross-entropy; `--tiny true` is the CI smoke, gated against
+  results/baselines/BENCH_e2e.tiny.json).
 
 `cavs serve` runs the online-inference demo: n_samples synthetic
   concurrent requests with mixed tree/sequence structures flow through
@@ -244,10 +268,13 @@ The host interpreter compiles F by default (vertex::opt: DCE + CSE +
   cell, thread count and opt flag; `cargo bench --bench micro` writes
   per-point stats to BENCH_micro.json (gitignored).
 
-Config keys (for --set): cell, h, vocab, head, n_classes, bs, epochs,
-  seq_len, n_samples, tree_leaves, lr, max_grad_norm, seed, policy,
+Config keys (for --set): cell, h, vocab, head, n_classes, bs,
+  seq_len, n_samples, tree_leaves, max_grad_norm, seed, policy,
   lazy_batching, fusion, streaming, threads, pool, opt, no_opt,
   math (exact|fast),
+  train.optimizer (sgd|adam), train.lr, train.beta1, train.beta2,
+  train.epochs, train.loss (sum|classifier|pervertex),
+  lr, epochs   (deprecated aliases of train.lr / train.epochs),
   serve.policy, serve.max_batch, serve.deadline_ms, serve.queue_cap,
   serve.adaptive_max_batch, serve.agreement_lookahead,
   serve.slo_interactive_ms, serve.slo_standard_ms, serve.slo_bulk_ms,
@@ -262,6 +289,22 @@ fn make_dataset(cfg: &Config, arity: usize) -> Dataset {
         ("treefc", _) => {
             Dataset::treefc(cfg.seed, cfg.n_samples, cfg.vocab, cfg.tree_leaves)
         }
+        // the DAG workloads are structural, not tree-shaped: layered
+        // message-passing graphs and chain+attention-anchor seq2seq
+        ("gnn", _) => Dataset::gnn_synth(
+            cfg.seed,
+            cfg.n_samples,
+            cfg.vocab,
+            cfg.n_classes,
+            4,
+        ),
+        ("attnseq2seq", _) => Dataset::seq2seq_copy(
+            cfg.seed,
+            cfg.n_samples,
+            cfg.vocab.max(2),
+            cfg.seq_len.clamp(4, 12),
+            3,
+        ),
         _ if arity >= 2 => {
             Dataset::sst_like(cfg.seed, cfg.n_samples, cfg.vocab, cfg.n_classes)
         }
@@ -308,8 +351,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         &mut model,
         &data,
         cfg.batch_size,
-        Optimizer::adam(cfg.lr),
-        cfg.epochs,
+        cfg.train.model_optimizer(),
+        cfg.train.epochs,
         cfg.max_grad_norm,
         |log| {
             println!(
@@ -334,8 +377,11 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// Artifact-free fallback: train the configured cell end-to-end through
-/// the host Program interpreter (any registered cell; synthetic
-/// sum-of-root-states objective, plain SGD).
+/// the host Program interpreter (any registered cell). The objective and
+/// update rule come from the typed `train.*` section: real
+/// cross-entropy heads (`train.loss=classifier|pervertex`) seed
+/// softmax−onehot gradients and report accuracy; `train.loss=sum` keeps
+/// the legacy synthetic objective.
 fn cmd_train_host(args: &Args, cfg: &Config) -> Result<()> {
     if args.get("load").is_some() || args.get("save").is_some() {
         bail!(
@@ -344,41 +390,49 @@ fn cmd_train_host(args: &Args, cfg: &Config) -> Result<()> {
         );
     }
     let h = cfg.h.min(64);
-    let lr = cfg.lr.min(0.05);
-    if h != cfg.h || lr != cfg.lr {
+    let lr = cfg.train.lr.min(0.05);
+    if h != cfg.h || lr != cfg.train.lr {
         info!(
             "host interpreter path clamps h {} -> {h} and lr {} -> {lr} \
              (interpretation is the correctness path, not the fast path)",
-            cfg.h, cfg.lr
+            cfg.h, cfg.train.lr
         );
     }
     let spec = CellSpec::lookup(&cfg.cell, h)?;
     let data = make_dataset(cfg, spec.arity());
+    let loss = cfg.train.loss_head(cfg.head, cfg.n_classes, data.vocab);
+    let mut tcfg = cfg.train.clone();
+    tcfg.lr = lr;
     info!(
         "no artifact set at {} — training {} h={h} host-only through the \
-         Program interpreter ({} samples, {} vertices, synthetic objective)",
+         Program interpreter ({} samples, {} vertices, {} + {:?})",
         cfg.artifacts_dir,
         cfg.cell,
         data.len(),
-        data.total_vertices()
+        data.total_vertices(),
+        tcfg.make_optimizer().name(),
+        loss,
     );
-    host::train_host_epochs_math(
-        &spec,
-        &data,
-        cfg.batch_size,
-        lr,
-        cfg.epochs,
-        cfg.threads,
-        cfg.seed,
-        cfg.opt,
-        cfg.math,
-        |log| {
-            println!(
-                "epoch {:3}  loss {:.4}  {:.2}s  ({} vertices)",
-                log.epoch, log.loss, log.seconds, log.n_vertices
-            );
-        },
-    )?;
+    let mut trainer = host::HostTrainer::builder(&spec, data.vocab)
+        .threads(cfg.threads)
+        .seed(cfg.seed)
+        .compiled(cfg.opt)
+        .math(cfg.math)
+        .loss(loss)
+        .optimizer(tcfg.make_optimizer())
+        .build()?;
+    trainer.train_epochs(&data, cfg.batch_size, cfg.train.epochs, |log| {
+        println!(
+            "epoch {:3}  loss {:10.4}  acc {:.3}  {:.2}s  ({} vertices, \
+             {} labels)",
+            log.epoch,
+            log.loss,
+            log.accuracy,
+            log.seconds,
+            log.n_vertices,
+            log.n_labels
+        );
+    });
     Ok(())
 }
 
@@ -572,18 +626,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
     cavs::obs::trace::set_enabled(true);
     let spec = CellSpec::lookup(&cfg.cell, cfg.h)?;
     let data = make_dataset(&cfg, spec.arity());
-    host::train_host_epochs_math(
-        &spec,
-        &data,
-        cfg.batch_size,
-        cfg.lr.min(0.05),
-        1,
-        cfg.threads,
-        cfg.seed,
-        cfg.opt,
-        cfg.math,
-        |_| {},
-    )?;
+    host::HostTrainer::builder(&spec, data.vocab)
+        .threads(cfg.threads)
+        .seed(cfg.seed)
+        .compiled(cfg.opt)
+        .math(cfg.math)
+        .optimizer(cavs::train::Sgd::new(cfg.train.lr.min(0.05)))
+        .build()?
+        .train_epochs(&data, cfg.batch_size, 1, |_| {});
     let out = args.get("out").unwrap_or("trace.json");
     cavs::obs::trace::write_json(out)
         .with_context(|| format!("writing {out}"))?;
@@ -676,7 +726,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // the four host-only (artifact-free) experiments: every one can be
     // gated against a committed baseline with --check, and --check-update
     // refreshes that baseline in place
-    if matches!(exp, "serve" | "train" | "micro" | "kernel") {
+    if matches!(exp, "serve" | "train" | "micro" | "kernel" | "e2e") {
         let t = match exp {
             // host-cell serving sweep: needs no artifact set (and
             // therefore no Runtime), so the CI smoke runs on clean
@@ -685,6 +735,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             // host-interpreter training curve for any registered cell —
             // the open-API smoke (`--cell gru --tiny true` in CI)
             "train" => experiments::train_host(&cfg.cell, scale, tiny, cfg.opt)?,
+            // end-to-end accuracy-vs-epoch on the DAG workloads (GNN
+            // classifier + attention seq2seq copy) with real loss heads
+            "e2e" => experiments::e2e(scale, tiny, cfg.opt)?,
             // scalar vs SIMD microkernel sweep (packed GEMM, din,
             // activations) — the dispatch layer's regression instrument
             "kernel" => experiments::kernel(scale, tiny)?,
@@ -881,16 +934,24 @@ fn cmd_check(args: &Args) -> Result<()> {
             .with_context(|| format!("cell {name} h={h}: layout soundness"))?;
 
         // pass 1 (plan): a synthetic batch matching the cell's structure
-        // — trees for arity>=2 cells, token chains for arity-1 cells
+        // — layered DAGs for gnn, chain+anchor DAGs for attnseq2seq,
+        // trees for other arity>=2 cells, token chains for arity-1 cells
+        // (check_cell_plan includes the DAG frontier recomputation, so
+        // multi-parent fan-in is proven, not just tolerated)
         let mut rng = Rng::new(cfg.seed);
         let graphs: Vec<InputGraph> = (0..8)
-            .map(|_| {
-                if spec.arity() >= 2 {
+            .map(|_| match name.as_str() {
+                "gnn" => {
+                    let layers = 1 + rng.below(3);
+                    let width = 2 + rng.below(3);
+                    synth::gnn_dag(&mut rng, 64, layers, width, 4, 5)
+                }
+                "attnseq2seq" => synth::seq2seq_copy(&mut rng, 64, 3, 12, 3),
+                _ if spec.arity() >= 2 => {
                     let leaves = 3 + rng.below(8);
                     synth::random_binary_tree(&mut rng, 64, leaves, 5)
-                } else {
-                    synth::ptb_like_var(&mut rng, 64, 12.0, 4.0, 2, 24)
                 }
+                _ => synth::ptb_like_var(&mut rng, 64, 12.0, 4.0, 2, 24),
             })
             .collect();
         let refs: Vec<&InputGraph> = graphs.iter().collect();

@@ -3,13 +3,14 @@
 //! set and no PJRT runtime**, which is what makes the open CellSpec API
 //! demonstrable everywhere (CI, laptops, clean checkouts).
 //!
-//! The objective is the synthetic sum-of-root-states loss the engine's
-//! `SumRootState` head uses (every root's full state row is seeded with a
-//! ones gradient by [`HostFrontier`]), so the loop needs no head
-//! parameters: forward + structural backward produce the state, input
-//! (embedding) and **parameter** gradients, and plain SGD descends. Loss
-//! decreasing end-to-end is asserted by `rust/tests/gradcheck.rs` for the
-//! program-only cells (`gru`, `cstreelstm`).
+//! The trainer is generic over the [`Optimizer`] update rule (the way
+//! `serve::Server` is generic over `FormPolicy`) and carries a
+//! [`LossHead`] objective: the head reads the frontier's forward states,
+//! seeds `d(loss)/d(state)` for the structural backward sweep, and
+//! reports loss / accuracy per supervised position. Construction goes
+//! through [`HostTrainer::builder`]; the `new`/`new_math` and
+//! `train_host_epochs`/`train_host_epochs_math` entry points are
+//! deprecated shims kept for one release.
 
 use anyhow::Result;
 
@@ -20,21 +21,40 @@ use crate::graph::{Dataset, GraphBatch, InputGraph};
 use crate::models::CellSpec;
 use crate::obs;
 use crate::scheduler::{self, Policy};
+use crate::train::loss::{LossHead, LossStats};
+use crate::train::optim::{Optimizer, Sgd};
 use crate::util::rng::Rng;
 use crate::vertex::interp::ProgramCell;
 
-/// One epoch of host training (loss is the summed synthetic objective).
+/// One epoch of host training. `loss` is the summed objective over the
+/// epoch; `accuracy` averages argmax hits over the `n_labels` supervised
+/// positions (0.0 under the synthetic [`LossHead::SumRootState`] head,
+/// which has no labels).
 #[derive(Debug, Clone)]
 pub struct HostEpoch {
     pub epoch: usize,
     pub loss: f64,
+    pub accuracy: f32,
+    pub n_labels: usize,
     pub seconds: f64,
     pub n_vertices: usize,
 }
 
+/// What [`HostTrainer::step`] observed on one minibatch (loss and
+/// accuracy counts are measured before the parameter update).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostStep {
+    pub loss: f64,
+    pub n_labels: usize,
+    pub n_correct: usize,
+    pub n_vertices: usize,
+}
+
 /// Reusable host trainer: interpreter cell + embedding table + recycled
-/// frontier arenas + persistent worker pool.
-pub struct HostTrainer {
+/// frontier arenas + persistent worker pool + optimizer state. Generic
+/// over the [`Optimizer`] update rule; `Box<dyn Optimizer>` also works
+/// for config-driven selection.
+pub struct HostTrainer<O: Optimizer = Sgd> {
     pub cell: ProgramCell,
     /// dense `[vocab, x_cols]` pull source (the embedding analogue)
     pub xtable: Vec<f32>,
@@ -43,12 +63,44 @@ pub struct HostTrainer {
     threads: usize,
     buckets: Vec<usize>,
     arity: usize,
+    optim: O,
+    loss: LossHead,
+}
+
+/// Configures and constructs a [`HostTrainer`]. Defaults: 1 thread,
+/// seed 1, the compiled level path, exact math, the synthetic
+/// [`LossHead::SumRootState`] objective and [`Sgd`] at `lr = 0.05`.
+pub struct HostTrainerBuilder<'a, O: Optimizer = Sgd> {
+    spec: &'a CellSpec,
+    vocab: usize,
+    threads: usize,
+    seed: u64,
+    compiled: bool,
+    math: MathMode,
+    loss: LossHead,
+    optim: O,
 }
 
 impl HostTrainer {
-    /// `opt = false` trains through the reference per-row interpreter
-    /// (the `no_opt` escape hatch) — bitwise identical results, since
-    /// the compiled schedule preserves every reduction order.
+    /// Start configuring a trainer for `spec` over a `vocab`-row input
+    /// table.
+    pub fn builder(spec: &CellSpec, vocab: usize) -> HostTrainerBuilder<'_> {
+        HostTrainerBuilder {
+            spec,
+            vocab,
+            threads: 1,
+            seed: 1,
+            compiled: true,
+            math: MathMode::Exact,
+            loss: LossHead::SumRootState,
+            optim: Sgd::new(0.05),
+        }
+    }
+
+    /// Deprecated constructor shim. `opt = false` selects the reference
+    /// per-row interpreter (the `no_opt` escape hatch).
+    #[deprecated(note = "use HostTrainer::builder(spec, vocab) \
+                         .threads(..).seed(..).compiled(..).build()")]
     pub fn new(
         spec: &CellSpec,
         vocab: usize,
@@ -56,13 +108,16 @@ impl HostTrainer {
         seed: u64,
         opt: bool,
     ) -> Result<HostTrainer> {
-        HostTrainer::new_math(spec, vocab, threads, seed, opt, MathMode::Exact)
+        HostTrainer::builder(spec, vocab)
+            .threads(threads)
+            .seed(seed)
+            .compiled(opt)
+            .build()
     }
 
-    /// [`HostTrainer::new`] with an explicit math mode: `fast` trains
-    /// through the vectorized polynomial activations (`--set math=fast`,
-    /// DESIGN.md §11). The reference per-row path (`opt = false`) has no
-    /// kernel table, so `math` only applies to the compiled cell.
+    /// Deprecated constructor shim with an explicit math mode.
+    #[deprecated(note = "use HostTrainer::builder(spec, vocab) \
+                         .math(..).build()")]
     pub fn new_math(
         spec: &CellSpec,
         vocab: usize,
@@ -71,30 +126,112 @@ impl HostTrainer {
         opt: bool,
         math: MathMode,
     ) -> Result<HostTrainer> {
-        let threads = threads.max(1);
-        let mut rng = Rng::new(seed);
-        let cell = if opt {
-            spec.random_cell_math(&mut rng, 0.08, math)?
+        HostTrainer::builder(spec, vocab)
+            .threads(threads)
+            .seed(seed)
+            .compiled(opt)
+            .math(math)
+            .build()
+    }
+}
+
+impl<'a, O: Optimizer> HostTrainerBuilder<'a, O> {
+    /// Worker threads for the sharded frontier (clamped to >= 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Seed for parameter and input-table initialization.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `false` trains through the reference per-row interpreter (the
+    /// `no_opt` escape hatch) — bitwise identical results, since the
+    /// compiled schedule preserves every reduction order.
+    pub fn compiled(mut self, compiled: bool) -> Self {
+        self.compiled = compiled;
+        self
+    }
+
+    /// `MathMode::Fast` trains through the vectorized polynomial
+    /// activations (`--set math=fast`, DESIGN.md §11). The reference
+    /// per-row path has no kernel table, so this only applies to the
+    /// compiled cell.
+    pub fn math(mut self, math: MathMode) -> Self {
+        self.math = math;
+        self
+    }
+
+    /// The training objective (validated against the cell's state width
+    /// at [`build`](HostTrainerBuilder::build) time).
+    pub fn loss(mut self, loss: LossHead) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    /// Swap in a different update rule; changes the builder's (and the
+    /// resulting trainer's) type parameter.
+    pub fn optimizer<O2: Optimizer>(
+        self,
+        optim: O2,
+    ) -> HostTrainerBuilder<'a, O2> {
+        HostTrainerBuilder {
+            spec: self.spec,
+            vocab: self.vocab,
+            threads: self.threads,
+            seed: self.seed,
+            compiled: self.compiled,
+            math: self.math,
+            loss: self.loss,
+            optim,
+        }
+    }
+
+    pub fn build(self) -> Result<HostTrainer<O>> {
+        self.loss.validate(self.spec.state_cols())?;
+        let mut rng = Rng::new(self.seed);
+        let cell = if self.compiled {
+            self.spec.random_cell_math(&mut rng, 0.08, self.math)?
         } else {
-            spec.random_cell_unoptimized(&mut rng, 0.08)?
+            self.spec.random_cell_unoptimized(&mut rng, 0.08)?
         };
-        let xtable: Vec<f32> =
-            (0..vocab * spec.x_cols()).map(|_| rng.normal_f32(0.5)).collect();
+        let xtable: Vec<f32> = (0..self.vocab * self.spec.x_cols())
+            .map(|_| rng.normal_f32(0.5))
+            .collect();
         Ok(HostTrainer {
             cell,
             xtable,
             frontier: HostFrontier::new(),
-            pool: WorkerPool::new(threads),
-            threads,
+            pool: WorkerPool::new(self.threads),
+            threads: self.threads,
             buckets: scheduler::host_buckets(),
-            arity: spec.arity(),
+            arity: self.spec.arity(),
+            optim: self.optim,
+            loss: self.loss,
         })
     }
+}
 
-    /// Forward + backward one minibatch and apply an SGD step to the
-    /// cell parameters and the input table. Returns the minibatch loss
-    /// (before the step) and the vertex count.
-    pub fn step(&mut self, graphs: &[&InputGraph], lr: f32) -> (f64, usize) {
+impl<O: Optimizer> HostTrainer<O> {
+    /// The configured objective.
+    pub fn loss_head(&self) -> LossHead {
+        self.loss
+    }
+
+    /// The configured update rule (mutable, e.g. for LR schedules).
+    pub fn optimizer_mut(&mut self) -> &mut O {
+        &mut self.optim
+    }
+
+    /// Forward + backward one minibatch through the loss head and apply
+    /// one optimizer step to the cell parameters and the input table.
+    /// Optimizer slots are dense and stable: cell parameters in
+    /// declaration order, then the input table in the slot after the
+    /// last parameter.
+    pub fn step(&mut self, graphs: &[&InputGraph]) -> HostStep {
         let batch = GraphBatch::new(graphs, self.arity);
         let _sp = obs::span("step", obs::Cat::Engine)
             .args(graphs.len() as u32, batch.n_vertices as u32);
@@ -104,37 +241,80 @@ impl HostTrainer {
         } else {
             Sharder::Sequential
         };
-        self.frontier.run(&batch, &tasks, &self.cell, &self.xtable, ex, true);
+        let head = self.loss;
+        let mut stats = LossStats::default();
+        self.frontier.run_with_seed(
+            &batch,
+            &tasks,
+            &self.cell,
+            &self.xtable,
+            ex,
+            true,
+            |b, s, g| stats = head.loss_and_seed(b, s, g),
+        );
 
-        let mut loss = 0.0f64;
-        for &r in &batch.roots {
-            loss += self
-                .frontier
-                .states()
-                .row(r as usize)
-                .iter()
-                .map(|&v| v as f64)
-                .sum::<f64>();
-        }
-
+        self.optim.begin_step();
         // a valid program may declare no parameters at all — then only
         // the input table trains
-        if let Some(pg) = self.frontier.param_grads() {
-            for (p, g) in self.cell.params_mut().iter_mut().zip(pg) {
-                for (w, &gv) in p.iter_mut().zip(g) {
-                    *w -= lr * gv;
+        let np = {
+            let params = self.cell.params_mut();
+            if let Some(pg) = self.frontier.param_grads() {
+                for (slot, (p, g)) in params.iter_mut().zip(pg).enumerate() {
+                    self.optim.update(slot, p, g);
                 }
             }
+            params.len()
+        };
+        if np > 0 {
             // refresh the merged GEMM weights from the updated tensors
             // (no-op for plans without merges / the reference path)
             self.cell.sync_opt();
         }
         if let Some(xg) = self.frontier.x_grads() {
-            for (w, &gv) in self.xtable.iter_mut().zip(xg) {
-                *w -= lr * gv;
-            }
+            self.optim.update(np, &mut self.xtable, xg);
         }
-        (loss, batch.n_vertices)
+        HostStep {
+            loss: stats.loss,
+            n_labels: stats.n_labels,
+            n_correct: stats.n_correct,
+            n_vertices: batch.n_vertices,
+        }
+    }
+
+    /// Train on `data` for `epochs`, logging per-epoch totals.
+    pub fn train_epochs(
+        &mut self,
+        data: &Dataset,
+        bs: usize,
+        epochs: usize,
+        mut on_epoch: impl FnMut(&HostEpoch),
+    ) -> Vec<HostEpoch> {
+        let mut logs = Vec::with_capacity(epochs);
+        for epoch in 0..epochs {
+            let t0 = std::time::Instant::now();
+            let mut loss = 0.0f64;
+            let mut n_labels = 0usize;
+            let mut n_correct = 0usize;
+            let mut n_vertices = 0usize;
+            for mb in data.minibatches(bs) {
+                let s = self.step(&mb);
+                loss += s.loss;
+                n_labels += s.n_labels;
+                n_correct += s.n_correct;
+                n_vertices += s.n_vertices;
+            }
+            let log = HostEpoch {
+                epoch,
+                loss,
+                accuracy: n_correct as f32 / n_labels.max(1) as f32,
+                n_labels,
+                seconds: t0.elapsed().as_secs_f64(),
+                n_vertices,
+            };
+            on_epoch(&log);
+            logs.push(log);
+        }
+        logs
     }
 
     pub fn traffic_bytes(&self) -> u64 {
@@ -142,7 +322,11 @@ impl HostTrainer {
     }
 }
 
-/// Train `spec` on `data` for `epochs` with plain SGD, host-only.
+/// Deprecated epoch-driver shim: plain SGD at `lr` under the synthetic
+/// sum-of-root-states objective.
+#[deprecated(note = "use HostTrainer::builder(..).optimizer(Sgd::new(lr)) \
+                     .build()?.train_epochs(..)")]
+#[allow(clippy::too_many_arguments)]
 pub fn train_host_epochs(
     spec: &CellSpec,
     data: &Dataset,
@@ -154,22 +338,19 @@ pub fn train_host_epochs(
     opt: bool,
     on_epoch: impl FnMut(&HostEpoch),
 ) -> Result<Vec<HostEpoch>> {
-    train_host_epochs_math(
-        spec,
-        data,
-        bs,
-        lr,
-        epochs,
-        threads,
-        seed,
-        opt,
-        MathMode::Exact,
-        on_epoch,
-    )
+    let mut trainer = HostTrainer::builder(spec, data.vocab)
+        .threads(threads)
+        .seed(seed)
+        .compiled(opt)
+        .optimizer(Sgd::new(lr))
+        .build()?;
+    Ok(trainer.train_epochs(data, bs, epochs, on_epoch))
 }
 
-/// [`train_host_epochs`] with an explicit math mode (`--set math=fast`
-/// routes here from the CLI).
+/// Deprecated epoch-driver shim with an explicit math mode.
+#[deprecated(note = "use HostTrainer::builder(..).math(..).build()?\
+                     .train_epochs(..)")]
+#[allow(clippy::too_many_arguments)]
 pub fn train_host_epochs_math(
     spec: &CellSpec,
     data: &Dataset,
@@ -180,35 +361,43 @@ pub fn train_host_epochs_math(
     seed: u64,
     opt: bool,
     math: MathMode,
-    mut on_epoch: impl FnMut(&HostEpoch),
+    on_epoch: impl FnMut(&HostEpoch),
 ) -> Result<Vec<HostEpoch>> {
-    let mut trainer =
-        HostTrainer::new_math(spec, data.vocab, threads, seed, opt, math)?;
-    let mut logs = Vec::with_capacity(epochs);
-    for epoch in 0..epochs {
-        let t0 = std::time::Instant::now();
-        let mut loss = 0.0f64;
-        let mut n_vertices = 0usize;
-        for mb in data.minibatches(bs) {
-            let (l, v) = trainer.step(&mb, lr);
-            loss += l;
-            n_vertices += v;
-        }
-        let log = HostEpoch {
-            epoch,
-            loss,
-            seconds: t0.elapsed().as_secs_f64(),
-            n_vertices,
-        };
-        on_epoch(&log);
-        logs.push(log);
-    }
-    Ok(logs)
+    let mut trainer = HostTrainer::builder(spec, data.vocab)
+        .threads(threads)
+        .seed(seed)
+        .compiled(opt)
+        .math(math)
+        .optimizer(Sgd::new(lr))
+        .build()?;
+    Ok(trainer.train_epochs(data, bs, epochs, on_epoch))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::train::optim::Adam;
+
+    fn sgd_curve(
+        cell: &str,
+        data: &Dataset,
+        lr: f32,
+        threads: usize,
+        compiled: bool,
+    ) -> Vec<f64> {
+        let spec = CellSpec::lookup(cell, 5).unwrap();
+        let mut tr = HostTrainer::builder(&spec, data.vocab)
+            .threads(threads)
+            .seed(9)
+            .compiled(compiled)
+            .optimizer(Sgd::new(lr))
+            .build()
+            .unwrap();
+        tr.train_epochs(data, 4, 3, |_| {})
+            .into_iter()
+            .map(|l| l.loss)
+            .collect()
+    }
 
     #[test]
     fn builtin_cell_trains_host_only() {
@@ -217,8 +406,13 @@ mod tests {
         // merged Wiou/Wf GEMM resyncs correctly after every SGD step
         let spec = CellSpec::lookup("treelstm", 6).unwrap();
         let data = Dataset::sst_like(3, 12, 20, 5);
-        let logs =
-            train_host_epochs(&spec, &data, 4, 0.02, 4, 2, 7, true, |_| {}).unwrap();
+        let mut tr = HostTrainer::builder(&spec, data.vocab)
+            .threads(2)
+            .seed(7)
+            .optimizer(Sgd::new(0.02))
+            .build()
+            .unwrap();
+        let logs = tr.train_epochs(&data, 4, 4, |_| {});
         assert_eq!(logs.len(), 4);
         assert!(logs.iter().all(|l| l.loss.is_finite()));
         assert!(
@@ -231,16 +425,12 @@ mod tests {
 
     #[test]
     fn trainer_is_deterministic_across_thread_counts() {
-        let spec = CellSpec::lookup("gru", 5).unwrap();
         let data = Dataset::ptb_like_var(9, 8, 15, 7);
-        let run = |threads: usize| {
-            train_host_epochs(&spec, &data, 4, 0.05, 3, threads, 3, true, |_| {})
-                .unwrap()
-                .into_iter()
-                .map(|l| l.loss)
-                .collect::<Vec<_>>()
-        };
-        assert_eq!(run(1), run(4), "bitwise identical across thread counts");
+        assert_eq!(
+            sgd_curve("gru", &data, 0.05, 1, true),
+            sgd_curve("gru", &data, 0.05, 4, true),
+            "bitwise identical across thread counts"
+        );
     }
 
     #[test]
@@ -255,14 +445,86 @@ mod tests {
             } else {
                 Dataset::ptb_like_var(11, 10, 18, 7)
             };
-            let run = |opt: bool| {
-                train_host_epochs(&spec, &data, 4, 0.03, 3, 2, 9, opt, |_| {})
-                    .unwrap()
-                    .into_iter()
-                    .map(|l| l.loss)
-                    .collect::<Vec<_>>()
+            assert_eq!(
+                sgd_curve(cell, &data, 0.03, 2, true),
+                sgd_curve(cell, &data, 0.03, 2, false),
+                "{cell}: opt changed the curve"
+            );
+        }
+    }
+
+    #[test]
+    fn deprecated_shims_match_the_builder_path() {
+        // the one-release compatibility contract: the old entry points
+        // produce the exact curves the builder produces
+        let spec = CellSpec::lookup("gru", 5).unwrap();
+        let data = Dataset::ptb_like_var(13, 8, 14, 7);
+        #[allow(deprecated)]
+        let old = train_host_epochs(&spec, &data, 4, 0.05, 3, 2, 9, true, |_| {})
+            .unwrap()
+            .into_iter()
+            .map(|l| l.loss)
+            .collect::<Vec<_>>();
+        assert_eq!(old, sgd_curve("gru", &data, 0.05, 2, true));
+    }
+
+    #[test]
+    fn classifier_head_trains_and_reports_accuracy() {
+        // sentiment-style: cross-entropy at the root decreases and the
+        // epoch log carries labels + accuracy
+        let spec = CellSpec::lookup("treelstm", 6).unwrap();
+        let data = Dataset::sst_like(5, 14, 20, 5);
+        let mut tr = HostTrainer::builder(&spec, data.vocab)
+            .threads(2)
+            .seed(11)
+            .loss(LossHead::ClassifierAtRoot { n_classes: 5 })
+            .optimizer(Adam::new(0.01))
+            .build()
+            .unwrap();
+        let logs = tr.train_epochs(&data, 4, 5, |_| {});
+        assert!(logs.iter().all(|l| l.n_labels == 14));
+        assert!(logs.iter().all(|l| (0.0..=1.0).contains(&l.accuracy)));
+        assert!(
+            logs.last().unwrap().loss < logs[0].loss,
+            "cross-entropy {} -> {} did not decrease",
+            logs[0].loss,
+            logs.last().unwrap().loss
+        );
+    }
+
+    #[test]
+    fn adam_and_sgd_both_decrease_and_are_thread_deterministic() {
+        let spec = CellSpec::lookup("gnn", 6).unwrap();
+        let data = Dataset::gnn_synth(21, 10, 20, 5, 4);
+        let run = |threads: usize, adam: bool| {
+            let b = HostTrainer::builder(&spec, data.vocab)
+                .threads(threads)
+                .seed(17)
+                .loss(LossHead::ClassifierAtRoot { n_classes: 5 });
+            let logs = if adam {
+                b.optimizer(Adam::new(0.02)).build().unwrap().train_epochs(
+                    &data,
+                    4,
+                    4,
+                    |_| {},
+                )
+            } else {
+                b.optimizer(Sgd::new(0.1)).build().unwrap().train_epochs(
+                    &data,
+                    4,
+                    4,
+                    |_| {},
+                )
             };
-            assert_eq!(run(true), run(false), "{cell}: opt changed the curve");
+            logs.into_iter().map(|l| l.loss).collect::<Vec<_>>()
+        };
+        for adam in [false, true] {
+            let c1 = run(1, adam);
+            assert!(
+                c1.last().unwrap() < &c1[0],
+                "adam={adam}: loss {c1:?} did not decrease"
+            );
+            assert_eq!(c1, run(4, adam), "adam={adam}: thread nondeterminism");
         }
     }
 }

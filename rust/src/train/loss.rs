@@ -1,0 +1,277 @@
+//! Loss heads for host training: the contract between a cell's scattered
+//! state and a training objective.
+//!
+//! A head reads forward states out of the frontier's [`StateBuffer`] and
+//! seeds `d(loss)/d(state)` back into the gradient buffer — the logits of
+//! the classification heads are the **first `n_classes` state columns**
+//! of the supervised vertex, so heads carry no parameters of their own
+//! and the structural backward sweep needs no extra machinery. Seeding is
+//! a single sequential pass over disjoint rows, so it is bitwise
+//! identical at every thread count, and it allocates nothing: the softmax
+//! is computed in place inside the gradient row.
+
+use crate::graph::GraphBatch;
+use crate::memory::StateBuffer;
+
+/// What one minibatch's head evaluation produced.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LossStats {
+    /// summed objective over every supervised position
+    pub loss: f64,
+    /// supervised positions seen (divisor for per-label averages)
+    pub n_labels: usize,
+    /// argmax predictions matching their label
+    pub n_correct: usize,
+}
+
+/// A training objective over scattered states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossHead {
+    /// Legacy synthetic objective: loss is the sum of every root's state
+    /// row, so the seed is a ones gradient (what [`HostFrontier`] seeded
+    /// unconditionally before heads existed).
+    ///
+    /// [`HostFrontier`]: crate::exec::parallel::HostFrontier
+    SumRootState,
+    /// Softmax cross-entropy at each graph's root over the first
+    /// `n_classes` state columns, supervised by `root_labels`
+    /// (sentiment-style classification; unlabeled roots are skipped).
+    ClassifierAtRoot { n_classes: usize },
+    /// Per-vertex softmax cross-entropy over the first `n_classes` state
+    /// columns of every vertex with a non-negative label (LM / seq2seq
+    /// style; unlabeled vertices contribute nothing).
+    PerVertex { n_classes: usize },
+}
+
+impl LossHead {
+    /// Parse a `train.loss` config value.
+    pub fn parse(s: &str, n_classes: usize) -> Option<LossHead> {
+        match s {
+            "sum" => Some(LossHead::SumRootState),
+            "classifier" => Some(LossHead::ClassifierAtRoot { n_classes }),
+            "pervertex" => Some(LossHead::PerVertex { n_classes }),
+            _ => None,
+        }
+    }
+
+    /// The head's logit width, if it has one.
+    pub fn n_classes(&self) -> Option<usize> {
+        match *self {
+            LossHead::SumRootState => None,
+            LossHead::ClassifierAtRoot { n_classes }
+            | LossHead::PerVertex { n_classes } => Some(n_classes),
+        }
+    }
+
+    /// A head can only read logits the state actually has.
+    pub fn validate(&self, state_cols: usize) -> anyhow::Result<()> {
+        if let Some(nc) = self.n_classes() {
+            if nc == 0 || nc > state_cols {
+                anyhow::bail!(
+                    "loss head reads {nc} logit columns but the cell \
+                     scatters {state_cols} state columns"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate the head on one batch's forward states and write
+    /// `d(loss)/d(state)` into `grads` (already zeroed by the caller).
+    /// Returns the summed loss, label count and correct count.
+    pub fn loss_and_seed(
+        &self,
+        batch: &GraphBatch,
+        states: &StateBuffer,
+        grads: &mut StateBuffer,
+    ) -> LossStats {
+        let mut st = LossStats::default();
+        match *self {
+            LossHead::SumRootState => {
+                for &r in &batch.roots {
+                    st.loss += states
+                        .row(r as usize)
+                        .iter()
+                        .map(|&v| v as f64)
+                        .sum::<f64>();
+                    grads.row_mut(r as usize).fill(1.0);
+                }
+                st.n_labels = batch.roots.len();
+            }
+            LossHead::ClassifierAtRoot { n_classes } => {
+                for (gi, &r) in batch.roots.iter().enumerate() {
+                    let y = batch.root_labels[gi];
+                    ce_row(states, grads, r as usize, y, n_classes, &mut st);
+                }
+            }
+            LossHead::PerVertex { n_classes } => {
+                for v in 0..batch.n_vertices {
+                    let y = batch.labels[v];
+                    ce_row(states, grads, v, y, n_classes, &mut st);
+                }
+            }
+        }
+        st
+    }
+}
+
+/// One row of softmax cross-entropy: logits are the first `nc` state
+/// columns of vertex `v`; the gradient row receives `softmax - onehot`.
+/// Rows with `y < 0` (or out of range) are unsupervised and skipped. The
+/// softmax shares the reference arm's loop shape (max, exp + sum, scale
+/// by `1/sum`), computed in place inside the gradient row.
+fn ce_row(
+    states: &StateBuffer,
+    grads: &mut StateBuffer,
+    v: usize,
+    y: i32,
+    nc: usize,
+    st: &mut LossStats,
+) {
+    if y < 0 || y as usize >= nc {
+        return;
+    }
+    let y = y as usize;
+    let logits = &states.row(v)[..nc];
+    let mut mx = f32::NEG_INFINITY;
+    let mut best = 0usize;
+    for (j, &l) in logits.iter().enumerate() {
+        if l > mx {
+            mx = l;
+            best = j;
+        }
+    }
+    let g = &mut grads.row_mut(v)[..nc];
+    let mut sum = 0.0f32;
+    for (j, gv) in g.iter_mut().enumerate() {
+        let e = (logits[j] - mx).exp();
+        *gv = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for gv in g.iter_mut() {
+        *gv *= inv;
+    }
+    // loss = log(sum exp) - (logit_y - mx) = -log softmax_y
+    st.loss += (sum.ln() - (logits[y] - mx)) as f64;
+    st.n_labels += 1;
+    st.n_correct += usize::from(best == y);
+    g[y] -= 1.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synth, InputGraph};
+    use crate::util::rng::Rng;
+
+    fn tiny_batch() -> GraphBatch {
+        let mut rng = Rng::new(5);
+        let graphs: Vec<InputGraph> = (0..3)
+            .map(|_| synth::random_binary_tree(&mut rng, 10, 3, 4))
+            .collect();
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        GraphBatch::new(&refs, 2)
+    }
+
+    fn filled_states(n: usize, cols: usize, seed: u64) -> StateBuffer {
+        let mut rng = Rng::new(seed);
+        let mut s = StateBuffer::new(n, cols);
+        for v in 0..n {
+            for x in s.row_mut(v) {
+                *x = rng.normal_f32(1.0);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn validate_rejects_heads_wider_than_the_state() {
+        assert!(LossHead::ClassifierAtRoot { n_classes: 5 }.validate(4).is_err());
+        assert!(LossHead::ClassifierAtRoot { n_classes: 4 }.validate(4).is_ok());
+        assert!(LossHead::PerVertex { n_classes: 0 }.validate(4).is_err());
+        assert!(LossHead::SumRootState.validate(1).is_ok());
+    }
+
+    #[test]
+    fn sum_head_reproduces_the_legacy_ones_seed() {
+        let batch = tiny_batch();
+        let states = filled_states(batch.n_vertices, 6, 1);
+        let mut grads = StateBuffer::new(batch.n_vertices, 6);
+        let st = LossHead::SumRootState.loss_and_seed(&batch, &states, &mut grads);
+        let want: f64 = batch
+            .roots
+            .iter()
+            .map(|&r| states.row(r as usize).iter().map(|&v| v as f64).sum::<f64>())
+            .sum();
+        assert_eq!(st.loss, want);
+        for &r in &batch.roots {
+            assert!(grads.row(r as usize).iter().all(|&g| g == 1.0));
+        }
+        // non-root rows stay unseeded
+        let seeded: usize = (0..batch.n_vertices)
+            .filter(|&v| grads.row(v).iter().any(|&g| g != 0.0))
+            .count();
+        assert_eq!(seeded, batch.roots.len());
+    }
+
+    #[test]
+    fn classifier_head_gradient_is_softmax_minus_onehot() {
+        let batch = tiny_batch();
+        let nc = 4usize;
+        let states = filled_states(batch.n_vertices, 6, 2);
+        let mut grads = StateBuffer::new(batch.n_vertices, 6);
+        let head = LossHead::ClassifierAtRoot { n_classes: nc };
+        let st = head.loss_and_seed(&batch, &states, &mut grads);
+        assert_eq!(st.n_labels, batch.n_graphs);
+        assert!(st.loss.is_finite() && st.loss > 0.0);
+        for (gi, &r) in batch.roots.iter().enumerate() {
+            let y = batch.root_labels[gi] as usize;
+            let g = &grads.row(r as usize)[..nc];
+            // rows of softmax - onehot sum to zero
+            let s: f32 = g.iter().sum();
+            assert!(s.abs() < 1e-5, "grad row sums to {s}");
+            assert!(g[y] < 0.0, "true-class gradient must be negative");
+            // probabilities recovered from the seed are a distribution
+            let mut p = g.to_vec();
+            p[y] += 1.0;
+            assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            // logit columns beyond nc stay untouched
+            assert!(grads.row(r as usize)[nc..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn pervertex_head_counts_only_labeled_vertices() {
+        let mut rng = Rng::new(9);
+        let g = synth::seq2seq_copy(&mut rng, 6, 3, 6, 3);
+        let refs = vec![&g];
+        let batch = GraphBatch::new(&refs, 4);
+        let states = filled_states(batch.n_vertices, 8, 3);
+        let mut grads = StateBuffer::new(batch.n_vertices, 8);
+        let head = LossHead::PerVertex { n_classes: 6 };
+        let st = head.loss_and_seed(&batch, &states, &mut grads);
+        let labeled = batch.labels.iter().filter(|&&l| l >= 0).count();
+        assert_eq!(st.n_labels, labeled);
+        assert!(st.n_correct <= st.n_labels);
+        // exactly the labeled rows carry seeds
+        let seeded: usize = (0..batch.n_vertices)
+            .filter(|&v| grads.row(v).iter().any(|&x| x != 0.0))
+            .count();
+        assert_eq!(seeded, labeled);
+    }
+
+    #[test]
+    fn parse_covers_the_config_spellings() {
+        assert_eq!(LossHead::parse("sum", 5), Some(LossHead::SumRootState));
+        assert_eq!(
+            LossHead::parse("classifier", 5),
+            Some(LossHead::ClassifierAtRoot { n_classes: 5 })
+        );
+        assert_eq!(
+            LossHead::parse("pervertex", 9),
+            Some(LossHead::PerVertex { n_classes: 9 })
+        );
+        assert_eq!(LossHead::parse("huber", 5), None);
+    }
+}

@@ -1,29 +1,174 @@
-//! Training: host-side optimizers (SGD/momentum, Adagrad, Adam), gradient
-//! clipping, and the epoch driver that ties scheduler + engine + optimizer
-//! together. The artifact-free interpreter path lives in [`host`].
+//! Training: the [`Optimizer`] trait the host trainer is generic over
+//! (with [`Sgd`]/[`Adam`] impls), [`LossHead`] objectives, the engine
+//! path's whole-model optimizer ([`ModelOptimizer`] + [`ModelOpt`]),
+//! gradient clipping, and the epoch drivers. The artifact-free
+//! interpreter path lives in [`host`].
 
 pub mod host;
+pub mod loss;
+pub mod optim;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::exec::{Engine, StepResult};
 use crate::graph::Dataset;
-use crate::models::{Model, ParamSet};
+use crate::models::{HeadKind, Model, ParamSet};
 
+pub use loss::{LossHead, LossStats};
+pub use optim::{Adam, Optimizer, Sgd};
+
+/// `train.optimizer` values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    Adam,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        match s {
+            "sgd" => Some(OptimKind::Sgd),
+            "adam" => Some(OptimKind::Adam),
+            _ => None,
+        }
+    }
+}
+
+/// `train.loss` values (resolved to a width-carrying [`LossHead`] by
+/// [`TrainConfig::loss_head`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossKind {
+    Sum,
+    Classifier,
+    PerVertex,
+}
+
+impl LossKind {
+    pub fn parse(s: &str) -> Option<LossKind> {
+        match s {
+            "sum" => Some(LossKind::Sum),
+            "classifier" => Some(LossKind::Classifier),
+            "pervertex" => Some(LossKind::PerVertex),
+            _ => None,
+        }
+    }
+}
+
+/// The typed `train.*` config section (mirrors `serve.*`): optimizer
+/// selection, learning-rate and Adam moments, epoch count and loss head.
+/// Every key validates at apply time with the offending key named;
+/// cross-field bounds (betas without Adam) are checked by
+/// [`TrainConfig::validate`] once every key has applied.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub optimizer: OptimKind,
+    pub lr: f32,
+    /// Adam first-moment decay (`None` = the 0.9 default). Setting it
+    /// under `train.optimizer=sgd` is a cross-field error.
+    pub beta1: Option<f32>,
+    /// Adam second-moment decay (`None` = the 0.999 default).
+    pub beta2: Option<f32>,
+    pub epochs: usize,
+    /// `None` derives the head from the model-level `head` key.
+    pub loss: Option<LossKind>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            optimizer: OptimKind::Sgd,
+            lr: 0.05,
+            beta1: None,
+            beta2: None,
+            epochs: 3,
+            loss: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Cross-field bounds, run after the whole config has applied.
+    pub fn validate(&self) -> Result<()> {
+        if self.optimizer == OptimKind::Sgd
+            && (self.beta1.is_some() || self.beta2.is_some())
+        {
+            bail!(
+                "train.beta1/train.beta2 only apply to \
+                 train.optimizer=adam (got train.optimizer=sgd)"
+            );
+        }
+        Ok(())
+    }
+
+    /// The configured host-path update rule, boxed for config-driven
+    /// selection ([`HostTrainer`] stays generic over it).
+    ///
+    /// [`HostTrainer`]: crate::train::host::HostTrainer
+    pub fn make_optimizer(&self) -> Box<dyn Optimizer> {
+        match self.optimizer {
+            OptimKind::Sgd => Box::new(Sgd::new(self.lr)),
+            OptimKind::Adam => Box::new(Adam::with_betas(
+                self.lr,
+                self.beta1.unwrap_or(0.9),
+                self.beta2.unwrap_or(0.999),
+            )),
+        }
+    }
+
+    /// The same selection for the engine path's closed rule set.
+    pub fn model_optimizer(&self) -> ModelOptimizer {
+        match self.optimizer {
+            OptimKind::Sgd => ModelOptimizer::sgd(self.lr),
+            OptimKind::Adam => ModelOptimizer::Adam {
+                lr: self.lr,
+                beta1: self.beta1.unwrap_or(0.9),
+                beta2: self.beta2.unwrap_or(0.999),
+                eps: 1e-8,
+            },
+        }
+    }
+
+    /// Resolve the loss head: an explicit `train.loss` wins, otherwise
+    /// the model-level `head` kind maps across (`lm` predicts the
+    /// vocabulary per vertex, `classifier` reads `n_classes` logits at
+    /// the root).
+    pub fn loss_head(
+        &self,
+        head: HeadKind,
+        n_classes: usize,
+        vocab: usize,
+    ) -> LossHead {
+        let kind = self.loss.unwrap_or(match head {
+            HeadKind::SumRootState => LossKind::Sum,
+            HeadKind::ClassifierAtRoot => LossKind::Classifier,
+            HeadKind::LmPerVertex => LossKind::PerVertex,
+        });
+        match kind {
+            LossKind::Sum => LossHead::SumRootState,
+            LossKind::Classifier => LossHead::ClassifierAtRoot { n_classes },
+            LossKind::PerVertex => LossHead::PerVertex { n_classes: vocab },
+        }
+    }
+}
+
+/// The engine path's closed set of update rules, applied whole-model by
+/// [`ModelOpt`] (cell + head + embedding stores at once). The open,
+/// host-path counterpart is the [`Optimizer`] trait. Renamed from
+/// `train::Optimizer` when the trait took that name.
 #[derive(Debug, Clone, Copy)]
-pub enum Optimizer {
+pub enum ModelOptimizer {
     Sgd { lr: f32, momentum: f32 },
     Adagrad { lr: f32, eps: f32 },
     Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
 }
 
-impl Optimizer {
-    pub fn sgd(lr: f32) -> Optimizer {
-        Optimizer::Sgd { lr, momentum: 0.0 }
+impl ModelOptimizer {
+    pub fn sgd(lr: f32) -> ModelOptimizer {
+        ModelOptimizer::Sgd { lr, momentum: 0.0 }
     }
 
-    pub fn adam(lr: f32) -> Optimizer {
-        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    pub fn adam(lr: f32) -> ModelOptimizer {
+        ModelOptimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
     }
 }
 
@@ -46,7 +191,7 @@ impl OptState {
     /// Apply one update to `params` from `grads` (flat, same layout).
     pub fn step_tensors(
         &mut self,
-        opt: Optimizer,
+        opt: ModelOptimizer,
         params: &mut [Vec<f32>],
         grads: &[Vec<f32>],
     ) {
@@ -54,7 +199,7 @@ impl OptState {
         self.ensure(&sizes);
         self.t += 1;
         match opt {
-            Optimizer::Sgd { lr, momentum } => {
+            ModelOptimizer::Sgd { lr, momentum } => {
                 for (i, p) in params.iter_mut().enumerate() {
                     let g = &grads[i];
                     if momentum == 0.0 {
@@ -70,7 +215,7 @@ impl OptState {
                     }
                 }
             }
-            Optimizer::Adagrad { lr, eps } => {
+            ModelOptimizer::Adagrad { lr, eps } => {
                 for (i, p) in params.iter_mut().enumerate() {
                     let g = &grads[i];
                     let v = &mut self.v[i];
@@ -80,7 +225,7 @@ impl OptState {
                     }
                 }
             }
-            Optimizer::Adam { lr, beta1, beta2, eps } => {
+            ModelOptimizer::Adam { lr, beta1, beta2, eps } => {
                 let bc1 = 1.0 - beta1.powi(self.t as i32);
                 let bc2 = 1.0 - beta2.powi(self.t as i32);
                 for (i, p) in params.iter_mut().enumerate() {
@@ -111,7 +256,7 @@ pub struct ModelOpt {
 
 impl ModelOpt {
     /// One optimizer step; invalidates device buffers of mutated params.
-    pub fn step(&mut self, opt: Optimizer, model: &mut Model, grad_scale: f32) {
+    pub fn step(&mut self, opt: ModelOptimizer, model: &mut Model, grad_scale: f32) {
         scale_set(&mut model.params, grad_scale);
         self.cell
             .step_tensors(opt, &mut model.params.host, &model.params.grad);
@@ -184,7 +329,7 @@ pub fn train_epochs(
     model: &mut Model,
     data: &Dataset,
     bs: usize,
-    opt: Optimizer,
+    opt: ModelOptimizer,
     epochs: usize,
     max_grad_norm: f32,
     mut on_epoch: impl FnMut(&EpochLog),
@@ -233,7 +378,7 @@ mod tests {
         let mut p = vec![vec![0.0f32]];
         for _ in 0..200 {
             let g = vec![vec![p[0][0] - 3.0]];
-            st.step_tensors(Optimizer::sgd(0.1), &mut p, &g);
+            st.step_tensors(ModelOptimizer::sgd(0.1), &mut p, &g);
         }
         assert!((p[0][0] - 3.0).abs() < 1e-3, "{}", p[0][0]);
     }
@@ -242,7 +387,7 @@ mod tests {
     fn momentum_matches_hand_rolled() {
         let mut st = OptState::default();
         let mut p = vec![vec![1.0f32]];
-        let opt = Optimizer::Sgd { lr: 0.1, momentum: 0.9 };
+        let opt = ModelOptimizer::Sgd { lr: 0.1, momentum: 0.9 };
         // two steps with constant gradient 1.0
         st.step_tensors(opt, &mut p, &[vec![1.0]]);
         assert!((p[0][0] - 0.9).abs() < 1e-6);
@@ -257,7 +402,7 @@ mod tests {
         let mut p = vec![vec![-4.0f32]];
         for _ in 0..400 {
             let g = vec![vec![2.0 * p[0][0]]]; // minimize w^2
-            st.step_tensors(Optimizer::adam(0.05), &mut p, &g);
+            st.step_tensors(ModelOptimizer::adam(0.05), &mut p, &g);
         }
         assert!(p[0][0].abs() < 1e-2, "{}", p[0][0]);
     }
@@ -266,7 +411,7 @@ mod tests {
     fn adagrad_step_shrinks() {
         let mut st = OptState::default();
         let mut p = vec![vec![0.0f32]];
-        let opt = Optimizer::Adagrad { lr: 1.0, eps: 1e-8 };
+        let opt = ModelOptimizer::Adagrad { lr: 1.0, eps: 1e-8 };
         st.step_tensors(opt, &mut p, &[vec![1.0]]);
         let first = -p[0][0];
         let before = p[0][0];

@@ -1,0 +1,205 @@
+//! The host-path [`Optimizer`] trait: the update rule [`HostTrainer`] is
+//! generic over, the way `serve::Server` is generic over `FormPolicy`.
+//!
+//! Implementations are stateful and keyed by a dense, stable tensor
+//! `slot` (cell parameters first, the embedding table last), so moment
+//! buffers are allocated once on the first step and recycled forever
+//! after — the Adam + loss-head training loop stays inside the
+//! zero-steady-state-allocation envelope (DESIGN.md §5). Updates run
+//! sequentially on the coordinator, so every rule is bitwise identical
+//! across thread counts by construction.
+//!
+//! [`HostTrainer`]: crate::train::host::HostTrainer
+
+/// A stateful tensor-wise update rule.
+pub trait Optimizer {
+    /// Name for logs and bench records (`"sgd"`, `"adam"`).
+    fn name(&self) -> &'static str;
+
+    /// Called once per minibatch step, before any [`update`]
+    /// (stateful rules advance their timestep here — Adam's bias
+    /// correction depends on it).
+    ///
+    /// [`update`]: Optimizer::update
+    fn begin_step(&mut self) {}
+
+    /// Apply one update to `param` in place from `grad` (same length).
+    /// `slot` identifies the tensor across steps: dense, stable, cell
+    /// parameters in declaration order with the embedding table after.
+    fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]);
+}
+
+/// Plain stochastic gradient descent, `w -= lr * g`. Stateless — this is
+/// exactly the update [`HostTrainer`] hard-coded before the trait
+/// existed, so default-configured training curves are unchanged.
+///
+/// [`HostTrainer`]: crate::train::host::HostTrainer
+#[derive(Debug, Clone, Copy)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Sgd {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn update(&mut self, _slot: usize, param: &mut [f32], grad: &[f32]) {
+        let lr = self.lr;
+        for (w, &g) in param.iter_mut().zip(grad) {
+            *w -= lr * g;
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction. First and second moment
+/// buffers are per-slot `Vec`s sized on first use and recycled on every
+/// later step — zero steady-state allocation.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam::with_betas(lr, 0.9, 0.999)
+    }
+
+    pub fn with_betas(lr: f32, beta1: f32, beta2: f32) -> Adam {
+        Adam { lr, beta1, beta2, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    /// Steps taken so far (tests assert moment recycling against it).
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]) {
+        while self.m.len() <= slot {
+            self.m.push(Vec::new());
+            self.v.push(Vec::new());
+        }
+        let (m, v) = (&mut self.m[slot], &mut self.v[slot]);
+        if m.len() != param.len() {
+            m.clear();
+            m.resize(param.len(), 0.0);
+            v.clear();
+            v.resize(param.len(), 0.0);
+        }
+        let t = self.t.max(1);
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        let (b1, b2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
+        for (((w, &g), mi), vi) in
+            param.iter_mut().zip(grad).zip(m.iter_mut()).zip(v.iter_mut())
+        {
+            *mi = b1 * *mi + (1.0 - b1) * g;
+            *vi = b2 * *vi + (1.0 - b2) * g * g;
+            let mhat = *mi / bc1;
+            let vhat = *vi / bc2;
+            *w -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+/// Config-driven selection returns a boxed rule; forwarding keeps the
+/// trainer generic-over-`O` path and the `Box<dyn Optimizer>` path
+/// identical (the same pattern `FormPolicy` uses for boxed policies).
+impl Optimizer for Box<dyn Optimizer> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn begin_step(&mut self) {
+        (**self).begin_step();
+    }
+
+    fn update(&mut self, slot: usize, param: &mut [f32], grad: &[f32]) {
+        (**self).update(slot, param, grad);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_trait_matches_the_closed_form() {
+        let mut o = Sgd::new(0.1);
+        let mut p = vec![1.0f32, -2.0];
+        o.begin_step();
+        o.update(0, &mut p, &[0.5, -0.5]);
+        assert_eq!(p, vec![0.95, -1.95]);
+    }
+
+    #[test]
+    fn adam_trait_matches_the_engine_enum_rule() {
+        // the engine path's OptState::step_tensors implements the same
+        // rule; both must produce identical trajectories
+        use crate::train::{ModelOptimizer, OptState};
+        let mut tr = Adam::new(0.05);
+        let mut a = vec![vec![-4.0f32], vec![2.0f32]];
+        let mut st = OptState::default();
+        let mut b = a.clone();
+        for _ in 0..50 {
+            let ga: Vec<Vec<f32>> =
+                a.iter().map(|p| vec![2.0 * p[0]]).collect();
+            tr.begin_step();
+            for (i, p) in a.iter_mut().enumerate() {
+                tr.update(i, p, &ga[i]);
+            }
+            let gb: Vec<Vec<f32>> =
+                b.iter().map(|p| vec![2.0 * p[0]]).collect();
+            st.step_tensors(ModelOptimizer::adam(0.05), &mut b, &gb);
+        }
+        assert_eq!(a, b, "trait Adam diverged from the engine Adam");
+        assert_eq!(tr.steps(), 50);
+    }
+
+    #[test]
+    fn adam_moments_are_recycled_not_reallocated() {
+        let mut o = Adam::new(0.01);
+        let mut p = vec![0.0f32; 16];
+        o.begin_step();
+        o.update(0, &mut p, &[1.0; 16]);
+        let cap_m = o.m[0].capacity();
+        for _ in 0..20 {
+            o.begin_step();
+            o.update(0, &mut p, &[1.0; 16]);
+        }
+        assert_eq!(o.m[0].capacity(), cap_m, "moment buffer reallocated");
+        assert_eq!(o.m.len(), 1);
+    }
+
+    #[test]
+    fn boxed_optimizer_forwards() {
+        let mut o: Box<dyn Optimizer> = Box::new(Sgd::new(0.5));
+        assert_eq!(o.name(), "sgd");
+        let mut p = vec![1.0f32];
+        o.begin_step();
+        o.update(0, &mut p, &[1.0]);
+        assert_eq!(p, vec![0.5]);
+    }
+}

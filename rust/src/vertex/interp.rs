@@ -450,6 +450,30 @@ impl ProgramCell {
                     let a = &lo[self.off[node.ins[0]]..];
                     out.copy_from_slice(&a[*start..start + len]);
                 }
+                OpKind::SoftmaxCols => {
+                    // max-subtracted row softmax; this exact loop shape
+                    // (max, exp+sum, scale by 1/sum) is the reference
+                    // order the compiled RowOp step reproduces bitwise
+                    let a = &lo[self.off[node.ins[0]]..][..node.cols];
+                    let mut mx = f32::NEG_INFINITY;
+                    for &v in a {
+                        mx = mx.max(v);
+                    }
+                    let mut sum = 0.0f32;
+                    for (j, o) in out.iter_mut().enumerate() {
+                        let e = (a[j] - mx).exp();
+                        *o = e;
+                        sum += e;
+                    }
+                    let inv = 1.0 / sum;
+                    for o in out.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+                OpKind::Broadcast => {
+                    let v = lo[self.off[node.ins[0]]];
+                    out.fill(v);
+                }
                 OpKind::ConcatCols => {
                     let mut col = 0usize;
                     for &src in &node.ins {
@@ -593,6 +617,30 @@ impl ProgramCell {
                         col += w;
                     }
                 }
+                OpKind::SoftmaxCols => {
+                    // ds_j = y_j * (g_j - Σ_k g_k y_k)
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let o_in = self.off[node.ins[0]];
+                    let y0 = self.off[i];
+                    let mut dot = 0.0f32;
+                    for j in 0..node.cols {
+                        dot += ahi[j] * tape[y0 + j];
+                    }
+                    for j in 0..node.cols {
+                        let y = tape[y0 + j];
+                        alo[o_in + j] += y * (ahi[j] - dot);
+                    }
+                }
+                OpKind::Broadcast => {
+                    // the replicated scalar collects every column's adjoint
+                    let (alo, ahi) = adj.split_at_mut(self.off[i]);
+                    let o_in = self.off[node.ins[0]];
+                    let mut acc = 0.0f32;
+                    for j in 0..node.cols {
+                        acc += ahi[j];
+                    }
+                    alo[o_in] += acc;
+                }
             }
         }
     }
@@ -710,6 +758,44 @@ impl ProgramCell {
                         }
                         _ => unreachable!("non-elementwise op in fused group"),
                     }
+                }
+            }
+            Step::RowOp { node } => {
+                let n = &p.nodes[*node];
+                match &n.kind {
+                    OpKind::SoftmaxCols => {
+                        // SAFETY: [inv:layout-disjoint] a RowOp node is
+                        // always Fresh (never a view), so its region is
+                        // disjoint from its input's.
+                        let a = unsafe { region(base as *const f32, p.addr[n.ins[0]], n.cols) };
+                        // SAFETY: [inv:layout-disjoint] as above.
+                        let out = unsafe { region_mut(base, p.addr[*node], n.cols) };
+                        // identical loop shape to the reference
+                        // `eval_tape` arm — bitwise-equal output
+                        let mut mx = f32::NEG_INFINITY;
+                        for &v in a.iter() {
+                            mx = mx.max(v);
+                        }
+                        let mut sum = 0.0f32;
+                        for (j, ov) in out.iter_mut().enumerate() {
+                            let e = (a[j] - mx).exp();
+                            *ov = e;
+                            sum += e;
+                        }
+                        let inv = 1.0 / sum;
+                        for ov in out.iter_mut() {
+                            *ov *= inv;
+                        }
+                    }
+                    OpKind::Broadcast => {
+                        // SAFETY: [inv:layout-disjoint] as above.
+                        let a = unsafe { region(base as *const f32, p.addr[n.ins[0]], 1) };
+                        let v = a[0];
+                        // SAFETY: [inv:layout-disjoint] as above.
+                        let out = unsafe { region_mut(base, p.addr[*node], n.cols) };
+                        out.fill(v);
+                    }
+                    _ => unreachable!("unsupported op in RowOp step"),
                 }
             }
         }
@@ -849,6 +935,30 @@ impl ProgramCell {
                     }
                     col += w;
                 }
+            }
+            OpKind::SoftmaxCols => {
+                // ds_j = y_j * (g_j - Σ_k g_k y_k)
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                let y0 = p.addr[i];
+                let mut dot = 0.0f32;
+                for j in 0..node.cols {
+                    dot += adj[g0 + j] * tape[y0 + j];
+                }
+                for j in 0..node.cols {
+                    let y = tape[y0 + j];
+                    let g = adj[g0 + j];
+                    adj[d0 + j] += y * (g - dot);
+                }
+            }
+            OpKind::Broadcast => {
+                let g0 = p.aoff[i];
+                let d0 = p.aoff[node.ins[0]];
+                let mut acc = 0.0f32;
+                for j in 0..node.cols {
+                    acc += adj[g0 + j];
+                }
+                adj[d0] += acc;
             }
         }
     }

@@ -63,6 +63,13 @@ pub enum OpKind {
     SliceCols { start: usize, len: usize },
     /// concatenate inputs along columns (host memcpy)
     ConcatCols,
+    /// row-local softmax over the input's columns (attention weights);
+    /// NOT elementwise — each output column reads every input column, so
+    /// it can never join a fused group
+    SoftmaxCols,
+    /// replicate a 1-column input across the node's columns (broadcast an
+    /// attention weight over a memory row); row-local like SoftmaxCols
+    Broadcast,
 }
 
 impl OpKind {
@@ -98,7 +105,9 @@ impl OpKind {
             | OpKind::Sigmoid
             | OpKind::Tanh
             | OpKind::OneMinus
-            | OpKind::SliceCols { .. } => Some(1),
+            | OpKind::SliceCols { .. }
+            | OpKind::SoftmaxCols
+            | OpKind::Broadcast => Some(1),
             OpKind::Add | OpKind::Mul => Some(2),
             OpKind::ConcatCols => None,
         }
@@ -329,7 +338,11 @@ impl Program {
                         }
                     }
                 }
-                OpKind::Sigmoid | OpKind::Tanh | OpKind::OneMinus | OpKind::Push => {
+                OpKind::Sigmoid
+                | OpKind::Tanh
+                | OpKind::OneMinus
+                | OpKind::Push
+                | OpKind::SoftmaxCols => {
                     if cols_of(n.ins[0]) != n.cols {
                         bail!(
                             "program '{name}': node {i} ({:?}) input is {} cols, \
@@ -337,6 +350,15 @@ impl Program {
                             n.kind,
                             cols_of(n.ins[0]),
                             n.cols
+                        );
+                    }
+                }
+                OpKind::Broadcast => {
+                    if cols_of(n.ins[0]) != 1 {
+                        bail!(
+                            "program '{name}': node {i} Broadcast input must be \
+                             1 col, got {}",
+                            cols_of(n.ins[0])
                         );
                     }
                 }
@@ -602,6 +624,8 @@ impl Program {
                         | OpKind::Sigmoid
                         | OpKind::Tanh
                         | OpKind::OneMinus
+                        | OpKind::SoftmaxCols
+                        | OpKind::Broadcast
                 )
             })
             .count()
@@ -839,5 +863,47 @@ mod tests {
         p.node(OpKind::Push, vec![a], h);
         let e = p.validate().unwrap_err().to_string();
         assert!(e.contains("never consumed"), "{e}");
+    }
+
+    #[test]
+    fn validate_checks_softmax_and_broadcast_widths() {
+        // SoftmaxCols keeps its input width; Broadcast requires a 1-col
+        // input. Neither is elementwise (they are row-local, so they may
+        // never join a fused group).
+        assert!(!OpKind::SoftmaxCols.is_elementwise());
+        assert!(!OpKind::Broadcast.is_elementwise());
+        let h = 4;
+        let mut p = Program::new("bad", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let a = p.node(OpKind::Add, vec![x, g], h);
+        let s = p.node(OpKind::SoftmaxCols, vec![a], h - 1); // width mismatch
+        p.node(OpKind::Scatter, vec![s], h);
+        p.node(OpKind::Push, vec![s], h);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("SoftmaxCols"), "{e}");
+
+        let mut p = Program::new("bad", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let a = p.node(OpKind::Add, vec![x, g], h);
+        let b = p.node(OpKind::Broadcast, vec![a], h); // input is h cols, not 1
+        p.node(OpKind::Scatter, vec![b], h);
+        p.node(OpKind::Push, vec![b], h);
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("Broadcast input must be 1 col"), "{e}");
+
+        // the well-formed shape validates
+        let mut p = Program::new("ok", 1, h);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let g = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let a = p.node(OpKind::Add, vec![x, g], h);
+        let sm = p.node(OpKind::SoftmaxCols, vec![a], h);
+        let w1 = p.node(OpKind::SliceCols { start: 0, len: 1 }, vec![sm], 1);
+        let bc = p.node(OpKind::Broadcast, vec![w1], h);
+        let m = p.node(OpKind::Mul, vec![bc, a], h);
+        p.node(OpKind::Scatter, vec![m], h);
+        p.node(OpKind::Push, vec![m], h);
+        p.validate().unwrap();
     }
 }

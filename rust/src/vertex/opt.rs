@@ -136,6 +136,10 @@ pub enum Step {
     Gemm { wide: usize },
     /// run fused elementwise group `group`
     Fused { group: usize },
+    /// run a row-local but non-elementwise op (`SoftmaxCols`/`Broadcast`):
+    /// each output column may read every input column, so it can never
+    /// join a fused group or be folded into a view of its input
+    RowOp { node: usize },
 }
 
 /// The compiled form of a vertex function: the post-CSE/DCE op graph plus
@@ -491,6 +495,10 @@ fn build(p: &Program, meta: ProgramMeta) -> Result<OptProgram> {
                     }
                 }
             }
+            OpKind::SoftmaxCols | OpKind::Broadcast => {
+                steps.push(Step::RowOp { node: i });
+                open = None;
+            }
             OpKind::Scatter | OpKind::Push => {}
         }
     }
@@ -796,6 +804,48 @@ mod tests {
                 || e.contains("produces none"),
             "{e}"
         );
+    }
+
+    /// SoftmaxCols/Broadcast lower to `Step::RowOp`, never join a fused
+    /// group, and the compiled path stays bitwise identical to the
+    /// reference interpreter (including their VJPs).
+    #[test]
+    fn rowops_schedule_and_match_reference() {
+        let h = 4;
+        let mut p = Program::new("rowop", 1, h);
+        let w = p.param("W", &[h, h]);
+        let x = p.node(OpKind::Pull, vec![], h);
+        let s = p.node(OpKind::Gather { slot: 0 }, vec![], h);
+        let m = p.node(OpKind::MatMul { param: w }, vec![x], h);
+        let a = p.node(OpKind::Add, vec![m, s], h);
+        let sm = p.node(OpKind::SoftmaxCols, vec![a], h);
+        let sl = p.node(OpKind::SliceCols { start: 0, len: 1 }, vec![sm], 1);
+        let bc = p.node(OpKind::Broadcast, vec![sl], h);
+        let o = p.node(OpKind::Mul, vec![bc, s], h);
+        let b = p.node(OpKind::Add, vec![o, a], h);
+        p.node(OpKind::Scatter, vec![b], h);
+        p.node(OpKind::Push, vec![b], h);
+        let opt = p.optimize().unwrap();
+        let rowops = opt
+            .steps
+            .iter()
+            .filter(|s| matches!(s, Step::RowOp { .. }))
+            .count();
+        assert_eq!(rowops, 2, "steps: {:?}", opt.steps);
+        // a row op closes any open fused group: no group spans one
+        for g in &opt.fused {
+            for &member in &g.nodes {
+                assert!(
+                    !matches!(
+                        opt.nodes[member].kind,
+                        OpKind::SoftmaxCols | OpKind::Broadcast
+                    ),
+                    "row op fused: {:?}",
+                    opt.fused
+                );
+            }
+        }
+        assert_row_equivalence(p, 42);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! | `treefc`     | 2     | program + fused/op artifacts (aot.py)       |
 //! | `gru`        | 1     | **program only** (DESIGN.md §8 walkthrough) |
 //! | `cstreelstm` | 2     | **program only** (tied-forget child-sum)    |
+//! | `gnn`        | 4     | **program only** (DAG message passing)      |
+//! | `attnseq2seq`| 4     | **program only** (attention decoder)        |
 //!
 //! User cells are added with [`register_cell`]; the builder is probed and
 //! [`Program::validate`]d at registration, so a malformed cell fails
@@ -55,6 +57,11 @@ static REGISTRY: LazyLock<RwLock<BTreeMap<String, Entry>>> = LazyLock::new(|| {
     m.insert(
         "cstreelstm".to_string(),
         builtin(programs::cstreelstm_program, false),
+    );
+    m.insert("gnn".to_string(), builtin(programs::gnn_program, false));
+    m.insert(
+        "attnseq2seq".to_string(),
+        builtin(programs::attnseq2seq_program, false),
     );
     RwLock::new(m)
 });
@@ -320,7 +327,15 @@ mod tests {
 
     #[test]
     fn builtins_are_seeded_and_derivable() {
-        for name in ["lstm", "treelstm", "treefc", "gru", "cstreelstm"] {
+        for name in [
+            "lstm",
+            "treelstm",
+            "treefc",
+            "gru",
+            "cstreelstm",
+            "gnn",
+            "attnseq2seq",
+        ] {
             assert!(is_registered(name), "{name} missing");
             let spec = CellSpec::lookup(name, 8).unwrap();
             assert_eq!(spec.name(), name);

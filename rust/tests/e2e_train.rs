@@ -8,7 +8,7 @@ use cavs::exec::{Engine, EngineOpts};
 use cavs::graph::{Dataset, InputGraph};
 use cavs::models::{Cell, HeadKind, Model};
 use cavs::runtime::Runtime;
-use cavs::train::{train_epochs, Optimizer};
+use cavs::train::{train_epochs, ModelOptimizer};
 
 #[macro_use]
 mod common;
@@ -28,7 +28,7 @@ fn treelstm_sentiment_loss_decreases() {
     let mut model = Model::new(Cell::TreeLstm, 32, 20, HeadKind::ClassifierAtRoot, 5, 3);
     let mut engine = Engine::new(&rt, EngineOpts::default());
     let logs = train_epochs(
-        &mut engine, &mut model, &data, 8, Optimizer::adam(0.01), 6, 5.0, |_| {},
+        &mut engine, &mut model, &data, 8, ModelOptimizer::adam(0.01), 6, 5.0, |_| {},
     )
     .unwrap();
     let first = logs.first().unwrap().loss_per_label;
@@ -45,7 +45,7 @@ fn lstm_lm_loss_decreases() {
     let mut model = Model::new(Cell::Lstm, 32, 50, HeadKind::LmPerVertex, 50, 4);
     let mut engine = Engine::new(&rt, EngineOpts::default());
     let logs = train_epochs(
-        &mut engine, &mut model, &data, 8, Optimizer::adam(0.01), 5, 5.0, |_| {},
+        &mut engine, &mut model, &data, 8, ModelOptimizer::adam(0.01), 5, 5.0, |_| {},
     )
     .unwrap();
     assert!(
@@ -67,7 +67,7 @@ fn gru_chain_loss_decreases() {
         EngineOpts { lazy_batching: false, ..Default::default() },
     );
     let logs = train_epochs(
-        &mut engine, &mut model, &data, 6, Optimizer::adam(0.01), 5, 5.0, |_| {},
+        &mut engine, &mut model, &data, 6, ModelOptimizer::adam(0.01), 5, 5.0, |_| {},
     )
     .unwrap();
     assert!(logs.last().unwrap().loss_per_label < logs[0].loss_per_label);
@@ -135,10 +135,10 @@ fn optimizers_all_make_progress() {
     require_artifacts!();
     let rt = Runtime::new(&artifacts_dir()).unwrap();
     for opt in [
-        Optimizer::sgd(0.05),
-        Optimizer::Sgd { lr: 0.02, momentum: 0.9 },
-        Optimizer::Adagrad { lr: 0.05, eps: 1e-8 },
-        Optimizer::adam(0.01),
+        ModelOptimizer::sgd(0.05),
+        ModelOptimizer::Sgd { lr: 0.02, momentum: 0.9 },
+        ModelOptimizer::Adagrad { lr: 0.05, eps: 1e-8 },
+        ModelOptimizer::adam(0.01),
     ] {
         let data = Dataset::ptb_like_fixed(4, 8, 50, 6);
         let mut model = Model::new(Cell::Lstm, 32, 50, HeadKind::LmPerVertex, 50, 5);

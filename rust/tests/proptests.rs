@@ -109,6 +109,141 @@ fn prop_frontier_equals_depth_grouping() {
     });
 }
 
+/// Multi-parent DAG workloads for the generalized scheduler: GNN
+/// message-passing graphs and attention seq2seq graphs, the two shapes
+/// the new cells batch.
+fn random_dag_workloads(rng: &mut Rng) -> Vec<InputGraph> {
+    let k = 1 + rng.below(6);
+    (0..k)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                let layers = 1 + rng.below(4);
+                let width = 2 + rng.below(3);
+                synth::gnn_dag(rng, 20, layers, width, 4, 5)
+            } else {
+                synth::seq2seq_copy(rng, 20, 3, 10, 3)
+            }
+        })
+        .collect()
+}
+
+/// DAG generalization of the schedule validity property: with genuine
+/// multi-parent fan-in in every batch, the scheduler still evaluates
+/// every parent strictly after *all* of its children — per edge, not per
+/// tree path — and the frontier levels plus the static DAG proof agree.
+#[test]
+fn prop_dag_schedule_respects_all_parents_before_child() {
+    use cavs::analysis::plan::check_dag_frontier;
+
+    check("dag-schedule-valid", 100, |rng| {
+        let graphs = random_dag_workloads(rng);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+        let batch = GraphBatch::new(&refs, 4);
+
+        // the generated batches genuinely exercise fan-in: some vertex
+        // has at least two distinct parents
+        let mut n_parents = vec![0usize; batch.n_vertices];
+        for v in 0..batch.n_vertices as u32 {
+            for slot in 0..batch.arity {
+                if let Some(c) = batch.child(v, slot) {
+                    n_parents[c as usize] += 1;
+                }
+            }
+        }
+        assert!(
+            n_parents.iter().any(|&p| p >= 2),
+            "workload generator produced no multi-parent vertex"
+        );
+
+        check_dag_frontier(&batch).unwrap();
+        let policy =
+            if rng.below(2) == 0 { Policy::Batched } else { Policy::Serial };
+        let tasks = schedule(&batch, policy, BUCKETS);
+        let mut done = vec![false; batch.n_vertices];
+        for t in &tasks {
+            for &v in &t.verts {
+                for slot in 0..batch.arity {
+                    if let Some(c) = batch.child(v, slot) {
+                        assert!(
+                            done[c as usize],
+                            "parent {v} ran before child {c}"
+                        );
+                    }
+                }
+            }
+            for &v in &t.verts {
+                assert!(!done[v as usize], "vertex {v} scheduled twice");
+                done[v as usize] = true;
+            }
+        }
+        assert!(done.iter().all(|&d| d));
+        // frontier levels group exactly by longest-path depth on DAGs too
+        let mut a = frontier_levels(&batch);
+        let mut b = batch.levels();
+        for l in a.iter_mut().chain(b.iter_mut()) {
+            l.sort_unstable();
+        }
+        assert_eq!(a, b);
+    });
+}
+
+/// Corrupting a DAG batch is always caught by the static plan passes:
+/// dropping every child edge of the deepest vertex breaks the stored
+/// depth against the longest-path recomputation, and smuggling a cycle
+/// through an input vertex starves the frontier propagation. The level
+/// checker independently rejects the cycle as a dependency violation.
+#[test]
+fn prop_corrupted_dag_batches_are_rejected() {
+    use cavs::analysis::plan::{check_batch, check_dag_frontier, check_levels};
+    use cavs::analysis::SoundnessError;
+    use cavs::graph::batch::NO_VERTEX;
+
+    check("dag-corruption-rejected", 60, |rng| {
+        let graphs = random_dag_workloads(rng);
+        let refs: Vec<&InputGraph> = graphs.iter().collect();
+
+        // dropped edges: sever the deepest vertex's children entirely —
+        // its stored depth can no longer be justified by any path
+        let mut batch = GraphBatch::new(&refs, 4);
+        let deepest = (0..batch.n_vertices as u32)
+            .max_by_key(|&v| batch.depth[v as usize])
+            .unwrap();
+        assert!(batch.depth[deepest as usize] >= 1);
+        for slot in 0..batch.arity {
+            batch.corrupt_child_slot(deepest, slot, NO_VERTEX);
+        }
+        assert!(matches!(
+            check_dag_frontier(&batch),
+            Err(SoundnessError::DepthMismatch { .. })
+        ));
+
+        // smuggled cycle: an input vertex of some graph points back at
+        // that graph's root, which transitively depends on it
+        let mut batch = GraphBatch::new(&refs, 4);
+        let levels = frontier_levels(&batch);
+        let root = batch.roots[rng.below(batch.roots.len())];
+        let v0 = (0..batch.n_vertices as u32)
+            .find(|&v| {
+                batch.depth[v as usize] == 0
+                    && batch.owner[v as usize] == batch.owner[root as usize]
+            })
+            .unwrap();
+        batch.corrupt_child_slot(v0, 0, root);
+        assert!(matches!(
+            check_dag_frontier(&batch),
+            Err(SoundnessError::FrontierCycle { .. })
+        ));
+        // the per-edge structural pass and the level replay both refuse
+        // the corrupted batch as well
+        assert!(check_batch(&batch).is_err());
+        assert!(matches!(
+            check_levels(&batch, &levels),
+            Err(SoundnessError::DependencyViolation { .. }
+                | SoundnessError::LevelReadWriteOverlap { .. })
+        ));
+    });
+}
+
 /// Dynamic-tensor forward advance / backward rewind is exact LIFO: after
 /// any sequence of tasks, rewinding in reverse recovers every view
 /// verbatim and lands at offset zero (Alg. 2's memory choreography).
@@ -638,10 +773,19 @@ fn prop_optimized_matches_unoptimized_bitwise() {
     check("opt-equivalence", 10, |rng| {
         let vocab = 20usize;
         let h = 1 + rng.below(6);
-        for cell in ["lstm", "treelstm", "treefc", "gru", "cstreelstm"] {
+        for cell in [
+            "lstm",
+            "treelstm",
+            "treefc",
+            "gru",
+            "cstreelstm",
+            "gnn",
+            "attnseq2seq",
+        ] {
             let spec = CellSpec::lookup(cell, h).unwrap();
             let arity = spec.arity();
-            // arity-1 cells batch chains; tree cells batch the mixed set
+            // arity-1 cells batch chains; the DAG cells batch their own
+            // multi-parent workloads; tree cells batch the mixed set
             let graphs: Vec<InputGraph> = if arity == 1 {
                 let k = 1 + rng.below(6);
                 (0..k)
@@ -652,6 +796,20 @@ fn prop_optimized_matches_unoptimized_bitwise() {
                         let labs = vec![-1; len];
                         InputGraph::chain(&toks, &labs)
                     })
+                    .collect()
+            } else if cell == "gnn" {
+                let k = 1 + rng.below(4);
+                (0..k)
+                    .map(|_| {
+                        let layers = 1 + rng.below(3);
+                        let width = 2 + rng.below(3);
+                        synth::gnn_dag(rng, vocab, layers, width, 4, 5)
+                    })
+                    .collect()
+            } else if cell == "attnseq2seq" {
+                let k = 1 + rng.below(4);
+                (0..k)
+                    .map(|_| synth::seq2seq_copy(rng, vocab, 3, 8, 3))
                     .collect()
             } else {
                 random_graphs(rng)

@@ -173,6 +173,74 @@ fn steady_state_frontier_fwd_bwd_loop_allocates_nothing() {
     );
     assert!(hf.param_grads().unwrap().iter().flatten().any(|&v| v != 0.0));
 
+    // Real training steady state (DESIGN.md §14): the full Adam +
+    // classifier-loss-head minibatch loop — forward, in-place softmax
+    // seeding, structural backward, sequential Adam over every parameter
+    // slot plus the embedding table, `sync_opt` refresh — allocates
+    // nothing once the warm-up steps have sized the moment buffers.
+    {
+        use cavs::train::{Adam, LossHead, LossStats, Optimizer as _};
+        let labeled: Vec<InputGraph> = {
+            let mut lrng = Rng::new(43);
+            (0..8)
+                .map(|i| {
+                    let toks: Vec<i32> =
+                        (0..6).map(|_| lrng.below(20) as i32).collect();
+                    let labs = vec![-1; 6];
+                    let mut g = InputGraph::chain(&toks, &labs);
+                    g.root_label = (i % 4) as i32;
+                    g
+                })
+                .collect()
+        };
+        let lrefs: Vec<&InputGraph> = labeled.iter().collect();
+        let lbatch = GraphBatch::new(&lrefs, 1);
+        let ltasks = schedule(&lbatch, Policy::Batched, &[1, 2, 4, 8, 16]);
+        let mut train_cell = spec.random_cell(&mut rng, 0.2).unwrap();
+        let mut xt = xtable.clone();
+        let mut adam = Adam::new(0.01);
+        let head = LossHead::ClassifierAtRoot { n_classes: 4 };
+        let mut hf = HostFrontier::new();
+        let mut stats = LossStats::default();
+        let mut before = 0u64;
+        for it in 0..5 {
+            if it == 2 {
+                before = ALLOCS.load(Ordering::SeqCst);
+            }
+            hf.run_with_seed(
+                &lbatch,
+                &ltasks,
+                &train_cell,
+                &xt,
+                Sharder::Sequential,
+                true,
+                |b, s, g| stats = head.loss_and_seed(b, s, g),
+            );
+            adam.begin_step();
+            let np = {
+                let params = train_cell.params_mut();
+                let pg = hf.param_grads().unwrap();
+                for (slot, (p, g)) in params.iter_mut().zip(pg).enumerate() {
+                    adam.update(slot, p, g);
+                }
+                params.len()
+            };
+            train_cell.sync_opt();
+            if let Some(xg) = hf.x_grads() {
+                adam.update(np, &mut xt, xg);
+            }
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state Adam + loss-head training loop heap-allocated"
+        );
+        assert_eq!(stats.n_labels, 8, "every root was supervised");
+        assert!(stats.loss.is_finite() && stats.loss > 0.0);
+        assert_eq!(adam.steps(), 5);
+    }
+
     // Observability (DESIGN.md §12): with the span tracer AND the
     // per-op-class profiler turned on, the same compiled-path loop still
     // allocates nothing — each thread's ring is preallocated on its first
